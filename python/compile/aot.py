@@ -1,0 +1,121 @@
+"""AOT compile path: lower the L2 model (with the L1 Pallas kernel
+inside) to HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ``../artifacts``):
+  <model>_train_b<B>x<L>.hlo.txt   train_step for each (B, L) bucket
+  <model>_fwd_b<B>x<L>.hlo.txt     inference forward for each bucket
+  <model>_params.bin               flat f32 LE initial parameters
+  manifest.json                    everything the Rust runtime needs
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged);
+Python never runs on the training hot path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(name, cfg, batch, length):
+    """Lower train + forward for one (batch, length) bucket."""
+    p = int(model.param_count(cfg))
+    d = cfg["emb_dim"]
+    t = cfg["tasks"]
+    params = jax.ShapeDtypeStruct((p,), jnp.float32)
+    emb = jax.ShapeDtypeStruct((batch, length, d), jnp.float32)
+    lengths = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    labels = jax.ShapeDtypeStruct((batch, t), jnp.float32)
+
+    train_fn = model.make_train_fn(name)
+    fwd_fn = model.make_forward_fn(name)
+    train_hlo = to_hlo_text(
+        jax.jit(train_fn).lower(params, emb, lengths, labels)
+    )
+    fwd_hlo = to_hlo_text(jax.jit(fwd_fn).lower(params, emb, lengths))
+    return train_hlo, fwd_hlo
+
+
+def build(out_dir, models=None, seed=0):
+    os.makedirs(out_dir, exist_ok=True)
+    models = models or list(model.CONFIGS.keys())
+    manifest = {"version": 1, "seed": seed, "models": {}}
+    for name in models:
+        cfg = model.CONFIGS[name]
+        params = model.init_params(cfg, seed=seed)
+        params_bin = f"{name}_params.bin"
+        params.astype("<f4").tofile(os.path.join(out_dir, params_bin))
+
+        buckets = []
+        for batch, length in model.BUCKETS[name]:
+            train_hlo, fwd_hlo = lower_bucket(name, cfg, batch, length)
+            train_name = f"{name}_train_b{batch}x{length}.hlo.txt"
+            fwd_name = f"{name}_fwd_b{batch}x{length}.hlo.txt"
+            with open(os.path.join(out_dir, train_name), "w") as f:
+                f.write(train_hlo)
+            with open(os.path.join(out_dir, fwd_name), "w") as f:
+                f.write(fwd_hlo)
+            buckets.append(
+                {
+                    "batch": batch,
+                    "len": length,
+                    "train": train_name,
+                    "forward": fwd_name,
+                }
+            )
+            print(f"lowered {name} bucket ({batch}, {length})")
+
+        manifest["models"][name] = {
+            "emb_dim": cfg["emb_dim"],
+            "heads": cfg["heads"],
+            "blocks": cfg["blocks"],
+            "experts": cfg["experts"],
+            "top_k": cfg["top_k"],
+            "expert_hidden": cfg["expert_hidden"],
+            "tasks": cfg["tasks"],
+            "param_count": int(model.param_count(cfg)),
+            "params_bin": params_bin,
+            "buckets": buckets,
+            # Output arity/order of the train artifact, for the runtime.
+            "train_outputs": ["loss_sums", "grads", "emb_grad", "logits",
+                              "n_valid"],
+        }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="", help="comma-separated subset")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    models = [m for m in args.models.split(",") if m] or None
+    build(args.out, models=models, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

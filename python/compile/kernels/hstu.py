@@ -1,0 +1,158 @@
+"""L1: fused HSTU attention as a Pallas kernel (paper §5.2 Operator
+Fusion).
+
+The paper fuses the HSTU attention path the way FlashAttention does on
+CUDA: U/Q/K/V are partitioned into tiles staged through SRAM, with
+causal-mask-driven skipping of unnecessary tiles. The TPU rethink (see
+DESIGN.md §Hardware-Adaptation):
+
+- BlockSpec tiles express the HBM->VMEM schedule: the grid iterates
+  (batch*head, q-block); K/V are streamed block-by-block inside the
+  kernel while the (blk_q, dh) accumulator stays resident in VMEM.
+- HSTU uses SiLU(QK^T)*mask (no softmax), so there is **no online
+  rescaling pass**: the accumulator is a plain sum over K blocks. This
+  is strictly simpler than FlashAttention and maps cleanly onto the MXU
+  (two matmuls per tile: QK^T and PV).
+- Causal skipping: K blocks strictly above the diagonal contribute
+  nothing; the kernel skips them via the loop bound (only kb with
+  kb*blk_k <= q_hi are visited), the paper's "casual mask vectors to
+  reduce unnecessary calculations".
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for both the pytest
+oracle checks and the AOT artifacts consumed by the Rust runtime. Real
+TPU performance is *estimated* from the VMEM footprint / MXU shapes in
+DESIGN.md §Perf.
+
+Backward: ``hstu_attention`` is a ``jax.custom_vjp`` whose forward runs
+this kernel and whose backward differentiates the pure-jnp reference
+(FlashAttention-style recomputation — the fused forward never
+materializes the (L, L) score matrix).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes (tuned in the §Perf pass — see EXPERIMENTS.md).
+# VMEM budget check at the default model shapes (dh = 64): a (256, 64)
+# f32 tile is 64 KiB; the kernel holds q/u/acc tiles plus streamed k/v
+# slices ≈ 6 tiles ≈ 0.4 MiB — far under the ~16 MiB/core VMEM budget,
+# so full-length Q blocks are legal on TPU too, and they are ~6x faster
+# under CPU interpret mode (fewer grid steps / loop trips). For paper-
+# scale L = 3000, dh = 256 the same math gives ≈ 18 MiB, at which point
+# blk_q must drop to 1024 — handled by the min() below.
+DEFAULT_BLK_Q = 256
+DEFAULT_BLK_K = 256
+
+
+def _hstu_kernel(len_ref, u_ref, q_ref, k_ref, v_ref, o_ref, *, blk_q, blk_k, L):
+    """One grid step: q-block `qi` of batch-head `bh`.
+
+    Refs (leading (1,1) block dims squeezed by indexing):
+      len_ref: (1,)           true length of this sequence
+      u_ref, q_ref: (1, 1, blk_q, dh)
+      k_ref, v_ref: (1, 1, L, dh)   (streamed in blk_k slices)
+      o_ref: (1, 1, blk_q, dh)
+    """
+    qi = pl.program_id(1)
+    q = q_ref[0, 0]  # (blk_q, dh)
+    u = u_ref[0, 0]
+    ln = len_ref[0]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+
+    q_pos = qi * blk_q + jax.lax.iota(jnp.int32, blk_q)  # (blk_q,)
+    denom = jnp.maximum(ln, 1).astype(q.dtype)
+
+    # Causal tile skipping: K blocks beyond this Q block's last row can
+    # never satisfy k <= q. (Also bounded by the valid length.)
+    q_hi = (qi + 1) * blk_q  # exclusive upper bound of q positions + 1
+    kb_max = jnp.minimum(
+        pl.cdiv(q_hi, blk_k), pl.cdiv(jnp.maximum(ln, 0), blk_k)
+    ).astype(jnp.int32)
+    kb_max = jnp.maximum(kb_max, 0)
+
+    def body(kb, acc):
+        k_tile = jax.lax.dynamic_slice(
+            k_ref[0, 0], (kb * blk_k, 0), (blk_k, dh)
+        )
+        v_tile = jax.lax.dynamic_slice(
+            v_ref[0, 0], (kb * blk_k, 0), (blk_k, dh)
+        )
+        # MXU matmul #1: scores tile (blk_q, blk_k).
+        s = jnp.dot(q, k_tile.T) * scale
+        k_pos = kb * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        mask = jnp.logical_and(
+            k_pos[None, :] <= q_pos[:, None],  # causal
+            k_pos[None, :] < ln,  # valid
+        )
+        p = jax.nn.silu(s) * mask.astype(s.dtype) / denom
+        # MXU matmul #2: PV tile accumulation.
+        return acc + jnp.dot(p, v_tile)
+
+    acc = jnp.zeros((blk_q, dh), dtype=q.dtype)
+    acc = jax.lax.fori_loop(0, kb_max, body, acc)
+    # Fused elementwise U gate (Eq. 3 input).
+    o_ref[0, 0] = acc * u
+
+
+def hstu_attention_pallas(u, q, k, v, lengths, *, blk_q=None, blk_k=None):
+    """Fused HSTU attention via the Pallas kernel (forward only).
+
+    Shapes: u/q/k/v (B, H, L, dh); lengths (B,) int32. L must be a
+    multiple of the block sizes (the model pads to bucket sizes that
+    are).
+    """
+    B, H, L, dh = q.shape
+    blk_q = blk_q or min(DEFAULT_BLK_Q, L)
+    blk_k = blk_k or min(DEFAULT_BLK_K, L)
+    assert L % blk_q == 0 and L % blk_k == 0, (L, blk_q, blk_k)
+    grid = (B * H, L // blk_q)
+
+    qkv_spec = pl.BlockSpec(
+        (1, 1, blk_q, dh), lambda bh, qi: (bh // H, bh % H, qi, 0)
+    )
+    full_spec = pl.BlockSpec(
+        (1, 1, L, dh), lambda bh, qi: (bh // H, bh % H, 0, 0)
+    )
+    len_spec = pl.BlockSpec((1,), lambda bh, qi: (bh // H,))
+
+    kernel = functools.partial(_hstu_kernel, blk_q=blk_q, blk_k=blk_k, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[len_spec, qkv_spec, qkv_spec, full_spec, full_spec],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, L, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lengths, u, q, k, v)
+
+
+@jax.custom_vjp
+def hstu_attention(u, q, k, v, lengths):
+    """Differentiable fused HSTU attention.
+
+    Forward = the Pallas kernel; backward = VJP of the jnp reference
+    (recomputation, FlashAttention-style).
+    """
+    return hstu_attention_pallas(u, q, k, v, lengths)
+
+
+def _fwd(u, q, k, v, lengths):
+    out = hstu_attention_pallas(u, q, k, v, lengths)
+    return out, (u, q, k, v, lengths)
+
+
+def _bwd(saved, g):
+    u, q, k, v, lengths = saved
+    _, vjp = jax.vjp(lambda u_, q_, k_, v_: ref.hstu_attention_ref(u_, q_, k_, v_, lengths), u, q, k, v)
+    du, dq, dk, dv = vjp(g)
+    return du, dq, dk, dv, None
+
+
+hstu_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracle for the fused HSTU attention (L1 kernel).
+
+This is the correctness ground truth the Pallas kernel is checked against
+(pytest + hypothesis in ``python/tests/test_kernel.py``), and the
+implementation used for the backward pass of the ``custom_vjp`` wrapper
+(FlashAttention-style recomputation: the fused forward kernel does not
+materialize the score matrix, so backward recomputes from the reference
+formulation).
+
+HSTU attention (paper Eq. 2 plus the elementwise U gate of Eq. 3's input):
+
+    O = (SiLU(Q Kᵀ / sqrt(dh)) ⊙ M) V / len ⊙ U
+
+where M is the causal-AND-valid mask (k ≤ q, k < len_b) and ``len`` is the
+per-sequence true length (normalizing by the real length keeps activation
+scale independent of the padded bucket size). Unlike softmax attention
+there is no row-normalizer coupling K blocks, which is what makes the
+tiled TPU kernel simpler than FlashAttention (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def hstu_attention_ref(u, q, k, v, lengths):
+    """Reference fused HSTU attention.
+
+    Args:
+      u, q, k, v: (B, H, L, dh) activations (already SiLU'd upstream).
+      lengths: (B,) int32 true sequence lengths (<= L).
+
+    Returns:
+      (B, H, L, dh) gated attention output O * U.
+    """
+    _, _, L, dh = q.shape
+    scores = jnp.einsum("bhld,bhmd->bhlm", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    pos = jnp.arange(L)
+    causal = (pos[None, :] <= pos[:, None])[None, None]  # (1,1,L,L): k <= q
+    kvalid = (pos[None, :] < lengths[:, None])[:, None, None, :]  # (B,1,1,L)
+    mask = jnp.logical_and(causal, kvalid)
+    denom = jnp.maximum(lengths, 1).astype(q.dtype)[:, None, None, None]
+    attn = jax.nn.silu(scores) * mask.astype(q.dtype) / denom
+    o = jnp.einsum("bhlm,bhmd->bhld", attn, v)
+    return o * u

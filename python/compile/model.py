@@ -1,0 +1,259 @@
+"""L2: the GRM dense model (HSTU stack + MMoE, paper §2) in JAX.
+
+Build-time only — ``aot.py`` lowers ``train_step``/``forward`` to HLO
+text once; the Rust coordinator executes the artifacts via PJRT and
+Python never runs on the training hot path.
+
+Interface contract with the Rust runtime (see DESIGN.md §2):
+
+- Dense parameters travel as ONE flat f32 vector; ``param_specs`` fixes
+  the (name, shape) order and ``init_params`` produces the initial
+  vector written to ``artifacts/<model>_params.bin``.
+- ``train_step(params, emb, lengths, labels)`` returns
+  ``(loss_sums[2], grads[P], emb_grad[B,L,D], logits[B,2], n_valid[])``
+  where losses/grads are **sums over valid samples** (not means) so the
+  Rust side can all-reduce sums + counts and apply the paper's weighted
+  gradient averaging (§5.1) exactly.
+- Padded samples have ``lengths[b] == 0`` and contribute nothing to the
+  loss or gradients; padded tokens are masked inside HSTU attention and
+  the mean-pool.
+
+Model (paper Eq. 1-4):
+  per block:  X' = LN(X); [U,Q,K,V] = SiLU(X' W + b)           (Eq. 1)
+              O = (SiLU(QK^T)·mask) V ⊙ U   [Pallas kernel]    (Eq. 2)
+              X = X + LN(O) W_o + b_o                          (Eq. 3)
+  MMoE:       pooled = masked-mean(X); per task t:
+              g_t = renorm-top-k softmax(pooled W_g)
+              y_t = Σ_e g_te · Expert_e(pooled);  logit_t = y_t·w + b
+                                                               (Eq. 4)
+  Loss: CTR/CTCVR binary cross-entropy sums (§2: "cross entropy loss to
+  optimize click-through rate and conversion rate").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.hstu import hstu_attention
+
+# ---------------------------------------------------------------------------
+# Configs — MUST stay in sync with rust/src/config/presets.rs.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "tiny": dict(emb_dim=32, blocks=2, heads=2, experts=2, top_k=1,
+                 expert_hidden=32, tasks=2),
+    "small": dict(emb_dim=128, blocks=4, heads=2, experts=4, top_k=2,
+                  expert_hidden=128, tasks=2),
+}
+
+# (batch, padded length) buckets compiled per model. The Rust runtime
+# packs each dynamically balanced batch into the smallest fitting bucket.
+BUCKETS = {
+    "tiny": [(4, 32), (8, 64)],
+    "small": [(8, 128), (16, 256)],
+}
+
+
+def param_specs(cfg):
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    d = cfg["emb_dim"]
+    h = cfg["expert_hidden"]
+    specs = []
+    for i in range(cfg["blocks"]):
+        specs += [
+            (f"blk{i}.norm1.scale", (d,)),
+            (f"blk{i}.norm1.bias", (d,)),
+            (f"blk{i}.uqkv.w", (d, 4 * d)),
+            (f"blk{i}.uqkv.b", (4 * d,)),
+            (f"blk{i}.norm2.scale", (d,)),
+            (f"blk{i}.norm2.bias", (d,)),
+            (f"blk{i}.out.w", (d, d)),
+            (f"blk{i}.out.b", (d,)),
+        ]
+    for e in range(cfg["experts"]):
+        specs += [
+            (f"expert{e}.w1", (d, h)),
+            (f"expert{e}.b1", (h,)),
+            (f"expert{e}.w2", (h, d)),
+            (f"expert{e}.b2", (d,)),
+        ]
+    for t in range(cfg["tasks"]):
+        specs += [
+            (f"gate{t}.w", (d, cfg["experts"])),
+            (f"gate{t}.b", (cfg["experts"],)),
+        ]
+    for t in range(cfg["tasks"]):
+        specs += [
+            (f"head{t}.w", (d,)),
+            (f"head{t}.b", ()),
+        ]
+    return specs
+
+
+def param_count(cfg):
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def init_params(cfg, seed=0):
+    """Deterministic initialization of the flat parameter vector
+    (LeCun-normal weights, zero biases, unit norm scales)."""
+    rng = np.random.default_rng(seed)
+    flat = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(".scale"):
+            flat.append(np.ones(shape, np.float32))
+        elif name.endswith((".b", ".bias", ".b1", ".b2")) or shape == ():
+            flat.append(np.zeros(shape, np.float32).reshape(-1))
+        else:
+            fan_in = shape[0] if len(shape) > 0 else 1
+            w = rng.normal(0.0, 1.0 / np.sqrt(fan_in), size=shape)
+            flat.append(w.astype(np.float32).reshape(-1))
+    return np.concatenate([a.reshape(-1) for a in flat])
+
+
+def unflatten(params, cfg):
+    """Flat vector -> {name: array} (inside jit: pure slicing)."""
+    out = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = int(np.prod(shape)) if shape else 1
+        out[name] = params[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, scale, bias, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _hstu_block(p, i, x, lengths):
+    """One HSTU block (Eq. 1-3) with residual connection."""
+    B, L, d = x.shape
+    xn = _layernorm(x, p[f"blk{i}.norm1.scale"], p[f"blk{i}.norm1.bias"])
+    uqkv = jax.nn.silu(xn @ p[f"blk{i}.uqkv.w"] + p[f"blk{i}.uqkv.b"])
+    u, q, k, v = jnp.split(uqkv, 4, axis=-1)  # each (B, L, d)
+
+    heads = _HEADS[0]
+    dh = d // heads
+
+    def to_heads(t):
+        return t.reshape(B, L, heads, dh).transpose(0, 2, 1, 3)
+
+    o = hstu_attention(to_heads(u), to_heads(q), to_heads(k), to_heads(v),
+                       lengths)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, d)
+    on = _layernorm(o, p[f"blk{i}.norm2.scale"], p[f"blk{i}.norm2.bias"])
+    return x + on @ p[f"blk{i}.out.w"] + p[f"blk{i}.out.b"]
+
+
+# jnp.split / reshape need static head counts; threaded via this cell to
+# keep _hstu_block signature jit-friendly.
+_HEADS = [2]
+
+
+def forward(params, emb, lengths, cfg):
+    """Logits (B, tasks) for a padded batch.
+
+    emb: (B, L, d) pooled token embeddings from the Rust sparse side.
+    lengths: (B,) int32 true lengths (0 = padded sample).
+    """
+    _HEADS[0] = cfg["heads"]
+    p = unflatten(params, cfg)
+    B, L, d = emb.shape
+    x = emb
+    for i in range(cfg["blocks"]):
+        x = _hstu_block(p, i, x, lengths)
+
+    # Masked mean-pool over valid tokens.
+    pos = jnp.arange(L)
+    tok_valid = (pos[None, :] < lengths[:, None]).astype(x.dtype)  # (B, L)
+    denom = jnp.maximum(lengths, 1).astype(x.dtype)[:, None]
+    pooled = (x * tok_valid[..., None]).sum(1) / denom  # (B, d)
+
+    # Experts (shared across tasks).
+    experts = []
+    for e in range(cfg["experts"]):
+        hdn = jax.nn.silu(pooled @ p[f"expert{e}.w1"] + p[f"expert{e}.b1"])
+        experts.append(hdn @ p[f"expert{e}.w2"] + p[f"expert{e}.b2"])
+    experts = jnp.stack(experts, axis=1)  # (B, E, d)
+
+    logits = []
+    for t in range(cfg["tasks"]):
+        gate_logits = pooled @ p[f"gate{t}.w"] + p[f"gate{t}.b"]  # (B, E)
+        # Top-k routing: keep the k largest gates, renormalize (Eq. 4 /
+        # §2 "aggregate the output embeddings of the top-k expert
+        # models"). Implemented as iterative max extraction: lax.top_k
+        # lowers to a `topk(..., largest=true)` HLO the xla_extension
+        # 0.5.1 text parser rejects, and grad-of-sort trips a
+        # GatherDimensionNumbers incompatibility in this jax/xla pairing.
+        # k is 1-2, and the routing threshold carries no gradient.
+        kth = jax.lax.stop_gradient(_kth_largest(gate_logits, cfg["top_k"]))
+        masked = jnp.where(gate_logits >= kth, gate_logits, -jnp.inf)
+        g = jax.nn.softmax(masked, axis=-1)  # (B, E)
+        y = jnp.einsum("be,bed->bd", g, experts)
+        logits.append(y @ p[f"head{t}.w"] + p[f"head{t}.b"])
+    return jnp.stack(logits, axis=1)  # (B, tasks)
+
+
+def _kth_largest(x, k):
+    """k-th largest value along the last axis (k small, static).
+
+    Iterative max extraction; exact ties collapse together (fine for
+    expert gating where ties have measure zero).
+    """
+    cur = x
+    for _ in range(k - 1):
+        m = cur.max(-1, keepdims=True)
+        cur = jnp.where(cur >= m, -jnp.inf, cur)
+    return cur.max(-1, keepdims=True)
+
+
+def _bce_with_logits(z, y):
+    """Numerically stable binary cross-entropy with logits."""
+    return jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def loss_sums(params, emb, lengths, labels, cfg):
+    """Per-task BCE loss *sums* over valid samples + logits."""
+    logits = forward(params, emb, lengths, cfg)  # (B, T)
+    valid = (lengths > 0).astype(logits.dtype)[:, None]  # (B, 1)
+    per_task = (_bce_with_logits(logits, labels) * valid).sum(0)  # (T,)
+    return per_task.sum(), (per_task, logits, valid.sum())
+
+
+def train_step(params, emb, lengths, labels, cfg):
+    """One training step's computation (no state update — the optimizer
+    lives in Rust).
+
+    Returns (loss_sums[T], grads[P], emb_grad[B,L,d], logits[B,T],
+    n_valid[]).
+    """
+    grad_fn = jax.value_and_grad(loss_sums, argnums=(0, 1), has_aux=True)
+    (_, (per_task, logits, n_valid)), (gp, gemb) = grad_fn(
+        params, emb, lengths, labels, cfg
+    )
+    return per_task, gp, gemb, logits, n_valid
+
+
+def make_train_fn(name):
+    cfg = CONFIGS[name]
+    return functools.partial(train_step, cfg=cfg)
+
+
+def make_forward_fn(name):
+    cfg = CONFIGS[name]
+
+    def fwd(params, emb, lengths):
+        return (forward(params, emb, lengths, cfg),)
+
+    return fwd

@@ -1,0 +1,75 @@
+"""AOT pipeline consistency: manifest <-> artifacts <-> model."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    for name in model.CONFIGS:
+        assert name in manifest["models"], name
+
+
+def test_param_bins_match_counts(manifest):
+    for name, m in manifest["models"].items():
+        assert m["param_count"] == model.param_count(model.CONFIGS[name])
+        params = np.fromfile(os.path.join(ART, m["params_bin"]), "<f4")
+        assert params.shape == (m["param_count"],)
+        # Matches a fresh deterministic init.
+        fresh = model.init_params(model.CONFIGS[name], seed=manifest["seed"])
+        np.testing.assert_array_equal(params, fresh)
+
+
+def test_hlo_artifacts_exist_and_parse(manifest):
+    for name, m in manifest["models"].items():
+        for b in m["buckets"]:
+            for key in ("train", "forward"):
+                path = os.path.join(ART, b[key])
+                assert os.path.exists(path), path
+                text = open(path).read()
+                assert text.startswith("HloModule"), f"{path} not HLO text"
+                # Parameter arity sanity: the entry computation must
+                # declare the expected number of parameters.
+                n_params = 4 if key == "train" else 3
+                assert text.count("parameter(") >= n_params, path
+
+
+def test_train_artifact_declares_output_order(manifest):
+    for m in manifest["models"].values():
+        assert m["train_outputs"] == [
+            "loss_sums", "grads", "emb_grad", "logits", "n_valid"
+        ]
+
+
+def test_bucket_shapes_sorted_and_usable(manifest):
+    for name, m in manifest["models"].items():
+        buckets = [(b["batch"], b["len"]) for b in m["buckets"]]
+        assert buckets == sorted(buckets), "buckets must ascend"
+        for _, l in buckets:
+            # Kernel block sizes must divide the padded length.
+            assert l % 8 == 0
+
+
+def test_lowering_is_deterministic(tmp_path):
+    # Same seed -> byte-identical params and manifest content.
+    m1 = aot.build(str(tmp_path / "a"), models=["tiny"], seed=3)
+    m2 = aot.build(str(tmp_path / "b"), models=["tiny"], seed=3)
+    p1 = np.fromfile(tmp_path / "a" / "tiny_params.bin", "<f4")
+    p2 = np.fromfile(tmp_path / "b" / "tiny_params.bin", "<f4")
+    np.testing.assert_array_equal(p1, p2)
+    assert m1["models"]["tiny"]["param_count"] == m2["models"]["tiny"]["param_count"]

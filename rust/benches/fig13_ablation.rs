@@ -1,0 +1,80 @@
+//! Figure 13: ablation — incrementally enable table merging, two-stage
+//! deduplication, then sequence balancing, for GRM 4G-1D and 110G-1D.
+//!
+//! Paper: each component contributes; combined speedup 1.60×–2.44× over
+//! the TorchRec baseline, growing with computational complexity.
+
+use mtgrboost::config::ModelConfig;
+use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::sim::{simulate, SimOptions};
+use mtgrboost::util::bench::{ratio, BenchReport, Table};
+
+fn main() {
+    let mut table = Table::new(
+        "Fig 13: ablation (8 GPUs, simulated seq/s)",
+        &["config", "variant", "seq/s", "vs baseline"],
+    );
+    let mut rep = BenchReport::new("fig13_ablation");
+    for (label, model) in [
+        ("4G 1D", ModelConfig::grm_4g()),
+        ("110G 1D", ModelConfig::grm_110g()),
+    ] {
+        let variants: [(&str, Box<dyn Fn(&mut SimOptions)>); 4] = [
+            (
+                "baseline (TorchRec)",
+                Box::new(|o: &mut SimOptions| {
+                    o.sequence_balancing = false;
+                    o.table_merging = false;
+                    o.dedup = DedupStrategy::None;
+                }),
+            ),
+            (
+                "+ merge tables",
+                Box::new(|o: &mut SimOptions| {
+                    o.sequence_balancing = false;
+                    o.table_merging = true;
+                    o.dedup = DedupStrategy::None;
+                }),
+            ),
+            (
+                "+ two-stage dedup",
+                Box::new(|o: &mut SimOptions| {
+                    o.sequence_balancing = false;
+                    o.table_merging = true;
+                    o.dedup = DedupStrategy::TwoStage;
+                }),
+            ),
+            (
+                "+ seq balancing (full)",
+                Box::new(|o: &mut SimOptions| {
+                    o.sequence_balancing = true;
+                    o.table_merging = true;
+                    o.dedup = DedupStrategy::TwoStage;
+                }),
+            ),
+        ];
+        let mut base = None;
+        for (name, cfg) in variants.iter() {
+            let mut opts = SimOptions::new(model.clone(), 8);
+            opts.steps = 40;
+            cfg(&mut opts);
+            let r = simulate(&opts);
+            let b = *base.get_or_insert(r.throughput);
+            table.row(&[
+                label.into(),
+                (*name).into(),
+                format!("{:.0}", r.throughput),
+                ratio(r.throughput, b),
+            ]);
+            if *name == "+ seq balancing (full)" {
+                rep.add_metric(
+                    &format!("full_speedup_{}", label.replace(' ', "_")),
+                    (r.throughput / b).into(),
+                );
+            }
+        }
+    }
+    rep.add_table(table);
+    rep.add_metric("paper_range", "1.60x - 2.44x".into());
+    rep.save().unwrap();
+}

@@ -1,0 +1,57 @@
+//! Figure 14: throughput with sequence balancing disabled vs enabled,
+//! scaling 8 → 64 GPUs, for GRM 4G-1D and 110G-1D.
+//!
+//! Paper: average gains +4.4% (4G) and +26.5% (110G); the gain grows
+//! with GPU count (more devices → higher chance one draws a pathological
+//! batch and stalls the synchronous step) and peaks at +33.5% for 110G
+//! on 64 GPUs.
+
+use mtgrboost::config::ModelConfig;
+use mtgrboost::sim::{simulate, SimOptions};
+use mtgrboost::util::bench::{pct_gain, BenchReport, Table};
+
+fn main() {
+    let mut table = Table::new(
+        "Fig 14: sequence balancing gain by world size (simulated seq/s)",
+        &["config", "gpus", "disabled", "enabled", "gain"],
+    );
+    let mut rep = BenchReport::new("fig14_seq_balancing");
+    for (label, model) in [
+        ("4G 1D", ModelConfig::grm_4g()),
+        ("110G 1D", ModelConfig::grm_110g()),
+    ] {
+        let mut gains = Vec::new();
+        for world in [8usize, 16, 32, 64] {
+            let run = |balancing: bool| {
+                let mut opts = SimOptions::new(model.clone(), world);
+                opts.steps = 30;
+                opts.sequence_balancing = balancing;
+                simulate(&opts).throughput
+            };
+            let off = run(false);
+            let on = run(true);
+            gains.push(on / off - 1.0);
+            table.row(&[
+                label.into(),
+                world.to_string(),
+                format!("{off:.0}"),
+                format!("{on:.0}"),
+                pct_gain(on, off),
+            ]);
+        }
+        let avg = gains.iter().sum::<f64>() / gains.len() as f64;
+        rep.add_metric(
+            &format!("avg_gain_pct_{}", label.replace(' ', "_")),
+            (avg * 100.0).into(),
+        );
+        rep.add_metric(
+            &format!("gain_at_64_pct_{}", label.replace(' ', "_")),
+            (gains.last().unwrap() * 100.0).into(),
+        );
+    }
+    rep.add_table(table);
+    rep.add_metric("paper_avg_4g_pct", 4.4.into());
+    rep.add_metric("paper_avg_110g_pct", 26.5.into());
+    rep.add_metric("paper_peak_110g_64gpu_pct", 33.5.into());
+    rep.save().unwrap();
+}

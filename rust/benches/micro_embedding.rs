@@ -1,0 +1,114 @@
+//! Micro-benchmarks of the sparse-side hot paths: MurmurHash3, grouped
+//! parallel probing vs linear probing, dynamic-table ops, dedup kernels,
+//! gather/scatter. These feed the §Perf iteration log in EXPERIMENTS.md.
+
+use mtgrboost::embedding::dedup::{gather_rows, scatter_accumulate, Dedup};
+use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use mtgrboost::embedding::hash::{fmix64, hash_id, murmur3_x86_32};
+use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::util::bench::{bench_fn, BenchReport};
+use mtgrboost::util::rng::{Xoshiro256, Zipf};
+
+fn main() {
+    let mut rep = BenchReport::new("micro_embedding");
+    let mut rng = Xoshiro256::new(42);
+
+    // ---- hashing -------------------------------------------------------
+    let keys: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+    let r = bench_fn("fmix64_4096_keys", 10, 50, |_| {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= fmix64(k);
+        }
+        std::hint::black_box(acc);
+    });
+    rep.add_metric("fmix64_ns_per_key", (r.ns_per_iter() / 4096.0).into());
+    let data: Vec<u8> = (0..256).map(|i| i as u8).collect();
+    let r = bench_fn("murmur3_x86_32_256B", 10, 50, |_| {
+        std::hint::black_box(murmur3_x86_32(&data, 0));
+    });
+    rep.add_metric("murmur3_256B_ns", r.ns_per_iter().into());
+
+    // ---- probing: grouped-parallel vs naive linear ----------------------
+    let m = 1usize << 16;
+    let mask = (m - 1) as u64;
+    let r = bench_fn("grouped_probe_step_4096", 10, 50, |_| {
+        let mut acc = 0u64;
+        for &k in &keys {
+            let s = DynamicEmbeddingTable::probe_step(k, m as u64, 4);
+            acc ^= (hash_id(k, 0) + s) & mask;
+        }
+        std::hint::black_box(acc);
+    });
+    rep.add_metric("grouped_probe_ns_per_key", (r.ns_per_iter() / 4096.0).into());
+
+    // ---- table ops under Zipf churn -------------------------------------
+    const DIM: usize = 64;
+    let zipf = Zipf::new(100_000, 1.05);
+    let ids: Vec<u64> = (0..100_000).map(|_| zipf.sample(&mut rng) as u64).collect();
+    let mut table =
+        DynamicEmbeddingTable::new(DynamicTableConfig::new(DIM).with_capacity(4096));
+    let mut buf = vec![0.0f32; DIM];
+    // Warm fill.
+    for &id in &ids[..50_000] {
+        table.lookup_or_insert(id, &mut buf);
+    }
+    let mut i = 0usize;
+    let r = bench_fn("dyn_table_lookup_hit_dim64", 2, 20, |_| {
+        for _ in 0..10_000 {
+            table.lookup_or_insert(ids[i % 50_000], &mut buf);
+            i += 1;
+        }
+    });
+    rep.add_metric("lookup_hit_ns", (r.ns_per_iter() / 1e4).into());
+
+    let delta = vec![0.01f32; DIM];
+    i = 0;
+    let r = bench_fn("dyn_table_apply_delta_dim64", 2, 20, |_| {
+        for _ in 0..10_000 {
+            table.apply_delta(ids[i % 50_000], &delta);
+            i += 1;
+        }
+    });
+    rep.add_metric("apply_delta_ns", (r.ns_per_iter() / 1e4).into());
+
+    // ---- dedup kernels ---------------------------------------------------
+    let batch: Vec<u64> = (0..100_000).map(|_| zipf.sample(&mut rng) as u64).collect();
+    let r = bench_fn("dedup_hash_100k_zipf", 2, 20, |_| {
+        std::hint::black_box(Dedup::of(&batch));
+    });
+    rep.add_metric("dedup_hash_ns_per_id", (r.ns_per_iter() / 1e5).into());
+    let r = bench_fn("dedup_sort_100k_zipf", 2, 20, |_| {
+        std::hint::black_box(Dedup::of_sorted(&batch));
+    });
+    rep.add_metric("dedup_sort_ns_per_id", (r.ns_per_iter() / 1e5).into());
+
+    let d = Dedup::of(&batch);
+    let rows: Vec<f32> = (0..d.unique.len() * DIM).map(|_| rng.next_f32()).collect();
+    let mut out = vec![0.0f32; batch.len() * DIM];
+    let r = bench_fn("gather_rows_100k_dim64", 2, 20, |_| {
+        gather_rows(&rows, DIM, &d.inverse, &mut out);
+        std::hint::black_box(&out);
+    });
+    rep.add_metric("gather_ns_per_row", (r.ns_per_iter() / 1e5).into());
+
+    let grads: Vec<f32> = (0..batch.len() * DIM).map(|_| rng.next_f32()).collect();
+    let mut acc = vec![0.0f32; d.unique.len() * DIM];
+    let r = bench_fn("scatter_accumulate_100k_dim64", 2, 20, |_| {
+        scatter_accumulate(&grads, DIM, &d.inverse, &mut acc);
+        std::hint::black_box(&acc);
+    });
+    rep.add_metric("scatter_ns_per_row", (r.ns_per_iter() / 1e5).into());
+
+    println!(
+        "\ntable: {} rows, {:.1} MB, load factor {:.2}, {} expansions",
+        table.len(),
+        table.memory_bytes() as f64 / 1e6,
+        table.load_factor(),
+        table.stats.expansions
+    );
+    rep.add_metric("table_probes_per_op", (table.stats.probes as f64
+        / (table.stats.hits + table.stats.misses).max(1) as f64)
+        .into());
+    rep.save().unwrap();
+}

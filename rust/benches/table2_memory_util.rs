@@ -1,0 +1,97 @@
+//! Table 2: batch sizes and average GPU memory utilization with
+//! sequence balancing disabled vs enabled.
+//!
+//! Paper: GRM 4G-1D 480 → 496 batch, 86.3% → 95.7% memory utilization;
+//! GRM 110G-1D 80 → 116 batch, 75.3% → 90.3%.
+//!
+//! Mechanism reproduced: with fixed batching the activation memory must
+//! be *provisioned for the worst batch* (long-sequence clusters) while
+//! the *average* batch uses much less — the provisioned-but-idle gap is
+//! wasted memory. Dynamic batching caps every step near the token
+//! target, so average ≈ peak and the same device can also run a larger
+//! average batch. We measure the average/peak token statistics with the
+//! real batchers and convert the headroom into utilization points
+//! (embedding tables + params anchor the static share of memory).
+
+use mtgrboost::config::ModelConfig;
+use mtgrboost::sim::{simulate, SimOptions};
+use mtgrboost::util::bench::{BenchReport, Table};
+
+const A100: f64 = 80.0e9;
+
+fn main() {
+    let mut rep = BenchReport::new("table2_memory_util");
+    let mut table = Table::new(
+        "Table 2: batch size & memory utilization, balancing off -> on",
+        &["model", "batch off", "batch on (avg)", "mem off", "mem on"],
+    );
+    for (label, model, fixed_batch) in [
+        ("GRM 4G 1D", ModelConfig::grm_4g(), 480usize),
+        ("GRM 110G 1D", ModelConfig::grm_110g(), 80usize),
+    ] {
+        // Bytes of live activations per token (fwd+bwd working set,
+        // ~40 B per hidden unit per block incl. the 4d UQKV tensors).
+        let bpt = (model.emb_dim * model.hstu_blocks) as f64 * 40.0;
+
+        // Fixed mode: measure average and worst per-device token counts.
+        let mut off = SimOptions::new(model.clone(), 8);
+        off.steps = 60;
+        off.sequence_balancing = false;
+        off.fixed_batch = fixed_batch;
+        let r_off = simulate(&off);
+        let toks: Vec<f64> = r_off
+            .steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.tokens as f64))
+            .collect();
+        let avg_t = toks.iter().sum::<f64>() / toks.len() as f64;
+        let peak_t = toks.iter().cloned().fold(0.0, f64::max) * 1.10; // safety margin
+
+        // The device must provision peak_t×bpt activations; static
+        // memory (tables + optimizer + params) fills the rest of the
+        // device. Anchor: provisioning targets a full device.
+        let static_bytes = A100 - peak_t * bpt;
+        let util_off = (static_bytes + avg_t * bpt) / A100;
+
+        // Dynamic mode: the token target can safely rise to consume the
+        // former worst-case headroom; average ≈ peak ≈ target.
+        let target = peak_t * 0.98;
+        let mut on = off.clone();
+        on.sequence_balancing = true;
+        on.target_tokens = target as usize;
+        let r_on = simulate(&on);
+        let batch_on: f64 = r_on
+            .steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.sequences as f64))
+            .sum::<f64>()
+            / (r_on.steps.len() * 8) as f64;
+        let on_toks: Vec<f64> = r_on
+            .steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.tokens as f64))
+            .collect();
+        let avg_on = on_toks.iter().sum::<f64>() / on_toks.len() as f64;
+        let util_on = (static_bytes + avg_on * bpt) / A100;
+
+        table.row(&[
+            label.into(),
+            fixed_batch.to_string(),
+            format!("{batch_on:.0}"),
+            format!("{:.1}%", util_off * 100.0),
+            format!("{:.1}%", util_on * 100.0),
+        ]);
+        rep.add_metric(
+            &format!("util_gain_pts_{}", label.replace(' ', "_")),
+            ((util_on - util_off) * 100.0).into(),
+        );
+        rep.add_metric(
+            &format!("batch_on_{}", label.replace(' ', "_")),
+            batch_on.into(),
+        );
+    }
+    rep.add_table(table);
+    rep.add_metric("paper_4g", "480->496 @ 86.3->95.7%".into());
+    rep.add_metric("paper_110g", "80->116 @ 75.3->90.3%".into());
+    rep.save().unwrap();
+}

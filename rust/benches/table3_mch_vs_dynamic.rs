@@ -1,0 +1,130 @@
+//! Table 3: dynamic hash table vs TorchRec Managed Collision Handling
+//! (MCH), over complexities {4G, 110G} × dim factors {1D, 8D, 64D}.
+//!
+//! Paper: dynamic table wins 1.47×–2.22× (grouped parallel probing vs
+//! binary-search remap), and MCH OOMs at 110G-64D because it
+//! pre-allocates its full remap + embedding capacity.
+//!
+//! Method: (1) measure the REAL per-op cost ratio between our actual
+//! `MchTable` and `DynamicEmbeddingTable` implementations under a Zipf
+//! workload — the mechanism behind the paper's gap; (2) compose it with
+//! the simulated step decomposition: MCH multiplies the sparse phase
+//! (table ops + exchanges) by the measured ratio, and the A100 memory
+//! model decides the OOM cells.
+
+use mtgrboost::config::ModelConfig;
+use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use mtgrboost::embedding::mch::MchTable;
+use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::sim::{simulate, would_oom, SimOptions, TableBackend};
+use mtgrboost::util::bench::{bench_fn, BenchReport, Table};
+use mtgrboost::util::rng::{Xoshiro256, Zipf};
+
+fn main() {
+    let mut rep = BenchReport::new("table3_mch_vs_dynamic");
+
+    // ---- part 1: real table micro-benchmark ---------------------------
+    const DIM: usize = 16;
+    const VOCAB: usize = 40_000;
+    let zipf = Zipf::new(VOCAB, 1.05);
+    let mut rng = Xoshiro256::new(7);
+    let ids: Vec<u64> = (0..200_000)
+        .map(|_| zipf.sample(&mut rng) as u64)
+        .collect();
+
+    let mut dynamic = DynamicEmbeddingTable::new(
+        DynamicTableConfig::new(DIM).with_capacity(1024),
+    );
+    let mut mch = MchTable::new(DIM, VOCAB, 1);
+    let mut buf = vec![0.0f32; DIM];
+    let mut i = 0usize;
+    let r_dyn = bench_fn("dynamic_table_lookup_or_insert", 1, 5, |_| {
+        for _ in 0..ids.len() / 5 {
+            dynamic.lookup_or_insert(ids[i % ids.len()], &mut buf);
+            i += 1;
+        }
+    });
+    i = 0;
+    let r_mch = bench_fn("mch_lookup_or_insert", 1, 5, |_| {
+        for _ in 0..ids.len() / 5 {
+            mch.lookup_or_insert(ids[i % ids.len()], &mut buf);
+            i += 1;
+        }
+    });
+    let measured_ratio = r_mch.summary.mean / r_dyn.summary.mean;
+    rep.add_metric("real_lookup_slowdown", measured_ratio.into());
+    println!(
+        "\nreal table micro-bench: MCH is {measured_ratio:.2}x slower than the \
+         dynamic hash table\n"
+    );
+
+    // ---- part 2: composed Table 3 grid --------------------------------
+    let mut table = Table::new(
+        "Table 3: throughput (simulated seq/s), MCH vs dynamic",
+        &["complexity", "dim", "MCH", "MTGRBoost", "gain"],
+    );
+    for (clabel, model) in [("4G", ModelConfig::grm_4g()), ("110G", ModelConfig::grm_110g())]
+    {
+        for dim_factor in [1usize, 8, 64] {
+            let mut opts = SimOptions::new(model.clone().with_dim_factor(dim_factor), 8);
+            opts.steps = 20;
+            opts.resident_rows = 60_000;
+            let r_dyn = simulate(&opts);
+            // MCH memory: simulate with the MCH backend (pre-allocated
+            // remap + value capacity).
+            let mut mch_opts = opts.clone();
+            mch_opts.backend = TableBackend::Mch;
+            let r_mch_mem = simulate(&mch_opts);
+            assert!(!would_oom(&r_dyn), "dynamic table must fit everywhere");
+
+            // Compose step times: sparse phase (table ops + exchanges)
+            // scales by the *measured* implementation ratio under MCH.
+            let (mut t_dyn, mut t_mch) = (0.0f64, 0.0f64);
+            let mut samples = 0u64;
+            for s in &r_dyn.steps {
+                let compute = s
+                    .devices
+                    .iter()
+                    .map(|d| d.compute_s)
+                    .fold(0.0f64, f64::max);
+                let sparse = s
+                    .devices
+                    .iter()
+                    .map(|d| d.lookup_s + d.comm_s)
+                    .fold(0.0f64, f64::max);
+                t_dyn += compute + sparse + s.allreduce_s;
+                t_mch += compute + sparse * measured_ratio + s.allreduce_s;
+                samples += s.devices.iter().map(|d| d.sequences as u64).sum::<u64>();
+            }
+            let thr_dyn = samples as f64 / t_dyn;
+            let thr_mch = samples as f64 / t_mch;
+
+            let (mch_cell, gain_cell) = if would_oom(&r_mch_mem) {
+                ("OOM".to_string(), "-".to_string())
+            } else {
+                (
+                    format!("{thr_mch:.0}"),
+                    format!("{:+.1}%", 100.0 * (thr_dyn / thr_mch - 1.0)),
+                )
+            };
+            table.row(&[
+                clabel.into(),
+                format!("{dim_factor}D"),
+                mch_cell,
+                format!("{thr_dyn:.0}"),
+                gain_cell,
+            ]);
+            if would_oom(&r_mch_mem) {
+                rep.add_metric(&format!("oom_{clabel}_{dim_factor}d"), true.into());
+            } else {
+                rep.add_metric(
+                    &format!("gain_{clabel}_{dim_factor}d"),
+                    (thr_dyn / thr_mch).into(),
+                );
+            }
+        }
+    }
+    rep.add_table(table);
+    rep.add_metric("paper_range", "1.47x - 2.22x, MCH OOM at 110G-64D".into());
+    rep.save().unwrap();
+}

@@ -1,0 +1,438 @@
+//! Checkpoint save/resume with world-size resharding (§5.2).
+//!
+//! "MTGRBoost implements a novel approach where each device independently
+//! preserves its own checkpoint. During loading, new devices locate
+//! required checkpoint files through modulo operations. For instance,
+//! when loading checkpoints saved from 8 GPUs onto 16 GPUs, both GPU 0
+//! and GPU 8 load parameters from the checkpoint saved on the original
+//! GPU 0. This design is grounded in the insight that distributed
+//! cluster scaling typically follows powers of two."
+//!
+//! Layout:
+//! ```text
+//! <dir>/meta.json                 world, step, model, dim, param_count
+//! <dir>/dense.bin                 params f32[P] ++ DenseAdam state (rank 0 writes)
+//! <dir>/sparse_rank<r>_of<n>.bin  rows owned by rank r: per row
+//!                                 id u64 | row f32[d] | m f32[d] | v f32[d] | t u64
+//! ```
+//!
+//! Sharding uses `shard_owner(id, world) = hash(id) % world` with
+//! power-of-two worlds, so `hash % 2n` refines `hash % n`: a new rank
+//! `r'` under world `n'` reads exactly the old files
+//! `{r | r ≡ r' (mod min(n, n'))}` picked by [`files_to_read`], then
+//! keeps the ids it now owns — no device ever scans the whole
+//! checkpoint (the flaw the paper calls out in prior systems).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::embedding::dynamic_table::DynamicEmbeddingTable;
+use crate::embedding::sharded::shard_owner;
+use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::optim::adam::{DenseAdam, RowState, SparseAdam};
+use crate::util::json::Json;
+
+/// Checkpoint metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub world: usize,
+    pub step: u64,
+    pub model: String,
+    pub dim: usize,
+    pub param_count: usize,
+}
+
+/// One sparse row as stored on disk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseRow {
+    pub id: GlobalId,
+    pub row: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+/// Which old-world sparse files a new rank must read (the modulo rule).
+/// Requires both world sizes to be powers of two (the paper's stated
+/// scaling discipline); panics otherwise so misconfigurations surface
+/// loudly.
+pub fn files_to_read(old_world: usize, new_world: usize, new_rank: usize) -> Vec<usize> {
+    assert!(
+        old_world.is_power_of_two() && new_world.is_power_of_two(),
+        "checkpoint resharding requires power-of-two world sizes \
+         (got {old_world} -> {new_world})"
+    );
+    assert!(new_rank < new_world);
+    if new_world >= old_world {
+        // Scale-up: exactly one file (GPU 0 and GPU 8 both read old 0).
+        vec![new_rank % old_world]
+    } else {
+        // Scale-down: all old ranks congruent to new_rank mod new_world.
+        (0..old_world)
+            .filter(|r| r % new_world == new_rank)
+            .collect()
+    }
+}
+
+fn meta_path(dir: &Path) -> std::path::PathBuf {
+    dir.join("meta.json")
+}
+
+fn sparse_path(dir: &Path, rank: usize, world: usize) -> std::path::PathBuf {
+    dir.join(format!("sparse_rank{rank:05}_of{world}.bin"))
+}
+
+/// Save one rank's checkpoint shard. Rank 0 additionally writes the
+/// metadata and the replicated dense parameters + optimizer state.
+pub fn save(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    rank: usize,
+    dense: Option<(&[f32], &DenseAdam)>,
+    table: &DynamicEmbeddingTable,
+    opt: &SparseAdam,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let d = table.dim();
+    anyhow::ensure!(d == meta.dim, "table dim != meta dim");
+
+    if rank == 0 {
+        let mut j = Json::obj();
+        j.set("world", meta.world.into());
+        j.set("step", (meta.step as usize).into());
+        j.set("model", meta.model.as_str().into());
+        j.set("dim", meta.dim.into());
+        j.set("param_count", meta.param_count.into());
+        std::fs::write(meta_path(dir), j.pretty())?;
+        let (params, adam) =
+            dense.context("rank 0 must provide the dense params + optimizer")?;
+        anyhow::ensure!(params.len() == meta.param_count, "params arity");
+        let mut bytes = Vec::with_capacity(params.len() * 4);
+        for p in params {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        bytes.extend_from_slice(&adam.state_bytes());
+        std::fs::write(dir.join("dense.bin"), bytes)?;
+    }
+
+    // Sparse shard: every live row this rank owns, with optimizer state
+    // (zeros when the row was never updated).
+    let mut bytes = Vec::new();
+    let zero = RowState {
+        m: vec![0.0; d],
+        v: vec![0.0; d],
+        t: 0,
+    };
+    let mut count = 0u64;
+    let mut body = Vec::new();
+    for (id, row) in table.iter_rows() {
+        let st = opt.row_state(id).unwrap_or(&zero);
+        body.extend_from_slice(&id.to_le_bytes());
+        for x in row.iter().chain(st.m.iter()).chain(st.v.iter()) {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        body.extend_from_slice(&st.t.to_le_bytes());
+        count += 1;
+    }
+    bytes.extend_from_slice(&count.to_le_bytes());
+    bytes.extend_from_slice(&(d as u64).to_le_bytes());
+    bytes.extend_from_slice(&body);
+    std::fs::write(sparse_path(dir, rank, meta.world), bytes)?;
+    Ok(())
+}
+
+/// Read checkpoint metadata.
+pub fn load_meta(dir: &Path) -> Result<CheckpointMeta> {
+    let text = std::fs::read_to_string(meta_path(dir))
+        .with_context(|| format!("no checkpoint at {}", dir.display()))?;
+    let j = Json::parse(&text).context("parse checkpoint meta")?;
+    Ok(CheckpointMeta {
+        world: j.expect_usize("world")?,
+        step: j.expect_usize("step")? as u64,
+        model: j.expect_str("model")?.to_string(),
+        dim: j.expect_usize("dim")?,
+        param_count: j.expect_usize("param_count")?,
+    })
+}
+
+/// Load the replicated dense parameters + optimizer state.
+pub fn load_dense(dir: &Path, param_count: usize) -> Result<(Vec<f32>, Vec<u8>)> {
+    let bytes = std::fs::read(dir.join("dense.bin")).context("read dense.bin")?;
+    let p_bytes = param_count * 4;
+    if bytes.len() < p_bytes {
+        bail!("dense.bin truncated");
+    }
+    let params: Vec<f32> = bytes[..p_bytes]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((params, bytes[p_bytes..].to_vec()))
+}
+
+fn parse_sparse_file(bytes: &[u8]) -> Result<Vec<SparseRow>> {
+    if bytes.len() < 16 {
+        bail!("sparse shard truncated header");
+    }
+    let count = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let d = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let row_bytes = 8 + 3 * d * 4 + 8;
+    anyhow::ensure!(
+        bytes.len() == 16 + count * row_bytes,
+        "sparse shard size mismatch"
+    );
+    let mut rows = Vec::with_capacity(count);
+    let mut off = 16;
+    let read_f32s = |bytes: &[u8], off: usize, n: usize| -> Vec<f32> {
+        bytes[off..off + n * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    for _ in 0..count {
+        let id = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        off += 8;
+        let row = read_f32s(bytes, off, d);
+        off += d * 4;
+        let m = read_f32s(bytes, off, d);
+        off += d * 4;
+        let v = read_f32s(bytes, off, d);
+        off += d * 4;
+        let t = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        off += 8;
+        rows.push(SparseRow { id, row, m, v, t });
+    }
+    Ok(rows)
+}
+
+/// Load the sparse rows a new rank owns under the new world size,
+/// reading only the modulo-selected files.
+pub fn load_sparse_shard(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    new_world: usize,
+    new_rank: usize,
+) -> Result<Vec<SparseRow>> {
+    let mut out = Vec::new();
+    for old_rank in files_to_read(meta.world, new_world, new_rank) {
+        let path = sparse_path(dir, old_rank, meta.world);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        for row in parse_sparse_file(&bytes)? {
+            if shard_owner(row.id, new_world) == new_rank {
+                out.push(row);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Install loaded sparse rows into a table + optimizer (resume path).
+pub fn install_rows(
+    rows: Vec<SparseRow>,
+    table: &mut DynamicEmbeddingTable,
+    opt: &mut SparseAdam,
+) {
+    let d = table.dim();
+    let mut buf = vec![0.0f32; d];
+    for r in rows {
+        table.lookup_or_insert(r.id, &mut buf);
+        if let Some(slot) = table.row_mut(r.id) {
+            slot.copy_from_slice(&r.row);
+        }
+        if r.t > 0 {
+            opt.restore_row(
+                r.id,
+                RowState {
+                    m: r.m,
+                    v: r.v,
+                    t: r.t,
+                },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::dynamic_table::DynamicTableConfig;
+    use crate::optim::adam::AdamParams;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mtgr_ckpt_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn modulo_rule_matches_paper_example() {
+        // Save on 8, load on 16: new GPU 0 and GPU 8 both read old 0.
+        assert_eq!(files_to_read(8, 16, 0), vec![0]);
+        assert_eq!(files_to_read(8, 16, 8), vec![0]);
+        assert_eq!(files_to_read(8, 16, 11), vec![3]);
+        // Same world: identity.
+        assert_eq!(files_to_read(8, 8, 5), vec![5]);
+        // Scale down 8 → 4: new rank 1 reads old {1, 5}.
+        assert_eq!(files_to_read(8, 4, 1), vec![1, 5]);
+        // Scale down to 1: rank 0 reads everything.
+        assert_eq!(files_to_read(8, 1, 0), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_world_rejected() {
+        files_to_read(8, 6, 0);
+    }
+
+    #[test]
+    fn modulo_rule_covers_every_id_exactly_once() {
+        // For random ids: across all new ranks, each id owned by some
+        // old rank is loaded exactly once.
+        let mut rng = crate::util::rng::Xoshiro256::new(4);
+        for &(old_w, new_w) in &[(4usize, 8usize), (8, 4), (8, 8), (2, 16), (16, 2)] {
+            for _ in 0..200 {
+                let id = rng.next_u64() >> 1;
+                let old_owner = shard_owner(id, old_w);
+                let mut loads = 0;
+                for new_rank in 0..new_w {
+                    let reads = files_to_read(old_w, new_w, new_rank);
+                    if reads.contains(&old_owner) && shard_owner(id, new_w) == new_rank {
+                        loads += 1;
+                    }
+                }
+                assert_eq!(loads, 1, "id {id} old_w {old_w} new_w {new_w}");
+            }
+        }
+    }
+
+    fn build_world(world: usize, dim: usize, n_ids: u64) -> Vec<(DynamicEmbeddingTable, SparseAdam)> {
+        let mut shards: Vec<(DynamicEmbeddingTable, SparseAdam)> = (0..world)
+            .map(|_| {
+                (
+                    DynamicEmbeddingTable::new(
+                        DynamicTableConfig::new(dim).with_capacity(64).with_seed(9),
+                    ),
+                    SparseAdam::new(dim, AdamParams::default()),
+                )
+            })
+            .collect();
+        let mut buf = vec![0.0f32; dim];
+        for id in 0..n_ids {
+            let owner = shard_owner(id, world);
+            let (t, o) = &mut shards[owner];
+            t.lookup_or_insert(id, &mut buf);
+            // A couple of optimizer steps so state is nontrivial.
+            let g: Vec<f32> = (0..dim).map(|j| 0.1 * (id + j as u64 + 1) as f32).collect();
+            o.step(t, &[id], &g, 1.0);
+            o.step(t, &[id], &g, 0.5);
+        }
+        shards
+    }
+
+    #[test]
+    fn save_reshard_load_roundtrip_8_to_16_and_back() {
+        let dim = 4;
+        let dir = tmp("rt");
+        let old_world = 4;
+        let shards = build_world(old_world, dim, 300);
+
+        // Reference content: id → row.
+        let mut reference = std::collections::HashMap::new();
+        for (t, _) in &shards {
+            for (id, row) in t.iter_rows() {
+                reference.insert(id, row.to_vec());
+            }
+        }
+
+        let meta = CheckpointMeta {
+            world: old_world,
+            step: 77,
+            model: "tiny".into(),
+            dim,
+            param_count: 3,
+        };
+        let params = [1.0f32, -2.0, 3.0];
+        let dense_opt = DenseAdam::new(3, AdamParams::default());
+        for (rank, (t, o)) in shards.iter().enumerate() {
+            let dense = (rank == 0).then_some((&params[..], &dense_opt));
+            save(&dir, &meta, rank, dense, t, o).unwrap();
+        }
+
+        for &new_world in &[8usize, 2, 4] {
+            let meta2 = load_meta(&dir).unwrap();
+            assert_eq!(meta2.step, 77);
+            let (p, _state) = load_dense(&dir, meta2.param_count).unwrap();
+            assert_eq!(p, params);
+
+            let mut seen = std::collections::HashMap::new();
+            for new_rank in 0..new_world {
+                let rows = load_sparse_shard(&dir, &meta2, new_world, new_rank).unwrap();
+                for r in rows {
+                    assert_eq!(shard_owner(r.id, new_world), new_rank);
+                    assert!(r.t > 0, "optimizer state preserved");
+                    assert!(seen.insert(r.id, r.row).is_none(), "dup id {}", r.id);
+                }
+            }
+            assert_eq!(seen.len(), reference.len(), "world {new_world}");
+            for (id, row) in &reference {
+                assert_eq!(seen.get(id).unwrap(), row, "id {id}");
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn install_rows_restores_table_and_optimizer() {
+        let dim = 3;
+        let dir = tmp("install");
+        let shards = build_world(1, dim, 20);
+        let meta = CheckpointMeta {
+            world: 1,
+            step: 1,
+            model: "tiny".into(),
+            dim,
+            param_count: 1,
+        };
+        let dense_opt = DenseAdam::new(1, AdamParams::default());
+        save(&dir, &meta, 0, Some((&[0.5], &dense_opt)), &shards[0].0, &shards[0].1).unwrap();
+
+        let rows = load_sparse_shard(&dir, &meta, 1, 0).unwrap();
+        let mut table = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(dim).with_capacity(64).with_seed(1234),
+        );
+        let mut opt = SparseAdam::new(dim, AdamParams::default());
+        install_rows(rows, &mut table, &mut opt);
+
+        assert_eq!(table.len(), shards[0].0.len());
+        let mut a = vec![0.0; dim];
+        let mut b = vec![0.0; dim];
+        for (id, _) in shards[0].0.iter_rows() {
+            shards[0].0.lookup(id, &mut a);
+            assert!(table.lookup(id, &mut b));
+            assert_eq!(a, b, "row {id} content restored despite different seed");
+            assert!(opt.row_state(id).is_some());
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_files_error() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(sparse_path(&dir, 0, 1), [1u8; 10]).unwrap();
+        let meta = CheckpointMeta {
+            world: 1,
+            step: 0,
+            model: "x".into(),
+            dim: 4,
+            param_count: 0,
+        };
+        assert!(load_sparse_shard(&dir, &meta, 1, 0).is_err());
+        assert!(load_meta(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,415 @@
+//! In-process communicator: the NCCL substitute for simulated devices.
+//!
+//! A [`CommGroup`] creates one [`CommHandle`] per rank; handles move into
+//! worker threads. Primitives:
+//! - `all_to_all` — per-pair unbounded channels (deterministic source
+//!   order on receive);
+//! - `all_reduce_sum` / `all_reduce_max` — shared-buffer reduction with a
+//!   two-phase epoch protocol (every caller returns only after the group
+//!   fully resets, so back-to-back reductions cannot interleave);
+//! - `barrier`, `broadcast`, `all_gather`.
+//!
+//! Every handle tracks sent-byte counts per primitive so callers can
+//! charge simulated network time via [`crate::collective::NetModel`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Typed payloads exchanged between ranks (a tiny closed set instead of
+/// generic serialization).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    Ids(Vec<u64>),
+    Floats(Vec<f32>),
+    Counts(Vec<u64>),
+    Empty,
+}
+
+impl Message {
+    /// Wire size in bytes (for cost accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Message::Ids(v) => v.len() * 8,
+            Message::Floats(v) => v.len() * 4,
+            Message::Counts(v) => v.len() * 8,
+            Message::Empty => 0,
+        }
+    }
+
+    pub fn into_ids(self) -> Vec<u64> {
+        match self {
+            Message::Ids(v) => v,
+            Message::Empty => Vec::new(),
+            other => panic!("expected Ids, got {other:?}"),
+        }
+    }
+
+    pub fn into_floats(self) -> Vec<f32> {
+        match self {
+            Message::Floats(v) => v,
+            Message::Empty => Vec::new(),
+            other => panic!("expected Floats, got {other:?}"),
+        }
+    }
+
+    pub fn into_counts(self) -> Vec<u64> {
+        match self {
+            Message::Counts(v) => v,
+            Message::Empty => Vec::new(),
+            other => panic!("expected Counts, got {other:?}"),
+        }
+    }
+}
+
+/// Shared reduce/barrier state (epoch protocol).
+struct ReduceState {
+    buf: Vec<f32>,
+    writers: usize,
+    readers: usize,
+    /// Bumped when all writers have contributed.
+    write_gen: u64,
+    /// Bumped when all readers have consumed (full reset).
+    reset_gen: u64,
+}
+
+struct Shared {
+    world: usize,
+    reduce: Mutex<ReduceState>,
+    cv: Condvar,
+}
+
+/// Per-primitive cumulative sent-bytes (this rank).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub all_to_all_bytes: u64,
+    pub all_reduce_bytes: u64,
+    pub all_to_all_ops: u64,
+    pub all_reduce_ops: u64,
+}
+
+/// One rank's endpoint.
+pub struct CommHandle {
+    pub rank: usize,
+    pub world: usize,
+    /// senders[dst] — channel into dst's inbox from this rank.
+    senders: Vec<Sender<Message>>,
+    /// receivers[src] — this rank's inbox from src.
+    receivers: Vec<Receiver<Message>>,
+    shared: Arc<Shared>,
+    pub stats: CommStats,
+}
+
+/// Factory for a communicator group.
+pub struct CommGroup;
+
+impl CommGroup {
+    /// Create `world` connected handles (index = rank).
+    pub fn new(world: usize) -> Vec<CommHandle> {
+        assert!(world >= 1);
+        // txs[src][dst], rxs[dst][src]
+        let mut txs: Vec<Vec<Option<Sender<Message>>>> = (0..world)
+            .map(|_| (0..world).map(|_| None).collect())
+            .collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Message>>>> = (0..world)
+            .map(|_| (0..world).map(|_| None).collect())
+            .collect();
+        for src in 0..world {
+            for dst in 0..world {
+                let (tx, rx) = channel();
+                txs[src][dst] = Some(tx);
+                rxs[dst][src] = Some(rx);
+            }
+        }
+        let shared = Arc::new(Shared {
+            world,
+            reduce: Mutex::new(ReduceState {
+                buf: Vec::new(),
+                writers: 0,
+                readers: 0,
+                write_gen: 0,
+                reset_gen: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        txs.into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (tx_row, rx_row))| CommHandle {
+                rank,
+                world,
+                senders: tx_row.into_iter().map(Option::unwrap).collect(),
+                receivers: rx_row.into_iter().map(Option::unwrap).collect(),
+                shared: Arc::clone(&shared),
+                stats: CommStats::default(),
+            })
+            .collect()
+    }
+}
+
+impl CommHandle {
+    /// All-to-all: send `chunks[dst]` to each rank, receive one message
+    /// from every rank (indexed by source). `chunks.len()` must equal
+    /// `world`; the self-chunk short-circuits through the local channel
+    /// (zero cost is the caller's accounting decision).
+    pub fn all_to_all(&mut self, chunks: Vec<Message>) -> Vec<Message> {
+        assert_eq!(chunks.len(), self.world);
+        let mut sent = 0u64;
+        for (dst, m) in chunks.into_iter().enumerate() {
+            if dst != self.rank {
+                sent += m.bytes() as u64;
+            }
+            self.senders[dst].send(m).expect("peer hung up");
+        }
+        self.stats.all_to_all_bytes += sent;
+        self.stats.all_to_all_ops += 1;
+        (0..self.world)
+            .map(|src| self.receivers[src].recv().expect("peer hung up"))
+            .collect()
+    }
+
+    /// Element-wise sum all-reduce over an f32 buffer (in place).
+    pub fn all_reduce_sum(&mut self, data: &mut [f32]) {
+        self.reduce_with(data, |acc, x| *acc += x);
+        self.stats.all_reduce_bytes += (data.len() * 4) as u64;
+        self.stats.all_reduce_ops += 1;
+    }
+
+    /// Element-wise max all-reduce (used e.g. for sync'ing clocks).
+    pub fn all_reduce_max(&mut self, data: &mut [f32]) {
+        self.reduce_with(data, |acc, x| {
+            if x > *acc {
+                *acc = x
+            }
+        });
+        self.stats.all_reduce_bytes += (data.len() * 4) as u64;
+        self.stats.all_reduce_ops += 1;
+    }
+
+    fn reduce_with(&self, data: &mut [f32], combine: impl Fn(&mut f32, f32)) {
+        let sh = &self.shared;
+        let mut st = sh.reduce.lock().unwrap();
+        // Wait out any previous operation that hasn't fully reset.
+        while st.writers != 0 && st.readers != 0 {
+            st = sh.cv.wait(st).unwrap();
+        }
+        // Contribute.
+        if st.writers == 0 {
+            st.buf.clear();
+            st.buf.extend_from_slice(data);
+        } else {
+            assert_eq!(st.buf.len(), data.len(), "all_reduce length mismatch");
+            for (acc, &x) in st.buf.iter_mut().zip(data.iter()) {
+                combine(acc, x);
+            }
+        }
+        st.writers += 1;
+        if st.writers == sh.world {
+            st.write_gen += 1;
+            sh.cv.notify_all();
+        } else {
+            let gen = st.write_gen;
+            while st.write_gen == gen {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        // Consume.
+        data.copy_from_slice(&st.buf);
+        st.readers += 1;
+        if st.readers == sh.world {
+            st.writers = 0;
+            st.readers = 0;
+            st.reset_gen += 1;
+            sh.cv.notify_all();
+        } else {
+            let gen = st.reset_gen;
+            while st.reset_gen == gen {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Synchronization barrier.
+    pub fn barrier(&mut self) {
+        let mut noop: [f32; 1] = [0.0];
+        self.reduce_with(&mut noop, |_, _| {});
+    }
+
+    /// Broadcast `data` from `root` to all ranks (returns the root's
+    /// message everywhere).
+    pub fn broadcast(&mut self, root: usize, data: Message) -> Message {
+        let chunks: Vec<Message> = (0..self.world)
+            .map(|_dst| {
+                if self.rank == root {
+                    data.clone()
+                } else {
+                    Message::Empty
+                }
+            })
+            .collect();
+        let mut received = self.all_to_all(chunks);
+        received.swap_remove(root)
+    }
+
+    /// All-gather: everyone contributes one message, everyone receives
+    /// the full vector indexed by rank.
+    pub fn all_gather(&mut self, data: Message) -> Vec<Message> {
+        let chunks: Vec<Message> = (0..self.world).map(|_| data.clone()).collect();
+        self.all_to_all(chunks)
+    }
+
+    /// All-gather of one u64 per rank (batch sizes for §5.1 weighted
+    /// gradient averaging: "All-to-all communication to synchronize batch
+    /// sizes across devices").
+    pub fn all_gather_u64(&mut self, value: u64) -> Vec<u64> {
+        self.all_gather(Message::Counts(vec![value]))
+            .into_iter()
+            .map(|m| m.into_counts()[0])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Run `f(rank, handle)` on `world` threads, returning per-rank results.
+    pub fn run_group<T: Send + 'static>(
+        world: usize,
+        f: impl Fn(usize, &mut CommHandle) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let handles = CommGroup::new(world);
+        let f = Arc::new(f);
+        let mut joins = Vec::new();
+        for (rank, mut h) in handles.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            joins.push(thread::spawn(move || f(rank, &mut h)));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_to_all_routes_correctly() {
+        let out = run_group(4, |rank, h| {
+            // Send [rank, dst] to each dst.
+            let chunks = (0..4)
+                .map(|dst| Message::Ids(vec![rank as u64, dst as u64]))
+                .collect();
+            let recv = h.all_to_all(chunks);
+            recv.into_iter().map(|m| m.into_ids()).collect::<Vec<_>>()
+        });
+        for (rank, recv) in out.iter().enumerate() {
+            for (src, msg) in recv.iter().enumerate() {
+                assert_eq!(msg, &vec![src as u64, rank as u64]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sum_and_repeat() {
+        let out = run_group(8, |rank, h| {
+            let mut v = vec![rank as f32, 1.0];
+            h.all_reduce_sum(&mut v);
+            let first = v.clone();
+            // Back-to-back second reduction must not interleave with the
+            // first (epoch protocol).
+            let mut w = vec![1.0f32];
+            h.all_reduce_sum(&mut w);
+            (first, w[0])
+        });
+        for (first, second) in out {
+            assert_eq!(first, vec![28.0, 8.0]); // 0+..+7, 8×1
+            assert_eq!(second, 8.0);
+        }
+    }
+
+    #[test]
+    fn all_reduce_max() {
+        let out = run_group(5, |rank, h| {
+            let mut v = vec![rank as f32 * if rank % 2 == 0 { 1.0 } else { -1.0 }];
+            h.all_reduce_max(&mut v);
+            v[0]
+        });
+        for v in out {
+            assert_eq!(v, 4.0);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let out = run_group(3, |rank, h| {
+            let payload = if rank == 1 {
+                Message::Floats(vec![3.5, 4.5])
+            } else {
+                Message::Empty
+            };
+            h.broadcast(1, payload).into_floats()
+        });
+        for v in out {
+            assert_eq!(v, vec![3.5, 4.5]);
+        }
+    }
+
+    #[test]
+    fn all_gather_u64_batch_sizes() {
+        let out = run_group(4, |rank, h| h.all_gather_u64(100 + rank as u64));
+        for v in out {
+            assert_eq!(v, vec![100, 101, 102, 103]);
+        }
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let out = run_group(2, |_rank, h| {
+            let chunks = vec![
+                Message::Ids(vec![1, 2, 3]),
+                Message::Ids(vec![4]),
+            ];
+            let _ = h.all_to_all(chunks);
+            let mut v = vec![0.0f32; 10];
+            h.all_reduce_sum(&mut v);
+            h.stats
+        });
+        for s in out {
+            // One remote Ids message of len ≤3 → ≤24 bytes (self-chunk free).
+            assert!(s.all_to_all_bytes == 8 || s.all_to_all_bytes == 24);
+            assert_eq!(s.all_reduce_bytes, 40);
+            assert_eq!(s.all_to_all_ops, 1);
+            assert_eq!(s.all_reduce_ops, 1);
+        }
+    }
+
+    #[test]
+    fn barrier_world_of_one() {
+        let out = run_group(1, |_rank, h| {
+            h.barrier();
+            let mut v = vec![5.0f32];
+            h.all_reduce_sum(&mut v);
+            v[0]
+        });
+        assert_eq!(out, vec![5.0]);
+    }
+
+    #[test]
+    fn many_rounds_stress() {
+        let out = run_group(4, |rank, h| {
+            let mut acc = 0.0f32;
+            for round in 0..50 {
+                let chunks = (0..4)
+                    .map(|d| Message::Floats(vec![(rank * 4 + d + round) as f32]))
+                    .collect();
+                let recv = h.all_to_all(chunks);
+                let mut v: Vec<f32> =
+                    vec![recv.iter().map(|m| m.clone().into_floats()[0]).sum()];
+                h.all_reduce_sum(&mut v);
+                acc += v[0];
+                h.barrier();
+            }
+            acc
+        });
+        // Every rank must compute the same total.
+        for w in out.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulated-cluster collectives.
+//!
+//! Each "GPU" is a worker thread; [`comm`] provides the in-process
+//! communicator (all-to-all over per-pair channels, shared-state
+//! all-reduce/barrier/broadcast — the NCCL substitute), and [`netmodel`]
+//! the analytic network cost model (NVLink 600 GB/s intra-node, InfiniBand
+//! 200 GB/s inter-node, per the paper's testbed) used to charge simulated
+//! communication time to every exchange.
+
+pub mod comm;
+pub mod netmodel;
+
+pub use comm::{CommGroup, CommHandle, Message};
+pub use netmodel::NetModel;

@@ -1,0 +1,198 @@
+//! Analytic network cost model for the simulated cluster.
+//!
+//! Parameterized to the paper's testbed (§6.1): 8 × A100 per node,
+//! NVLink 600 GB/s within a node, InfiniBand 200 GB/s across nodes. Every
+//! data exchange in a simulated run is charged `latency + bytes/bandwidth`
+//! on the slowest participating link; collectives take the max over
+//! participants (synchronous training is gated by the slowest device —
+//! the same effect that makes sequence balancing matter).
+
+/// Link bandwidths/latencies for the simulated topology.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    pub gpus_per_node: usize,
+    /// NVLink bandwidth, bytes/s (paper: 600 GB/s).
+    pub intra_bw: f64,
+    /// InfiniBand bandwidth, bytes/s (paper: 200 GB/s).
+    pub inter_bw: f64,
+    /// Per-message latencies, seconds.
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel {
+            gpus_per_node: 8,
+            intra_bw: 600.0e9,
+            inter_bw: 200.0e9,
+            intra_lat: 3.0e-6,
+            inter_lat: 10.0e-6,
+        }
+    }
+}
+
+impl NetModel {
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Point-to-point transfer time between two ranks.
+    pub fn p2p_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        // Zero bytes means "no message": no latency charged.
+        if src == dst || bytes == 0 {
+            return 0.0;
+        }
+        if self.node_of(src) == self.node_of(dst) {
+            self.intra_lat + bytes as f64 / self.intra_bw
+        } else {
+            self.inter_lat + bytes as f64 / self.inter_bw
+        }
+    }
+
+    /// All-to-all time given the full send matrix `bytes[src][dst]`.
+    ///
+    /// Each rank serializes its sends over its NIC/NVLink ports but
+    /// intra- and inter-node traffic use separate fabrics, so the
+    /// per-rank time is `max(intra serialized, inter serialized)`; the
+    /// collective completes when the slowest rank does. Receive-side
+    /// congestion is modeled symmetrically.
+    pub fn all_to_all_time(&self, bytes: &[Vec<usize>]) -> f64 {
+        let world = bytes.len();
+        let mut worst: f64 = 0.0;
+        for r in 0..world {
+            // Send side.
+            let (mut intra_s, mut inter_s) = (0.0, 0.0);
+            // Receive side.
+            let (mut intra_r, mut inter_r) = (0.0, 0.0);
+            for peer in 0..world {
+                if peer == r {
+                    continue;
+                }
+                let t_s = self.p2p_time(r, peer, bytes[r][peer]);
+                let t_r = self.p2p_time(peer, r, bytes[peer][r]);
+                if self.node_of(peer) == self.node_of(r) {
+                    intra_s += t_s;
+                    intra_r += t_r;
+                } else {
+                    inter_s += t_s;
+                    inter_r += t_r;
+                }
+            }
+            worst = worst
+                .max(intra_s.max(inter_s))
+                .max(intra_r.max(inter_r));
+        }
+        worst
+    }
+
+    /// Uniform all-to-all: every rank sends `bytes_per_pair` to every
+    /// other rank.
+    pub fn all_to_all_uniform_time(&self, world: usize, bytes_per_pair: usize) -> f64 {
+        let matrix: Vec<Vec<usize>> = (0..world)
+            .map(|r| {
+                (0..world)
+                    .map(|d| if d == r { 0 } else { bytes_per_pair })
+                    .collect()
+            })
+            .collect();
+        self.all_to_all_time(&matrix)
+    }
+
+    /// Ring all-reduce time for `bytes` per rank across `world` ranks:
+    /// `2·(n−1)/n · bytes / bottleneck_bw + 2·(n−1)·latency`.
+    pub fn all_reduce_time(&self, world: usize, bytes: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let n = world as f64;
+        let multi_node = world > self.gpus_per_node;
+        let (bw, lat) = if multi_node {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        };
+        2.0 * (n - 1.0) / n * bytes as f64 / bw + 2.0 * (n - 1.0) * lat
+    }
+
+    /// Broadcast (tree) time.
+    pub fn broadcast_time(&self, world: usize, bytes: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let hops = (world as f64).log2().ceil();
+        let multi_node = world > self.gpus_per_node;
+        let (bw, lat) = if multi_node {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        };
+        hops * (lat + bytes as f64 / bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_intra_vs_inter() {
+        let m = NetModel::default();
+        let bytes = 600_000_000; // 0.6 GB
+        let intra = m.p2p_time(0, 1, bytes);
+        let inter = m.p2p_time(0, 8, bytes); // ranks 0 and 8 are on different nodes
+        assert!(intra < inter, "NVLink must beat IB");
+        assert!((intra - (3e-6 + 0.001)).abs() < 1e-6);
+        assert!((inter - (10e-6 + 0.003)).abs() < 1e-6);
+        assert_eq!(m.p2p_time(3, 3, bytes), 0.0);
+    }
+
+    #[test]
+    fn all_to_all_single_node_scales_with_bytes() {
+        let m = NetModel::default();
+        // Bandwidth-dominated sizes so the ratio approaches 2.
+        let t1 = m.all_to_all_uniform_time(8, 100_000_000);
+        let t2 = m.all_to_all_uniform_time(8, 200_000_000);
+        assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+    }
+
+    #[test]
+    fn all_to_all_multi_node_slower_than_single() {
+        let m = NetModel::default();
+        // Same aggregate bytes per rank, spread over 16 ranks on 2 nodes
+        // vs 8 ranks on 1 node.
+        let single = m.all_to_all_uniform_time(8, 1_000_000);
+        let multi = m.all_to_all_uniform_time(16, 1_000_000);
+        assert!(multi > single, "IB hop must dominate");
+    }
+
+    #[test]
+    fn all_to_all_skewed_matrix_gated_by_hotspot() {
+        let m = NetModel::default();
+        let world = 4;
+        let mut bytes = vec![vec![0usize; world]; world];
+        bytes[2][0] = 50_000_000; // one hot sender
+        let t = m.all_to_all_time(&bytes);
+        assert!((t - m.p2p_time(2, 0, 50_000_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_reduce_time_properties() {
+        let m = NetModel::default();
+        assert_eq!(m.all_reduce_time(1, 1_000_000), 0.0);
+        let t8 = m.all_reduce_time(8, 100_000_000);
+        let t128 = m.all_reduce_time(128, 100_000_000);
+        // Multi-node all-reduce is bottlenecked by IB.
+        assert!(t128 > t8);
+        // Bandwidth term: 2·(7/8)·0.1GB / 600GB/s ≈ 0.29 ms (+latency).
+        assert!(t8 > 0.00029 && t8 < 0.00035, "t8={t8}");
+    }
+
+    #[test]
+    fn broadcast_log_hops() {
+        let m = NetModel::default();
+        let t2 = m.broadcast_time(2, 1_000_000);
+        let t8 = m.broadcast_time(8, 1_000_000);
+        assert!((t8 / t2 - 3.0).abs() < 1e-9, "log2(8)/log2(2) = 3");
+    }
+}

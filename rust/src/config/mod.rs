@@ -1,0 +1,210 @@
+//! Configuration: model presets (Table 1), cluster topology, training
+//! hyperparameters, and the feature schema defaults.
+
+mod presets;
+
+// `presets` only adds inherent impls on ModelConfig (no re-exportable items).
+
+use crate::embedding::dedup::DedupStrategy;
+
+/// GRM dense-model hyperparameters (Table 1 shape).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Embedding dimension `d` fed to the HSTU stack.
+    pub emb_dim: usize,
+    /// Number of HSTU blocks.
+    pub hstu_blocks: usize,
+    /// Attention heads per block.
+    pub hstu_heads: usize,
+    /// MMoE experts and top-k routing.
+    pub experts: usize,
+    pub expert_top_k: usize,
+    /// Hidden width of each expert MLP.
+    pub expert_hidden: usize,
+    /// Prediction tasks (CTR, CTCVR).
+    pub num_tasks: usize,
+    /// Embedding-dimension multiplier for the sparse side (the paper's
+    /// 1D/8D/64D factors; scales the merged-table dims, not `emb_dim`).
+    pub dim_factor: usize,
+}
+
+impl ModelConfig {
+    /// Dense parameter count of the HSTU+MMoE stack (matches the L2 JAX
+    /// model in `python/compile/model.py`; verified in tests against the
+    /// AOT manifest).
+    pub fn dense_params(&self) -> usize {
+        let d = self.emb_dim;
+        // Per HSTU block: input MLP d→4d (w+b), output MLP d→d (w+b),
+        // two layernorm scales/biases (2·2d).
+        let per_block = d * 4 * d + 4 * d + d * d + d + 4 * d;
+        // MMoE: gate per task (d→experts), experts d→h→d, task heads h…
+        let expert = self.experts * (d * self.expert_hidden + self.expert_hidden
+            + self.expert_hidden * d + d);
+        let gates = self.num_tasks * (d * self.experts + self.experts);
+        let heads = self.num_tasks * (d + 1);
+        self.hstu_blocks * per_block + expert + gates + heads
+    }
+
+    /// Forward FLOPs for one sequence of `len` tokens (the basis of the
+    /// paper's 4G/110G naming). Attention is quadratic in `len`; MLPs are
+    /// linear.
+    pub fn forward_flops(&self, len: usize) -> f64 {
+        let d = self.emb_dim as f64;
+        let l = len as f64;
+        let per_block =
+            // input MLP d→4d + output MLP d→d per token
+            2.0 * l * (4.0 * d * d + d * d)
+            // QK^T and PV: 2 · l² · d each
+            + 2.0 * 2.0 * l * l * d;
+        let mmoe = 2.0 * l * (self.experts as f64)
+            * (d * self.expert_hidden as f64 * 2.0);
+        self.hstu_blocks as f64 * per_block + mmoe
+    }
+}
+
+/// Cluster topology for real or simulated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub world: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(world: usize) -> Self {
+        ClusterConfig {
+            world,
+            gpus_per_node: 8.min(world.max(1)),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.world.div_ceil(self.gpus_per_node)
+    }
+}
+
+/// Training hyperparameters and feature toggles (the ablation axes).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub seed: u64,
+    /// Target token count N for dynamic sequence balancing (Alg. 1):
+    /// average sequence length × batch size.
+    pub target_tokens: usize,
+    /// Fixed per-device batch size when balancing is disabled.
+    pub fixed_batch: usize,
+    /// Adam hyperparameters (dense and sparse).
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Gradient accumulation steps (§5.2).
+    pub grad_accum: usize,
+    // ---- MTGRBoost feature toggles (Fig. 13 ablation axes) -----------
+    pub sequence_balancing: bool,
+    pub dedup: DedupStrategy,
+    pub table_merging: bool,
+    pub mixed_precision: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            seed: 2026,
+            target_tokens: 8192,
+            fixed_batch: 16,
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            grad_accum: 1,
+            sequence_balancing: true,
+            dedup: DedupStrategy::TwoStage,
+            table_merging: true,
+            mixed_precision: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The "TorchRec baseline" configuration: every MTGRBoost feature off.
+    pub fn torchrec_baseline() -> Self {
+        TrainConfig {
+            sequence_balancing: false,
+            dedup: DedupStrategy::None,
+            table_merging: false,
+            mixed_precision: false,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_flops_match_names() {
+        // Table 1: Small = 4 GFLOPs, Large = 110 GFLOPs per forward at
+        // the average sequence length (600 tokens).
+        let small = ModelConfig::grm_4g();
+        let large = ModelConfig::grm_110g();
+        let f_small = small.forward_flops(600) / 1e9;
+        let f_large = large.forward_flops(600) / 1e9;
+        // Our estimator counts all matmul FLOPs incl. attention at the
+        // mean length; the paper's 4G/110G labels use their own counting
+        // convention, so assert order-of-magnitude agreement and, more
+        // importantly, the ~27× ratio between the two presets.
+        assert!(
+            (2.0..15.0).contains(&f_small),
+            "small ≈ 4 GFLOPs (order), got {f_small:.1}"
+        );
+        assert!(
+            (60.0..300.0).contains(&f_large),
+            "large ≈ 110 GFLOPs (order), got {f_large:.1}"
+        );
+        let ratio = f_large / f_small;
+        assert!(
+            (10.0..40.0).contains(&ratio),
+            "paper: 27.5x complexity ratio, got {ratio:.1}"
+        );
+        assert_eq!(small.emb_dim, 512);
+        assert_eq!(small.hstu_blocks, 3);
+        assert_eq!(small.hstu_heads, 2);
+        assert_eq!(large.emb_dim, 1024);
+        assert_eq!(large.hstu_blocks, 22);
+        assert_eq!(large.hstu_heads, 4);
+    }
+
+    #[test]
+    fn flops_quadratic_in_length() {
+        let m = ModelConfig::grm_4g();
+        let f1 = m.forward_flops(1000);
+        let f2 = m.forward_flops(2000);
+        // Attention-dominated at long lengths: ratio between 2 and 4.
+        assert!(f2 / f1 > 2.0 && f2 / f1 < 4.0);
+    }
+
+    #[test]
+    fn tiny_preset_is_small_enough_for_cpu() {
+        let t = ModelConfig::tiny();
+        assert!(t.dense_params() < 200_000);
+        let s = ModelConfig::small();
+        assert!(s.dense_params() > 300_000 && s.dense_params() < 20_000_000);
+    }
+
+    #[test]
+    fn cluster_nodes() {
+        assert_eq!(ClusterConfig::new(8).nodes(), 1);
+        assert_eq!(ClusterConfig::new(64).nodes(), 8);
+        assert_eq!(ClusterConfig::new(128).nodes(), 16);
+        assert_eq!(ClusterConfig::new(4).gpus_per_node, 4);
+    }
+
+    #[test]
+    fn baseline_config_disables_everything() {
+        let b = TrainConfig::torchrec_baseline();
+        assert!(!b.sequence_balancing);
+        assert!(!b.table_merging);
+        assert_eq!(b.dedup, DedupStrategy::None);
+    }
+}

@@ -1,0 +1,89 @@
+//! Model presets.
+//!
+//! `grm_4g` / `grm_110g` are Table 1 verbatim (used by the analytic
+//! scale simulator). `tiny` / `small` are proportionally scaled-down
+//! configs for real CPU execution (tests and the e2e example) — same
+//! architecture, smaller dims, documented in EXPERIMENTS.md.
+
+use super::ModelConfig;
+
+impl ModelConfig {
+    /// Table 1 "Small": 4 GFLOPs/forward, d=512, 3 blocks, 2 heads.
+    pub fn grm_4g() -> ModelConfig {
+        ModelConfig {
+            name: "grm-4g".into(),
+            emb_dim: 512,
+            hstu_blocks: 3,
+            hstu_heads: 2,
+            experts: 4,
+            expert_top_k: 2,
+            expert_hidden: 512,
+            num_tasks: 2,
+            dim_factor: 1,
+        }
+    }
+
+    /// Table 1 "Large": 110 GFLOPs/forward, d=1024, 22 blocks, 4 heads.
+    pub fn grm_110g() -> ModelConfig {
+        ModelConfig {
+            name: "grm-110g".into(),
+            emb_dim: 1024,
+            hstu_blocks: 22,
+            hstu_heads: 4,
+            experts: 8,
+            expert_top_k: 2,
+            expert_hidden: 1024,
+            num_tasks: 2,
+            dim_factor: 1,
+        }
+    }
+
+    /// CPU-scale config for unit/integration tests (< 0.2 M dense params).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "grm-tiny".into(),
+            emb_dim: 32,
+            hstu_blocks: 2,
+            hstu_heads: 2,
+            experts: 2,
+            expert_top_k: 1,
+            expert_hidden: 32,
+            num_tasks: 2,
+            dim_factor: 1,
+        }
+    }
+
+    /// CPU-scale config for the e2e example (~1–10 M dense params; total
+    /// model crosses 100 M parameters through the sparse tables, which is
+    /// where recommendation models hold their capacity).
+    pub fn small() -> ModelConfig {
+        ModelConfig {
+            name: "grm-small".into(),
+            emb_dim: 128,
+            hstu_blocks: 4,
+            hstu_heads: 2,
+            experts: 4,
+            expert_top_k: 2,
+            expert_hidden: 128,
+            num_tasks: 2,
+            dim_factor: 1,
+        }
+    }
+
+    pub fn with_dim_factor(mut self, f: usize) -> ModelConfig {
+        self.dim_factor = f;
+        self.name = format!("{}-{}d", self.name, f);
+        self
+    }
+
+    /// Resolve a preset by name (CLI).
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(ModelConfig::tiny()),
+            "small" => Some(ModelConfig::small()),
+            "4g" | "grm-4g" => Some(ModelConfig::grm_4g()),
+            "110g" | "grm-110g" => Some(ModelConfig::grm_110g()),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Synthetic Meituan-like workload generator.
+//!
+//! Substitutes for the paper's 90 days × 400 M sequences of production
+//! logs (DESIGN.md substitution #2). The generator is seeded and
+//! reproduces the *distributional* properties the evaluated techniques
+//! are sensitive to:
+//!
+//! - **Sequence lengths**: lognormal long tail with mean ≈ 600 and hard
+//!   cap 3 000 (§6.1), the source of GPU load imbalance (Fig. 9/15);
+//! - **Item popularity**: Zipf-skewed, driving the intra-batch duplicate
+//!   ratio that two-stage dedup exploits (Fig. 16);
+//! - **New-ID arrival**: a configurable fraction of each day's users and
+//!   items are brand new (merchants updating menus, new users), the case
+//!   static tables fail on and dynamic tables handle (§4.1, Table 3);
+//! - **Planted labels**: CTR/CTCVR are Bernoulli draws from a hidden
+//!   per-user/per-category logit model so the GAUC learning curve of a
+//!   trained model is meaningful (Fig. 11).
+
+use super::schema::{Schema, Sequence};
+use crate::embedding::hash::hash_id;
+use crate::util::rng::{Xoshiro256, Zipf};
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    /// Base populations (day 0).
+    pub num_users: u64,
+    pub num_items: u64,
+    pub num_cates: u64,
+    pub num_cities: u64,
+    /// Lognormal length distribution (underlying mu/sigma) + clamp.
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Zipf exponents for user activity and item popularity.
+    pub item_zipf: f64,
+    /// Fraction of sequences whose user is new *per day index*.
+    pub new_user_rate: f64,
+    pub new_item_rate: f64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            seed: 2026,
+            num_users: 100_000,
+            num_items: 50_000,
+            num_cates: 200,
+            num_cities: 100,
+            // exp(6.2 + 0.72²/2) ≈ 635 mean, long tail, capped at 3000.
+            len_mu: 6.2,
+            len_sigma: 0.72,
+            min_len: 8,
+            max_len: 3000,
+            item_zipf: 1.05,
+            new_user_rate: 0.02,
+            new_item_rate: 0.01,
+        }
+    }
+}
+
+/// Hidden planted model: logits are deterministic functions of
+/// (user, cate) via hashing, so labels are learnable but not trivially
+/// linear in the raw IDs. Three components:
+/// - a per-user bias (invisible to GAUC, which ranks within users);
+/// - a *global* per-category attractiveness, learnable directly from
+///   category embeddings and visible to GAUC (a user's samples differ
+///   in category mix);
+/// - a smaller user×category interaction term.
+fn planted_logit(user: u64, cates: &[u64], seed: u64) -> (f64, f64) {
+    let unit = |h: u64| (h % 1000) as f64 / 1000.0 * 2.0 - 1.0;
+    let u_bias = unit(hash_id(user, seed ^ 0xA11CE));
+    let mut c_glob = 0.0;
+    let mut c_pers = 0.0;
+    for &c in cates {
+        c_glob += unit(hash_id(c, seed ^ 0xC0C0A));
+        c_pers += unit(hash_id(c ^ user.rotate_left(17), seed ^ 0xBEE));
+    }
+    if !cates.is_empty() {
+        c_glob /= cates.len() as f64;
+        c_pers /= cates.len() as f64;
+    }
+    let ctr_logit = -1.0 + 1.2 * u_bias + 2.5 * c_glob + 1.0 * c_pers;
+    // CTCVR is a harder event correlated with CTR.
+    let ctcvr_logit = -2.5 + 1.0 * u_bias + 2.0 * c_glob + 0.8 * c_pers;
+    (ctr_logit, ctcvr_logit)
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The workload generator; an infinite, seeded stream of [`Sequence`]s.
+pub struct WorkloadGenerator {
+    pub cfg: GeneratorConfig,
+    rng: Xoshiro256,
+    item_zipf: Zipf,
+    user_zipf: Zipf,
+    /// "Day" index; advancing it introduces new users/items (dynamic IDs).
+    day: u64,
+    generated: u64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(cfg: GeneratorConfig) -> Self {
+        // Cap the inverse-CDF table sizes: popularity ranks beyond ~100k
+        // contribute negligibly and the table is O(n).
+        let item_ranks = cfg.num_items.min(200_000) as usize;
+        let user_ranks = cfg.num_users.min(200_000) as usize;
+        WorkloadGenerator {
+            rng: Xoshiro256::new(cfg.seed),
+            item_zipf: Zipf::new(item_ranks, cfg.item_zipf),
+            user_zipf: Zipf::new(user_ranks, 0.8),
+            day: 0,
+            generated: 0,
+            cfg,
+        }
+    }
+
+    /// Advance to the next "day": a fresh slice of user/item ID space
+    /// opens up (the streaming new-ID arrival of production).
+    pub fn advance_day(&mut self) {
+        self.day += 1;
+    }
+
+    pub fn day(&self) -> u64 {
+        self.day
+    }
+
+    /// Sample one sequence length from the clamped lognormal.
+    fn sample_len(&mut self) -> usize {
+        let l = self.rng.lognormal(self.cfg.len_mu, self.cfg.len_sigma) as usize;
+        l.clamp(self.cfg.min_len, self.cfg.max_len)
+    }
+
+    /// Draw a user id; with probability `new_user_rate` it comes from the
+    /// day's fresh range (ids ≥ num_users · (1 + day-fraction)).
+    fn sample_user(&mut self) -> u64 {
+        if self.day > 0 && self.rng.bernoulli(self.cfg.new_user_rate) {
+            // New-user id space for this day.
+            self.cfg.num_users + (self.day - 1) * self.cfg.num_users / 50
+                + self.rng.gen_range(self.cfg.num_users / 50)
+        } else {
+            // Zipf rank → id (rank 0 = most active user).
+            self.user_zipf.sample(&mut self.rng) as u64
+        }
+    }
+
+    fn sample_item(&mut self) -> u64 {
+        if self.day > 0 && self.rng.bernoulli(self.cfg.new_item_rate) {
+            self.cfg.num_items + (self.day - 1) * self.cfg.num_items / 100
+                + self.rng.gen_range(self.cfg.num_items / 100)
+        } else {
+            self.item_zipf.sample(&mut self.rng) as u64
+        }
+    }
+
+    /// Generate one sequence under `schema`.
+    pub fn next_sequence(&mut self, schema: &Schema) -> Sequence {
+        self.generated += 1;
+        let user = self.sample_user();
+        let len = self.sample_len();
+        let city = hash_id(user, 0xC17) % self.cfg.num_cities;
+        let segment = hash_id(user, 0x5E6) % 16;
+        assert_eq!(schema.num_context_features(), 3, "schema mismatch");
+        let context = vec![user, city, segment];
+
+        let mut tokens = Vec::with_capacity(len);
+        let mut cates = Vec::with_capacity(len);
+        for t in 0..len {
+            let item = self.sample_item();
+            let cate = hash_id(item, 0xCA7E) % self.cfg.num_cates;
+            cates.push(cate);
+            let action = self.rng.gen_range(4); // click/order/fav/view
+            let hour = (hash_id(user, 0x40) + t as u64 / 8) % 24;
+            assert_eq!(schema.num_token_features(), 4, "schema mismatch");
+            tokens.push(vec![item, cate, action, hour]);
+        }
+
+        let (lc, lv) = planted_logit(user, &cates, self.cfg.seed);
+        let ctr = self.rng.bernoulli(sigmoid(lc)) as u64 as f32;
+        // CTCVR can only fire if CTR fired (conversion after click).
+        let ctcvr = if ctr > 0.0 {
+            self.rng.bernoulli(sigmoid(lv)) as u64 as f32
+        } else {
+            0.0
+        };
+        Sequence {
+            user_id: user,
+            context,
+            tokens,
+            labels: [ctr, ctcvr],
+        }
+    }
+
+    /// Generate a batch of sequences.
+    pub fn batch(&mut self, schema: &Schema, n: usize) -> Vec<Sequence> {
+        (0..n).map(|_| self.next_sequence(schema)).collect()
+    }
+
+    pub fn generated(&self) -> u64 {
+        self.generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn schema() -> Schema {
+        Schema::meituan_like(8, 1)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = schema();
+        let mut g1 = WorkloadGenerator::new(GeneratorConfig::default());
+        let mut g2 = WorkloadGenerator::new(GeneratorConfig::default());
+        for _ in 0..20 {
+            assert_eq!(g1.next_sequence(&s), g2.next_sequence(&s));
+        }
+    }
+
+    #[test]
+    fn length_distribution_matches_paper() {
+        let s = schema();
+        let mut g = WorkloadGenerator::new(GeneratorConfig::default());
+        let lens: Vec<f64> = (0..5000)
+            .map(|_| g.next_sequence(&s).len() as f64)
+            .collect();
+        let sum = Summary::of(&lens);
+        assert!(
+            (450.0..800.0).contains(&sum.mean),
+            "mean length ≈ 600, got {:.0}",
+            sum.mean
+        );
+        assert!(sum.max <= 3000.0);
+        assert!(sum.max > 2000.0, "long tail reaches the cap");
+        assert!(sum.p50 < sum.mean, "right-skewed");
+    }
+
+    #[test]
+    fn item_ids_are_zipf_skewed() {
+        let s = schema();
+        let mut g = WorkloadGenerator::new(GeneratorConfig::default());
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50 {
+            let seq = g.next_sequence(&s);
+            for t in &seq.tokens {
+                *counts.entry(t[0]).or_insert(0usize) += 1;
+            }
+        }
+        let total: usize = counts.values().sum();
+        let max = *counts.values().max().unwrap();
+        // Head item should take a disproportionate share.
+        assert!(
+            max as f64 / total as f64 > 0.01,
+            "zipf head share too small"
+        );
+    }
+
+    #[test]
+    fn new_ids_appear_on_later_days() {
+        let s = schema();
+        let cfg = GeneratorConfig {
+            new_user_rate: 0.5,
+            new_item_rate: 0.5,
+            ..Default::default()
+        };
+        let base_users = cfg.num_users;
+        let mut g = WorkloadGenerator::new(cfg);
+        // Day 0: no new ids.
+        for _ in 0..100 {
+            assert!(g.next_sequence(&s).user_id < base_users);
+        }
+        g.advance_day();
+        let mut saw_new = false;
+        for _ in 0..100 {
+            if g.next_sequence(&s).user_id >= base_users {
+                saw_new = true;
+            }
+        }
+        assert!(saw_new, "day 1 must mint new user ids");
+    }
+
+    #[test]
+    fn labels_correlate_with_planted_model() {
+        // The empirical CTR among users with high planted logits must
+        // exceed that among low-logit users → the signal is learnable.
+        let s = schema();
+        let mut g = WorkloadGenerator::new(GeneratorConfig::default());
+        let (mut hi, mut hi_n, mut lo, mut lo_n) = (0.0, 0, 0.0, 0);
+        for _ in 0..3000 {
+            let seq = g.next_sequence(&s);
+            let cates: Vec<u64> = seq.tokens.iter().map(|t| t[1]).collect();
+            let (logit, _) = planted_logit(seq.user_id, &cates, 2026);
+            if logit > 0.0 {
+                hi += seq.labels[0] as f64;
+                hi_n += 1;
+            } else {
+                lo += seq.labels[0] as f64;
+                lo_n += 1;
+            }
+        }
+        let hi_rate = hi / hi_n.max(1) as f64;
+        let lo_rate = lo / lo_n.max(1) as f64;
+        assert!(
+            hi_rate > lo_rate + 0.2,
+            "planted signal too weak: {hi_rate:.2} vs {lo_rate:.2}"
+        );
+    }
+
+    #[test]
+    fn ctcvr_implies_ctr() {
+        let s = schema();
+        let mut g = WorkloadGenerator::new(GeneratorConfig::default());
+        for _ in 0..2000 {
+            let seq = g.next_sequence(&s);
+            if seq.labels[1] > 0.0 {
+                assert_eq!(seq.labels[0], 1.0, "conversion without click");
+            }
+        }
+    }
+}

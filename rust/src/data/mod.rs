@@ -1,0 +1,23 @@
+//! Data substrate — the Hive/HDFS + production-log substitute.
+//!
+//! - [`schema`] — the feature schema: contextual (user), historical and
+//!   exposure token features (§2's T = [T_con, T_hst, T_exp]).
+//! - [`generator`] — seeded synthetic Meituan-like workload reproducing
+//!   the statistics the paper's techniques are sensitive to: long-tail
+//!   lognormal sequence lengths (mean ≈ 600, max 3 000), Zipf-skewed item
+//!   popularity (the dedup win), streaming new-ID arrival (the dynamic
+//!   table win) and planted-logit labels (so GAUC learning curves are
+//!   meaningful).
+//! - [`shards`] — a columnar binary shard format with a column directory
+//!   (the partitioned-Hive-table substitute) plus writer/reader.
+//! - [`prefetch`] — bounded-channel pipeline used to overlap batch
+//!   loading with compute (§3's copy/dispatch/compute streams).
+
+pub mod generator;
+pub mod prefetch;
+pub mod schema;
+pub mod shards;
+
+pub use generator::{GeneratorConfig, WorkloadGenerator};
+pub use schema::{Schema, Sequence};
+pub use shards::{ShardReader, ShardWriter};

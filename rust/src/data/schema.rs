@@ -1,0 +1,139 @@
+//! Feature schema and the in-memory sequence sample.
+//!
+//! A GRM input sequence (§2) is `T = [T_con, T_hst, T_exp]`: contextual
+//! (user) features, historical action tokens, and real-time exposure
+//! tokens. Each token carries several categorical features (item, cate,
+//! action type, ...); the schema names them and maps them onto the
+//! [`crate::embedding::merge::FeatureConfig`] declarations that drive
+//! automatic table merging.
+
+use crate::embedding::merge::FeatureConfig;
+use crate::embedding::FeatureId;
+
+/// Declarative schema: context features (one value per sequence) and
+/// token features (one value per token).
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub context_features: Vec<FeatureConfig>,
+    pub token_features: Vec<FeatureConfig>,
+}
+
+impl Schema {
+    /// The default Meituan-like schema. `dim_factor` scales every
+    /// embedding dim (the paper's 1D/8D/64D axis). All token features
+    /// share the model embedding dim so pooled token embeddings sum to
+    /// one vector per token.
+    pub fn meituan_like(emb_dim: usize, dim_factor: usize) -> Schema {
+        let d = emb_dim * dim_factor;
+        Schema {
+            context_features: vec![
+                FeatureConfig::new("user_id", d),
+                FeatureConfig::new("user_city", d),
+                FeatureConfig::new("user_segment", d),
+            ],
+            token_features: vec![
+                FeatureConfig::new("item_id", d),
+                FeatureConfig::new("cate_id", d),
+                FeatureConfig::new("action_type", d),
+                FeatureConfig::new("hour_of_day", d),
+            ],
+        }
+    }
+
+    /// All features, context first (the order used by merged lookups).
+    pub fn all_features(&self) -> Vec<FeatureConfig> {
+        let mut v = self.context_features.clone();
+        v.extend(self.token_features.clone());
+        v
+    }
+
+    pub fn num_token_features(&self) -> usize {
+        self.token_features.len()
+    }
+
+    pub fn num_context_features(&self) -> usize {
+        self.context_features.len()
+    }
+}
+
+/// One user sequence sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sequence {
+    pub user_id: u64,
+    /// Context feature values, aligned with `schema.context_features`.
+    pub context: Vec<FeatureId>,
+    /// Token-major feature values: `tokens[t]` aligned with
+    /// `schema.token_features`.
+    pub tokens: Vec<Vec<FeatureId>>,
+    /// Per-sequence labels: [ctr, ctcvr] ∈ {0,1}.
+    pub labels: [f32; 2],
+}
+
+impl Sequence {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// All feature ids of this sequence in (feature, occurrence) order:
+    /// context first, then token features column-major per token.
+    /// Returns (feature_name_index_into_all_features, id) pairs.
+    pub fn flat_ids(&self, schema: &Schema) -> Vec<(usize, FeatureId)> {
+        let mut out = Vec::with_capacity(
+            self.context.len() + self.tokens.len() * schema.num_token_features(),
+        );
+        for (f, &id) in self.context.iter().enumerate() {
+            out.push((f, id));
+        }
+        let base = schema.num_context_features();
+        for tok in &self.tokens {
+            for (f, &id) in tok.iter().enumerate() {
+                out.push((base + f, id));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_schema_shape() {
+        let s = Schema::meituan_like(16, 1);
+        assert_eq!(s.num_context_features(), 3);
+        assert_eq!(s.num_token_features(), 4);
+        assert_eq!(s.all_features().len(), 7);
+        for f in s.all_features() {
+            assert_eq!(f.dim, 16);
+        }
+    }
+
+    #[test]
+    fn dim_factor_scales_dims() {
+        let s = Schema::meituan_like(16, 8);
+        for f in s.all_features() {
+            assert_eq!(f.dim, 128);
+        }
+    }
+
+    #[test]
+    fn flat_ids_layout() {
+        let schema = Schema::meituan_like(8, 1);
+        let seq = Sequence {
+            user_id: 1,
+            context: vec![10, 20, 30],
+            tokens: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
+            labels: [1.0, 0.0],
+        };
+        let flat = seq.flat_ids(&schema);
+        assert_eq!(flat.len(), 3 + 2 * 4);
+        assert_eq!(flat[0], (0, 10));
+        assert_eq!(flat[3], (3, 1)); // first token feature
+        assert_eq!(flat[10], (6, 8)); // last token, last feature
+    }
+}

@@ -1,0 +1,928 @@
+//! Dynamic hash embedding table (§4.1) — the paper's replacement for
+//! TorchRec's fixed-capacity static tables.
+//!
+//! Design points reproduced from the paper:
+//!
+//! - **Decoupled storage** (Fig. 6a): a compact *key structure* (key +
+//!   pointer slots, open addressing) separate from the *embedding
+//!   structure* (chunked value storage with per-row eviction metadata —
+//!   access counters and timestamps for LRU/LFU).
+//! - **Chunk-based allocation**: embedding rows are bulk-allocated in
+//!   fixed-size chunks, reducing fragmentation and enabling single-op
+//!   retirement; a *current* and a pre-allocated *next* chunk are
+//!   maintained at all times (Fig. 6c) so new rows never wait on
+//!   allocation.
+//! - **MurmurHash3** (§4.1) maps IDs to slots.
+//! - **Grouped parallel probing** (Eq. 5):
+//!   `S = ((k % (M/threads − 1) + 1) | 1) * threads`, with thread group
+//!   `g` probing `h_t = h0 + g + t·S (mod M)`. For `threads = 1` this is
+//!   classic odd-step probing, and Theorem 1 (odd S ⟺ full coverage of a
+//!   power-of-two table) holds — tested below as a property.
+//! - **Capacity expansion** (Fig. 6c): when the load factor exceeds 0.75
+//!   the key structure doubles (power-of-two progression) and *only keys
+//!   and pointers migrate*; embedding chunks are never moved. The
+//!   savings vs. moving values are tracked in [`TableStats`].
+
+use crate::embedding::hash::hash_id;
+use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::rng::Xoshiro256;
+
+/// Sentinel: slot never used.
+const EMPTY: u64 = u64::MAX;
+/// Sentinel: slot deleted (probe chains must continue through it).
+const TOMBSTONE: u64 = u64::MAX - 1;
+
+/// Eviction policy for cold rows (§4.1: "auxiliary metadata (e.g.
+/// counters and timestamps) required for eviction policies like Least
+/// Recently Used and Least Frequently Used").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict the least-recently-accessed row.
+    Lru,
+    /// Evict the least-frequently-accessed row.
+    Lfu,
+}
+
+/// Configuration for a [`DynamicEmbeddingTable`].
+#[derive(Clone, Debug)]
+pub struct DynamicTableConfig {
+    /// Embedding dimensionality.
+    pub dim: usize,
+    /// Initial key-structure capacity (rounded up to a power of two).
+    pub initial_capacity: usize,
+    /// Load factor that triggers key-structure expansion (paper: 0.75).
+    pub max_load_factor: f64,
+    /// Rows per embedding chunk (bulk allocation unit).
+    pub chunk_rows: usize,
+    /// `threads` in Eq. 5 — the number of probing thread groups.
+    pub probe_groups: u64,
+    /// Hash seed.
+    pub seed: u64,
+    /// Optional row budget; inserts beyond it trigger eviction.
+    pub max_rows: Option<usize>,
+    pub eviction: EvictionPolicy,
+    /// Std-dev scale for row init: N(0, init_scale/sqrt(dim)).
+    pub init_scale: f32,
+}
+
+impl DynamicTableConfig {
+    pub fn new(dim: usize) -> Self {
+        DynamicTableConfig {
+            dim,
+            initial_capacity: 1024,
+            max_load_factor: 0.75,
+            chunk_rows: 4096,
+            probe_groups: 4,
+            seed: 0x5EED,
+            max_rows: None,
+            eviction: EvictionPolicy::Lru,
+            init_scale: 1.0,
+        }
+    }
+
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.initial_capacity = cap;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_max_rows(mut self, rows: usize) -> Self {
+        self.max_rows = Some(rows);
+        self
+    }
+
+    pub fn with_eviction(mut self, policy: EvictionPolicy) -> Self {
+        self.eviction = policy;
+        self
+    }
+
+    pub fn with_probe_groups(mut self, g: u64) -> Self {
+        self.probe_groups = g;
+        self
+    }
+
+    pub fn with_chunk_rows(mut self, rows: usize) -> Self {
+        self.chunk_rows = rows;
+        self
+    }
+}
+
+/// Key-structure slot: key + pointer into the embedding structure.
+/// (Fig. 6b: pointers are recovered as `st_add + index*row_offset +
+/// pointer_offset`; in safe Rust the same arithmetic is an index pair.)
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    key: u64,
+    /// Packed row pointer: high 24 bits chunk index, low 40 bits row.
+    ptr: u64,
+}
+
+#[inline]
+fn pack_ptr(chunk: usize, row: usize) -> u64 {
+    ((chunk as u64) << 40) | row as u64
+}
+
+#[inline]
+fn unpack_ptr(ptr: u64) -> (usize, usize) {
+    ((ptr >> 40) as usize, (ptr & ((1u64 << 40) - 1)) as usize)
+}
+
+/// Per-row metadata in the embedding structure (counter + timestamp, the
+/// eviction inputs the paper stores alongside values).
+#[derive(Clone, Copy, Debug, Default)]
+struct RowMeta {
+    key: u64,
+    access_count: u32,
+    last_access: u64,
+    live: bool,
+}
+
+/// A bulk-allocated chunk of embedding rows.
+struct Chunk {
+    values: Vec<f32>,
+    meta: Vec<RowMeta>,
+    /// Next unallocated row in this chunk.
+    next_row: usize,
+    rows: usize,
+}
+
+impl Chunk {
+    fn new(rows: usize, dim: usize) -> Self {
+        Chunk {
+            values: vec![0.0; rows * dim],
+            meta: vec![RowMeta::default(); rows],
+            next_row: 0,
+            rows,
+        }
+    }
+
+    fn full(&self) -> bool {
+        self.next_row == self.rows
+    }
+}
+
+/// Cumulative statistics (expansion savings, probe behaviour, evictions).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableStats {
+    pub inserts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub probes: u64,
+    pub expansions: u64,
+    /// Bytes actually moved during expansions (key structure only).
+    pub expansion_bytes_moved: u64,
+    /// Bytes a static-table redistribution would have moved (values).
+    pub expansion_bytes_avoided: u64,
+    pub evictions: u64,
+}
+
+/// The dynamic hash embedding table.
+pub struct DynamicEmbeddingTable {
+    cfg: DynamicTableConfig,
+    slots: Vec<Slot>,
+    /// Number of live keys (excludes tombstones).
+    live: usize,
+    /// Number of tombstones (for load-factor accounting).
+    tombstones: usize,
+    chunks: Vec<Chunk>,
+    /// Index of the chunk currently receiving new rows. A pre-allocated
+    /// "next" chunk always exists at `active + 1` (dual-chunk design).
+    active: usize,
+    /// Logical clock for LRU timestamps.
+    clock: u64,
+    /// Default row returned by `lookup` for absent ids.
+    default_row: Vec<f32>,
+    pub stats: TableStats,
+}
+
+impl DynamicEmbeddingTable {
+    pub fn new(cfg: DynamicTableConfig) -> Self {
+        assert!(cfg.dim > 0);
+        assert!(cfg.chunk_rows > 0);
+        assert!(cfg.probe_groups >= 1);
+        assert!(
+            cfg.max_load_factor > 0.0 && cfg.max_load_factor < 1.0,
+            "load factor must be in (0,1)"
+        );
+        let cap = cfg.initial_capacity.next_power_of_two().max(16);
+        // Eq. 5 needs M/threads − 1 ≥ 1.
+        assert!(
+            cap as u64 / cfg.probe_groups >= 2,
+            "capacity too small for probe_groups"
+        );
+        let mut t = DynamicEmbeddingTable {
+            slots: vec![Slot { key: EMPTY, ptr: 0 }; cap],
+            live: 0,
+            tombstones: 0,
+            chunks: vec![
+                Chunk::new(cfg.chunk_rows, cfg.dim),
+                Chunk::new(cfg.chunk_rows, cfg.dim), // pre-allocated "next"
+            ],
+            active: 0,
+            clock: 0,
+            default_row: vec![0.0; cfg.dim],
+            stats: TableStats::default(),
+            cfg,
+        };
+        t.cfg.initial_capacity = cap;
+        t
+    }
+
+    /// Current key-structure capacity M (always a power of two).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Live-key load factor (tombstones included, as they lengthen probe
+    /// chains just like live keys).
+    pub fn load_factor(&self) -> f64 {
+        (self.live + self.tombstones) as f64 / self.slots.len() as f64
+    }
+
+    /// Grouped parallel probing (Eq. 5). Returns the step size for `key`
+    /// in a table of size `m` with `groups` thread groups.
+    #[inline]
+    pub fn probe_step(key: u64, m: u64, groups: u64) -> u64 {
+        debug_assert!(m.is_power_of_two());
+        debug_assert!(m / groups >= 2);
+        ((key % (m / groups - 1) + 1) | 1) * groups
+    }
+
+    /// The probe sequence for `key`: thread group `g ∈ [0, groups)` probes
+    /// `h0 + g + t·S (mod M)`; sequentially we interleave groups per round
+    /// (`t`), matching the GPU's lockstep behaviour.
+    #[inline]
+    fn probe_seq(&self, key: u64) -> ProbeSeq {
+        let m = self.slots.len() as u64;
+        let groups = self.cfg.probe_groups.min(m / 2);
+        ProbeSeq {
+            h0: hash_id(key, self.cfg.seed) & (m - 1),
+            step: Self::probe_step(key, m, groups),
+            groups,
+            mask: m - 1,
+            t: 0,
+            g: 0,
+        }
+    }
+
+    /// Find the slot index holding `key`, or None.
+    fn find(&self, key: u64) -> Option<usize> {
+        let mut seq = self.probe_seq(key);
+        let max_probes = self.slots.len() as u64;
+        for _ in 0..max_probes {
+            let idx = seq.next_idx();
+            let s = &self.slots[idx];
+            if s.key == key {
+                return Some(idx);
+            }
+            if s.key == EMPTY {
+                return None;
+            }
+            // TOMBSTONE or other key: continue probing.
+        }
+        None
+    }
+
+    /// Find the insertion slot for `key`: an existing slot with the key,
+    /// or the first EMPTY/TOMBSTONE position. Returns (idx, existed).
+    fn find_insert(&mut self, key: u64) -> (usize, bool) {
+        let mut seq = self.probe_seq(key);
+        let mut first_free: Option<usize> = None;
+        let max_probes = self.slots.len() as u64;
+        for p in 0..max_probes {
+            let idx = seq.next_idx();
+            self.stats.probes += 1;
+            match self.slots[idx].key {
+                k if k == key => return (idx, true),
+                EMPTY => {
+                    return (first_free.unwrap_or(idx), false);
+                }
+                TOMBSTONE => {
+                    if first_free.is_none() {
+                        first_free = Some(idx);
+                    }
+                }
+                _ => {}
+            }
+            // Guard against pathological fill (should be unreachable with
+            // expansion at 0.75).
+            debug_assert!(p < max_probes, "probe loop exhausted");
+        }
+        (
+            first_free.expect("table full: expansion failed to trigger"),
+            false,
+        )
+    }
+
+    /// Deterministic row initialization: N(0, init_scale/√dim) seeded by
+    /// the id, so a row's initial value is a pure function of (id, seed) —
+    /// identical across shards, restarts and world sizes.
+    fn init_row(&self, id: u64, out: &mut [f32]) {
+        let mut rng = Xoshiro256::new(hash_id(id, self.cfg.seed ^ 0xD1CE));
+        let scale = self.cfg.init_scale / (self.cfg.dim as f32).sqrt();
+        for v in out.iter_mut() {
+            *v = rng.gauss() as f32 * scale;
+        }
+    }
+
+    /// Allocate a row in the embedding structure (dual-chunk scheme).
+    fn alloc_row(&mut self, key: u64) -> (usize, usize) {
+        if self.chunks[self.active].full() {
+            // Retire the filled chunk; the pre-allocated next chunk
+            // becomes current, and a fresh next chunk is allocated.
+            self.active += 1;
+            if self.active + 1 >= self.chunks.len() {
+                self.chunks
+                    .push(Chunk::new(self.cfg.chunk_rows, self.cfg.dim));
+            }
+        }
+        let chunk_idx = self.active;
+        let chunk = &mut self.chunks[chunk_idx];
+        let row = chunk.next_row;
+        chunk.next_row += 1;
+        chunk.meta[row] = RowMeta {
+            key,
+            access_count: 0,
+            last_access: self.clock,
+            live: true,
+        };
+        (chunk_idx, row)
+    }
+
+    /// Double the key structure, migrating keys+pointers only (Fig. 6c).
+    fn expand(&mut self) {
+        let new_cap = (self.slots.len() * 2).next_power_of_two();
+        let old = std::mem::replace(
+            &mut self.slots,
+            vec![Slot { key: EMPTY, ptr: 0 }; new_cap],
+        );
+        self.tombstones = 0;
+        let migrated = self.live;
+        self.live = 0;
+        for s in old.iter() {
+            if s.key != EMPTY && s.key != TOMBSTONE {
+                // Re-probe in the doubled table; no value movement.
+                let (idx, existed) = self.find_insert(s.key);
+                debug_assert!(!existed);
+                self.slots[idx] = *s;
+                self.live += 1;
+            }
+        }
+        self.stats.expansions += 1;
+        self.stats.expansion_bytes_moved +=
+            (migrated * std::mem::size_of::<Slot>()) as u64;
+        // What a static-table re-layout would have moved: the values.
+        self.stats.expansion_bytes_avoided +=
+            (migrated * self.cfg.dim * std::mem::size_of::<f32>()) as u64;
+    }
+
+    fn maybe_expand(&mut self) {
+        if self.load_factor() > self.cfg.max_load_factor {
+            self.expand();
+        }
+    }
+
+    /// Remove `id`. Returns true if it was present. The key slot becomes
+    /// a tombstone; the row is marked dead (its chunk space is reclaimed
+    /// only when the whole chunk retires, matching bulk deallocation).
+    pub fn remove(&mut self, id: GlobalId) -> bool {
+        match self.find(id) {
+            Some(idx) => {
+                let (c, r) = unpack_ptr(self.slots[idx].ptr);
+                self.chunks[c].meta[r].live = false;
+                self.slots[idx].key = TOMBSTONE;
+                self.live -= 1;
+                self.tombstones += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict one row according to the configured policy, using power-of-k
+    /// choices sampling over live rows (an approximation of exact LRU/LFU,
+    /// as production caches do). Returns the evicted id.
+    pub fn evict_one(&mut self, rng: &mut Xoshiro256) -> Option<GlobalId> {
+        if self.live == 0 {
+            return None;
+        }
+        const SAMPLES: usize = 16;
+        let mut best: Option<(u64, u64)> = None; // (key, score) — lower is colder
+        let nslots = self.slots.len();
+        let mut tries = 0;
+        let mut found = 0;
+        while found < SAMPLES && tries < nslots * 4 {
+            tries += 1;
+            let idx = rng.range_usize(0, nslots);
+            let s = self.slots[idx];
+            if s.key == EMPTY || s.key == TOMBSTONE {
+                continue;
+            }
+            found += 1;
+            let (c, r) = unpack_ptr(s.ptr);
+            let meta = &self.chunks[c].meta[r];
+            debug_assert_eq!(meta.key, s.key, "key/meta integrity");
+            let score = match self.cfg.eviction {
+                EvictionPolicy::Lru => meta.last_access,
+                EvictionPolicy::Lfu => meta.access_count as u64,
+            };
+            if best.map(|(_, b)| score < b).unwrap_or(true) {
+                best = Some((s.key, score));
+            }
+        }
+        let (key, _) = best?;
+        self.remove(key);
+        self.stats.evictions += 1;
+        Some(key)
+    }
+
+    /// Immutable access to a row's slice, if present.
+    pub fn row(&self, id: GlobalId) -> Option<&[f32]> {
+        let idx = self.find(id)?;
+        let (c, r) = unpack_ptr(self.slots[idx].ptr);
+        let d = self.cfg.dim;
+        Some(&self.chunks[c].values[r * d..(r + 1) * d])
+    }
+
+    /// Mutable access to a row's slice, if present (bumps access meta).
+    pub fn row_mut(&mut self, id: GlobalId) -> Option<&mut [f32]> {
+        let idx = self.find(id)?;
+        let (c, r) = unpack_ptr(self.slots[idx].ptr);
+        self.clock += 1;
+        let clock = self.clock;
+        let d = self.cfg.dim;
+        let chunk = &mut self.chunks[c];
+        chunk.meta[r].access_count += 1;
+        chunk.meta[r].last_access = clock;
+        Some(&mut chunk.values[r * d..(r + 1) * d])
+    }
+
+    /// Access metadata for a row (for precision policies and tests).
+    pub fn row_meta(&self, id: GlobalId) -> Option<(u32, u64)> {
+        let idx = self.find(id)?;
+        let (c, r) = unpack_ptr(self.slots[idx].ptr);
+        let m = &self.chunks[c].meta[r];
+        Some((m.access_count, m.last_access))
+    }
+
+    /// Iterate over all live (id, row) pairs (checkpointing).
+    pub fn iter_rows(&self) -> impl Iterator<Item = (GlobalId, &[f32])> + '_ {
+        let d = self.cfg.dim;
+        self.slots.iter().filter_map(move |s| {
+            if s.key == EMPTY || s.key == TOMBSTONE {
+                None
+            } else {
+                let (c, r) = unpack_ptr(s.ptr);
+                Some((s.key, &self.chunks[c].values[r * d..(r + 1) * d]))
+            }
+        })
+    }
+
+    /// Number of allocated chunks (retired + current + next).
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn config(&self) -> &DynamicTableConfig {
+        &self.cfg
+    }
+}
+
+impl EmbeddingStore for DynamicEmbeddingTable {
+    fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert!(
+            id < TOMBSTONE,
+            "ids 2^64-1 and 2^64-2 are reserved sentinels"
+        );
+        assert_eq!(out.len(), self.cfg.dim);
+        self.clock += 1;
+        // Enforce the row budget before inserting.
+        if let Some(budget) = self.cfg.max_rows {
+            if self.live >= budget && self.find(id).is_none() {
+                let mut rng = Xoshiro256::new(self.clock ^ self.cfg.seed);
+                self.evict_one(&mut rng);
+            }
+        }
+        let (idx, existed) = self.find_insert(id);
+        if existed {
+            self.stats.hits += 1;
+            let (c, r) = unpack_ptr(self.slots[idx].ptr);
+            let clock = self.clock;
+            let chunk = &mut self.chunks[c];
+            chunk.meta[r].access_count += 1;
+            chunk.meta[r].last_access = clock;
+            let d = self.cfg.dim;
+            out.copy_from_slice(&chunk.values[r * d..(r + 1) * d]);
+            true
+        } else {
+            self.stats.misses += 1;
+            self.stats.inserts += 1;
+            let was_tombstone = self.slots[idx].key == TOMBSTONE;
+            let (c, r) = self.alloc_row(id);
+            self.slots[idx] = Slot {
+                key: id,
+                ptr: pack_ptr(c, r),
+            };
+            self.live += 1;
+            if was_tombstone {
+                self.tombstones -= 1;
+            }
+            let d = self.cfg.dim;
+            // Initialize deterministically, then copy out.
+            let mut init = vec![0.0f32; d];
+            self.init_row(id, &mut init);
+            self.chunks[c].values[r * d..(r + 1) * d].copy_from_slice(&init);
+            self.chunks[c].meta[r].access_count = 1;
+            out.copy_from_slice(&init);
+            self.maybe_expand();
+            false
+        }
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), self.cfg.dim);
+        match self.row(id) {
+            Some(row) => {
+                out.copy_from_slice(row);
+                true
+            }
+            None => {
+                out.copy_from_slice(&self.default_row);
+                false
+            }
+        }
+    }
+
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
+        assert_eq!(delta.len(), self.cfg.dim);
+        match self.row_mut(id) {
+            Some(row) => {
+                for (v, d) in row.iter_mut().zip(delta) {
+                    *v += d;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<Slot>()
+            + self
+                .chunks
+                .iter()
+                .map(|c| {
+                    c.values.len() * 4 + c.meta.len() * std::mem::size_of::<RowMeta>()
+                })
+                .sum::<usize>()
+    }
+}
+
+/// Iterator state for grouped parallel probing.
+struct ProbeSeq {
+    h0: u64,
+    step: u64,
+    groups: u64,
+    mask: u64,
+    t: u64,
+    g: u64,
+}
+
+impl ProbeSeq {
+    #[inline]
+    fn next_idx(&mut self) -> usize {
+        let idx = (self.h0 + self.g + self.t * self.step) & self.mask;
+        self.g += 1;
+        if self.g == self.groups {
+            self.g = 0;
+            self.t += 1;
+        }
+        idx as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_table(dim: usize) -> DynamicEmbeddingTable {
+        DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(dim)
+                .with_capacity(32)
+                .with_seed(99),
+        )
+    }
+
+    #[test]
+    fn insert_then_lookup_returns_same_row() {
+        let mut t = small_table(8);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        assert!(!t.lookup_or_insert(42, &mut a)); // fresh
+        assert!(t.lookup_or_insert(42, &mut b)); // hit
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x != 0.0), "row must be initialized");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_id() {
+        let mut t1 = small_table(16);
+        let mut t2 = small_table(16);
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        t1.lookup_or_insert(777, &mut a);
+        t2.lookup_or_insert(777, &mut b);
+        assert_eq!(a, b, "same id+seed → same init across tables");
+        let mut c = vec![0.0; 16];
+        t1.lookup_or_insert(778, &mut c);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lookup_without_insert_gives_default() {
+        let t = small_table(4);
+        let mut out = vec![9.0; 4];
+        assert!(!t.lookup(5, &mut out));
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn apply_delta_updates_row() {
+        let mut t = small_table(4);
+        let mut row = vec![0.0; 4];
+        t.lookup_or_insert(1, &mut row);
+        assert!(t.apply_delta(1, &[1.0, 2.0, 3.0, 4.0]));
+        let mut row2 = vec![0.0; 4];
+        t.lookup_or_insert(1, &mut row2);
+        for i in 0..4 {
+            assert!((row2[i] - (row[i] + (i + 1) as f32)).abs() < 1e-6);
+        }
+        assert!(!t.apply_delta(999, &[0.0; 4]), "absent id drops update");
+    }
+
+    #[test]
+    fn expansion_preserves_contents_and_moves_keys_only() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(4).with_capacity(16).with_seed(3),
+        );
+        let n = 2000u64;
+        let mut rows = Vec::new();
+        for id in 0..n {
+            let mut r = vec![0.0; 4];
+            t.lookup_or_insert(id, &mut r);
+            rows.push(r);
+        }
+        assert!(t.stats.expansions > 0, "must have expanded");
+        assert!(t.capacity() >= 2048 && t.capacity().is_power_of_two());
+        assert!(t.load_factor() <= 0.76);
+        for id in 0..n {
+            let mut r = vec![0.0; 4];
+            assert!(t.lookup(id, &mut r), "id {id} lost after expansion");
+            assert_eq!(r, rows[id as usize]);
+        }
+        // Key-only migration: moved bytes ≪ avoided value bytes (dim 4 →
+        // slot is 16 B vs value 16 B... use dim 4: equal; check accounting
+        // fields are both populated and consistent instead).
+        assert!(t.stats.expansion_bytes_moved > 0);
+        assert_eq!(
+            t.stats.expansion_bytes_avoided / t.stats.expansion_bytes_moved,
+            (4 * 4) as u64 / std::mem::size_of::<Slot>() as u64
+        );
+    }
+
+    #[test]
+    fn chunks_grow_without_moving_rows() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(2)
+                .with_capacity(16)
+                .with_chunk_rows(8),
+        );
+        for id in 0..100 {
+            let mut r = vec![0.0; 2];
+            t.lookup_or_insert(id, &mut r);
+        }
+        // 100 rows / 8 per chunk → ≥ 13 chunks + the pre-allocated next.
+        assert!(t.num_chunks() >= 14);
+        // Dual-chunk invariant: there is always a pre-allocated next chunk.
+        assert!(t.num_chunks() >= 2);
+    }
+
+    #[test]
+    fn remove_and_reinsert_through_tombstones() {
+        let mut t = small_table(4);
+        let mut r = vec![0.0; 4];
+        for id in 0..10 {
+            t.lookup_or_insert(id, &mut r);
+        }
+        assert!(t.remove(3));
+        assert!(!t.remove(3), "double remove");
+        assert_eq!(t.len(), 9);
+        assert!(!t.lookup(3, &mut r));
+        // Other keys still reachable through the tombstone.
+        for id in (0..10).filter(|&i| i != 3) {
+            assert!(t.lookup(id, &mut r), "id {id}");
+        }
+        // Re-insert gets a fresh (deterministic) row again.
+        assert!(!t.lookup_or_insert(3, &mut r));
+        assert_eq!(t.len(), 10);
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_policy() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(4)
+                .with_capacity(256)
+                .with_max_rows(50)
+                .with_eviction(EvictionPolicy::Lru),
+        );
+        let mut r = vec![0.0; 4];
+        for id in 0..200 {
+            t.lookup_or_insert(id, &mut r);
+            // Keep id 0 hot so LRU never evicts it.
+            t.lookup_or_insert(0, &mut r);
+        }
+        assert!(t.len() <= 51, "budget enforced, len={}", t.len());
+        assert!(t.stats.evictions > 0);
+        assert!(t.lookup(0, &mut r), "hot id survived LRU");
+    }
+
+    #[test]
+    fn lfu_keeps_frequent_rows() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(4)
+                .with_capacity(256)
+                .with_max_rows(20)
+                .with_eviction(EvictionPolicy::Lfu),
+        );
+        let mut r = vec![0.0; 4];
+        // Make id 7 very frequent.
+        for _ in 0..100 {
+            t.lookup_or_insert(7, &mut r);
+        }
+        for id in 100..300 {
+            t.lookup_or_insert(id, &mut r);
+        }
+        assert!(t.lookup(7, &mut r), "frequent id survived LFU");
+    }
+
+    // ---- Theorem 1 / Eq. 5 properties --------------------------------
+
+    #[test]
+    fn probe_step_is_odd_times_groups() {
+        for &m in &[16u64, 64, 1024, 65536] {
+            for &g in &[1u64, 2, 4, 8] {
+                for key in 0..200u64 {
+                    let s = DynamicEmbeddingTable::probe_step(key, m, g);
+                    assert_eq!(s % g, 0);
+                    assert_eq!((s / g) % 2, 1, "S/groups must be odd");
+                    assert!(s >= g && s < m * g);
+                }
+            }
+        }
+    }
+
+    /// Theorem 1: with `groups == 1` (odd step S), the probe sequence
+    /// covers all M slots exactly once in M steps.
+    #[test]
+    fn theorem1_single_group_covers_all_slots() {
+        let mut rng = Xoshiro256::new(2026);
+        for &m in &[16u64, 64, 256, 4096] {
+            for _ in 0..20 {
+                let key = rng.next_u64();
+                let s = DynamicEmbeddingTable::probe_step(key, m, 1);
+                let h0 = hash_id(key, 1) & (m - 1);
+                let mut seen = vec![false; m as usize];
+                for t in 0..m {
+                    let idx = ((h0 + t * s) & (m - 1)) as usize;
+                    assert!(!seen[idx], "slot {idx} revisited at t={t}, m={m}");
+                    seen[idx] = true;
+                }
+                assert!(seen.iter().all(|&b| b));
+            }
+        }
+    }
+
+    /// Grouped probing: the union of all groups' sequences covers every
+    /// slot (each group covers its residue class; groups are staggered by
+    /// +g offsets).
+    #[test]
+    fn grouped_probing_union_covers_all_slots() {
+        let mut rng = Xoshiro256::new(7);
+        for &m in &[64u64, 256, 1024] {
+            for &groups in &[2u64, 4, 8] {
+                let key = rng.next_u64();
+                let s = DynamicEmbeddingTable::probe_step(key, m, groups);
+                let h0 = hash_id(key, 99) & (m - 1);
+                let mut seen = vec![false; m as usize];
+                for t in 0..(m / groups) {
+                    for g in 0..groups {
+                        seen[((h0 + g + t * s) & (m - 1)) as usize] = true;
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&b| b),
+                    "m={m} groups={groups} left slots unvisited"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_std_hashmap_under_churn() {
+        use std::collections::HashMap;
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(4).with_capacity(16).with_seed(5),
+        );
+        let mut reference: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut rng = Xoshiro256::new(31337);
+        let mut buf = vec![0.0f32; 4];
+        for step in 0..5000 {
+            let id = rng.gen_range(500);
+            match rng.gen_range(10) {
+                0..=5 => {
+                    // lookup_or_insert
+                    let existed = t.lookup_or_insert(id, &mut buf);
+                    match reference.get(&id) {
+                        Some(row) => {
+                            assert!(existed, "step {step}: ref has {id}, table missed");
+                            assert_eq!(&buf, row);
+                        }
+                        None => {
+                            assert!(!existed);
+                            reference.insert(id, buf.clone());
+                        }
+                    }
+                }
+                6..=7 => {
+                    // delta update
+                    let delta = [0.1, -0.2, 0.3, 0.0];
+                    let ok = t.apply_delta(id, &delta);
+                    assert_eq!(ok, reference.contains_key(&id));
+                    if let Some(row) = reference.get_mut(&id) {
+                        for (v, d) in row.iter_mut().zip(delta.iter()) {
+                            *v += d;
+                        }
+                    }
+                }
+                _ => {
+                    // remove
+                    let ok = t.remove(id);
+                    assert_eq!(ok, reference.remove(&id).is_some(), "step {step}");
+                }
+            }
+            assert_eq!(t.len(), reference.len());
+        }
+        // Final full-content check.
+        for (id, row) in &reference {
+            let mut out = vec![0.0; 4];
+            assert!(t.lookup(*id, &mut out));
+            for (a, b) in out.iter().zip(row.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn iter_rows_yields_all_live() {
+        let mut t = small_table(4);
+        let mut r = vec![0.0; 4];
+        for id in 0..20 {
+            t.lookup_or_insert(id, &mut r);
+        }
+        t.remove(5);
+        let ids: std::collections::HashSet<u64> =
+            t.iter_rows().map(|(id, _)| id).collect();
+        assert_eq!(ids.len(), 19);
+        assert!(!ids.contains(&5));
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_content() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(64)
+                .with_capacity(1024)
+                .with_chunk_rows(512),
+        );
+        let m0 = t.memory_bytes();
+        let mut r = vec![0.0; 64];
+        for id in 0..2000 {
+            t.lookup_or_insert(id, &mut r);
+        }
+        assert!(t.memory_bytes() > m0);
+        // ~2000 rows × 64 dims × 4 B ≈ 512 KB of values at least.
+        assert!(t.memory_bytes() >= 2000 * 64 * 4);
+    }
+}

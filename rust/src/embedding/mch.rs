@@ -1,0 +1,262 @@
+//! Managed Collision Handling (MCH) — TorchRec's mechanism for
+//! changeable feature IDs, reproduced as the Table 3 baseline.
+//!
+//! As described in §6.3: MCH "maintains a fixed-size mapping table to
+//! remap original IDs into a continuous space. It employs binary search
+//! for efficient ID localization and activates an eviction mechanism to
+//! update ID mappings when a threshold is reached."
+//!
+//! Costs reproduced faithfully (they drive the Table 3 result):
+//! - the remap table is **sorted** and searched with **binary search**
+//!   (O(log n) per lookup, plus O(n) insertion shifting — this is why the
+//!   paper's hash table wins 1.47×–2.22×);
+//! - the embedding storage for the remapped continuous space is
+//!   **pre-allocated at full capacity** (this is why MCH OOMs at
+//!   110G-64D in Table 3 while the dynamic table does not).
+
+use crate::embedding::hash::hash_id;
+use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::rng::Xoshiro256;
+
+/// One entry in the sorted remap table.
+#[derive(Clone, Copy, Debug)]
+struct MchEntry {
+    original_id: u64,
+    /// Slot in the pre-allocated embedding array.
+    slot: u32,
+    /// Access counter driving eviction.
+    count: u32,
+    last_access: u64,
+}
+
+/// TorchRec-style Managed Collision Handling store.
+pub struct MchTable {
+    dim: usize,
+    capacity: usize,
+    /// Sorted by `original_id` for binary search.
+    entries: Vec<MchEntry>,
+    /// Pre-allocated embedding storage for the continuous space.
+    values: Vec<f32>,
+    free_slots: Vec<u32>,
+    /// Eviction triggers when occupancy reaches this fraction.
+    evict_threshold: f64,
+    /// Fraction of coldest entries dropped per eviction pass.
+    evict_fraction: f64,
+    default_row: Vec<f32>,
+    seed: u64,
+    clock: u64,
+    pub evictions: u64,
+}
+
+impl MchTable {
+    pub fn new(dim: usize, capacity: usize, seed: u64) -> Self {
+        assert!(dim > 0 && capacity > 0);
+        MchTable {
+            dim,
+            capacity,
+            entries: Vec::new(),
+            values: vec![0.0; capacity * dim], // full pre-allocation
+            free_slots: (0..capacity as u32).rev().collect(),
+            evict_threshold: 0.95,
+            evict_fraction: 0.2,
+            default_row: vec![0.0; dim],
+            seed,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Binary-search localization of an original ID (the paper's stated
+    /// MCH lookup mechanism).
+    fn find(&self, id: u64) -> Result<usize, usize> {
+        self.entries.binary_search_by(|e| e.original_id.cmp(&id))
+    }
+
+    fn init_row(&self, id: u64, out: &mut [f32]) {
+        let mut rng = Xoshiro256::new(hash_id(id, self.seed ^ 0xD1CE));
+        let scale = 1.0 / (self.dim as f32).sqrt();
+        for v in out.iter_mut() {
+            *v = rng.gauss() as f32 * scale;
+        }
+    }
+
+    /// Evict the coldest `evict_fraction` of entries (threshold pass).
+    fn evict_pass(&mut self) {
+        let n_drop = ((self.entries.len() as f64 * self.evict_fraction) as usize).max(1);
+        // Rank by (count, last_access): least frequent, then least recent.
+        let mut order: Vec<usize> = (0..self.entries.len()).collect();
+        order.sort_by_key(|&i| (self.entries[i].count, self.entries[i].last_access));
+        let mut drop: Vec<usize> = order.into_iter().take(n_drop).collect();
+        drop.sort_unstable_by(|a, b| b.cmp(a)); // remove back-to-front
+        for i in drop {
+            let e = self.entries.remove(i);
+            self.free_slots.push(e.slot);
+            self.evictions += 1;
+        }
+    }
+}
+
+impl EmbeddingStore for MchTable {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), self.dim);
+        self.clock += 1;
+        match self.find(id) {
+            Ok(i) => {
+                self.entries[i].count += 1;
+                self.entries[i].last_access = self.clock;
+                let slot = self.entries[i].slot as usize;
+                out.copy_from_slice(&self.values[slot * self.dim..(slot + 1) * self.dim]);
+                true
+            }
+            Err(i) => {
+                // Threshold-triggered eviction to make room.
+                if self.entries.len() as f64 >= self.capacity as f64 * self.evict_threshold
+                {
+                    self.evict_pass();
+                }
+                let slot = match self.free_slots.pop() {
+                    Some(s) => s,
+                    None => {
+                        // Fully saturated even after eviction: default row.
+                        out.copy_from_slice(&self.default_row);
+                        return false;
+                    }
+                };
+                // O(n) shifting insert to keep the table sorted — the cost
+                // profile the paper's hash table avoids. Re-locate in case
+                // the eviction pass shifted indices.
+                let _ = i;
+                let i = self.find(id).unwrap_err();
+                self.entries.insert(
+                    i,
+                    MchEntry {
+                        original_id: id,
+                        slot,
+                        count: 1,
+                        last_access: self.clock,
+                    },
+                );
+                let mut init = vec![0.0f32; self.dim];
+                self.init_row(id, &mut init);
+                let s = slot as usize;
+                self.values[s * self.dim..(s + 1) * self.dim].copy_from_slice(&init);
+                out.copy_from_slice(&init);
+                false
+            }
+        }
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), self.dim);
+        match self.find(id) {
+            Ok(i) => {
+                let slot = self.entries[i].slot as usize;
+                out.copy_from_slice(&self.values[slot * self.dim..(slot + 1) * self.dim]);
+                true
+            }
+            Err(_) => {
+                out.copy_from_slice(&self.default_row);
+                false
+            }
+        }
+    }
+
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
+        assert_eq!(delta.len(), self.dim);
+        match self.find(id) {
+            Ok(i) => {
+                let slot = self.entries[i].slot as usize;
+                for (v, d) in self.values[slot * self.dim..(slot + 1) * self.dim]
+                    .iter_mut()
+                    .zip(delta)
+                {
+                    *v += d;
+                }
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Full pre-allocated footprint (the Table 3 OOM driver).
+    fn memory_bytes(&self) -> usize {
+        self.capacity * self.dim * std::mem::size_of::<f32>()
+            + self.entries.capacity() * std::mem::size_of::<MchEntry>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remap_roundtrip() {
+        let mut t = MchTable::new(4, 100, 9);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        // Arbitrary huge original IDs remap fine.
+        assert!(!t.lookup_or_insert(u64::MAX / 3, &mut a));
+        assert!(t.lookup_or_insert(u64::MAX / 3, &mut b));
+        assert_eq!(a, b);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn entries_stay_sorted() {
+        let mut t = MchTable::new(2, 50, 1);
+        let mut r = vec![0.0; 2];
+        let mut rng = Xoshiro256::new(4);
+        for _ in 0..40 {
+            t.lookup_or_insert(rng.next_u64(), &mut r);
+        }
+        for w in t.entries.windows(2) {
+            assert!(w[0].original_id < w[1].original_id);
+        }
+    }
+
+    #[test]
+    fn eviction_triggers_at_threshold_and_keeps_hot() {
+        let mut t = MchTable::new(2, 20, 1);
+        let mut r = vec![0.0; 2];
+        // Make id 5 hot.
+        for _ in 0..50 {
+            t.lookup_or_insert(5, &mut r);
+        }
+        for id in 100..200 {
+            t.lookup_or_insert(id, &mut r);
+        }
+        assert!(t.evictions > 0);
+        assert!(t.len() <= 20);
+        assert!(t.lookup(5, &mut r), "hot id survives threshold eviction");
+    }
+
+    #[test]
+    fn memory_preallocated_at_capacity() {
+        let t0 = MchTable::new(64, 10_000, 1);
+        assert!(t0.memory_bytes() >= 10_000 * 64 * 4);
+    }
+
+    #[test]
+    fn apply_delta_and_default_fallback() {
+        let mut t = MchTable::new(3, 10, 1);
+        let mut r = vec![0.0; 3];
+        t.lookup_or_insert(1, &mut r);
+        assert!(t.apply_delta(1, &[0.5; 3]));
+        assert!(!t.apply_delta(999, &[0.5; 3]));
+        let mut out = vec![1.0; 3];
+        assert!(!t.lookup(999, &mut out));
+        assert_eq!(out, vec![0.0; 3]);
+    }
+}

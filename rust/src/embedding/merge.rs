@@ -1,0 +1,397 @@
+//! Automatic embedding-table merging (§4.2).
+//!
+//! Industrial models have hundreds of feature tables; merging those with
+//! identical embedding dimension into one physical table fuses many
+//! lookup operators into one and avoids memory fragmentation. TorchRec
+//! requires manual per-table configuration; MTGRBoost automates it:
+//!
+//! - [`FeatureConfig`] — the unified per-feature configuration interface
+//!   (feature name, embedding dim, pooling, shared lookup table).
+//! - [`MergePlan`] — the automatically generated merge strategy: features
+//!   grouped by embedding dimension (the paper's example strategy).
+//! - [`GlobalIdCodec`] — Eq. 8 bit packing. Dynamic tables have no fixed
+//!   row count, so classic cumulative row offsets (Fig. 7a) don't apply;
+//!   instead the top `k = ⌈log₂(m+1)⌉` bits after the sign bit encode the
+//!   feature-table index: `ID = (i << (63 − k)) | x`.
+//! - [`HashTableCollection`] — the merged physical tables, one dynamic
+//!   hash table per merge group, addressed by global IDs.
+
+use std::collections::BTreeMap;
+
+use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use crate::embedding::{EmbeddingStore, FeatureId, GlobalId};
+
+/// Pooling applied when a feature yields multiple IDs per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pooling {
+    Sum,
+    Mean,
+}
+
+/// Unified feature configuration interface (§4.2): "defining parameters
+/// for each feature (e.g., feature name, embedding dimensions, and lookup
+/// tables)". Developers declare features; merging is automatic.
+#[derive(Clone, Debug)]
+pub struct FeatureConfig {
+    pub name: String,
+    pub dim: usize,
+    pub pooling: Pooling,
+    /// Features naming the same `shared_table` alias share one logical
+    /// table (e.g. "item_id" in history and exposure sequences).
+    pub shared_table: Option<String>,
+}
+
+impl FeatureConfig {
+    pub fn new(name: &str, dim: usize) -> Self {
+        FeatureConfig {
+            name: name.to_string(),
+            dim,
+            pooling: Pooling::Sum,
+            shared_table: None,
+        }
+    }
+
+    pub fn shared(mut self, table: &str) -> Self {
+        self.shared_table = Some(table.to_string());
+        self
+    }
+
+    pub fn with_pooling(mut self, p: Pooling) -> Self {
+        self.pooling = p;
+        self
+    }
+
+    /// The logical table key this feature resolves to.
+    pub fn table_key(&self) -> String {
+        self.shared_table.clone().unwrap_or_else(|| self.name.clone())
+    }
+}
+
+/// Eq. 8 global-ID codec. `m` logical tables need
+/// `k = ⌈log₂(m+1)⌉` identifier bits; the sign bit stays 0 and the
+/// remaining `63 − k` bits carry the per-table local ID.
+#[derive(Clone, Copy, Debug)]
+pub struct GlobalIdCodec {
+    k: u32,
+    m: usize,
+}
+
+impl GlobalIdCodec {
+    pub fn new(num_tables: usize) -> Self {
+        assert!(num_tables >= 1);
+        let k = (usize::BITS - num_tables.leading_zeros()) as u32; // ⌈log2(m+1)⌉
+        assert!(k < 63, "too many tables");
+        GlobalIdCodec { k, m: num_tables }
+    }
+
+    /// Identifier bits `k`.
+    pub fn id_bits(&self) -> u32 {
+        self.k
+    }
+
+    /// Maximum local ID representable: 2^(63−k) − 1.
+    pub fn max_local_id(&self) -> u64 {
+        (1u64 << (63 - self.k)) - 1
+    }
+
+    /// Eq. 8: `ID = (i << (63 − k)) | x`.
+    pub fn encode(&self, table_index: usize, local_id: FeatureId) -> GlobalId {
+        debug_assert!(table_index < self.m, "table index {table_index} out of range");
+        debug_assert!(
+            local_id <= self.max_local_id(),
+            "local id {local_id} overflows {} bits",
+            63 - self.k
+        );
+        ((table_index as u64) << (63 - self.k)) | local_id
+    }
+
+    /// Inverse of [`encode`].
+    pub fn decode(&self, id: GlobalId) -> (usize, FeatureId) {
+        let table = (id >> (63 - self.k)) as usize;
+        let local = id & self.max_local_id();
+        (table, local)
+    }
+}
+
+/// One merge group: features with identical dim share a physical table.
+#[derive(Clone, Debug)]
+pub struct MergeGroup {
+    pub dim: usize,
+    /// Logical table keys in this group, in stable order.
+    pub tables: Vec<String>,
+}
+
+/// The automatically generated merging strategy.
+#[derive(Clone, Debug)]
+pub struct MergePlan {
+    pub groups: Vec<MergeGroup>,
+    /// feature name → (group index, table index within the codec space).
+    pub feature_to_table: BTreeMap<String, (usize, usize)>,
+    pub codec: GlobalIdCodec,
+    /// Number of lookup operators before merging (one per logical table)
+    /// vs after (one per group) — the operator-fusion win of §4.2.
+    pub ops_before: usize,
+    pub ops_after: usize,
+}
+
+impl MergePlan {
+    /// Build the plan: group logical tables by embedding dimension (the
+    /// paper's "combining tables with identical embedding dimensions").
+    pub fn build(features: &[FeatureConfig]) -> MergePlan {
+        // Logical tables in declaration order, deduped by shared alias.
+        let mut table_dims: Vec<(String, usize)> = Vec::new();
+        for f in features {
+            let key = f.table_key();
+            match table_dims.iter().find(|(k, _)| *k == key) {
+                Some((_, d)) => assert_eq!(
+                    *d, f.dim,
+                    "feature `{}` shares table `{}` with a different dim",
+                    f.name, key
+                ),
+                None => table_dims.push((key, f.dim)),
+            }
+        }
+        // Group by dim.
+        let mut by_dim: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+        for (key, dim) in &table_dims {
+            by_dim.entry(*dim).or_default().push(key.clone());
+        }
+        let groups: Vec<MergeGroup> = by_dim
+            .into_iter()
+            .map(|(dim, tables)| MergeGroup { dim, tables })
+            .collect();
+
+        // Codec over *all* logical tables (global across groups so an ID
+        // is unique system-wide).
+        let codec = GlobalIdCodec::new(table_dims.len());
+        let mut table_index: BTreeMap<&str, usize> = BTreeMap::new();
+        {
+            let mut next = 0usize;
+            for g in &groups {
+                for t in &g.tables {
+                    table_index.insert(t.as_str(), next);
+                    next += 1;
+                }
+            }
+        }
+        let mut feature_to_table = BTreeMap::new();
+        for f in features {
+            let key = f.table_key();
+            let gi = groups
+                .iter()
+                .position(|g| g.tables.contains(&key))
+                .unwrap();
+            feature_to_table.insert(f.name.clone(), (gi, table_index[key.as_str()]));
+        }
+        MergePlan {
+            ops_before: table_dims.len(),
+            ops_after: groups.len(),
+            groups,
+            feature_to_table,
+            codec,
+        }
+    }
+
+    /// Translate (feature name, local id) → (group index, global id).
+    pub fn global_id(&self, feature: &str, local_id: FeatureId) -> (usize, GlobalId) {
+        let (group, table) = *self
+            .feature_to_table
+            .get(feature)
+            .unwrap_or_else(|| panic!("unregistered feature `{feature}`"));
+        (group, self.codec.encode(table, local_id))
+    }
+}
+
+/// The merged physical storage: one dynamic hash table per merge group
+/// (§4.2 `HashTableCollection`), plus the plan that routes features.
+pub struct HashTableCollection {
+    pub plan: MergePlan,
+    pub tables: Vec<DynamicEmbeddingTable>,
+}
+
+impl HashTableCollection {
+    pub fn new(features: &[FeatureConfig], base_cfg: &DynamicTableConfig) -> Self {
+        let plan = MergePlan::build(features);
+        let tables = plan
+            .groups
+            .iter()
+            .map(|g| {
+                let mut cfg = base_cfg.clone();
+                cfg.dim = g.dim;
+                DynamicEmbeddingTable::new(cfg)
+            })
+            .collect();
+        HashTableCollection { plan, tables }
+    }
+
+    /// Number of fused lookup operators (one per physical table).
+    pub fn num_lookup_ops(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Look up one feature occurrence, inserting if new; `out` must have
+    /// the feature's dim.
+    pub fn lookup_or_insert(
+        &mut self,
+        feature: &str,
+        local_id: FeatureId,
+        out: &mut [f32],
+    ) -> bool {
+        let (group, gid) = self.plan.global_id(feature, local_id);
+        self.tables[group].lookup_or_insert(gid, out)
+    }
+
+    /// Pooled lookup over several ids of one feature (Sum/Mean pooling
+    /// per the feature's config).
+    pub fn lookup_pooled(
+        &mut self,
+        feature: &FeatureConfig,
+        ids: &[FeatureId],
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        if ids.is_empty() {
+            return;
+        }
+        let mut buf = vec![0.0f32; feature.dim];
+        for &id in ids {
+            self.lookup_or_insert(&feature.name, id, &mut buf);
+            for (o, b) in out.iter_mut().zip(&buf) {
+                *o += b;
+            }
+        }
+        if feature.pooling == Pooling::Mean {
+            let n = ids.len() as f32;
+            for o in out.iter_mut() {
+                *o /= n;
+            }
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.memory_bytes()).sum()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_features() -> Vec<FeatureConfig> {
+        vec![
+            FeatureConfig::new("user_id", 32),
+            FeatureConfig::new("item_id", 32),
+            FeatureConfig::new("cate_id", 16),
+            FeatureConfig::new("city_id", 16),
+            FeatureConfig::new("action_type", 16),
+            // exposure item shares the item_id table
+            FeatureConfig::new("exp_item_id", 32).shared("item_id"),
+        ]
+    }
+
+    #[test]
+    fn codec_matches_paper_example() {
+        // Paper Fig. 7b: 3 tables → k = ⌈log2(4)⌉ = 2 identifier bits,
+        // max rows 2^61, offsets 2^59 and 2^60 for tables 2 and 3.
+        let c = GlobalIdCodec::new(3);
+        assert_eq!(c.id_bits(), 2);
+        assert_eq!(c.max_local_id(), (1u64 << 61) - 1);
+        assert_eq!(c.encode(0, 5), 5);
+        assert_eq!(c.encode(1, 0), 1u64 << 61 >> 2 << 2); // 1 << 61
+        assert_eq!(c.encode(1, 0), 1u64 << 61);
+        assert_eq!(c.encode(2, 0), 2u64 << 61);
+        // Sign bit stays clear for every encodable id.
+        assert_eq!(c.encode(2, c.max_local_id()) >> 63, 0);
+    }
+
+    #[test]
+    fn codec_bijective_randomized() {
+        let mut rng = crate::util::rng::Xoshiro256::new(8);
+        for &m in &[1usize, 2, 3, 7, 8, 100] {
+            let c = GlobalIdCodec::new(m);
+            for _ in 0..500 {
+                let t = rng.range_usize(0, m);
+                let x = rng.next_u64() & c.max_local_id();
+                let (t2, x2) = c.decode(c.encode(t, x));
+                assert_eq!((t, x), (t2, x2));
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_tables_never_collide() {
+        let c = GlobalIdCodec::new(5);
+        let a = c.encode(0, 12345);
+        let b = c.encode(1, 12345);
+        assert_ne!(a, b, "same local id in different tables must differ");
+    }
+
+    #[test]
+    fn merge_groups_by_dim() {
+        let plan = MergePlan::build(&demo_features());
+        // 5 logical tables (exp_item_id shares item_id): dims {32: 2, 16: 3}.
+        assert_eq!(plan.ops_before, 5);
+        assert_eq!(plan.ops_after, 2, "fused into one op per dim group");
+        let g16 = plan.groups.iter().find(|g| g.dim == 16).unwrap();
+        assert_eq!(g16.tables.len(), 3);
+        let g32 = plan.groups.iter().find(|g| g.dim == 32).unwrap();
+        assert_eq!(g32.tables.len(), 2);
+    }
+
+    #[test]
+    fn shared_table_features_resolve_to_same_rows() {
+        let feats = demo_features();
+        let mut coll =
+            HashTableCollection::new(&feats, &DynamicTableConfig::new(1).with_capacity(64));
+        let mut a = vec![0.0; 32];
+        let mut b = vec![0.0; 32];
+        coll.lookup_or_insert("item_id", 42, &mut a);
+        // Same id through the aliased feature hits the same row.
+        assert!(coll.lookup_or_insert("exp_item_id", 42, &mut b));
+        assert_eq!(a, b);
+        // But the same local id in an unshared table differs.
+        let mut c = vec![0.0; 32];
+        assert!(!coll.lookup_or_insert("user_id", 42, &mut c));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    #[should_panic(expected = "different dim")]
+    fn shared_table_dim_mismatch_rejected() {
+        let feats = vec![
+            FeatureConfig::new("a", 8),
+            FeatureConfig::new("b", 16).shared("a"),
+        ];
+        MergePlan::build(&feats);
+    }
+
+    #[test]
+    fn pooled_lookup_sum_and_mean() {
+        let feats = vec![FeatureConfig::new("f", 4).with_pooling(Pooling::Mean)];
+        let mut coll =
+            HashTableCollection::new(&feats, &DynamicTableConfig::new(1).with_capacity(64));
+        let mut r1 = vec![0.0; 4];
+        let mut r2 = vec![0.0; 4];
+        coll.lookup_or_insert("f", 1, &mut r1);
+        coll.lookup_or_insert("f", 2, &mut r2);
+        let mut pooled = vec![0.0; 4];
+        coll.lookup_pooled(&feats[0], &[1, 2], &mut pooled);
+        for i in 0..4 {
+            assert!((pooled[i] - (r1[i] + r2[i]) / 2.0).abs() < 1e-6);
+        }
+        // Empty id list → zero vector.
+        coll.lookup_pooled(&feats[0], &[], &mut pooled);
+        assert_eq!(pooled, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered feature")]
+    fn unknown_feature_rejected() {
+        let plan = MergePlan::build(&demo_features());
+        plan.global_id("nope", 1);
+    }
+}

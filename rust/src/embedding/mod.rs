@@ -1,0 +1,61 @@
+//! Sparse-embedding subsystem — the paper's §4 contribution.
+//!
+//! - [`hash`] — MurmurHash3 (the paper's chosen hash, §4.1).
+//! - [`dynamic_table`] — the dynamic hash embedding table: decoupled
+//!   key/embedding storage, grouped parallel probing (Eq. 5), power-of-two
+//!   capacity expansion migrating keys only, dual-chunk value allocation,
+//!   LRU/LFU eviction metadata.
+//! - [`static_table`] — TorchRec-style fixed-capacity baseline.
+//! - [`mch`] — TorchRec Managed Collision Handling baseline (Table 3).
+//! - [`merge`] — automatic table merging: `FeatureConfig`,
+//!   `HashTableCollection`, Eq. 8 bit-packed global IDs.
+//! - [`dedup`] — two-stage ID deduplication (§4.3).
+//! - [`sharded`] — model-parallel sharded lookup over the communicator
+//!   (two all-to-alls per lookup, gradient all-to-all on backward).
+//! - [`precision`] — hot/cold FP32/FP16 mixed-precision row storage (§5.2).
+
+pub mod dedup;
+pub mod sharded;
+pub mod dynamic_table;
+pub mod hash;
+pub mod mch;
+pub mod merge;
+pub mod precision;
+pub mod static_table;
+
+/// A feature ID as it appears in the raw log (per-table local ID).
+pub type FeatureId = u64;
+
+/// A globally unique ID after table merging (Eq. 8 bit packing).
+pub type GlobalId = u64;
+
+/// Common interface over embedding stores so the trainer, benches and
+/// baselines (static / MCH / dynamic) are interchangeable.
+pub trait EmbeddingStore {
+    /// Embedding dimensionality of every row in this store.
+    fn dim(&self) -> usize;
+
+    /// Number of live rows.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `id`, inserting a freshly initialized row if absent
+    /// (training-time semantics: unseen IDs get new embeddings).
+    /// Writes the row into `out` (length `dim()`), returns `true` if the
+    /// row already existed.
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool;
+
+    /// Look up without inserting (eval-time semantics). Returns `false`
+    /// and writes the store's default row when absent.
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool;
+
+    /// Apply an additive update to the row for `id` (optimizer delta).
+    /// Returns `false` if the id is not present (update dropped).
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool;
+
+    /// Approximate resident bytes (key + value + metadata structures).
+    fn memory_bytes(&self) -> usize;
+}

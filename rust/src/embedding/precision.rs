@@ -1,0 +1,280 @@
+//! Mixed-precision embedding storage (§5.2).
+//!
+//! "For high-frequency accessed feature embeddings, we preserve embedding
+//! vectors in FP32 format to avoid quantization accumulation errors caused
+//! by frequent gradient updates. Conversely, low-frequency features employ
+//! FP16 storage and computation, significantly reducing memory footprint
+//! while accelerating table lookup operations."
+//!
+//! [`MixedPrecisionTable`] wraps a [`DynamicEmbeddingTable`], dynamically
+//! partitioning rows into *hot* (FP32, access count ≥ threshold) and
+//! *cold* (FP16) sets. Cold rows physically round-trip through IEEE
+//! binary16 on every write-back, so the quantization error the paper
+//! accepts for cold rows is actually applied; memory/communication
+//! accounting reports cold rows at 2 bytes/element.
+
+use crate::embedding::dynamic_table::DynamicEmbeddingTable;
+use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::f16::quantize_f16_slice;
+
+/// Hot/cold partitioning policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionPolicy {
+    /// Rows with `access_count >= hot_threshold` stay FP32.
+    pub hot_threshold: u32,
+    /// Enable mixed precision; if false everything is FP32.
+    pub enabled: bool,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy {
+            hot_threshold: 8,
+            enabled: true,
+        }
+    }
+}
+
+/// Running counts for memory accounting and the §5.2 ablations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecisionStats {
+    pub hot_rows: usize,
+    pub cold_rows: usize,
+    pub quantize_ops: u64,
+}
+
+/// Mixed-precision wrapper over the dynamic table.
+pub struct MixedPrecisionTable {
+    inner: DynamicEmbeddingTable,
+    policy: PrecisionPolicy,
+    pub stats: PrecisionStats,
+}
+
+impl MixedPrecisionTable {
+    pub fn new(inner: DynamicEmbeddingTable, policy: PrecisionPolicy) -> Self {
+        MixedPrecisionTable {
+            inner,
+            policy,
+            stats: PrecisionStats::default(),
+        }
+    }
+
+    pub fn inner(&self) -> &DynamicEmbeddingTable {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut DynamicEmbeddingTable {
+        &mut self.inner
+    }
+
+    /// Is this row currently in the hot (FP32) set?
+    pub fn is_hot(&self, id: GlobalId) -> bool {
+        match self.inner.row_meta(id) {
+            Some((count, _)) => count >= self.policy.hot_threshold,
+            None => false,
+        }
+    }
+
+    /// Recompute the hot/cold row census (cheap full scan, run once per
+    /// reporting interval, not per step).
+    pub fn refresh_census(&mut self) {
+        let mut hot = 0;
+        let mut cold = 0;
+        let ids: Vec<GlobalId> = self.inner.iter_rows().map(|(id, _)| id).collect();
+        for id in ids {
+            if self.is_hot(id) {
+                hot += 1;
+            } else {
+                cold += 1;
+            }
+        }
+        self.stats.hot_rows = hot;
+        self.stats.cold_rows = cold;
+    }
+
+    /// Effective storage bytes under the mixed scheme: hot rows at 4 B,
+    /// cold rows at 2 B per element (plus key structure overhead from the
+    /// inner table's slot array).
+    pub fn effective_value_bytes(&self) -> usize {
+        let d = self.inner.dim();
+        if !self.policy.enabled {
+            return (self.stats.hot_rows + self.stats.cold_rows) * d * 4;
+        }
+        self.stats.hot_rows * d * 4 + self.stats.cold_rows * d * 2
+    }
+
+    /// Wire bytes for transmitting `rows` embedding rows of which
+    /// `cold_fraction` are cold (FP16 on the wire).
+    pub fn wire_bytes(&self, rows: usize, cold_fraction: f64) -> usize {
+        let d = self.inner.dim();
+        if !self.policy.enabled {
+            return rows * d * 4;
+        }
+        let cold = (rows as f64 * cold_fraction) as usize;
+        (rows - cold) * d * 4 + cold * d * 2
+    }
+}
+
+impl EmbeddingStore for MixedPrecisionTable {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
+        let existed = self.inner.lookup_or_insert(id, out);
+        // Cold rows are *stored* as f16: the values handed to compute are
+        // the quantized ones.
+        if self.policy.enabled && !self.is_hot(id) {
+            quantize_f16_slice(out);
+            self.stats.quantize_ops += 1;
+        }
+        existed
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        let found = self.inner.lookup(id, out);
+        if found && self.policy.enabled && !self.is_hot(id) {
+            quantize_f16_slice(out);
+        }
+        found
+    }
+
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
+        let hot = !self.policy.enabled || self.is_hot(id);
+        let ok = self.inner.apply_delta(id, delta);
+        if ok && !hot {
+            // Write-back for a cold row re-quantizes the stored value —
+            // this is where FP16 storage accumulates quantization error,
+            // which is exactly why the paper keeps hot rows FP32.
+            if let Some(row) = self.inner.row_mut(id) {
+                quantize_f16_slice(row);
+            }
+            self.stats.quantize_ops += 1;
+        }
+        ok
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // Key structure + metadata from the inner table, values at mixed
+        // precision.
+        let full = self.inner.memory_bytes();
+        let d = self.inner.dim();
+        let value_bytes_f32 = self.inner.len() * d * 4;
+        full - value_bytes_f32.min(full) + self.effective_value_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::dynamic_table::DynamicTableConfig;
+
+    fn table(threshold: u32) -> MixedPrecisionTable {
+        MixedPrecisionTable::new(
+            DynamicEmbeddingTable::new(DynamicTableConfig::new(8).with_capacity(64)),
+            PrecisionPolicy {
+                hot_threshold: threshold,
+                enabled: true,
+            },
+        )
+    }
+
+    #[test]
+    fn cold_rows_are_quantized() {
+        let mut t = table(1000); // everything cold
+        let mut out = vec![0.0f32; 8];
+        t.lookup_or_insert(1, &mut out);
+        for &v in &out {
+            assert_eq!(v, crate::util::f16::quantize_f16(v), "value not on f16 grid");
+        }
+    }
+
+    #[test]
+    fn hot_rows_stay_fp32() {
+        let mut t = table(3);
+        let mut out = vec![0.0f32; 8];
+        // Three accesses promote the row to hot.
+        t.lookup_or_insert(7, &mut out);
+        t.lookup_or_insert(7, &mut out);
+        t.lookup_or_insert(7, &mut out);
+        assert!(t.is_hot(7));
+        // Apply a delta that is NOT representable in f16 relative terms.
+        assert!(t.apply_delta(7, &[1e-4; 8]));
+        let mut after = vec![0.0f32; 8];
+        t.lookup_or_insert(7, &mut after); // still hot → unquantized read
+        // Full f32 precision retained: difference ≈ 1e-4 (up to f32 ulp),
+        // whereas f16 storage would have absorbed it entirely for most
+        // magnitudes.
+        for i in 0..8 {
+            assert!(((after[i] - out[i]) - 1e-4).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cold_write_back_accumulates_quantization() {
+        let mut t = table(1000); //永 cold
+        let mut v0 = vec![0.0f32; 8];
+        t.lookup_or_insert(5, &mut v0);
+        // A tiny delta below f16 resolution around |v|≈0.1 is lost.
+        let tiny = 1e-6f32;
+        t.apply_delta(5, &[tiny; 8]);
+        let mut v1 = vec![0.0f32; 8];
+        t.lookup(5, &mut v1);
+        assert_eq!(v0, v1, "sub-resolution delta absorbed by f16 storage");
+        assert!(t.stats.quantize_ops > 0);
+    }
+
+    #[test]
+    fn census_and_memory_accounting() {
+        let mut t = table(2);
+        let mut out = vec![0.0f32; 8];
+        // ids 0..10 cold (1 access), id 42 hot (3 accesses).
+        for id in 0..10 {
+            t.lookup_or_insert(id, &mut out);
+        }
+        for _ in 0..3 {
+            t.lookup_or_insert(42, &mut out);
+        }
+        t.refresh_census();
+        assert_eq!(t.stats.hot_rows, 1);
+        assert_eq!(t.stats.cold_rows, 10);
+        let eff = t.effective_value_bytes();
+        assert_eq!(eff, 1 * 8 * 4 + 10 * 8 * 2);
+        // Mixed-precision memory strictly below all-FP32 memory.
+        assert!(t.memory_bytes() < t.inner().memory_bytes());
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_cold_fraction() {
+        let t = table(2);
+        assert_eq!(t.wire_bytes(100, 0.0), 100 * 8 * 4);
+        assert_eq!(t.wire_bytes(100, 1.0), 100 * 8 * 2);
+        assert_eq!(t.wire_bytes(100, 0.5), 50 * 8 * 4 + 50 * 8 * 2);
+    }
+
+    #[test]
+    fn disabled_policy_is_transparent_fp32() {
+        let mut t = MixedPrecisionTable::new(
+            DynamicEmbeddingTable::new(DynamicTableConfig::new(4).with_capacity(64)),
+            PrecisionPolicy {
+                hot_threshold: 1,
+                enabled: false,
+            },
+        );
+        let mut out = vec![0.0f32; 4];
+        t.lookup_or_insert(1, &mut out);
+        assert!(t.apply_delta(1, &[1e-5; 4]));
+        let mut v = vec![0.0f32; 4];
+        t.lookup(1, &mut v);
+        for i in 0..4 {
+            // No f16 quantization anywhere: the small delta survives to
+            // f32 precision.
+            assert!(((v[i] - out[i]) - 1e-5).abs() < 1e-7);
+            assert_ne!(v[i], out[i]);
+        }
+    }
+}

@@ -1,0 +1,442 @@
+//! Model-parallel sharded embedding lookup/update (§3 Fig. 5, §4.3).
+//!
+//! Embedding tables are sharded across devices by `hash(id) % world`.
+//! Each lookup performs the paper's two all-to-alls — **ID communication**
+//! then **embedding communication** — with the two-stage deduplication of
+//! §4.3 applied according to a [`DedupStrategy`]:
+//!
+//! 1. *Stage 1* (requester): deduplicate the IDs headed to each peer
+//!    before the ID all-to-all, shrinking both the ID payload and —
+//!    decisively — the embedding payload coming back.
+//! 2. *Stage 2* (server): the IDs received from different peers overlap;
+//!    deduplicate the union before touching the hash table so each row is
+//!    fetched once.
+//!
+//! Backward mirrors forward: occurrence gradients are aggregated per
+//! destination (sparse accumulation), exchanged via all-to-all, and
+//! aggregated again on the owning shard.
+
+use crate::collective::comm::{CommHandle, Message};
+use crate::embedding::dedup::{gather_rows, scatter_accumulate, Dedup, DedupStrategy, DedupVolume};
+use crate::embedding::hash::hash_id;
+use crate::embedding::{EmbeddingStore, GlobalId};
+
+/// Seed for the shard-placement hash (distinct from table hashing so
+/// shard residence and slot probing are independent).
+const SHARD_SEED: u64 = 0x5A4D;
+
+/// Per-rank shard of a (merged) embedding table plus the exchange logic.
+pub struct ShardedEmbedding<S: EmbeddingStore> {
+    table: S,
+    dim: usize,
+    pub strategy: DedupStrategy,
+    /// Cumulative communication-volume accounting (drives Fig. 16).
+    pub volume: DedupVolume,
+    /// Per-pair bytes sent in the last lookup (for the net cost model):
+    /// `last_id_bytes[dst]`, `last_emb_bytes[dst]`.
+    pub last_id_bytes: Vec<usize>,
+    pub last_emb_bytes: Vec<usize>,
+}
+
+/// Which rank owns `id`.
+pub fn shard_owner(id: GlobalId, world: usize) -> usize {
+    (hash_id(id, SHARD_SEED) % world as u64) as usize
+}
+
+impl<S: EmbeddingStore> ShardedEmbedding<S> {
+    pub fn new(table: S, strategy: DedupStrategy) -> Self {
+        let dim = table.dim();
+        ShardedEmbedding {
+            table,
+            dim,
+            strategy,
+            volume: DedupVolume::default(),
+            last_id_bytes: Vec::new(),
+            last_emb_bytes: Vec::new(),
+        }
+    }
+
+    pub fn table(&self) -> &S {
+        &self.table
+    }
+
+    pub fn table_mut(&mut self) -> &mut S {
+        &mut self.table
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Distributed lookup: returns rows in occurrence order
+    /// (`ids.len() × dim`). `train` controls insert-on-miss semantics.
+    ///
+    /// All ranks must call this collectively (it contains two
+    /// all-to-alls), even with an empty `ids` list.
+    pub fn lookup(&mut self, comm: &mut CommHandle, ids: &[GlobalId], train: bool) -> Vec<f32> {
+        let world = comm.world;
+        let dim = self.dim;
+
+        // ---- partition by owner ------------------------------------
+        let mut ids_by_dst: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
+        let mut pos_by_dst: Vec<Vec<u32>> = vec![Vec::new(); world];
+        for (i, &id) in ids.iter().enumerate() {
+            let d = shard_owner(id, world);
+            ids_by_dst[d].push(id);
+            pos_by_dst[d].push(i as u32);
+        }
+
+        // ---- stage 1: per-destination dedup -------------------------
+        let mut send_ids: Vec<Vec<GlobalId>> = Vec::with_capacity(world);
+        let mut stage1_inverse: Vec<Option<Vec<u32>>> = Vec::with_capacity(world);
+        for bucket in &ids_by_dst {
+            self.volume.ids_raw += bucket.len();
+            if self.strategy.stage1() {
+                let d = Dedup::of(bucket);
+                self.volume.ids_sent += d.unique.len();
+                send_ids.push(d.unique);
+                stage1_inverse.push(Some(d.inverse));
+            } else {
+                self.volume.ids_sent += bucket.len();
+                send_ids.push(bucket.clone());
+                stage1_inverse.push(None);
+            }
+        }
+        self.last_id_bytes = send_ids.iter().map(|v| v.len() * 8).collect();
+
+        // ---- ID all-to-all ------------------------------------------
+        let requested: Vec<Vec<GlobalId>> = comm
+            .all_to_all(send_ids.iter().cloned().map(Message::Ids).collect())
+            .into_iter()
+            .map(Message::into_ids)
+            .collect();
+
+        // ---- serve: stage-2 dedup + local table lookup ---------------
+        let total_req: usize = requested.iter().map(|r| r.len()).sum();
+        self.volume.lookups_raw += total_req;
+        let replies: Vec<Vec<f32>> = if self.strategy.stage2() {
+            // Dedup the union across sources, fetch once per unique id.
+            let flat: Vec<GlobalId> = requested.iter().flatten().copied().collect();
+            let d = Dedup::of(&flat);
+            self.volume.lookups_done += d.unique.len();
+            let mut unique_rows = vec![0.0f32; d.unique.len() * dim];
+            for (u, &id) in d.unique.iter().enumerate() {
+                self.fetch(id, train, &mut unique_rows[u * dim..(u + 1) * dim]);
+            }
+            // Slice the expanded rows back per source.
+            let mut out = Vec::with_capacity(world);
+            let mut off = 0usize;
+            for req in &requested {
+                let inv = &d.inverse[off..off + req.len()];
+                let mut rows = vec![0.0f32; req.len() * dim];
+                gather_rows(&unique_rows, dim, inv, &mut rows);
+                out.push(rows);
+                off += req.len();
+            }
+            out
+        } else {
+            self.volume.lookups_done += total_req;
+            requested
+                .iter()
+                .map(|req| {
+                    let mut rows = vec![0.0f32; req.len() * dim];
+                    for (i, &id) in req.iter().enumerate() {
+                        self.fetch(id, train, &mut rows[i * dim..(i + 1) * dim]);
+                    }
+                    rows
+                })
+                .collect()
+        };
+
+        // ---- embedding all-to-all ------------------------------------
+        // Reply row counts mirror the *received* id counts; the raw
+        // (no-stage-1) counterpart is what we would have sent without
+        // dedup — accounted for Fig. 16.
+        for (dst, bucket) in ids_by_dst.iter().enumerate() {
+            self.volume.emb_rows_raw += bucket.len();
+            self.volume.emb_rows_sent += send_ids[dst].len();
+        }
+        self.last_emb_bytes = replies.iter().map(|r| r.len() * 4).collect();
+        let returned: Vec<Vec<f32>> = comm
+            .all_to_all(replies.into_iter().map(Message::Floats).collect())
+            .into_iter()
+            .map(Message::into_floats)
+            .collect();
+
+        // ---- scatter back to occurrence order ------------------------
+        let mut out = vec![0.0f32; ids.len() * dim];
+        for dst in 0..world {
+            let rows = &returned[dst];
+            // Expand through the stage-1 inverse if we deduped.
+            let expanded: Vec<f32> = match &stage1_inverse[dst] {
+                Some(inv) => {
+                    let mut e = vec![0.0f32; inv.len() * dim];
+                    gather_rows(rows, dim, inv, &mut e);
+                    e
+                }
+                None => rows.clone(),
+            };
+            for (j, &pos) in pos_by_dst[dst].iter().enumerate() {
+                out[pos as usize * dim..(pos as usize + 1) * dim]
+                    .copy_from_slice(&expanded[j * dim..(j + 1) * dim]);
+            }
+        }
+        out
+    }
+
+    fn fetch(&mut self, id: GlobalId, train: bool, out: &mut [f32]) {
+        if train {
+            self.table.lookup_or_insert(id, out);
+        } else {
+            self.table.lookup(id, out);
+        }
+    }
+
+    /// Distributed backward: exchange occurrence-order gradients so each
+    /// shard receives the *aggregated* gradient for the ids it owns.
+    /// Returns `(ids, grads)` for the local shard (grads in id order,
+    /// `ids.len() × dim`); the caller feeds these to the sparse optimizer.
+    ///
+    /// Collective: all ranks must call.
+    pub fn backward(
+        &mut self,
+        comm: &mut CommHandle,
+        ids: &[GlobalId],
+        grads: &[f32],
+    ) -> (Vec<GlobalId>, Vec<f32>) {
+        assert_eq!(grads.len(), ids.len() * self.dim);
+        let world = comm.world;
+        let dim = self.dim;
+
+        // Partition occurrences by owner, aggregating duplicates per
+        // destination (sparse gradient accumulation, §5.2) when stage-1
+        // dedup is on; otherwise raw occurrence gradients go on the wire.
+        let mut ids_by_dst: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
+        let mut grad_by_dst: Vec<Vec<f32>> = vec![Vec::new(); world];
+        {
+            let mut occ_ids: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
+            let mut occ_grads: Vec<Vec<f32>> = vec![Vec::new(); world];
+            for (i, &id) in ids.iter().enumerate() {
+                let d = shard_owner(id, world);
+                occ_ids[d].push(id);
+                occ_grads[d].extend_from_slice(&grads[i * dim..(i + 1) * dim]);
+            }
+            for d in 0..world {
+                if self.strategy.stage1() {
+                    let dd = Dedup::of(&occ_ids[d]);
+                    let mut agg = vec![0.0f32; dd.unique.len() * dim];
+                    scatter_accumulate(&occ_grads[d], dim, &dd.inverse, &mut agg);
+                    ids_by_dst[d] = dd.unique;
+                    grad_by_dst[d] = agg;
+                } else {
+                    ids_by_dst[d] = std::mem::take(&mut occ_ids[d]);
+                    grad_by_dst[d] = std::mem::take(&mut occ_grads[d]);
+                }
+            }
+        }
+
+        // Two all-to-alls: ids then gradients (same wire pattern as
+        // forward, reversed direction for the payload).
+        let recv_ids: Vec<Vec<GlobalId>> = comm
+            .all_to_all(ids_by_dst.iter().cloned().map(Message::Ids).collect())
+            .into_iter()
+            .map(Message::into_ids)
+            .collect();
+        let recv_grads: Vec<Vec<f32>> = comm
+            .all_to_all(grad_by_dst.into_iter().map(Message::Floats).collect())
+            .into_iter()
+            .map(Message::into_floats)
+            .collect();
+
+        // Aggregate across sources (always — correctness requires the
+        // owner to apply each id's total gradient once).
+        let flat_ids: Vec<GlobalId> = recv_ids.iter().flatten().copied().collect();
+        let flat_grads: Vec<f32> = recv_grads.into_iter().flatten().collect();
+        let d = Dedup::of(&flat_ids);
+        let mut agg = vec![0.0f32; d.unique.len() * dim];
+        scatter_accumulate(&flat_grads, dim, &d.inverse, &mut agg);
+        (d.unique, agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::comm::CommGroup;
+    use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+    use std::sync::Arc;
+    use std::thread;
+
+    const DIM: usize = 4;
+
+    fn run_sharded<T: Send + 'static>(
+        world: usize,
+        strategy: DedupStrategy,
+        f: impl Fn(usize, &mut ShardedEmbedding<DynamicEmbeddingTable>, &mut CommHandle) -> T
+            + Send
+            + Sync
+            + 'static,
+    ) -> Vec<T> {
+        let handles = CommGroup::new(world);
+        let f = Arc::new(f);
+        let mut joins = Vec::new();
+        for (rank, mut h) in handles.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            joins.push(thread::spawn(move || {
+                let table = DynamicEmbeddingTable::new(
+                    DynamicTableConfig::new(DIM).with_capacity(256).with_seed(7),
+                );
+                let mut se = ShardedEmbedding::new(table, strategy);
+                f(rank, &mut se, &mut h)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    /// Reference: what a single unsharded table would return. Row init is
+    /// a pure function of (id, seed), so the expected rows are computable
+    /// independently.
+    fn expected_row(id: GlobalId) -> Vec<f32> {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(DIM).with_capacity(256).with_seed(7),
+        );
+        let mut out = vec![0.0; DIM];
+        t.lookup_or_insert(id, &mut out);
+        out
+    }
+
+    #[test]
+    fn lookup_matches_unsharded_reference_all_strategies() {
+        for strategy in [
+            DedupStrategy::None,
+            DedupStrategy::CommUnique,
+            DedupStrategy::LookupUnique,
+            DedupStrategy::TwoStage,
+        ] {
+            let out = run_sharded(4, strategy, |rank, se, comm| {
+                // Overlapping id lists across ranks, with duplicates.
+                let ids: Vec<u64> =
+                    vec![1, 2, 3, 1, 2, 100 + rank as u64, 3, 1, 50, 50];
+                let rows = se.lookup(comm, &ids, true);
+                (ids, rows)
+            });
+            for (ids, rows) in out {
+                for (i, &id) in ids.iter().enumerate() {
+                    assert_eq!(
+                        &rows[i * DIM..(i + 1) * DIM],
+                        expected_row(id).as_slice(),
+                        "strategy {strategy:?} id {id}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_strategies_reduce_volume_in_order() {
+        // two-stage ≤ comm-unique ≤ none for ids_sent; lookups_done
+        // minimized by stage2.
+        let mut results = Vec::new();
+        for strategy in [
+            DedupStrategy::None,
+            DedupStrategy::CommUnique,
+            DedupStrategy::TwoStage,
+        ] {
+            let out = run_sharded(4, strategy, |_rank, se, comm| {
+                let ids: Vec<u64> = (0..1000).map(|i| (i % 37) as u64).collect();
+                let _ = se.lookup(comm, &ids, true);
+                se.volume
+            });
+            results.push((strategy, out[0]));
+        }
+        let none = results[0].1;
+        let comm_u = results[1].1;
+        let two = results[2].1;
+        assert_eq!(none.ids_sent, none.ids_raw);
+        assert!(comm_u.ids_sent < none.ids_sent);
+        assert_eq!(two.ids_sent, comm_u.ids_sent);
+        assert!(two.lookups_done < comm_u.lookups_done);
+        assert!(comm_u.emb_rows_sent < none.emb_rows_raw);
+    }
+
+    #[test]
+    fn empty_ranks_participate() {
+        let out = run_sharded(3, DedupStrategy::TwoStage, |rank, se, comm| {
+            let ids: Vec<u64> = if rank == 0 { vec![9, 9, 9] } else { vec![] };
+            se.lookup(comm, &ids, true)
+        });
+        assert_eq!(out[0].len(), 3 * DIM);
+        assert_eq!(&out[0][0..DIM], expected_row(9).as_slice());
+        assert!(out[1].is_empty() && out[2].is_empty());
+    }
+
+    #[test]
+    fn backward_aggregates_across_ranks_and_duplicates() {
+        // Every rank contributes gradient 1.0 for id 5 twice, and rank r
+        // contributes r for id 6 once. Total for id 5 = 2×world, for
+        // id 6 = sum of ranks.
+        let world = 4;
+        let out = run_sharded(world, DedupStrategy::TwoStage, |rank, se, comm| {
+            // Forward to materialize rows.
+            let ids = vec![5u64, 5, 6];
+            let _ = se.lookup(comm, &ids, true);
+            let mut grads = vec![0.0f32; ids.len() * DIM];
+            grads[0..DIM].fill(1.0);
+            grads[DIM..2 * DIM].fill(1.0);
+            grads[2 * DIM..3 * DIM].fill(rank as f32);
+            let (lids, lgrads) = se.backward(comm, &ids, &grads);
+            (lids, lgrads)
+        });
+        // Exactly one rank owns id 5 and one owns id 6.
+        let mut seen5 = 0;
+        let mut seen6 = 0;
+        for (lids, lgrads) in out {
+            for (i, &id) in lids.iter().enumerate() {
+                let g = &lgrads[i * DIM..(i + 1) * DIM];
+                if id == 5 {
+                    seen5 += 1;
+                    assert_eq!(g, vec![2.0 * world as f32; DIM].as_slice());
+                } else if id == 6 {
+                    seen6 += 1;
+                    assert_eq!(g, vec![0.0 + 1.0 + 2.0 + 3.0; DIM].as_slice());
+                } else {
+                    panic!("unexpected id {id}");
+                }
+            }
+        }
+        assert_eq!(seen5, 1);
+        assert_eq!(seen6, 1);
+    }
+
+    #[test]
+    fn backward_same_totals_without_stage1() {
+        let world = 2;
+        for strategy in [DedupStrategy::None, DedupStrategy::TwoStage] {
+            let out = run_sharded(world, strategy, |_rank, se, comm| {
+                let ids = vec![1u64, 1, 2];
+                let _ = se.lookup(comm, &ids, true);
+                let grads = vec![0.5f32; ids.len() * DIM];
+                se.backward(comm, &ids, &grads)
+            });
+            let mut total: f32 = 0.0;
+            for (_ids, grads) in out {
+                total += grads.iter().sum::<f32>();
+            }
+            // 3 occurrences × 2 ranks × 0.5 × DIM dims.
+            assert_eq!(total, 3.0 * 2.0 * 0.5 * DIM as f32, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn shard_owner_balanced() {
+        let world = 8;
+        let mut counts = vec![0usize; world];
+        for id in 0..80_000u64 {
+            counts[shard_owner(id, world)] += 1;
+        }
+        for &c in &counts {
+            let dev = (c as f64 - 10_000.0).abs() / 10_000.0;
+            assert!(dev < 0.05, "shard imbalance {c}");
+        }
+    }
+}

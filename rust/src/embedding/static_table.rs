@@ -1,0 +1,180 @@
+//! Static embedding table — the TorchRec-style baseline the paper
+//! replaces (§4.1).
+//!
+//! Characteristics reproduced faithfully because the paper's comparisons
+//! depend on them:
+//! - **Fixed capacity, pre-allocated**: all `capacity × dim` values are
+//!   allocated up front ("static tables typically require preallocation
+//!   of capacity exceeding actual requirements"), so `memory_bytes()` is
+//!   independent of how many rows are actually used — this is the memory
+//!   inefficiency (and the Table 3 OOM failure mode) the paper calls out.
+//! - **Default embedding for out-of-range IDs**: IDs ≥ capacity cannot be
+//!   allocated a row and fall back to a shared default embedding, the
+//!   accuracy-degrading path described in §4.1.
+
+use crate::embedding::hash::hash_id;
+use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::rng::Xoshiro256;
+
+/// Fixed-capacity embedding table indexed directly by ID.
+pub struct StaticEmbeddingTable {
+    dim: usize,
+    capacity: usize,
+    values: Vec<f32>,
+    /// Which rows have been touched (for `len`).
+    used: Vec<bool>,
+    default_row: Vec<f32>,
+    seed: u64,
+    /// Count of lookups that overflowed capacity and got the default row.
+    pub default_fallbacks: u64,
+}
+
+impl StaticEmbeddingTable {
+    /// Pre-allocates `capacity × dim` floats immediately.
+    pub fn new(dim: usize, capacity: usize, seed: u64) -> Self {
+        assert!(dim > 0 && capacity > 0);
+        StaticEmbeddingTable {
+            dim,
+            capacity,
+            values: vec![0.0; capacity * dim],
+            used: vec![false; capacity],
+            default_row: vec![0.0; dim],
+            seed,
+            default_fallbacks: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn init_row(&self, id: u64, out: &mut [f32]) {
+        let mut rng = Xoshiro256::new(hash_id(id, self.seed ^ 0xD1CE));
+        let scale = 1.0 / (self.dim as f32).sqrt();
+        for v in out.iter_mut() {
+            *v = rng.gauss() as f32 * scale;
+        }
+    }
+
+    /// Whether this ID is representable (fits the static range).
+    pub fn in_range(&self, id: GlobalId) -> bool {
+        (id as usize) < self.capacity
+    }
+}
+
+impl EmbeddingStore for StaticEmbeddingTable {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.used.iter().filter(|&&u| u).count()
+    }
+
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), self.dim);
+        if !self.in_range(id) {
+            // The static table cannot allocate a row for this id: the
+            // accuracy-degrading default-embedding path.
+            self.default_fallbacks += 1;
+            out.copy_from_slice(&self.default_row);
+            return false;
+        }
+        let idx = id as usize;
+        let existed = self.used[idx];
+        if !existed {
+            let mut init = vec![0.0f32; self.dim];
+            self.init_row(id, &mut init);
+            self.values[idx * self.dim..(idx + 1) * self.dim].copy_from_slice(&init);
+            self.used[idx] = true;
+        }
+        out.copy_from_slice(&self.values[idx * self.dim..(idx + 1) * self.dim]);
+        existed
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), self.dim);
+        if !self.in_range(id) || !self.used[id as usize] {
+            out.copy_from_slice(&self.default_row);
+            return false;
+        }
+        let idx = id as usize;
+        out.copy_from_slice(&self.values[idx * self.dim..(idx + 1) * self.dim]);
+        true
+    }
+
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
+        assert_eq!(delta.len(), self.dim);
+        if !self.in_range(id) || !self.used[id as usize] {
+            return false;
+        }
+        let idx = id as usize;
+        for (v, d) in self.values[idx * self.dim..(idx + 1) * self.dim]
+            .iter_mut()
+            .zip(delta)
+        {
+            *v += d;
+        }
+        true
+    }
+
+    /// Full pre-allocated footprint regardless of actual occupancy.
+    fn memory_bytes(&self) -> usize {
+        self.capacity * self.dim * std::mem::size_of::<f32>() + self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_range_ids_behave_like_a_table() {
+        let mut t = StaticEmbeddingTable::new(4, 100, 1);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        assert!(!t.lookup_or_insert(7, &mut a));
+        assert!(t.lookup_or_insert(7, &mut b));
+        assert_eq!(a, b);
+        assert!(t.apply_delta(7, &[1.0; 4]));
+        t.lookup(7, &mut b);
+        assert!((b[0] - (a[0] + 1.0)).abs() < 1e-6);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_gets_default_row() {
+        let mut t = StaticEmbeddingTable::new(4, 10, 1);
+        let mut out = vec![9.0; 4];
+        assert!(!t.lookup_or_insert(10, &mut out)); // == capacity → overflow
+        assert_eq!(out, vec![0.0; 4]);
+        assert_eq!(t.default_fallbacks, 1);
+        assert!(!t.apply_delta(10, &[1.0; 4]), "default row is not trainable");
+    }
+
+    #[test]
+    fn memory_is_preallocated() {
+        let empty = StaticEmbeddingTable::new(64, 10_000, 1);
+        let mut full = StaticEmbeddingTable::new(64, 10_000, 1);
+        let mut r = vec![0.0; 64];
+        for id in 0..10_000 {
+            full.lookup_or_insert(id, &mut r);
+        }
+        assert_eq!(empty.memory_bytes(), full.memory_bytes());
+        assert_eq!(empty.memory_bytes(), 10_000 * 64 * 4 + 10_000);
+    }
+
+    #[test]
+    fn init_matches_dynamic_table_convention() {
+        // Same (id, seed) should produce the same init as the dynamic
+        // table, so baseline-vs-system accuracy runs start identically.
+        use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+        let mut s = StaticEmbeddingTable::new(8, 100, 42);
+        let mut d = DynamicEmbeddingTable::new(DynamicTableConfig::new(8).with_seed(42));
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        s.lookup_or_insert(3, &mut a);
+        d.lookup_or_insert(3, &mut b);
+        assert_eq!(a, b);
+    }
+}

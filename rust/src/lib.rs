@@ -1,0 +1,34 @@
+//! # MTGRBoost
+//!
+//! A reproduction of *MTGRBoost: Boosting Large-scale Generative
+//! Recommendation Models in Meituan* (KDD 2026) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the distributed-training coordinator: dynamic
+//! hash embedding tables, automatic table merging, two-stage ID
+//! deduplication, dynamic sequence balancing, hybrid-parallel training
+//! (model-parallel sparse + data-parallel dense), checkpoint resharding,
+//! mixed precision, and gradient accumulation. Layers 2/1 (JAX model and
+//! the Pallas HSTU kernel under `python/compile/`) are AOT-compiled to HLO
+//! text at build time and executed from Rust via PJRT (`runtime`); Python
+//! never runs on the training hot path.
+//!
+//! Entry points:
+//! - [`config`] — model / cluster / training configuration (GRM presets).
+//! - [`train::Trainer`] — the synchronous multi-worker training loop.
+//! - [`embedding`] — the paper's sparse-side contribution (§4).
+//! - [`balance`] — dynamic sequence balancing (§5.1, Algorithm 1).
+//! - [`sim`] — analytic multi-node scale simulator for the §6 experiments.
+
+pub mod balance;
+pub mod checkpoint;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod optim;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod embedding;
+pub mod util;

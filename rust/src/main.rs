@@ -1,0 +1,195 @@
+//! MTGRBoost CLI — the leader entrypoint.
+//!
+//! ```text
+//! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
+//!                 [--dedup none|comm|lookup|two-stage] [--lr 0.001]
+//! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
+//!                 [--no-balancing] [--dedup ...] [--backend hash|mch]
+//! mtgrboost data  --out /tmp/shards --sequences 1000 --shards 4
+//! mtgrboost info  [--artifacts artifacts]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use mtgrboost::config::ModelConfig;
+use mtgrboost::data::generator::{GeneratorConfig, WorkloadGenerator};
+use mtgrboost::data::schema::Schema;
+use mtgrboost::data::shards::write_sharded_dataset;
+use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::runtime::Engine;
+use mtgrboost::sim::{simulate, SimOptions, TableBackend};
+use mtgrboost::train::{Trainer, TrainerOptions};
+use mtgrboost::util::cli::Args;
+
+fn parse_dedup(s: &str) -> Result<DedupStrategy> {
+    Ok(match s {
+        "none" => DedupStrategy::None,
+        "comm" => DedupStrategy::CommUnique,
+        "lookup" => DedupStrategy::LookupUnique,
+        "two-stage" | "twostage" => DedupStrategy::TwoStage,
+        other => bail!("unknown dedup strategy `{other}`"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["no-balancing", "no-merging", "verbose", "fixed"]);
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("data") => cmd_data(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: mtgrboost <train|sim|data|info> [--key value ...]\n\
+                 see rust/src/main.rs for the full flag list"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny");
+    let world = args.get_usize("world", 2);
+    let steps = args.get_usize("steps", 50);
+    let engine = Engine::start(std::path::Path::new(&args.get_or(
+        "artifacts",
+        "artifacts",
+    )))
+    .context("start PJRT engine")?;
+
+    let mut opts = TrainerOptions::new(&model, world, steps);
+    opts.train.sequence_balancing = !args.has_flag("no-balancing");
+    opts.train.table_merging = !args.has_flag("no-merging");
+    opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
+    opts.train.lr = args.get_f64("lr", 1e-3) as f32;
+    opts.train.target_tokens = args.get_usize("target-tokens", 2048);
+    opts.train.fixed_batch = args.get_usize("batch", 16);
+    opts.train.grad_accum = args.get_usize("grad-accum", 1);
+    opts.generator.seed = args.get_u64("seed", 2026);
+    opts.generator.len_mu = args.get_f64("len-mu", 3.8);
+    opts.generator.max_len = args.get_usize("max-len", 256);
+    opts.log_every = args.get_usize("log-every", 10);
+    opts.gauc_warmup = args.get_usize("gauc-warmup", steps / 4);
+
+    let report = Trainer::new(opts, engine)?.run()?;
+    let (lc, lv) = report.final_losses();
+    println!("steps                : {}", report.steps.len());
+    println!("final loss ctr/ctcvr : {lc:.4} / {lv:.4}");
+    println!(
+        "GAUC ctr/ctcvr       : {} / {}",
+        report
+            .gauc_ctr
+            .map(|g| format!("{g:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+        report
+            .gauc_ctcvr
+            .map(|g| format!("{g:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+    );
+    println!(
+        "throughput wall      : {:.1} samples/s ({:.0} tokens/s)",
+        report.wall.samples_per_sec(),
+        report.wall.tokens_per_sec()
+    );
+    println!(
+        "throughput simulated : {:.1} samples/s ({:.0} tokens/s)",
+        report.sim_samples_per_sec, report.sim_tokens_per_sec
+    );
+    println!(
+        "sparse rows          : {} ({:.1} MB)",
+        report.table_rows,
+        report.table_memory_bytes as f64 / 1e6
+    );
+    println!(
+        "dedup                : ids {} -> {}, lookups {} -> {}",
+        report.dedup_volume.ids_raw,
+        report.dedup_volume.ids_sent,
+        report.dedup_volume.lookups_raw,
+        report.dedup_volume.lookups_done
+    );
+    println!("\nphase decomposition (wall):\n{}", report.phases.report());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "4g");
+    let world = args.get_usize("world", 8);
+    let dim_factor = args.get_usize("dim-factor", 1);
+    let cfg = ModelConfig::by_name(&model)
+        .with_context(|| format!("unknown model `{model}`"))?
+        .with_dim_factor(dim_factor);
+    let mut opts = SimOptions::new(cfg, world);
+    opts.steps = args.get_usize("steps", 50);
+    opts.sequence_balancing = !args.has_flag("no-balancing");
+    opts.table_merging = !args.has_flag("no-merging");
+    opts.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
+    opts.backend = match args.get_or("backend", "hash").as_str() {
+        "hash" => TableBackend::DynamicHash,
+        "mch" => TableBackend::Mch,
+        other => bail!("unknown backend `{other}`"),
+    };
+    opts.fixed_batch = args.get_usize("batch", 32);
+    opts.target_tokens = args.get_usize("target-tokens", 600 * 32);
+
+    let r = simulate(&opts);
+    println!("world                : {world} GPUs");
+    println!("throughput           : {:.0} sequences/s", r.throughput);
+    println!("tokens/s             : {:.3e}", r.tokens_per_sec);
+    println!(
+        "mean step            : {:.2} ms",
+        mtgrboost::sim::mean_step_s(&r) * 1e3
+    );
+    println!("idle fraction        : {:.1}%", r.idle_fraction * 100.0);
+    println!(
+        "per-GPU memory       : {:.1} GB ({:.1}% of A100)",
+        r.memory_bytes / 1e9,
+        r.memory_utilization * 100.0
+    );
+    println!(
+        "tokens per device    : min {:.0} / max {:.0} (means across steps)",
+        r.token_min_mean, r.token_max_mean
+    );
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "/tmp/mtgr_shards");
+    let n = args.get_usize("sequences", 1000);
+    let shards = args.get_usize("shards", 4);
+    let cfg = GeneratorConfig {
+        seed: args.get_u64("seed", 2026),
+        ..Default::default()
+    };
+    let schema = Schema::meituan_like(args.get_usize("dim", 32), 1);
+    let mut gen = WorkloadGenerator::new(cfg);
+    let seqs = gen.batch(&schema, n);
+    let paths = write_sharded_dataset(std::path::Path::new(&out), &schema, &seqs, shards)?;
+    println!(
+        "wrote {} sequences into {} shards under {}",
+        n,
+        paths.len(),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = mtgrboost::runtime::Manifest::load(std::path::Path::new(&dir))?;
+    println!("artifacts dir : {dir}");
+    println!("seed          : {}", manifest.seed);
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name:<8} d={} blocks={} heads={} tasks={} params={}",
+            m.emb_dim, m.blocks, m.heads, m.tasks, m.param_count
+        );
+        for b in &m.buckets {
+            println!(
+                "  bucket {}x{}  train={} fwd={}",
+                b.batch, b.len, b.train, b.forward
+            );
+        }
+    }
+    Ok(())
+}

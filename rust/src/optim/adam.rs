@@ -1,0 +1,314 @@
+//! Adam (Kingma & Ba) for dense vectors and sparse embedding rows.
+
+use crate::embedding::dedup::IdMap;
+use crate::embedding::{EmbeddingStore, GlobalId};
+
+/// Adam hyperparameters (paper §6.1 uses Adam for both sparse and dense).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// Adam over the flat dense parameter vector.
+#[derive(Clone, Debug)]
+pub struct DenseAdam {
+    pub hp: AdamParams,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl DenseAdam {
+    pub fn new(n: usize, hp: AdamParams) -> Self {
+        DenseAdam {
+            hp,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// One update. `grads` are *sums*; `scale` converts them to the mean
+    /// (the weighted-averaging factor 1/total_samples from §5.1).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], scale: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.hp.beta1;
+        let b2 = self.hp.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr = self.hp.lr;
+        for i in 0..params.len() {
+            let g = grads[i] * scale;
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + self.hp.eps);
+        }
+    }
+
+    /// Serialize optimizer state (for checkpointing): m ++ v ++ t.
+    pub fn state_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.m.len() * 8 + 8);
+        for x in self.m.iter().chain(self.v.iter()) {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out
+    }
+
+    pub fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let n = self.m.len();
+        anyhow::ensure!(
+            bytes.len() == n * 8 + 8,
+            "dense adam state size mismatch: {} vs {}",
+            bytes.len(),
+            n * 8 + 8
+        );
+        for i in 0..n {
+            self.m[i] = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        for i in 0..n {
+            let off = (n + i) * 4;
+            self.v[i] = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        }
+        self.t = u64::from_le_bytes(bytes[n * 8..].try_into().unwrap());
+        Ok(())
+    }
+}
+
+/// Per-row Adam state for sparse embeddings.
+#[derive(Clone, Debug)]
+pub struct RowState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+/// Row-wise Adam for embedding rows; state materializes lazily on first
+/// update (only activated rows carry state — §5.2).
+#[derive(Clone, Debug)]
+pub struct SparseAdam {
+    pub hp: AdamParams,
+    pub dim: usize,
+    state: IdMap<RowState>,
+}
+
+impl SparseAdam {
+    pub fn new(dim: usize, hp: AdamParams) -> Self {
+        SparseAdam {
+            hp,
+            dim,
+            state: IdMap::default(),
+        }
+    }
+
+    pub fn tracked_rows(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Update the rows for `ids` in `table` with (sum) gradients `grads`
+    /// scaled by `scale`. Rows absent from the table (e.g. evicted
+    /// between forward and backward) are skipped.
+    pub fn step<S: EmbeddingStore>(
+        &mut self,
+        table: &mut S,
+        ids: &[GlobalId],
+        grads: &[f32],
+        scale: f32,
+    ) {
+        assert_eq!(grads.len(), ids.len() * self.dim);
+        let d = self.dim;
+        let b1 = self.hp.beta1;
+        let b2 = self.hp.beta2;
+        let lr = self.hp.lr;
+        let eps = self.hp.eps;
+        let mut delta = vec![0.0f32; d];
+        for (i, &id) in ids.iter().enumerate() {
+            let st = self.state.entry(id).or_insert_with(|| RowState {
+                m: vec![0.0; d],
+                v: vec![0.0; d],
+                t: 0,
+            });
+            st.t += 1;
+            let bc1 = 1.0 - b1.powi(st.t as i32);
+            let bc2 = 1.0 - b2.powi(st.t as i32);
+            for j in 0..d {
+                let g = grads[i * d + j] * scale;
+                st.m[j] = b1 * st.m[j] + (1.0 - b1) * g;
+                st.v[j] = b2 * st.v[j] + (1.0 - b2) * g * g;
+                let mhat = st.m[j] / bc1;
+                let vhat = st.v[j] / bc2;
+                delta[j] = -lr * mhat / (vhat.sqrt() + eps);
+            }
+            table.apply_delta(id, &delta);
+        }
+    }
+
+    /// Iterate over (id, state) for checkpointing.
+    pub fn iter_state(&self) -> impl Iterator<Item = (&GlobalId, &RowState)> {
+        self.state.iter()
+    }
+
+    /// Restore one row's state (checkpoint load).
+    pub fn restore_row(&mut self, id: GlobalId, st: RowState) {
+        assert_eq!(st.m.len(), self.dim);
+        assert_eq!(st.v.len(), self.dim);
+        self.state.insert(id, st);
+    }
+
+    /// Drop state for ids not owned anymore (resharding) or evicted.
+    pub fn retain(&mut self, keep: impl Fn(GlobalId) -> bool) {
+        self.state.retain(|id, _| keep(*id));
+    }
+
+    pub fn row_state(&self, id: GlobalId) -> Option<&RowState> {
+        self.state.get(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+
+    #[test]
+    fn dense_adam_minimizes_quadratic() {
+        // f(p) = ||p - target||²; Adam must converge.
+        let target = [3.0f32, -1.0, 0.5];
+        let mut p = vec![0.0f32; 3];
+        let mut opt = DenseAdam::new(3, AdamParams {
+            lr: 0.05,
+            ..Default::default()
+        });
+        for _ in 0..500 {
+            let grads: Vec<f32> = p.iter().zip(&target).map(|(x, t)| 2.0 * (x - t)).collect();
+            opt.step(&mut p, &grads, 1.0);
+        }
+        for (x, t) in p.iter().zip(&target) {
+            assert!((x - t).abs() < 0.05, "{x} vs {t}");
+        }
+        assert_eq!(opt.step_count(), 500);
+    }
+
+    #[test]
+    fn dense_adam_scale_equivalence() {
+        // step(g_sum, scale=1/n) == step(g_mean, 1.0).
+        let mut p1 = vec![1.0f32, 2.0];
+        let mut p2 = p1.clone();
+        let mut o1 = DenseAdam::new(2, AdamParams::default());
+        let mut o2 = DenseAdam::new(2, AdamParams::default());
+        o1.step(&mut p1, &[10.0, -6.0], 0.5);
+        o2.step(&mut p2, &[5.0, -3.0], 1.0);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn dense_state_roundtrip() {
+        let mut p = vec![0.3f32; 4];
+        let mut o1 = DenseAdam::new(4, AdamParams::default());
+        for i in 0..7 {
+            o1.step(&mut p, &[0.1 * i as f32; 4], 1.0);
+        }
+        let bytes = o1.state_bytes();
+        let mut o2 = DenseAdam::new(4, AdamParams::default());
+        o2.restore_state(&bytes).unwrap();
+        // Next step identical from both.
+        let mut pa = p.clone();
+        let mut pb = p.clone();
+        o1.step(&mut pa, &[0.5; 4], 1.0);
+        o2.step(&mut pb, &[0.5; 4], 1.0);
+        assert_eq!(pa, pb);
+        assert!(o2.restore_state(&bytes[1..]).is_err());
+    }
+
+    #[test]
+    fn sparse_adam_updates_only_activated_rows() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(2).with_capacity(64),
+        );
+        let mut buf = vec![0.0; 2];
+        t.lookup_or_insert(1, &mut buf);
+        let before1 = buf.clone();
+        t.lookup_or_insert(2, &mut buf);
+        let before2 = buf.clone();
+
+        let mut opt = SparseAdam::new(2, AdamParams::default());
+        opt.step(&mut t, &[1], &[1.0, -1.0], 1.0);
+        assert_eq!(opt.tracked_rows(), 1);
+
+        let mut after1 = vec![0.0; 2];
+        let mut after2 = vec![0.0; 2];
+        t.lookup(1, &mut after1);
+        t.lookup(2, &mut after2);
+        assert_ne!(after1, before1, "activated row updated");
+        assert_eq!(after2, before2, "untouched row unchanged");
+        // Adam first step moves by ≈ lr in -sign(g).
+        assert!(after1[0] < before1[0] && after1[1] > before1[1]);
+    }
+
+    #[test]
+    fn sparse_adam_per_row_time_steps() {
+        // Rows updated at different frequencies keep independent bias
+        // correction — verify via matching a dense Adam on one row.
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(3).with_capacity(64),
+        );
+        let mut init = vec![0.0; 3];
+        t.lookup_or_insert(7, &mut init);
+        let mut sparse = SparseAdam::new(3, AdamParams::default());
+
+        let mut dense_p = init.clone();
+        let mut dense = DenseAdam::new(3, AdamParams::default());
+        for step in 0..5 {
+            let g = vec![0.2 * (step + 1) as f32; 3];
+            sparse.step(&mut t, &[7], &g, 1.0);
+            dense.step(&mut dense_p, &g, 1.0);
+        }
+        let mut row = vec![0.0; 3];
+        t.lookup(7, &mut row);
+        for (a, b) in row.iter().zip(&dense_p) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_retain_drops_state() {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(1).with_capacity(64),
+        );
+        let mut buf = vec![0.0];
+        for id in 0..10 {
+            t.lookup_or_insert(id, &mut buf);
+        }
+        let mut opt = SparseAdam::new(1, AdamParams::default());
+        let flat: Vec<f32> = (0..10).map(|_| 1.0).collect();
+        let ids: Vec<u64> = (0..10).collect();
+        opt.step(&mut t, &ids, &flat, 1.0);
+        assert_eq!(opt.tracked_rows(), 10);
+        opt.retain(|id| id % 2 == 0);
+        assert_eq!(opt.tracked_rows(), 5);
+        assert!(opt.row_state(1).is_none());
+        assert!(opt.row_state(2).is_some());
+    }
+}

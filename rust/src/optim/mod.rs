@@ -1,0 +1,163 @@
+//! Optimizers and gradient accumulation (§3 "Backward Update", §5.2
+//! "Gradient Accumulation").
+//!
+//! - [`DenseAdam`] — Adam over the flat dense parameter vector (the L2
+//!   model's gradients come back from the PJRT train artifact; the
+//!   optimizer state lives in Rust, never in the compiled graph).
+//! - [`SparseAdam`] — row-wise Adam for embedding rows with lazily
+//!   materialized per-row state; only *activated* rows are updated
+//!   (§5.2: "we avoid full parameter updates for sparse embeddings,
+//!   instead selectively updating only activated parts").
+//! - [`DenseAccumulator`] / [`SparseAccumulator`] — gradient
+//!   accumulation across micro-batches; sparse accumulation is keyed by
+//!   embedding ID so duplicate activations across batches sum before a
+//!   single collective update.
+
+pub mod adam;
+
+pub use adam::{AdamParams, DenseAdam, SparseAdam};
+
+use crate::embedding::dedup::IdMap;
+use crate::embedding::GlobalId;
+
+/// Dense gradient accumulator (sums; caller divides by sample count via
+/// the weighted-averaging scale).
+#[derive(Clone, Debug)]
+pub struct DenseAccumulator {
+    grads: Vec<f32>,
+    /// Accumulated sample count (for weighted averaging).
+    pub samples: u64,
+    /// Micro-batches accumulated since the last take().
+    pub micro_batches: usize,
+}
+
+impl DenseAccumulator {
+    pub fn new(n: usize) -> Self {
+        DenseAccumulator {
+            grads: vec![0.0; n],
+            samples: 0,
+            micro_batches: 0,
+        }
+    }
+
+    pub fn add(&mut self, grads: &[f32], samples: u64) {
+        assert_eq!(grads.len(), self.grads.len());
+        for (a, g) in self.grads.iter_mut().zip(grads) {
+            *a += g;
+        }
+        self.samples += samples;
+        self.micro_batches += 1;
+    }
+
+    /// Drain the accumulated sums, resetting to zero.
+    pub fn take(&mut self) -> (Vec<f32>, u64) {
+        let samples = self.samples;
+        self.samples = 0;
+        self.micro_batches = 0;
+        let n = self.grads.len();
+        let grads = std::mem::replace(&mut self.grads, vec![0.0; n]);
+        (grads, samples)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.micro_batches == 0
+    }
+}
+
+/// Sparse (ID-keyed) gradient accumulator: "gradients from identical IDs
+/// across multiple batches are accumulated and then updated collectively"
+/// (§5.2).
+#[derive(Clone, Debug, Default)]
+pub struct SparseAccumulator {
+    pub dim: usize,
+    grads: IdMap<Vec<f32>>,
+    pub samples: u64,
+    pub micro_batches: usize,
+}
+
+impl SparseAccumulator {
+    pub fn new(dim: usize) -> Self {
+        SparseAccumulator {
+            dim,
+            grads: IdMap::default(),
+            samples: 0,
+            micro_batches: 0,
+        }
+    }
+
+    /// Add one micro-batch's aggregated (id, grad) pairs.
+    pub fn add(&mut self, ids: &[GlobalId], grads: &[f32], samples: u64) {
+        assert_eq!(grads.len(), ids.len() * self.dim);
+        for (i, &id) in ids.iter().enumerate() {
+            let g = &grads[i * self.dim..(i + 1) * self.dim];
+            match self.grads.get_mut(&id) {
+                Some(acc) => {
+                    for (a, x) in acc.iter_mut().zip(g) {
+                        *a += x;
+                    }
+                }
+                None => {
+                    self.grads.insert(id, g.to_vec());
+                }
+            }
+        }
+        self.samples += samples;
+        self.micro_batches += 1;
+    }
+
+    /// Drain as (ids, flat grads) in deterministic (sorted-id) order.
+    pub fn take(&mut self) -> (Vec<GlobalId>, Vec<f32>, u64) {
+        let mut ids: Vec<GlobalId> = self.grads.keys().copied().collect();
+        ids.sort_unstable();
+        let mut flat = Vec::with_capacity(ids.len() * self.dim);
+        for id in &ids {
+            flat.extend_from_slice(&self.grads[id]);
+        }
+        let samples = self.samples;
+        self.grads.clear();
+        self.samples = 0;
+        self.micro_batches = 0;
+        (ids, flat, samples)
+    }
+
+    pub fn unique_ids(&self) -> usize {
+        self.grads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.micro_batches == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_accumulates_and_resets() {
+        let mut acc = DenseAccumulator::new(3);
+        acc.add(&[1.0, 2.0, 3.0], 4);
+        acc.add(&[0.5, 0.5, 0.5], 2);
+        assert_eq!(acc.micro_batches, 2);
+        let (g, n) = acc.take();
+        assert_eq!(g, vec![1.5, 2.5, 3.5]);
+        assert_eq!(n, 6);
+        assert!(acc.is_empty());
+        let (g2, n2) = acc.take();
+        assert_eq!(g2, vec![0.0; 3]);
+        assert_eq!(n2, 0);
+    }
+
+    #[test]
+    fn sparse_merges_duplicate_ids_across_batches() {
+        let mut acc = SparseAccumulator::new(2);
+        acc.add(&[10, 20], &[1.0, 1.0, 2.0, 2.0], 3);
+        acc.add(&[20, 30], &[0.5, 0.5, 9.0, 9.0], 3);
+        assert_eq!(acc.unique_ids(), 3);
+        let (ids, flat, n) = acc.take();
+        assert_eq!(ids, vec![10, 20, 30]);
+        assert_eq!(flat, vec![1.0, 1.0, 2.5, 2.5, 9.0, 9.0]);
+        assert_eq!(n, 6);
+        assert!(acc.is_empty());
+    }
+}

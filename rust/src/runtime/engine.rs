@@ -1,0 +1,373 @@
+//! The PJRT execution engine.
+//!
+//! PJRT client/executable handles wrap raw pointers and are not `Send`,
+//! so a dedicated engine thread owns them all; worker threads submit
+//! requests through a channel and block on a reply channel. Executables
+//! are compiled lazily per (model, bucket, kind) and cached — matching a
+//! deployment where each model variant is compiled once per process.
+//!
+//! Host-side data travels as [`Tensor`] (shape + typed buffer); the
+//! engine converts to/from XLA literals at the boundary.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactKind, Manifest};
+
+/// A host tensor crossing the engine boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn first_f32(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Parsed outputs of one train-step execution (the artifact's 5-tuple).
+#[derive(Clone, Debug)]
+pub struct TrainOutputs {
+    /// Per-task loss sums over valid samples, length = tasks.
+    pub loss_sums: Vec<f32>,
+    /// Flat dense gradient (sum over valid samples), length = P.
+    pub grads: Vec<f32>,
+    /// Gradient w.r.t. the embedding input, (B, L, D) flattened.
+    pub emb_grad: Vec<f32>,
+    /// Logits (B, tasks) flattened.
+    pub logits: Vec<f32>,
+    /// Number of valid (non-padded) samples.
+    pub n_valid: f32,
+}
+
+struct Request {
+    model: String,
+    kind: ArtifactKind,
+    bucket: (usize, usize),
+    inputs: Vec<Tensor>,
+    reply: Sender<Result<Vec<Tensor>>>,
+}
+
+enum Msg {
+    Run(Request),
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Msg>,
+    manifest: Arc<Manifest>,
+    _join: Arc<JoinGuard>,
+}
+
+struct JoinGuard {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for JoinGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine {
+    /// Start the engine over an artifacts directory (must contain
+    /// `manifest.json`; see `make artifacts`).
+    pub fn start(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let (tx, rx) = channel::<Msg>();
+        let dir: PathBuf = dir.to_path_buf();
+        let mani2 = Arc::clone(&manifest);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                engine_main(dir, mani2, rx);
+            })
+            .context("spawn engine thread")?;
+        Ok(Engine {
+            tx: tx.clone(),
+            manifest,
+            _join: Arc::new(JoinGuard {
+                tx,
+                handle: Some(handle),
+            }),
+        })
+    }
+
+    /// Start over the default artifacts dir (`$MTGR_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn start_default() -> Result<Engine> {
+        Engine::start(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact; blocks until the result is ready. Thread-safe
+    /// (any worker may call concurrently; the engine serializes device
+    /// execution, as a single shared GPU would).
+    pub fn execute(
+        &self,
+        model: &str,
+        kind: ArtifactKind,
+        bucket: (usize, usize),
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Run(Request {
+                model: model.to_string(),
+                kind,
+                bucket,
+                inputs,
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    /// Execute a train step and parse the 5-tuple.
+    pub fn train_step(
+        &self,
+        model: &str,
+        bucket: (usize, usize),
+        params: &[f32],
+        emb: Tensor,
+        lengths: Vec<i32>,
+        labels: Vec<f32>,
+    ) -> Result<TrainOutputs> {
+        let (b, _l) = bucket;
+        let arts = self.manifest.model(model)?;
+        anyhow::ensure!(lengths.len() == b, "lengths arity");
+        anyhow::ensure!(labels.len() == b * arts.tasks, "labels arity");
+        let inputs = vec![
+            Tensor::f32(&[arts.param_count], params.to_vec()),
+            emb,
+            Tensor::i32(&[b], lengths),
+            Tensor::f32(&[b, arts.tasks], labels),
+        ];
+        let mut out = self.execute(model, ArtifactKind::Train, bucket, inputs)?;
+        anyhow::ensure!(out.len() == 5, "train artifact returns 5 outputs");
+        let n_valid = out.remove(4).first_f32()?;
+        let logits = out.remove(3).into_f32()?;
+        let emb_grad = out.remove(2).into_f32()?;
+        let grads = out.remove(1).into_f32()?;
+        let loss_sums = out.remove(0).into_f32()?;
+        Ok(TrainOutputs {
+            loss_sums,
+            grads,
+            emb_grad,
+            logits,
+            n_valid,
+        })
+    }
+
+    /// Execute inference forward; returns logits (B × tasks, flattened).
+    pub fn forward(
+        &self,
+        model: &str,
+        bucket: (usize, usize),
+        params: &[f32],
+        emb: Tensor,
+        lengths: Vec<i32>,
+    ) -> Result<Vec<f32>> {
+        let arts = self.manifest.model(model)?;
+        let inputs = vec![
+            Tensor::f32(&[arts.param_count], params.to_vec()),
+            emb,
+            Tensor::i32(&[lengths.len()], lengths),
+        ];
+        let mut out = self.execute(model, ArtifactKind::Forward, bucket, inputs)?;
+        anyhow::ensure!(out.len() == 1, "forward artifact returns 1 output");
+        out.remove(0).into_f32()
+    }
+}
+
+/// The engine thread: owns the PJRT client + executable cache.
+fn engine_main(dir: PathBuf, manifest: Arc<Manifest>, rx: std::sync::mpsc::Receiver<Msg>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the creation error.
+            while let Ok(Msg::Run(req)) = rx.recv() {
+                let _ = req.reply.send(Err(anyhow!("PJRT client failed: {e}")));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<(String, ArtifactKind, (usize, usize)), xla::PjRtLoadedExecutable> =
+        HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        let req = match msg {
+            Msg::Run(r) => r,
+            Msg::Shutdown => break,
+        };
+        let key = (req.model.clone(), req.kind, req.bucket);
+        let result = (|| -> Result<Vec<Tensor>> {
+            if !cache.contains_key(&key) {
+                let arts = manifest.model(&req.model)?;
+                let bucket = arts
+                    .buckets
+                    .iter()
+                    .find(|b| (b.batch, b.len) == req.bucket)
+                    .with_context(|| {
+                        format!("no bucket {:?} for model {}", req.bucket, req.model)
+                    })?;
+                let path = dir.join(bucket.artifact(req.kind));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path utf-8")?,
+                )
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+                cache.insert(key.clone(), exe);
+            }
+            let exe = cache.get(&key).unwrap();
+            let literals: Vec<xla::Literal> = req
+                .inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute: {e}"))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            // Artifacts are lowered with return_tuple=True.
+            let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+            parts.iter().map(Tensor::from_literal).collect()
+        })();
+        let _ = req.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_f32().is_ok());
+        let i = Tensor::i32(&[2], vec![1, 2]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_arity_mismatch_panics() {
+        let _ = Tensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    // The heavier end-to-end engine tests (compile + execute the tiny
+    // model, compare against python) live in
+    // rust/tests/integration_runtime.rs; this smoke test only runs when
+    // artifacts exist.
+    #[test]
+    fn engine_starts_and_reports_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::start(&dir).unwrap();
+        assert!(engine.manifest().models.contains_key("tiny"));
+        // Unknown bucket errors cleanly through the channel.
+        let err = engine
+            .execute("tiny", ArtifactKind::Train, (999, 999), vec![])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no bucket"));
+    }
+}

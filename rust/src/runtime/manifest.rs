@@ -1,0 +1,253 @@
+//! Parse `artifacts/manifest.json` and load parameter binaries.
+//!
+//! The manifest is produced by `python/compile/aot.py` and is the single
+//! source of truth the Rust side has about the L2 model: parameter
+//! count, embedding dim, task count, and the (batch, length) buckets
+//! with their HLO-text artifact file names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which artifact of a bucket to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `train_step`: (params, emb, lengths, labels) →
+    /// (loss_sums, grads, emb_grad, logits, n_valid).
+    Train,
+    /// inference `forward`: (params, emb, lengths) → (logits,).
+    Forward,
+}
+
+/// One compiled (batch, length) bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    pub batch: usize,
+    pub len: usize,
+    pub train: String,
+    pub forward: String,
+}
+
+impl Bucket {
+    pub fn artifact(&self, kind: ArtifactKind) -> &str {
+        match kind {
+            ArtifactKind::Train => &self.train,
+            ArtifactKind::Forward => &self.forward,
+        }
+    }
+
+    /// Padded token capacity of the bucket.
+    pub fn capacity(&self) -> usize {
+        self.batch * self.len
+    }
+}
+
+/// Everything the runtime knows about one model.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub emb_dim: usize,
+    pub heads: usize,
+    pub blocks: usize,
+    pub tasks: usize,
+    pub param_count: usize,
+    pub params_bin: String,
+    /// Sorted ascending by (batch, len).
+    pub buckets: Vec<Bucket>,
+}
+
+impl ModelArtifacts {
+    /// Smallest bucket that fits `batch` sequences with max length
+    /// `max_len`. Returns `None` when nothing fits (caller splits the
+    /// batch or uses the largest bucket with truncated batch count).
+    pub fn pick_bucket(&self, batch: usize, max_len: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.batch >= batch && b.len >= max_len)
+    }
+
+    /// The largest bucket (fallback / e2e default).
+    pub fn largest_bucket(&self) -> &Bucket {
+        self.buckets.last().expect("no buckets")
+    }
+
+    /// Load the initial dense parameter vector.
+    pub fn load_params(&self, dir: &Path) -> Result<Vec<f32>> {
+        let path = dir.join(&self.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if bytes.len() != self.param_count * 4 {
+            bail!(
+                "{}: expected {} f32 ({} bytes), got {} bytes",
+                path.display(),
+                self.param_count,
+                self.param_count * 4,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).context("parse manifest.json")?;
+        let mut models = BTreeMap::new();
+        let model_obj = v
+            .get("models")
+            .as_obj()
+            .context("manifest: `models` object missing")?;
+        for (name, m) in model_obj {
+            let mut buckets = Vec::new();
+            for b in m.expect_arr("buckets")? {
+                buckets.push(Bucket {
+                    batch: b.expect_usize("batch")?,
+                    len: b.expect_usize("len")?,
+                    train: b.expect_str("train")?.to_string(),
+                    forward: b.expect_str("forward")?.to_string(),
+                });
+            }
+            buckets.sort_by_key(|b| (b.batch, b.len));
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    name: name.clone(),
+                    emb_dim: m.expect_usize("emb_dim")?,
+                    heads: m.expect_usize("heads")?,
+                    blocks: m.expect_usize("blocks")?,
+                    tasks: m.expect_usize("tasks")?,
+                    param_count: m.expect_usize("param_count")?,
+                    params_bin: m.expect_str("params_bin")?.to_string(),
+                    buckets,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seed: v.get("seed").as_usize().unwrap_or(0) as u64,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model `{name}` not in manifest"))
+    }
+
+    /// Default artifacts directory: `$MTGR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MTGR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+          "version": 1, "seed": 5,
+          "models": {
+            "demo": {
+              "emb_dim": 8, "heads": 2, "blocks": 1, "experts": 2,
+              "top_k": 1, "expert_hidden": 8, "tasks": 2,
+              "param_count": 3, "params_bin": "demo_params.bin",
+              "train_outputs": ["loss_sums","grads","emb_grad","logits","n_valid"],
+              "buckets": [
+                {"batch": 8, "len": 64, "train": "t2", "forward": "f2"},
+                {"batch": 4, "len": 32, "train": "t1", "forward": "f1"}
+              ]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(
+            dir.join("demo_params.bin"),
+            [1.0f32, 2.0, 3.0]
+                .iter()
+                .flat_map(|f| f.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        )
+        .unwrap();
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mtgr_manifest_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn parses_and_sorts_buckets() {
+        let dir = tmp("parse");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 5);
+        let demo = m.model("demo").unwrap();
+        assert_eq!(demo.buckets.len(), 2);
+        assert_eq!(demo.buckets[0].batch, 4, "sorted ascending");
+        assert_eq!(demo.buckets[0].capacity(), 128);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let dir = tmp("pick");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let demo = m.model("demo").unwrap();
+        assert_eq!(demo.pick_bucket(3, 20).unwrap().batch, 4);
+        assert_eq!(demo.pick_bucket(4, 33).unwrap().batch, 8);
+        assert_eq!(demo.pick_bucket(5, 10).unwrap().batch, 8);
+        assert!(demo.pick_bucket(9, 10).is_none());
+        assert_eq!(demo.largest_bucket().batch, 8);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn loads_params_with_size_check() {
+        let dir = tmp("params");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let demo = m.model("demo").unwrap();
+        assert_eq!(demo.load_params(&dir).unwrap(), vec![1.0, 2.0, 3.0]);
+        // Corrupt size → error.
+        std::fs::write(dir.join("demo_params.bin"), [0u8; 7]).unwrap();
+        assert!(demo.load_params(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let dir = tmp("unknown");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! the Rust hot path.
+//!
+//! - [`manifest`] — parse `artifacts/manifest.json` (bucket list, param
+//!   counts, artifact file names) and load `*_params.bin`.
+//! - [`engine`] — the execution service. PJRT handles are not `Send`, so
+//!   a dedicated engine thread owns the `PjRtClient` and the compiled
+//!   executables (lazily compiled per (model, bucket, kind)); worker
+//!   threads submit [`engine::Tensor`] batches over a channel and block
+//!   on the reply. This mirrors a real deployment where device streams
+//!   are owned by a driver thread.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Tensor, TrainOutputs};
+pub use manifest::{ArtifactKind, Bucket, Manifest, ModelArtifacts};

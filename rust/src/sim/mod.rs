@@ -1,0 +1,576 @@
+//! Analytic multi-node scale simulator (DESIGN.md substitution #1).
+//!
+//! The paper's §6 experiments run on up to 16 nodes × 8 A100s. This
+//! simulator reproduces their *shape* on one host by combining:
+//!
+//! - the **real** batching machinery ([`crate::balance`]) fed with real
+//!   sampled sequence lengths (the long-tail workload), so per-device
+//!   token counts are faithful;
+//! - an analytic **Zipf dedup model** (expected-unique curves) for the
+//!   ID/embedding communication volumes under each [`DedupStrategy`];
+//! - the [`DeviceModel`] (A100 compute/lookup rates) and [`NetModel`]
+//!   (NVLink/IB) cost models;
+//! - per-table-backend lookup cost multipliers (dynamic hash vs MCH) and
+//!   memory footprints for Table 3.
+//!
+//! Each simulated step: every device draws/bins its batch, costs are
+//! computed per device, and the synchronous step time is the slowest
+//! device plus the dense all-reduce — the same gating the real trainer
+//! measures.
+
+use crate::balance::{Batcher, DynamicBatcher, FixedBatcher};
+use crate::collective::netmodel::NetModel;
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::data::generator::GeneratorConfig;
+use crate::data::schema::Sequence;
+use crate::embedding::dedup::DedupStrategy;
+use crate::metrics::DeviceModel;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Summary;
+
+/// Expected-unique curve for Zipf(α) draws over a vocabulary:
+/// `E[unique(n)] = Σ_k 1 − (1 − p_k)^n`, precomputed on a log-grid and
+/// interpolated (evaluating the exact sum per query would be O(vocab)).
+#[derive(Clone, Debug)]
+pub struct ZipfUniqueModel {
+    grid_n: Vec<f64>,
+    grid_u: Vec<f64>,
+    pub vocab: usize,
+}
+
+impl ZipfUniqueModel {
+    pub fn new(vocab: usize, alpha: f64) -> Self {
+        assert!(vocab > 0);
+        // Zipf pmf.
+        let mut p: Vec<f64> = (1..=vocab).map(|k| 1.0 / (k as f64).powf(alpha)).collect();
+        let z: f64 = p.iter().sum();
+        for x in p.iter_mut() {
+            *x /= z;
+        }
+        // Log-spaced n grid from 1 to 10^8.
+        let mut grid_n = Vec::new();
+        let mut n = 1.0f64;
+        while n <= 1.0e8 {
+            grid_n.push(n);
+            n *= 1.6;
+        }
+        let grid_u: Vec<f64> = grid_n
+            .iter()
+            .map(|&n| {
+                p.iter()
+                    .map(|&pk| {
+                        // 1-(1-p)^n via expm1 for numerical stability.
+                        -(n * (-pk).ln_1p()).exp_m1()
+                    })
+                    .sum()
+            })
+            .collect();
+        ZipfUniqueModel {
+            grid_n,
+            grid_u,
+            vocab,
+        }
+    }
+
+    /// Expected number of unique ids among `n` draws.
+    pub fn expected_unique(&self, n: f64) -> f64 {
+        if n <= 0.0 {
+            return 0.0;
+        }
+        if n <= self.grid_n[0] {
+            return n.min(self.grid_u[0]);
+        }
+        let last = self.grid_n.len() - 1;
+        if n >= self.grid_n[last] {
+            return self.grid_u[last];
+        }
+        let i = self.grid_n.partition_point(|&g| g < n) - 1;
+        let (n0, n1) = (self.grid_n[i], self.grid_n[i + 1]);
+        let (u0, u1) = (self.grid_u[i], self.grid_u[i + 1]);
+        // Log-linear interpolation.
+        let t = (n.ln() - n0.ln()) / (n1.ln() - n0.ln());
+        (u0.ln() * (1.0 - t) + u1.ln() * t).exp()
+    }
+}
+
+/// Embedding-table backend being simulated (Table 3 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableBackend {
+    /// MTGRBoost dynamic hash table (grouped parallel probing).
+    DynamicHash,
+    /// TorchRec Managed Collision Handling (binary search + sorted
+    /// inserts + full pre-allocation).
+    Mch,
+}
+
+impl TableBackend {
+    /// Relative per-lookup cost vs the dynamic hash table. MCH pays a
+    /// binary search (O(log n) dependent probes ≈ ~8× the cost of a
+    /// hashed probe at production table sizes) — this reproduces the
+    /// 1.47×–2.22× Table 3 gap at the measured lookup volumes.
+    fn lookup_cost_multiplier(&self, rows: usize) -> f64 {
+        match self {
+            TableBackend::DynamicHash => 1.0,
+            TableBackend::Mch => (rows.max(2) as f64).log2() / 3.0,
+        }
+    }
+}
+
+/// Simulation options for one configuration point.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub device: DeviceModel,
+    pub net: NetModel,
+    pub generator: GeneratorConfig,
+    pub steps: usize,
+    pub seed: u64,
+    // ---- feature toggles -------------------------------------------
+    pub sequence_balancing: bool,
+    pub dedup: DedupStrategy,
+    /// Merged lookup ops (true) vs one op per logical table (false);
+    /// per-op fixed launch overhead models the §4.2 fusion win.
+    pub table_merging: bool,
+    pub backend: TableBackend,
+    // ---- batching --------------------------------------------------
+    /// Per-device batch size when balancing is off.
+    pub fixed_batch: usize,
+    /// Target tokens per device when balancing is on.
+    pub target_tokens: usize,
+    // ---- sparse-side shape -----------------------------------------
+    /// Token features per token (schema F) and context features (C).
+    pub token_features: usize,
+    pub context_features: usize,
+    /// Rows resident per table shard (drives lookup cost / memory).
+    pub resident_rows: usize,
+}
+
+impl SimOptions {
+    pub fn new(model: ModelConfig, world: usize) -> Self {
+        let avg_len = 600usize;
+        let batch = 32usize;
+        SimOptions {
+            model,
+            cluster: ClusterConfig::new(world),
+            device: DeviceModel::default(),
+            net: NetModel::default(),
+            generator: GeneratorConfig::default(),
+            steps: 50,
+            seed: 2026,
+            sequence_balancing: true,
+            dedup: DedupStrategy::TwoStage,
+            table_merging: true,
+            backend: TableBackend::DynamicHash,
+            fixed_batch: batch,
+            target_tokens: avg_len * batch,
+            // Meituan-scale feature schema: industrial GRMs carry tens
+            // of sparse features per token and per user (the real-run
+            // schema uses 7 for CPU tractability; the simulator models
+            // the production fan-out that makes table merging and dedup
+            // matter as much as the paper reports).
+            token_features: 16,
+            context_features: 24,
+            resident_rows: 10_000_000,
+        }
+    }
+}
+
+/// Per-step, per-device cost breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStep {
+    pub sequences: usize,
+    pub tokens: usize,
+    pub compute_s: f64,
+    pub lookup_s: f64,
+    pub comm_s: f64,
+}
+
+/// One simulated step.
+#[derive(Clone, Debug)]
+pub struct SimStep {
+    pub devices: Vec<DeviceStep>,
+    /// max(compute+lookup+comm) + dense all-reduce.
+    pub step_s: f64,
+    pub allreduce_s: f64,
+}
+
+/// Aggregated results for one configuration point.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub steps: Vec<SimStep>,
+    pub samples: u64,
+    pub tokens: u64,
+    /// Simulated sequences/second (the paper's throughput metric).
+    pub throughput: f64,
+    pub tokens_per_sec: f64,
+    /// Mean fraction of the step the average device idles (Fig. 9).
+    pub idle_fraction: f64,
+    /// Per-GPU memory estimate (bytes) and utilization vs 80 GB.
+    pub memory_bytes: f64,
+    pub memory_utilization: f64,
+    /// Mean per-device token summary across steps (Fig. 15 boxes).
+    pub token_min_mean: f64,
+    pub token_max_mean: f64,
+}
+
+const A100_MEM: f64 = 80.0e9;
+
+/// Run the simulator for one configuration.
+pub fn simulate(opts: &SimOptions) -> SimResult {
+    let world = opts.cluster.world;
+    let mut rng = Xoshiro256::new(opts.seed);
+    // Per-device length streams (lengths only — ids are modeled
+    // analytically via the Zipf unique curves).
+    let mut batchers: Vec<Box<dyn Batcher>> = (0..world)
+        .map(|_| -> Box<dyn Batcher> {
+            if opts.sequence_balancing {
+                Box::new(DynamicBatcher::new(opts.target_tokens))
+            } else {
+                Box::new(FixedBatcher::new(opts.fixed_batch))
+            }
+        })
+        .collect();
+    let mut dev_rngs: Vec<Xoshiro256> = (0..world).map(|r| rng.fork(r as u64)).collect();
+
+    // Zipf dedup model over the item vocabulary (the dominant feature);
+    // secondary features have smaller vocabularies and dedup even
+    // harder, so using the item curve is conservative.
+    let zipf = ZipfUniqueModel::new(
+        (opts.generator.num_items as usize).min(200_000),
+        opts.generator.item_zipf,
+    );
+
+    let dim = opts.model.emb_dim * opts.model.dim_factor;
+    let f = opts.token_features;
+    let params_bytes = opts.model.dense_params() * 4;
+    let allreduce_s = opts.net.all_reduce_time(world, params_bytes);
+    // Lookup-op launch overhead: merged = 1 fused op, unmerged = one op
+    // per logical table (F + C tables). Each op costs a kernel launch +
+    // collective setup (~60 µs on GPU+NCCL) on each of the three
+    // exchange rounds (id a2a, emb a2a, grad a2a).
+    let ops = if opts.table_merging {
+        1
+    } else {
+        opts.token_features + opts.context_features
+    };
+    let op_overhead = 6.0e-5 * ops as f64 * 3.0;
+
+    let mut steps = Vec::with_capacity(opts.steps);
+    let mut total_samples = 0u64;
+    let mut total_tokens = 0u64;
+    let mut idle_acc = 0.0;
+    let mut tmin_acc = 0.0;
+    let mut tmax_acc = 0.0;
+
+    for _ in 0..opts.steps {
+        let mut devices = Vec::with_capacity(world);
+        for g in 0..world {
+            // Draw this device's batch of real lengths.
+            let batch = loop {
+                if let Some(b) = batchers[g].next_batch() {
+                    break b;
+                }
+                let chunk: Vec<Sequence> = (0..64)
+                    .map(|_| {
+                        let l = dev_rngs[g]
+                            .lognormal(opts.generator.len_mu, opts.generator.len_sigma)
+                            as usize;
+                        let l = l.clamp(opts.generator.min_len, opts.generator.max_len);
+                        synth_seq(l)
+                    })
+                    .collect();
+                batchers[g].push_chunk(chunk);
+            };
+            let tokens: usize = batch.tokens;
+            let seqs = batch.batch_size();
+            let flops: f64 = batch
+                .sequences
+                .iter()
+                .map(|s| opts.model.forward_flops(s.len()))
+                .sum();
+
+            // ---- sparse communication volumes (per device) -----------
+            let occurrences = (tokens * f + seqs * opts.context_features) as f64;
+            // Stage 1: per-destination dedup of n/W draws over the
+            // shard's sub-vocabulary.
+            let per_dest = occurrences / world as f64;
+            let sub_vocab_scale = 1.0 / world as f64;
+            let sent_per_dest = if opts.dedup.stage1() {
+                // Expected unique of per_dest draws over vocab/W ids —
+                // approximate by scaling the curve's argument.
+                zipf.expected_unique(per_dest / sub_vocab_scale) * sub_vocab_scale
+            } else {
+                per_dest
+            };
+            let rows_sent = sent_per_dest * world as f64; // total rows on the wire
+            // Stage 2: server-side unique across all sources.
+            let received_per_shard = rows_sent; // symmetric devices
+            let lookups = if opts.dedup.stage2() {
+                zipf.expected_unique(received_per_shard * world as f64 / world as f64)
+            } else {
+                received_per_shard
+            };
+
+            let id_bytes_pp = (sent_per_dest * 8.0) as usize;
+            let emb_bytes_pp = (sent_per_dest * dim as f64 * 4.0) as usize;
+            // Forward: ID all-to-all + embedding all-to-all. Backward
+            // (§3 "Backward Update"): gradient all-to-all of the same
+            // embedding volume back to the owning shards.
+            let comm_s = opts.net.all_to_all_uniform_time(world, id_bytes_pp.max(1))
+                + 2.0 * opts.net.all_to_all_uniform_time(world, emb_bytes_pp.max(1))
+                + op_overhead;
+
+            let mult = opts.backend.lookup_cost_multiplier(opts.resident_rows);
+            // Forward lookups + backward sparse update: the optimizer
+            // reads/writes row + Adam m/v (≈ 3× row traffic) for every
+            // unique id it owns.
+            let update_hbm =
+                lookups * dim as f64 * 4.0 * 3.0 * 2.0 / opts.device.hbm_bytes_per_sec;
+            let lookup_s = opts.device.lookup_time(
+                (lookups * mult * 2.0) as usize, // fwd probe + bwd locate
+                rows_sent as usize,
+                dim,
+            ) + update_hbm;
+            let compute_s = opts.device.compute_time(flops);
+
+            total_samples += seqs as u64;
+            total_tokens += tokens as u64;
+            devices.push(DeviceStep {
+                sequences: seqs,
+                tokens,
+                compute_s,
+                lookup_s,
+                comm_s,
+            });
+        }
+        let busy: Vec<f64> = devices
+            .iter()
+            .map(|d| d.compute_s + d.lookup_s + d.comm_s)
+            .collect();
+        let max_busy = busy.iter().cloned().fold(0.0, f64::max);
+        let mean_busy = busy.iter().sum::<f64>() / world as f64;
+        idle_acc += (max_busy - mean_busy) / max_busy.max(1e-12);
+        let toks: Vec<f64> = devices.iter().map(|d| d.tokens as f64).collect();
+        tmin_acc += toks.iter().cloned().fold(f64::INFINITY, f64::min);
+        tmax_acc += toks.iter().cloned().fold(0.0, f64::max);
+        steps.push(SimStep {
+            step_s: max_busy + allreduce_s,
+            allreduce_s,
+            devices,
+        });
+    }
+
+    let sim_total: f64 = steps.iter().map(|s| s.step_s).sum();
+    let n = opts.steps as f64;
+
+    // ---- memory model (Table 2 / Table 3) ----------------------------
+    // Activations ∝ peak tokens per device × d × blocks × ~40 bytes
+    // (fwd + bwd live tensors incl. 4d UQKV); embeddings + optimizer.
+    let peak_tokens = if opts.sequence_balancing {
+        // Dynamic batching caps tokens near the target.
+        opts.target_tokens as f64 * 1.05
+    } else {
+        // Fixed batching must survive the worst observed batch.
+        steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.tokens as f64))
+            .fold(0.0, f64::max)
+            * 1.15
+    };
+    let act_bytes =
+        peak_tokens * (opts.model.emb_dim * opts.model.hstu_blocks) as f64 * 40.0;
+    let table_bytes = match opts.backend {
+        // Dynamic: resident rows (values+meta+keys ≈ dim·4 + 32 B) ×3
+        // for Adam m/v.
+        TableBackend::DynamicHash => {
+            opts.resident_rows as f64 * (dim as f64 * 4.0 * 3.0 + 32.0)
+        }
+        // MCH pre-allocates remap capacity ×2 (paper: over-provisioned)
+        // plus the same optimizer state.
+        TableBackend::Mch => {
+            opts.resident_rows as f64 * 2.0 * (dim as f64 * 4.0)
+                + opts.resident_rows as f64 * (dim as f64 * 4.0 * 2.0 + 32.0)
+        }
+    };
+    let memory = act_bytes + table_bytes + params_bytes as f64 * 4.0;
+
+    SimResult {
+        samples: total_samples,
+        tokens: total_tokens,
+        throughput: total_samples as f64 / sim_total.max(1e-12),
+        tokens_per_sec: total_tokens as f64 / sim_total.max(1e-12),
+        idle_fraction: idle_acc / n,
+        memory_bytes: memory,
+        memory_utilization: (memory / A100_MEM).min(1.2),
+        token_min_mean: tmin_acc / n,
+        token_max_mean: tmax_acc / n,
+        steps,
+    }
+}
+
+/// Whether this configuration would OOM on an 80 GB A100 (Table 3's
+/// "OOM" cells).
+pub fn would_oom(r: &SimResult) -> bool {
+    r.memory_bytes > A100_MEM
+}
+
+fn synth_seq(len: usize) -> Sequence {
+    Sequence {
+        user_id: 0,
+        context: vec![0, 0, 0],
+        tokens: vec![vec![0, 0, 0, 0]; len],
+        labels: [0.0, 0.0],
+    }
+}
+
+/// Convenience: mean step time.
+pub fn mean_step_s(r: &SimResult) -> f64 {
+    let n = r.steps.len().max(1) as f64;
+    r.steps.iter().map(|s| s.step_s).sum::<f64>() / n
+}
+
+/// Token summaries across devices and steps (Fig. 15).
+pub fn token_summary(r: &SimResult) -> Summary {
+    let toks: Vec<f64> = r
+        .steps
+        .iter()
+        .flat_map(|s| s.devices.iter().map(|d| d.tokens as f64))
+        .collect();
+    Summary::of(&toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts(world: usize) -> SimOptions {
+        let mut o = SimOptions::new(ModelConfig::grm_4g(), world);
+        o.steps = 10;
+        o
+    }
+
+    #[test]
+    fn zipf_unique_monotone_and_bounded() {
+        let m = ZipfUniqueModel::new(10_000, 1.05);
+        let mut prev = 0.0;
+        for &n in &[1.0, 10.0, 100.0, 1e3, 1e4, 1e5, 1e6] {
+            let u = m.expected_unique(n);
+            assert!(u >= prev, "monotone");
+            assert!(u <= 10_000.0 + 1e-6, "bounded by vocab");
+            assert!(u <= n + 1e-6, "bounded by draws");
+            prev = u;
+        }
+        // Heavy skew → strong dedup at large n.
+        assert!(m.expected_unique(1e6) < 10_000.0 + 1e-6);
+        assert!(m.expected_unique(1e5) / 1e5 < 0.2, "dup ratio > 80%");
+    }
+
+    #[test]
+    fn zipf_unique_matches_sampling() {
+        // Cross-check the analytic curve against an empirical sample.
+        let vocab = 2000;
+        let alpha = 1.1;
+        let m = ZipfUniqueModel::new(vocab, alpha);
+        let z = crate::util::rng::Zipf::new(vocab, alpha);
+        let mut rng = Xoshiro256::new(3);
+        for &n in &[100usize, 1000, 10_000] {
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..n {
+                seen.insert(z.sample(&mut rng));
+            }
+            let got = m.expected_unique(n as f64);
+            let emp = seen.len() as f64;
+            let rel = (got - emp).abs() / emp;
+            assert!(rel < 0.15, "n={n}: analytic {got:.0} vs empirical {emp}");
+        }
+    }
+
+    #[test]
+    fn balancing_reduces_idle_fraction() {
+        let mut on = quick_opts(8);
+        on.sequence_balancing = true;
+        let mut off = quick_opts(8);
+        off.sequence_balancing = false;
+        let r_on = simulate(&on);
+        let r_off = simulate(&off);
+        assert!(
+            r_on.idle_fraction < r_off.idle_fraction,
+            "balanced idle {:.3} vs fixed {:.3}",
+            r_on.idle_fraction,
+            r_off.idle_fraction
+        );
+        assert!(r_on.throughput > r_off.throughput);
+    }
+
+    #[test]
+    fn dedup_improves_throughput_more_at_higher_dims() {
+        let gain = |dim_factor: usize| {
+            let model = ModelConfig::grm_4g().with_dim_factor(dim_factor);
+            let mut none = SimOptions::new(model.clone(), 16);
+            none.steps = 8;
+            none.dedup = DedupStrategy::None;
+            let mut two = none.clone();
+            two.dedup = DedupStrategy::TwoStage;
+            simulate(&two).throughput / simulate(&none).throughput
+        };
+        let g1 = gain(1);
+        let g64 = gain(64);
+        assert!(g1 > 1.0, "dedup must help at 1D: {g1:.2}");
+        assert!(
+            g64 > g1,
+            "dedup gain grows with dim factor: {g1:.2} vs {g64:.2}"
+        );
+    }
+
+    #[test]
+    fn scaling_is_sublinear_but_positive() {
+        let thr = |world: usize| {
+            let mut o = quick_opts(world);
+            o.steps = 6;
+            simulate(&o).throughput
+        };
+        let t8 = thr(8);
+        let t64 = thr(64);
+        let speedup = t64 / t8;
+        assert!(speedup > 3.0, "64 GPUs ≥ 3x of 8: {speedup:.2}");
+        assert!(speedup < 8.5, "but sublinear: {speedup:.2}");
+    }
+
+    #[test]
+    fn mch_slower_and_heavier_than_dynamic() {
+        let mut dynamic = quick_opts(8);
+        dynamic.backend = TableBackend::DynamicHash;
+        let mut mch = dynamic.clone();
+        mch.backend = TableBackend::Mch;
+        let rd = simulate(&dynamic);
+        let rm = simulate(&mch);
+        assert!(rd.throughput > rm.throughput, "hash beats binary search");
+        assert!(rm.memory_bytes > rd.memory_bytes, "MCH pre-allocates");
+    }
+
+    #[test]
+    fn merged_tables_cut_op_overhead() {
+        let mut merged = quick_opts(8);
+        merged.table_merging = true;
+        let mut unmerged = merged.clone();
+        unmerged.table_merging = false;
+        assert!(simulate(&merged).throughput > simulate(&unmerged).throughput);
+    }
+
+    #[test]
+    fn memory_utilization_higher_with_balancing_at_same_throughput_envelope() {
+        // Table 2's effect: fixed batching must be provisioned for the
+        // worst case, so its *peak* activation memory exceeds dynamic
+        // batching's at equal average load.
+        let mut on = quick_opts(8);
+        on.sequence_balancing = true;
+        let mut off = quick_opts(8);
+        off.sequence_balancing = false;
+        // Fixed batch sized to the same average token count.
+        off.fixed_batch = on.target_tokens / 600;
+        let r_on = simulate(&on);
+        let r_off = simulate(&off);
+        assert!(r_off.memory_bytes > r_on.memory_bytes);
+    }
+}

@@ -1,0 +1,235 @@
+//! Batch → embedding-input plumbing: flatten feature-ID occurrences for
+//! the sharded lookup, pool looked-up rows into the (B, L, d) embedding
+//! tensor the L2 model consumes, and scatter the model's embedding
+//! gradient back onto the contributing occurrences.
+//!
+//! Layout: for each sequence `b` (in batch order) the occurrence stream
+//! is `context ids (C)`, then `F token-feature ids` per token. Token
+//! embeddings are the SUM of their feature rows plus the pooled context
+//! embedding (context features influence every position); gradients
+//! mirror that sum exactly (each contributing occurrence receives the
+//! token's gradient; context occurrences receive the sequence-summed
+//! gradient).
+
+use crate::balance::Batch;
+use crate::data::schema::Schema;
+use crate::embedding::merge::MergePlan;
+use crate::embedding::GlobalId;
+
+/// Flattened occurrence ids + the layout needed to pool and scatter.
+#[derive(Clone, Debug)]
+pub struct BatchIds {
+    /// Occurrence-ordered global IDs (context-first per sequence).
+    pub ids: Vec<GlobalId>,
+    /// Per-sequence (context_offset, token_offset, len).
+    layout: Vec<(usize, usize, usize)>,
+    n_ctx: usize,
+    n_tok_feat: usize,
+}
+
+impl BatchIds {
+    /// Build the occurrence stream for a batch under the merge plan.
+    pub fn build(batch: &Batch, schema: &Schema, plan: &MergePlan) -> BatchIds {
+        let n_ctx = schema.num_context_features();
+        let n_tok = schema.num_token_features();
+        let total: usize = batch
+            .sequences
+            .iter()
+            .map(|s| n_ctx + s.len() * n_tok)
+            .sum();
+        let mut ids = Vec::with_capacity(total);
+        let mut layout = Vec::with_capacity(batch.sequences.len());
+        for seq in &batch.sequences {
+            let ctx_off = ids.len();
+            for (f, &id) in seq.context.iter().enumerate() {
+                let (_g, gid) = plan.global_id(&schema.context_features[f].name, id);
+                ids.push(gid);
+            }
+            let tok_off = ids.len();
+            for tok in &seq.tokens {
+                for (f, &id) in tok.iter().enumerate() {
+                    let (_g, gid) = plan.global_id(&schema.token_features[f].name, id);
+                    ids.push(gid);
+                }
+            }
+            layout.push((ctx_off, tok_off, seq.len()));
+        }
+        BatchIds {
+            ids,
+            layout,
+            n_ctx,
+            n_tok_feat: n_tok,
+        }
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.layout.len()
+    }
+
+    /// Pool looked-up rows (occurrence-ordered, `dim` wide) into the
+    /// padded (bucket_b, bucket_l, dim) embedding tensor. Sequences
+    /// beyond `bucket_l` tokens are *not* truncated by this function —
+    /// callers must have bucketized correctly (asserted).
+    pub fn pool(
+        &self,
+        rows: &[f32],
+        dim: usize,
+        bucket_b: usize,
+        bucket_l: usize,
+    ) -> Vec<f32> {
+        assert_eq!(rows.len(), self.ids.len() * dim);
+        assert!(self.layout.len() <= bucket_b, "batch exceeds bucket");
+        let mut emb = vec![0.0f32; bucket_b * bucket_l * dim];
+        for (b, &(ctx_off, tok_off, len)) in self.layout.iter().enumerate() {
+            assert!(len <= bucket_l, "sequence exceeds bucket length");
+            // Pooled context embedding.
+            let mut ctx = vec![0.0f32; dim];
+            for c in 0..self.n_ctx {
+                let r = &rows[(ctx_off + c) * dim..(ctx_off + c + 1) * dim];
+                for (a, x) in ctx.iter_mut().zip(r) {
+                    *a += x;
+                }
+            }
+            for t in 0..len {
+                let dst = (b * bucket_l + t) * dim;
+                let e = &mut emb[dst..dst + dim];
+                e.copy_from_slice(&ctx);
+                for f in 0..self.n_tok_feat {
+                    let occ = tok_off + t * self.n_tok_feat + f;
+                    let r = &rows[occ * dim..(occ + 1) * dim];
+                    for (a, x) in e.iter_mut().zip(r) {
+                        *a += x;
+                    }
+                }
+            }
+        }
+        emb
+    }
+
+    /// Scatter the model's embedding gradient (bucket_b, bucket_l, dim)
+    /// back to occurrence order (matching `ids`).
+    pub fn scatter_grad(
+        &self,
+        emb_grad: &[f32],
+        dim: usize,
+        bucket_b: usize,
+        bucket_l: usize,
+    ) -> Vec<f32> {
+        assert_eq!(emb_grad.len(), bucket_b * bucket_l * dim);
+        let mut out = vec![0.0f32; self.ids.len() * dim];
+        for (b, &(ctx_off, tok_off, len)) in self.layout.iter().enumerate() {
+            // Context occurrences accumulate the sequence-summed grad.
+            let mut ctx_g = vec![0.0f32; dim];
+            for t in 0..len {
+                let src = (b * bucket_l + t) * dim;
+                let g = &emb_grad[src..src + dim];
+                for (a, x) in ctx_g.iter_mut().zip(g) {
+                    *a += x;
+                }
+                for f in 0..self.n_tok_feat {
+                    let occ = tok_off + t * self.n_tok_feat + f;
+                    out[occ * dim..(occ + 1) * dim].copy_from_slice(g);
+                }
+            }
+            for c in 0..self.n_ctx {
+                out[(ctx_off + c) * dim..(ctx_off + c + 1) * dim]
+                    .copy_from_slice(&ctx_g);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Sequence;
+    use crate::embedding::merge::MergePlan;
+
+    fn setup() -> (Schema, MergePlan, Batch) {
+        let schema = Schema::meituan_like(4, 1);
+        let plan = MergePlan::build(&schema.all_features());
+        let seqs = vec![
+            Sequence {
+                user_id: 1,
+                context: vec![10, 20, 30],
+                tokens: vec![vec![1, 2, 3, 4], vec![5, 6, 7, 8]],
+                labels: [1.0, 0.0],
+            },
+            Sequence {
+                user_id: 2,
+                context: vec![11, 21, 31],
+                tokens: vec![vec![9, 10, 11, 12]],
+                labels: [0.0, 0.0],
+            },
+        ];
+        let tokens = seqs.iter().map(|s| s.len()).sum();
+        (
+            schema,
+            plan,
+            Batch {
+                sequences: seqs,
+                tokens,
+            },
+        )
+    }
+
+    #[test]
+    fn occurrence_count_and_order() {
+        let (schema, plan, batch) = setup();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        // 3 ctx + 2×4 tok for seq 0; 3 ctx + 1×4 for seq 1.
+        assert_eq!(bi.ids.len(), 3 + 8 + 3 + 4);
+        assert_eq!(bi.num_sequences(), 2);
+        // Same local id in different features maps to different globals.
+        let (_, item1) = plan.global_id("item_id", 1);
+        assert_eq!(bi.ids[3], item1);
+    }
+
+    #[test]
+    fn pool_sums_context_and_token_features() {
+        let (schema, plan, batch) = setup();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        let dim = 4;
+        // rows[i] = constant i+1 so pooled values are countable.
+        let rows: Vec<f32> = (0..bi.ids.len())
+            .flat_map(|i| vec![(i + 1) as f32; dim])
+            .collect();
+        let emb = bi.pool(&rows, dim, 3, 4);
+        assert_eq!(emb.len(), 3 * 4 * dim);
+        // Seq 0 token 0 = ctx rows (1+2+3) + token rows (4+5+6+7) = 28.
+        assert_eq!(emb[0], 28.0);
+        // Seq 0 token 1 = 6 + (8+9+10+11) = 44.
+        assert_eq!(emb[(0 * 4 + 1) * dim], 44.0);
+        // Padded positions zero.
+        assert_eq!(emb[(0 * 4 + 2) * dim], 0.0);
+        assert_eq!(emb[(2 * 4) * dim], 0.0); // padded sequence slot
+    }
+
+    #[test]
+    fn scatter_is_adjoint_of_pool() {
+        // <pool(rows), g> == <rows, scatter(g)> over random data.
+        let (schema, plan, batch) = setup();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        let dim = 4;
+        let mut rng = crate::util::rng::Xoshiro256::new(2);
+        let rows: Vec<f32> = (0..bi.ids.len() * dim)
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let g: Vec<f32> = (0..3 * 4 * dim).map(|_| rng.next_f32() - 0.5).collect();
+        let emb = bi.pool(&rows, dim, 3, 4);
+        let occ_g = bi.scatter_grad(&g, dim, 3, 4);
+        let lhs: f64 = emb.iter().zip(&g).map(|(a, b)| (*a * *b) as f64).sum();
+        let rhs: f64 = rows.iter().zip(&occ_g).map(|(a, b)| (*a * *b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds bucket")]
+    fn oversized_batch_rejected() {
+        let (schema, plan, batch) = setup();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        let rows = vec![0.0; bi.ids.len() * 4];
+        let _ = bi.pool(&rows, 4, 1, 4); // 2 sequences into bucket_b = 1
+    }
+}

@@ -1,0 +1,603 @@
+//! The distributed training coordinator (§3 workflow).
+//!
+//! [`Trainer`] spawns one worker thread per simulated GPU and runs the
+//! synchronous hybrid-parallel loop end to end, with every MTGRBoost
+//! feature toggleable for the §6 ablations:
+//!
+//! 1. **Data I/O** — per-worker seeded generator shard feeding the
+//!    batcher ([`crate::balance`]) through a prefetcher.
+//! 2. **Embedding lookup** — occurrence ids ([`features::BatchIds`])
+//!    through the model-parallel sharded exchange with two-stage dedup
+//!    ([`crate::embedding::sharded`]).
+//! 3. **Forward/Backward** — the AOT train artifact on the PJRT engine
+//!    (data parallelism: every worker holds a dense replica).
+//! 4. **Backward update** — sparse: gradient all-to-all onto the owning
+//!    shard + row-wise Adam; dense: batch-size all-gather, weighted
+//!    all-reduce (§5.1), Adam.
+//!
+//! Wall-clock phases are measured per worker; *simulated* device/step
+//! times are accounted via [`crate::metrics::DeviceModel`] +
+//! [`crate::collective::NetModel`] so single-host runs report the paper's
+//! multi-GPU quantities (who waits for whom, where time goes).
+
+pub mod features;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::balance::{Batch, Batcher, DynamicBatcher, FixedBatcher};
+use crate::collective::comm::{CommGroup, CommHandle};
+use crate::collective::netmodel::NetModel;
+use crate::config::{ClusterConfig, ModelConfig, TrainConfig};
+use crate::data::generator::{GeneratorConfig, WorkloadGenerator};
+use crate::data::schema::Schema;
+use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use crate::embedding::merge::MergePlan;
+use crate::embedding::sharded::ShardedEmbedding;
+use crate::embedding::dedup::DedupVolume;
+use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
+use crate::optim::adam::{AdamParams, DenseAdam, SparseAdam};
+use crate::optim::{DenseAccumulator, SparseAccumulator};
+use crate::runtime::{Engine, Tensor};
+use crate::util::timer::PhaseTimer;
+use features::BatchIds;
+
+/// Everything a training run needs.
+#[derive(Clone)]
+pub struct TrainerOptions {
+    pub model: String,
+    pub cluster: ClusterConfig,
+    pub train: TrainConfig,
+    pub generator: GeneratorConfig,
+    pub device: DeviceModel,
+    pub net: NetModel,
+    pub steps: usize,
+    /// Initial capacity of each worker's table shard.
+    pub shard_capacity: usize,
+    /// Collect GAUC during training (costs memory on long runs).
+    pub collect_gauc: bool,
+    /// Skip the first N steps when accumulating GAUC (predictions from
+    /// an untrained model only add noise to the running metric).
+    pub gauc_warmup: usize,
+    pub log_every: usize,
+}
+
+impl TrainerOptions {
+    pub fn new(model: &str, world: usize, steps: usize) -> Self {
+        TrainerOptions {
+            model: model.to_string(),
+            cluster: ClusterConfig::new(world),
+            train: TrainConfig::default(),
+            generator: GeneratorConfig::default(),
+            device: DeviceModel::default(),
+            net: NetModel::default(),
+            steps,
+            shard_capacity: 4096,
+            collect_gauc: true,
+            gauc_warmup: 0,
+            log_every: 0,
+        }
+    }
+}
+
+/// Per-step record (identical on every worker; rank 0's copy returned).
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Global mean losses.
+    pub loss_ctr: f64,
+    pub loss_ctcvr: f64,
+    pub samples: u64,
+    /// Real token count per worker (Fig. 9 / 15 raw data).
+    pub tokens: Vec<u64>,
+    /// Simulated per-worker compute+lookup seconds (Fig. 9 shading).
+    pub sim_device_s: Vec<f64>,
+    /// Simulated synchronous step seconds (max device + dense sync).
+    pub sim_step_s: f64,
+    pub wall_s: f64,
+}
+
+/// Aggregated outcome of a run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub steps: Vec<StepRecord>,
+    pub gauc_ctr: Option<f64>,
+    pub gauc_ctcvr: Option<f64>,
+    pub phases: PhaseTimer,
+    pub wall: Throughput,
+    /// Simulated throughput (samples/s at simulated step times).
+    pub sim_samples_per_sec: f64,
+    pub sim_tokens_per_sec: f64,
+    pub table_rows: usize,
+    pub table_memory_bytes: usize,
+    pub dedup_volume: DedupVolume,
+    pub truncated_sequences: u64,
+}
+
+impl TrainReport {
+    pub fn mean_sim_step(&self) -> f64 {
+        let n = self.steps.len().max(1) as f64;
+        self.steps.iter().map(|s| s.sim_step_s).sum::<f64>() / n
+    }
+
+    pub fn final_losses(&self) -> (f64, f64) {
+        let tail = self.steps.len().saturating_sub(5);
+        let w = &self.steps[tail..];
+        let n = w.len().max(1) as f64;
+        (
+            w.iter().map(|s| s.loss_ctr).sum::<f64>() / n,
+            w.iter().map(|s| s.loss_ctcvr).sum::<f64>() / n,
+        )
+    }
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub opts: TrainerOptions,
+    engine: Engine,
+    model_cfg: ModelConfig,
+}
+
+impl Trainer {
+    pub fn new(opts: TrainerOptions, engine: Engine) -> Result<Trainer> {
+        let model_cfg = ModelConfig::by_name(&opts.model)
+            .with_context(|| format!("unknown model preset `{}`", opts.model))?;
+        // Real execution requires the sparse dim to match the model dim.
+        anyhow::ensure!(
+            model_cfg.dim_factor == 1,
+            "real training runs require dim_factor == 1 (use sim mode)"
+        );
+        engine.manifest().model(&opts.model)?;
+        Ok(Trainer {
+            opts,
+            engine,
+            model_cfg,
+        })
+    }
+
+    /// Run the synchronous training loop; blocks until done.
+    pub fn run(&self) -> Result<TrainReport> {
+        let world = self.opts.cluster.world;
+        let handles = CommGroup::new(world);
+        let opts = Arc::new(self.opts.clone());
+        let cfg = Arc::new(self.model_cfg.clone());
+        let engine = self.engine.clone();
+
+        let mut joins = Vec::new();
+        for (rank, comm) in handles.into_iter().enumerate() {
+            let opts = Arc::clone(&opts);
+            let cfg = Arc::clone(&cfg);
+            let engine = engine.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{rank}"))
+                    .spawn(move || worker_main(rank, comm, opts, cfg, engine))
+                    .context("spawn worker")?,
+            );
+        }
+        let mut outputs = Vec::new();
+        for j in joins {
+            outputs.push(j.join().expect("worker panicked")?);
+        }
+        // Merge worker-local results; rank 0 carries the step records.
+        let mut gauc_ctr = GaucAccumulator::new();
+        let mut gauc_ctcvr = GaucAccumulator::new();
+        let mut phases = PhaseTimer::new();
+        let mut table_rows = 0;
+        let mut table_memory = 0;
+        let mut volume = DedupVolume::default();
+        let mut truncated = 0;
+        let mut steps = Vec::new();
+        let mut wall = Throughput::default();
+        for out in outputs {
+            gauc_ctr.merge(out.gauc_ctr);
+            gauc_ctcvr.merge(out.gauc_ctcvr);
+            phases.merge(&out.phases);
+            table_rows += out.table_rows;
+            table_memory += out.table_memory;
+            volume.ids_raw += out.volume.ids_raw;
+            volume.ids_sent += out.volume.ids_sent;
+            volume.emb_rows_raw += out.volume.emb_rows_raw;
+            volume.emb_rows_sent += out.volume.emb_rows_sent;
+            volume.lookups_raw += out.volume.lookups_raw;
+            volume.lookups_done += out.volume.lookups_done;
+            truncated += out.truncated;
+            if out.rank == 0 {
+                steps = out.steps;
+                wall = out.wall;
+            }
+        }
+        let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
+        let total_samples: u64 = steps.iter().map(|s| s.samples).sum();
+        let total_tokens: u64 = steps.iter().map(|s| s.tokens.iter().sum::<u64>()).sum();
+        Ok(TrainReport {
+            gauc_ctr: gauc_ctr.gauc(),
+            gauc_ctcvr: gauc_ctcvr.gauc(),
+            phases,
+            wall,
+            sim_samples_per_sec: total_samples as f64 / sim_total.max(1e-12),
+            sim_tokens_per_sec: total_tokens as f64 / sim_total.max(1e-12),
+            table_rows,
+            table_memory_bytes: table_memory,
+            dedup_volume: volume,
+            truncated_sequences: truncated,
+            steps,
+        })
+    }
+}
+
+/// Worker-local results returned to the coordinator.
+struct WorkerOutput {
+    rank: usize,
+    steps: Vec<StepRecord>,
+    gauc_ctr: GaucAccumulator,
+    gauc_ctcvr: GaucAccumulator,
+    phases: PhaseTimer,
+    wall: Throughput,
+    table_rows: usize,
+    table_memory: usize,
+    volume: DedupVolume,
+    truncated: u64,
+}
+
+/// One micro-batch prepared for the engine.
+struct Micro {
+    batch: Batch,
+    bucket: (usize, usize),
+}
+
+fn worker_main(
+    rank: usize,
+    mut comm: CommHandle,
+    opts: Arc<TrainerOptions>,
+    cfg: Arc<ModelConfig>,
+    engine: Engine,
+) -> Result<WorkerOutput> {
+    let world = comm.world;
+    let arts = engine.manifest().model(&opts.model)?.clone();
+    let dir = engine.manifest().dir.clone();
+    let d = arts.emb_dim;
+    let schema = Schema::meituan_like(d, 1);
+    let plan = MergePlan::build(&schema.all_features());
+
+    // Per-worker data shard: independent generator stream.
+    let mut gen_cfg = opts.generator.clone();
+    gen_cfg.seed = opts.generator.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9);
+    // Cap lengths at the largest bucket so nothing needs truncation.
+    let max_l = arts.largest_bucket().len;
+    gen_cfg.max_len = gen_cfg.max_len.min(max_l);
+    let mut gen = WorkloadGenerator::new(gen_cfg);
+
+    // Batcher per the ablation toggle.
+    let mut batcher: Box<dyn Batcher> = if opts.train.sequence_balancing {
+        Box::new(DynamicBatcher::new(opts.train.target_tokens))
+    } else {
+        Box::new(FixedBatcher::new(opts.train.fixed_batch))
+    };
+
+    // Sparse side: one merged shard table (table merging is reflected in
+    // lookup-op counts; physically we always store one table per merge
+    // group — here the schema is single-dim so one group).
+    let table = DynamicEmbeddingTable::new(
+        DynamicTableConfig::new(d)
+            .with_capacity(opts.shard_capacity)
+            .with_seed(engine.manifest().seed ^ 0xEB),
+    );
+    let mut sharded = ShardedEmbedding::new(table, opts.train.dedup);
+    let mut sparse_opt = SparseAdam::new(
+        d,
+        AdamParams {
+            lr: opts.train.lr,
+            beta1: opts.train.beta1,
+            beta2: opts.train.beta2,
+            eps: opts.train.eps,
+        },
+    );
+    let mut sparse_acc = SparseAccumulator::new(d);
+
+    // Dense replica + optimizer (identical init on every worker).
+    let mut params = arts.load_params(&dir)?;
+    let mut dense_opt = DenseAdam::new(
+        params.len(),
+        AdamParams {
+            lr: opts.train.lr,
+            beta1: opts.train.beta1,
+            beta2: opts.train.beta2,
+            eps: opts.train.eps,
+        },
+    );
+    let mut dense_acc = DenseAccumulator::new(params.len());
+
+    let mut phases = PhaseTimer::new();
+    let mut gauc_ctr = GaucAccumulator::new();
+    let mut gauc_ctcvr = GaucAccumulator::new();
+    let mut records = Vec::with_capacity(opts.steps);
+    let mut wall = Throughput::default();
+    let truncated = 0u64;
+    let mut vol_prev = DedupVolume::default();
+
+    for step in 0..opts.steps {
+        let step_t0 = std::time::Instant::now();
+
+        // ---- data ----------------------------------------------------
+        let batch = phases.time("1_data", || loop {
+            if let Some(b) = batcher.next_batch() {
+                break b;
+            }
+            batcher.push_chunk(gen.batch(&schema, 32));
+        });
+        let my_tokens = batch.tokens as u64;
+        let my_samples = batch.sequences.len() as u64;
+
+        // Simulated compute cost from REAL per-sequence lengths (the
+        // GPU's actual workload; padding is skipped by the fused
+        // kernel's masked tiles).
+        let my_flops: f64 = batch
+            .sequences
+            .iter()
+            .map(|s| cfg.forward_flops(s.len()))
+            .sum();
+
+        // ---- split into micro-batches ---------------------------------
+        let micros = split_micros(batch, &arts);
+        // Collective alignment: every worker runs the same number of
+        // micro rounds (empty rounds keep the all-to-alls matched).
+        let n_micro = comm.all_gather_u64(micros.len() as u64);
+        let rounds = *n_micro.iter().max().unwrap() as usize;
+
+        let mut step_loss = [0.0f64; 2];
+        for round in 0..rounds {
+            let micro = micros.get(round);
+
+            // ---- lookup (collective) ----------------------------------
+            let (ids, rows, bi, bucket) = phases.time("2_lookup", || {
+                let (bi, bucket) = match micro {
+                    Some(m) => (
+                        BatchIds::build(&m.batch, &schema, &plan),
+                        m.bucket,
+                    ),
+                    None => (
+                        BatchIds::build(
+                            &Batch {
+                                sequences: vec![],
+                                tokens: 0,
+                            },
+                            &schema,
+                            &plan,
+                        ),
+                        (0, 0),
+                    ),
+                };
+                let rows = sharded.lookup(&mut comm, &bi.ids, true);
+                (bi.ids.clone(), rows, bi, bucket)
+            });
+
+            // ---- forward + backward (local) ---------------------------
+            let occ_grads = if let Some(m) = micro {
+                let (bb, bl) = bucket;
+                let emb = bi.pool(&rows, d, bb, bl);
+                let mut lengths = vec![0i32; bb];
+                let mut labels = vec![0.0f32; bb * arts.tasks];
+                for (i, s) in m.batch.sequences.iter().enumerate() {
+                    lengths[i] = s.len() as i32;
+                    labels[i * arts.tasks] = s.labels[0];
+                    labels[i * arts.tasks + 1] = s.labels[1];
+                }
+                let out = phases.time("3_compute", || {
+                    engine.train_step(
+                        &opts.model,
+                        bucket,
+                        &params,
+                        Tensor::f32(&[bb, bl, d], emb),
+                        lengths,
+                        labels,
+                    )
+                })?;
+                step_loss[0] += out.loss_sums[0] as f64;
+                step_loss[1] += out.loss_sums[1] as f64;
+                dense_acc.add(&out.grads, out.n_valid as u64);
+                if opts.collect_gauc && step >= opts.gauc_warmup {
+                    for (i, s) in m.batch.sequences.iter().enumerate() {
+                        let z0 = out.logits[i * arts.tasks];
+                        let z1 = out.logits[i * arts.tasks + 1];
+                        gauc_ctr.add(s.user_id, z0, s.labels[0]);
+                        gauc_ctcvr.add(s.user_id, z1, s.labels[1]);
+                    }
+                }
+                bi.scatter_grad(&out.emb_grad, d, bb, bl)
+            } else {
+                Vec::new()
+            };
+
+            // ---- sparse backward (collective) + local accumulation ----
+            phases.time("4_sparse_update", || {
+                let (lids, lgrads) = sharded.backward(&mut comm, &ids, &occ_grads);
+                sparse_acc.add(&lids, &lgrads, 0);
+            });
+        }
+
+        // ---- weighted dense sync + updates (collective) ---------------
+        phases.time("5_dense_sync", || {
+            let sizes = comm.all_gather_u64(my_samples);
+            let total: u64 = sizes.iter().sum();
+            let scale = 1.0 / total.max(1) as f32;
+            let apply_now = (step + 1) % opts.train.grad_accum == 0;
+            if apply_now {
+                let (mut grads, _n) = dense_acc.take();
+                comm.all_reduce_sum(&mut grads);
+                dense_opt.step(&mut params, &grads, scale);
+                let (sids, sgrads, _) = sparse_acc.take();
+                sparse_opt.step(sharded.table_mut(), &sids, &sgrads, scale);
+            }
+        });
+
+        // ---- bookkeeping (collective gathers for the records) ---------
+        let tokens = comm.all_gather_u64(my_tokens);
+        let samples: u64 = comm.all_gather_u64(my_samples).iter().sum();
+        let mut losses = [step_loss[0] as f32, step_loss[1] as f32, my_samples as f32];
+        comm.all_reduce_sum(&mut losses);
+
+        // Simulated device time: compute + local lookup + exchange.
+        let dv = sharded.volume;
+        let lookups = dv.lookups_done - vol_prev.lookups_done;
+        let rows_moved = dv.emb_rows_sent - vol_prev.emb_rows_sent;
+        vol_prev = dv;
+        let t_compute = opts.device.compute_time(my_flops);
+        let t_lookup = opts.device.lookup_time(lookups, rows_moved, d);
+        let bytes_per_pair = (rows_moved * d * 4) / world.max(1).pow(2).max(1);
+        let t_comm = opts.net.all_to_all_uniform_time(world, bytes_per_pair.max(1)) * 2.0;
+        let my_sim = t_compute + t_lookup + t_comm;
+        let sim_all: Vec<f64> = comm
+            .all_gather(crate::collective::comm::Message::Floats(vec![my_sim as f32]))
+            .into_iter()
+            .map(|m| m.into_floats()[0] as f64)
+            .collect();
+        let sim_step = sim_all.iter().cloned().fold(0.0, f64::max)
+            + opts.net.all_reduce_time(world, params.len() * 4);
+
+        let wall_s = step_t0.elapsed().as_secs_f64();
+        wall.add(samples, tokens.iter().sum(), wall_s);
+        records.push(StepRecord {
+            step,
+            // losses[0/1] are global loss sums; losses[2] is the global
+            // sample count — the ratio is the global per-sample mean.
+            loss_ctr: losses[0] as f64 / losses[2].max(1.0) as f64,
+            loss_ctcvr: losses[1] as f64 / losses[2].max(1.0) as f64,
+            samples,
+            tokens,
+            sim_device_s: sim_all,
+            sim_step_s: sim_step,
+            wall_s,
+        });
+        if rank == 0 && opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            let r = records.last().unwrap();
+            eprintln!(
+                "step {:>5}  loss_ctr {:.4}  loss_ctcvr {:.4}  samples {}  sim_step {:.2} ms",
+                step + 1,
+                r.loss_ctr,
+                r.loss_ctcvr,
+                r.samples,
+                r.sim_step_s * 1e3
+            );
+        }
+    }
+
+    Ok(WorkerOutput {
+        rank,
+        steps: records,
+        gauc_ctr,
+        gauc_ctcvr,
+        phases,
+        wall,
+        table_rows: {
+            use crate::embedding::EmbeddingStore;
+            sharded.table().len()
+        },
+        table_memory: {
+            use crate::embedding::EmbeddingStore;
+            sharded.table().memory_bytes()
+        },
+        volume: sharded.volume,
+        truncated,
+    })
+}
+
+/// Split a balanced batch into engine micro-batches, choosing for each
+/// the smallest compiled bucket that fits.
+fn split_micros(batch: Batch, arts: &crate::runtime::ModelArtifacts) -> Vec<Micro> {
+    let max_b = arts.largest_bucket().batch;
+    let mut out = Vec::new();
+    let mut seqs = batch.sequences;
+    while !seqs.is_empty() {
+        let take = seqs.len().min(max_b);
+        let chunk: Vec<_> = seqs.drain(..take).collect();
+        let max_len = chunk.iter().map(|s| s.len()).max().unwrap_or(0);
+        let bucket = arts
+            .pick_bucket(chunk.len(), max_len)
+            .unwrap_or_else(|| arts.largest_bucket());
+        let tokens = chunk.iter().map(|s| s.len()).sum();
+        out.push(Micro {
+            batch: Batch {
+                sequences: chunk,
+                tokens,
+            },
+            bucket: (bucket.batch, bucket.len),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Bucket, ModelArtifacts};
+
+    fn fake_arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "t".into(),
+            emb_dim: 8,
+            heads: 2,
+            blocks: 1,
+            tasks: 2,
+            param_count: 10,
+            params_bin: "x".into(),
+            buckets: vec![
+                Bucket {
+                    batch: 4,
+                    len: 32,
+                    train: "a".into(),
+                    forward: "b".into(),
+                },
+                Bucket {
+                    batch: 8,
+                    len: 64,
+                    train: "c".into(),
+                    forward: "d".into(),
+                },
+            ],
+        }
+    }
+
+    fn seqs_of_lens(lens: &[usize]) -> Batch {
+        let sequences: Vec<_> = lens
+            .iter()
+            .map(|&l| crate::data::schema::Sequence {
+                user_id: l as u64,
+                context: vec![0, 0, 0],
+                tokens: vec![vec![0, 0, 0, 0]; l],
+                labels: [0.0, 0.0],
+            })
+            .collect();
+        Batch {
+            tokens: lens.iter().sum(),
+            sequences,
+        }
+    }
+
+    #[test]
+    fn split_micros_respects_buckets() {
+        let arts = fake_arts();
+        // 10 sequences of length ≤ 32 → micro of 8 + micro of 2.
+        let micros = split_micros(seqs_of_lens(&[10; 10]), &arts);
+        assert_eq!(micros.len(), 2);
+        assert_eq!(micros[0].batch.sequences.len(), 8);
+        assert_eq!(micros[0].bucket, (8, 64));
+        assert_eq!(micros[1].batch.sequences.len(), 2);
+        assert_eq!(micros[1].bucket, (4, 32), "small tail fits small bucket");
+    }
+
+    #[test]
+    fn split_micros_length_drives_bucket() {
+        let arts = fake_arts();
+        let micros = split_micros(seqs_of_lens(&[40, 5]), &arts);
+        assert_eq!(micros.len(), 1);
+        assert_eq!(micros[0].bucket, (8, 64), "long sequence needs big bucket");
+    }
+
+    #[test]
+    fn split_micros_empty() {
+        let arts = fake_arts();
+        assert!(split_micros(seqs_of_lens(&[]), &arts).is_empty());
+    }
+}

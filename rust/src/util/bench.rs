@@ -1,0 +1,247 @@
+//! Micro-benchmark harness (the offline registry has no `criterion`).
+//!
+//! Cargo benches in `rust/benches/` are built with `harness = false` and
+//! drive this module directly. It provides:
+//! - [`bench_fn`]: warmup + timed iterations with mean/p50/p99 reporting,
+//! - [`Table`]: aligned text tables matching the paper's table/figure rows,
+//! - [`BenchReport`]: JSON output (one file per experiment) so
+//!   EXPERIMENTS.md numbers are regenerable and diffable.
+
+use std::time::Instant;
+
+use super::json::Json;
+use super::stats::Summary;
+
+/// Result of a micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall-clock seconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.summary.mean * 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_ns", (self.summary.mean * 1e9).into()),
+            ("p50_ns", (self.summary.p50 * 1e9).into()),
+            ("p99_ns", (self.summary.p99 * 1e9).into()),
+            ("min_ns", (self.summary.min * 1e9).into()),
+            ("max_ns", (self.summary.max * 1e9).into()),
+        ])
+    }
+}
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+///
+/// `f` receives the iteration index; use `std::hint::black_box` inside to
+/// defeat dead-code elimination.
+pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut(usize)) -> BenchResult {
+    assert!(iters > 0);
+    for i in 0..warmup {
+        f(i);
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        f(i);
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        summary: Summary::of(&samples),
+    };
+    eprintln!(
+        "  bench {:<40} {:>12.1} ns/iter (p50 {:.1}, p99 {:.1}, n={})",
+        r.name,
+        r.ns_per_iter(),
+        r.summary.p50 * 1e9,
+        r.summary.p99 * 1e9,
+        iters
+    );
+    r
+}
+
+/// Aligned text table for printing paper-style result rows.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("title", self.title.as_str().into()),
+            (
+                "header",
+                Json::Arr(self.header.iter().map(|h| h.as_str().into()).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| c.as_str().into()).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A bench report: tables + free-form metrics, dumped as JSON under
+/// `bench_results/` and printed to stdout.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    pub experiment: String,
+    pub tables: Vec<Table>,
+    pub metrics: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new(experiment: &str) -> Self {
+        BenchReport {
+            experiment: experiment.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_table(&mut self, t: Table) {
+        println!("{}", t.render());
+        self.tables.push(t);
+    }
+
+    pub fn add_metric(&mut self, key: &str, value: Json) {
+        println!("metric {key} = {value}");
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Write `bench_results/<experiment>.json` (creating the directory).
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let mut obj = Json::obj();
+        obj.set("experiment", self.experiment.as_str().into());
+        obj.set(
+            "tables",
+            Json::Arr(self.tables.iter().map(|t| t.to_json()).collect()),
+        );
+        let mut metrics = Json::obj();
+        for (k, v) in &self.metrics {
+            metrics.set(k, v.clone());
+        }
+        obj.set("metrics", metrics);
+        let path = dir.join(format!("{}.json", self.experiment));
+        std::fs::write(&path, obj.pretty())?;
+        println!("saved {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Format a throughput-style ratio as the paper does ("1.75x").
+pub fn ratio(new: f64, base: f64) -> String {
+    format!("{:.2}x", new / base)
+}
+
+/// Format a percent gain ("+26.5%").
+pub fn pct_gain(new: f64, base: f64) -> String {
+    format!("{:+.1}%", 100.0 * (new - base) / base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench_fn("noop", 2, 10, |_| {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, 12); // warmup + iters
+        assert_eq!(r.iters, 10);
+        assert!(r.summary.mean >= 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("iters").as_usize(), Some(10));
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("demo", &["config", "thpt", "gain"]);
+        t.row(&["4G-1D".into(), "579649".into(), "1.60x".into()]);
+        t.row(&["110G-64D".into(), "38575".into(), "2.44x".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("579649"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(ratio(240.0, 100.0), "2.40x");
+        assert_eq!(pct_gain(126.5, 100.0), "+26.5%");
+        assert_eq!(pct_gain(90.0, 100.0), "-10.0%");
+    }
+}

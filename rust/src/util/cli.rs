@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports `program <subcommand> --key value --flag positional...`.
+//! Unknown keys are rejected when validated against a declared spec.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, bare `--flag`
+/// switches and positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` lists the `--x` switches that take no value; everything
+    /// else starting with `--` is treated as `--key value`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if known_flags.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else if let Some(v) = it.next() {
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    // Trailing --key with no value: treat as flag.
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positional() {
+        let a = Args::parse(
+            sv(&[
+                "train", "--steps", "100", "--verbose", "--lr", "0.001", "fileA",
+            ]),
+            &["verbose"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!((a.get_f64("lr", 0.0) - 0.001).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, sv(&["fileA"]));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = Args::parse(sv(&["sim"]), &[]);
+        assert_eq!(a.get_usize("gpus", 8), 8);
+        assert_eq!(a.get_or("mode", "full"), "full");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_key_becomes_flag() {
+        let a = Args::parse(sv(&["x", "--dangling"]), &[]);
+        assert!(a.has_flag("dangling"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = Args::parse(sv(&["t", "--steps", "abc"]), &[]);
+        a.get_usize("steps", 0);
+    }
+}

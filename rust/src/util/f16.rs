@@ -1,0 +1,186 @@
+//! Software IEEE-754 binary16 ("half") conversion.
+//!
+//! Mixed-precision training (§5.2) stores *cold* embedding rows in FP16 to
+//! halve their memory footprint and communication volume while *hot* rows
+//! stay FP32. The CPU PJRT backend computes in f32, so we reproduce the
+//! paper's mixed precision at the storage/communication layer: rows
+//! round-trip through these conversions, which applies exactly the
+//! quantization the paper's FP16 storage applies.
+
+/// Convert f32 → f16 bits with round-to-nearest-even, handling subnormals,
+/// infinities and NaN.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN: keep a mantissa bit for NaN.
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+
+    // Re-bias exponent: f32 bias 127 → f16 bias 15.
+    let unbiased = exp - 127;
+    let half_exp = unbiased + 15;
+
+    if half_exp >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if half_exp <= 0 {
+        // Subnormal or underflow to zero.
+        if half_exp < -10 {
+            return sign;
+        }
+        // Add the implicit leading 1, then shift into subnormal position.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - half_exp) as u32;
+        let half_mant = m >> shift;
+        // Round to nearest even.
+        let round_bit = 1u32 << (shift - 1);
+        if (m & round_bit) != 0 && ((m & (round_bit - 1)) != 0 || (half_mant & 1) != 0) {
+            return sign | (half_mant as u16 + 1);
+        }
+        return sign | half_mant as u16;
+    }
+
+    let half_mant = (mant >> 13) as u16;
+    let result = sign | ((half_exp as u16) << 10) | half_mant;
+    // Round to nearest even on the 13 dropped bits.
+    let round_bit = 0x0000_1000u32;
+    if (mant & round_bit) != 0 && ((mant & (round_bit - 1)) != 0 || (half_mant & 1) != 0) {
+        return result + 1; // carries propagate correctly into exponent
+    }
+    result
+}
+
+/// Convert f16 bits → f32 exactly.
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = mant × 2⁻²⁴. Normalize so the leading 1
+            // lands on bit 10, giving biased f32 exponent 113 − shift.
+            let shift = mant.leading_zeros() - 21;
+            let m = ((mant << shift) & 0x03ff) << 13;
+            let e = 113 - shift;
+            sign | (e << 23) | m
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize an f32 through f16 and back (the "stored as FP16" effect).
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Quantize a slice in place.
+pub fn quantize_f16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize_f16(*x);
+    }
+}
+
+/// Pack a slice of f32 into f16 bit patterns (storage / wire format).
+pub fn pack_f16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16_bits(x)).collect()
+}
+
+/// Unpack f16 bit patterns into f32.
+pub fn unpack_f16(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| f16_bits_to_f32(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        // Values exactly representable in f16 must round-trip bit-exactly.
+        for &v in &[
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099975586,
+            6.103515625e-5, // smallest normal
+            5.9604645e-8,   // smallest subnormal
+        ] {
+            assert_eq!(quantize_f16(v), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(quantize_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_f16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(quantize_f16(f32::NAN).is_nan());
+        // Overflow saturates to inf.
+        assert_eq!(quantize_f16(1.0e6), f32::INFINITY);
+        // Deep underflow flushes to zero with sign.
+        assert_eq!(quantize_f16(1.0e-10), 0.0);
+        assert_eq!(quantize_f16(-1.0e-10).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        // f16 has 11 significand bits → rel err ≤ 2^-11.
+        let mut rng = crate::util::rng::Xoshiro256::new(2024);
+        for _ in 0..10_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // must round to even mantissa → 1.0.
+        let x = 1.0 + 2.0_f32.powi(-11);
+        assert_eq!(quantize_f16(x), 1.0);
+        // 1 + 3·2^-11 is between (1+2^-10) and (1+2^-9): rounds up to even.
+        let x = 1.0 + 3.0 * 2.0_f32.powi(-11);
+        assert_eq!(quantize_f16(x), 1.0 + 2.0_f32.powi(-9));
+    }
+
+    #[test]
+    fn pack_unpack_slice() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let packed = pack_f16(&xs);
+        assert_eq!(packed.len(), xs.len());
+        let back = unpack_f16(&packed);
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert_eq!(quantize_f16(*a), *b);
+        }
+    }
+
+    #[test]
+    fn matches_all_f16_bit_patterns() {
+        // Exhaustive: every finite f16 bit pattern must survive
+        // f16→f32→f16 exactly.
+        for h in 0..=0xffffu16 {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "pattern {h:#06x} -> {f}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained substrates that the offline crate registry cannot
+//! provide: seeded RNG (`rand` replacement), JSON (`serde_json`
+//! replacement), software half floats (`half` replacement), statistics
+//! helpers, timers, a micro-benchmark harness (`criterion` replacement)
+//! and a CLI argument parser (`clap` replacement).
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

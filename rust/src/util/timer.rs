@@ -1,0 +1,176 @@
+//! Wall-clock timers and per-phase time decomposition.
+//!
+//! The paper's Figure 12 decomposes each training step into *lookup*,
+//! *forward* and *backward* phases; [`PhaseTimer`] accumulates wall-clock
+//! time per named phase so the trainer can report that decomposition.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use super::stats::Welford;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates wall-clock time per named phase, with per-phase Welford
+/// statistics over "laps" (training steps).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: BTreeMap<String, Welford>,
+    totals: BTreeMap<String, f64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and attribute it to `phase` (seconds).
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record an externally measured duration (seconds) for `phase`.
+    pub fn record(&mut self, phase: &str, seconds: f64) {
+        self.phases
+            .entry(phase.to_string())
+            .or_insert_with(Welford::new)
+            .add(seconds);
+        *self.totals.entry(phase.to_string()).or_insert(0.0) += seconds;
+    }
+
+    /// Total accumulated seconds for `phase` (0.0 if never recorded).
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    /// Mean seconds per recorded lap for `phase`.
+    pub fn mean(&self, phase: &str) -> f64 {
+        self.phases.get(phase).map(|w| w.mean()).unwrap_or(0.0)
+    }
+
+    pub fn stats(&self, phase: &str) -> Option<&Welford> {
+        self.phases.get(phase)
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Merge another timer's accumulation into this one (for cross-worker
+    /// aggregation).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, w) in &other.phases {
+            self.phases
+                .entry(k.clone())
+                .or_insert_with(Welford::new)
+                .merge(w);
+        }
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    /// Human-readable decomposition table (sorted by total time desc).
+    pub fn report(&self) -> String {
+        let mut rows: Vec<(&str, f64)> = self.phases().collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let grand: f64 = rows.iter().map(|r| r.1).sum();
+        let mut out = String::from(format!(
+            "{:<24} {:>12} {:>10} {:>8}\n",
+            "phase", "total(s)", "mean(ms)", "share"
+        ));
+        for (name, total) in rows {
+            out.push_str(&format!(
+                "{:<24} {:>12.4} {:>10.3} {:>7.1}%\n",
+                name,
+                total,
+                self.mean(name) * 1e3,
+                100.0 * total / grand.max(1e-12),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn phase_accumulation() {
+        let mut pt = PhaseTimer::new();
+        pt.record("lookup", 0.5);
+        pt.record("lookup", 1.5);
+        pt.record("forward", 1.0);
+        assert!((pt.total("lookup") - 2.0).abs() < 1e-12);
+        assert!((pt.mean("lookup") - 1.0).abs() < 1e-12);
+        assert_eq!(pt.total("missing"), 0.0);
+        let report = pt.report();
+        assert!(report.contains("lookup"));
+        assert!(report.contains("forward"));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(pt.total("work") >= 0.0);
+        assert_eq!(pt.stats("work").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.record("x", 1.0);
+        b.record("x", 3.0);
+        b.record("y", 2.0);
+        a.merge(&b);
+        assert!((a.total("x") - 4.0).abs() < 1e-12);
+        assert!((a.total("y") - 2.0).abs() < 1e-12);
+        assert_eq!(a.stats("x").unwrap().count(), 2);
+    }
+}

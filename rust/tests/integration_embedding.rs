@@ -1,0 +1,182 @@
+//! Integration: the sparse-embedding subsystem composed end to end —
+//! schema → merge plan → sharded dynamic tables → dedup → gradients —
+//! without the PJRT runtime (pure L3).
+
+use std::sync::Arc;
+use std::thread;
+
+use mtgrboost::collective::comm::{CommGroup, CommHandle};
+use mtgrboost::data::generator::{GeneratorConfig, WorkloadGenerator};
+use mtgrboost::data::schema::Schema;
+use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use mtgrboost::embedding::merge::{HashTableCollection, MergePlan};
+use mtgrboost::embedding::sharded::ShardedEmbedding;
+use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::optim::adam::{AdamParams, SparseAdam};
+use mtgrboost::util::rng::Xoshiro256;
+
+const DIM: usize = 8;
+
+fn run_world<T: Send + 'static>(
+    world: usize,
+    f: impl Fn(usize, &mut CommHandle) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let f = Arc::new(f);
+    CommGroup::new(world)
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut h)| {
+            let f = Arc::clone(&f);
+            thread::spawn(move || f(rank, &mut h))
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|j| j.join().unwrap())
+        .collect()
+}
+
+#[test]
+fn workload_through_merged_tables() {
+    // Generate real sequences, route every feature through the merge
+    // plan into a HashTableCollection, and check row accounting.
+    let schema = Schema::meituan_like(DIM, 1);
+    let mut coll = HashTableCollection::new(
+        &schema.all_features(),
+        &DynamicTableConfig::new(DIM).with_capacity(1024),
+    );
+    // 7 logical tables merged into 1 lookup op (all share dim).
+    assert_eq!(coll.plan.ops_before, 7);
+    assert_eq!(coll.num_lookup_ops(), 1);
+
+    let mut gen = WorkloadGenerator::new(GeneratorConfig {
+        len_mu: 3.0,
+        ..Default::default()
+    });
+    let mut buf = vec![0.0f32; DIM];
+    let mut occurrences = 0usize;
+    for _ in 0..50 {
+        let seq = gen.next_sequence(&schema);
+        for (fi, id) in seq.flat_ids(&schema) {
+            let name = &schema.all_features()[fi].name.clone();
+            coll.lookup_or_insert(name, id, &mut buf);
+            occurrences += 1;
+        }
+    }
+    assert!(occurrences > 1000);
+    let rows = coll.total_rows();
+    assert!(rows > 100 && rows < occurrences, "dedup inherent in storage");
+    assert!(coll.memory_bytes() > rows * DIM * 4);
+}
+
+#[test]
+fn distributed_lookup_update_lookup_cycle() {
+    // Lookup, apply sparse Adam on the owning shards, lookup again —
+    // every occurrence of an id must see the updated row, across ranks.
+    let out = run_world(4, |_rank, comm| {
+        let table = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(DIM).with_capacity(256).with_seed(3),
+        );
+        let mut se = ShardedEmbedding::new(table, DedupStrategy::TwoStage);
+        let mut opt = SparseAdam::new(DIM, AdamParams::default());
+
+        let ids = vec![11u64, 22, 11, 33];
+        let before = se.lookup(comm, &ids, true);
+        // Everyone pushes gradient 1.0 for all occurrences.
+        let grads = vec![1.0f32; ids.len() * DIM];
+        let (lids, lgrads) = se.backward(comm, &ids, &grads);
+        opt.step(se.table_mut(), &lids, &lgrads, 1.0);
+        let after = se.lookup(comm, &ids, true);
+        (before, after)
+    });
+    for (before, after) in out {
+        // Adam's first step moves each coordinate by ≈ -lr.
+        for (b, a) in before.iter().zip(after.iter()) {
+            let delta = a - b;
+            assert!(
+                (delta + 1e-3).abs() < 2e-4,
+                "expected ≈ -lr update, got {delta}"
+            );
+        }
+    }
+}
+
+#[test]
+fn duplicate_heavy_batches_consistent_under_all_strategies() {
+    // A pathological batch (one id repeated 1000x) must produce
+    // identical results and identical aggregated gradients under every
+    // dedup strategy.
+    for strategy in [
+        DedupStrategy::None,
+        DedupStrategy::CommUnique,
+        DedupStrategy::LookupUnique,
+        DedupStrategy::TwoStage,
+    ] {
+        let out = run_world(2, move |rank, comm| {
+            let table = DynamicEmbeddingTable::new(
+                DynamicTableConfig::new(DIM).with_capacity(256).with_seed(5),
+            );
+            let mut se = ShardedEmbedding::new(table, strategy);
+            let ids = vec![777u64; 1000];
+            let rows = se.lookup(comm, &ids, true);
+            // All occurrences identical.
+            for i in 1..1000 {
+                assert_eq!(rows[..DIM], rows[i * DIM..(i + 1) * DIM]);
+            }
+            let grads = vec![0.5f32; ids.len() * DIM];
+            let (lids, lgrads) = se.backward(comm, &ids, &grads);
+            if lids.is_empty() {
+                0.0
+            } else {
+                assert_eq!(lids, vec![777]);
+                let _ = rank;
+                lgrads[0]
+            }
+        });
+        // Exactly one rank owns id 777; its aggregated gradient is
+        // 1000 occurrences × 2 ranks × 0.5.
+        let owners: Vec<f32> = out.into_iter().filter(|&g| g != 0.0).collect();
+        assert_eq!(owners, vec![1000.0], "strategy {strategy:?}");
+    }
+}
+
+#[test]
+fn eviction_under_churn_keeps_table_bounded() {
+    let mut table = DynamicEmbeddingTable::new(
+        DynamicTableConfig::new(DIM)
+            .with_capacity(512)
+            .with_max_rows(300)
+            .with_seed(8),
+    );
+    let mut rng = Xoshiro256::new(1);
+    let mut buf = vec![0.0f32; DIM];
+    for step in 0..20_000 {
+        let id = rng.gen_range(5_000);
+        table.lookup_or_insert(id, &mut buf);
+        if step % 1000 == 0 {
+            assert!(table.len() <= 301, "budget violated: {}", table.len());
+            assert!(table.load_factor() <= 0.76);
+        }
+    }
+    assert!(table.stats.evictions > 0);
+    // Table still functionally correct after heavy churn.
+    table.lookup_or_insert(999_999, &mut buf);
+    let mut out = vec![0.0f32; DIM];
+    assert!(table.lookup(999_999, &mut out));
+    assert_eq!(buf, out);
+}
+
+#[test]
+fn merge_plan_global_ids_are_stable_across_processes() {
+    // Two independently built plans over the same schema must agree on
+    // every global id (required for checkpoint portability).
+    let schema = Schema::meituan_like(DIM, 1);
+    let p1 = MergePlan::build(&schema.all_features());
+    let p2 = MergePlan::build(&schema.all_features());
+    let mut rng = Xoshiro256::new(2);
+    for _ in 0..1000 {
+        let f = &schema.all_features()[rng.range_usize(0, 7)].name.clone();
+        let id = rng.next_u64() >> 4;
+        assert_eq!(p1.global_id(f, id), p2.global_id(f, id));
+    }
+}

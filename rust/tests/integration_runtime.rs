@@ -1,0 +1,222 @@
+//! Integration: the PJRT runtime executes the AOT artifacts end to end.
+//!
+//! Requires `make artifacts` (skipped otherwise). These tests prove the
+//! three-layer composition: the Pallas kernel (L1) inside the JAX model
+//! (L2), lowered to HLO text, loaded and executed from Rust (L3).
+
+use mtgrboost::runtime::{ArtifactKind, Engine, Manifest, Tensor};
+use mtgrboost::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn make_inputs(
+    b: usize,
+    l: usize,
+    d: usize,
+    tasks: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let emb: Vec<f32> = (0..b * l * d)
+        .map(|_| rng.normal(0.0, 0.1) as f32)
+        .collect();
+    let lengths: Vec<i32> = (0..b)
+        .map(|i| {
+            if i == b - 1 {
+                0 // one padded sample
+            } else {
+                rng.range_usize(1, l + 1) as i32
+            }
+        })
+        .collect();
+    let labels: Vec<f32> = (0..b * tasks)
+        .map(|_| rng.gen_range(2) as f32)
+        .collect();
+    (emb, lengths, labels)
+}
+
+#[test]
+fn train_step_runs_and_outputs_are_sane() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let arts = engine.manifest().model("tiny").unwrap().clone();
+    let params = arts.load_params(&dir).unwrap();
+    let bucket = arts.buckets[0].clone();
+    let (b, l, d) = (bucket.batch, bucket.len, arts.emb_dim);
+    let (emb, lengths, labels) = make_inputs(b, l, d, arts.tasks, 42);
+
+    let out = engine
+        .train_step(
+            "tiny",
+            (b, l),
+            &params,
+            Tensor::f32(&[b, l, d], emb),
+            lengths.clone(),
+            labels,
+        )
+        .unwrap();
+
+    assert_eq!(out.loss_sums.len(), arts.tasks);
+    assert_eq!(out.grads.len(), arts.param_count);
+    assert_eq!(out.emb_grad.len(), b * l * d);
+    assert_eq!(out.logits.len(), b * arts.tasks);
+    let valid = lengths.iter().filter(|&&x| x > 0).count() as f32;
+    assert_eq!(out.n_valid, valid);
+    assert!(out.loss_sums.iter().all(|x| x.is_finite() && *x > 0.0));
+    assert!(out.grads.iter().all(|x| x.is_finite()));
+    let gnorm: f32 = out.grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-3, "gradient must be nonzero, got {gnorm}");
+
+    // Padded sample (last) must have exactly zero embedding gradient.
+    let pad = &out.emb_grad[(b - 1) * l * d..];
+    assert!(pad.iter().all(|&x| x == 0.0), "padded emb grad leaks");
+}
+
+#[test]
+fn forward_matches_train_logits() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let arts = engine.manifest().model("tiny").unwrap().clone();
+    let params = arts.load_params(&dir).unwrap();
+    let bucket = arts.buckets[0].clone();
+    let (b, l, d) = (bucket.batch, bucket.len, arts.emb_dim);
+    let (emb, lengths, labels) = make_inputs(b, l, d, arts.tasks, 7);
+
+    let train = engine
+        .train_step(
+            "tiny",
+            (b, l),
+            &params,
+            Tensor::f32(&[b, l, d], emb.clone()),
+            lengths.clone(),
+            labels,
+        )
+        .unwrap();
+    let fwd = engine
+        .forward(
+            "tiny",
+            (b, l),
+            &params,
+            Tensor::f32(&[b, l, d], emb),
+            lengths,
+        )
+        .unwrap();
+    assert_eq!(fwd.len(), train.logits.len());
+    for (a, t) in fwd.iter().zip(&train.logits) {
+        assert!((a - t).abs() < 1e-5, "fwd/train logits diverge: {a} vs {t}");
+    }
+}
+
+#[test]
+fn sgd_on_artifact_reduces_loss() {
+    // Train purely through the artifact: loss must drop. This is the
+    // minimal end-to-end "the compiled graph learns" proof.
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let arts = engine.manifest().model("tiny").unwrap().clone();
+    let mut params = arts.load_params(&dir).unwrap();
+    let bucket = arts.buckets[0].clone();
+    let (b, l, d) = (bucket.batch, bucket.len, arts.emb_dim);
+    let (emb, lengths, labels) = make_inputs(b, l, d, arts.tasks, 3);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let out = engine
+            .train_step(
+                "tiny",
+                (b, l),
+                &params,
+                Tensor::f32(&[b, l, d], emb.clone()),
+                lengths.clone(),
+                labels.clone(),
+            )
+            .unwrap();
+        let loss = out.loss_sums.iter().sum::<f32>() / out.n_valid;
+        first.get_or_insert(loss);
+        last = loss;
+        let lr = 0.05 / out.n_valid;
+        for (p, g) in params.iter_mut().zip(&out.grads) {
+            *p -= lr * g;
+        }
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    let arts = engine.manifest().model("tiny").unwrap().clone();
+    let params = std::sync::Arc::new(arts.load_params(&dir).unwrap());
+    let bucket = arts.buckets[0].clone();
+    let (b, l, d) = (bucket.batch, bucket.len, arts.emb_dim);
+
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let engine = engine.clone();
+        let params = std::sync::Arc::clone(&params);
+        joins.push(std::thread::spawn(move || {
+            let (emb, lengths, labels) = make_inputs(b, l, d, 2, 100 + t);
+            let out = engine
+                .train_step(
+                    "tiny",
+                    (b, l),
+                    &params,
+                    Tensor::f32(&[b, l, d], emb),
+                    lengths,
+                    labels,
+                )
+                .unwrap();
+            assert!(out.loss_sums.iter().all(|x| x.is_finite()));
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn manifest_param_counts_match_rust_formula() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    use mtgrboost::config::ModelConfig;
+    for (name, arts) in &manifest.models {
+        if let Some(cfg) = ModelConfig::by_name(name) {
+            assert_eq!(
+                cfg.dense_params(),
+                arts.param_count,
+                "python/rust param-count drift for `{name}`"
+            );
+            assert_eq!(cfg.emb_dim, arts.emb_dim);
+        }
+    }
+}
+
+#[test]
+fn unknown_artifacts_error_cleanly() {
+    let dir = require_artifacts!();
+    let engine = Engine::start(&dir).unwrap();
+    assert!(engine
+        .execute("no_such_model", ArtifactKind::Train, (4, 32), vec![])
+        .is_err());
+}

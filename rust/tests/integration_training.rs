@@ -1,0 +1,145 @@
+//! Integration: the full distributed training loop over the real PJRT
+//! runtime (requires `make artifacts`; tests skip otherwise).
+
+use mtgrboost::config::TrainConfig;
+use mtgrboost::data::generator::GeneratorConfig;
+use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::runtime::Engine;
+use mtgrboost::train::{Trainer, TrainerOptions};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::start(&dir).unwrap())
+}
+
+/// Short sequences so tests stay fast.
+fn fast_gen() -> GeneratorConfig {
+    GeneratorConfig {
+        len_mu: 2.5, // mean length ≈ 13
+        len_sigma: 0.5,
+        min_len: 2,
+        max_len: 60,
+        num_users: 500,
+        num_items: 300,
+        ..Default::default()
+    }
+}
+
+fn base_opts(world: usize, steps: usize) -> TrainerOptions {
+    let mut o = TrainerOptions::new("tiny", world, steps);
+    o.generator = fast_gen();
+    o.train.target_tokens = 120;
+    o.train.fixed_batch = 8;
+    o.train.lr = 0.01; // short tests need visible learning
+    o.shard_capacity = 512;
+    o
+}
+
+#[test]
+fn two_worker_training_runs_and_learns() {
+    let Some(engine) = engine() else { return };
+    let mut opts = base_opts(2, 40);
+    opts.gauc_warmup = 15; // score the model only after some learning
+    let report = Trainer::new(opts, engine).unwrap().run().unwrap();
+    assert_eq!(report.steps.len(), 40);
+    // Losses are finite and the model learns (mean of last 5 < first 5).
+    let head: f64 = report.steps[..5].iter().map(|s| s.loss_ctr).sum::<f64>() / 5.0;
+    let (tail_ctr, _) = report.final_losses();
+    assert!(head.is_finite() && tail_ctr.is_finite());
+    assert!(
+        tail_ctr < head,
+        "loss did not improve: {head:.4} -> {tail_ctr:.4}"
+    );
+    // Sparse tables actually filled.
+    assert!(report.table_rows > 100, "rows = {}", report.table_rows);
+    // GAUC is computable and better than random.
+    let g = report.gauc_ctr.expect("gauc");
+    assert!(g > 0.5, "GAUC {g:.3} should beat random after training");
+    // Phase decomposition recorded all five phases.
+    for phase in ["1_data", "2_lookup", "3_compute", "4_sparse_update", "5_dense_sync"] {
+        assert!(report.phases.total(phase) > 0.0, "missing phase {phase}");
+    }
+}
+
+#[test]
+fn dedup_strategies_do_not_change_learning() {
+    // The dedup path is a pure communication optimization: losses must
+    // match bitwise-tolerantly between None and TwoStage.
+    let Some(engine) = engine() else { return };
+    let mut reports = Vec::new();
+    for strategy in [DedupStrategy::None, DedupStrategy::TwoStage] {
+        let mut opts = base_opts(2, 8);
+        opts.train.dedup = strategy;
+        opts.collect_gauc = false;
+        let report = Trainer::new(opts, engine.clone()).unwrap().run().unwrap();
+        reports.push(report);
+    }
+    for (a, b) in reports[0].steps.iter().zip(&reports[1].steps) {
+        assert!(
+            (a.loss_ctr - b.loss_ctr).abs() < 1e-4,
+            "step {}: {} vs {}",
+            a.step,
+            a.loss_ctr,
+            b.loss_ctr
+        );
+    }
+    // But the communication volume differs drastically.
+    assert!(reports[1].dedup_volume.ids_sent < reports[0].dedup_volume.ids_sent);
+}
+
+#[test]
+fn sequence_balancing_reduces_token_spread() {
+    let Some(engine) = engine() else { return };
+    let spread = |balancing: bool| {
+        let mut opts = base_opts(4, 12);
+        opts.train.sequence_balancing = balancing;
+        opts.collect_gauc = false;
+        let report = Trainer::new(opts, engine.clone()).unwrap().run().unwrap();
+        let mut rel = 0.0;
+        for s in &report.steps {
+            let max = *s.tokens.iter().max().unwrap() as f64;
+            let min = *s.tokens.iter().min().unwrap() as f64;
+            rel += (max - min) / max.max(1.0);
+        }
+        rel / report.steps.len() as f64
+    };
+    let balanced = spread(true);
+    let fixed = spread(false);
+    assert!(
+        balanced < fixed,
+        "balanced spread {balanced:.3} should beat fixed {fixed:.3}"
+    );
+}
+
+#[test]
+fn world_one_matches_multi_world_loss_scale() {
+    // Losses are per-sample means, so world=1 and world=4 land in the
+    // same range (not equal — different data shards).
+    let Some(engine) = engine() else { return };
+    let mut r1 = None;
+    let mut r4 = None;
+    for (world, slot) in [(1usize, &mut r1), (4usize, &mut r4)] {
+        let mut opts = base_opts(world, 6);
+        opts.collect_gauc = false;
+        *slot = Some(Trainer::new(opts, engine.clone()).unwrap().run().unwrap());
+    }
+    let (a, b) = (r1.unwrap(), r4.unwrap());
+    let la = a.steps[0].loss_ctr;
+    let lb = b.steps[0].loss_ctr;
+    assert!((la - lb).abs() < 0.3, "initial losses far apart: {la} vs {lb}");
+}
+
+#[test]
+fn grad_accumulation_changes_update_cadence_not_stability() {
+    let Some(engine) = engine() else { return };
+    let mut opts = base_opts(2, 9);
+    opts.train.grad_accum = 3;
+    opts.collect_gauc = false;
+    let report = Trainer::new(opts, engine).unwrap().run().unwrap();
+    assert_eq!(report.steps.len(), 9);
+    assert!(report.steps.iter().all(|s| s.loss_ctr.is_finite()));
+}

@@ -1,0 +1,233 @@
+//! Property-based invariant tests (hand-rolled generators over the
+//! seeded RNG — the offline registry has no proptest). Each property
+//! runs across many randomized cases; failures print the seed for
+//! reproduction.
+
+use std::collections::HashMap;
+
+use mtgrboost::balance::{Batcher, DynamicBatcher};
+use mtgrboost::data::schema::Sequence;
+use mtgrboost::embedding::dedup::{gather_rows, scatter_accumulate, Dedup};
+use mtgrboost::embedding::dynamic_table::{
+    DynamicEmbeddingTable, DynamicTableConfig, EvictionPolicy,
+};
+use mtgrboost::embedding::hash::hash_id;
+use mtgrboost::embedding::merge::GlobalIdCodec;
+use mtgrboost::embedding::sharded::shard_owner;
+use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use mtgrboost::util::rng::Xoshiro256;
+
+fn seq_of(len: usize, user: u64) -> Sequence {
+    Sequence {
+        user_id: user,
+        context: vec![0, 0, 0],
+        tokens: vec![vec![0, 0, 0, 0]; len],
+        labels: [0.0, 0.0],
+    }
+}
+
+/// Property: the dynamic table behaves exactly like a HashMap under any
+/// interleaving of insert / lookup / delta / remove, for random dims,
+/// capacities, probe-group counts and eviction policies (without budget).
+#[test]
+fn prop_dynamic_table_hashmap_equivalence() {
+    for case in 0..30 {
+        let mut rng = Xoshiro256::new(1000 + case);
+        let dim = rng.range_usize(1, 9);
+        let cap = 1 << rng.range_usize(4, 8);
+        let groups = 1 << rng.range_usize(0, 3);
+        let policy = if rng.bernoulli(0.5) {
+            EvictionPolicy::Lru
+        } else {
+            EvictionPolicy::Lfu
+        };
+        let mut table = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(dim)
+                .with_capacity(cap)
+                .with_probe_groups(groups)
+                .with_eviction(policy)
+                .with_seed(case),
+        );
+        let mut reference: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut buf = vec![0.0f32; dim];
+        for _ in 0..2000 {
+            let id = rng.gen_range(300);
+            match rng.gen_range(12) {
+                0..=6 => {
+                    let existed = table.lookup_or_insert(id, &mut buf);
+                    assert_eq!(existed, reference.contains_key(&id), "case {case}");
+                    reference.entry(id).or_insert_with(|| buf.clone());
+                    assert_eq!(&buf, reference.get(&id).unwrap(), "case {case}");
+                }
+                7..=8 => {
+                    let delta: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+                    let ok = table.apply_delta(id, &delta);
+                    assert_eq!(ok, reference.contains_key(&id));
+                    if let Some(row) = reference.get_mut(&id) {
+                        for (r, d) in row.iter_mut().zip(&delta) {
+                            *r += d;
+                        }
+                    }
+                }
+                9..=10 => {
+                    assert_eq!(table.remove(id), reference.remove(&id).is_some());
+                }
+                _ => {
+                    let found = table.lookup(id, &mut buf);
+                    assert_eq!(found, reference.contains_key(&id));
+                }
+            }
+            assert_eq!(table.len(), reference.len(), "case {case}");
+        }
+    }
+}
+
+/// Property: Algorithm 1 conserves sequences (no loss, no duplication,
+/// order preserved) for any chunking and any target.
+#[test]
+fn prop_batcher_conservation() {
+    for case in 0..40 {
+        let mut rng = Xoshiro256::new(2000 + case);
+        let target = rng.range_usize(50, 2000);
+        let n = rng.range_usize(1, 300);
+        let lens: Vec<usize> = (0..n).map(|_| rng.range_usize(1, 200)).collect();
+        let mut b = DynamicBatcher::new(target);
+        let mut emitted: Vec<u64> = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            let chunk = rng.range_usize(1, 50).min(n - i);
+            b.push_chunk(
+                (i..i + chunk)
+                    .map(|k| seq_of(lens[k], k as u64))
+                    .collect(),
+            );
+            i += chunk;
+            while let Some(batch) = b.next_batch() {
+                // Every emitted batch holds at least one sequence and,
+                // unless it is a single oversized sequence, lands within
+                // 2x of target.
+                assert!(!batch.sequences.is_empty());
+                if batch.sequences.len() > 1 {
+                    assert!(
+                        batch.tokens <= 2 * target,
+                        "case {case}: batch {} tokens vs target {target}",
+                        batch.tokens
+                    );
+                }
+                emitted.extend(batch.sequences.iter().map(|s| s.user_id));
+            }
+        }
+        if let Some(batch) = b.flush() {
+            emitted.extend(batch.sequences.iter().map(|s| s.user_id));
+        }
+        let expect: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(emitted, expect, "case {case}");
+    }
+}
+
+/// Property: dedup round-trips and gather/scatter stay adjoint for any
+/// id distribution and dim.
+#[test]
+fn prop_dedup_roundtrip_and_adjoint() {
+    for case in 0..40 {
+        let mut rng = Xoshiro256::new(3000 + case);
+        let n = rng.range_usize(0, 500);
+        let vocab = rng.range_usize(1, 100) as u64;
+        let dim = rng.range_usize(1, 6);
+        let ids: Vec<u64> = (0..n).map(|_| rng.gen_range(vocab)).collect();
+        let d = Dedup::of(&ids);
+        assert_eq!(d.reconstruct(), ids, "case {case}");
+        // Unique ids are unique.
+        let mut u = d.unique.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), d.unique.len());
+        if n == 0 {
+            continue;
+        }
+        let rows: Vec<f32> = (0..d.unique.len() * dim).map(|_| rng.next_f32() - 0.5).collect();
+        let grads: Vec<f32> = (0..n * dim).map(|_| rng.next_f32() - 0.5).collect();
+        let mut expanded = vec![0.0f32; n * dim];
+        gather_rows(&rows, dim, &d.inverse, &mut expanded);
+        let mut acc = vec![0.0f32; d.unique.len() * dim];
+        scatter_accumulate(&grads, dim, &d.inverse, &mut acc);
+        let lhs: f64 = expanded.iter().zip(&grads).map(|(a, b)| (*a * b) as f64).sum();
+        let rhs: f64 = rows.iter().zip(&acc).map(|(a, b)| (*a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "case {case}: {lhs} vs {rhs}");
+    }
+}
+
+/// Property: Eq. 8 codec is bijective and preserves the sign bit for
+/// every table count up to 1000.
+#[test]
+fn prop_codec_bijective() {
+    let mut rng = Xoshiro256::new(4000);
+    for _ in 0..60 {
+        let m = rng.range_usize(1, 1000);
+        let c = GlobalIdCodec::new(m);
+        for _ in 0..50 {
+            let t = rng.range_usize(0, m);
+            let x = rng.next_u64() & c.max_local_id();
+            let enc = c.encode(t, x);
+            assert_eq!(enc >> 63, 0, "sign bit must stay clear");
+            assert_eq!(c.decode(enc), (t, x));
+        }
+    }
+}
+
+/// Property: shard routing is a pure function and the paper's modulo
+/// refinement holds for power-of-two worlds: owner under 2w maps to
+/// owner under w by reduction mod w.
+#[test]
+fn prop_shard_owner_pow2_refinement() {
+    let mut rng = Xoshiro256::new(5000);
+    for _ in 0..2000 {
+        let id = rng.next_u64();
+        for w in [1usize, 2, 4, 8, 16, 32, 64] {
+            let a = shard_owner(id, w);
+            let b = shard_owner(id, 2 * w);
+            assert_eq!(b % w, a, "id {id} w {w}");
+            assert!(a < w);
+        }
+    }
+}
+
+/// Property: f16 round-trip is idempotent (quantize twice == once) and
+/// monotone on finite values.
+#[test]
+fn prop_f16_idempotent_monotone() {
+    let mut rng = Xoshiro256::new(6000);
+    let mut prev_in = f32::NEG_INFINITY;
+    let mut prev_out = f32::NEG_INFINITY;
+    let mut vals: Vec<f32> = (0..5000)
+        .map(|_| (rng.next_f32() - 0.5) * rng.range_f64(0.0, 100000.0) as f32)
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for v in vals {
+        let q = f16_bits_to_f32(f32_to_f16_bits(v));
+        let qq = f16_bits_to_f32(f32_to_f16_bits(q));
+        assert_eq!(q.to_bits(), qq.to_bits(), "idempotent at {v}");
+        if v > prev_in {
+            assert!(q >= prev_out, "monotone: f({v}) = {q} < f({prev_in}) = {prev_out}");
+            prev_in = v;
+            prev_out = q;
+        }
+    }
+}
+
+/// Property: hash_id avalanche — single-bit input flips change ~half the
+/// output bits on average (guards against accidental weakening).
+#[test]
+fn prop_hash_avalanche() {
+    let mut rng = Xoshiro256::new(7000);
+    let mut total = 0u64;
+    let trials = 4000;
+    for _ in 0..trials {
+        let x = rng.next_u64();
+        let bit = 1u64 << rng.gen_range(64);
+        total += (hash_id(x, 9) ^ hash_id(x ^ bit, 9)).count_ones() as u64;
+    }
+    let mean = total as f64 / trials as f64;
+    assert!((mean - 32.0).abs() < 1.5, "avalanche mean {mean}");
+}
