@@ -4,6 +4,14 @@
 //! worker threads. Primitives:
 //! - `all_to_all` — per-pair unbounded channels (deterministic source
 //!   order on receive);
+//! - `post_all_to_all_on` / `complete_all_to_all` — the non-blocking
+//!   isend/irecv-style split of the same exchange: `post` enqueues the
+//!   sends immediately and returns a [`PendingAllToAll`] token;
+//!   `complete` blocks for the receives. Each in-flight exchange rides a
+//!   dedicated **lane** (an independent per-pair channel set, the
+//!   software analogue of a NCCL stream/tag), so an ID exchange for
+//!   micro-batch *k+1* can overlap an embedding exchange for *k* without
+//!   the FIFO streams interleaving mismatched payloads;
 //! - `all_reduce_sum` / `all_reduce_max` — shared-buffer reduction with a
 //!   two-phase epoch protocol (every caller returns only after the group
 //!   fully resets, so back-to-back reductions cannot interleave);
@@ -14,6 +22,17 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Number of independent channel lanes per pair. Lane assignments:
+/// [`LANE_DEFAULT`] for ordinary collectives, [`LANE_IDS`] for posted ID
+/// exchanges, [`LANE_EMB`] for embedding-row exchanges.
+pub const LANES: usize = 3;
+/// Default lane used by the blocking collectives.
+pub const LANE_DEFAULT: usize = 0;
+/// Lane carrying posted (pipelined) ID all-to-alls.
+pub const LANE_IDS: usize = 1;
+/// Lane carrying embedding-row replies.
+pub const LANE_EMB: usize = 2;
 
 /// Typed payloads exchanged between ranks (a tiny closed set instead of
 /// generic serialization).
@@ -64,6 +83,11 @@ impl Message {
 /// Shared reduce/barrier state (epoch protocol).
 struct ReduceState {
     buf: Vec<f32>,
+    /// Per-rank contribution buffers (reused across epochs), folded in
+    /// rank order once complete so the floating-point reduction is
+    /// bitwise run-to-run deterministic (thread arrival order must not
+    /// matter). Every slot is rewritten each epoch before the fold.
+    contribs: Vec<Vec<f32>>,
     writers: usize,
     readers: usize,
     /// Bumped when all writers have contributed.
@@ -91,12 +115,27 @@ pub struct CommStats {
 pub struct CommHandle {
     pub rank: usize,
     pub world: usize,
-    /// senders[dst] — channel into dst's inbox from this rank.
-    senders: Vec<Sender<Message>>,
-    /// receivers[src] — this rank's inbox from src.
-    receivers: Vec<Receiver<Message>>,
+    /// senders[lane][dst] — channel into dst's inbox from this rank.
+    senders: Vec<Vec<Sender<Message>>>,
+    /// receivers[lane][src] — this rank's inbox from src.
+    receivers: Vec<Vec<Receiver<Message>>>,
+    /// Per-lane count of posted exchanges (stamps the pending token).
+    posted_seq: Vec<u64>,
+    /// Per-lane count of completed exchanges (checked on completion:
+    /// lanes are FIFO, so completing out of post order would silently
+    /// deliver the wrong payloads — instead it panics).
+    completed_seq: Vec<u64>,
     shared: Arc<Shared>,
     pub stats: CommStats,
+}
+
+/// Token for an in-flight posted all-to-all: the sends are already
+/// enqueued; [`CommHandle::complete_all_to_all`] collects the receives.
+#[must_use = "a posted all-to-all must be completed or peers deadlock"]
+#[derive(Debug)]
+pub struct PendingAllToAll {
+    lane: usize,
+    seq: u64,
 }
 
 /// Factory for a communicator group.
@@ -106,24 +145,27 @@ impl CommGroup {
     /// Create `world` connected handles (index = rank).
     pub fn new(world: usize) -> Vec<CommHandle> {
         assert!(world >= 1);
-        // txs[src][dst], rxs[dst][src]
-        let mut txs: Vec<Vec<Option<Sender<Message>>>> = (0..world)
-            .map(|_| (0..world).map(|_| None).collect())
+        // txs[src][lane][dst], rxs[dst][lane][src]
+        let mut txs: Vec<Vec<Vec<Option<Sender<Message>>>>> = (0..world)
+            .map(|_| (0..LANES).map(|_| (0..world).map(|_| None).collect()).collect())
             .collect();
-        let mut rxs: Vec<Vec<Option<Receiver<Message>>>> = (0..world)
-            .map(|_| (0..world).map(|_| None).collect())
+        let mut rxs: Vec<Vec<Vec<Option<Receiver<Message>>>>> = (0..world)
+            .map(|_| (0..LANES).map(|_| (0..world).map(|_| None).collect()).collect())
             .collect();
-        for src in 0..world {
-            for dst in 0..world {
-                let (tx, rx) = channel();
-                txs[src][dst] = Some(tx);
-                rxs[dst][src] = Some(rx);
+        for lane in 0..LANES {
+            for src in 0..world {
+                for dst in 0..world {
+                    let (tx, rx) = channel();
+                    txs[src][lane][dst] = Some(tx);
+                    rxs[dst][lane][src] = Some(rx);
+                }
             }
         }
         let shared = Arc::new(Shared {
             world,
             reduce: Mutex::new(ReduceState {
                 buf: Vec::new(),
+                contribs: (0..world).map(|_| Vec::new()).collect(),
                 writers: 0,
                 readers: 0,
                 write_gen: 0,
@@ -134,11 +176,19 @@ impl CommGroup {
         txs.into_iter()
             .zip(rxs)
             .enumerate()
-            .map(|(rank, (tx_row, rx_row))| CommHandle {
+            .map(|(rank, (tx_lanes, rx_lanes))| CommHandle {
                 rank,
                 world,
-                senders: tx_row.into_iter().map(Option::unwrap).collect(),
-                receivers: rx_row.into_iter().map(Option::unwrap).collect(),
+                senders: tx_lanes
+                    .into_iter()
+                    .map(|row| row.into_iter().map(Option::unwrap).collect())
+                    .collect(),
+                receivers: rx_lanes
+                    .into_iter()
+                    .map(|row| row.into_iter().map(Option::unwrap).collect())
+                    .collect(),
+                posted_seq: vec![0; LANES],
+                completed_seq: vec![0; LANES],
                 shared: Arc::clone(&shared),
                 stats: CommStats::default(),
             })
@@ -152,18 +202,47 @@ impl CommHandle {
     /// `world`; the self-chunk short-circuits through the local channel
     /// (zero cost is the caller's accounting decision).
     pub fn all_to_all(&mut self, chunks: Vec<Message>) -> Vec<Message> {
+        let pending = self.post_all_to_all_on(LANE_DEFAULT, chunks);
+        self.complete_all_to_all(pending)
+    }
+
+    /// Non-blocking half of an all-to-all: enqueue every send on `lane`
+    /// and return immediately. The matching
+    /// [`complete_all_to_all`](Self::complete_all_to_all) call collects
+    /// the receives. Posted exchanges on *different* lanes may be
+    /// in flight simultaneously; on one lane they complete in post
+    /// order (FIFO per peer pair) — every rank must post/complete in the
+    /// same global order per lane, the usual collective discipline.
+    pub fn post_all_to_all_on(&mut self, lane: usize, chunks: Vec<Message>) -> PendingAllToAll {
         assert_eq!(chunks.len(), self.world);
+        assert!(lane < LANES, "lane {lane} out of range");
         let mut sent = 0u64;
         for (dst, m) in chunks.into_iter().enumerate() {
             if dst != self.rank {
                 sent += m.bytes() as u64;
             }
-            self.senders[dst].send(m).expect("peer hung up");
+            self.senders[lane][dst].send(m).expect("peer hung up");
         }
         self.stats.all_to_all_bytes += sent;
         self.stats.all_to_all_ops += 1;
+        let seq = self.posted_seq[lane];
+        self.posted_seq[lane] += 1;
+        PendingAllToAll { lane, seq }
+    }
+
+    /// Blocking half: receive one message from every rank on the posted
+    /// exchange's lane (indexed by source). Panics if exchanges on one
+    /// lane are completed out of post order (the FIFO lane would
+    /// otherwise hand back the wrong exchange's payloads).
+    pub fn complete_all_to_all(&mut self, pending: PendingAllToAll) -> Vec<Message> {
+        let lane = pending.lane;
+        assert_eq!(
+            pending.seq, self.completed_seq[lane],
+            "all-to-all on lane {lane} completed out of post order"
+        );
+        self.completed_seq[lane] += 1;
         (0..self.world)
-            .map(|src| self.receivers[src].recv().expect("peer hung up"))
+            .map(|src| self.receivers[lane][src].recv().expect("peer hung up"))
             .collect()
     }
 
@@ -192,18 +271,26 @@ impl CommHandle {
         while st.writers != 0 && st.readers != 0 {
             st = sh.cv.wait(st).unwrap();
         }
-        // Contribute.
-        if st.writers == 0 {
-            st.buf.clear();
-            st.buf.extend_from_slice(data);
-        } else {
-            assert_eq!(st.buf.len(), data.len(), "all_reduce length mismatch");
-            for (acc, &x) in st.buf.iter_mut().zip(data.iter()) {
-                combine(acc, x);
-            }
+        // Contribute. Contributions park in reusable per-rank buffers;
+        // the completing writer folds them in rank order so the result
+        // is independent of thread arrival order (bitwise determinism
+        // across runs) with no steady-state allocation.
+        {
+            let contrib = &mut st.contribs[self.rank];
+            contrib.clear();
+            contrib.extend_from_slice(data);
         }
         st.writers += 1;
         if st.writers == sh.world {
+            let ReduceState { buf, contribs, .. } = &mut *st;
+            buf.clear();
+            buf.extend_from_slice(&contribs[0]);
+            for c in contribs.iter().skip(1) {
+                assert_eq!(c.len(), buf.len(), "all_reduce length mismatch");
+                for (acc, &x) in buf.iter_mut().zip(c.iter()) {
+                    combine(acc, x);
+                }
+            }
             st.write_gen += 1;
             sh.cv.notify_all();
         } else {
@@ -388,6 +475,72 @@ mod tests {
             v[0]
         });
         assert_eq!(out, vec![5.0]);
+    }
+
+    #[test]
+    fn posted_exchanges_overlap_across_lanes() {
+        // Post an ID exchange, then run a full embedding exchange on a
+        // different lane, then complete the first — the pattern the
+        // two-phase pipelined lookup uses. Payloads must not cross lanes.
+        let out = run_group(4, |rank, h| {
+            let ids = (0..4)
+                .map(|dst| Message::Ids(vec![rank as u64 * 10 + dst as u64]))
+                .collect();
+            let pending = h.post_all_to_all_on(LANE_IDS, ids);
+            let floats = (0..4)
+                .map(|dst| Message::Floats(vec![(rank * 4 + dst) as f32]))
+                .collect();
+            let emb_pending = h.post_all_to_all_on(LANE_EMB, floats);
+            let emb: Vec<f32> = h
+                .complete_all_to_all(emb_pending)
+                .into_iter()
+                .map(|m| m.into_floats()[0])
+                .collect();
+            let ids: Vec<u64> = h
+                .complete_all_to_all(pending)
+                .into_iter()
+                .map(|m| m.into_ids()[0])
+                .collect();
+            (ids, emb)
+        });
+        for (rank, (ids, emb)) in out.iter().enumerate() {
+            for src in 0..4 {
+                assert_eq!(ids[src], src as u64 * 10 + rank as u64);
+                assert_eq!(emb[src], (src * 4 + rank) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_rounds_on_one_lane_complete_in_post_order() {
+        let out = run_group(2, |rank, h| {
+            // Two exchanges posted back to back on the same lane, then
+            // completed in order.
+            let mk = |tag: u64| {
+                (0..2)
+                    .map(|dst| Message::Ids(vec![tag * 100 + rank as u64 * 10 + dst as u64]))
+                    .collect::<Vec<_>>()
+            };
+            let p1 = h.post_all_to_all_on(LANE_IDS, mk(1));
+            let p2 = h.post_all_to_all_on(LANE_IDS, mk(2));
+            let r1: Vec<u64> = h
+                .complete_all_to_all(p1)
+                .into_iter()
+                .map(|m| m.into_ids()[0])
+                .collect();
+            let r2: Vec<u64> = h
+                .complete_all_to_all(p2)
+                .into_iter()
+                .map(|m| m.into_ids()[0])
+                .collect();
+            (r1, r2)
+        });
+        for (rank, (r1, r2)) in out.iter().enumerate() {
+            for src in 0..2 {
+                assert_eq!(r1[src], 100 + src as u64 * 10 + rank as u64);
+                assert_eq!(r2[src], 200 + src as u64 * 10 + rank as u64);
+            }
+        }
     }
 
     #[test]

@@ -10,5 +10,5 @@
 pub mod comm;
 pub mod netmodel;
 
-pub use comm::{CommGroup, CommHandle, Message};
+pub use comm::{CommGroup, CommHandle, Message, PendingAllToAll};
 pub use netmodel::NetModel;

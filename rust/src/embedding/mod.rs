@@ -14,6 +14,7 @@
 //!   (two all-to-alls per lookup, gradient all-to-all on backward).
 //! - [`precision`] — hot/cold FP32/FP16 mixed-precision row storage (§5.2).
 
+pub mod concurrent;
 pub mod dedup;
 pub mod sharded;
 pub mod dynamic_table;
@@ -57,5 +58,37 @@ pub trait EmbeddingStore {
     fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool;
 
     /// Approximate resident bytes (key + value + metadata structures).
+    fn memory_bytes(&self) -> usize;
+}
+
+/// Shared-reference analogue of [`EmbeddingStore`] for stores that
+/// sustain concurrent reader/writer traffic (Monolith-style collisionless
+/// tables at production rates): every method takes `&self`, so one store
+/// can serve stage-2 (server-side) lookups and sparse optimizer updates
+/// from many simulated workers in parallel. Implementations must
+/// synchronize internally — see
+/// [`concurrent::ConcurrentDynamicTable`]'s lock striping.
+pub trait ConcurrentEmbeddingStore: Send + Sync {
+    /// Embedding dimensionality of every row in this store.
+    fn dim(&self) -> usize;
+
+    /// Number of live rows (a consistent snapshot, not a fenced total).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Training-time lookup: insert a freshly initialized row if absent.
+    /// Returns `true` if the row already existed.
+    fn lookup_or_insert(&self, id: GlobalId, out: &mut [f32]) -> bool;
+
+    /// Read-only lookup; `false` and the default row when absent.
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool;
+
+    /// Additive update (optimizer delta); `false` if the id is absent.
+    fn apply_delta(&self, id: GlobalId, delta: &[f32]) -> bool;
+
+    /// Approximate resident bytes.
     fn memory_bytes(&self) -> usize;
 }

@@ -15,8 +15,15 @@
 //! Backward mirrors forward: occurrence gradients are aggregated per
 //! destination (sparse accumulation), exchanged via all-to-all, and
 //! aggregated again on the owning shard.
+//!
+//! The lookup is a **two-phase pipeline**: [`ShardedEmbedding::post_ids`]
+//! partitions + stage-1 dedups and posts the ID all-to-all without
+//! blocking; [`ShardedEmbedding::complete_lookup`] serves and runs the
+//! embedding exchange. The trainer posts micro-batch *k+1*'s IDs while
+//! micro-batch *k* computes, overlapping ID communication with work —
+//! the TurboGR-style overlap the `--overlap` ablation toggles.
 
-use crate::collective::comm::{CommHandle, Message};
+use crate::collective::comm::{CommHandle, Message, PendingAllToAll, LANE_EMB, LANE_IDS};
 use crate::embedding::dedup::{gather_rows, scatter_accumulate, Dedup, DedupStrategy, DedupVolume};
 use crate::embedding::hash::hash_id;
 use crate::embedding::{EmbeddingStore, GlobalId};
@@ -32,8 +39,10 @@ pub struct ShardedEmbedding<S: EmbeddingStore> {
     pub strategy: DedupStrategy,
     /// Cumulative communication-volume accounting (drives Fig. 16).
     pub volume: DedupVolume,
-    /// Per-pair bytes sent in the last lookup (for the net cost model):
-    /// `last_id_bytes[dst]`, `last_emb_bytes[dst]`.
+    /// Per-pair bytes of the most recently *completed* lookup (for the
+    /// net cost model): `last_id_bytes[dst]`, `last_emb_bytes[dst]`.
+    /// Both meters update together in `complete_lookup`, so they always
+    /// describe the same exchange even when several are posted.
     pub last_id_bytes: Vec<usize>,
     pub last_emb_bytes: Vec<usize>,
 }
@@ -41,6 +50,25 @@ pub struct ShardedEmbedding<S: EmbeddingStore> {
 /// Which rank owns `id`.
 pub fn shard_owner(id: GlobalId, world: usize) -> usize {
     (hash_id(id, SHARD_SEED) % world as u64) as usize
+}
+
+/// In-flight state of a posted sharded lookup: the ID all-to-all is on
+/// the wire; the partition layout needed to serve and scatter rides
+/// along until [`ShardedEmbedding::complete_lookup`] consumes it.
+#[must_use = "a posted lookup must be completed or peers deadlock"]
+pub struct PendingLookup {
+    num_ids: usize,
+    pos_by_dst: Vec<Vec<u32>>,
+    stage1_inverse: Vec<Option<Vec<u32>>>,
+    /// Per-destination unique (post-stage-1) id counts.
+    sent_lens: Vec<usize>,
+    /// Per-destination raw occurrence counts.
+    raw_lens: Vec<usize>,
+    /// Per-destination ID bytes posted (installed into
+    /// `last_id_bytes` at completion so the `last_*_bytes` pair always
+    /// describes the same exchange, even under pipelining).
+    id_bytes: Vec<usize>,
+    pending: PendingAllToAll,
 }
 
 impl<S: EmbeddingStore> ShardedEmbedding<S> {
@@ -72,10 +100,25 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
     /// (`ids.len() × dim`). `train` controls insert-on-miss semantics.
     ///
     /// All ranks must call this collectively (it contains two
-    /// all-to-alls), even with an empty `ids` list.
+    /// all-to-alls), even with an empty `ids` list. Equivalent to
+    /// [`post_ids`](Self::post_ids) immediately followed by
+    /// [`complete_lookup`](Self::complete_lookup).
     pub fn lookup(&mut self, comm: &mut CommHandle, ids: &[GlobalId], train: bool) -> Vec<f32> {
+        let pending = self.post_ids(comm, ids);
+        self.complete_lookup(comm, pending, train)
+    }
+
+    /// Phase 1 of the pipelined lookup: partition `ids` by owner, apply
+    /// stage-1 dedup, and *post* the ID all-to-all (sends enqueue
+    /// immediately; nothing blocks). The returned [`PendingLookup`] must
+    /// be passed to [`complete_lookup`](Self::complete_lookup) — and
+    /// because posted exchanges ride dedicated comm lanes, the trainer
+    /// may post micro-batch *k+1*'s IDs before completing micro-batch
+    /// *k*, hiding ID communication behind compute (§3's overlap).
+    ///
+    /// Collective: all ranks must post and complete in the same order.
+    pub fn post_ids(&mut self, comm: &mut CommHandle, ids: &[GlobalId]) -> PendingLookup {
         let world = comm.world;
-        let dim = self.dim;
 
         // ---- partition by owner ------------------------------------
         let mut ids_by_dst: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
@@ -102,11 +145,49 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 stage1_inverse.push(None);
             }
         }
-        self.last_id_bytes = send_ids.iter().map(|v| v.len() * 8).collect();
+        let id_bytes: Vec<usize> = send_ids.iter().map(|v| v.len() * 8).collect();
+        let sent_lens: Vec<usize> = send_ids.iter().map(|v| v.len()).collect();
+        let raw_lens: Vec<usize> = ids_by_dst.iter().map(|v| v.len()).collect();
 
-        // ---- ID all-to-all ------------------------------------------
+        // ---- ID all-to-all (posted, non-blocking) --------------------
+        let pending = comm.post_all_to_all_on(
+            LANE_IDS,
+            send_ids.into_iter().map(Message::Ids).collect(),
+        );
+        PendingLookup {
+            num_ids: ids.len(),
+            pos_by_dst,
+            stage1_inverse,
+            sent_lens,
+            raw_lens,
+            id_bytes,
+            pending,
+        }
+    }
+
+    /// Phase 2 of the pipelined lookup: receive the requested IDs, serve
+    /// them from the local shard (stage-2 dedup), run the embedding
+    /// all-to-all, and scatter rows back to occurrence order.
+    pub fn complete_lookup(
+        &mut self,
+        comm: &mut CommHandle,
+        lookup: PendingLookup,
+        train: bool,
+    ) -> Vec<f32> {
+        let world = comm.world;
+        let dim = self.dim;
+        let PendingLookup {
+            num_ids,
+            pos_by_dst,
+            stage1_inverse,
+            sent_lens,
+            raw_lens,
+            id_bytes,
+            pending,
+        } = lookup;
+        self.last_id_bytes = id_bytes;
         let requested: Vec<Vec<GlobalId>> = comm
-            .all_to_all(send_ids.iter().cloned().map(Message::Ids).collect())
+            .complete_all_to_all(pending)
             .into_iter()
             .map(Message::into_ids)
             .collect();
@@ -152,19 +233,23 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         // Reply row counts mirror the *received* id counts; the raw
         // (no-stage-1) counterpart is what we would have sent without
         // dedup — accounted for Fig. 16.
-        for (dst, bucket) in ids_by_dst.iter().enumerate() {
-            self.volume.emb_rows_raw += bucket.len();
-            self.volume.emb_rows_sent += send_ids[dst].len();
+        for dst in 0..world {
+            self.volume.emb_rows_raw += raw_lens[dst];
+            self.volume.emb_rows_sent += sent_lens[dst];
         }
         self.last_emb_bytes = replies.iter().map(|r| r.len() * 4).collect();
+        let emb_pending = comm.post_all_to_all_on(
+            LANE_EMB,
+            replies.into_iter().map(Message::Floats).collect(),
+        );
         let returned: Vec<Vec<f32>> = comm
-            .all_to_all(replies.into_iter().map(Message::Floats).collect())
+            .complete_all_to_all(emb_pending)
             .into_iter()
             .map(Message::into_floats)
             .collect();
 
         // ---- scatter back to occurrence order ------------------------
-        let mut out = vec![0.0f32; ids.len() * dim];
+        let mut out = vec![0.0f32; num_ids * dim];
         for dst in 0..world {
             let rows = &returned[dst];
             // Expand through the stage-1 inverse if we deduped.
@@ -368,6 +453,55 @@ mod tests {
         assert_eq!(out[0].len(), 3 * DIM);
         assert_eq!(&out[0][0..DIM], expected_row(9).as_slice());
         assert!(out[1].is_empty() && out[2].is_empty());
+    }
+
+    #[test]
+    fn pipelined_lookup_matches_blocking_lookup() {
+        // Two micro-batches per rank: post batch 1's IDs before
+        // completing batch 0 (the overlap schedule), and verify rows are
+        // bitwise identical to the blocking schedule.
+        let out = run_sharded(4, DedupStrategy::TwoStage, |rank, se, comm| {
+            let batch0: Vec<u64> = vec![1, 2, 3, 1, 50 + rank as u64];
+            let batch1: Vec<u64> = vec![2, 9, 9, 70 + rank as u64];
+            let p0 = se.post_ids(comm, &batch0);
+            let p1 = se.post_ids(comm, &batch1); // posted before completing p0
+            let rows0 = se.complete_lookup(comm, p0, true);
+            let rows1 = se.complete_lookup(comm, p1, true);
+            (batch0, rows0, batch1, rows1)
+        });
+        for (batch0, rows0, batch1, rows1) in out {
+            for (i, &id) in batch0.iter().enumerate() {
+                assert_eq!(&rows0[i * DIM..(i + 1) * DIM], expected_row(id).as_slice());
+            }
+            for (i, &id) in batch1.iter().enumerate() {
+                assert_eq!(&rows1[i * DIM..(i + 1) * DIM], expected_row(id).as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_volume_accounting_matches_blocking() {
+        let run = |pipelined: bool| {
+            run_sharded(2, DedupStrategy::TwoStage, move |_rank, se, comm| {
+                let batch0: Vec<u64> = (0..200).map(|i| (i % 17) as u64).collect();
+                let batch1: Vec<u64> = (0..100).map(|i| (i % 5) as u64).collect();
+                if pipelined {
+                    let p0 = se.post_ids(comm, &batch0);
+                    let p1 = se.post_ids(comm, &batch1);
+                    let _ = se.complete_lookup(comm, p0, true);
+                    let _ = se.complete_lookup(comm, p1, true);
+                } else {
+                    let _ = se.lookup(comm, &batch0, true);
+                    let _ = se.lookup(comm, &batch1, true);
+                }
+                se.volume
+            })
+        };
+        let blocking = run(false);
+        let pipelined = run(true);
+        for (b, p) in blocking.iter().zip(&pipelined) {
+            assert_eq!(b, p, "volume accounting must not depend on scheduling");
+        }
     }
 
     #[test]

@@ -5,20 +5,35 @@
 //! Rust + JAX + Pallas system.
 //!
 //! Layer 3 (this crate) is the distributed-training coordinator: dynamic
-//! hash embedding tables, automatic table merging, two-stage ID
-//! deduplication, dynamic sequence balancing, hybrid-parallel training
-//! (model-parallel sparse + data-parallel dense), checkpoint resharding,
-//! mixed precision, and gradient accumulation. Layers 2/1 (JAX model and
-//! the Pallas HSTU kernel under `python/compile/`) are AOT-compiled to HLO
-//! text at build time and executed from Rust via PJRT (`runtime`); Python
-//! never runs on the training hot path.
+//! hash embedding tables (single-threaded and lock-striped concurrent),
+//! automatic table merging, two-stage ID deduplication with a pipelined
+//! two-phase exchange, dynamic sequence balancing, hybrid-parallel
+//! training (model-parallel sparse + data-parallel dense), checkpoint
+//! resharding, mixed precision, and gradient accumulation. Layers 2/1
+//! (JAX model and the Pallas HSTU kernel under `python/compile/`) are
+//! AOT-compiled to HLO text at build time and executed from Rust via
+//! PJRT behind the `pjrt` feature; the default build executes the same
+//! artifact contract on the deterministic reference CPU backend
+//! ([`runtime::reference`]), so training, tests and CI run fully
+//! offline. Python never runs on the training hot path.
 //!
 //! Entry points:
 //! - [`config`] — model / cluster / training configuration (GRM presets).
-//! - [`train::Trainer`] — the synchronous multi-worker training loop.
-//! - [`embedding`] — the paper's sparse-side contribution (§4).
+//! - [`train::Trainer`] — the synchronous multi-worker training loop;
+//!   `TrainerOptions::overlap` pipelines micro-batch *k+1*'s ID
+//!   all-to-all behind micro-batch *k*'s compute.
+//! - [`embedding`] — the paper's sparse-side contribution (§4):
+//!   [`embedding::EmbeddingStore`] for exclusive stores,
+//!   [`embedding::ConcurrentEmbeddingStore`] +
+//!   [`embedding::concurrent::ConcurrentDynamicTable`] for lock-striped
+//!   concurrent shards, and
+//!   [`embedding::sharded::ShardedEmbedding::post_ids`] /
+//!   [`embedding::sharded::ShardedEmbedding::complete_lookup`] — the
+//!   two-phase sharded exchange over the communicator's posted
+//!   (isend/irecv-style) all-to-all lanes.
 //! - [`balance`] — dynamic sequence balancing (§5.1, Algorithm 1).
-//! - [`sim`] — analytic multi-node scale simulator for the §6 experiments.
+//! - [`sim`] — analytic multi-node scale simulator for the §6
+//!   experiments, including the overlap (hidden-communication) model.
 
 pub mod balance;
 pub mod checkpoint;

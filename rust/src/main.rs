@@ -2,9 +2,11 @@
 //!
 //! ```text
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
-//!                 [--dedup none|comm|lookup|two-stage] [--lr 0.001]
+//!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
+//!                 [--lr 0.001]
 //! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
-//!                 [--no-balancing] [--dedup ...] [--backend hash|mch]
+//!                 [--no-balancing] [--dedup ...] [--overlap on|off]
+//!                 [--backend hash|mch]
 //! mtgrboost data  --out /tmp/shards --sequences 1000 --shards 4
 //! mtgrboost info  [--artifacts artifacts]
 //! ```
@@ -20,6 +22,14 @@ use mtgrboost::runtime::Engine;
 use mtgrboost::sim::{simulate, SimOptions, TableBackend};
 use mtgrboost::train::{Trainer, TrainerOptions};
 use mtgrboost::util::cli::Args;
+
+fn parse_overlap(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" => true,
+        "off" => false,
+        other => bail!("--overlap expects on|off, got `{other}`"),
+    })
+}
 
 fn parse_dedup(s: &str) -> Result<DedupStrategy> {
     Ok(match s {
@@ -62,6 +72,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.train.sequence_balancing = !args.has_flag("no-balancing");
     opts.train.table_merging = !args.has_flag("no-merging");
     opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
+    opts.overlap = parse_overlap(&args.get_or("overlap", "on"))?;
     opts.train.lr = args.get_f64("lr", 1e-3) as f32;
     opts.train.target_tokens = args.get_usize("target-tokens", 2048);
     opts.train.fixed_batch = args.get_usize("batch", 16);
@@ -72,9 +83,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.log_every = args.get_usize("log-every", 10);
     opts.gauc_warmup = args.get_usize("gauc-warmup", steps / 4);
 
+    let overlap = opts.overlap;
     let report = Trainer::new(opts, engine)?.run()?;
     let (lc, lv) = report.final_losses();
     println!("steps                : {}", report.steps.len());
+    println!(
+        "comm exposed/hidden  : {:.3} / {:.3} ms per step (overlap {})",
+        report.mean_exposed_comm_s() * 1e3,
+        report.mean_hidden_comm_s() * 1e3,
+        if overlap { "on" } else { "off" },
+    );
     println!("final loss ctr/ctcvr : {lc:.4} / {lv:.4}");
     println!(
         "GAUC ctr/ctcvr       : {} / {}",
@@ -124,6 +142,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
     opts.sequence_balancing = !args.has_flag("no-balancing");
     opts.table_merging = !args.has_flag("no-merging");
     opts.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
+    // Sim default mirrors SimOptions::new (off): figure baselines keep
+    // the paper's serial-exchange semantics unless the ablation asks.
+    opts.overlap = parse_overlap(&args.get_or("overlap", "off"))?;
     opts.backend = match args.get_or("backend", "hash").as_str() {
         "hash" => TableBackend::DynamicHash,
         "mch" => TableBackend::Mch,

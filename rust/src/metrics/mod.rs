@@ -169,6 +169,21 @@ impl DeviceModel {
     }
 }
 
+/// Split a communication phase into `(exposed, hidden)` seconds given
+/// the compute it can overlap with. With `overlap` on, the exchange
+/// proceeds concurrently with compute (posted isend/irecv), exposing
+/// only the excess beyond the compute window; off, the whole exchange
+/// is serial and exposed. Drives the Fig. 12-style step decomposition
+/// for the trainer and the scale simulator.
+pub fn overlap_exposure(compute_s: f64, comm_s: f64, overlap: bool) -> (f64, f64) {
+    if overlap {
+        let exposed = (comm_s - compute_s).max(0.0);
+        (exposed, comm_s - exposed)
+    } else {
+        (comm_s, 0.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +285,21 @@ mod tests {
         t.add(100, 60_000, 2.0);
         assert!((t.samples_per_sec() - 50.0).abs() < 1e-9);
         assert!((t.tokens_per_sec() - 30_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_exposure_splits_correctly() {
+        // Fully hidden: comm fits inside compute.
+        assert_eq!(overlap_exposure(10.0, 3.0, true), (0.0, 3.0));
+        // Partially hidden: only the excess is exposed.
+        assert_eq!(overlap_exposure(2.0, 5.0, true), (3.0, 2.0));
+        // Overlap off: everything exposed, nothing hidden.
+        assert_eq!(overlap_exposure(10.0, 3.0, false), (3.0, 0.0));
+        // Conservation: exposed + hidden == comm.
+        for &(c, m, o) in &[(1.0, 4.0, true), (4.0, 1.0, true), (2.0, 2.0, false)] {
+            let (e, h) = overlap_exposure(c, m, o);
+            assert!((e + h - m).abs() < 1e-12);
+        }
     }
 
     #[test]

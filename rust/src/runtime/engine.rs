@@ -1,14 +1,24 @@
-//! The PJRT execution engine.
+//! The execution engine.
 //!
-//! PJRT client/executable handles wrap raw pointers and are not `Send`,
-//! so a dedicated engine thread owns them all; worker threads submit
-//! requests through a channel and block on a reply channel. Executables
-//! are compiled lazily per (model, bucket, kind) and cached — matching a
-//! deployment where each model variant is compiled once per process.
+//! Two backends sit behind one request channel:
+//!
+//! - **PJRT** (feature `pjrt`): client/executable handles wrap raw
+//!   pointers and are not `Send`, so a dedicated engine thread owns them
+//!   all; worker threads submit requests through a channel and block on
+//!   a reply channel. Executables are compiled lazily per (model,
+//!   bucket, kind) and cached — matching a deployment where each model
+//!   variant is compiled once per process. Requires the `xla` bindings,
+//!   which the offline registry does not carry.
+//! - **Reference CPU** (default): [`super::reference`] executes a
+//!   deterministic pure-Rust stand-in for the train/forward artifacts,
+//!   so the full distributed trainer runs — and is bit-reproducible —
+//!   without Python, artifacts, or PJRT. [`Engine::reference`] builds an
+//!   engine over an in-memory manifest for exactly this path.
 //!
 //! Host-side data travels as [`Tensor`] (shape + typed buffer); the
-//! engine converts to/from XLA literals at the boundary.
+//! engine converts at the backend boundary.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
@@ -74,6 +84,7 @@ impl Tensor {
         Ok(self.as_f32()?[0])
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -83,6 +94,7 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -180,6 +192,28 @@ impl Engine {
         Engine::start(&Manifest::default_dir())
     }
 
+    /// Start an engine over the in-memory reference manifest (`tiny` and
+    /// `small` presets with deterministic built-in parameters), executed
+    /// by the pure-Rust reference backend. No artifacts directory, no
+    /// Python, no PJRT — the path used by offline tests and CI.
+    pub fn reference(seed: u64) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::reference(seed));
+        let (tx, rx) = channel::<Msg>();
+        let mani2 = Arc::clone(&manifest);
+        let handle = std::thread::Builder::new()
+            .name("reference-engine".into())
+            .spawn(move || reference_engine_main(mani2, rx))
+            .context("spawn engine thread")?;
+        Ok(Engine {
+            tx: tx.clone(),
+            manifest,
+            _join: Arc::new(JoinGuard {
+                tx,
+                handle: Some(handle),
+            }),
+        })
+    }
+
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -266,7 +300,36 @@ impl Engine {
     }
 }
 
+/// The engine thread without PJRT: every request executes on the
+/// deterministic reference CPU backend ([`super::reference`]).
+#[cfg(not(feature = "pjrt"))]
+fn engine_main(_dir: PathBuf, manifest: Arc<Manifest>, rx: std::sync::mpsc::Receiver<Msg>) {
+    reference_engine_main(manifest, rx);
+}
+
+/// Serve requests with the reference executor until shutdown.
+fn reference_engine_main(manifest: Arc<Manifest>, rx: std::sync::mpsc::Receiver<Msg>) {
+    while let Ok(msg) = rx.recv() {
+        let req = match msg {
+            Msg::Run(r) => r,
+            Msg::Shutdown => break,
+        };
+        let result = (|| -> Result<Vec<Tensor>> {
+            let arts = manifest.model(&req.model)?;
+            anyhow::ensure!(
+                arts.buckets.iter().any(|b| (b.batch, b.len) == req.bucket),
+                "no bucket {:?} for model {}",
+                req.bucket,
+                req.model
+            );
+            super::reference::execute(arts, req.kind, req.bucket, &req.inputs)
+        })();
+        let _ = req.reply.send(result);
+    }
+}
+
 /// The engine thread: owns the PJRT client + executable cache.
+#[cfg(feature = "pjrt")]
 fn engine_main(dir: PathBuf, manifest: Arc<Manifest>, rx: std::sync::mpsc::Receiver<Msg>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,

@@ -12,6 +12,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Marker used in place of an artifact/params file name by the built-in
+/// reference manifest ([`Manifest::reference`]): the reference backend
+/// synthesizes these deterministically instead of reading disk.
+pub const BUILTIN: &str = "<builtin>";
+
 /// Which artifact of a bucket to execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ArtifactKind {
@@ -55,6 +60,9 @@ pub struct ModelArtifacts {
     pub tasks: usize,
     pub param_count: usize,
     pub params_bin: String,
+    /// Seed mixed into built-in parameter generation (the manifest
+    /// seed); ignored when `params_bin` names a real file.
+    pub params_seed: u64,
     /// Sorted ascending by (batch, len).
     pub buckets: Vec<Bucket>,
 }
@@ -74,8 +82,21 @@ impl ModelArtifacts {
         self.buckets.last().expect("no buckets")
     }
 
-    /// Load the initial dense parameter vector.
+    /// Load the initial dense parameter vector. Built-in models generate
+    /// theirs deterministically (a pure function of model name and param
+    /// count, so every worker and every process agrees bit-for-bit).
     pub fn load_params(&self, dir: &Path) -> Result<Vec<f32>> {
+        if self.params_bin == BUILTIN {
+            let name_hash = crate::embedding::hash::murmur3_x86_32(self.name.as_bytes(), 7);
+            let seed = crate::embedding::hash::hash_id(
+                self.param_count as u64 ^ self.params_seed,
+                name_hash as u64,
+            );
+            let mut rng = crate::util::rng::Xoshiro256::new(seed);
+            return Ok((0..self.param_count)
+                .map(|_| rng.normal(0.0, 0.05) as f32)
+                .collect());
+        }
         let path = dir.join(&self.params_bin);
         let bytes = std::fs::read(&path)
             .with_context(|| format!("read {}", path.display()))?;
@@ -109,6 +130,7 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
         let v = Json::parse(&text).context("parse manifest.json")?;
+        let seed = v.get("seed").as_usize().unwrap_or(0) as u64;
         let mut models = BTreeMap::new();
         let model_obj = v
             .get("models")
@@ -135,13 +157,14 @@ impl Manifest {
                     tasks: m.expect_usize("tasks")?,
                     param_count: m.expect_usize("param_count")?,
                     params_bin: m.expect_str("params_bin")?.to_string(),
+                    params_seed: seed,
                     buckets,
                 },
             );
         }
         Ok(Manifest {
             dir: dir.to_path_buf(),
-            seed: v.get("seed").as_usize().unwrap_or(0) as u64,
+            seed,
             models,
         })
     }
@@ -150,6 +173,46 @@ impl Manifest {
         self.models
             .get(name)
             .with_context(|| format!("model `{name}` not in manifest"))
+    }
+
+    /// Build the in-memory reference manifest: the CPU-scale `tiny` and
+    /// `small` presets with built-in deterministic parameters and a
+    /// small ladder of (batch, length) buckets. This is what
+    /// [`crate::runtime::Engine::reference`] serves — no files involved.
+    pub fn reference(seed: u64) -> Manifest {
+        let mut models = BTreeMap::new();
+        for name in ["tiny", "small"] {
+            let cfg = crate::config::ModelConfig::by_name(name)
+                .expect("reference presets exist");
+            let buckets = [(4usize, 32usize), (8, 64), (16, 128), (32, 256)]
+                .iter()
+                .map(|&(batch, len)| Bucket {
+                    batch,
+                    len,
+                    train: BUILTIN.to_string(),
+                    forward: BUILTIN.to_string(),
+                })
+                .collect();
+            models.insert(
+                name.to_string(),
+                ModelArtifacts {
+                    name: name.to_string(),
+                    emb_dim: cfg.emb_dim,
+                    heads: cfg.hstu_heads,
+                    blocks: cfg.hstu_blocks,
+                    tasks: cfg.num_tasks,
+                    param_count: cfg.dense_params(),
+                    params_bin: BUILTIN.to_string(),
+                    params_seed: seed,
+                    buckets,
+                },
+            );
+        }
+        Manifest {
+            dir: PathBuf::new(),
+            seed,
+            models,
+        }
     }
 
     /// Default artifacts directory: `$MTGR_ARTIFACTS` or `./artifacts`.

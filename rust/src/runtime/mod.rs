@@ -1,17 +1,25 @@
-//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
-//! the Rust hot path.
+//! Execution runtime: load the AOT HLO-text artifacts (or the built-in
+//! reference manifest) and execute train/forward steps from the Rust
+//! hot path.
 //!
 //! - [`manifest`] — parse `artifacts/manifest.json` (bucket list, param
-//!   counts, artifact file names) and load `*_params.bin`.
+//!   counts, artifact file names), load `*_params.bin`, or synthesize
+//!   the in-memory reference manifest ([`Manifest::reference`]).
 //! - [`engine`] — the execution service. PJRT handles are not `Send`, so
 //!   a dedicated engine thread owns the `PjRtClient` and the compiled
 //!   executables (lazily compiled per (model, bucket, kind)); worker
 //!   threads submit [`engine::Tensor`] batches over a channel and block
 //!   on the reply. This mirrors a real deployment where device streams
-//!   are owned by a driver thread.
+//!   are owned by a driver thread. Without the `pjrt` feature the same
+//!   channel is served by the reference backend.
+//! - [`reference`] — deterministic pure-Rust train/forward executor
+//!   (masked mean-pool + per-task linear heads + BCE, analytic
+//!   gradients) honoring the exact artifact contract, so the full
+//!   distributed trainer runs offline and bit-reproducibly.
 
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 
 pub use engine::{Engine, Tensor, TrainOutputs};
 pub use manifest::{ArtifactKind, Bucket, Manifest, ModelArtifacts};

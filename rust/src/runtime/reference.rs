@@ -1,0 +1,333 @@
+//! Deterministic pure-Rust reference executor — the CPU stand-in for
+//! the AOT train/forward artifacts.
+//!
+//! The real artifacts run the HSTU+MMoE stack through PJRT; offline (no
+//! `xla` bindings, no compiled HLO) we still need the *system* — the
+//! distributed trainer, sharded embedding exchange, optimizers and
+//! checkpointing — to execute end to end and bit-reproducibly. This
+//! module implements a minimal differentiable head with the exact
+//! artifact contract:
+//!
+//! ```text
+//! train:   (params, emb[B,L,D], lengths[B], labels[B,T])
+//!        → (loss_sums[T], grads[P], emb_grad[B,L,D], logits[B,T], n_valid)
+//! forward: (params, emb, lengths) → (logits[B,T],)
+//! ```
+//!
+//! Model: per-sequence masked mean-pool over the valid positions, then
+//! one linear head per task on the first `T·(D+1)` parameters, with
+//! binary cross-entropy losses. Gradients are analytic (verified by a
+//! finite-difference test below) and flow to both the head parameters
+//! and the embedding input, so sparse rows genuinely train. Every
+//! operation is fixed-order `f32` arithmetic: two runs with identical
+//! inputs produce bit-identical outputs, which the e2e determinism
+//! suite relies on.
+
+use anyhow::{bail, ensure, Result};
+
+use super::engine::Tensor;
+use super::manifest::{ArtifactKind, ModelArtifacts};
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Numerically stable `ln(1 + e^z)`.
+#[inline]
+fn softplus(z: f32) -> f32 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Execute one request against the reference model.
+pub fn execute(
+    arts: &ModelArtifacts,
+    kind: ArtifactKind,
+    bucket: (usize, usize),
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let (b, l) = bucket;
+    let d = arts.emb_dim;
+    let t = arts.tasks;
+    let p = arts.param_count;
+    ensure!(
+        p >= t * (d + 1),
+        "reference model needs {} head params, manifest says {p}",
+        t * (d + 1)
+    );
+    let want = match kind {
+        ArtifactKind::Train => 4,
+        ArtifactKind::Forward => 3,
+    };
+    ensure!(inputs.len() == want, "expected {want} inputs, got {}", inputs.len());
+
+    let params = inputs[0].as_f32()?;
+    ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
+    let emb = inputs[1].as_f32()?;
+    ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
+    let lengths = match &inputs[2] {
+        Tensor::I32 { data, .. } => data.as_slice(),
+        _ => bail!("lengths tensor is not i32"),
+    };
+    ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
+
+    // ---- masked mean-pool per sequence ------------------------------
+    let mut pool = vec![0.0f32; b * d];
+    let mut valid_len = vec![0usize; b];
+    for i in 0..b {
+        let len = lengths[i].clamp(0, l as i32) as usize;
+        valid_len[i] = len;
+        if len == 0 {
+            continue;
+        }
+        let acc = &mut pool[i * d..(i + 1) * d];
+        for pos in 0..len {
+            let row = &emb[(i * l + pos) * d..(i * l + pos + 1) * d];
+            for (a, x) in acc.iter_mut().zip(row) {
+                *a += x;
+            }
+        }
+        let inv = 1.0 / len as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+
+    // ---- linear heads ------------------------------------------------
+    // Head layout: task k owns params[k·(D+1) .. k·(D+1)+D] as weights
+    // plus params[k·(D+1)+D] as bias.
+    let mut logits = vec![0.0f32; b * t];
+    for i in 0..b {
+        for k in 0..t {
+            let off = k * (d + 1);
+            let w = &params[off..off + d];
+            let mut z = params[off + d];
+            for j in 0..d {
+                z += w[j] * pool[i * d + j];
+            }
+            logits[i * t + k] = z;
+        }
+    }
+
+    if kind == ArtifactKind::Forward {
+        return Ok(vec![Tensor::f32(&[b, t], logits)]);
+    }
+
+    let labels = inputs[3].as_f32()?;
+    ensure!(labels.len() == b * t, "labels arity: {} vs {}", labels.len(), b * t);
+
+    // ---- loss + analytic backward over valid samples -----------------
+    let mut loss_sums = vec![0.0f32; t];
+    let mut dz = vec![0.0f32; b * t];
+    let mut n_valid = 0.0f32;
+    for i in 0..b {
+        if valid_len[i] == 0 {
+            continue;
+        }
+        n_valid += 1.0;
+        for k in 0..t {
+            let z = logits[i * t + k];
+            let y = labels[i * t + k];
+            loss_sums[k] += softplus(z) - y * z;
+            dz[i * t + k] = sigmoid(z) - y;
+        }
+    }
+
+    let mut grads = vec![0.0f32; p];
+    for i in 0..b {
+        if valid_len[i] == 0 {
+            continue;
+        }
+        for k in 0..t {
+            let g = dz[i * t + k];
+            let off = k * (d + 1);
+            for j in 0..d {
+                grads[off + j] += g * pool[i * d + j];
+            }
+            grads[off + d] += g;
+        }
+    }
+
+    // d loss / d emb[i, pos, :] = Σ_k dz[i,k] · w_k / len_i for valid
+    // positions; exactly zero on padding (the contract the trainer's
+    // scatter relies on).
+    let mut emb_grad = vec![0.0f32; b * l * d];
+    let mut gvec = vec![0.0f32; d];
+    for i in 0..b {
+        let len = valid_len[i];
+        if len == 0 {
+            continue;
+        }
+        gvec.fill(0.0);
+        let inv = 1.0 / len as f32;
+        for k in 0..t {
+            let w = &params[k * (d + 1)..k * (d + 1) + d];
+            let g = dz[i * t + k] * inv;
+            for j in 0..d {
+                gvec[j] += g * w[j];
+            }
+        }
+        for pos in 0..len {
+            emb_grad[(i * l + pos) * d..(i * l + pos + 1) * d].copy_from_slice(&gvec);
+        }
+    }
+
+    Ok(vec![
+        Tensor::f32(&[t], loss_sums),
+        Tensor::f32(&[p], grads),
+        Tensor::f32(&[b, l, d], emb_grad),
+        Tensor::f32(&[b, t], logits),
+        Tensor::scalar_f32(n_valid),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Bucket;
+    use crate::util::rng::Xoshiro256;
+
+    const B: usize = 3;
+    const L: usize = 4;
+    const D: usize = 2;
+    const T: usize = 2;
+    const P: usize = 10; // ≥ T·(D+1) = 6
+
+    fn arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "ref-test".into(),
+            emb_dim: D,
+            heads: 1,
+            blocks: 1,
+            tasks: T,
+            param_count: P,
+            params_bin: "<builtin>".into(),
+            params_seed: 0,
+            buckets: vec![Bucket {
+                batch: B,
+                len: L,
+                train: "<builtin>".into(),
+                forward: "<builtin>".into(),
+            }],
+        }
+    }
+
+    fn inputs(seed: u64) -> Vec<Tensor> {
+        let mut rng = Xoshiro256::new(seed);
+        let params: Vec<f32> = (0..P).map(|_| rng.normal(0.0, 0.5) as f32).collect();
+        let emb: Vec<f32> = (0..B * L * D).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lengths = vec![3, 1, 0]; // last sample padded out
+        let labels: Vec<f32> = (0..B * T).map(|_| rng.gen_range(2) as f32).collect();
+        vec![
+            Tensor::f32(&[P], params),
+            Tensor::f32(&[B, L, D], emb),
+            Tensor::i32(&[B], lengths),
+            Tensor::f32(&[B, T], labels),
+        ]
+    }
+
+    fn total_loss(out: &[Tensor]) -> f64 {
+        out[0].as_f32().unwrap().iter().map(|&x| x as f64).sum()
+    }
+
+    #[test]
+    fn shapes_and_padding_contract() {
+        let a = arts();
+        let out = execute(&a, ArtifactKind::Train, (B, L), &inputs(1)).unwrap();
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0].as_f32().unwrap().len(), T);
+        assert_eq!(out[1].as_f32().unwrap().len(), P);
+        assert_eq!(out[2].as_f32().unwrap().len(), B * L * D);
+        assert_eq!(out[3].as_f32().unwrap().len(), B * T);
+        assert_eq!(out[4].as_f32().unwrap()[0], 2.0, "one padded sample");
+        // Padded sample's embedding gradient is exactly zero.
+        let eg = out[2].as_f32().unwrap();
+        assert!(eg[(B - 1) * L * D..].iter().all(|&x| x == 0.0));
+        // And so are positions past each sequence's length (len 1 → pos ≥ 1).
+        assert!(eg[(1 * L + 1) * D..2 * L * D].iter().all(|&x| x == 0.0));
+        // Losses positive (BCE) and finite.
+        assert!(out[0].as_f32().unwrap().iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn forward_matches_train_logits() {
+        let a = arts();
+        let ins = inputs(2);
+        let train = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let fwd = execute(&a, ArtifactKind::Forward, (B, L), &ins[..3]).unwrap();
+        assert_eq!(fwd[0].as_f32().unwrap(), train[3].as_f32().unwrap());
+    }
+
+    #[test]
+    fn bit_identical_across_runs() {
+        let a = arts();
+        let ins = inputs(3);
+        let o1 = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let o2 = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        for (x, y) in o1.iter().zip(&o2) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn param_gradients_match_finite_differences() {
+        let a = arts();
+        let ins = inputs(4);
+        let base = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let grads = base[1].as_f32().unwrap().to_vec();
+        let l0 = total_loss(&base);
+        let eps = 1e-3f32;
+        for idx in 0..T * (D + 1) {
+            let mut bumped = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut bumped[0] {
+                data[idx] += eps;
+            }
+            let l1 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &bumped).unwrap());
+            let fd = (l1 - l0) / eps as f64;
+            assert!(
+                (fd - grads[idx] as f64).abs() < 2e-2,
+                "param {idx}: fd {fd:.4} vs analytic {:.4}",
+                grads[idx]
+            );
+        }
+        // Params beyond the head carry exactly zero gradient.
+        assert!(grads[T * (D + 1)..].iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn emb_gradients_match_finite_differences() {
+        let a = arts();
+        let ins = inputs(5);
+        let base = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let eg = base[2].as_f32().unwrap().to_vec();
+        let l0 = total_loss(&base);
+        let eps = 1e-3f32;
+        // Probe a handful of valid positions.
+        for &idx in &[0usize, 1, D, 2 * D + 1, (1 * L) * D] {
+            let mut bumped = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut bumped[1] {
+                data[idx] += eps;
+            }
+            let l1 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &bumped).unwrap());
+            let fd = (l1 - l0) / eps as f64;
+            assert!(
+                (fd - eg[idx] as f64).abs() < 2e-2,
+                "emb {idx}: fd {fd:.4} vs analytic {:.4}",
+                eg[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn bad_arity_and_small_param_count_rejected() {
+        let a = arts();
+        assert!(execute(&a, ArtifactKind::Train, (B, L), &inputs(6)[..2]).is_err());
+        let mut small = arts();
+        small.param_count = 2; // < T·(D+1)
+        assert!(execute(&small, ArtifactKind::Train, (B, L), &inputs(7)).is_err());
+    }
+}

@@ -129,6 +129,12 @@ pub struct SimOptions {
     // ---- feature toggles -------------------------------------------
     pub sequence_balancing: bool,
     pub dedup: DedupStrategy,
+    /// Overlap the ID all-to-all with compute (two-phase pipelined
+    /// lookup); only the excess beyond the compute window is exposed.
+    /// Defaults to **off** so existing figure baselines keep the
+    /// paper's serial-exchange semantics; the overlap ablation
+    /// (fig12, `--overlap`) enables it explicitly.
+    pub overlap: bool,
     /// Merged lookup ops (true) vs one op per logical table (false);
     /// per-op fixed launch overhead models the §4.2 fusion win.
     pub table_merging: bool,
@@ -160,6 +166,7 @@ impl SimOptions {
             seed: 2026,
             sequence_balancing: true,
             dedup: DedupStrategy::TwoStage,
+            overlap: false,
             table_merging: true,
             backend: TableBackend::DynamicHash,
             fixed_batch: batch,
@@ -183,7 +190,10 @@ pub struct DeviceStep {
     pub tokens: usize,
     pub compute_s: f64,
     pub lookup_s: f64,
+    /// Exposed communication (embedding exchange + un-hidden ID share).
     pub comm_s: f64,
+    /// ID-exchange seconds hidden behind compute (0 with overlap off).
+    pub hidden_comm_s: f64,
 }
 
 /// One simulated step.
@@ -316,10 +326,11 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
             let emb_bytes_pp = (sent_per_dest * dim as f64 * 4.0) as usize;
             // Forward: ID all-to-all + embedding all-to-all. Backward
             // (§3 "Backward Update"): gradient all-to-all of the same
-            // embedding volume back to the owning shards.
-            let comm_s = opts.net.all_to_all_uniform_time(world, id_bytes_pp.max(1))
-                + 2.0 * opts.net.all_to_all_uniform_time(world, emb_bytes_pp.max(1))
-                + op_overhead;
+            // embedding volume back to the owning shards. The ID
+            // exchange can pipeline behind compute (posted two-phase
+            // lookup); the embedding payloads gate the round directly.
+            let id_comm = opts.net.all_to_all_uniform_time(world, id_bytes_pp.max(1));
+            let emb_comm = 2.0 * opts.net.all_to_all_uniform_time(world, emb_bytes_pp.max(1));
 
             let mult = opts.backend.lookup_cost_multiplier(opts.resident_rows);
             // Forward lookups + backward sparse update: the optimizer
@@ -333,6 +344,9 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
                 dim,
             ) + update_hbm;
             let compute_s = opts.device.compute_time(flops);
+            let (id_exposed, id_hidden) =
+                crate::metrics::overlap_exposure(compute_s, id_comm, opts.overlap);
+            let comm_s = emb_comm + id_exposed + op_overhead;
 
             total_samples += seqs as u64;
             total_tokens += tokens as u64;
@@ -342,6 +356,7 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
                 compute_s,
                 lookup_s,
                 comm_s,
+                hidden_comm_s: id_hidden,
             });
         }
         let busy: Vec<f64> = devices
@@ -535,6 +550,37 @@ mod tests {
         let speedup = t64 / t8;
         assert!(speedup > 3.0, "64 GPUs ≥ 3x of 8: {speedup:.2}");
         assert!(speedup < 8.5, "but sublinear: {speedup:.2}");
+    }
+
+    #[test]
+    fn overlap_hides_id_communication() {
+        let mut on = quick_opts(16);
+        on.overlap = true;
+        let mut off = on.clone();
+        off.overlap = false;
+        let r_on = simulate(&on);
+        let r_off = simulate(&off);
+        let exposed = |r: &SimResult| {
+            r.steps
+                .iter()
+                .flat_map(|s| s.devices.iter().map(|d| d.comm_s))
+                .sum::<f64>()
+        };
+        let hidden = |r: &SimResult| {
+            r.steps
+                .iter()
+                .flat_map(|s| s.devices.iter().map(|d| d.hidden_comm_s))
+                .sum::<f64>()
+        };
+        assert!(
+            exposed(&r_on) < exposed(&r_off),
+            "overlap must reduce exposed communication: {} vs {}",
+            exposed(&r_on),
+            exposed(&r_off)
+        );
+        assert!(hidden(&r_on) > 0.0, "hidden share must be reported");
+        assert_eq!(hidden(&r_off), 0.0, "no hiding without overlap");
+        assert!(r_on.throughput >= r_off.throughput);
     }
 
     #[test]

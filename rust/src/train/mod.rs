@@ -53,6 +53,11 @@ pub struct TrainerOptions {
     pub device: DeviceModel,
     pub net: NetModel,
     pub steps: usize,
+    /// Overlap micro-batch *k+1*'s ID all-to-all with micro-batch *k*'s
+    /// compute (two-phase `post_ids`/`complete_lookup` pipeline). Off
+    /// reproduces the strictly sequential baseline; the numerics are
+    /// bit-identical either way (ablation axis for Fig. 12).
+    pub overlap: bool,
     /// Initial capacity of each worker's table shard.
     pub shard_capacity: usize,
     /// Collect GAUC during training (costs memory on long runs).
@@ -73,6 +78,7 @@ impl TrainerOptions {
             device: DeviceModel::default(),
             net: NetModel::default(),
             steps,
+            overlap: true,
             shard_capacity: 4096,
             collect_gauc: true,
             gauc_warmup: 0,
@@ -93,6 +99,12 @@ pub struct StepRecord {
     pub tokens: Vec<u64>,
     /// Simulated per-worker compute+lookup seconds (Fig. 9 shading).
     pub sim_device_s: Vec<f64>,
+    /// Simulated per-worker *exposed* communication seconds (emb
+    /// exchange + whatever part of the ID exchange compute cannot hide).
+    pub sim_exposed_comm_s: Vec<f64>,
+    /// Simulated per-worker ID-exchange seconds hidden behind compute
+    /// (zero with `overlap: false`) — Fig. 12's overlap decomposition.
+    pub sim_hidden_comm_s: Vec<f64>,
     /// Simulated synchronous step seconds (max device + dense sync).
     pub sim_step_s: f64,
     pub wall_s: f64,
@@ -121,6 +133,26 @@ impl TrainReport {
         self.steps.iter().map(|s| s.sim_step_s).sum::<f64>() / n
     }
 
+    /// Mean exposed communication seconds per step (across workers).
+    pub fn mean_exposed_comm_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_exposed_comm_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
+    /// Mean ID-exchange seconds per step hidden behind compute.
+    pub fn mean_hidden_comm_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_hidden_comm_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
     pub fn final_losses(&self) -> (f64, f64) {
         let tail = self.steps.len().saturating_sub(5);
         let w = &self.steps[tail..];
@@ -130,6 +162,11 @@ impl TrainReport {
             w.iter().map(|s| s.loss_ctcvr).sum::<f64>() / n,
         )
     }
+}
+
+/// Mean of a slice (0.0 when empty).
+fn slice_mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
 }
 
 /// The coordinator.
@@ -346,17 +383,12 @@ fn worker_main(
         let n_micro = comm.all_gather_u64(micros.len() as u64);
         let rounds = *n_micro.iter().max().unwrap() as usize;
 
-        let mut step_loss = [0.0f64; 2];
-        for round in 0..rounds {
-            let micro = micros.get(round);
-
-            // ---- lookup (collective) ----------------------------------
-            let (ids, rows, bi, bucket) = phases.time("2_lookup", || {
-                let (bi, bucket) = match micro {
-                    Some(m) => (
-                        BatchIds::build(&m.batch, &schema, &plan),
-                        m.bucket,
-                    ),
+        // Occurrence streams for every round up front, so round k+1's ID
+        // exchange can be posted while round k computes (overlap mode).
+        let round_ids: Vec<(BatchIds, (usize, usize))> = phases.time("2_lookup", || {
+            (0..rounds)
+                .map(|r| match micros.get(r) {
+                    Some(m) => (BatchIds::build(&m.batch, &schema, &plan), m.bucket),
                     None => (
                         BatchIds::build(
                             &Batch {
@@ -368,10 +400,34 @@ fn worker_main(
                         ),
                         (0, 0),
                     ),
-                };
-                let rows = sharded.lookup(&mut comm, &bi.ids, true);
-                (bi.ids.clone(), rows, bi, bucket)
-            });
+                })
+                .collect()
+        });
+
+        let mut step_loss = [0.0f64; 2];
+        let mut posted: Option<crate::embedding::sharded::PendingLookup> = None;
+        for round in 0..rounds {
+            let micro = micros.get(round);
+            let (bi, bucket) = &round_ids[round];
+            let bucket = *bucket;
+
+            // ---- lookup (collective, two-phase) -----------------------
+            // With overlap on, this round's IDs were already posted
+            // during the previous round's compute; only the completion
+            // (serve + embedding exchange) remains.
+            let pending = match posted.take() {
+                Some(p) => p,
+                None => phases.time("2_lookup", || sharded.post_ids(&mut comm, &bi.ids)),
+            };
+            let rows =
+                phases.time("2_lookup", || sharded.complete_lookup(&mut comm, pending, true));
+            if opts.overlap && round + 1 < rounds {
+                // Post the next round's ID all-to-all now — it rides a
+                // dedicated comm lane and drains while we compute.
+                posted = Some(phases.time("2_lookup", || {
+                    sharded.post_ids(&mut comm, &round_ids[round + 1].0.ids)
+                }));
+            }
 
             // ---- forward + backward (local) ---------------------------
             let occ_grads = if let Some(m) = micro {
@@ -412,10 +468,11 @@ fn worker_main(
 
             // ---- sparse backward (collective) + local accumulation ----
             phases.time("4_sparse_update", || {
-                let (lids, lgrads) = sharded.backward(&mut comm, &ids, &occ_grads);
+                let (lids, lgrads) = sharded.backward(&mut comm, &bi.ids, &occ_grads);
                 sparse_acc.add(&lids, &lgrads, 0);
             });
         }
+        debug_assert!(posted.is_none(), "a posted lookup outlived its step");
 
         // ---- weighted dense sync + updates (collective) ---------------
         phases.time("5_dense_sync", || {
@@ -438,21 +495,52 @@ fn worker_main(
         let mut losses = [step_loss[0] as f32, step_loss[1] as f32, my_samples as f32];
         comm.all_reduce_sum(&mut losses);
 
-        // Simulated device time: compute + local lookup + exchange.
+        // Simulated device time: compute + local lookup + exposed
+        // exchange. The embedding exchange is always exposed; the ID
+        // exchange hides behind compute when overlap is on (Fig. 12's
+        // decomposition reports both shares).
         let dv = sharded.volume;
         let lookups = dv.lookups_done - vol_prev.lookups_done;
         let rows_moved = dv.emb_rows_sent - vol_prev.emb_rows_sent;
+        let ids_moved = dv.ids_sent - vol_prev.ids_sent;
         vol_prev = dv;
         let t_compute = opts.device.compute_time(my_flops);
         let t_lookup = opts.device.lookup_time(lookups, rows_moved, d);
-        let bytes_per_pair = (rows_moved * d * 4) / world.max(1).pow(2).max(1);
-        let t_comm = opts.net.all_to_all_uniform_time(world, bytes_per_pair.max(1)) * 2.0;
-        let my_sim = t_compute + t_lookup + t_comm;
-        let sim_all: Vec<f64> = comm
-            .all_gather(crate::collective::comm::Message::Floats(vec![my_sim as f32]))
+        let pairs = world.max(1).pow(2).max(1);
+        let emb_bytes_per_pair = (rows_moved * d * 4) / pairs;
+        let id_bytes_per_pair = (ids_moved * 8) / pairs;
+        let t_emb_comm =
+            opts.net.all_to_all_uniform_time(world, emb_bytes_per_pair.max(1)) * 2.0;
+        let t_id_comm = opts.net.all_to_all_uniform_time(world, id_bytes_per_pair.max(1));
+        // Only rounds actually posted ahead can hide their ID exchange:
+        // the first round of every step is completed right after posting
+        // (nothing to overlap with), so with R rounds at most (R-1)/R of
+        // the ID traffic is pipelined — and it can only hide behind the
+        // compute of the rounds it overlaps, the same (R-1)/R share of
+        // the step's compute, not the whole step.
+        let pipelined_frac = if opts.overlap && rounds > 0 {
+            (rounds - 1) as f64 / rounds as f64
+        } else {
+            0.0
+        };
+        let t_id_hideable = t_id_comm * pipelined_frac;
+        let t_overlap_window = t_compute * pipelined_frac;
+        let (t_id_excess, t_id_hidden) =
+            crate::metrics::overlap_exposure(t_overlap_window, t_id_hideable, opts.overlap);
+        let t_exposed_comm = t_emb_comm + (t_id_comm - t_id_hideable) + t_id_excess;
+        let my_sim = t_compute + t_lookup + t_exposed_comm;
+        let gathered: Vec<Vec<f32>> = comm
+            .all_gather(crate::collective::comm::Message::Floats(vec![
+                my_sim as f32,
+                t_exposed_comm as f32,
+                t_id_hidden as f32,
+            ]))
             .into_iter()
-            .map(|m| m.into_floats()[0] as f64)
+            .map(|m| m.into_floats())
             .collect();
+        let sim_all: Vec<f64> = gathered.iter().map(|v| v[0] as f64).collect();
+        let comm_all: Vec<f64> = gathered.iter().map(|v| v[1] as f64).collect();
+        let hidden_all: Vec<f64> = gathered.iter().map(|v| v[2] as f64).collect();
         let sim_step = sim_all.iter().cloned().fold(0.0, f64::max)
             + opts.net.all_reduce_time(world, params.len() * 4);
 
@@ -467,6 +555,8 @@ fn worker_main(
             samples,
             tokens,
             sim_device_s: sim_all,
+            sim_exposed_comm_s: comm_all,
+            sim_hidden_comm_s: hidden_all,
             sim_step_s: sim_step,
             wall_s,
         });
@@ -542,6 +632,7 @@ mod tests {
             tasks: 2,
             param_count: 10,
             params_bin: "x".into(),
+            params_seed: 0,
             buckets: vec![
                 Bucket {
                     batch: 4,

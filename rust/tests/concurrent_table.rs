@@ -1,0 +1,255 @@
+//! Property and stress tests for the concurrent lock-striped embedding
+//! table: random interleavings of insert/remove/evict preserve row
+//! contents, load-factor bounds hold per stripe, live IDs are never
+//! lost, concurrent readers observe internally consistent rows, and a
+//! multi-threaded shard-stress run produces results identical to the
+//! single-threaded [`DynamicEmbeddingTable`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
+use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::util::rng::Xoshiro256;
+
+/// Property: under any interleaving of insert / lookup / delta / remove
+/// the striped table behaves exactly like a HashMap, keeps every live
+/// id reachable, and every stripe's load factor stays below the
+/// expansion threshold.
+#[test]
+fn prop_interleavings_match_hashmap_and_respect_bounds() {
+    for case in 0..20u64 {
+        let mut rng = Xoshiro256::new(9000 + case);
+        let dim = rng.range_usize(1, 7);
+        let stripes = 1usize << rng.range_usize(0, 4);
+        let table = ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(dim)
+                .with_capacity(1 << rng.range_usize(5, 8))
+                .with_seed(case),
+            stripes,
+        );
+        let mut reference: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut buf = vec![0.0f32; dim];
+        for step in 0..2500 {
+            let id = rng.gen_range(400);
+            match rng.gen_range(12) {
+                0..=6 => {
+                    let existed = table.lookup_or_insert(id, &mut buf);
+                    assert_eq!(existed, reference.contains_key(&id), "case {case} step {step}");
+                    reference.entry(id).or_insert_with(|| buf.clone());
+                    assert_eq!(&buf, reference.get(&id).unwrap(), "case {case}");
+                }
+                7..=8 => {
+                    let delta: Vec<f32> = (0..dim).map(|_| rng.next_f32() - 0.5).collect();
+                    let ok = table.apply_delta(id, &delta);
+                    assert_eq!(ok, reference.contains_key(&id));
+                    if let Some(row) = reference.get_mut(&id) {
+                        for (r, d) in row.iter_mut().zip(&delta) {
+                            *r += d;
+                        }
+                    }
+                }
+                9..=10 => {
+                    assert_eq!(table.remove(id), reference.remove(&id).is_some());
+                }
+                _ => {
+                    let found = table.lookup(id, &mut buf);
+                    assert_eq!(found, reference.contains_key(&id));
+                }
+            }
+            assert_eq!(table.len(), reference.len(), "case {case} step {step}");
+        }
+        assert!(
+            table.max_load_factor() <= 0.76,
+            "case {case}: load factor {}",
+            table.max_load_factor()
+        );
+        // No live id lost; contents intact bit-for-bit.
+        let mut live = table.live_ids();
+        live.sort_unstable();
+        let mut expect: Vec<u64> = reference.keys().copied().collect();
+        expect.sort_unstable();
+        assert_eq!(live, expect, "case {case}");
+        for (id, row) in &reference {
+            assert_eq!(
+                table.row(*id).as_deref(),
+                Some(row.as_slice()),
+                "case {case} id {id}"
+            );
+        }
+    }
+}
+
+/// Property: with a row budget, random insert/evict interleavings keep
+/// the table bounded and never corrupt surviving rows.
+#[test]
+fn prop_eviction_keeps_table_bounded_and_rows_intact() {
+    for case in 0..8u64 {
+        let mut rng = Xoshiro256::new(700 + case);
+        let stripes = 4usize;
+        let budget = 96usize;
+        let table = ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(4)
+                .with_capacity(512)
+                .with_seed(case)
+                .with_max_rows(budget),
+            stripes,
+        );
+        let mut buf = vec![0.0f32; 4];
+        for _ in 0..5000 {
+            let id = rng.gen_range(3000);
+            table.lookup_or_insert(id, &mut buf);
+            if rng.bernoulli(0.05) {
+                table.evict_one();
+            }
+        }
+        // Per-stripe budget of ceil(96/4) ⇒ at most budget + stripes rows.
+        assert!(
+            table.len() <= budget + stripes,
+            "case {case}: len {}",
+            table.len()
+        );
+        assert!(table.stats().evictions > 0);
+        // Surviving rows still match their deterministic re-derivation:
+        // a row never updated equals a fresh insert in a same-seed table.
+        let fresh = ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(4).with_capacity(512).with_seed(case),
+            stripes,
+        );
+        for id in table.live_ids() {
+            let mut expect = vec![0.0f32; 4];
+            fresh.lookup_or_insert(id, &mut expect);
+            assert_eq!(table.row(id).unwrap(), expect, "case {case} id {id}");
+        }
+    }
+}
+
+/// Concurrent readers during writes always observe internally
+/// consistent rows. Rows are pinned to "all dims equal" (zeroed after
+/// insert, then incremented by whole-row +1.0 deltas); a torn read
+/// would surface as a row whose elements disagree.
+#[test]
+fn concurrent_readers_see_consistent_rows_during_writes() {
+    const DIM: usize = 8;
+    const IDS: u64 = 128;
+    const WRITES_PER_THREAD: usize = 400;
+    const WRITERS: u64 = 4;
+    let table = Arc::new(ConcurrentDynamicTable::new(
+        DynamicTableConfig::new(DIM).with_capacity(1024).with_seed(42),
+        8,
+    ));
+    // Zero every row exactly (subtract its own init), establishing the
+    // all-dims-equal invariant writers maintain.
+    let mut buf = vec![0.0f32; DIM];
+    for id in 0..IDS {
+        table.lookup_or_insert(id, &mut buf);
+        let neg: Vec<f32> = buf.iter().map(|x| -x).collect();
+        assert!(table.apply_delta(id, &neg));
+    }
+
+    let mut joins = Vec::new();
+    for w in 0..WRITERS {
+        let table = Arc::clone(&table);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::new(100 + w);
+            let inc = vec![1.0f32; DIM];
+            for _ in 0..WRITES_PER_THREAD {
+                let id = rng.gen_range(IDS);
+                assert!(table.apply_delta(id, &inc));
+            }
+        }));
+    }
+    for r in 0..4u64 {
+        let table = Arc::clone(&table);
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::new(200 + r);
+            let mut out = vec![0.0f32; DIM];
+            let max = (WRITERS as usize * WRITES_PER_THREAD) as f32;
+            for _ in 0..4000 {
+                let id = rng.gen_range(IDS);
+                assert!(table.lookup(id, &mut out));
+                let first = out[0];
+                assert!(
+                    out.iter().all(|&x| x == first),
+                    "torn row for id {id}: {out:?}"
+                );
+                assert!(first >= 0.0 && first <= max && first.fract() == 0.0);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // Total increments conserved: Σ row values = DIM · total writes.
+    let mut total = 0.0f64;
+    let mut out = vec![0.0f32; DIM];
+    for id in 0..IDS {
+        assert!(table.lookup(id, &mut out));
+        total += out[0] as f64;
+    }
+    assert_eq!(total as usize, WRITERS as usize * WRITES_PER_THREAD);
+}
+
+/// The acceptance stress: many threads hammer one shard with parallel
+/// lookups and integer-valued updates; the result must be identical to
+/// a single-threaded [`DynamicEmbeddingTable`] replaying the same op
+/// multiset. Integer-valued deltas make float accumulation
+/// order-independent, so equality is exact.
+#[test]
+fn stress_parallel_shard_matches_single_threaded_table() {
+    const DIM: usize = 16;
+    const IDS: u64 = 500;
+    const THREADS: u64 = 8;
+    let cfg = || DynamicTableConfig::new(DIM).with_capacity(2048).with_seed(77);
+    let conc = Arc::new(ConcurrentDynamicTable::new(cfg(), 8));
+
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let conc = Arc::clone(&conc);
+        joins.push(std::thread::spawn(move || {
+            let mut buf = vec![0.0f32; DIM];
+            // Each thread owns ids ≡ t (mod THREADS) for updates but
+            // reads everything, so stripes see mixed reader/writer
+            // traffic (the stage-2 server pattern).
+            let mut rng = Xoshiro256::new(t);
+            for id in (t..IDS).step_by(THREADS as usize) {
+                conc.lookup_or_insert(id, &mut buf);
+                let k = 1 + (id % 5) as usize;
+                let inc = vec![1.0f32; DIM];
+                for _ in 0..k {
+                    assert!(conc.apply_delta(id, &inc));
+                }
+            }
+            for _ in 0..1000 {
+                let id = rng.gen_range(IDS);
+                let _ = conc.lookup(id, &mut buf);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // Single-threaded replay of the same multiset of operations.
+    let mut single = DynamicEmbeddingTable::new(cfg());
+    let mut buf = vec![0.0f32; DIM];
+    for id in 0..IDS {
+        single.lookup_or_insert(id, &mut buf);
+        let k = 1 + (id % 5) as usize;
+        let inc = vec![1.0f32; DIM];
+        for _ in 0..k {
+            assert!(single.apply_delta(id, &inc));
+        }
+    }
+
+    assert_eq!(conc.len(), single.len());
+    let mut a = vec![0.0f32; DIM];
+    for id in 0..IDS {
+        assert!(conc.lookup(id, &mut a), "id {id} lost");
+        let mut b = vec![0.0f32; DIM];
+        assert!(single.lookup(id, &mut b));
+        assert_eq!(a, b, "id {id}: parallel result differs from single-threaded");
+    }
+    assert_eq!(conc.stats().inserts, single.stats.inserts);
+}

@@ -1,0 +1,238 @@
+//! `DedupVolume` accounting audit: the stage-1 + stage-2 counters that
+//! `ShardedEmbedding` reports must match an independent brute-force
+//! recount of the exchanged messages (computed with plain `HashSet`s
+//! from the input id lists), in both blocking and pipelined modes —
+//! and the per-pair byte counters must agree with what actually crossed
+//! the communicator.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::thread;
+
+use mtgrboost::collective::comm::{CommGroup, CommHandle};
+use mtgrboost::embedding::dedup::{DedupStrategy, DedupVolume};
+use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use mtgrboost::embedding::sharded::{shard_owner, ShardedEmbedding};
+
+const DIM: usize = 4;
+const WORLD: usize = 3;
+
+/// The deterministic per-rank id batches every test uses (duplicates
+/// within a batch, across batches, and across ranks).
+fn batches_for(rank: usize) -> Vec<Vec<u64>> {
+    let r = rank as u64;
+    vec![
+        (0..60).map(|i| (i % 13) + r).collect(),
+        (0..40).map(|i| (i * 3) % 21).collect(),
+    ]
+}
+
+/// Brute-force recount: replay the exchange bookkeeping for `rank`
+/// using sets, no `Dedup` machinery.
+fn expected_volume(rank: usize, strategy: DedupStrategy) -> DedupVolume {
+    let mut v = DedupVolume::default();
+    let n_batches = batches_for(0).len();
+    for b in 0..n_batches {
+        // Requester side: this rank's batch partitioned by owner.
+        let my = &batches_for(rank)[b];
+        v.ids_raw += my.len();
+        for dst in 0..WORLD {
+            let bucket: Vec<u64> = my
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == dst)
+                .collect();
+            let sent = if strategy.stage1() {
+                bucket.iter().collect::<HashSet<_>>().len()
+            } else {
+                bucket.len()
+            };
+            v.ids_sent += sent;
+            v.emb_rows_raw += bucket.len();
+            v.emb_rows_sent += sent;
+        }
+        // Server side: what every rank sends *to* this rank.
+        let mut received_total = 0usize;
+        let mut union: HashSet<u64> = HashSet::new();
+        for src in 0..WORLD {
+            let theirs = &batches_for(src)[b];
+            let bucket: Vec<u64> = theirs
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == rank)
+                .collect();
+            received_total += if strategy.stage1() {
+                bucket.iter().collect::<HashSet<_>>().len()
+            } else {
+                bucket.len()
+            };
+            union.extend(bucket);
+        }
+        v.lookups_raw += received_total;
+        v.lookups_done += if strategy.stage2() {
+            union.len()
+        } else {
+            received_total
+        };
+    }
+    v
+}
+
+/// Expected non-self bytes this rank pushes through the communicator:
+/// its outgoing unique-id messages plus its embedding replies.
+fn expected_wire_bytes(rank: usize, strategy: DedupStrategy) -> u64 {
+    let mut bytes = 0u64;
+    for b in 0..batches_for(0).len() {
+        // IDs this rank sends to each other rank.
+        let my = &batches_for(rank)[b];
+        for dst in 0..WORLD {
+            if dst == rank {
+                continue;
+            }
+            let bucket: Vec<u64> = my
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == dst)
+                .collect();
+            let sent = if strategy.stage1() {
+                bucket.iter().collect::<HashSet<_>>().len()
+            } else {
+                bucket.len()
+            };
+            bytes += (sent * 8) as u64;
+        }
+        // Replies this rank returns: one row per id received.
+        for src in 0..WORLD {
+            if src == rank {
+                continue;
+            }
+            let theirs = &batches_for(src)[b];
+            let bucket: Vec<u64> = theirs
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == rank)
+                .collect();
+            let sent = if strategy.stage1() {
+                bucket.iter().collect::<HashSet<_>>().len()
+            } else {
+                bucket.len()
+            };
+            bytes += (sent * DIM * 4) as u64;
+        }
+    }
+    bytes
+}
+
+fn run_world<T: Send + 'static>(
+    f: impl Fn(usize, &mut ShardedEmbedding<DynamicEmbeddingTable>, &mut CommHandle) -> T
+        + Send
+        + Sync
+        + 'static,
+) -> Vec<T> {
+    let f = Arc::new(f);
+    CommGroup::new(WORLD)
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut h)| {
+            let f = Arc::clone(&f);
+            thread::spawn(move || {
+                let table = DynamicEmbeddingTable::new(
+                    DynamicTableConfig::new(DIM).with_capacity(256).with_seed(1),
+                );
+                let mut se = ShardedEmbedding::new(table, DedupStrategy::TwoStage);
+                f(rank, &mut se, &mut h)
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|j| j.join().unwrap())
+        .collect()
+}
+
+fn audit(strategy: DedupStrategy, pipelined: bool) {
+    let out = run_world(move |rank, se, comm| {
+        se.strategy = strategy;
+        let batches = batches_for(rank);
+        if pipelined {
+            let p0 = se.post_ids(comm, &batches[0]);
+            let p1 = se.post_ids(comm, &batches[1]);
+            let _ = se.complete_lookup(comm, p0, true);
+            let _ = se.complete_lookup(comm, p1, true);
+        } else {
+            for b in &batches {
+                let _ = se.lookup(comm, b, true);
+            }
+        }
+        (rank, se.volume, comm.stats.all_to_all_bytes)
+    });
+    for (rank, volume, wire_bytes) in out {
+        let expect = expected_volume(rank, strategy);
+        assert_eq!(
+            volume, expect,
+            "rank {rank} {strategy:?} pipelined={pipelined}"
+        );
+        assert_eq!(
+            wire_bytes,
+            expected_wire_bytes(rank, strategy),
+            "rank {rank} {strategy:?} pipelined={pipelined}: wire bytes"
+        );
+    }
+}
+
+#[test]
+fn volume_matches_brute_force_recount_blocking() {
+    for strategy in [
+        DedupStrategy::None,
+        DedupStrategy::CommUnique,
+        DedupStrategy::LookupUnique,
+        DedupStrategy::TwoStage,
+    ] {
+        audit(strategy, false);
+    }
+}
+
+#[test]
+fn volume_matches_brute_force_recount_pipelined() {
+    for strategy in [
+        DedupStrategy::None,
+        DedupStrategy::CommUnique,
+        DedupStrategy::LookupUnique,
+        DedupStrategy::TwoStage,
+    ] {
+        audit(strategy, true);
+    }
+}
+
+#[test]
+fn per_destination_byte_meters_match_last_exchange() {
+    // last_id_bytes / last_emb_bytes describe the most recent lookup.
+    let out = run_world(|rank, se, comm| {
+        let batches = batches_for(rank);
+        for b in &batches {
+            let _ = se.lookup(comm, b, true);
+        }
+        (rank, se.last_id_bytes.clone(), se.last_emb_bytes.clone())
+    });
+    for (rank, id_bytes, emb_bytes) in out {
+        let last = &batches_for(rank)[1];
+        for dst in 0..WORLD {
+            let uniq = last
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == dst)
+                .collect::<HashSet<_>>()
+                .len();
+            assert_eq!(id_bytes[dst], uniq * 8, "rank {rank} dst {dst}");
+        }
+        // Replies mirror what each source requested of this rank.
+        for src in 0..WORLD {
+            let uniq = batches_for(src)[1]
+                .iter()
+                .copied()
+                .filter(|&id| shard_owner(id, WORLD) == rank)
+                .collect::<HashSet<_>>()
+                .len();
+            assert_eq!(emb_bytes[src], uniq * DIM * 4, "rank {rank} src {src}");
+        }
+    }
+}
