@@ -74,8 +74,10 @@ fn main() {
 
     // ---- dedup kernels ---------------------------------------------------
     let batch: Vec<u64> = (0..100_000).map(|_| zipf.sample(&mut rng) as u64).collect();
+    // Pin the kernels explicitly: `Dedup::of` now auto-switches at
+    // DEDUP_SORT_THRESHOLD, and 100k occurrences would pick Sort.
     let r = bench_fn("dedup_hash_100k_zipf", 2, 20, |_| {
-        std::hint::black_box(Dedup::of(&batch));
+        std::hint::black_box(Dedup::of_hash(&batch));
     });
     rep.add_metric("dedup_hash_ns_per_id", (r.ns_per_iter() / 1e5).into());
     let r = bench_fn("dedup_sort_100k_zipf", 2, 20, |_| {

@@ -25,14 +25,22 @@ use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of independent channel lanes per pair. Lane assignments:
 /// [`LANE_DEFAULT`] for ordinary collectives, [`LANE_IDS`] for posted ID
-/// exchanges, [`LANE_EMB`] for embedding-row exchanges.
-pub const LANES: usize = 3;
+/// exchanges, [`LANE_EMB`] for embedding-row replies, and
+/// [`LANE_GRAD_IDS`]/[`LANE_GRAD`] for the posted backward gradient
+/// exchange — five lanes so a double-buffered round can keep micro-batch
+/// *k+1*'s ID exchange, *k*'s embedding reply, and *k−1*'s gradient
+/// push all in flight at once without FIFO interleaving.
+pub const LANES: usize = 5;
 /// Default lane used by the blocking collectives.
 pub const LANE_DEFAULT: usize = 0;
 /// Lane carrying posted (pipelined) ID all-to-alls.
 pub const LANE_IDS: usize = 1;
 /// Lane carrying embedding-row replies.
 pub const LANE_EMB: usize = 2;
+/// Lane carrying the backward gradient exchange's ID headers.
+pub const LANE_GRAD_IDS: usize = 3;
+/// Lane carrying the backward gradient payloads.
+pub const LANE_GRAD: usize = 4;
 
 /// Typed payloads exchanged between ranks (a tiny closed set instead of
 /// generic serialization).

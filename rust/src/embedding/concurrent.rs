@@ -28,9 +28,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig, TableStats};
-use crate::embedding::hash::hash_id;
+use crate::embedding::hash::{fmix64, hash_id};
 use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
+use crate::util::pool::{SharedSliceMut, WorkerPool};
 use crate::util::rng::Xoshiro256;
+
+/// Occurrence count below which the stripe fan-out is not worth the
+/// fork/join overhead (the serial per-id path is used instead).
+const PAR_FETCH_THRESHOLD: usize = 512;
 
 /// Seed for stripe routing (distinct from slot probing and shard
 /// placement so the three hash partitions are independent).
@@ -200,6 +205,90 @@ impl ConcurrentDynamicTable {
             .map(|s| s.read().unwrap().memory_bytes())
             .sum()
     }
+
+    /// Batched lookup taking `&self`: bucket occurrences by stripe
+    /// (occurrence order preserved within each stripe), then serve each
+    /// stripe under a single lock acquisition — in parallel across
+    /// stripes when a pool with more than one thread is supplied.
+    ///
+    /// Stripes are independent sub-tables and each receives its
+    /// occurrences in the same relative order as the serial per-id
+    /// loop, so the resulting table contents *and* the returned rows
+    /// are bit-identical to the serial path for every pool size.
+    pub fn fetch_rows_shared(
+        &self,
+        ids: &[GlobalId],
+        train: bool,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d);
+        if ids.is_empty() {
+            return;
+        }
+        let parallel =
+            matches!(pool, Some(p) if p.threads() > 1) && ids.len() >= PAR_FETCH_THRESHOLD;
+        if !parallel {
+            for (row, &id) in out.chunks_exact_mut(d).zip(ids) {
+                if train {
+                    self.lookup_or_insert(id, row);
+                } else {
+                    self.lookup(id, row);
+                }
+            }
+            return;
+        }
+        let ns = self.stripes.len();
+        let mut by_stripe: Vec<Vec<u32>> = vec![Vec::new(); ns];
+        for (i, &id) in ids.iter().enumerate() {
+            by_stripe[self.stripe_of(id)].push(i as u32);
+        }
+        let window = SharedSliceMut::new(out);
+        pool.unwrap().parallel_for(ns, |stripes| {
+            for s in stripes {
+                let idxs = &by_stripe[s];
+                if idxs.is_empty() {
+                    continue;
+                }
+                if train {
+                    let mut t = self.stripes[s].write().unwrap();
+                    for &i in idxs {
+                        // SAFETY: every occurrence index lands in exactly
+                        // one stripe bucket, so row windows are disjoint.
+                        let row = unsafe { window.slice_mut(i as usize * d, d) };
+                        t.lookup_or_insert(ids[i as usize], row);
+                    }
+                } else {
+                    let t = self.stripes[s].read().unwrap();
+                    for &i in idxs {
+                        // SAFETY: as above — one bucket per occurrence.
+                        let row = unsafe { window.slice_mut(i as usize * d, d) };
+                        t.lookup(ids[i as usize], row);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Order-independent fingerprint of the table contents (ids and row
+    /// bits). Iteration order, striping and insertion interleaving
+    /// cannot affect it — only the actual contents can — which makes it
+    /// the embedding-state witness for the e2e bitwise-equality suite.
+    pub fn content_checksum(&self) -> u64 {
+        let mut sum = 0u64;
+        for s in &self.stripes {
+            let t = s.read().unwrap();
+            for (id, row) in t.iter_rows() {
+                let mut h = hash_id(id, 0xC0FFEE);
+                for &x in row {
+                    h = fmix64(h ^ x.to_bits() as u64);
+                }
+                sum = sum.wrapping_add(h);
+            }
+        }
+        sum
+    }
 }
 
 impl ConcurrentEmbeddingStore for ConcurrentDynamicTable {
@@ -250,6 +339,16 @@ impl EmbeddingStore for ConcurrentDynamicTable {
 
     fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
         ConcurrentDynamicTable::apply_delta(self, id, delta)
+    }
+
+    fn fetch_rows(
+        &mut self,
+        ids: &[GlobalId],
+        train: bool,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        ConcurrentDynamicTable::fetch_rows_shared(self, ids, train, out, pool)
     }
 
     fn memory_bytes(&self) -> usize {
@@ -364,6 +463,53 @@ mod tests {
             single.lookup(id, &mut b);
             assert_eq!(a, b, "id {id}");
         }
+    }
+
+    #[test]
+    fn batched_fetch_matches_serial_for_every_pool_size() {
+        // Zipf-ish overlapping ids, enough to clear PAR_FETCH_THRESHOLD.
+        let ids: Vec<u64> = (0..4000u64).map(|i| (i * i + 7) % 613).collect();
+        // Serial reference: the per-id path on a fresh table.
+        let serial_table = ConcurrentDynamicTable::new(cfg(), 8);
+        let mut serial_out = vec![0.0f32; ids.len() * 4];
+        serial_table.fetch_rows_shared(&ids, true, &mut serial_out, None);
+        for threads in [1, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let table = ConcurrentDynamicTable::new(cfg(), 8);
+            let mut out = vec![0.0f32; ids.len() * 4];
+            table.fetch_rows_shared(&ids, true, &mut out, Some(&pool));
+            assert_eq!(out, serial_out, "{threads} threads: rows diverged");
+            assert_eq!(
+                ConcurrentDynamicTable::len(&table),
+                ConcurrentDynamicTable::len(&serial_table),
+                "{threads} threads: row counts diverged"
+            );
+            assert_eq!(
+                table.content_checksum(),
+                serial_table.content_checksum(),
+                "{threads} threads: contents diverged"
+            );
+            // Read-only batch over the filled table also matches.
+            let mut ro = vec![0.0f32; ids.len() * 4];
+            table.fetch_rows_shared(&ids, false, &mut ro, Some(&pool));
+            assert_eq!(ro, serial_out, "{threads} threads: read-only rows");
+        }
+    }
+
+    #[test]
+    fn content_checksum_reflects_contents_not_order() {
+        let a = ConcurrentDynamicTable::new(cfg(), 4);
+        let b = ConcurrentDynamicTable::new(cfg(), 4);
+        let mut buf = vec![0.0f32; 4];
+        for id in 0..100u64 {
+            a.lookup_or_insert(id, &mut buf);
+        }
+        for id in (0..100u64).rev() {
+            b.lookup_or_insert(id, &mut buf);
+        }
+        assert_eq!(a.content_checksum(), b.content_checksum(), "order-free");
+        assert!(a.apply_delta(42, &[0.5, 0.0, 0.0, 0.0]));
+        assert_ne!(a.content_checksum(), b.content_checksum(), "value-sensitive");
     }
 
     #[test]

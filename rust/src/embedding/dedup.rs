@@ -21,6 +21,7 @@
 
 use crate::embedding::hash::fmix64;
 use crate::embedding::GlobalId;
+use crate::util::pool::WorkerPool;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -53,6 +54,22 @@ impl Hasher for IdHasher {
 /// `HashMap` keyed by ids with the fast hasher.
 pub type IdMap<V> = HashMap<GlobalId, V, BuildHasherDefault<IdHasher>>;
 
+/// Which dedup kernel [`Dedup::of`] picks for a given input size
+/// (exposed so benches can report the strategy actually exercised).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DedupKernel {
+    /// fmix64 hash map, first-occurrence unique order — wins on small
+    /// batches (cache-resident map, no O(n log n) sort).
+    Hash,
+    /// Sort + run-length unique, ascending unique order — wins on large
+    /// batches (branch-predictable, parallelizable chunk sort + merge).
+    Sort,
+}
+
+/// Above this many occurrences [`Dedup::of`] switches from the hash
+/// kernel to the sorted kernel.
+pub const DEDUP_SORT_THRESHOLD: usize = 8192;
+
 /// Result of deduplicating an ID list: the unique IDs plus, for every
 /// original position, the index of its unique representative.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,8 +79,40 @@ pub struct Dedup {
 }
 
 impl Dedup {
-    /// Deduplicate preserving first-occurrence order (hash-based).
+    /// Kernel [`Dedup::of`] / [`Dedup::of_auto`] will use for `n`
+    /// occurrences.
+    pub fn kernel_for(n: usize) -> DedupKernel {
+        if n >= DEDUP_SORT_THRESHOLD {
+            DedupKernel::Sort
+        } else {
+            DedupKernel::Hash
+        }
+    }
+
+    /// Deduplicate, choosing the kernel by input size (serial).
+    ///
+    /// Small inputs keep the hash kernel's first-occurrence unique
+    /// order; large inputs use the sorted kernel (unique ascending).
+    /// Both contracts agree on `inverse` semantics and round-trip via
+    /// [`reconstruct`](Self::reconstruct); no consumer depends on the
+    /// unique *order* (embeddings scatter back through `inverse`).
     pub fn of(ids: &[GlobalId]) -> Dedup {
+        Dedup::of_auto(ids, None)
+    }
+
+    /// [`Dedup::of`] with an optional worker pool: the sorted kernel
+    /// sorts chunks in parallel and k-way merges. Output is identical
+    /// for every pool size (ties between equal ids cannot affect
+    /// `unique` or `inverse`).
+    pub fn of_auto(ids: &[GlobalId], pool: Option<&WorkerPool>) -> Dedup {
+        match Dedup::kernel_for(ids.len()) {
+            DedupKernel::Hash => Dedup::of_hash(ids),
+            DedupKernel::Sort => Dedup::of_sorted_with(ids, pool),
+        }
+    }
+
+    /// Hash-kernel deduplication preserving first-occurrence order.
+    pub fn of_hash(ids: &[GlobalId]) -> Dedup {
         let mut map: IdMap<u32> =
             IdMap::with_capacity_and_hasher(ids.len(), Default::default());
         let mut unique = Vec::new();
@@ -80,12 +129,32 @@ impl Dedup {
     }
 
     /// Sort-based deduplication (unique list is sorted ascending).
-    /// Kept as an alternative kernel for the perf pass; same contract.
     pub fn of_sorted(ids: &[GlobalId]) -> Dedup {
-        let mut order: Vec<u32> = (0..ids.len() as u32).collect();
-        order.sort_unstable_by_key(|&i| ids[i as usize]);
+        Dedup::of_sorted_with(ids, None)
+    }
+
+    /// Sorted kernel with optional parallel chunk sort + k-way merge.
+    pub fn of_sorted_with(ids: &[GlobalId], pool: Option<&WorkerPool>) -> Dedup {
+        let n = ids.len();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        match pool {
+            Some(p) if p.threads() > 1 && n >= DEDUP_SORT_THRESHOLD => {
+                // Cap the run count: the merge's linear head scan costs
+                // O(n·runs), so unbounded pool sizes would erase the
+                // parallel-sort win. The SAME `ranges` drive both the
+                // pool split (passed explicitly, cannot drift) and the
+                // merge boundaries.
+                let runs = p.threads().min(MERGE_MAX_RUNS);
+                let ranges = WorkerPool::chunk_ranges(n, runs);
+                p.parallel_for_ranges_mut(&mut order, 1, &ranges, |_r, chunk| {
+                    chunk.sort_unstable_by_key(|&i| ids[i as usize]);
+                });
+                order = merge_sorted_runs(ids, &order, &ranges);
+            }
+            _ => order.sort_unstable_by_key(|&i| ids[i as usize]),
+        }
         let mut unique = Vec::new();
-        let mut inverse = vec![0u32; ids.len()];
+        let mut inverse = vec![0u32; n];
         let mut prev: Option<GlobalId> = None;
         for &pos in &order {
             let id = ids[pos as usize];
@@ -120,14 +189,87 @@ impl Dedup {
     }
 }
 
+/// Merge `k` sorted runs of `order` (run `r` = `order[ranges[r]]`,
+/// each already sorted by id) into one id-sorted permutation. Tie order
+/// between equal ids is irrelevant to every consumer (run-length unique
+/// and per-position inverse are tie-invariant), so the merged result is
+/// interchangeable with a monolithic sort.
+fn merge_sorted_runs(
+    ids: &[GlobalId],
+    order: &[u32],
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<u32> {
+    let mut heads: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+    let mut out = Vec::with_capacity(order.len());
+    loop {
+        let mut best: Option<(GlobalId, usize)> = None;
+        for (k, r) in ranges.iter().enumerate() {
+            if heads[k] < r.end {
+                let id = ids[order[heads[k]] as usize];
+                let better = match best {
+                    None => true,
+                    Some((b, _)) => id < b,
+                };
+                if better {
+                    best = Some((id, k));
+                }
+            }
+        }
+        match best {
+            Some((_, k)) => {
+                out.push(order[heads[k]]);
+                heads[k] += 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// Maximum sorted runs for the parallel dedup sort: the k-way merge
+/// scans every run head per output element, so runs stay bounded even
+/// on machine-sized pools.
+const MERGE_MAX_RUNS: usize = 8;
+
+/// Row count above which the parallel gather/scatter kernels split
+/// across the pool (below it, fork/join overhead dominates).
+const PAR_ROWS_THRESHOLD: usize = 2048;
+
 /// Expand unique embedding rows back to occurrence order:
 /// `out[i] = rows[inverse[i]]`. (The forward scatter after lookup.)
+/// Chunked `copy_from_slice` row moves; `inverse` bounds are
+/// debug-asserted against the unique-row count.
 pub fn gather_rows(rows: &[f32], dim: usize, inverse: &[u32], out: &mut [f32]) {
+    assert!(dim > 0, "gather_rows requires dim > 0");
     assert_eq!(out.len(), inverse.len() * dim);
     assert_eq!(rows.len() % dim, 0);
-    for (i, &u) in inverse.iter().enumerate() {
-        let src = &rows[u as usize * dim..(u as usize + 1) * dim];
-        out[i * dim..(i + 1) * dim].copy_from_slice(src);
+    let n_unique = rows.len() / dim;
+    for (dst, &u) in out.chunks_exact_mut(dim).zip(inverse) {
+        debug_assert!(
+            (u as usize) < n_unique,
+            "inverse index {u} out of bounds ({n_unique} unique rows)"
+        );
+        dst.copy_from_slice(&rows[u as usize * dim..(u as usize + 1) * dim]);
+    }
+}
+
+/// [`gather_rows`] parallelized over occurrence chunks (disjoint output
+/// slices; bit-identical to the serial kernel for any pool size).
+pub fn gather_rows_par(
+    rows: &[f32],
+    dim: usize,
+    inverse: &[u32],
+    out: &mut [f32],
+    pool: Option<&WorkerPool>,
+) {
+    match pool {
+        Some(p) if p.threads() > 1 && inverse.len() >= PAR_ROWS_THRESHOLD => {
+            assert_eq!(out.len(), inverse.len() * dim);
+            p.parallel_for_chunks_mut(out, inverse.len(), dim, |r, chunk| {
+                gather_rows(rows, dim, &inverse[r], chunk);
+            });
+        }
+        _ => gather_rows(rows, dim, inverse, out),
     }
 }
 
@@ -135,14 +277,75 @@ pub fn gather_rows(rows: &[f32], dim: usize, inverse: &[u32], out: &mut [f32]) {
 /// `out[inverse[i]] += grads[i]`. (The backward counterpart: duplicate
 /// occurrences of an ID sum their gradients — §5.2 sparse accumulation.)
 pub fn scatter_accumulate(grads: &[f32], dim: usize, inverse: &[u32], out: &mut [f32]) {
+    assert!(dim > 0, "scatter_accumulate requires dim > 0");
     assert_eq!(grads.len(), inverse.len() * dim);
     assert_eq!(out.len() % dim, 0);
-    for (i, &u) in inverse.iter().enumerate() {
-        let dst = u as usize * dim;
-        for d in 0..dim {
-            out[dst + d] += grads[i * dim + d];
+    let n_unique = out.len() / dim;
+    for (g, &u) in grads.chunks_exact(dim).zip(inverse) {
+        debug_assert!(
+            (u as usize) < n_unique,
+            "inverse index {u} out of bounds ({n_unique} unique rows)"
+        );
+        let dst = &mut out[u as usize * dim..(u as usize + 1) * dim];
+        for (a, b) in dst.iter_mut().zip(g) {
+            *a += b;
         }
     }
+}
+
+/// [`scatter_accumulate`] parallelized over *unique-row* chunks.
+///
+/// Occurrences are first counting-sorted into per-row lists that
+/// preserve occurrence order, so each row accumulates its gradients in
+/// exactly the serial order — the result is **bit-identical** to
+/// [`scatter_accumulate`] for every pool size (rows are independent
+/// accumulators; only the per-row addition order could matter, and it
+/// is unchanged).
+pub fn scatter_accumulate_par(
+    grads: &[f32],
+    dim: usize,
+    inverse: &[u32],
+    out: &mut [f32],
+    pool: Option<&WorkerPool>,
+) {
+    let n_unique = if dim == 0 { 0 } else { out.len() / dim };
+    let parallel = matches!(pool, Some(p) if p.threads() > 1)
+        && inverse.len() >= PAR_ROWS_THRESHOLD
+        && n_unique >= 2;
+    if !parallel {
+        scatter_accumulate(grads, dim, inverse, out);
+        return;
+    }
+    let p = pool.unwrap();
+    assert_eq!(grads.len(), inverse.len() * dim);
+    assert_eq!(out.len(), n_unique * dim);
+    // Counting sort: occ_by_row[starts[u]..starts[u+1]] lists the
+    // occurrence indices of unique row u in increasing occurrence order.
+    let mut starts = vec![0u32; n_unique + 1];
+    for &u in inverse {
+        starts[u as usize + 1] += 1;
+    }
+    for i in 0..n_unique {
+        starts[i + 1] += starts[i];
+    }
+    let mut occ_by_row = vec![0u32; inverse.len()];
+    let mut cursor = starts.clone();
+    for (i, &u) in inverse.iter().enumerate() {
+        let c = &mut cursor[u as usize];
+        occ_by_row[*c as usize] = i as u32;
+        *c += 1;
+    }
+    p.parallel_for_chunks_mut(out, n_unique, dim, |rows, chunk| {
+        for (j, u) in rows.enumerate() {
+            let dst = &mut chunk[j * dim..(j + 1) * dim];
+            for &occ in &occ_by_row[starts[u] as usize..starts[u + 1] as usize] {
+                let g = &grads[occ as usize * dim..(occ as usize + 1) * dim];
+                for (a, b) in dst.iter_mut().zip(g) {
+                    *a += b;
+                }
+            }
+        }
+    });
 }
 
 /// Communication-volume accounting for one lookup round — drives the
@@ -281,6 +484,58 @@ mod tests {
         let mut out = vec![0.0; 6];
         gather_rows(&rows, 2, &d.inverse, &mut out);
         assert_eq!(out, vec![1.0, 1.0, 2.0, 2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn kernel_switches_at_threshold() {
+        assert_eq!(Dedup::kernel_for(DEDUP_SORT_THRESHOLD - 1), DedupKernel::Hash);
+        assert_eq!(Dedup::kernel_for(DEDUP_SORT_THRESHOLD), DedupKernel::Sort);
+        // A large input goes through the sorted kernel: unique ascending.
+        let ids: Vec<u64> = (0..DEDUP_SORT_THRESHOLD as u64).map(|i| i % 97).collect();
+        let d = Dedup::of(&ids);
+        assert!(d.unique.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert_eq!(d.unique.len(), 97);
+        assert_eq!(d.reconstruct(), ids);
+    }
+
+    #[test]
+    fn parallel_dedup_identical_for_every_pool_size() {
+        let mut rng = Xoshiro256::new(77);
+        let ids: Vec<u64> = (0..20_000).map(|_| rng.gen_range(512)).collect();
+        let serial = Dedup::of_auto(&ids, None);
+        assert_eq!(serial.reconstruct(), ids);
+        for threads in [1, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let par = Dedup::of_auto(&ids, Some(&pool));
+            assert_eq!(par, serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_gather_scatter_bit_identical_to_serial() {
+        let mut rng = Xoshiro256::new(5);
+        let dim = 8;
+        let ids: Vec<u64> = (0..6000).map(|_| rng.gen_range(700)).collect();
+        let d = Dedup::of_hash(&ids);
+        let rows: Vec<f32> = (0..d.unique.len() * dim)
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let grads: Vec<f32> = (0..ids.len() * dim)
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let mut out_serial = vec![0.0f32; ids.len() * dim];
+        gather_rows(&rows, dim, &d.inverse, &mut out_serial);
+        let mut acc_serial = vec![0.0f32; d.unique.len() * dim];
+        scatter_accumulate(&grads, dim, &d.inverse, &mut acc_serial);
+        for threads in [1, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let mut out = vec![0.0f32; ids.len() * dim];
+            gather_rows_par(&rows, dim, &d.inverse, &mut out, Some(&pool));
+            assert_eq!(out, out_serial, "{threads} threads gather");
+            let mut acc = vec![0.0f32; d.unique.len() * dim];
+            scatter_accumulate_par(&grads, dim, &d.inverse, &mut acc, Some(&pool));
+            assert_eq!(acc, acc_serial, "{threads} threads scatter");
+        }
     }
 
     #[test]

@@ -57,6 +57,31 @@ pub trait EmbeddingStore {
     /// Returns `false` if the id is not present (update dropped).
     fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool;
 
+    /// Batched lookup: write the row for `ids[i]` into
+    /// `out[i*dim..(i+1)*dim]`. `train` selects insert-on-miss
+    /// semantics. The default is the serial per-id loop; stores with
+    /// interior synchronization (lock-striped tables) override it to
+    /// fan out across `pool` — contents must stay identical to the
+    /// serial path for every pool size.
+    fn fetch_rows(
+        &mut self,
+        ids: &[GlobalId],
+        train: bool,
+        out: &mut [f32],
+        pool: Option<&crate::util::pool::WorkerPool>,
+    ) {
+        let d = self.dim();
+        assert_eq!(out.len(), ids.len() * d);
+        let _ = pool; // exclusive stores cannot parallelize
+        for (row, &id) in out.chunks_exact_mut(d).zip(ids) {
+            if train {
+                self.lookup_or_insert(id, row);
+            } else {
+                self.lookup(id, row);
+            }
+        }
+    }
+
     /// Approximate resident bytes (key + value + metadata structures).
     fn memory_bytes(&self) -> usize;
 }

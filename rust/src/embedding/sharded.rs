@@ -16,17 +16,33 @@
 //! destination (sparse accumulation), exchanged via all-to-all, and
 //! aggregated again on the owning shard.
 //!
-//! The lookup is a **two-phase pipeline**: [`ShardedEmbedding::post_ids`]
-//! partitions + stage-1 dedups and posts the ID all-to-all without
-//! blocking; [`ShardedEmbedding::complete_lookup`] serves and runs the
-//! embedding exchange. The trainer posts micro-batch *k+1*'s IDs while
-//! micro-batch *k* computes, overlapping ID communication with work —
-//! the TurboGR-style overlap the `--overlap` ablation toggles.
+//! The lookup is a **three-phase, double-buffered pipeline**:
+//! [`ShardedEmbedding::post_ids`] partitions + stage-1 dedups and posts
+//! the ID all-to-all without blocking; [`ShardedEmbedding::serve_reply`]
+//! receives the requested IDs, serves the local shard (fanning the
+//! fetch across [`crate::util::pool::WorkerPool`] stripes when one is
+//! attached) and *posts* the embedding reply; and
+//! [`ShardedEmbedding::complete_reply`] collects the reply and scatters
+//! rows back to occurrence order. Backward splits the same way
+//! ([`ShardedEmbedding::post_backward`] /
+//! [`ShardedEmbedding::complete_backward`]). The trainer exploits the
+//! splits so that micro-batch *k+1*'s ID exchange, *k*'s embedding
+//! reply, and *k−1*'s gradient push are simultaneously in flight — the
+//! TurboGR-style overlap the `--overlap` ablation toggles. Every
+//! parallel path is bit-identical to the serial reference for every
+//! pool size (disjoint writes; per-row accumulation order preserved).
 
-use crate::collective::comm::{CommHandle, Message, PendingAllToAll, LANE_EMB, LANE_IDS};
-use crate::embedding::dedup::{gather_rows, scatter_accumulate, Dedup, DedupStrategy, DedupVolume};
+use std::sync::Arc;
+
+use crate::collective::comm::{
+    CommHandle, Message, PendingAllToAll, LANE_EMB, LANE_GRAD, LANE_GRAD_IDS, LANE_IDS,
+};
+use crate::embedding::dedup::{
+    gather_rows_par, scatter_accumulate_par, Dedup, DedupStrategy, DedupVolume,
+};
 use crate::embedding::hash::hash_id;
 use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::pool::WorkerPool;
 
 /// Seed for the shard-placement hash (distinct from table hashing so
 /// shard residence and slot probing are independent).
@@ -39,12 +55,15 @@ pub struct ShardedEmbedding<S: EmbeddingStore> {
     pub strategy: DedupStrategy,
     /// Cumulative communication-volume accounting (drives Fig. 16).
     pub volume: DedupVolume,
-    /// Per-pair bytes of the most recently *completed* lookup (for the
+    /// Per-pair bytes of the most recently *served* lookup (for the
     /// net cost model): `last_id_bytes[dst]`, `last_emb_bytes[dst]`.
-    /// Both meters update together in `complete_lookup`, so they always
+    /// Both meters update together in `serve_reply`, so they always
     /// describe the same exchange even when several are posted.
     pub last_id_bytes: Vec<usize>,
     pub last_emb_bytes: Vec<usize>,
+    /// Worker pool shared by dedup, the stage-2 serve fetch, row
+    /// expansion and gradient aggregation; `None` = serial reference.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 /// Which rank owns `id`.
@@ -71,6 +90,26 @@ pub struct PendingLookup {
     pending: PendingAllToAll,
 }
 
+/// In-flight state of a served lookup: the embedding reply all-to-all
+/// is on the wire; the scatter layout rides along until
+/// [`ShardedEmbedding::complete_reply`] consumes it.
+#[must_use = "a served lookup must be completed or peers deadlock"]
+pub struct PendingReply {
+    num_ids: usize,
+    pos_by_dst: Vec<Vec<u32>>,
+    stage1_inverse: Vec<Option<Vec<u32>>>,
+    pending: PendingAllToAll,
+}
+
+/// In-flight state of a posted backward gradient exchange (IDs +
+/// payloads on dedicated lanes); completed by
+/// [`ShardedEmbedding::complete_backward`].
+#[must_use = "a posted backward must be completed or peers deadlock"]
+pub struct PendingBackward {
+    ids_pending: PendingAllToAll,
+    grads_pending: PendingAllToAll,
+}
+
 impl<S: EmbeddingStore> ShardedEmbedding<S> {
     pub fn new(table: S, strategy: DedupStrategy) -> Self {
         let dim = table.dim();
@@ -81,7 +120,20 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             volume: DedupVolume::default(),
             last_id_bytes: Vec::new(),
             last_emb_bytes: Vec::new(),
+            pool: None,
         }
+    }
+
+    /// Attach a worker pool; dedup, the serve-side fetch, row expansion
+    /// and gradient aggregation then fan out across it. Results are
+    /// bit-identical with and without a pool.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_deref()
     }
 
     pub fn table(&self) -> &S {
@@ -130,12 +182,13 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         }
 
         // ---- stage 1: per-destination dedup -------------------------
+        let pool = self.pool.clone();
         let mut send_ids: Vec<Vec<GlobalId>> = Vec::with_capacity(world);
         let mut stage1_inverse: Vec<Option<Vec<u32>>> = Vec::with_capacity(world);
         for bucket in &ids_by_dst {
             self.volume.ids_raw += bucket.len();
             if self.strategy.stage1() {
-                let d = Dedup::of(bucket);
+                let d = Dedup::of_auto(bucket, pool.as_deref());
                 self.volume.ids_sent += d.unique.len();
                 send_ids.push(d.unique);
                 stage1_inverse.push(Some(d.inverse));
@@ -165,17 +218,22 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         }
     }
 
-    /// Phase 2 of the pipelined lookup: receive the requested IDs, serve
-    /// them from the local shard (stage-2 dedup), run the embedding
-    /// all-to-all, and scatter rows back to occurrence order.
-    pub fn complete_lookup(
+    /// Phase 2 of the pipelined lookup: receive the requested IDs,
+    /// serve them from the local shard (stage-2 dedup; the fetch fans
+    /// out across the attached pool), and *post* the embedding reply
+    /// all-to-all without waiting for it. Returning before the reply
+    /// lands is what lets the trainer push the next round's ID exchange
+    /// onto the wire while this round's reply drains — the
+    /// double-buffered round.
+    pub fn serve_reply(
         &mut self,
         comm: &mut CommHandle,
         lookup: PendingLookup,
         train: bool,
-    ) -> Vec<f32> {
+    ) -> PendingReply {
         let world = comm.world;
         let dim = self.dim;
+        let pool = self.pool.clone();
         let PendingLookup {
             num_ids,
             pos_by_dst,
@@ -198,19 +256,18 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         let replies: Vec<Vec<f32>> = if self.strategy.stage2() {
             // Dedup the union across sources, fetch once per unique id.
             let flat: Vec<GlobalId> = requested.iter().flatten().copied().collect();
-            let d = Dedup::of(&flat);
+            let d = Dedup::of_auto(&flat, pool.as_deref());
             self.volume.lookups_done += d.unique.len();
             let mut unique_rows = vec![0.0f32; d.unique.len() * dim];
-            for (u, &id) in d.unique.iter().enumerate() {
-                self.fetch(id, train, &mut unique_rows[u * dim..(u + 1) * dim]);
-            }
+            self.table
+                .fetch_rows(&d.unique, train, &mut unique_rows, pool.as_deref());
             // Slice the expanded rows back per source.
             let mut out = Vec::with_capacity(world);
             let mut off = 0usize;
             for req in &requested {
                 let inv = &d.inverse[off..off + req.len()];
                 let mut rows = vec![0.0f32; req.len() * dim];
-                gather_rows(&unique_rows, dim, inv, &mut rows);
+                gather_rows_par(&unique_rows, dim, inv, &mut rows, pool.as_deref());
                 out.push(rows);
                 off += req.len();
             }
@@ -221,15 +278,13 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 .iter()
                 .map(|req| {
                     let mut rows = vec![0.0f32; req.len() * dim];
-                    for (i, &id) in req.iter().enumerate() {
-                        self.fetch(id, train, &mut rows[i * dim..(i + 1) * dim]);
-                    }
+                    self.table.fetch_rows(req, train, &mut rows, pool.as_deref());
                     rows
                 })
                 .collect()
         };
 
-        // ---- embedding all-to-all ------------------------------------
+        // ---- embedding all-to-all (posted) ---------------------------
         // Reply row counts mirror the *received* id counts; the raw
         // (no-stage-1) counterpart is what we would have sent without
         // dedup — accounted for Fig. 16.
@@ -238,12 +293,32 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             self.volume.emb_rows_sent += sent_lens[dst];
         }
         self.last_emb_bytes = replies.iter().map(|r| r.len() * 4).collect();
-        let emb_pending = comm.post_all_to_all_on(
+        let pending = comm.post_all_to_all_on(
             LANE_EMB,
             replies.into_iter().map(Message::Floats).collect(),
         );
+        PendingReply {
+            num_ids,
+            pos_by_dst,
+            stage1_inverse,
+            pending,
+        }
+    }
+
+    /// Phase 3 of the pipelined lookup: receive the embedding reply and
+    /// scatter rows back to occurrence order (`num_ids × dim`).
+    pub fn complete_reply(&mut self, comm: &mut CommHandle, reply: PendingReply) -> Vec<f32> {
+        let world = comm.world;
+        let dim = self.dim;
+        let pool = self.pool.clone();
+        let PendingReply {
+            num_ids,
+            pos_by_dst,
+            stage1_inverse,
+            pending,
+        } = reply;
         let returned: Vec<Vec<f32>> = comm
-            .complete_all_to_all(emb_pending)
+            .complete_all_to_all(pending)
             .into_iter()
             .map(Message::into_floats)
             .collect();
@@ -256,7 +331,7 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             let expanded: Vec<f32> = match &stage1_inverse[dst] {
                 Some(inv) => {
                     let mut e = vec![0.0f32; inv.len() * dim];
-                    gather_rows(rows, dim, inv, &mut e);
+                    gather_rows_par(rows, dim, inv, &mut e, pool.as_deref());
                     e
                 }
                 None => rows.clone(),
@@ -269,33 +344,39 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         out
     }
 
-    fn fetch(&mut self, id: GlobalId, train: bool, out: &mut [f32]) {
-        if train {
-            self.table.lookup_or_insert(id, out);
-        } else {
-            self.table.lookup(id, out);
-        }
+    /// Phases 2+3 back to back: serve, exchange, scatter. Equivalent to
+    /// [`serve_reply`](Self::serve_reply) immediately followed by
+    /// [`complete_reply`](Self::complete_reply).
+    pub fn complete_lookup(
+        &mut self,
+        comm: &mut CommHandle,
+        lookup: PendingLookup,
+        train: bool,
+    ) -> Vec<f32> {
+        let reply = self.serve_reply(comm, lookup, train);
+        self.complete_reply(comm, reply)
     }
 
-    /// Distributed backward: exchange occurrence-order gradients so each
-    /// shard receives the *aggregated* gradient for the ids it owns.
-    /// Returns `(ids, grads)` for the local shard (grads in id order,
-    /// `ids.len() × dim`); the caller feeds these to the sparse optimizer.
+    /// Phase 1 of the distributed backward: partition occurrence-order
+    /// gradients by owner, aggregate duplicates per destination (sparse
+    /// gradient accumulation, §5.2) when stage-1 dedup is on, and *post*
+    /// both the ID and gradient all-to-alls on their dedicated lanes
+    /// without blocking. The trainer posts micro-batch *k*'s gradients
+    /// here and completes them only after *k+1*'s forward, hiding the
+    /// gradient exchange behind compute.
     ///
-    /// Collective: all ranks must call.
-    pub fn backward(
+    /// Collective: all ranks must post and complete in the same order.
+    pub fn post_backward(
         &mut self,
         comm: &mut CommHandle,
         ids: &[GlobalId],
         grads: &[f32],
-    ) -> (Vec<GlobalId>, Vec<f32>) {
+    ) -> PendingBackward {
         assert_eq!(grads.len(), ids.len() * self.dim);
         let world = comm.world;
         let dim = self.dim;
+        let pool = self.pool.clone();
 
-        // Partition occurrences by owner, aggregating duplicates per
-        // destination (sparse gradient accumulation, §5.2) when stage-1
-        // dedup is on; otherwise raw occurrence gradients go on the wire.
         let mut ids_by_dst: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
         let mut grad_by_dst: Vec<Vec<f32>> = vec![Vec::new(); world];
         {
@@ -308,9 +389,15 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             }
             for d in 0..world {
                 if self.strategy.stage1() {
-                    let dd = Dedup::of(&occ_ids[d]);
+                    let dd = Dedup::of_auto(&occ_ids[d], pool.as_deref());
                     let mut agg = vec![0.0f32; dd.unique.len() * dim];
-                    scatter_accumulate(&occ_grads[d], dim, &dd.inverse, &mut agg);
+                    scatter_accumulate_par(
+                        &occ_grads[d],
+                        dim,
+                        &dd.inverse,
+                        &mut agg,
+                        pool.as_deref(),
+                    );
                     ids_by_dst[d] = dd.unique;
                     grad_by_dst[d] = agg;
                 } else {
@@ -320,27 +407,70 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             }
         }
 
-        // Two all-to-alls: ids then gradients (same wire pattern as
-        // forward, reversed direction for the payload).
+        // Two posted all-to-alls: ids then gradients (same wire pattern
+        // as forward, reversed direction for the payload), on dedicated
+        // lanes so they can stay in flight across rounds.
+        let ids_pending = comm.post_all_to_all_on(
+            LANE_GRAD_IDS,
+            ids_by_dst.into_iter().map(Message::Ids).collect(),
+        );
+        let grads_pending = comm.post_all_to_all_on(
+            LANE_GRAD,
+            grad_by_dst.into_iter().map(Message::Floats).collect(),
+        );
+        PendingBackward {
+            ids_pending,
+            grads_pending,
+        }
+    }
+
+    /// Phase 2 of the distributed backward: receive the exchanged
+    /// gradients and aggregate across sources (always — correctness
+    /// requires the owner to apply each id's total gradient once).
+    /// Returns `(ids, grads)` for the local shard (grads in id order,
+    /// `ids.len() × dim`); the caller feeds these to the sparse
+    /// optimizer.
+    pub fn complete_backward(
+        &mut self,
+        comm: &mut CommHandle,
+        pending: PendingBackward,
+    ) -> (Vec<GlobalId>, Vec<f32>) {
+        let dim = self.dim;
+        let pool = self.pool.clone();
+        let PendingBackward {
+            ids_pending,
+            grads_pending,
+        } = pending;
         let recv_ids: Vec<Vec<GlobalId>> = comm
-            .all_to_all(ids_by_dst.iter().cloned().map(Message::Ids).collect())
+            .complete_all_to_all(ids_pending)
             .into_iter()
             .map(Message::into_ids)
             .collect();
         let recv_grads: Vec<Vec<f32>> = comm
-            .all_to_all(grad_by_dst.into_iter().map(Message::Floats).collect())
+            .complete_all_to_all(grads_pending)
             .into_iter()
             .map(Message::into_floats)
             .collect();
 
-        // Aggregate across sources (always — correctness requires the
-        // owner to apply each id's total gradient once).
         let flat_ids: Vec<GlobalId> = recv_ids.iter().flatten().copied().collect();
         let flat_grads: Vec<f32> = recv_grads.into_iter().flatten().collect();
-        let d = Dedup::of(&flat_ids);
+        let d = Dedup::of_auto(&flat_ids, pool.as_deref());
         let mut agg = vec![0.0f32; d.unique.len() * dim];
-        scatter_accumulate(&flat_grads, dim, &d.inverse, &mut agg);
+        scatter_accumulate_par(&flat_grads, dim, &d.inverse, &mut agg, pool.as_deref());
         (d.unique, agg)
+    }
+
+    /// Distributed backward, blocking: post + complete in one call.
+    ///
+    /// Collective: all ranks must call.
+    pub fn backward(
+        &mut self,
+        comm: &mut CommHandle,
+        ids: &[GlobalId],
+        grads: &[f32],
+    ) -> (Vec<GlobalId>, Vec<f32>) {
+        let pending = self.post_backward(comm, ids, grads);
+        self.complete_backward(comm, pending)
     }
 }
 
@@ -501,6 +631,112 @@ mod tests {
         let pipelined = run(true);
         for (b, p) in blocking.iter().zip(&pipelined) {
             assert_eq!(b, p, "volume accounting must not depend on scheduling");
+        }
+    }
+
+    /// Canonicalize a backward result for comparison (id-sorted rows).
+    fn sorted_pairs(lids: &[u64], lgrads: &[f32]) -> Vec<(u64, Vec<f32>)> {
+        let mut pairs: Vec<(u64, Vec<f32>)> = lids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, lgrads[i * DIM..(i + 1) * DIM].to_vec()))
+            .collect();
+        pairs.sort_by_key(|p| p.0);
+        pairs
+    }
+
+    type RoundResults = (Vec<Vec<f32>>, Vec<Vec<(u64, Vec<f32>)>>);
+
+    /// Three rounds of lookup+backward per rank under the given
+    /// schedule; returns per-round rows and id-sorted shard gradients.
+    fn run_schedule(double_buffered: bool) -> Vec<RoundResults> {
+        run_sharded(4, DedupStrategy::TwoStage, move |rank, se, comm| {
+            let batches: Vec<Vec<u64>> = (0..3)
+                .map(|b| vec![1 + b as u64, 2, 3, 40 + rank as u64, 2])
+                .collect();
+            let mut rows_all = Vec::new();
+            let mut grads_all: Vec<Vec<(u64, Vec<f32>)>> = Vec::new();
+            if !double_buffered {
+                for b in &batches {
+                    let rows = se.lookup(comm, b, true);
+                    let grads = vec![0.25f32; b.len() * DIM];
+                    let (lids, lgrads) = se.backward(comm, b, &grads);
+                    rows_all.push(rows);
+                    grads_all.push(sorted_pairs(&lids, &lgrads));
+                }
+            } else {
+                // The PR-2 trainer schedule: serve round k, post round
+                // k+1's IDs while k's reply is in flight, and complete
+                // round k's gradient exchange only during round k+1.
+                let mut posted = Some(se.post_ids(comm, &batches[0]));
+                let mut posted_bwd: Option<PendingBackward> = None;
+                for (round, b) in batches.iter().enumerate() {
+                    let pending = posted.take().unwrap();
+                    let reply = se.serve_reply(comm, pending, true);
+                    if round + 1 < batches.len() {
+                        posted = Some(se.post_ids(comm, &batches[round + 1]));
+                    }
+                    let rows = se.complete_reply(comm, reply);
+                    rows_all.push(rows);
+                    if let Some(pb) = posted_bwd.take() {
+                        let (lids, lgrads) = se.complete_backward(comm, pb);
+                        grads_all.push(sorted_pairs(&lids, &lgrads));
+                    }
+                    let grads = vec![0.25f32; b.len() * DIM];
+                    posted_bwd = Some(se.post_backward(comm, b, &grads));
+                }
+                let (lids, lgrads) = se.complete_backward(comm, posted_bwd.take().unwrap());
+                grads_all.push(sorted_pairs(&lids, &lgrads));
+            }
+            (rows_all, grads_all)
+        })
+    }
+
+    #[test]
+    fn double_buffered_schedule_bit_identical_to_blocking() {
+        let blocking = run_schedule(false);
+        let pipelined = run_schedule(true);
+        for (rank, (b, p)) in blocking.iter().zip(&pipelined).enumerate() {
+            assert_eq!(b.0, p.0, "rank {rank}: forward rows diverged");
+            assert_eq!(b.1, p.1, "rank {rank}: backward gradients diverged");
+        }
+    }
+
+    #[test]
+    fn pooled_concurrent_lookup_matches_reference_rows() {
+        use crate::embedding::concurrent::ConcurrentDynamicTable;
+        let handles = CommGroup::new(2);
+        let mut joins = Vec::new();
+        for (rank, mut comm) in handles.into_iter().enumerate() {
+            joins.push(thread::spawn(move || {
+                let table = ConcurrentDynamicTable::new(
+                    DynamicTableConfig::new(DIM).with_capacity(256).with_seed(7),
+                    8,
+                );
+                let pool = Arc::new(WorkerPool::new(2));
+                let mut se =
+                    ShardedEmbedding::new(table, DedupStrategy::TwoStage).with_pool(pool);
+                // Large batch: clears the parallel-fetch and sorted-dedup
+                // thresholds, so the pooled paths actually engage.
+                let ids: Vec<u64> = (0..10_000u64)
+                    .map(|i| (i * 31 + rank as u64) % 500)
+                    .collect();
+                let rows = se.lookup(&mut comm, &ids, true);
+                let grads = vec![0.5f32; ids.len() * DIM];
+                let (lids, lgrads) = se.backward(&mut comm, &ids, &grads);
+                (ids, rows, lids, lgrads)
+            }));
+        }
+        for j in joins {
+            let (ids, rows, lids, lgrads) = j.join().unwrap();
+            for (i, &id) in ids.iter().enumerate() {
+                assert_eq!(
+                    &rows[i * DIM..(i + 1) * DIM],
+                    expected_row(id).as_slice(),
+                    "id {id}"
+                );
+            }
+            assert_eq!(lgrads.len(), lids.len() * DIM);
         }
     }
 

@@ -20,20 +20,35 @@
 //! Entry points:
 //! - [`config`] — model / cluster / training configuration (GRM presets).
 //! - [`train::Trainer`] — the synchronous multi-worker training loop;
-//!   `TrainerOptions::overlap` pipelines micro-batch *k+1*'s ID
-//!   all-to-all behind micro-batch *k*'s compute.
+//!   `TrainerOptions::overlap` runs the fully double-buffered exchange
+//!   (micro-batch *k+1*'s ID all-to-all and *k*'s embedding reply in
+//!   flight together, *k*'s gradient push completed behind *k+1*'s
+//!   forward) and `TrainerOptions::threads` sizes each worker's shared
+//!   [`util::pool::WorkerPool`] — numerics are bit-identical for every
+//!   combination.
 //! - [`embedding`] — the paper's sparse-side contribution (§4):
-//!   [`embedding::EmbeddingStore`] for exclusive stores,
-//!   [`embedding::ConcurrentEmbeddingStore`] +
+//!   [`embedding::EmbeddingStore`] for exclusive stores (with batched
+//!   `fetch_rows`), [`embedding::ConcurrentEmbeddingStore`] +
 //!   [`embedding::concurrent::ConcurrentDynamicTable`] for lock-striped
-//!   concurrent shards, and
+//!   concurrent shards with stripe-bucketed parallel fetch, and
 //!   [`embedding::sharded::ShardedEmbedding::post_ids`] /
-//!   [`embedding::sharded::ShardedEmbedding::complete_lookup`] — the
-//!   two-phase sharded exchange over the communicator's posted
+//!   [`embedding::sharded::ShardedEmbedding::serve_reply`] /
+//!   [`embedding::sharded::ShardedEmbedding::complete_reply`] plus
+//!   [`embedding::sharded::ShardedEmbedding::post_backward`] /
+//!   [`embedding::sharded::ShardedEmbedding::complete_backward`] — the
+//!   three-phase sharded exchange over the communicator's posted
 //!   (isend/irecv-style) all-to-all lanes.
+//! - [`embedding::dedup`] — two-stage dedup with a size-switched
+//!   hash/sort kernel ([`embedding::dedup::DedupKernel`]) and
+//!   pool-parallel sort, gather and scatter kernels.
+//! - [`util::pool`] — the deterministic work-stealing-free worker pool
+//!   (`parallel_for` / `parallel_map` over stable index chunks).
 //! - [`balance`] — dynamic sequence balancing (§5.1, Algorithm 1).
+//! - [`data::prefetch`] — drop-joined background batch prefetcher with
+//!   queue-occupancy reporting.
 //! - [`sim`] — analytic multi-node scale simulator for the §6
-//!   experiments, including the overlap (hidden-communication) model.
+//!   experiments, including the per-lane overlap (hidden-communication)
+//!   model.
 
 pub mod balance;
 pub mod checkpoint;

@@ -3,7 +3,7 @@
 //! ```text
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
-//!                 [--lr 0.001]
+//!                 [--threads N] [--lr 0.001]
 //! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
 //!                 [--no-balancing] [--dedup ...] [--overlap on|off]
 //!                 [--backend hash|mch]
@@ -73,6 +73,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.train.table_merging = !args.has_flag("no-merging");
     opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
     opts.overlap = parse_overlap(&args.get_or("overlap", "on"))?;
+    // Per-worker pool size for the parallel sparse hot paths; 0 = size
+    // to the machine (resolved by the trainer). Numerics are
+    // bit-identical for every value.
+    opts.threads = args.get_usize("threads", 1);
     opts.train.lr = args.get_f64("lr", 1e-3) as f32;
     opts.train.target_tokens = args.get_usize("target-tokens", 2048);
     opts.train.fixed_batch = args.get_usize("batch", 16);
@@ -84,6 +88,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.gauc_warmup = args.get_usize("gauc-warmup", steps / 4);
 
     let overlap = opts.overlap;
+    let prefetch_depth = opts.prefetch_depth;
     let report = Trainer::new(opts, engine)?.run()?;
     let (lc, lv) = report.final_losses();
     println!("steps                : {}", report.steps.len());
@@ -92,6 +97,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.mean_exposed_comm_s() * 1e3,
         report.mean_hidden_comm_s() * 1e3,
         if overlap { "on" } else { "off" },
+    );
+    println!(
+        "hidden reply/grad    : {:.3} / {:.3} ms per step",
+        report.mean_hidden_reply_s() * 1e3,
+        report.mean_hidden_grad_s() * 1e3,
+    );
+    println!(
+        "prefetch occupancy   : {:.2} of depth {}",
+        report.prefetch_occupancy, prefetch_depth
     );
     println!("final loss ctr/ctcvr : {lc:.4} / {lv:.4}");
     println!(

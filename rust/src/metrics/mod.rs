@@ -184,6 +184,24 @@ pub fn overlap_exposure(compute_s: f64, comm_s: f64, overlap: bool) -> (f64, f64
     }
 }
 
+/// Lane-aware overlap split: several communication lanes (ID exchange,
+/// embedding reply, backward gradients — the double-buffered pipeline)
+/// share one compute window in priority order. Each lane hides up to
+/// the window *remaining* after the lanes before it; returns per-lane
+/// `(exposed, hidden)` in input order. With `overlap` off everything is
+/// exposed. Conservation holds per lane: `exposed + hidden == lane`.
+pub fn overlap_exposure_lanes(window_s: f64, lanes: &[f64], overlap: bool) -> Vec<(f64, f64)> {
+    let mut remaining = if overlap { window_s } else { 0.0 };
+    lanes
+        .iter()
+        .map(|&comm| {
+            let (exposed, hidden) = overlap_exposure(remaining, comm, overlap);
+            remaining = (remaining - hidden).max(0.0);
+            (exposed, hidden)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +318,24 @@ mod tests {
             let (e, h) = overlap_exposure(c, m, o);
             assert!((e + h - m).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn lane_exposure_priority_and_conservation() {
+        // Window 5 over lanes [2, 2, 2]: first two hide fully, third
+        // hides the remaining 1 and exposes 1.
+        let shares = overlap_exposure_lanes(5.0, &[2.0, 2.0, 2.0], true);
+        assert_eq!(shares, vec![(0.0, 2.0), (0.0, 2.0), (1.0, 1.0)]);
+        // Conservation per lane.
+        for (i, &(e, h)) in shares.iter().enumerate() {
+            assert!((e + h - 2.0).abs() < 1e-12, "lane {i}");
+        }
+        // Overlap off: everything exposed.
+        let off = overlap_exposure_lanes(5.0, &[2.0, 3.0], false);
+        assert_eq!(off, vec![(2.0, 0.0), (3.0, 0.0)]);
+        // Empty window: nothing hides.
+        let none = overlap_exposure_lanes(0.0, &[1.0], true);
+        assert_eq!(none, vec![(1.0, 0.0)]);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Adam (Kingma & Ba) for dense vectors and sparse embedding rows.
 
 use crate::embedding::dedup::IdMap;
-use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
+use crate::util::pool::WorkerPool;
 
 /// Adam hyperparameters (paper §6.1 uses Adam for both sparse and dense).
 #[derive(Clone, Copy, Debug)]
@@ -165,6 +166,80 @@ impl SparseAdam {
         }
     }
 
+    /// [`step`](Self::step) over a concurrently updatable table,
+    /// fanning the per-row Adam math and `apply_delta` calls across the
+    /// pool. `ids` must be unique (the sparse accumulator drains unique
+    /// sorted ids) — rows and their optimizer states are then disjoint,
+    /// so the update is embarrassingly parallel and **bit-identical**
+    /// to the serial [`step`](Self::step) for every pool size.
+    pub fn step_concurrent<S: ConcurrentEmbeddingStore + ?Sized>(
+        &mut self,
+        pool: &WorkerPool,
+        table: &S,
+        ids: &[GlobalId],
+        grads: &[f32],
+        scale: f32,
+    ) {
+        assert_eq!(grads.len(), ids.len() * self.dim);
+        // Always-on uniqueness check: duplicate ids would alias the raw
+        // row-state pointers below and race across pool threads (UB), so
+        // this must hold in release builds too. The accumulator drains
+        // strictly ascending ids, so the common case is one O(n) scan;
+        // only unsorted input pays the sort-based fallback.
+        if !ids.windows(2).all(|w| w[0] < w[1]) {
+            let mut v = ids.to_vec();
+            v.sort_unstable();
+            assert!(
+                v.windows(2).all(|w| w[0] != w[1]),
+                "step_concurrent requires unique ids"
+            );
+        }
+        let d = self.dim;
+        // Phase 1 (serial): materialize every row's state, then collect
+        // stable pointers. No map mutation happens after this point, so
+        // the pointers stay valid through the parallel region.
+        for &id in ids {
+            self.state.entry(id).or_insert_with(|| RowState {
+                m: vec![0.0; d],
+                v: vec![0.0; d],
+                t: 0,
+            });
+        }
+        struct StatePtrs(Vec<*mut RowState>);
+        unsafe impl Send for StatePtrs {}
+        unsafe impl Sync for StatePtrs {}
+        let states = StatePtrs(
+            ids.iter()
+                .map(|id| self.state.get_mut(id).unwrap() as *mut RowState)
+                .collect(),
+        );
+        let hp = self.hp;
+        // Phase 2 (parallel): per-row Adam + delta application. Chunk
+        // boundaries cannot affect the result — every row is touched by
+        // exactly one task and rows are independent.
+        pool.parallel_for(ids.len(), |range| {
+            let mut delta = vec![0.0f32; d];
+            for i in range {
+                // SAFETY: `ids` are unique, so `states.0[i]` are
+                // pairwise distinct; the map is not mutated while the
+                // scope runs (phase 1 finished, `self` is borrowed).
+                let st = unsafe { &mut *states.0[i] };
+                st.t += 1;
+                let bc1 = 1.0 - hp.beta1.powi(st.t as i32);
+                let bc2 = 1.0 - hp.beta2.powi(st.t as i32);
+                for j in 0..d {
+                    let g = grads[i * d + j] * scale;
+                    st.m[j] = hp.beta1 * st.m[j] + (1.0 - hp.beta1) * g;
+                    st.v[j] = hp.beta2 * st.v[j] + (1.0 - hp.beta2) * g * g;
+                    let mhat = st.m[j] / bc1;
+                    let vhat = st.v[j] / bc2;
+                    delta[j] = -hp.lr * mhat / (vhat.sqrt() + hp.eps);
+                }
+                table.apply_delta(ids[i], &delta);
+            }
+        });
+    }
+
     /// Iterate over (id, state) for checkpointing.
     pub fn iter_state(&self) -> impl Iterator<Item = (&GlobalId, &RowState)> {
         self.state.iter()
@@ -289,6 +364,42 @@ mod tests {
         t.lookup(7, &mut row);
         for (a, b) in row.iter().zip(&dense_p) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn step_concurrent_bit_identical_to_serial_step() {
+        use crate::embedding::concurrent::ConcurrentDynamicTable;
+        let cfg = DynamicTableConfig::new(4).with_capacity(4096).with_seed(3);
+        let mut serial_table = ConcurrentDynamicTable::new(cfg.clone(), 8);
+        let conc_table = ConcurrentDynamicTable::new(cfg, 8);
+        let ids: Vec<u64> = (0..3000).collect();
+        let mut buf = vec![0.0f32; 4];
+        for &id in &ids {
+            EmbeddingStore::lookup_or_insert(&mut serial_table, id, &mut buf);
+            ConcurrentDynamicTable::lookup_or_insert(&conc_table, id, &mut buf);
+        }
+        let mut o1 = SparseAdam::new(4, AdamParams::default());
+        let mut o2 = SparseAdam::new(4, AdamParams::default());
+        let pool = crate::util::pool::WorkerPool::new(4);
+        for round in 0..3usize {
+            let grads: Vec<f32> = (0..ids.len() * 4)
+                .map(|i| ((i + round) % 13) as f32 * 0.01 - 0.05)
+                .collect();
+            o1.step(&mut serial_table, &ids, &grads, 0.5);
+            o2.step_concurrent(&pool, &conc_table, &ids, &grads, 0.5);
+        }
+        assert_eq!(
+            serial_table.content_checksum(),
+            conc_table.content_checksum(),
+            "table contents diverged"
+        );
+        for &id in &ids[..50] {
+            let a = o1.row_state(id).unwrap();
+            let b = o2.row_state(id).unwrap();
+            assert_eq!(a.m, b.m, "id {id} m");
+            assert_eq!(a.v, b.v, "id {id} v");
+            assert_eq!(a.t, b.t, "id {id} t");
         }
     }
 

@@ -190,10 +190,16 @@ pub struct DeviceStep {
     pub tokens: usize,
     pub compute_s: f64,
     pub lookup_s: f64,
-    /// Exposed communication (embedding exchange + un-hidden ID share).
+    /// Exposed communication (un-hidden shares of all three lanes).
     pub comm_s: f64,
     /// ID-exchange seconds hidden behind compute (0 with overlap off).
     pub hidden_comm_s: f64,
+    /// Embedding-reply seconds hidden by the double-buffered round
+    /// (0 with overlap off).
+    pub hidden_reply_s: f64,
+    /// Backward-gradient seconds hidden behind the next micro-batch's
+    /// forward (0 with overlap off).
+    pub hidden_grad_s: f64,
 }
 
 /// One simulated step.
@@ -324,13 +330,15 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
 
             let id_bytes_pp = (sent_per_dest * 8.0) as usize;
             let emb_bytes_pp = (sent_per_dest * dim as f64 * 4.0) as usize;
-            // Forward: ID all-to-all + embedding all-to-all. Backward
-            // (§3 "Backward Update"): gradient all-to-all of the same
-            // embedding volume back to the owning shards. The ID
-            // exchange can pipeline behind compute (posted two-phase
-            // lookup); the embedding payloads gate the round directly.
+            // Forward: ID all-to-all + embedding-reply all-to-all.
+            // Backward (§3 "Backward Update"): gradient all-to-all of
+            // the same embedding volume back to the owning shards. With
+            // overlap on, all three lanes ride the double-buffered
+            // pipeline and hide behind compute in priority order (IDs,
+            // then the reply, then gradients).
             let id_comm = opts.net.all_to_all_uniform_time(world, id_bytes_pp.max(1));
-            let emb_comm = 2.0 * opts.net.all_to_all_uniform_time(world, emb_bytes_pp.max(1));
+            let reply_comm = opts.net.all_to_all_uniform_time(world, emb_bytes_pp.max(1));
+            let grad_comm = reply_comm;
 
             let mult = opts.backend.lookup_cost_multiplier(opts.resident_rows);
             // Forward lookups + backward sparse update: the optimizer
@@ -344,9 +352,12 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
                 dim,
             ) + update_hbm;
             let compute_s = opts.device.compute_time(flops);
-            let (id_exposed, id_hidden) =
-                crate::metrics::overlap_exposure(compute_s, id_comm, opts.overlap);
-            let comm_s = emb_comm + id_exposed + op_overhead;
+            let shares = crate::metrics::overlap_exposure_lanes(
+                compute_s,
+                &[id_comm, reply_comm, grad_comm],
+                opts.overlap,
+            );
+            let comm_s = shares[0].0 + shares[1].0 + shares[2].0 + op_overhead;
 
             total_samples += seqs as u64;
             total_tokens += tokens as u64;
@@ -356,7 +367,9 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
                 compute_s,
                 lookup_s,
                 comm_s,
-                hidden_comm_s: id_hidden,
+                hidden_comm_s: shares[0].1,
+                hidden_reply_s: shares[1].1,
+                hidden_grad_s: shares[2].1,
             });
         }
         let busy: Vec<f64> = devices
@@ -581,6 +594,38 @@ mod tests {
         assert!(hidden(&r_on) > 0.0, "hidden share must be reported");
         assert_eq!(hidden(&r_off), 0.0, "no hiding without overlap");
         assert!(r_on.throughput >= r_off.throughput);
+    }
+
+    #[test]
+    fn overlap_hides_reply_and_gradient_lanes() {
+        let mut on = quick_opts(8);
+        on.overlap = true;
+        let r_on = simulate(&on);
+        let sum_reply: f64 = r_on
+            .steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.hidden_reply_s))
+            .sum();
+        let sum_grad: f64 = r_on
+            .steps
+            .iter()
+            .flat_map(|s| s.devices.iter().map(|d| d.hidden_grad_s))
+            .sum();
+        assert!(sum_reply > 0.0, "reply lane must report hidden time");
+        assert!(sum_grad > 0.0, "gradient lane must report hidden time");
+        let mut off = quick_opts(8);
+        off.overlap = false;
+        let r_off = simulate(&off);
+        let sum_off: f64 = r_off
+            .steps
+            .iter()
+            .flat_map(|s| {
+                s.devices
+                    .iter()
+                    .map(|d| d.hidden_reply_s + d.hidden_grad_s)
+            })
+            .sum();
+        assert_eq!(sum_off, 0.0, "no hiding without overlap");
     }
 
     #[test]

@@ -31,15 +31,18 @@ use crate::collective::comm::{CommGroup, CommHandle};
 use crate::collective::netmodel::NetModel;
 use crate::config::{ClusterConfig, ModelConfig, TrainConfig};
 use crate::data::generator::{GeneratorConfig, WorkloadGenerator};
+use crate::data::prefetch::Prefetcher;
 use crate::data::schema::Schema;
-use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
+use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::dynamic_table::DynamicTableConfig;
 use crate::embedding::merge::MergePlan;
-use crate::embedding::sharded::ShardedEmbedding;
+use crate::embedding::sharded::{PendingBackward, PendingLookup, ShardedEmbedding};
 use crate::embedding::dedup::DedupVolume;
 use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
 use crate::optim::adam::{AdamParams, DenseAdam, SparseAdam};
 use crate::optim::{DenseAccumulator, SparseAccumulator};
 use crate::runtime::{Engine, Tensor};
+use crate::util::pool::WorkerPool;
 use crate::util::timer::PhaseTimer;
 use features::BatchIds;
 
@@ -58,6 +61,14 @@ pub struct TrainerOptions {
     /// reproduces the strictly sequential baseline; the numerics are
     /// bit-identical either way (ablation axis for Fig. 12).
     pub overlap: bool,
+    /// Threads in each worker's shared pool (sparse hot paths: dedup,
+    /// stage-2 serve fan-out over table stripes, row expansion,
+    /// gradient aggregation, optimizer apply). 1 = serial reference,
+    /// 0 = size to the machine; results are bit-identical for every
+    /// value (`--threads`).
+    pub threads: usize,
+    /// Batches buffered ahead of the consumer by the data prefetcher.
+    pub prefetch_depth: usize,
     /// Initial capacity of each worker's table shard.
     pub shard_capacity: usize,
     /// Collect GAUC during training (costs memory on long runs).
@@ -79,6 +90,8 @@ impl TrainerOptions {
             net: NetModel::default(),
             steps,
             overlap: true,
+            threads: 1,
+            prefetch_depth: 2,
             shard_capacity: 4096,
             collect_gauc: true,
             gauc_warmup: 0,
@@ -105,6 +118,12 @@ pub struct StepRecord {
     /// Simulated per-worker ID-exchange seconds hidden behind compute
     /// (zero with `overlap: false`) — Fig. 12's overlap decomposition.
     pub sim_hidden_comm_s: Vec<f64>,
+    /// Simulated per-worker embedding-reply seconds hidden by the
+    /// double-buffered round (zero with `overlap: false`).
+    pub sim_hidden_reply_s: Vec<f64>,
+    /// Simulated per-worker backward-gradient seconds hidden behind the
+    /// next micro-batch's forward (zero with `overlap: false`).
+    pub sim_hidden_grad_s: Vec<f64>,
     /// Simulated synchronous step seconds (max device + dense sync).
     pub sim_step_s: f64,
     pub wall_s: f64,
@@ -125,6 +144,13 @@ pub struct TrainReport {
     pub table_memory_bytes: usize,
     pub dedup_volume: DedupVolume,
     pub truncated_sequences: u64,
+    /// Mean data-prefetch queue occupancy at fetch time across workers
+    /// (0..=`prefetch_depth`; near the depth means I/O fully masked).
+    pub prefetch_occupancy: f64,
+    /// Order-independent fingerprint of every worker's final embedding
+    /// shard contents (ids + row bits) — the e2e bitwise-equality
+    /// witness for `--threads`/`--overlap` ablations.
+    pub embedding_checksum: u64,
 }
 
 impl TrainReport {
@@ -149,6 +175,27 @@ impl TrainReport {
             .steps
             .iter()
             .map(|s| slice_mean(&s.sim_hidden_comm_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
+    /// Mean embedding-reply seconds per step hidden by double-buffering.
+    pub fn mean_hidden_reply_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_hidden_reply_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
+    /// Mean backward-gradient seconds per step hidden behind the next
+    /// micro-batch's forward.
+    pub fn mean_hidden_grad_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_hidden_grad_s))
             .collect();
         slice_mean(&per_step)
     }
@@ -227,12 +274,17 @@ impl Trainer {
         let mut truncated = 0;
         let mut steps = Vec::new();
         let mut wall = Throughput::default();
+        let mut prefetch_occ = 0.0;
+        let mut checksum = 0u64;
+        let n_workers = outputs.len().max(1) as f64;
         for out in outputs {
             gauc_ctr.merge(out.gauc_ctr);
             gauc_ctcvr.merge(out.gauc_ctcvr);
             phases.merge(&out.phases);
             table_rows += out.table_rows;
             table_memory += out.table_memory;
+            prefetch_occ += out.prefetch_occupancy / n_workers;
+            checksum = checksum.wrapping_add(out.table_checksum);
             volume.ids_raw += out.volume.ids_raw;
             volume.ids_sent += out.volume.ids_sent;
             volume.emb_rows_raw += out.volume.emb_rows_raw;
@@ -259,6 +311,8 @@ impl Trainer {
             table_memory_bytes: table_memory,
             dedup_volume: volume,
             truncated_sequences: truncated,
+            prefetch_occupancy: prefetch_occ,
+            embedding_checksum: checksum,
             steps,
         })
     }
@@ -276,6 +330,8 @@ struct WorkerOutput {
     table_memory: usize,
     volume: DedupVolume,
     truncated: u64,
+    prefetch_occupancy: f64,
+    table_checksum: u64,
 }
 
 /// One micro-batch prepared for the engine.
@@ -298,13 +354,22 @@ fn worker_main(
     let schema = Schema::meituan_like(d, 1);
     let plan = MergePlan::build(&schema.all_features());
 
-    // Per-worker data shard: independent generator stream.
+    // Per-worker data shard: independent generator stream feeding a
+    // background prefetcher (the paper's copy stream) so chunk
+    // generation overlaps training; the bounded queue's occupancy is
+    // surfaced in the report. The channel preserves stream order, so
+    // determinism is untouched.
     let mut gen_cfg = opts.generator.clone();
     gen_cfg.seed = opts.generator.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9);
     // Cap lengths at the largest bucket so nothing needs truncation.
     let max_l = arts.largest_bucket().len;
     gen_cfg.max_len = gen_cfg.max_len.min(max_l);
     let mut gen = WorkloadGenerator::new(gen_cfg);
+    let schema_prod = schema.clone();
+    let mut prefetch = Prefetcher::spawn(opts.prefetch_depth.max(1), move || {
+        let chunk = gen.batch(&schema_prod, 32);
+        Some(chunk)
+    });
 
     // Batcher per the ablation toggle.
     let mut batcher: Box<dyn Batcher> = if opts.train.sequence_balancing {
@@ -313,15 +378,30 @@ fn worker_main(
         Box::new(FixedBatcher::new(opts.train.fixed_batch))
     };
 
-    // Sparse side: one merged shard table (table merging is reflected in
-    // lookup-op counts; physically we always store one table per merge
-    // group — here the schema is single-dim so one group).
-    let table = DynamicEmbeddingTable::new(
+    // The worker's shared pool: dedup, stage-2 serve fan-out, row
+    // expansion, gradient aggregation and the sparse optimizer all ride
+    // it. threads == 1 is the serial reference, 0 sizes to the machine;
+    // results are bit-identical for every size.
+    let pool = Arc::new(if opts.threads == 0 {
+        WorkerPool::with_available_parallelism()
+    } else {
+        WorkerPool::new(opts.threads)
+    });
+
+    // Sparse side: one merged lock-striped shard table (table merging
+    // is reflected in lookup-op counts; physically we always store one
+    // table per merge group — here the schema is single-dim so one
+    // group). The stripe count is fixed (8) independent of `threads`,
+    // so per-stripe state — and thus the checksum — cannot depend on
+    // the pool size.
+    let table = ConcurrentDynamicTable::new(
         DynamicTableConfig::new(d)
             .with_capacity(opts.shard_capacity)
             .with_seed(engine.manifest().seed ^ 0xEB),
+        8,
     );
-    let mut sharded = ShardedEmbedding::new(table, opts.train.dedup);
+    let mut sharded =
+        ShardedEmbedding::new(table, opts.train.dedup).with_pool(Arc::clone(&pool));
     let mut sparse_opt = SparseAdam::new(
         d,
         AdamParams {
@@ -362,7 +442,7 @@ fn worker_main(
             if let Some(b) = batcher.next_batch() {
                 break b;
             }
-            batcher.push_chunk(gen.batch(&schema, 32));
+            batcher.push_chunk(prefetch.next().expect("prefetch stream is endless"));
         });
         let my_tokens = batch.tokens as u64;
         let my_samples = batch.sequences.len() as u64;
@@ -405,29 +485,33 @@ fn worker_main(
         });
 
         let mut step_loss = [0.0f64; 2];
-        let mut posted: Option<crate::embedding::sharded::PendingLookup> = None;
+        let mut posted: Option<PendingLookup> = None;
+        let mut posted_bwd: Option<PendingBackward> = None;
         for round in 0..rounds {
             let micro = micros.get(round);
             let (bi, bucket) = &round_ids[round];
             let bucket = *bucket;
 
-            // ---- lookup (collective, two-phase) -----------------------
+            // ---- lookup (collective, three-phase) ---------------------
             // With overlap on, this round's IDs were already posted
-            // during the previous round's compute; only the completion
-            // (serve + embedding exchange) remains.
+            // during the previous round; serve the shard now and post
+            // the embedding reply...
             let pending = match posted.take() {
                 Some(p) => p,
                 None => phases.time("2_lookup", || sharded.post_ids(&mut comm, &bi.ids)),
             };
-            let rows =
-                phases.time("2_lookup", || sharded.complete_lookup(&mut comm, pending, true));
+            let served =
+                phases.time("2_lookup", || sharded.serve_reply(&mut comm, pending, true));
             if opts.overlap && round + 1 < rounds {
-                // Post the next round's ID all-to-all now — it rides a
-                // dedicated comm lane and drains while we compute.
+                // ...then post the next round's ID all-to-all while this
+                // round's reply is still on the wire — the
+                // double-buffered round: both exchanges in flight at
+                // once, each on its own comm lane.
                 posted = Some(phases.time("2_lookup", || {
                     sharded.post_ids(&mut comm, &round_ids[round + 1].0.ids)
                 }));
             }
+            let rows = phases.time("2_lookup", || sharded.complete_reply(&mut comm, served));
 
             // ---- forward + backward (local) ---------------------------
             let occ_grads = if let Some(m) = micro {
@@ -467,11 +551,35 @@ fn worker_main(
             };
 
             // ---- sparse backward (collective) + local accumulation ----
+            // Complete the *previous* round's gradient exchange only
+            // now — its wire time hid behind this round's forward and
+            // backward compute. Then post this round's gradients; with
+            // overlap on they stay in flight until the next round (or
+            // the post-loop flush). Round order of accumulation is
+            // identical to the blocking schedule, so numerics match
+            // bitwise.
             phases.time("4_sparse_update", || {
-                let (lids, lgrads) = sharded.backward(&mut comm, &bi.ids, &occ_grads);
-                sparse_acc.add(&lids, &lgrads, 0);
+                if let Some(pb) = posted_bwd.take() {
+                    let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
+                    sparse_acc.add(&lids, &lgrads, 0);
+                }
+                let pb = sharded.post_backward(&mut comm, &bi.ids, &occ_grads);
+                if opts.overlap {
+                    posted_bwd = Some(pb);
+                } else {
+                    let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
+                    sparse_acc.add(&lids, &lgrads, 0);
+                }
             });
         }
+        // Flush the last round's in-flight gradient exchange before the
+        // optimizer applies updates.
+        phases.time("4_sparse_update", || {
+            if let Some(pb) = posted_bwd.take() {
+                let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
+                sparse_acc.add(&lids, &lgrads, 0);
+            }
+        });
         debug_assert!(posted.is_none(), "a posted lookup outlived its step");
 
         // ---- weighted dense sync + updates (collective) ---------------
@@ -485,7 +593,10 @@ fn worker_main(
                 comm.all_reduce_sum(&mut grads);
                 dense_opt.step(&mut params, &grads, scale);
                 let (sids, sgrads, _) = sparse_acc.take();
-                sparse_opt.step(sharded.table_mut(), &sids, &sgrads, scale);
+                // Row-wise Adam fans out across the worker pool; the
+                // drained ids are unique, so rows/states are disjoint
+                // and the update is bit-identical to the serial step.
+                sparse_opt.step_concurrent(&pool, sharded.table(), &sids, &sgrads, scale);
             }
         });
 
@@ -496,9 +607,11 @@ fn worker_main(
         comm.all_reduce_sum(&mut losses);
 
         // Simulated device time: compute + local lookup + exposed
-        // exchange. The embedding exchange is always exposed; the ID
-        // exchange hides behind compute when overlap is on (Fig. 12's
-        // decomposition reports both shares).
+        // exchange. With overlap on, three lanes hide behind compute in
+        // priority order — the ID exchange, then the embedding reply
+        // (double-buffered round), then the backward gradient push
+        // (completed behind the next round's forward); Fig. 12's
+        // decomposition reports every share.
         let dv = sharded.volume;
         let lookups = dv.lookups_done - vol_prev.lookups_done;
         let rows_moved = dv.emb_rows_sent - vol_prev.emb_rows_sent;
@@ -509,31 +622,39 @@ fn worker_main(
         let pairs = world.max(1).pow(2).max(1);
         let emb_bytes_per_pair = (rows_moved * d * 4) / pairs;
         let id_bytes_per_pair = (ids_moved * 8) / pairs;
-        let t_emb_comm =
-            opts.net.all_to_all_uniform_time(world, emb_bytes_per_pair.max(1)) * 2.0;
+        let t_reply_comm = opts.net.all_to_all_uniform_time(world, emb_bytes_per_pair.max(1));
+        let t_grad_comm = t_reply_comm;
         let t_id_comm = opts.net.all_to_all_uniform_time(world, id_bytes_per_pair.max(1));
-        // Only rounds actually posted ahead can hide their ID exchange:
-        // the first round of every step is completed right after posting
-        // (nothing to overlap with), so with R rounds at most (R-1)/R of
-        // the ID traffic is pipelined — and it can only hide behind the
-        // compute of the rounds it overlaps, the same (R-1)/R share of
-        // the step's compute, not the whole step.
+        // Only rounds actually pipelined ahead can hide their exchange:
+        // the first round's IDs are completed right after posting, the
+        // last round's reply/gradients have no successor compute to
+        // hide behind — so with R rounds at most (R-1)/R of each lane's
+        // traffic is pipelined, and it can only hide behind the same
+        // (R-1)/R share of the step's compute.
         let pipelined_frac = if opts.overlap && rounds > 0 {
             (rounds - 1) as f64 / rounds as f64
         } else {
             0.0
         };
-        let t_id_hideable = t_id_comm * pipelined_frac;
-        let t_overlap_window = t_compute * pipelined_frac;
-        let (t_id_excess, t_id_hidden) =
-            crate::metrics::overlap_exposure(t_overlap_window, t_id_hideable, opts.overlap);
-        let t_exposed_comm = t_emb_comm + (t_id_comm - t_id_hideable) + t_id_excess;
+        let t_window = t_compute * pipelined_frac;
+        let hideable = [
+            t_id_comm * pipelined_frac,
+            t_reply_comm * pipelined_frac,
+            t_grad_comm * pipelined_frac,
+        ];
+        let shares =
+            crate::metrics::overlap_exposure_lanes(t_window, &hideable, opts.overlap);
+        let t_exposed_comm = (t_id_comm - hideable[0]) + shares[0].0
+            + (t_reply_comm - hideable[1]) + shares[1].0
+            + (t_grad_comm - hideable[2]) + shares[2].0;
         let my_sim = t_compute + t_lookup + t_exposed_comm;
         let gathered: Vec<Vec<f32>> = comm
             .all_gather(crate::collective::comm::Message::Floats(vec![
                 my_sim as f32,
                 t_exposed_comm as f32,
-                t_id_hidden as f32,
+                shares[0].1 as f32,
+                shares[1].1 as f32,
+                shares[2].1 as f32,
             ]))
             .into_iter()
             .map(|m| m.into_floats())
@@ -541,6 +662,8 @@ fn worker_main(
         let sim_all: Vec<f64> = gathered.iter().map(|v| v[0] as f64).collect();
         let comm_all: Vec<f64> = gathered.iter().map(|v| v[1] as f64).collect();
         let hidden_all: Vec<f64> = gathered.iter().map(|v| v[2] as f64).collect();
+        let hidden_reply_all: Vec<f64> = gathered.iter().map(|v| v[3] as f64).collect();
+        let hidden_grad_all: Vec<f64> = gathered.iter().map(|v| v[4] as f64).collect();
         let sim_step = sim_all.iter().cloned().fold(0.0, f64::max)
             + opts.net.all_reduce_time(world, params.len() * 4);
 
@@ -557,6 +680,8 @@ fn worker_main(
             sim_device_s: sim_all,
             sim_exposed_comm_s: comm_all,
             sim_hidden_comm_s: hidden_all,
+            sim_hidden_reply_s: hidden_reply_all,
+            sim_hidden_grad_s: hidden_grad_all,
             sim_step_s: sim_step,
             wall_s,
         });
@@ -582,14 +707,16 @@ fn worker_main(
         wall,
         table_rows: {
             use crate::embedding::EmbeddingStore;
-            sharded.table().len()
+            EmbeddingStore::len(sharded.table())
         },
         table_memory: {
             use crate::embedding::EmbeddingStore;
-            sharded.table().memory_bytes()
+            EmbeddingStore::memory_bytes(sharded.table())
         },
         volume: sharded.volume,
         truncated,
+        prefetch_occupancy: prefetch.depth_occupancy(),
+        table_checksum: sharded.table().content_checksum(),
     })
 }
 

@@ -1,13 +1,15 @@
 //! Small self-contained substrates that the offline crate registry cannot
 //! provide: seeded RNG (`rand` replacement), JSON (`serde_json`
 //! replacement), software half floats (`half` replacement), statistics
-//! helpers, timers, a micro-benchmark harness (`criterion` replacement)
-//! and a CLI argument parser (`clap` replacement).
+//! helpers, timers, a micro-benchmark harness (`criterion` replacement),
+//! a CLI argument parser (`clap` replacement) and a deterministic scoped
+//! worker pool (`rayon` replacement for the sparse hot paths).
 
 pub mod bench;
 pub mod cli;
 pub mod f16;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;

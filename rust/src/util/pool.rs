@@ -1,0 +1,550 @@
+//! Deterministic shared worker pool for the sparse hot paths.
+//!
+//! A [`WorkerPool`] owns `threads - 1` persistent worker threads; the
+//! calling thread is always the `threads`-th participant, so
+//! `WorkerPool::new(1)` degenerates to pure inline execution with zero
+//! synchronization. Work is distributed by **static chunking** over
+//! index ranges — there is no work stealing and no randomized
+//! scheduling, so:
+//!
+//! - [`WorkerPool::parallel_map`] returns results in index order no
+//!   matter which thread computed which chunk;
+//! - chunk boundaries are a pure function of `(len, chunk count)`, so
+//!   any rank-ordered reduction over per-chunk results is bitwise
+//!   reproducible run to run;
+//! - callers that need bit-identity *across thread counts* (the e2e
+//!   determinism suite runs `--threads {1,4}`) arrange their work so
+//!   either the chunking cannot affect the result (disjoint writes,
+//!   per-row accumulation) or the chunk count is fixed independently of
+//!   `threads` — both patterns live in [`crate::embedding::dedup`].
+//!
+//! Scoped borrows: tasks may capture non-`'static` references. This is
+//! sound because [`WorkerPool::run_scope`] never returns (even by
+//! panic) until every submitted task has finished executing, mirroring
+//! `std::thread::scope`. Blocked scopes *help*: while waiting they
+//! drain pending tasks from the shared queue, so nested
+//! `parallel_for` calls from inside a pool task cannot deadlock even
+//! on a single-worker pool.
+//!
+//! Panics inside tasks are caught, the scope still waits for its
+//! remaining tasks, and the first panic payload is re-raised on the
+//! caller — the same contract as `std::thread::scope`.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A task queued for the pool, tagged with its scope so completion can
+/// be signalled.
+struct QueuedTask {
+    f: Box<dyn FnOnce() + Send>,
+    scope: Arc<ScopeSync>,
+}
+
+/// Per-`run_scope` completion state.
+struct ScopeSync {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct PoolState {
+    queue: VecDeque<QueuedTask>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Signals both "new task available" and "a scope finished a task".
+    cv: Condvar,
+}
+
+impl PoolInner {
+    /// Run one task, recording a panic in its scope, then decrement the
+    /// scope's counter and wake any waiters.
+    fn execute(&self, task: QueuedTask) {
+        let QueuedTask { f, scope } = task;
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+            let mut slot = scope.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // Hold the lock while signalling so a waiter cannot observe
+        // `remaining > 0`, miss the decrement, and sleep forever.
+        let _guard = self.state.lock().unwrap();
+        scope.remaining.fetch_sub(1, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// A fixed-size pool of persistent worker threads with scoped,
+/// deterministic fork/join helpers. See the module docs for the
+/// determinism contract.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool where `threads` threads participate in every parallel
+    /// region: this caller plus `threads - 1` spawned workers.
+    /// `threads` is clamped to at least 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            inner,
+            workers,
+            threads,
+        }
+    }
+
+    /// A pool sized to the machine (`std::thread::available_parallelism`).
+    pub fn with_available_parallelism() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::new(n)
+    }
+
+    /// Number of threads participating in parallel regions (callers +
+    /// workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Stable chunk boundaries: split `0..len` into at most `chunks`
+    /// contiguous ranges, a pure function of `(len, chunks)`.
+    pub fn chunk_ranges(len: usize, chunks: usize) -> Vec<Range<usize>> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let chunks = chunks.clamp(1, len);
+        (0..chunks)
+            .map(|c| (c * len / chunks)..((c + 1) * len / chunks))
+            .collect()
+    }
+
+    /// Execute every task, blocking until all complete; tasks may
+    /// borrow from the caller's stack. The first panicking task's
+    /// payload is re-raised here after all tasks have finished.
+    pub fn run_scope<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        // Inline fast path: single participant, or a single task —
+        // nothing to coordinate.
+        if self.threads == 1 || tasks.len() == 1 {
+            for f in tasks {
+                f();
+            }
+            return;
+        }
+        let scope = Arc::new(ScopeSync {
+            remaining: AtomicUsize::new(tasks.len()),
+            panic: Mutex::new(None),
+        });
+        let mut tasks = tasks.into_iter();
+        // The caller keeps the first task for itself; the rest go to
+        // the shared queue.
+        let mine = tasks.next().unwrap();
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            for f in tasks {
+                // SAFETY: lifetime erasure to put borrowed closures in
+                // the 'static queue. `run_scope` does not return until
+                // `scope.remaining == 0`, i.e. until every erased task
+                // has finished running, so no borrow outlives its
+                // referent (same argument as std::thread::scope).
+                let f = unsafe { erase_task_lifetime(f) };
+                st.queue.push_back(QueuedTask {
+                    f,
+                    scope: Arc::clone(&scope),
+                });
+            }
+            self.inner.cv.notify_all();
+        }
+        // Run our own share inline (still counted in `remaining`).
+        // SAFETY: as above — this scope blocks until the task has run.
+        let mine = unsafe { erase_task_lifetime(mine) };
+        self.inner.execute(QueuedTask {
+            f: mine,
+            scope: Arc::clone(&scope),
+        });
+        // Wait for the rest, helping drain the queue: a blocked scope
+        // executing other pending tasks (possibly from a nested
+        // parallel region) is what makes nesting deadlock-free.
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if scope.remaining.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            if let Some(task) = st.queue.pop_front() {
+                drop(st);
+                self.inner.execute(task);
+                st = self.inner.state.lock().unwrap();
+            } else {
+                st = self.inner.cv.wait(st).unwrap();
+            }
+        }
+        drop(st);
+        if let Some(payload) = scope.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Run `f` over stable chunks of `0..len`, one task per chunk (at
+    /// most `threads()` chunks). Blocks until every chunk completes.
+    pub fn parallel_for(&self, len: usize, f: impl Fn(Range<usize>) + Sync + Send) {
+        if len == 0 {
+            return;
+        }
+        if self.threads == 1 {
+            f(0..len);
+            return;
+        }
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Self::chunk_ranges(len, self.threads)
+            .into_iter()
+            .map(|r| Box::new(move || f(r)) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        self.run_scope(tasks);
+    }
+
+    /// Map `f` over `0..len`; the output is in index order regardless
+    /// of scheduling (each chunk writes its own contiguous slot range).
+    pub fn parallel_map<T: Send>(
+        &self,
+        len: usize,
+        f: impl Fn(usize) -> T + Sync + Send,
+    ) -> Vec<T> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if self.threads == 1 {
+            return (0..len).map(f).collect();
+        }
+        let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+        {
+            let f = &f;
+            let mut rest: &mut [Option<T>] = &mut out;
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut prev_end = 0usize;
+            for r in Self::chunk_ranges(len, self.threads) {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - prev_end);
+                rest = tail;
+                prev_end = r.end;
+                tasks.push(Box::new(move || {
+                    for (slot, i) in chunk.iter_mut().zip(r) {
+                        *slot = Some(f(i));
+                    }
+                }));
+            }
+            self.run_scope(tasks);
+        }
+        out.into_iter().map(|s| s.expect("chunk completed")).collect()
+    }
+
+    /// Run `f` over stable chunks of `items`, handing each task the
+    /// matching disjoint sub-slice of `data` (`data.len()` must be
+    /// `items * stride`; chunk `a..b` receives `data[a*stride..b*stride]`).
+    /// The workhorse for chunked row kernels (gather, fetch, expand).
+    pub fn parallel_for_chunks_mut<T: Send>(
+        &self,
+        data: &mut [T],
+        items: usize,
+        stride: usize,
+        f: impl Fn(Range<usize>, &mut [T]) + Sync + Send,
+    ) {
+        self.parallel_for_ranges_mut(data, stride, &Self::chunk_ranges(items, self.threads), f);
+    }
+
+    /// [`parallel_for_chunks_mut`](Self::parallel_for_chunks_mut) with
+    /// **caller-supplied** boundaries: `ranges` must partition
+    /// `0..data.len()/stride` contiguously in order (asserted). Use this
+    /// when downstream logic depends on the exact boundaries (e.g. the
+    /// sorted-dedup run merge), so the split cannot drift from the
+    /// caller's bookkeeping.
+    pub fn parallel_for_ranges_mut<T: Send>(
+        &self,
+        data: &mut [T],
+        stride: usize,
+        ranges: &[Range<usize>],
+        f: impl Fn(Range<usize>, &mut [T]) + Sync + Send,
+    ) {
+        let items = ranges.last().map(|r| r.end).unwrap_or(0);
+        assert_eq!(data.len(), items * stride, "ranges must cover data");
+        let mut prev_end = 0usize;
+        for r in ranges {
+            assert_eq!(r.start, prev_end, "ranges must be contiguous from 0");
+            prev_end = r.end;
+        }
+        if ranges.is_empty() {
+            return;
+        }
+        if self.threads == 1 || ranges.len() == 1 {
+            let mut rest: &mut [T] = data;
+            let mut prev_end = 0usize;
+            for r in ranges {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((r.end - prev_end) * stride);
+                rest = tail;
+                prev_end = r.end;
+                f(r.clone(), chunk);
+            }
+            return;
+        }
+        let f = &f;
+        let mut rest: &mut [T] = data;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        let mut prev_end = 0usize;
+        for r in ranges {
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut((r.end - prev_end) * stride);
+            rest = tail;
+            prev_end = r.end;
+            let r = r.clone();
+            tasks.push(Box::new(move || f(r, chunk)));
+        }
+        self.run_scope(tasks);
+    }
+}
+
+/// Erase a scoped task's lifetime so it can sit in the pool's `'static`
+/// queue.
+///
+/// # Safety
+/// The caller must not return (even by unwinding) until the task has
+/// finished executing — [`WorkerPool::run_scope`] guarantees this by
+/// waiting for `ScopeSync::remaining` to reach zero before returning or
+/// re-raising a panic.
+unsafe fn erase_task_lifetime<'scope>(
+    f: Box<dyn FnOnce() + Send + 'scope>,
+) -> Box<dyn FnOnce() + Send + 'static> {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Box<dyn FnOnce() + Send + 'static>>(f)
+}
+
+/// Shared write window over a mutable slice for scoped tasks that write
+/// provably disjoint regions — scattered by index, which `split_at_mut`
+/// cannot express (e.g. stripe-bucketed row writes in
+/// [`crate::embedding::concurrent::ConcurrentDynamicTable`]).
+pub struct SharedSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
+
+impl<'a, T> SharedSliceMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        SharedSliceMut {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Carve out `[start, start + len)` as a mutable sub-slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must slice pairwise-disjoint windows, and no
+    /// other access to the underlying slice may occur while any window
+    /// is live (guaranteed when all windows live inside one
+    /// [`WorkerPool::run_scope`] region over disjoint indices).
+    #[allow(clippy::mut_from_ref)] // deliberate: disjointness is the caller's contract
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "window {start}+{len} out of bounds (len {})",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if let Some(task) = st.queue.pop_front() {
+            drop(st);
+            inner.execute(task);
+            st = inner.state.lock().unwrap();
+        } else if st.shutdown {
+            return;
+        } else {
+            st = inner.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_index_order() {
+        for threads in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.parallel_map(1000, |i| i * 3);
+            assert_eq!(out, (0..1000).map(|i| i * 3).collect::<Vec<_>>(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_map_deterministic_across_runs_and_threads() {
+        let reference = WorkerPool::new(1).parallel_map(513, |i| (i as u64).wrapping_mul(0x9E37));
+        for _ in 0..20 {
+            let pool = WorkerPool::new(4);
+            assert_eq!(
+                pool.parallel_map(513, |i| (i as u64).wrapping_mul(0x9E37)),
+                reference
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(257, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunk_ranges_are_stable_and_cover() {
+        let rs = WorkerPool::chunk_ranges(10, 4);
+        assert_eq!(rs, WorkerPool::chunk_ranges(10, 4), "pure function");
+        let total: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "contiguous");
+        }
+        assert!(WorkerPool::chunk_ranges(3, 16).len() <= 3, "no empty chunks");
+        assert!(WorkerPool::chunk_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn chunks_mut_slices_are_disjoint_and_aligned() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u32; 11 * 3];
+        pool.parallel_for_chunks_mut(&mut data, 11, 3, |r, chunk| {
+            assert_eq!(chunk.len(), r.len() * 3);
+            for (j, item) in r.clone().enumerate() {
+                for k in 0..3 {
+                    chunk[j * 3 + k] = (item * 3 + k) as u32;
+                }
+            }
+        });
+        assert_eq!(data, (0..33).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn nested_parallel_regions_do_not_deadlock() {
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.parallel_map(8, |i| {
+                // Inner region issued from inside a pool task.
+                pool.parallel_map(8, |j| i * 8 + j).iter().sum::<usize>()
+            });
+            let expect: Vec<usize> = (0..8).map(|i| (0..8).map(|j| i * 8 + j).sum()).collect();
+            assert_eq!(out, expect, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn scoped_borrows_of_caller_stack() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let sums = Mutex::new(0u64);
+        pool.parallel_for(data.len(), |r| {
+            let s: u64 = data[r].iter().sum();
+            *sums.lock().unwrap() += s;
+        });
+        assert_eq!(*sums.lock().unwrap(), 4950);
+    }
+
+    #[test]
+    fn panic_in_task_propagates_after_scope_completes() {
+        let pool = WorkerPool::new(4);
+        let completed: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(64, |range| {
+                for i in range {
+                    if i == 13 {
+                        panic!("boom at {i}");
+                    }
+                    completed[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool must still be fully usable afterwards.
+        let out = pool.parallel_map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let order = Mutex::new(Vec::new());
+        pool.parallel_for(5, |r| {
+            for i in r {
+                order.lock().unwrap().push(i);
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_len_is_a_noop() {
+        let pool = WorkerPool::new(4);
+        pool.parallel_for(0, |_| panic!("must not run"));
+        assert!(pool.parallel_map(0, |i| i).is_empty());
+        let mut empty: Vec<f32> = Vec::new();
+        pool.parallel_for_chunks_mut(&mut empty, 0, 8, |_, _| panic!("must not run"));
+    }
+}

@@ -1,22 +1,26 @@
 //! End-to-end determinism: a 2-worker, 20-step distributed `Trainer`
 //! run over the reference engine is **bit-identical** across runs with
-//! the same seed, and bit-identical between `--overlap on` and
+//! the same seed, bit-identical between `--overlap on` and
 //! `--overlap off` (the pipelined exchange reorders messages, never
-//! arithmetic).
+//! arithmetic), and bit-identical across `--threads {1,4}` (the worker
+//! pool chunks work, never changes reduction order).
 //!
 //! Everything that feeds the numbers is seeded and rank-order
-//! deterministic: the workload generator, row initialization (a pure
-//! function of id and seed), the rank-ordered all-reduce, and the
-//! fixed-order reference executor. GAUC is disabled because its
-//! accumulator iterates a std `HashMap` (per-process random order) —
-//! that affects only the metric's floating-point summation order, not
-//! training.
+//! deterministic: the workload generator (streamed through the
+//! prefetcher's order-preserving channel), row initialization (a pure
+//! function of id and seed), stripe-grouped parallel fetch (fixed
+//! stripe count, per-stripe occurrence order), the rank-ordered
+//! all-reduce, and the fixed-order reference executor. The
+//! `embedding_checksum` witnesses the final sparse state
+//! order-independently. GAUC is disabled because its accumulator
+//! iterates a std `HashMap` (per-process random order) — that affects
+//! only the metric's floating-point summation order, not training.
 
 use mtgrboost::data::generator::GeneratorConfig;
 use mtgrboost::runtime::Engine;
 use mtgrboost::train::{TrainReport, Trainer, TrainerOptions};
 
-fn opts(overlap: bool) -> TrainerOptions {
+fn opts(overlap: bool, threads: usize) -> TrainerOptions {
     let mut o = TrainerOptions::new("tiny", 2, 20);
     o.generator = GeneratorConfig {
         len_mu: 2.5,
@@ -29,39 +33,47 @@ fn opts(overlap: bool) -> TrainerOptions {
     };
     // ~64 sequences (mean length ≈ 13) per step → 2-3 micro-batches per
     // round, so the overlap pipeline genuinely posts ahead (the hidden-
-    // communication metric only credits rounds that were posted early).
+    // communication metrics only credit rounds that were posted early).
     o.train.target_tokens = 900;
     o.train.lr = 0.01;
     o.shard_capacity = 1024;
     o.collect_gauc = false;
     o.overlap = overlap;
+    o.threads = threads;
     o
 }
 
-fn run(overlap: bool) -> TrainReport {
+fn run(overlap: bool, threads: usize) -> TrainReport {
     let engine = Engine::reference(7).unwrap();
-    Trainer::new(opts(overlap), engine).unwrap().run().unwrap()
+    Trainer::new(opts(overlap, threads), engine)
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
-/// Bit-level fingerprint of everything numerically meaningful per step.
-fn fingerprint(r: &TrainReport) -> Vec<(u64, u64, u64, Vec<u64>)> {
-    r.steps
-        .iter()
-        .map(|s| {
-            (
-                s.loss_ctr.to_bits(),
-                s.loss_ctcvr.to_bits(),
-                s.samples,
-                s.tokens.clone(),
-            )
-        })
-        .collect()
+/// Bit-level fingerprint of everything numerically meaningful per step,
+/// plus the final sparse-state checksum.
+fn fingerprint(r: &TrainReport) -> (Vec<(u64, u64, u64, Vec<u64>)>, u64) {
+    (
+        r.steps
+            .iter()
+            .map(|s| {
+                (
+                    s.loss_ctr.to_bits(),
+                    s.loss_ctcvr.to_bits(),
+                    s.samples,
+                    s.tokens.clone(),
+                )
+            })
+            .collect(),
+        r.embedding_checksum,
+    )
 }
 
 #[test]
 fn same_seed_runs_are_bit_identical() {
-    let a = run(true);
-    let b = run(true);
+    let a = run(true, 1);
+    let b = run(true, 1);
     assert_eq!(a.steps.len(), 20);
     assert_eq!(fingerprint(&a), fingerprint(&b));
     assert_eq!(a.table_rows, b.table_rows);
@@ -73,19 +85,31 @@ fn same_seed_runs_are_bit_identical() {
         .iter()
         .all(|s| s.loss_ctr.is_finite() && s.loss_ctr > 0.0));
     assert!(a.table_rows > 50, "sparse shards filled: {}", a.table_rows);
+    assert_ne!(a.embedding_checksum, 0, "checksum must witness state");
 }
 
 #[test]
 fn overlap_on_and_off_are_bit_identical() {
-    let on = run(true);
-    let off = run(false);
+    let on = run(true, 1);
+    let off = run(false, 1);
     assert_eq!(fingerprint(&on), fingerprint(&off));
     assert_eq!(on.table_rows, off.table_rows);
     assert_eq!(on.dedup_volume, off.dedup_volume);
-    // Scheduling differs even though arithmetic does not: overlap hides
-    // the ID exchange behind compute and exposes less communication.
+    // Scheduling differs even though arithmetic does not: the
+    // double-buffered rounds hide the ID exchange, the embedding reply
+    // and the gradient push behind compute, exposing less communication.
     assert!(on.mean_hidden_comm_s() > 0.0, "overlap must hide ID comm");
+    assert!(
+        on.mean_hidden_reply_s() > 0.0,
+        "double-buffered rounds must hide reply comm"
+    );
+    assert!(
+        on.mean_hidden_grad_s() > 0.0,
+        "posted backward must hide gradient comm"
+    );
     assert_eq!(off.mean_hidden_comm_s(), 0.0, "no hiding when off");
+    assert_eq!(off.mean_hidden_reply_s(), 0.0, "no hiding when off");
+    assert_eq!(off.mean_hidden_grad_s(), 0.0, "no hiding when off");
     assert!(
         on.mean_exposed_comm_s() < off.mean_exposed_comm_s(),
         "exposed comm must shrink with overlap: {} vs {}",
@@ -95,10 +119,43 @@ fn overlap_on_and_off_are_bit_identical() {
 }
 
 #[test]
+fn threads_and_overlap_grid_bit_identical() {
+    // The acceptance grid: `--threads {1,4}` × `--overlap {on,off}` all
+    // produce identical losses AND identical final embedding state.
+    // Batches are sized up (vs the other tests) so the thresholded
+    // pooled kernels actually engage at threads=4: per-round occurrence
+    // counts clear the stripe-fetch and gather/scatter-parallel
+    // thresholds, not just the always-on concurrent optimizer. (The
+    // sorted-dedup kernel's cross-thread identity is additionally
+    // covered by its own unit suite with 20k-id inputs.)
+    let grid_run = |overlap: bool, threads: usize| {
+        let mut o = opts(overlap, threads);
+        o.train.target_tokens = 2600;
+        o.steps = 10;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let reference = grid_run(false, 1);
+    let reference_fp = fingerprint(&reference);
+    assert_ne!(reference.embedding_checksum, 0);
+    for (overlap, threads) in [(true, 1), (false, 4), (true, 4)] {
+        let r = grid_run(overlap, threads);
+        assert_eq!(
+            fingerprint(&r),
+            reference_fp,
+            "overlap={overlap} threads={threads} diverged from threads=1/overlap=off"
+        );
+        assert_eq!(r.table_rows, reference.table_rows);
+        assert_eq!(r.table_memory_bytes, reference.table_memory_bytes);
+        assert_eq!(r.dedup_volume, reference.dedup_volume);
+    }
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guard against the fingerprint being vacuous (e.g. constant zero).
-    let a = run(true);
-    let mut o = opts(true);
+    let a = run(true, 1);
+    let mut o = opts(true, 1);
     o.generator.seed = 999;
     let engine = Engine::reference(7).unwrap();
     let b = Trainer::new(o, engine).unwrap().run().unwrap();
