@@ -17,10 +17,16 @@
 //! rows); only the schedule differs.
 //!
 //! `--iters N` / `--occurrences N` (after `--`) shrink the run for CI.
+//! `--calibrate` instead sweeps the three runtime-tunable thresholds
+//! (`MTGR_DEDUP_SORT_THRESHOLD`, `MTGR_PAR_ROWS_THRESHOLD`,
+//! `MTGR_PAR_FETCH_THRESHOLD`) across input sizes and prints the
+//! serial/parallel crossover points measured on THIS machine, so the
+//! defaults can be tuned per deployment.
 
-use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
+use mtgrboost::embedding::concurrent::{ConcurrentDynamicTable, PAR_FETCH};
 use mtgrboost::embedding::dedup::{
-    gather_rows, gather_rows_par, scatter_accumulate, scatter_accumulate_par, Dedup,
+    gather_rows, gather_rows_par, scatter_accumulate, scatter_accumulate_par, Dedup, DEDUP_SORT,
+    PAR_ROWS,
 };
 use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
 use mtgrboost::embedding::EmbeddingStore;
@@ -87,11 +93,131 @@ fn pooled_round(
     expanded
 }
 
+/// Mean seconds of `f` over `iters` runs (1 warmup), for the sweep.
+fn time_it(iters: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Sweep the tunable thresholds: at each input size, time the serial
+/// kernel against the parallel kernel (thresholds forced low so the
+/// parallel path always engages) and report the first size where
+/// parallel wins — the machine's crossover point.
+fn calibrate(iters: usize, threads: usize) {
+    let pool = WorkerPool::new(threads);
+    let mut rep = BenchReport::new("bench_parallel_lookup_calibration");
+    rep.add_metric("threads", threads.into());
+    let sizes = [512usize, 1024, 2048, 4096, 8192, 16384, 32768];
+
+    // Force every parallel path on, so the sweep measures the kernels —
+    // restore the defaults before saving suggestions.
+    DEDUP_SORT.set(1);
+    PAR_ROWS.set(1);
+    PAR_FETCH.set(1);
+
+    let mut tbl = Table::new(
+        &format!("Threshold calibration ({threads}-thread pool, µs per call)"),
+        &["n", "dedup hash", "dedup sort-par", "gather ser", "gather par", "scatter ser",
+          "scatter par", "fetch ser", "fetch par"],
+    );
+    let mut cross = [None::<usize>; 3]; // dedup, rows (gather|scatter), fetch
+    for &n in &sizes {
+        let ids = zipf_ids(n, 11);
+        let d = Dedup::of_hash(&ids);
+        let rows: Vec<f32> = {
+            let mut rng = Xoshiro256::new(3);
+            (0..d.unique.len() * DIM).map(|_| rng.next_f32()).collect()
+        };
+        let grads: Vec<f32> = {
+            let mut rng = Xoshiro256::new(4);
+            (0..n * DIM).map(|_| rng.next_f32() - 0.5).collect()
+        };
+        let t_hash = time_it(iters, || {
+            std::hint::black_box(Dedup::of_hash(&ids));
+        });
+        let t_sort = time_it(iters, || {
+            std::hint::black_box(Dedup::of_sorted_with(&ids, Some(&pool)));
+        });
+        let mut out = vec![0.0f32; n * DIM];
+        let t_gather_s = time_it(iters, || gather_rows(&rows, DIM, &d.inverse, &mut out));
+        let t_gather_p = time_it(iters, || {
+            gather_rows_par(&rows, DIM, &d.inverse, &mut out, Some(&pool))
+        });
+        let mut acc = vec![0.0f32; d.unique.len() * DIM];
+        let t_scatter_s = time_it(iters, || {
+            acc.fill(0.0);
+            scatter_accumulate(&grads, DIM, &d.inverse, &mut acc);
+        });
+        let t_scatter_p = time_it(iters, || {
+            acc.fill(0.0);
+            scatter_accumulate_par(&grads, DIM, &d.inverse, &mut acc, Some(&pool));
+        });
+        let ft = table();
+        let mut fetched = vec![0.0f32; n * DIM];
+        let t_fetch_s = time_it(iters, || ft.fetch_rows_shared(&ids, true, &mut fetched, None));
+        let t_fetch_p = time_it(iters, || {
+            ft.fetch_rows_shared(&ids, true, &mut fetched, Some(&pool))
+        });
+        if cross[0].is_none() && t_sort < t_hash {
+            cross[0] = Some(n);
+        }
+        if cross[1].is_none() && t_gather_p < t_gather_s && t_scatter_p < t_scatter_s {
+            cross[1] = Some(n);
+        }
+        if cross[2].is_none() && t_fetch_p < t_fetch_s {
+            cross[2] = Some(n);
+        }
+        let us = |t: f64| format!("{:.1}", t * 1e6);
+        tbl.row(&[
+            format!("{n}"),
+            us(t_hash),
+            us(t_sort),
+            us(t_gather_s),
+            us(t_gather_p),
+            us(t_scatter_s),
+            us(t_scatter_p),
+            us(t_fetch_s),
+            us(t_fetch_p),
+        ]);
+    }
+    DEDUP_SORT.set(DEDUP_SORT.default_value());
+    PAR_ROWS.set(PAR_ROWS.default_value());
+    PAR_FETCH.set(PAR_FETCH.default_value());
+
+    let names = [
+        ("suggested_dedup_sort_threshold", DEDUP_SORT.default_value()),
+        ("suggested_par_rows_threshold", PAR_ROWS.default_value()),
+        ("suggested_par_fetch_threshold", PAR_FETCH.default_value()),
+    ];
+    for (i, (key, default)) in names.iter().enumerate() {
+        // "Not reached" reports a sentinel above the sweep ceiling:
+        // keep the kernel serial on this machine.
+        let suggested = cross[i].unwrap_or(1 << 20);
+        rep.add_metric(key, suggested.into());
+        println!(
+            "{key}: crossover ≈ {} (compiled default {default})",
+            cross[i]
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "not reached in sweep".into()),
+        );
+    }
+    rep.add_table(tbl);
+    rep.save().unwrap();
+}
+
 fn main() {
     // `cargo bench` passes a bare `--bench` to harness-false binaries;
     // declare it a value-less flag so it cannot swallow `--iters`.
-    let args = Args::from_env(&["bench"]);
+    let args = Args::from_env(&["bench", "calibrate"]);
     let iters = args.get_usize("iters", 20);
+    if args.has_flag("calibrate") {
+        calibrate(iters.max(5), args.get_usize("threads", 4));
+        return;
+    }
     let n = args.get_usize("occurrences", 120_000);
     let ids = zipf_ids(n, 7);
     let grads: Vec<f32> = {

@@ -1,0 +1,172 @@
+//! Whole-step training throughput on the reference engine: steps/s and
+//! tokens/s at `--threads {1,2,4}` (PR 3's tentpole — the global worker
+//! pool, the batch-chunked dense forward/backward and cross-step
+//! pipelining turn per-kernel speedups into end-to-end step-time
+//! speedups).
+//!
+//! Correctness is asserted, not assumed: per-step losses and the final
+//! `embedding_checksum` must be **bit-identical** across every thread
+//! count and across cross-step overlap on/off; only wall-clock may
+//! differ.
+//!
+//! CLI (after `--`): `--steps N` (default 30), `--world N` (default 1),
+//! `--target-tokens N` (default 4096), `--model NAME` (default small),
+//! `--threads-max N` (default 4; sweeps {1,2,4,...} up to it).
+
+use std::time::Instant;
+
+use mtgrboost::data::generator::GeneratorConfig;
+use mtgrboost::runtime::Engine;
+use mtgrboost::train::{TrainReport, Trainer, TrainerOptions};
+use mtgrboost::util::bench::{ratio, BenchReport, Table};
+use mtgrboost::util::cli::Args;
+
+struct Bench {
+    model: String,
+    world: usize,
+    steps: usize,
+    target_tokens: usize,
+}
+
+impl Bench {
+    fn run(&self, threads: usize, cross_step: bool) -> (TrainReport, f64) {
+        let mut o = TrainerOptions::new(&self.model, self.world, self.steps);
+        o.generator = GeneratorConfig {
+            len_mu: 3.4,
+            len_sigma: 0.6,
+            min_len: 4,
+            max_len: 240,
+            num_users: 2_000,
+            num_items: 20_000,
+            ..Default::default()
+        };
+        o.train.target_tokens = self.target_tokens;
+        o.collect_gauc = false;
+        o.overlap = true;
+        o.cross_step = cross_step;
+        o.threads = threads;
+        o.shard_capacity = 1 << 14;
+        let engine = Engine::reference(7).unwrap();
+        let t0 = Instant::now();
+        let report = Trainer::new(o, engine).unwrap().run().unwrap();
+        (report, t0.elapsed().as_secs_f64())
+    }
+}
+
+/// Bit-level fingerprint of everything numerically meaningful.
+fn fingerprint(r: &TrainReport) -> (Vec<(u64, u64, u64)>, u64) {
+    (
+        r.steps
+            .iter()
+            .map(|s| (s.loss_ctr.to_bits(), s.loss_ctcvr.to_bits(), s.samples))
+            .collect(),
+        r.embedding_checksum,
+    )
+}
+
+fn main() {
+    // `cargo bench` passes a bare `--bench` to harness-false binaries;
+    // declare it a value-less flag so it cannot swallow `--steps`.
+    let args = Args::from_env(&["bench"]);
+    let bench = Bench {
+        model: args.get_or("model", "small"),
+        world: args.get_usize("world", 1),
+        steps: args.get_usize("steps", 30),
+        target_tokens: args.get_usize("target-tokens", 4096),
+    };
+    let threads_max = args.get_usize("threads-max", 4);
+    let mut thread_counts = vec![1usize];
+    let mut t = 2;
+    while t <= threads_max {
+        thread_counts.push(t);
+        t *= 2;
+    }
+    // The widest pool actually swept (== threads_max only when it is a
+    // power of two); the speedup metric and ablation run at this count.
+    let top = *thread_counts.last().unwrap();
+
+    let mut rep = BenchReport::new("bench_train_throughput");
+    rep.add_metric("model", bench.model.as_str().into());
+    rep.add_metric("world", bench.world.into());
+    rep.add_metric("steps", bench.steps.into());
+    let mut tbl = Table::new(
+        &format!(
+            "Whole-step training throughput ({} × world {}, {} steps, target {} tokens)",
+            bench.model, bench.world, bench.steps, bench.target_tokens
+        ),
+        &["threads", "steps/s", "tokens/s", "vs 1t"],
+    );
+
+    let mut base_steps_per_s = 0.0f64;
+    let mut base_fp = None;
+    let mut speedup_max = 0.0f64;
+    for &threads in &thread_counts {
+        let (report, secs) = bench.run(threads, true);
+        let fp = fingerprint(&report);
+        if let Some(reference) = &base_fp {
+            assert_eq!(
+                &fp, reference,
+                "--threads {threads} diverged from the 1-thread run"
+            );
+        }
+        if base_fp.is_none() {
+            base_fp = Some(fp);
+        }
+        let steps_per_s = bench.steps as f64 / secs;
+        let tokens_per_s = report.wall.tokens_per_sec();
+        if threads == 1 {
+            base_steps_per_s = steps_per_s;
+        }
+        let speed = steps_per_s / base_steps_per_s;
+        if threads == top {
+            speedup_max = speed;
+            assert!(
+                report.mean_hidden_boundary_s() > 0.0,
+                "cross-step pipelining must report boundary-hidden time"
+            );
+        }
+        rep.add_metric(&format!("steps_per_s_{threads}t"), steps_per_s.into());
+        rep.add_metric(&format!("tokens_per_s_{threads}t"), tokens_per_s.into());
+        tbl.row(&[
+            format!("{threads}"),
+            format!("{steps_per_s:.2}"),
+            format!("{tokens_per_s:.0}"),
+            ratio(steps_per_s, base_steps_per_s),
+        ]);
+    }
+
+    // Cross-step ablation at the widest pool: bit-identical numerics,
+    // only the schedule differs.
+    let (no_cross, secs_off) = bench.run(top, false);
+    assert_eq!(
+        &fingerprint(&no_cross),
+        base_fp.as_ref().unwrap(),
+        "cross-step off diverged from cross-step on"
+    );
+    assert_eq!(
+        no_cross.mean_hidden_boundary_s(),
+        0.0,
+        "no boundary hiding without cross-step"
+    );
+    let steps_per_s_off = bench.steps as f64 / secs_off;
+    rep.add_metric(
+        &format!("steps_per_s_{top}t_cross_off"),
+        steps_per_s_off.into(),
+    );
+    tbl.row(&[
+        format!("{top} (cross off)"),
+        format!("{steps_per_s_off:.2}"),
+        format!("{:.0}", no_cross.wall.tokens_per_sec()),
+        ratio(steps_per_s_off, base_steps_per_s),
+    ]);
+
+    rep.add_metric(&format!("speedup_{top}t_vs_1t"), speedup_max.into());
+    rep.add_table(tbl);
+    rep.save().unwrap();
+    println!(
+        "\nOne global pool fair-shared across workers, batch-chunked dense \
+         compute and cross-step pipelining: whole-step wall-clock should \
+         scale with --threads while losses and the embedding checksum stay \
+         bit-identical."
+    );
+}

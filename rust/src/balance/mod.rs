@@ -275,6 +275,91 @@ mod tests {
     }
 
     #[test]
+    fn carryover_survives_push_next_interleavings() {
+        // The buffered remainder must survive arbitrary interleavings
+        // of push_chunk and next_batch: every sequence comes out
+        // exactly once, in order, regardless of when input arrives.
+        let lens = [30usize, 80, 10, 95, 40, 40, 40, 5, 120, 60, 25, 35];
+        let expected_users: Vec<u64> = lens.iter().map(|&l| l as u64).collect();
+        // Interleaving A: one big push, drain fully.
+        // Interleaving B: push one sequence at a time, draining eagerly
+        // after every push (next_batch interleaved with push_chunk).
+        let mut eager = DynamicBatcher::new(100);
+        let mut eager_users = Vec::new();
+        for &l in &lens {
+            eager.push_chunk(seqs_of_lens(&[l]));
+            while let Some(b) = eager.next_batch() {
+                eager_users.extend(b.sequences.iter().map(|s| s.user_id));
+            }
+        }
+        if let Some(b) = eager.flush() {
+            eager_users.extend(b.sequences.iter().map(|s| s.user_id));
+        }
+        assert_eq!(eager_users, expected_users, "eager drain loses/dups/reorders");
+        assert_eq!(eager.buffered(), 0);
+
+        // Interleaving C: pushes of 3, draining only every other push.
+        let mut lazy = DynamicBatcher::new(100);
+        let mut lazy_users = Vec::new();
+        for (i, chunk) in lens.chunks(3).enumerate() {
+            lazy.push_chunk(seqs_of_lens(chunk));
+            if i % 2 == 1 {
+                while let Some(b) = lazy.next_batch() {
+                    lazy_users.extend(b.sequences.iter().map(|s| s.user_id));
+                }
+            }
+        }
+        while let Some(b) = lazy.next_batch() {
+            lazy_users.extend(b.sequences.iter().map(|s| s.user_id));
+        }
+        if let Some(b) = lazy.flush() {
+            lazy_users.extend(b.sequences.iter().map(|s| s.user_id));
+        }
+        assert_eq!(lazy_users, expected_users, "lazy drain loses/dups/reorders");
+    }
+
+    #[test]
+    fn flush_emits_exactly_the_leftover() {
+        let mut b = DynamicBatcher::new(100);
+        b.push_chunk(seqs_of_lens(&[60, 45, 20, 15]));
+        let first = b.next_batch().unwrap();
+        // cumsum 60,105,... → k=2 (105 closer to 100 than 60).
+        assert_eq!(first.tokens, 105);
+        assert_eq!(b.buffered(), 2);
+        // Below target now: next_batch holds, flush drains exactly the
+        // remainder — no loss, no duplication.
+        assert!(b.next_batch().is_none());
+        let tail = b.flush().unwrap();
+        let tail_users: Vec<u64> = tail.sequences.iter().map(|s| s.user_id).collect();
+        assert_eq!(tail_users, vec![20, 15]);
+        assert_eq!(tail.tokens, 35);
+        assert_eq!(b.buffered(), 0);
+        assert!(b.flush().is_none(), "second flush must be empty");
+    }
+
+    #[test]
+    fn single_long_sequence_over_target_carries_over_cleanly() {
+        // The pathological case: one sequence alone exceeds the target.
+        // It must emit alone (progress), and the buffered remainder must
+        // survive intact around it.
+        let mut b = DynamicBatcher::new(100);
+        b.push_chunk(seqs_of_lens(&[40, 500, 10]));
+        // cumsum 40,540,550: first ≥100 is idx 1; 40 (dist 60) beats
+        // 540 (dist 440) → k=1: the short head emits first.
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.tokens, 40);
+        // Now the oversized sequence heads the queue: emits alone.
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.batch_size(), 1);
+        assert_eq!(second.tokens, 500);
+        // Remainder below target: held for more input, then flushed.
+        assert!(b.next_batch().is_none());
+        let tail = b.flush().unwrap();
+        assert_eq!(tail.tokens, 10);
+        assert_eq!(b.buffered(), 0);
+    }
+
+    #[test]
     fn conservation_no_sample_lost_or_duplicated() {
         let schema = Schema::meituan_like(8, 1);
         let mut gen = WorkloadGenerator::new(GeneratorConfig::default());

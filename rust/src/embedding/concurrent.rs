@@ -32,10 +32,21 @@ use crate::embedding::hash::{fmix64, hash_id};
 use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
 use crate::util::pool::{SharedSliceMut, WorkerPool};
 use crate::util::rng::Xoshiro256;
+use crate::util::tuning::TunableThreshold;
 
-/// Occurrence count below which the stripe fan-out is not worth the
-/// fork/join overhead (the serial per-id path is used instead).
-const PAR_FETCH_THRESHOLD: usize = 512;
+/// Default occurrence count below which the stripe fan-out is not worth
+/// the fork/join overhead (the serial per-id path is used instead). The
+/// live value is [`PAR_FETCH`] (env `MTGR_PAR_FETCH_THRESHOLD`).
+pub const PAR_FETCH_THRESHOLD: usize = 512;
+
+/// Runtime knob for the per-id→striped batch fetch switch.
+pub static PAR_FETCH: TunableThreshold =
+    TunableThreshold::new("MTGR_PAR_FETCH_THRESHOLD", PAR_FETCH_THRESHOLD);
+
+/// Live fetch fan-out switch point.
+pub fn par_fetch_threshold() -> usize {
+    PAR_FETCH.get()
+}
 
 /// Seed for stripe routing (distinct from slot probing and shard
 /// placement so the three hash partitions are independent).
@@ -228,7 +239,7 @@ impl ConcurrentDynamicTable {
             return;
         }
         let parallel =
-            matches!(pool, Some(p) if p.threads() > 1) && ids.len() >= PAR_FETCH_THRESHOLD;
+            matches!(pool, Some(p) if p.threads() > 1) && ids.len() >= par_fetch_threshold();
         if !parallel {
             for (row, &id) in out.chunks_exact_mut(d).zip(ids) {
                 if train {

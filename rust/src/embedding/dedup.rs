@@ -22,6 +22,7 @@
 use crate::embedding::hash::fmix64;
 use crate::embedding::GlobalId;
 use crate::util::pool::WorkerPool;
+use crate::util::tuning::TunableThreshold;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -66,9 +67,20 @@ pub enum DedupKernel {
     Sort,
 }
 
-/// Above this many occurrences [`Dedup::of`] switches from the hash
-/// kernel to the sorted kernel.
+/// Default occurrence count above which [`Dedup::of`] switches from the
+/// hash kernel to the sorted kernel. The live value is the
+/// runtime-tunable [`DEDUP_SORT`] (env `MTGR_DEDUP_SORT_THRESHOLD`);
+/// `bench_parallel_lookup --calibrate` sweeps the crossover.
 pub const DEDUP_SORT_THRESHOLD: usize = 8192;
+
+/// Runtime knob for the hash→sort dedup switch.
+pub static DEDUP_SORT: TunableThreshold =
+    TunableThreshold::new("MTGR_DEDUP_SORT_THRESHOLD", DEDUP_SORT_THRESHOLD);
+
+/// Live hash→sort switch point (env/setter override, else the default).
+pub fn dedup_sort_threshold() -> usize {
+    DEDUP_SORT.get()
+}
 
 /// Result of deduplicating an ID list: the unique IDs plus, for every
 /// original position, the index of its unique representative.
@@ -82,7 +94,7 @@ impl Dedup {
     /// Kernel [`Dedup::of`] / [`Dedup::of_auto`] will use for `n`
     /// occurrences.
     pub fn kernel_for(n: usize) -> DedupKernel {
-        if n >= DEDUP_SORT_THRESHOLD {
+        if n >= dedup_sort_threshold() {
             DedupKernel::Sort
         } else {
             DedupKernel::Hash
@@ -138,7 +150,7 @@ impl Dedup {
         let n = ids.len();
         let mut order: Vec<u32> = (0..n as u32).collect();
         match pool {
-            Some(p) if p.threads() > 1 && n >= DEDUP_SORT_THRESHOLD => {
+            Some(p) if p.threads() > 1 && n >= dedup_sort_threshold() => {
                 // Cap the run count: the merge's linear head scan costs
                 // O(n·runs), so unbounded pool sizes would erase the
                 // parallel-sort win. The SAME `ranges` drive both the
@@ -231,9 +243,19 @@ fn merge_sorted_runs(
 /// on machine-sized pools.
 const MERGE_MAX_RUNS: usize = 8;
 
-/// Row count above which the parallel gather/scatter kernels split
-/// across the pool (below it, fork/join overhead dominates).
-const PAR_ROWS_THRESHOLD: usize = 2048;
+/// Default row count above which the parallel gather/scatter kernels
+/// split across the pool (below it, fork/join overhead dominates). The
+/// live value is [`PAR_ROWS`] (env `MTGR_PAR_ROWS_THRESHOLD`).
+pub const PAR_ROWS_THRESHOLD: usize = 2048;
+
+/// Runtime knob for the serial→parallel gather/scatter switch.
+pub static PAR_ROWS: TunableThreshold =
+    TunableThreshold::new("MTGR_PAR_ROWS_THRESHOLD", PAR_ROWS_THRESHOLD);
+
+/// Live gather/scatter parallel switch point.
+pub fn par_rows_threshold() -> usize {
+    PAR_ROWS.get()
+}
 
 /// Expand unique embedding rows back to occurrence order:
 /// `out[i] = rows[inverse[i]]`. (The forward scatter after lookup.)
@@ -263,7 +285,7 @@ pub fn gather_rows_par(
     pool: Option<&WorkerPool>,
 ) {
     match pool {
-        Some(p) if p.threads() > 1 && inverse.len() >= PAR_ROWS_THRESHOLD => {
+        Some(p) if p.threads() > 1 && inverse.len() >= par_rows_threshold() => {
             assert_eq!(out.len(), inverse.len() * dim);
             p.parallel_for_chunks_mut(out, inverse.len(), dim, |r, chunk| {
                 gather_rows(rows, dim, &inverse[r], chunk);
@@ -310,7 +332,7 @@ pub fn scatter_accumulate_par(
 ) {
     let n_unique = if dim == 0 { 0 } else { out.len() / dim };
     let parallel = matches!(pool, Some(p) if p.threads() > 1)
-        && inverse.len() >= PAR_ROWS_THRESHOLD
+        && inverse.len() >= par_rows_threshold()
         && n_unique >= 2;
     if !parallel {
         scatter_accumulate(grads, dim, inverse, out);

@@ -23,9 +23,23 @@
 //!   `TrainerOptions::overlap` runs the fully double-buffered exchange
 //!   (micro-batch *k+1*'s ID all-to-all and *k*'s embedding reply in
 //!   flight together, *k*'s gradient push completed behind *k+1*'s
-//!   forward) and `TrainerOptions::threads` sizes each worker's shared
-//!   [`util::pool::WorkerPool`] — numerics are bit-identical for every
-//!   combination.
+//!   forward), `TrainerOptions::cross_step` extends the double buffer
+//!   across step boundaries (step *s+1*'s first ID exchange posts
+//!   before step *s*'s dense all-reduce + optimizer apply, with the
+//!   hidden time reported on the `sim_hidden_boundary_s` lane), and
+//!   `TrainerOptions::threads` sizes the **one process-global**
+//!   [`util::pool::WorkerPool`] shared by every worker — each worker
+//!   chunks on a deterministic fair-share view
+//!   ([`util::pool::WorkerPool::fair_share`], `⌈threads/world⌉`), so
+//!   the host never runs `world × threads` threads. Numerics are
+//!   bit-identical for every combination.
+//! - [`runtime::reference`] — the deterministic CPU executor now chunks
+//!   the dense forward/backward over the batch on the shared pool
+//!   (fixed chunk count; per-chunk partial loss/gradient reductions
+//!   folded in chunk order, so every pool size is bit-identical) and
+//!   writes into a reusable [`runtime::TrainScratch`] arena;
+//!   reference-backend engines execute it inline on the calling worker
+//!   instead of serializing through the engine channel.
 //! - [`embedding`] — the paper's sparse-side contribution (§4):
 //!   [`embedding::EmbeddingStore`] for exclusive stores (with batched
 //!   `fetch_rows`), [`embedding::ConcurrentEmbeddingStore`] +
@@ -40,9 +54,14 @@
 //!   (isend/irecv-style) all-to-all lanes.
 //! - [`embedding::dedup`] — two-stage dedup with a size-switched
 //!   hash/sort kernel ([`embedding::dedup::DedupKernel`]) and
-//!   pool-parallel sort, gather and scatter kernels.
+//!   pool-parallel sort, gather and scatter kernels. The kernel
+//!   switch points are runtime-tunable ([`util::tuning`]):
+//!   `MTGR_DEDUP_SORT_THRESHOLD` / `MTGR_PAR_ROWS_THRESHOLD` /
+//!   `MTGR_PAR_FETCH_THRESHOLD`, calibrated per machine by
+//!   `bench_parallel_lookup --calibrate`.
 //! - [`util::pool`] — the deterministic work-stealing-free worker pool
-//!   (`parallel_for` / `parallel_map` over stable index chunks).
+//!   (`parallel_for` / `parallel_map` over stable index chunks), with
+//!   fair-share views for concurrent callers of one global pool.
 //! - [`balance`] — dynamic sequence balancing (§5.1, Algorithm 1).
 //! - [`data::prefetch`] — drop-joined background batch prefetcher with
 //!   queue-occupancy reporting.

@@ -3,10 +3,10 @@
 //! ```text
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
-//!                 [--threads N] [--lr 0.001]
+//!                 [--cross-step on|off] [--threads N] [--lr 0.001]
 //! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
 //!                 [--no-balancing] [--dedup ...] [--overlap on|off]
-//!                 [--backend hash|mch]
+//!                 [--cross-step on|off] [--backend hash|mch]
 //! mtgrboost data  --out /tmp/shards --sequences 1000 --shards 4
 //! mtgrboost info  [--artifacts artifacts]
 //! ```
@@ -73,9 +73,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.train.table_merging = !args.has_flag("no-merging");
     opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
     opts.overlap = parse_overlap(&args.get_or("overlap", "on"))?;
-    // Per-worker pool size for the parallel sparse hot paths; 0 = size
-    // to the machine (resolved by the trainer). Numerics are
-    // bit-identical for every value.
+    // Cross-step pipelining (post step s+1's first ID exchange during
+    // step s's dense sync); only meaningful with overlap on. Numerics
+    // are bit-identical on or off.
+    opts.cross_step = parse_overlap(&args.get_or("cross-step", "on"))?;
+    // Size of the process-global worker pool shared by all trainer
+    // workers (each gets a deterministic fair share); 0 = size to the
+    // machine. Numerics are bit-identical for every value.
     opts.threads = args.get_usize("threads", 1);
     opts.train.lr = args.get_f64("lr", 1e-3) as f32;
     opts.train.target_tokens = args.get_usize("target-tokens", 2048);
@@ -102,6 +106,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "hidden reply/grad    : {:.3} / {:.3} ms per step",
         report.mean_hidden_reply_s() * 1e3,
         report.mean_hidden_grad_s() * 1e3,
+    );
+    println!(
+        "hidden boundary      : {:.3} ms per step (cross-step)",
+        report.mean_hidden_boundary_s() * 1e3,
     );
     println!(
         "prefetch occupancy   : {:.2} of depth {}",
@@ -159,6 +167,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     // Sim default mirrors SimOptions::new (off): figure baselines keep
     // the paper's serial-exchange semantics unless the ablation asks.
     opts.overlap = parse_overlap(&args.get_or("overlap", "off"))?;
+    opts.cross_step = parse_overlap(&args.get_or("cross-step", "off"))?;
     opts.backend = match args.get_or("backend", "hash").as_str() {
         "hash" => TableBackend::DynamicHash,
         "mch" => TableBackend::Mch,

@@ -3,6 +3,17 @@
 use crate::embedding::dedup::IdMap;
 use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
 use crate::util::pool::WorkerPool;
+use crate::util::tuning::TunableThreshold;
+
+/// Default parameter count above which [`DenseAdam::step_pooled`]
+/// chunks the element loop across the pool (below it, fork/join
+/// overhead dominates). The live value is [`PAR_DENSE`]
+/// (env `MTGR_PAR_DENSE_THRESHOLD`).
+pub const PAR_DENSE_THRESHOLD: usize = 4096;
+
+/// Runtime knob for the serial→parallel dense-Adam switch.
+pub static PAR_DENSE: TunableThreshold =
+    TunableThreshold::new("MTGR_PAR_DENSE_THRESHOLD", PAR_DENSE_THRESHOLD);
 
 /// Adam hyperparameters (paper §6.1 uses Adam for both sparse and dense).
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +61,19 @@ impl DenseAdam {
     /// One update. `grads` are *sums*; `scale` converts them to the mean
     /// (the weighted-averaging factor 1/total_samples from §5.1).
     pub fn step(&mut self, params: &mut [f32], grads: &[f32], scale: f32) {
+        self.step_pooled(params, grads, scale, None);
+    }
+
+    /// [`step`](Self::step) with the element loop chunked across `pool`
+    /// (per-element math is independent, so results are bit-identical
+    /// for every pool size; small vectors stay on the serial path).
+    pub fn step_pooled(
+        &mut self,
+        params: &mut [f32],
+        grads: &[f32],
+        scale: f32,
+        pool: Option<&WorkerPool>,
+    ) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.len(), self.m.len());
         self.t += 1;
@@ -58,13 +82,51 @@ impl DenseAdam {
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
         let lr = self.hp.lr;
-        for i in 0..params.len() {
-            let g = grads[i] * scale;
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + self.hp.eps);
+        let eps = self.hp.eps;
+        let kernel = |r: std::ops::Range<usize>, p: &mut [f32], m: &mut [f32], v: &mut [f32]| {
+            for (j, i) in r.enumerate() {
+                let g = grads[i] * scale;
+                m[j] = b1 * m[j] + (1.0 - b1) * g;
+                v[j] = b2 * v[j] + (1.0 - b2) * g * g;
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                p[j] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        };
+        match pool {
+            Some(pl) if pl.threads() > 1 && params.len() >= PAR_DENSE.get() => {
+                use crate::util::pool::SharedSliceMut;
+                let pw = SharedSliceMut::new(params);
+                let mw = SharedSliceMut::new(&mut self.m);
+                let vw = SharedSliceMut::new(&mut self.v);
+                let kernel = &kernel;
+                let (pw, mw, vw) = (&pw, &mw, &vw);
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    WorkerPool::chunk_ranges(pw.len(), pl.threads())
+                        .into_iter()
+                        .map(|r| {
+                            Box::new(move || {
+                                // SAFETY: chunk ranges are disjoint and
+                                // each range is handed to one task, so
+                                // the three windows below are written
+                                // by exactly one chunk each.
+                                unsafe {
+                                    kernel(
+                                        r.clone(),
+                                        pw.slice_mut(r.start, r.len()),
+                                        mw.slice_mut(r.start, r.len()),
+                                        vw.slice_mut(r.start, r.len()),
+                                    );
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                pl.run_scope(tasks);
+            }
+            _ => {
+                let n = params.len();
+                kernel(0..n, params, &mut self.m, &mut self.v);
+            }
         }
     }
 
@@ -400,6 +462,30 @@ mod tests {
             assert_eq!(a.m, b.m, "id {id} m");
             assert_eq!(a.v, b.v, "id {id} v");
             assert_eq!(a.t, b.t, "id {id} t");
+        }
+    }
+
+    #[test]
+    fn dense_step_pooled_bit_identical_to_serial() {
+        // Above the parallel threshold, every pool size must reproduce
+        // the serial update bit-for-bit (per-element math is
+        // independent; chunking cannot change it).
+        let n = 10_000usize;
+        let grads: Vec<f32> = (0..n).map(|i| ((i % 31) as f32 - 15.0) * 0.01).collect();
+        let mut p_ref = vec![0.25f32; n];
+        let mut o_ref = DenseAdam::new(n, AdamParams::default());
+        for _ in 0..3 {
+            o_ref.step(&mut p_ref, &grads, 0.5);
+        }
+        for threads in [1usize, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let mut p = vec![0.25f32; n];
+            let mut o = DenseAdam::new(n, AdamParams::default());
+            for _ in 0..3 {
+                o.step_pooled(&mut p, &grads, 0.5, Some(&pool));
+            }
+            assert_eq!(p, p_ref, "{threads} threads");
+            assert_eq!(o.state_bytes(), o_ref.state_bytes(), "{threads} threads state");
         }
     }
 

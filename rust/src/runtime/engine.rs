@@ -28,6 +28,8 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{ArtifactKind, Manifest};
+use super::reference::TrainScratch;
+use crate::util::pool::WorkerPool;
 
 /// A host tensor crossing the engine boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -145,6 +147,11 @@ enum Msg {
 pub struct Engine {
     tx: Sender<Msg>,
     manifest: Arc<Manifest>,
+    /// Reference-backend requests execute inline on the calling thread
+    /// (the executor is pure, so workers run their dense steps truly in
+    /// parallel instead of serializing through the engine channel); the
+    /// channel stays for the PJRT backend, whose handles are not Send.
+    inline_reference: bool,
     _join: Arc<JoinGuard>,
 }
 
@@ -179,6 +186,9 @@ impl Engine {
         Ok(Engine {
             tx: tx.clone(),
             manifest,
+            // Without the `pjrt` feature every artifact executes on the
+            // reference backend anyway; skip the channel round-trip.
+            inline_reference: cfg!(not(feature = "pjrt")),
             _join: Arc::new(JoinGuard {
                 tx,
                 handle: Some(handle),
@@ -207,6 +217,7 @@ impl Engine {
         Ok(Engine {
             tx: tx.clone(),
             manifest,
+            inline_reference: true,
             _join: Arc::new(JoinGuard {
                 tx,
                 handle: Some(handle),
@@ -218,9 +229,26 @@ impl Engine {
         &self.manifest
     }
 
-    /// Execute an artifact; blocks until the result is ready. Thread-safe
-    /// (any worker may call concurrently; the engine serializes device
-    /// execution, as a single shared GPU would).
+    /// Validate `bucket` exists in `arts` (inline paths skip the engine
+    /// thread's own check; takes the already-fetched artifacts so the
+    /// hot path does one manifest lookup per call).
+    fn ensure_bucket(
+        arts: &super::manifest::ModelArtifacts,
+        model: &str,
+        bucket: (usize, usize),
+    ) -> Result<()> {
+        anyhow::ensure!(
+            arts.buckets.iter().any(|b| (b.batch, b.len) == bucket),
+            "no bucket {bucket:?} for model {model}"
+        );
+        Ok(())
+    }
+
+    /// Execute an artifact; blocks until the result is ready.
+    /// Thread-safe. Reference-backend engines execute inline on the
+    /// calling thread (the executor is pure); the PJRT backend
+    /// serializes through the engine thread, as a single shared GPU
+    /// would.
     pub fn execute(
         &self,
         model: &str,
@@ -228,6 +256,11 @@ impl Engine {
         bucket: (usize, usize),
         inputs: Vec<Tensor>,
     ) -> Result<Vec<Tensor>> {
+        if self.inline_reference {
+            let arts = self.manifest.model(model)?;
+            Self::ensure_bucket(arts, model, bucket)?;
+            return super::reference::execute(arts, kind, bucket, &inputs);
+        }
         let (reply_tx, reply_rx) = channel();
         self.tx
             .send(Msg::Run(Request {
@@ -277,6 +310,51 @@ impl Engine {
             logits,
             n_valid,
         })
+    }
+
+    /// Zero-copy train step into a caller-owned scratch arena: the
+    /// reference backend executes inline with the batch chunked across
+    /// `pool` (bit-identical for every pool size), reading the inputs
+    /// as slices and writing the 5-tuple into `scratch` — no per-step
+    /// tensor allocation. The PJRT backend falls back to the channel
+    /// path and copies the outputs into `scratch`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_into(
+        &self,
+        model: &str,
+        bucket: (usize, usize),
+        params: &[f32],
+        emb: &[f32],
+        lengths: &[i32],
+        labels: &[f32],
+        pool: Option<&WorkerPool>,
+        scratch: &mut TrainScratch,
+    ) -> Result<()> {
+        let (b, l) = bucket;
+        let arts = self.manifest.model(model)?;
+        anyhow::ensure!(lengths.len() == b, "lengths arity");
+        anyhow::ensure!(labels.len() == b * arts.tasks, "labels arity");
+        anyhow::ensure!(emb.len() == b * l * arts.emb_dim, "emb arity");
+        if self.inline_reference {
+            Self::ensure_bucket(arts, model, bucket)?;
+            return super::reference::train_into(
+                arts, bucket, params, emb, lengths, labels, pool, scratch,
+            );
+        }
+        let out = self.train_step(
+            model,
+            bucket,
+            params,
+            Tensor::f32(&[b, l, arts.emb_dim], emb.to_vec()),
+            lengths.to_vec(),
+            labels.to_vec(),
+        )?;
+        scratch.loss_sums = out.loss_sums;
+        scratch.grads = out.grads;
+        scratch.emb_grad = out.emb_grad;
+        scratch.logits = out.logits;
+        scratch.n_valid = out.n_valid;
+        Ok(())
     }
 
     /// Execute inference forward; returns logits (B × tasks, flattened).

@@ -15,7 +15,13 @@
 //! - [`reference`] — deterministic pure-Rust train/forward executor
 //!   (masked mean-pool + per-task linear heads + BCE, analytic
 //!   gradients) honoring the exact artifact contract, so the full
-//!   distributed trainer runs offline and bit-reproducibly.
+//!   distributed trainer runs offline and bit-reproducibly. The train
+//!   path chunks the batch over the shared worker pool (fixed chunk
+//!   count, chunk-ordered partial-reduction fold) so the dense
+//!   forward/backward scales with threads while staying bit-identical
+//!   at every pool size; reference-backend engines execute it *inline*
+//!   on the calling worker (no channel serialization) into a reusable
+//!   [`reference::TrainScratch`] arena.
 
 pub mod engine;
 pub mod manifest;
@@ -23,3 +29,4 @@ pub mod reference;
 
 pub use engine::{Engine, Tensor, TrainOutputs};
 pub use manifest::{ArtifactKind, Bucket, Manifest, ModelArtifacts};
+pub use reference::TrainScratch;

@@ -18,15 +18,36 @@
 //! one linear head per task on the first `T·(D+1)` parameters, with
 //! binary cross-entropy losses. Gradients are analytic (verified by a
 //! finite-difference test below) and flow to both the head parameters
-//! and the embedding input, so sparse rows genuinely train. Every
-//! operation is fixed-order `f32` arithmetic: two runs with identical
-//! inputs produce bit-identical outputs, which the e2e determinism
-//! suite relies on.
+//! and the embedding input, so sparse rows genuinely train.
+//!
+//! **Parallel, thread-count-invariant execution.** Per-sample work is
+//! independent, so [`train_into`] splits the batch into a *fixed*
+//! number of chunks ([`DENSE_CHUNKS`] — a pure function of the batch,
+//! never of the pool size) and runs the chunks on the shared
+//! [`WorkerPool`] when one is supplied. Disjoint outputs (pool, logits,
+//! dz, emb_grad) are written in place; the cross-sample reductions
+//! (loss sums, parameter gradients, the valid count) are accumulated
+//! *per chunk* and folded in ascending chunk order afterwards. Because
+//! the chunk boundaries and the fold order are fixed, every pool size —
+//! including the serial `None` path, which walks the same chunks in the
+//! same order — produces bit-identical results. Outputs land in a
+//! caller-owned [`TrainScratch`] arena so steady-state training does no
+//! per-step output allocation.
+
+use std::ops::Range;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::util::pool::{SharedSliceMut, WorkerPool};
+
 use super::engine::Tensor;
 use super::manifest::{ArtifactKind, ModelArtifacts};
+
+/// Fixed batch-chunk count for the parallel dense executor. Chunk
+/// boundaries — and therefore the partial-reduction fold — are a pure
+/// function of the batch size and this constant, never of the pool
+/// size, which is what makes results thread-count-invariant.
+pub const DENSE_CHUNKS: usize = 8;
 
 #[inline]
 fn sigmoid(z: f32) -> f32 {
@@ -43,13 +64,142 @@ fn softplus(z: f32) -> f32 {
     }
 }
 
-/// Execute one request against the reference model.
-pub fn execute(
+/// Reusable output + intermediate buffers for [`train_into`]: the
+/// trainer keeps one per worker so the dense step allocates nothing in
+/// steady state. Public fields are the train artifact's 5-tuple.
+#[derive(Debug, Default)]
+pub struct TrainScratch {
+    /// Per-task loss sums over valid samples (length `T`).
+    pub loss_sums: Vec<f32>,
+    /// Flat dense gradient (length `P`).
+    pub grads: Vec<f32>,
+    /// Gradient w.r.t. the embedding input (`B·L·D`).
+    pub emb_grad: Vec<f32>,
+    /// Logits (`B·T`).
+    pub logits: Vec<f32>,
+    /// Number of valid (non-padded) samples.
+    pub n_valid: f32,
+    // ---- internals ---------------------------------------------------
+    pool: Vec<f32>,
+    dz: Vec<f32>,
+    chunk_loss: Vec<f32>,
+    chunk_grads: Vec<f32>,
+    chunk_valid: Vec<f32>,
+}
+
+impl TrainScratch {
+    pub fn new() -> Self {
+        TrainScratch::default()
+    }
+}
+
+/// One chunk's forward + backward over samples `r` (global indices).
+/// Every slice argument is the chunk's disjoint window; `loss_c`,
+/// `grads_c` and `valid_c` are this chunk's private partial reductions.
+#[allow(clippy::too_many_arguments)]
+fn train_chunk(
+    params: &[f32],
+    emb: &[f32],
+    lengths: &[i32],
+    labels: &[f32],
+    r: Range<usize>,
+    l: usize,
+    d: usize,
+    t: usize,
+    pool_c: &mut [f32],
+    logits_c: &mut [f32],
+    dz_c: &mut [f32],
+    eg_c: &mut [f32],
+    loss_c: &mut [f32],
+    grads_c: &mut [f32],
+    valid_c: &mut f32,
+) {
+    let base = r.start;
+    let mut gvec = vec![0.0f32; d];
+    for i in r {
+        let j = i - base;
+        let len = lengths[i].clamp(0, l as i32) as usize;
+
+        // ---- masked mean-pool ---------------------------------------
+        if len > 0 {
+            let acc = &mut pool_c[j * d..(j + 1) * d];
+            for pos in 0..len {
+                let row = &emb[(i * l + pos) * d..(i * l + pos + 1) * d];
+                for (a, x) in acc.iter_mut().zip(row) {
+                    *a += x;
+                }
+            }
+            let inv = 1.0 / len as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+
+        // ---- linear heads -------------------------------------------
+        for k in 0..t {
+            let off = k * (d + 1);
+            let w = &params[off..off + d];
+            let mut z = params[off + d];
+            for jj in 0..d {
+                z += w[jj] * pool_c[j * d + jj];
+            }
+            logits_c[j * t + k] = z;
+        }
+        if len == 0 {
+            continue; // padded sample: logits only, zero gradients
+        }
+        *valid_c += 1.0;
+
+        // ---- loss + dz ----------------------------------------------
+        for k in 0..t {
+            let z = logits_c[j * t + k];
+            let y = labels[i * t + k];
+            loss_c[k] += softplus(z) - y * z;
+            dz_c[j * t + k] = sigmoid(z) - y;
+        }
+
+        // ---- head parameter gradients (chunk partials) --------------
+        for k in 0..t {
+            let g = dz_c[j * t + k];
+            let off = k * (d + 1);
+            for jj in 0..d {
+                grads_c[off + jj] += g * pool_c[j * d + jj];
+            }
+            grads_c[off + d] += g;
+        }
+
+        // ---- embedding gradient -------------------------------------
+        // d loss / d emb[i, pos, :] = Σ_k dz[i,k] · w_k / len_i on valid
+        // positions; exactly zero on padding (the contract the
+        // trainer's scatter relies on).
+        gvec.fill(0.0);
+        let inv = 1.0 / len as f32;
+        for k in 0..t {
+            let w = &params[k * (d + 1)..k * (d + 1) + d];
+            let g = dz_c[j * t + k] * inv;
+            for jj in 0..d {
+                gvec[jj] += g * w[jj];
+            }
+        }
+        for pos in 0..len {
+            eg_c[(j * l + pos) * d..(j * l + pos + 1) * d].copy_from_slice(&gvec);
+        }
+    }
+}
+
+/// Execute one train step into `s`, chunking the batch across `pool`
+/// (serial and bit-identical when `pool` is `None` or single-share).
+#[allow(clippy::too_many_arguments)]
+pub fn train_into(
     arts: &ModelArtifacts,
-    kind: ArtifactKind,
     bucket: (usize, usize),
-    inputs: &[Tensor],
-) -> Result<Vec<Tensor>> {
+    params: &[f32],
+    emb: &[f32],
+    lengths: &[i32],
+    labels: &[f32],
+    pool: Option<&WorkerPool>,
+    s: &mut TrainScratch,
+) -> Result<()> {
     let (b, l) = bucket;
     let d = arts.emb_dim;
     let t = arts.tasks;
@@ -59,6 +209,127 @@ pub fn execute(
         "reference model needs {} head params, manifest says {p}",
         t * (d + 1)
     );
+    ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
+    ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
+    ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
+    ensure!(labels.len() == b * t, "labels arity: {} vs {}", labels.len(), b * t);
+
+    let ranges = WorkerPool::chunk_ranges(b, DENSE_CHUNKS);
+    let nc = ranges.len();
+
+    // Zero-fill (capacity is retained across steps, so no allocation in
+    // steady state; zeroing is required either way).
+    s.loss_sums.clear();
+    s.loss_sums.resize(t, 0.0);
+    s.grads.clear();
+    s.grads.resize(p, 0.0);
+    s.emb_grad.clear();
+    s.emb_grad.resize(b * l * d, 0.0);
+    s.logits.clear();
+    s.logits.resize(b * t, 0.0);
+    s.n_valid = 0.0;
+    s.pool.clear();
+    s.pool.resize(b * d, 0.0);
+    s.dz.clear();
+    s.dz.resize(b * t, 0.0);
+    s.chunk_loss.clear();
+    s.chunk_loss.resize(nc * t, 0.0);
+    s.chunk_grads.clear();
+    s.chunk_grads.resize(nc * p, 0.0);
+    s.chunk_valid.clear();
+    s.chunk_valid.resize(nc, 0.0);
+
+    if nc > 0 {
+        let pool_w = SharedSliceMut::new(&mut s.pool);
+        let logits_w = SharedSliceMut::new(&mut s.logits);
+        let dz_w = SharedSliceMut::new(&mut s.dz);
+        let eg_w = SharedSliceMut::new(&mut s.emb_grad);
+        let loss_w = SharedSliceMut::new(&mut s.chunk_loss);
+        let grads_w = SharedSliceMut::new(&mut s.chunk_grads);
+        let valid_w = SharedSliceMut::new(&mut s.chunk_valid);
+        let run_chunk = |ci: usize, r: Range<usize>| {
+            let n = r.len();
+            // SAFETY: `ranges` partitions `0..b` into disjoint chunks
+            // and each (ci, r) pair is handed to exactly one task, so
+            // every window below is written by exactly one chunk; the
+            // windows live only inside this scope.
+            unsafe {
+                train_chunk(
+                    params,
+                    emb,
+                    lengths,
+                    labels,
+                    r.clone(),
+                    l,
+                    d,
+                    t,
+                    pool_w.slice_mut(r.start * d, n * d),
+                    logits_w.slice_mut(r.start * t, n * t),
+                    dz_w.slice_mut(r.start * t, n * t),
+                    eg_w.slice_mut(r.start * l * d, n * l * d),
+                    loss_w.slice_mut(ci * t, t),
+                    grads_w.slice_mut(ci * p, p),
+                    &mut valid_w.slice_mut(ci, 1)[0],
+                );
+            }
+        };
+        match pool {
+            Some(pl) if pl.threads() > 1 && nc > 1 => {
+                let run_chunk = &run_chunk;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ranges
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, r)| {
+                        let r = r.clone();
+                        Box::new(move || run_chunk(ci, r)) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pl.run_scope(tasks);
+            }
+            _ => {
+                for (ci, r) in ranges.iter().enumerate() {
+                    run_chunk(ci, r.clone());
+                }
+            }
+        }
+    }
+
+    // Fold the per-chunk partial reductions in fixed ascending chunk
+    // order — the association is identical for every pool size.
+    for ci in 0..nc {
+        for k in 0..t {
+            s.loss_sums[k] += s.chunk_loss[ci * t + k];
+        }
+        for j in 0..p {
+            s.grads[j] += s.chunk_grads[ci * p + j];
+        }
+        s.n_valid += s.chunk_valid[ci];
+    }
+    Ok(())
+}
+
+/// Execute one request against the reference model (serial).
+pub fn execute(
+    arts: &ModelArtifacts,
+    kind: ArtifactKind,
+    bucket: (usize, usize),
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    execute_with_pool(arts, kind, bucket, inputs, None)
+}
+
+/// [`execute`] with an optional worker pool for the train path's
+/// batch-chunked forward/backward.
+pub fn execute_with_pool(
+    arts: &ModelArtifacts,
+    kind: ArtifactKind,
+    bucket: (usize, usize),
+    inputs: &[Tensor],
+    pool: Option<&WorkerPool>,
+) -> Result<Vec<Tensor>> {
+    let (b, l) = bucket;
+    let d = arts.emb_dim;
+    let t = arts.tasks;
     let want = match kind {
         ArtifactKind::Train => 4,
         ArtifactKind::Forward => 3,
@@ -66,122 +337,63 @@ pub fn execute(
     ensure!(inputs.len() == want, "expected {want} inputs, got {}", inputs.len());
 
     let params = inputs[0].as_f32()?;
-    ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
     let emb = inputs[1].as_f32()?;
-    ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
     let lengths = match &inputs[2] {
         Tensor::I32 { data, .. } => data.as_slice(),
         _ => bail!("lengths tensor is not i32"),
     };
-    ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
-
-    // ---- masked mean-pool per sequence ------------------------------
-    let mut pool = vec![0.0f32; b * d];
-    let mut valid_len = vec![0usize; b];
-    for i in 0..b {
-        let len = lengths[i].clamp(0, l as i32) as usize;
-        valid_len[i] = len;
-        if len == 0 {
-            continue;
-        }
-        let acc = &mut pool[i * d..(i + 1) * d];
-        for pos in 0..len {
-            let row = &emb[(i * l + pos) * d..(i * l + pos + 1) * d];
-            for (a, x) in acc.iter_mut().zip(row) {
-                *a += x;
-            }
-        }
-        let inv = 1.0 / len as f32;
-        for a in acc.iter_mut() {
-            *a *= inv;
-        }
-    }
-
-    // ---- linear heads ------------------------------------------------
-    // Head layout: task k owns params[k·(D+1) .. k·(D+1)+D] as weights
-    // plus params[k·(D+1)+D] as bias.
-    let mut logits = vec![0.0f32; b * t];
-    for i in 0..b {
-        for k in 0..t {
-            let off = k * (d + 1);
-            let w = &params[off..off + d];
-            let mut z = params[off + d];
-            for j in 0..d {
-                z += w[j] * pool[i * d + j];
-            }
-            logits[i * t + k] = z;
-        }
-    }
 
     if kind == ArtifactKind::Forward {
+        let p = arts.param_count;
+        ensure!(
+            p >= t * (d + 1),
+            "reference model needs {} head params, manifest says {p}",
+            t * (d + 1)
+        );
+        ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
+        ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
+        ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
+        // Per-sample arithmetic is identical to the train path (which
+        // the `forward_matches_train_logits` test pins down).
+        let mut logits = vec![0.0f32; b * t];
+        let mut acc = vec![0.0f32; d];
+        for i in 0..b {
+            let len = lengths[i].clamp(0, l as i32) as usize;
+            acc.fill(0.0);
+            if len > 0 {
+                for pos in 0..len {
+                    let row = &emb[(i * l + pos) * d..(i * l + pos + 1) * d];
+                    for (a, x) in acc.iter_mut().zip(row) {
+                        *a += x;
+                    }
+                }
+                let inv = 1.0 / len as f32;
+                for a in acc.iter_mut() {
+                    *a *= inv;
+                }
+            }
+            for k in 0..t {
+                let off = k * (d + 1);
+                let w = &params[off..off + d];
+                let mut z = params[off + d];
+                for jj in 0..d {
+                    z += w[jj] * acc[jj];
+                }
+                logits[i * t + k] = z;
+            }
+        }
         return Ok(vec![Tensor::f32(&[b, t], logits)]);
     }
 
     let labels = inputs[3].as_f32()?;
-    ensure!(labels.len() == b * t, "labels arity: {} vs {}", labels.len(), b * t);
-
-    // ---- loss + analytic backward over valid samples -----------------
-    let mut loss_sums = vec![0.0f32; t];
-    let mut dz = vec![0.0f32; b * t];
-    let mut n_valid = 0.0f32;
-    for i in 0..b {
-        if valid_len[i] == 0 {
-            continue;
-        }
-        n_valid += 1.0;
-        for k in 0..t {
-            let z = logits[i * t + k];
-            let y = labels[i * t + k];
-            loss_sums[k] += softplus(z) - y * z;
-            dz[i * t + k] = sigmoid(z) - y;
-        }
-    }
-
-    let mut grads = vec![0.0f32; p];
-    for i in 0..b {
-        if valid_len[i] == 0 {
-            continue;
-        }
-        for k in 0..t {
-            let g = dz[i * t + k];
-            let off = k * (d + 1);
-            for j in 0..d {
-                grads[off + j] += g * pool[i * d + j];
-            }
-            grads[off + d] += g;
-        }
-    }
-
-    // d loss / d emb[i, pos, :] = Σ_k dz[i,k] · w_k / len_i for valid
-    // positions; exactly zero on padding (the contract the trainer's
-    // scatter relies on).
-    let mut emb_grad = vec![0.0f32; b * l * d];
-    let mut gvec = vec![0.0f32; d];
-    for i in 0..b {
-        let len = valid_len[i];
-        if len == 0 {
-            continue;
-        }
-        gvec.fill(0.0);
-        let inv = 1.0 / len as f32;
-        for k in 0..t {
-            let w = &params[k * (d + 1)..k * (d + 1) + d];
-            let g = dz[i * t + k] * inv;
-            for j in 0..d {
-                gvec[j] += g * w[j];
-            }
-        }
-        for pos in 0..len {
-            emb_grad[(i * l + pos) * d..(i * l + pos + 1) * d].copy_from_slice(&gvec);
-        }
-    }
-
+    let mut s = TrainScratch::new();
+    train_into(arts, bucket, params, emb, lengths, labels, pool, &mut s)?;
     Ok(vec![
-        Tensor::f32(&[t], loss_sums),
-        Tensor::f32(&[p], grads),
-        Tensor::f32(&[b, l, d], emb_grad),
-        Tensor::f32(&[b, t], logits),
-        Tensor::scalar_f32(n_valid),
+        Tensor::f32(&[t], std::mem::take(&mut s.loss_sums)),
+        Tensor::f32(&[arts.param_count], std::mem::take(&mut s.grads)),
+        Tensor::f32(&[b, l, d], std::mem::take(&mut s.emb_grad)),
+        Tensor::f32(&[b, t], std::mem::take(&mut s.logits)),
+        Tensor::scalar_f32(s.n_valid),
     ])
 }
 
@@ -271,6 +483,85 @@ mod tests {
         for (x, y) in o1.iter().zip(&o2) {
             assert_eq!(x, y);
         }
+    }
+
+    #[test]
+    fn pooled_execution_bit_identical_for_every_pool_size() {
+        // A batch wide enough that every DENSE_CHUNKS chunk is
+        // non-empty and threads ≠ chunks, exercising the queue.
+        let mut a = arts();
+        let (b, l) = (13usize, 6usize);
+        a.buckets = vec![Bucket {
+            batch: b,
+            len: l,
+            train: "<builtin>".into(),
+            forward: "<builtin>".into(),
+        }];
+        let mut rng = Xoshiro256::new(17);
+        let params: Vec<f32> = (0..P).map(|_| rng.normal(0.0, 0.5) as f32).collect();
+        let emb: Vec<f32> = (0..b * l * D).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lengths: Vec<i32> = (0..b).map(|i| (i % (l + 1)) as i32).collect();
+        let labels: Vec<f32> = (0..b * T).map(|_| rng.gen_range(2) as f32).collect();
+        let ins = vec![
+            Tensor::f32(&[P], params),
+            Tensor::f32(&[b, l, D], emb),
+            Tensor::i32(&[b], lengths),
+            Tensor::f32(&[b, T], labels),
+        ];
+        let serial = execute(&a, ArtifactKind::Train, (b, l), &ins).unwrap();
+        for threads in [1usize, 2, 3, 4] {
+            let pool = WorkerPool::new(threads);
+            let par =
+                execute_with_pool(&a, ArtifactKind::Train, (b, l), &ins, Some(&pool)).unwrap();
+            for (x, y) in serial.iter().zip(&par) {
+                assert_eq!(x, y, "{threads} threads diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let a = arts();
+        let ins = inputs(9);
+        let params = ins[0].as_f32().unwrap();
+        let emb = ins[1].as_f32().unwrap();
+        let lengths = match &ins[2] {
+            Tensor::I32 { data, .. } => data.as_slice(),
+            _ => unreachable!(),
+        };
+        let labels = ins[3].as_f32().unwrap();
+        let mut s = TrainScratch::new();
+        train_into(&a, (B, L), params, emb, lengths, labels, None, &mut s).unwrap();
+        let first = (
+            s.loss_sums.clone(),
+            s.grads.clone(),
+            s.emb_grad.clone(),
+            s.logits.clone(),
+            s.n_valid,
+        );
+        // Dirty the scratch with a different step, then re-run: stale
+        // contents must not leak into the outputs.
+        let other = inputs(10);
+        train_into(
+            &a,
+            (B, L),
+            other[0].as_f32().unwrap(),
+            other[1].as_f32().unwrap(),
+            match &other[2] {
+                Tensor::I32 { data, .. } => data.as_slice(),
+                _ => unreachable!(),
+            },
+            other[3].as_f32().unwrap(),
+            None,
+            &mut s,
+        )
+        .unwrap();
+        train_into(&a, (B, L), params, emb, lengths, labels, None, &mut s).unwrap();
+        assert_eq!(s.loss_sums, first.0);
+        assert_eq!(s.grads, first.1);
+        assert_eq!(s.emb_grad, first.2);
+        assert_eq!(s.logits, first.3);
+        assert_eq!(s.n_valid, first.4);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::balance::Batch;
 use crate::data::schema::Schema;
 use crate::embedding::merge::MergePlan;
 use crate::embedding::GlobalId;
+use crate::util::pool::{SharedSliceMut, WorkerPool};
 
 /// Flattened occurrence ids + the layout needed to pool and scatter.
 #[derive(Clone, Debug)]
@@ -77,33 +78,103 @@ impl BatchIds {
         bucket_b: usize,
         bucket_l: usize,
     ) -> Vec<f32> {
-        assert_eq!(rows.len(), self.ids.len() * dim);
-        assert!(self.layout.len() <= bucket_b, "batch exceeds bucket");
-        let mut emb = vec![0.0f32; bucket_b * bucket_l * dim];
-        for (b, &(ctx_off, tok_off, len)) in self.layout.iter().enumerate() {
-            assert!(len <= bucket_l, "sequence exceeds bucket length");
-            // Pooled context embedding.
-            let mut ctx = vec![0.0f32; dim];
-            for c in 0..self.n_ctx {
-                let r = &rows[(ctx_off + c) * dim..(ctx_off + c + 1) * dim];
-                for (a, x) in ctx.iter_mut().zip(r) {
+        let mut emb = Vec::new();
+        self.pool_into(rows, dim, bucket_b, bucket_l, None, &mut emb);
+        emb
+    }
+
+    /// Pool one sequence's rows into its (bucket_l, dim) slot.
+    fn pool_one(&self, b: usize, rows: &[f32], dim: usize, bucket_l: usize, dst: &mut [f32]) {
+        let (ctx_off, tok_off, len) = self.layout[b];
+        assert!(len <= bucket_l, "sequence exceeds bucket length");
+        // Pooled context embedding.
+        let mut ctx = vec![0.0f32; dim];
+        for c in 0..self.n_ctx {
+            let r = &rows[(ctx_off + c) * dim..(ctx_off + c + 1) * dim];
+            for (a, x) in ctx.iter_mut().zip(r) {
+                *a += x;
+            }
+        }
+        for t in 0..len {
+            let e = &mut dst[t * dim..(t + 1) * dim];
+            e.copy_from_slice(&ctx);
+            for f in 0..self.n_tok_feat {
+                let occ = tok_off + t * self.n_tok_feat + f;
+                let r = &rows[occ * dim..(occ + 1) * dim];
+                for (a, x) in e.iter_mut().zip(r) {
                     *a += x;
                 }
             }
-            for t in 0..len {
-                let dst = (b * bucket_l + t) * dim;
-                let e = &mut emb[dst..dst + dim];
-                e.copy_from_slice(&ctx);
-                for f in 0..self.n_tok_feat {
-                    let occ = tok_off + t * self.n_tok_feat + f;
-                    let r = &rows[occ * dim..(occ + 1) * dim];
-                    for (a, x) in e.iter_mut().zip(r) {
-                        *a += x;
+        }
+    }
+
+    /// [`pool`](Self::pool) into a caller-owned buffer (reused across
+    /// steps — no allocation in steady state), fanning sequences across
+    /// `pool` when supplied. Per-sequence output slots are disjoint, so
+    /// the result is bit-identical for every pool size.
+    pub fn pool_into(
+        &self,
+        rows: &[f32],
+        dim: usize,
+        bucket_b: usize,
+        bucket_l: usize,
+        pool: Option<&WorkerPool>,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(rows.len(), self.ids.len() * dim);
+        assert!(self.layout.len() <= bucket_b, "batch exceeds bucket");
+        out.clear();
+        out.resize(bucket_b * bucket_l * dim, 0.0);
+        let n = self.layout.len();
+        if n == 0 {
+            return;
+        }
+        let stride = bucket_l * dim;
+        match pool {
+            Some(p) if p.threads() > 1 && n > 1 => {
+                p.parallel_for_chunks_mut(&mut out[..n * stride], n, stride, |r, chunk| {
+                    for (j, b) in r.enumerate() {
+                        self.pool_one(b, rows, dim, bucket_l, &mut chunk[j * stride..(j + 1) * stride]);
                     }
+                });
+            }
+            _ => {
+                for b in 0..n {
+                    self.pool_one(b, rows, dim, bucket_l, &mut out[b * stride..(b + 1) * stride]);
                 }
             }
         }
-        emb
+    }
+
+    /// Scatter one sequence's gradient into occurrence positions,
+    /// relative to `base_occ` (the first occurrence index of `dst`).
+    fn scatter_one(
+        &self,
+        b: usize,
+        emb_grad: &[f32],
+        dim: usize,
+        bucket_l: usize,
+        base_occ: usize,
+        dst: &mut [f32],
+    ) {
+        let (ctx_off, tok_off, len) = self.layout[b];
+        // Context occurrences accumulate the sequence-summed grad.
+        let mut ctx_g = vec![0.0f32; dim];
+        for t in 0..len {
+            let src = (b * bucket_l + t) * dim;
+            let g = &emb_grad[src..src + dim];
+            for (a, x) in ctx_g.iter_mut().zip(g) {
+                *a += x;
+            }
+            for f in 0..self.n_tok_feat {
+                let occ = tok_off + t * self.n_tok_feat + f - base_occ;
+                dst[occ * dim..(occ + 1) * dim].copy_from_slice(g);
+            }
+        }
+        for c in 0..self.n_ctx {
+            let occ = ctx_off + c - base_occ;
+            dst[occ * dim..(occ + 1) * dim].copy_from_slice(&ctx_g);
+        }
     }
 
     /// Scatter the model's embedding gradient (bucket_b, bucket_l, dim)
@@ -115,28 +186,69 @@ impl BatchIds {
         bucket_b: usize,
         bucket_l: usize,
     ) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.scatter_grad_into(emb_grad, dim, bucket_b, bucket_l, None, &mut out);
+        out
+    }
+
+    /// [`scatter_grad`](Self::scatter_grad) into a caller-owned buffer,
+    /// fanning sequence chunks across `pool`. Each sequence owns a
+    /// contiguous occurrence span (context ids then token ids, in batch
+    /// order — the `build` layout), so chunk windows are disjoint and
+    /// the result is bit-identical for every pool size.
+    pub fn scatter_grad_into(
+        &self,
+        emb_grad: &[f32],
+        dim: usize,
+        bucket_b: usize,
+        bucket_l: usize,
+        pool: Option<&WorkerPool>,
+        out: &mut Vec<f32>,
+    ) {
         assert_eq!(emb_grad.len(), bucket_b * bucket_l * dim);
-        let mut out = vec![0.0f32; self.ids.len() * dim];
-        for (b, &(ctx_off, tok_off, len)) in self.layout.iter().enumerate() {
-            // Context occurrences accumulate the sequence-summed grad.
-            let mut ctx_g = vec![0.0f32; dim];
-            for t in 0..len {
-                let src = (b * bucket_l + t) * dim;
-                let g = &emb_grad[src..src + dim];
-                for (a, x) in ctx_g.iter_mut().zip(g) {
-                    *a += x;
-                }
-                for f in 0..self.n_tok_feat {
-                    let occ = tok_off + t * self.n_tok_feat + f;
-                    out[occ * dim..(occ + 1) * dim].copy_from_slice(g);
-                }
+        out.clear();
+        out.resize(self.ids.len() * dim, 0.0);
+        let n = self.layout.len();
+        if n == 0 {
+            return;
+        }
+        // First occurrence of each sequence chunk (spans are contiguous).
+        let occ_start = |b: usize| -> usize {
+            if b < n {
+                self.layout[b].0
+            } else {
+                self.ids.len()
             }
-            for c in 0..self.n_ctx {
-                out[(ctx_off + c) * dim..(ctx_off + c + 1) * dim]
-                    .copy_from_slice(&ctx_g);
+        };
+        match pool {
+            Some(p) if p.threads() > 1 && n > 1 => {
+                let window = SharedSliceMut::new(&mut out[..]);
+                let window = &window;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    WorkerPool::chunk_ranges(n, p.threads())
+                        .into_iter()
+                        .map(|sr| {
+                            let (o0, o1) = (occ_start(sr.start), occ_start(sr.end));
+                            Box::new(move || {
+                                // SAFETY: sequence chunks are disjoint
+                                // and each owns the contiguous
+                                // occurrence span [o0, o1).
+                                let dst =
+                                    unsafe { window.slice_mut(o0 * dim, (o1 - o0) * dim) };
+                                for b in sr {
+                                    self.scatter_one(b, emb_grad, dim, bucket_l, o0, dst);
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                p.run_scope(tasks);
+            }
+            _ => {
+                for b in 0..n {
+                    self.scatter_one(b, emb_grad, dim, bucket_l, 0, out);
+                }
             }
         }
-        out
     }
 }
 

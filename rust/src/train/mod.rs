@@ -41,7 +41,7 @@ use crate::embedding::dedup::DedupVolume;
 use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
 use crate::optim::adam::{AdamParams, DenseAdam, SparseAdam};
 use crate::optim::{DenseAccumulator, SparseAccumulator};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{Engine, TrainScratch};
 use crate::util::pool::WorkerPool;
 use crate::util::timer::PhaseTimer;
 use features::BatchIds;
@@ -61,11 +61,20 @@ pub struct TrainerOptions {
     /// reproduces the strictly sequential baseline; the numerics are
     /// bit-identical either way (ablation axis for Fig. 12).
     pub overlap: bool,
-    /// Threads in each worker's shared pool (sparse hot paths: dedup,
-    /// stage-2 serve fan-out over table stripes, row expansion,
-    /// gradient aggregation, optimizer apply). 1 = serial reference,
-    /// 0 = size to the machine; results are bit-identical for every
-    /// value (`--threads`).
+    /// Extend the double buffer across *step boundaries*: step s+1's
+    /// first ID all-to-all posts before step s's dense all-reduce +
+    /// optimizer apply, so the exchange rides the boundary window
+    /// (`StepRecord::sim_hidden_boundary_s`). Requires `overlap`;
+    /// numerics are bit-identical on or off (`--cross-step`).
+    pub cross_step: bool,
+    /// Threads in the **process-global** worker pool shared by every
+    /// trainer worker (dense forward/backward chunking, dedup, stage-2
+    /// serve fan-out over table stripes, row expansion, gradient
+    /// aggregation, optimizer apply). Each worker runs on a
+    /// deterministic fair-share view (`⌈threads/world⌉`), so the host
+    /// is never oversubscribed at `world × threads`. 1 = serial
+    /// reference, 0 = size to the machine; results are bit-identical
+    /// for every value (`--threads`).
     pub threads: usize,
     /// Batches buffered ahead of the consumer by the data prefetcher.
     pub prefetch_depth: usize,
@@ -90,6 +99,7 @@ impl TrainerOptions {
             net: NetModel::default(),
             steps,
             overlap: true,
+            cross_step: true,
             threads: 1,
             prefetch_depth: 2,
             shard_capacity: 4096,
@@ -124,6 +134,10 @@ pub struct StepRecord {
     /// Simulated per-worker backward-gradient seconds hidden behind the
     /// next micro-batch's forward (zero with `overlap: false`).
     pub sim_hidden_grad_s: Vec<f64>,
+    /// Simulated per-worker ID-exchange seconds hidden behind the
+    /// previous step's dense all-reduce + optimizer apply (cross-step
+    /// pipelining; zero unless `overlap` and `cross_step` are on).
+    pub sim_hidden_boundary_s: Vec<f64>,
     /// Simulated synchronous step seconds (max device + dense sync).
     pub sim_step_s: f64,
     pub wall_s: f64,
@@ -200,6 +214,17 @@ impl TrainReport {
         slice_mean(&per_step)
     }
 
+    /// Mean ID-exchange seconds per step hidden behind the previous
+    /// step's dense sync (cross-step pipelining).
+    pub fn mean_hidden_boundary_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_hidden_boundary_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
     pub fn final_losses(&self) -> (f64, f64) {
         let tail = self.steps.len().saturating_sub(5);
         let w = &self.steps[tail..];
@@ -248,15 +273,23 @@ impl Trainer {
         let cfg = Arc::new(self.model_cfg.clone());
         let engine = self.engine.clone();
 
+        // ONE worker pool for the whole training process, sized from
+        // `--threads` (0 = machine). Each worker receives a
+        // deterministic fair-share view (`⌈threads/world⌉`) onto the
+        // same threads, so `world` concurrent parallel regions split
+        // the pool instead of oversubscribing the host.
+        let pool = WorkerPool::new(WorkerPool::resolve_threads(self.opts.threads));
+
         let mut joins = Vec::new();
         for (rank, comm) in handles.into_iter().enumerate() {
             let opts = Arc::clone(&opts);
             let cfg = Arc::clone(&cfg);
             let engine = engine.clone();
+            let pool = Arc::new(pool.fair_share(world));
             joins.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{rank}"))
-                    .spawn(move || worker_main(rank, comm, opts, cfg, engine))
+                    .spawn(move || worker_main(rank, comm, opts, cfg, engine, pool))
                     .context("spawn worker")?,
             );
         }
@@ -340,12 +373,37 @@ struct Micro {
     bucket: (usize, usize),
 }
 
+/// One step's locally prepared inputs: the balanced batch split into
+/// micro-batches plus their occurrence streams. Prepared one step ahead
+/// so cross-step pipelining can post step *s+1*'s first ID all-to-all
+/// during step *s*'s dense sync.
+struct StepData {
+    tokens: u64,
+    samples: u64,
+    flops: f64,
+    micros: Vec<Micro>,
+    round_ids: Vec<(BatchIds, (usize, usize))>,
+}
+
+/// Persistent per-worker scratch arenas for the dense step's inputs and
+/// the exchange buffers — reused every micro-batch so the hot loop does
+/// no per-step allocation (the engine's [`TrainScratch`] covers the
+/// outputs).
+#[derive(Default)]
+struct WorkerArena {
+    emb: Vec<f32>,
+    lengths: Vec<i32>,
+    labels: Vec<f32>,
+    occ_grads: Vec<f32>,
+}
+
 fn worker_main(
     rank: usize,
     mut comm: CommHandle,
     opts: Arc<TrainerOptions>,
     cfg: Arc<ModelConfig>,
     engine: Engine,
+    pool: Arc<WorkerPool>,
 ) -> Result<WorkerOutput> {
     let world = comm.world;
     let arts = engine.manifest().model(&opts.model)?.clone();
@@ -378,15 +436,10 @@ fn worker_main(
         Box::new(FixedBatcher::new(opts.train.fixed_batch))
     };
 
-    // The worker's shared pool: dedup, stage-2 serve fan-out, row
-    // expansion, gradient aggregation and the sparse optimizer all ride
-    // it. threads == 1 is the serial reference, 0 sizes to the machine;
-    // results are bit-identical for every size.
-    let pool = Arc::new(if opts.threads == 0 {
-        WorkerPool::with_available_parallelism()
-    } else {
-        WorkerPool::new(opts.threads)
-    });
+    // `pool` is this worker's fair-share view onto the process-global
+    // pool: dense forward/backward chunking, dedup, stage-2 serve
+    // fan-out, row expansion, gradient aggregation and both optimizers
+    // all ride it. Results are bit-identical for every pool size.
 
     // Sparse side: one merged lock-striped shard table (table merging
     // is reflected in lookup-op counts; physically we always store one
@@ -433,69 +486,103 @@ fn worker_main(
     let mut wall = Throughput::default();
     let truncated = 0u64;
     let mut vol_prev = DedupVolume::default();
+    let mut scratch = TrainScratch::new();
+    let mut arena = WorkerArena::default();
 
-    for step in 0..opts.steps {
-        let step_t0 = std::time::Instant::now();
+    // Cross-step pipelining posts step s+1's first ID all-to-all during
+    // step s's dense sync; it needs the next step's occurrence stream
+    // early, so step data is always prepared one step ahead.
+    let cross = opts.overlap && opts.cross_step;
+    // Simulated dense all-reduce (the boundary window the cross-step
+    // exchange hides behind); constant across steps.
+    let t_allreduce = opts.net.all_reduce_time(world, params.len() * 4);
+    // Occurrence stream of an empty micro-batch (alignment rounds).
+    let empty_ids = BatchIds::build(
+        &Batch {
+            sequences: vec![],
+            tokens: 0,
+        },
+        &schema,
+        &plan,
+    );
 
-        // ---- data ----------------------------------------------------
+    // Prepare one step's local inputs: pull a balanced batch, split it
+    // into micro-batches and build their occurrence streams.
+    let mut prepare = |phases: &mut PhaseTimer| -> StepData {
         let batch = phases.time("1_data", || loop {
             if let Some(b) = batcher.next_batch() {
                 break b;
             }
             batcher.push_chunk(prefetch.next().expect("prefetch stream is endless"));
         });
-        let my_tokens = batch.tokens as u64;
-        let my_samples = batch.sequences.len() as u64;
-
+        let tokens = batch.tokens as u64;
+        let samples = batch.sequences.len() as u64;
         // Simulated compute cost from REAL per-sequence lengths (the
         // GPU's actual workload; padding is skipped by the fused
         // kernel's masked tiles).
-        let my_flops: f64 = batch
+        let flops: f64 = batch
             .sequences
             .iter()
             .map(|s| cfg.forward_flops(s.len()))
             .sum();
-
-        // ---- split into micro-batches ---------------------------------
         let micros = split_micros(batch, &arts);
-        // Collective alignment: every worker runs the same number of
-        // micro rounds (empty rounds keep the all-to-alls matched).
-        let n_micro = comm.all_gather_u64(micros.len() as u64);
-        let rounds = *n_micro.iter().max().unwrap() as usize;
-
-        // Occurrence streams for every round up front, so round k+1's ID
-        // exchange can be posted while round k computes (overlap mode).
+        // Occurrence streams for every local micro up front, so round
+        // k+1's ID exchange can be posted while round k computes — and
+        // the first stream exists before the previous step's dense sync
+        // (cross-step mode).
         let round_ids: Vec<(BatchIds, (usize, usize))> = phases.time("2_lookup", || {
-            (0..rounds)
-                .map(|r| match micros.get(r) {
-                    Some(m) => (BatchIds::build(&m.batch, &schema, &plan), m.bucket),
-                    None => (
-                        BatchIds::build(
-                            &Batch {
-                                sequences: vec![],
-                                tokens: 0,
-                            },
-                            &schema,
-                            &plan,
-                        ),
-                        (0, 0),
-                    ),
-                })
+            micros
+                .iter()
+                .map(|m| (BatchIds::build(&m.batch, &schema, &plan), m.bucket))
                 .collect()
         });
+        StepData {
+            tokens,
+            samples,
+            flops,
+            micros,
+            round_ids,
+        }
+    };
+
+    // Step data prepared one step ahead (None only before step 0, so
+    // the first step's data wait lands inside its own wall window).
+    let mut next_data: Option<StepData> = None;
+    // Carried across the step boundary in cross-step mode: step s+1's
+    // first posted ID exchange.
+    let mut posted: Option<PendingLookup> = None;
+
+    for step in 0..opts.steps {
+        let step_t0 = std::time::Instant::now();
+        let data = match next_data.take() {
+            Some(d) => d,
+            None => prepare(&mut phases),
+        };
+        let my_tokens = data.tokens;
+        let my_samples = data.samples;
+        let my_flops = data.flops;
+
+        // Collective alignment: every worker runs the same number of
+        // micro rounds (empty rounds keep the all-to-alls matched).
+        // Every rank has ≥ 1 micro, so round 0 — the one cross-step
+        // pipelining posts early — always exists on every rank.
+        let n_micro = comm.all_gather_u64(data.micros.len() as u64);
+        let rounds = *n_micro.iter().max().unwrap() as usize;
 
         let mut step_loss = [0.0f64; 2];
-        let mut posted: Option<PendingLookup> = None;
         let mut posted_bwd: Option<PendingBackward> = None;
         for round in 0..rounds {
-            let micro = micros.get(round);
-            let (bi, bucket) = &round_ids[round];
-            let bucket = *bucket;
+            let micro = data.micros.get(round);
+            let (bi, bucket): (&BatchIds, (usize, usize)) = match data.round_ids.get(round) {
+                Some(p) => (&p.0, p.1),
+                None => (&empty_ids, (0, 0)),
+            };
 
             // ---- lookup (collective, three-phase) ---------------------
             // With overlap on, this round's IDs were already posted
-            // during the previous round; serve the shard now and post
-            // the embedding reply...
+            // during the previous round (or, for round 0 in cross-step
+            // mode, during the previous step's dense sync); serve the
+            // shard now and post the embedding reply...
             let pending = match posted.take() {
                 Some(p) => p,
                 None => phases.time("2_lookup", || sharded.post_ids(&mut comm, &bi.ids)),
@@ -507,47 +594,59 @@ fn worker_main(
                 // round's reply is still on the wire — the
                 // double-buffered round: both exchanges in flight at
                 // once, each on its own comm lane.
-                posted = Some(phases.time("2_lookup", || {
-                    sharded.post_ids(&mut comm, &round_ids[round + 1].0.ids)
-                }));
+                let next_ids: &[crate::embedding::GlobalId] = data
+                    .round_ids
+                    .get(round + 1)
+                    .map(|p| p.0.ids.as_slice())
+                    .unwrap_or(&[]);
+                posted =
+                    Some(phases.time("2_lookup", || sharded.post_ids(&mut comm, next_ids)));
             }
             let rows = phases.time("2_lookup", || sharded.complete_reply(&mut comm, served));
 
-            // ---- forward + backward (local) ---------------------------
-            let occ_grads = if let Some(m) = micro {
+            // ---- forward + backward (local, pool-parallel) ------------
+            let occ_grads: &[f32] = if let Some(m) = micro {
                 let (bb, bl) = bucket;
-                let emb = bi.pool(&rows, d, bb, bl);
-                let mut lengths = vec![0i32; bb];
-                let mut labels = vec![0.0f32; bb * arts.tasks];
-                for (i, s) in m.batch.sequences.iter().enumerate() {
-                    lengths[i] = s.len() as i32;
-                    labels[i * arts.tasks] = s.labels[0];
-                    labels[i * arts.tasks + 1] = s.labels[1];
-                }
-                let out = phases.time("3_compute", || {
-                    engine.train_step(
+                phases.time("3_compute", || -> Result<()> {
+                    bi.pool_into(&rows, d, bb, bl, Some(pool.as_ref()), &mut arena.emb);
+                    arena.lengths.clear();
+                    arena.lengths.resize(bb, 0);
+                    arena.labels.clear();
+                    arena.labels.resize(bb * arts.tasks, 0.0);
+                    for (i, s) in m.batch.sequences.iter().enumerate() {
+                        arena.lengths[i] = s.len() as i32;
+                        arena.labels[i * arts.tasks] = s.labels[0];
+                        arena.labels[i * arts.tasks + 1] = s.labels[1];
+                    }
+                    // The reference backend executes inline with the
+                    // batch chunked across the shared pool; outputs land
+                    // in the reusable scratch arena.
+                    engine.train_step_into(
                         &opts.model,
                         bucket,
                         &params,
-                        Tensor::f32(&[bb, bl, d], emb),
-                        lengths,
-                        labels,
+                        &arena.emb,
+                        &arena.lengths,
+                        &arena.labels,
+                        Some(pool.as_ref()),
+                        &mut scratch,
                     )
                 })?;
-                step_loss[0] += out.loss_sums[0] as f64;
-                step_loss[1] += out.loss_sums[1] as f64;
-                dense_acc.add(&out.grads, out.n_valid as u64);
+                step_loss[0] += scratch.loss_sums[0] as f64;
+                step_loss[1] += scratch.loss_sums[1] as f64;
+                dense_acc.add(&scratch.grads, scratch.n_valid as u64);
                 if opts.collect_gauc && step >= opts.gauc_warmup {
                     for (i, s) in m.batch.sequences.iter().enumerate() {
-                        let z0 = out.logits[i * arts.tasks];
-                        let z1 = out.logits[i * arts.tasks + 1];
+                        let z0 = scratch.logits[i * arts.tasks];
+                        let z1 = scratch.logits[i * arts.tasks + 1];
                         gauc_ctr.add(s.user_id, z0, s.labels[0]);
                         gauc_ctcvr.add(s.user_id, z1, s.labels[1]);
                     }
                 }
-                bi.scatter_grad(&out.emb_grad, d, bb, bl)
+                bi.scatter_grad_into(&scratch.emb_grad, d, bb, bl, Some(pool.as_ref()), &mut arena.occ_grads);
+                &arena.occ_grads
             } else {
-                Vec::new()
+                &[]
             };
 
             // ---- sparse backward (collective) + local accumulation ----
@@ -563,7 +662,7 @@ fn worker_main(
                     let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
                     sparse_acc.add(&lids, &lgrads, 0);
                 }
-                let pb = sharded.post_backward(&mut comm, &bi.ids, &occ_grads);
+                let pb = sharded.post_backward(&mut comm, &bi.ids, occ_grads);
                 if opts.overlap {
                     posted_bwd = Some(pb);
                 } else {
@@ -580,7 +679,33 @@ fn worker_main(
                 sparse_acc.add(&lids, &lgrads, 0);
             }
         });
-        debug_assert!(posted.is_none(), "a posted lookup outlived its step");
+        debug_assert!(posted.is_none(), "a posted lookup outlived its rounds");
+
+        // Volume snapshot BEFORE the cross-step post, so each step's
+        // deltas cover exactly its own rounds whether or not the next
+        // step's first exchange is posted early.
+        let dv = sharded.volume;
+
+        // ---- cross-step boundary -------------------------------------
+        // Prepare step s+1 and (cross-step mode) post its first ID
+        // all-to-all now, so the exchange's wire time rides the dense
+        // all-reduce + optimizer apply below instead of the next step's
+        // critical path. Posting order is identical on every rank, and
+        // posting earlier cannot change any arithmetic — only when the
+        // wire time is waited on.
+        if step + 1 < opts.steps {
+            let next = prepare(&mut phases);
+            if cross {
+                let first_ids: &[crate::embedding::GlobalId] = next
+                    .round_ids
+                    .first()
+                    .map(|p| p.0.ids.as_slice())
+                    .unwrap_or(&[]);
+                posted =
+                    Some(phases.time("2_lookup", || sharded.post_ids(&mut comm, first_ids)));
+            }
+            next_data = Some(next);
+        }
 
         // ---- weighted dense sync + updates (collective) ---------------
         phases.time("5_dense_sync", || {
@@ -591,11 +716,12 @@ fn worker_main(
             if apply_now {
                 let (mut grads, _n) = dense_acc.take();
                 comm.all_reduce_sum(&mut grads);
-                dense_opt.step(&mut params, &grads, scale);
+                // Dense Adam chunks elements across the pool; sparse
+                // row-wise Adam fans unique rows out. Both are
+                // bit-identical to their serial steps for every pool
+                // size (disjoint elements / rows).
+                dense_opt.step_pooled(&mut params, &grads, scale, Some(pool.as_ref()));
                 let (sids, sgrads, _) = sparse_acc.take();
-                // Row-wise Adam fans out across the worker pool; the
-                // drained ids are unique, so rows/states are disjoint
-                // and the update is bit-identical to the serial step.
                 sparse_opt.step_concurrent(&pool, sharded.table(), &sids, &sgrads, scale);
             }
         });
@@ -610,9 +736,10 @@ fn worker_main(
         // exchange. With overlap on, three lanes hide behind compute in
         // priority order — the ID exchange, then the embedding reply
         // (double-buffered round), then the backward gradient push
-        // (completed behind the next round's forward); Fig. 12's
+        // (completed behind the next round's forward). Cross-step mode
+        // additionally hides the first round's ID share behind the
+        // previous step's dense sync (the boundary lane). Fig. 12's
         // decomposition reports every share.
-        let dv = sharded.volume;
         let lookups = dv.lookups_done - vol_prev.lookups_done;
         let rows_moved = dv.emb_rows_sent - vol_prev.emb_rows_sent;
         let ids_moved = dv.ids_sent - vol_prev.ids_sent;
@@ -630,9 +757,21 @@ fn worker_main(
         // last round's reply/gradients have no successor compute to
         // hide behind — so with R rounds at most (R-1)/R of each lane's
         // traffic is pipelined, and it can only hide behind the same
-        // (R-1)/R share of the step's compute.
+        // (R-1)/R share of the step's compute. Cross-step pipelining
+        // recovers the first round's 1/R ID share by posting it during
+        // the previous step's boundary (steps after the first).
         let pipelined_frac = if opts.overlap && rounds > 0 {
             (rounds - 1) as f64 / rounds as f64
+        } else {
+            0.0
+        };
+        let t_first_id = if rounds > 0 {
+            t_id_comm / rounds as f64
+        } else {
+            0.0
+        };
+        let t_hidden_boundary = if cross && step > 0 {
+            t_first_id.min(t_allreduce)
         } else {
             0.0
         };
@@ -644,7 +783,8 @@ fn worker_main(
         ];
         let shares =
             crate::metrics::overlap_exposure_lanes(t_window, &hideable, opts.overlap);
-        let t_exposed_comm = (t_id_comm - hideable[0]) + shares[0].0
+        let t_exposed_comm = (t_id_comm - hideable[0] - t_hidden_boundary).max(0.0)
+            + shares[0].0
             + (t_reply_comm - hideable[1]) + shares[1].0
             + (t_grad_comm - hideable[2]) + shares[2].0;
         let my_sim = t_compute + t_lookup + t_exposed_comm;
@@ -655,6 +795,7 @@ fn worker_main(
                 shares[0].1 as f32,
                 shares[1].1 as f32,
                 shares[2].1 as f32,
+                t_hidden_boundary as f32,
             ]))
             .into_iter()
             .map(|m| m.into_floats())
@@ -664,8 +805,8 @@ fn worker_main(
         let hidden_all: Vec<f64> = gathered.iter().map(|v| v[2] as f64).collect();
         let hidden_reply_all: Vec<f64> = gathered.iter().map(|v| v[3] as f64).collect();
         let hidden_grad_all: Vec<f64> = gathered.iter().map(|v| v[4] as f64).collect();
-        let sim_step = sim_all.iter().cloned().fold(0.0, f64::max)
-            + opts.net.all_reduce_time(world, params.len() * 4);
+        let hidden_boundary_all: Vec<f64> = gathered.iter().map(|v| v[5] as f64).collect();
+        let sim_step = sim_all.iter().cloned().fold(0.0, f64::max) + t_allreduce;
 
         let wall_s = step_t0.elapsed().as_secs_f64();
         wall.add(samples, tokens.iter().sum(), wall_s);
@@ -682,6 +823,7 @@ fn worker_main(
             sim_hidden_comm_s: hidden_all,
             sim_hidden_reply_s: hidden_reply_all,
             sim_hidden_grad_s: hidden_grad_all,
+            sim_hidden_boundary_s: hidden_boundary_all,
             sim_step_s: sim_step,
             wall_s,
         });
@@ -697,6 +839,7 @@ fn worker_main(
             );
         }
     }
+    debug_assert!(posted.is_none(), "a posted lookup outlived the run");
 
     Ok(WorkerOutput {
         rank,

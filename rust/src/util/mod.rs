@@ -2,8 +2,9 @@
 //! provide: seeded RNG (`rand` replacement), JSON (`serde_json`
 //! replacement), software half floats (`half` replacement), statistics
 //! helpers, timers, a micro-benchmark harness (`criterion` replacement),
-//! a CLI argument parser (`clap` replacement) and a deterministic scoped
-//! worker pool (`rayon` replacement for the sparse hot paths).
+//! a CLI argument parser (`clap` replacement), a deterministic scoped
+//! worker pool (`rayon` replacement for the sparse hot paths) and
+//! runtime-tunable performance thresholds (`tuning`).
 
 pub mod bench;
 pub mod cli;
@@ -13,3 +14,4 @@ pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod tuning;

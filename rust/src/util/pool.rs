@@ -29,6 +29,20 @@
 //! Panics inside tasks are caught, the scope still waits for its
 //! remaining tasks, and the first panic payload is re-raised on the
 //! caller — the same contract as `std::thread::scope`.
+//!
+//! **Fair sharing.** One process-wide pool serves every trainer worker:
+//! [`WorkerPool::fair_share`] returns a cheap *view* onto the same
+//! worker threads whose [`threads()`](WorkerPool::threads) — and thus
+//! every chunk count — is the caller's deterministic share
+//! (`⌈threads / participants⌉`, a pure function of the two numbers, so
+//! chunking never depends on runtime racing). `world` concurrent
+//! `run_scope` callers therefore split one pool instead of
+//! oversubscribing the host with `world × threads` threads; the shared
+//! queue plus caller helping keeps every region deadlock-free. The
+//! number of *actual* thread pools alive in the process is observable
+//! via [`WorkerPool::live_pool_count`] (views don't count; the
+//! one-pool-per-training-process invariant is asserted by
+//! `tests/global_pool.rs`).
 
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -36,6 +50,11 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Live thread-pool cores in this process (views excluded).
+static LIVE_POOLS: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of [`LIVE_POOLS`] since the last reset.
+static PEAK_POOLS: AtomicUsize = AtomicUsize::new(0);
 
 /// A task queued for the pool, tagged with its scope so completion can
 /// be signalled.
@@ -80,13 +99,38 @@ impl PoolInner {
     }
 }
 
-/// A fixed-size pool of persistent worker threads with scoped,
-/// deterministic fork/join helpers. See the module docs for the
-/// determinism contract.
-pub struct WorkerPool {
+/// The actual thread pool: persistent workers plus the shared queue.
+/// [`WorkerPool`] values are views onto one of these; the workers shut
+/// down when the last view drops.
+struct PoolCore {
     inner: Arc<PoolInner>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        LIVE_POOLS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// A fixed-size pool of persistent worker threads with scoped,
+/// deterministic fork/join helpers — or a fair-share *view* onto one
+/// (see [`fair_share`](WorkerPool::fair_share)). See the module docs
+/// for the determinism contract.
+pub struct WorkerPool {
+    core: Arc<PoolCore>,
+    /// Threads this view assumes for chunk counts and inline fast
+    /// paths; equals the core's thread count for a full view.
+    share: usize,
 }
 
 impl WorkerPool {
@@ -111,25 +155,78 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
+        let live = LIVE_POOLS.fetch_add(1, Ordering::Relaxed) + 1;
+        PEAK_POOLS.fetch_max(live, Ordering::Relaxed);
         WorkerPool {
-            inner,
-            workers,
-            threads,
+            core: Arc::new(PoolCore {
+                inner,
+                workers,
+                threads,
+            }),
+            share: threads,
         }
     }
 
     /// A pool sized to the machine (`std::thread::available_parallelism`).
     pub fn with_available_parallelism() -> Self {
-        let n = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        WorkerPool::new(n)
+        WorkerPool::new(Self::machine_threads())
     }
 
-    /// Number of threads participating in parallel regions (callers +
-    /// workers).
+    /// `std::thread::available_parallelism` with a 1 fallback.
+    pub fn machine_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Resolve a `--threads` CLI value: 0 means "size to the machine".
+    pub fn resolve_threads(threads: usize) -> usize {
+        if threads == 0 {
+            Self::machine_threads()
+        } else {
+            threads
+        }
+    }
+
+    /// A deterministic fair-share view for one of `participants`
+    /// concurrent callers: same workers, same queue, but chunk counts
+    /// (and the inline fast path) assume `⌈threads / participants⌉`
+    /// threads — a pure function of the two numbers, so chunk
+    /// boundaries stay independent of scheduling. Dropping a view never
+    /// stops the workers; the core shuts down with its last view.
+    pub fn fair_share(&self, participants: usize) -> WorkerPool {
+        WorkerPool {
+            core: Arc::clone(&self.core),
+            share: self.core.threads.div_ceil(participants.max(1)).max(1),
+        }
+    }
+
+    /// Thread-pool cores currently alive in this process (fair-share
+    /// views excluded). The trainer must keep this at one.
+    pub fn live_pool_count() -> usize {
+        LIVE_POOLS.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`live_pool_count`](Self::live_pool_count)
+    /// since [`reset_peak_pool_count`](Self::reset_peak_pool_count).
+    pub fn peak_pool_count() -> usize {
+        PEAK_POOLS.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak_pool_count() {
+        PEAK_POOLS.store(LIVE_POOLS.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Number of threads this view assumes in parallel regions (the
+    /// fair share for shared views; callers + workers for full pools).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.share
+    }
+
+    /// Threads owned by the underlying pool core (views report the full
+    /// size here, their share via [`threads()`](Self::threads)).
+    pub fn pool_threads(&self) -> usize {
+        self.core.threads
     }
 
     /// Stable chunk boundaries: split `0..len` into at most `chunks`
@@ -153,7 +250,7 @@ impl WorkerPool {
         }
         // Inline fast path: single participant, or a single task —
         // nothing to coordinate.
-        if self.threads == 1 || tasks.len() == 1 {
+        if self.share == 1 || tasks.len() == 1 {
             for f in tasks {
                 f();
             }
@@ -168,7 +265,7 @@ impl WorkerPool {
         // the shared queue.
         let mine = tasks.next().unwrap();
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = self.core.inner.state.lock().unwrap();
             for f in tasks {
                 // SAFETY: lifetime erasure to put borrowed closures in
                 // the 'static queue. `run_scope` does not return until
@@ -181,29 +278,30 @@ impl WorkerPool {
                     scope: Arc::clone(&scope),
                 });
             }
-            self.inner.cv.notify_all();
+            self.core.inner.cv.notify_all();
         }
         // Run our own share inline (still counted in `remaining`).
         // SAFETY: as above — this scope blocks until the task has run.
         let mine = unsafe { erase_task_lifetime(mine) };
-        self.inner.execute(QueuedTask {
+        self.core.inner.execute(QueuedTask {
             f: mine,
             scope: Arc::clone(&scope),
         });
         // Wait for the rest, helping drain the queue: a blocked scope
         // executing other pending tasks (possibly from a nested
-        // parallel region) is what makes nesting deadlock-free.
-        let mut st = self.inner.state.lock().unwrap();
+        // parallel region or another fair-share caller) is what makes
+        // nesting — and concurrent shared-pool scopes — deadlock-free.
+        let mut st = self.core.inner.state.lock().unwrap();
         loop {
             if scope.remaining.load(Ordering::Acquire) == 0 {
                 break;
             }
             if let Some(task) = st.queue.pop_front() {
                 drop(st);
-                self.inner.execute(task);
-                st = self.inner.state.lock().unwrap();
+                self.core.inner.execute(task);
+                st = self.core.inner.state.lock().unwrap();
             } else {
-                st = self.inner.cv.wait(st).unwrap();
+                st = self.core.inner.cv.wait(st).unwrap();
             }
         }
         drop(st);
@@ -218,12 +316,12 @@ impl WorkerPool {
         if len == 0 {
             return;
         }
-        if self.threads == 1 {
+        if self.share == 1 {
             f(0..len);
             return;
         }
         let f = &f;
-        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Self::chunk_ranges(len, self.threads)
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Self::chunk_ranges(len, self.share)
             .into_iter()
             .map(|r| Box::new(move || f(r)) as Box<dyn FnOnce() + Send + '_>)
             .collect();
@@ -240,7 +338,7 @@ impl WorkerPool {
         if len == 0 {
             return Vec::new();
         }
-        if self.threads == 1 {
+        if self.share == 1 {
             return (0..len).map(f).collect();
         }
         let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
@@ -249,7 +347,7 @@ impl WorkerPool {
             let mut rest: &mut [Option<T>] = &mut out;
             let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
             let mut prev_end = 0usize;
-            for r in Self::chunk_ranges(len, self.threads) {
+            for r in Self::chunk_ranges(len, self.share) {
                 let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - prev_end);
                 rest = tail;
                 prev_end = r.end;
@@ -275,7 +373,7 @@ impl WorkerPool {
         stride: usize,
         f: impl Fn(Range<usize>, &mut [T]) + Sync + Send,
     ) {
-        self.parallel_for_ranges_mut(data, stride, &Self::chunk_ranges(items, self.threads), f);
+        self.parallel_for_ranges_mut(data, stride, &Self::chunk_ranges(items, self.share), f);
     }
 
     /// [`parallel_for_chunks_mut`](Self::parallel_for_chunks_mut) with
@@ -301,7 +399,7 @@ impl WorkerPool {
         if ranges.is_empty() {
             return;
         }
-        if self.threads == 1 || ranges.len() == 1 {
+        if self.share == 1 || ranges.len() == 1 {
             let mut rest: &mut [T] = data;
             let mut prev_end = 0usize;
             for r in ranges {
@@ -384,19 +482,6 @@ impl<'a, T> SharedSliceMut<'a, T> {
             self.len
         );
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
-    }
-}
-
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        {
-            let mut st = self.inner.state.lock().unwrap();
-            st.shutdown = true;
-            self.inner.cv.notify_all();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
     }
 }
 
@@ -537,6 +622,66 @@ mod tests {
             }
         });
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fair_share_views_split_deterministically() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.pool_threads(), 4);
+        let half = pool.fair_share(2);
+        assert_eq!(half.threads(), 2, "4 threads / 2 participants");
+        assert_eq!(half.pool_threads(), 4, "same core");
+        assert_eq!(pool.fair_share(3).threads(), 2, "ceil(4/3)");
+        assert_eq!(pool.fair_share(8).threads(), 1, "never below 1");
+        assert_eq!(pool.fair_share(0).threads(), 4, "0 participants clamps");
+        // A share view computes the same results as the full pool.
+        let full = pool.parallel_map(257, |i| i as u64 * 17);
+        assert_eq!(half.parallel_map(257, |i| i as u64 * 17), full);
+        // share == 1 runs inline (deterministic order) on the same core.
+        let one = pool.fair_share(4);
+        let order = Mutex::new(Vec::new());
+        one.parallel_for(5, |r| {
+            for i in r {
+                order.lock().unwrap().push(i);
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn concurrent_fair_share_callers_share_one_queue() {
+        // `world` threads hammer fair-share views of one pool at once;
+        // every caller gets exact results (no lost or duplicated tasks).
+        // share = ⌈4/2⌉ = 2 > 1, so every caller genuinely queues tasks
+        // on the shared core rather than taking the inline fast path.
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut joins = Vec::new();
+        for w in 0..4u64 {
+            let view = pool.fair_share(2);
+            joins.push(std::thread::spawn(move || {
+                let mut ok = true;
+                for round in 0..50u64 {
+                    let out = view.parallel_map(97, |i| i as u64 + w * 1000 + round);
+                    ok &= out
+                        .iter()
+                        .enumerate()
+                        .all(|(i, &v)| v == i as u64 + w * 1000 + round);
+                }
+                ok
+            }));
+        }
+        for j in joins {
+            assert!(j.join().unwrap());
+        }
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_machine() {
+        assert_eq!(WorkerPool::resolve_threads(3), 3);
+        let m = WorkerPool::resolve_threads(0);
+        assert!(m >= 1);
+        assert_eq!(m, WorkerPool::machine_threads());
     }
 
     #[test]

@@ -1,0 +1,95 @@
+//! Runtime-tunable performance thresholds.
+//!
+//! The parallel sparse kernels switch strategy by input size
+//! (hash→sorted dedup, serial→parallel gather/scatter, per-id→striped
+//! batch fetch). The crossover points are machine-dependent, so each
+//! threshold is a [`TunableThreshold`]: the compiled-in constant is the
+//! default, an environment variable overrides it at process start, and
+//! [`TunableThreshold::set`] overrides it programmatically (used by the
+//! `bench_parallel_lookup --calibrate` sweep to force each path and by
+//! deployments that measured their own crossovers).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Once;
+
+/// A `usize` knob with a compile-time default, a one-shot env override
+/// and a programmatic setter. Reads are a relaxed atomic load after the
+/// first access, so hot-path call sites stay branch-cheap.
+pub struct TunableThreshold {
+    value: AtomicUsize,
+    init: Once,
+    env: &'static str,
+    default: usize,
+}
+
+impl TunableThreshold {
+    pub const fn new(env: &'static str, default: usize) -> Self {
+        TunableThreshold {
+            value: AtomicUsize::new(0),
+            init: Once::new(),
+            env,
+            default,
+        }
+    }
+
+    fn ensure_init(&self) {
+        self.init.call_once(|| {
+            let v = std::env::var(self.env)
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .unwrap_or(self.default);
+            self.value.store(v.max(1), Ordering::Relaxed);
+        });
+    }
+
+    /// Current value (env override applied on first read; never 0).
+    pub fn get(&self) -> usize {
+        self.ensure_init();
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Override the value for this process (clamped to ≥ 1). Wins over
+    /// the env var regardless of call order.
+    pub fn set(&self, v: usize) {
+        self.ensure_init();
+        self.value.store(v.max(1), Ordering::Relaxed);
+    }
+
+    /// The compiled-in default.
+    pub fn default_value(&self) -> usize {
+        self.default
+    }
+
+    /// The environment variable consulted on first read.
+    pub fn env_var(&self) -> &'static str {
+        self.env
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Dedicated statics so these tests cannot race the kernels' live
+    // thresholds (unit tests share one process).
+    static T_DEFAULT: TunableThreshold =
+        TunableThreshold::new("MTGR_TEST_THRESHOLD_UNSET", 4096);
+    static T_SET: TunableThreshold = TunableThreshold::new("MTGR_TEST_THRESHOLD_SET", 64);
+
+    #[test]
+    fn default_when_env_unset() {
+        assert_eq!(T_DEFAULT.get(), 4096);
+        assert_eq!(T_DEFAULT.default_value(), 4096);
+        assert_eq!(T_DEFAULT.env_var(), "MTGR_TEST_THRESHOLD_UNSET");
+    }
+
+    #[test]
+    fn set_overrides_and_clamps() {
+        assert_eq!(T_SET.get(), 64);
+        T_SET.set(10);
+        assert_eq!(T_SET.get(), 10);
+        T_SET.set(0);
+        assert_eq!(T_SET.get(), 1, "clamped to 1");
+        T_SET.set(64);
+    }
+}

@@ -1,9 +1,11 @@
 //! End-to-end determinism: a 2-worker, 20-step distributed `Trainer`
 //! run over the reference engine is **bit-identical** across runs with
 //! the same seed, bit-identical between `--overlap on` and
-//! `--overlap off` (the pipelined exchange reorders messages, never
-//! arithmetic), and bit-identical across `--threads {1,4}` (the worker
-//! pool chunks work, never changes reduction order).
+//! `--overlap off` and between `--cross-step on` and `off` (the
+//! pipelined exchange reorders messages, never arithmetic), and
+//! bit-identical across `--threads {1,4,0}` (the global worker pool's
+//! fair-share views chunk work — with fixed chunk counts on every
+//! reduction — never changing reduction order).
 //!
 //! Everything that feeds the numbers is seeded and rank-order
 //! deterministic: the workload generator (streamed through the
@@ -120,7 +122,8 @@ fn overlap_on_and_off_are_bit_identical() {
 
 #[test]
 fn threads_and_overlap_grid_bit_identical() {
-    // The acceptance grid: `--threads {1,4}` × `--overlap {on,off}` all
+    // The acceptance grid: `--threads {1,4,0}` (0 = machine-sized
+    // global pool) × `--overlap {on,off}` × `--cross-step {on,off}` all
     // produce identical losses AND identical final embedding state.
     // Batches are sized up (vs the other tests) so the thresholded
     // pooled kernels actually engage at threads=4: per-round occurrence
@@ -128,26 +131,46 @@ fn threads_and_overlap_grid_bit_identical() {
     // thresholds, not just the always-on concurrent optimizer. (The
     // sorted-dedup kernel's cross-thread identity is additionally
     // covered by its own unit suite with 20k-id inputs.)
-    let grid_run = |overlap: bool, threads: usize| {
+    let grid_run = |overlap: bool, threads: usize, cross_step: bool| {
         let mut o = opts(overlap, threads);
+        o.cross_step = cross_step;
         o.train.target_tokens = 2600;
         o.steps = 10;
         let engine = Engine::reference(7).unwrap();
         Trainer::new(o, engine).unwrap().run().unwrap()
     };
-    let reference = grid_run(false, 1);
+    let reference = grid_run(false, 1, false);
     let reference_fp = fingerprint(&reference);
     assert_ne!(reference.embedding_checksum, 0);
-    for (overlap, threads) in [(true, 1), (false, 4), (true, 4)] {
-        let r = grid_run(overlap, threads);
+    for (overlap, threads, cross_step) in [
+        (true, 1, true),
+        (false, 4, false),
+        (true, 4, false),
+        (true, 4, true),
+        (true, 0, true), // machine-sized global pool
+    ] {
+        let r = grid_run(overlap, threads, cross_step);
         assert_eq!(
             fingerprint(&r),
             reference_fp,
-            "overlap={overlap} threads={threads} diverged from threads=1/overlap=off"
+            "overlap={overlap} threads={threads} cross={cross_step} diverged \
+             from threads=1/overlap=off"
         );
         assert_eq!(r.table_rows, reference.table_rows);
         assert_eq!(r.table_memory_bytes, reference.table_memory_bytes);
         assert_eq!(r.dedup_volume, reference.dedup_volume);
+        if overlap && cross_step {
+            assert!(
+                r.mean_hidden_boundary_s() > 0.0,
+                "cross-step must report boundary-hidden time"
+            );
+        } else {
+            assert_eq!(
+                r.mean_hidden_boundary_s(),
+                0.0,
+                "no boundary hiding without cross-step overlap"
+            );
+        }
     }
 }
 

@@ -1,0 +1,67 @@
+//! The trainer shares ONE process-global `WorkerPool` across all of its
+//! workers (each gets a deterministic fair-share view), instead of the
+//! pre-PR-3 one-pool-per-worker layout that oversubscribed the host at
+//! `world × threads` threads.
+//!
+//! This file is its own test binary — and holds a single `#[test]` — so
+//! no other test's pools can race the process-wide live/peak counters.
+
+use mtgrboost::data::generator::GeneratorConfig;
+use mtgrboost::runtime::Engine;
+use mtgrboost::train::{Trainer, TrainerOptions};
+use mtgrboost::util::pool::WorkerPool;
+
+fn opts(world: usize, threads: usize) -> TrainerOptions {
+    let mut o = TrainerOptions::new("tiny", world, 4);
+    o.generator = GeneratorConfig {
+        len_mu: 2.5,
+        len_sigma: 0.5,
+        min_len: 2,
+        max_len: 60,
+        num_users: 200,
+        num_items: 200,
+        ..Default::default()
+    };
+    o.train.target_tokens = 600;
+    o.collect_gauc = false;
+    o.threads = threads;
+    o
+}
+
+#[test]
+fn exactly_one_worker_pool_per_training_process() {
+    assert_eq!(WorkerPool::live_pool_count(), 0, "no pools before training");
+
+    // world 2 × threads 4: the old layout would have created two
+    // 4-thread pools; the global pool keeps the peak at exactly one.
+    WorkerPool::reset_peak_pool_count();
+    let engine = Engine::reference(7).unwrap();
+    let report = Trainer::new(opts(2, 4), engine).unwrap().run().unwrap();
+    assert_eq!(report.steps.len(), 4);
+    assert_eq!(
+        WorkerPool::peak_pool_count(),
+        1,
+        "training must create exactly one WorkerPool"
+    );
+    assert_eq!(WorkerPool::live_pool_count(), 0, "pool torn down after run");
+
+    // threads 0 (machine-sized) takes the same single-pool path.
+    WorkerPool::reset_peak_pool_count();
+    let engine = Engine::reference(7).unwrap();
+    let report0 = Trainer::new(opts(2, 0), engine).unwrap().run().unwrap();
+    assert_eq!(WorkerPool::peak_pool_count(), 1, "threads=0 still one pool");
+    assert_eq!(WorkerPool::live_pool_count(), 0);
+
+    // Same seed, same numerics regardless of pool size — the fair-share
+    // views chunk work, never change arithmetic.
+    let fp = |r: &mtgrboost::train::TrainReport| {
+        (
+            r.steps
+                .iter()
+                .map(|s| (s.loss_ctr.to_bits(), s.loss_ctcvr.to_bits()))
+                .collect::<Vec<_>>(),
+            r.embedding_checksum,
+        )
+    };
+    assert_eq!(fp(&report), fp(&report0));
+}

@@ -176,6 +176,46 @@ fn prop_codec_bijective() {
     }
 }
 
+/// Property: Eq. 8 roundtrips across ALL table counts `m` in 1..=1025 —
+/// in particular every `k = ⌈log₂(m+1)⌉` boundary (m = 2^k − 1 uses k
+/// bits, m = 2^k needs k+1) — and at max-magnitude raw IDs (the full
+/// 63−k local-id range), where an off-by-one in the shift would corrupt
+/// the table index or the sign bit.
+#[test]
+fn prop_codec_roundtrip_all_table_counts_and_boundaries() {
+    let mut rng = Xoshiro256::new(4100);
+    for m in 1usize..=1025 {
+        let c = GlobalIdCodec::new(m);
+        let k = c.id_bits();
+        // k is exactly ⌈log₂(m+1)⌉: 2^k ≥ m+1 and (k>1 ⟹ 2^(k−1) < m+1).
+        assert!(1u64 << k >= (m as u64 + 1), "m={m}: 2^{k} < m+1");
+        if k > 1 {
+            assert!(
+                1u64 << (k - 1) < (m as u64 + 1),
+                "m={m}: k={k} not minimal"
+            );
+        }
+        assert_eq!(c.max_local_id(), (1u64 << (63 - k)) - 1, "m={m}");
+        let max_local = c.max_local_id();
+        let locals = [0u64, 1, max_local / 2, max_local - 1, max_local];
+        let tables = [0usize, m / 2, m - 1];
+        for &t in &tables {
+            for &x in &locals {
+                let enc = c.encode(t, x);
+                assert_eq!(enc >> 63, 0, "m={m} t={t}: sign bit set");
+                assert_eq!(c.decode(enc), (t, x), "m={m} t={t} x={x}");
+            }
+            // A random max-magnitude-masked raw ID per table.
+            let x = rng.next_u64() & max_local;
+            assert_eq!(c.decode(c.encode(t, x)), (t, x));
+        }
+        // Distinct tables never collide, even at identical local IDs.
+        if m > 1 {
+            assert_ne!(c.encode(0, max_local), c.encode(m - 1, max_local));
+        }
+    }
+}
+
 /// Property: shard routing is a pure function and the paper's modulo
 /// refinement holds for power-of-two worlds: owner under 2w maps to
 /// owner under w by reduction mod w.
