@@ -166,6 +166,36 @@ fn main() {
         }
     }
     rep.add_table(table);
+
+    // Real-table counters alongside the simulated decomposition: a
+    // compact reference-engine run surfaces the ConcurrentDynamicTable
+    // memory-pressure statistics (inserts / expansions / evictions)
+    // into the same JSON artifact, so the perf trajectory can correlate
+    // the simulated phase times with observed table behaviour.
+    {
+        use mtgrboost::data::generator::GeneratorConfig;
+        use mtgrboost::runtime::Engine;
+        use mtgrboost::train::{Trainer, TrainerOptions};
+        let mut o = TrainerOptions::new("tiny", 2, steps.min(10));
+        o.generator = GeneratorConfig {
+            len_mu: 2.5,
+            len_sigma: 0.5,
+            min_len: 2,
+            max_len: 60,
+            num_users: 500,
+            num_items: 300,
+            ..Default::default()
+        };
+        o.train.target_tokens = 900;
+        o.collect_gauc = false;
+        let engine = Engine::reference(7).unwrap();
+        let r = Trainer::new(o, engine).unwrap().run().unwrap();
+        assert!(r.table_stats.inserts > 0, "real run must insert rows");
+        rep.add_metric("real_table_rows", r.table_rows.into());
+        rep.add_metric("real_table_inserts", r.table_stats.inserts.into());
+        rep.add_metric("real_table_expansions", r.table_stats.expansions.into());
+        rep.add_metric("real_table_evictions", r.table_stats.evictions.into());
+    }
     rep.save().unwrap();
     println!(
         "\nPaper: MTGRBoost is faster in every phase; gains grow with model \

@@ -1,0 +1,458 @@
+//! Incremental delta snapshots: the training → serving sync path.
+//!
+//! A full checkpoint of a production embedding table is far too large
+//! to ship every few minutes; Monolith-style systems instead sync
+//! **deltas** — only the rows touched since the last sync plus the ids
+//! retired in between — which serving applies on top of a base
+//! snapshot. This module implements that format on the trainer side:
+//!
+//! ```text
+//! <dir>/delta_<seq:05>/meta.json    seq, world, step, base_step, model,
+//!                                   dim, param_count
+//! <dir>/delta_<seq:05>/dense.bin    full dense params + Adam state
+//!                                   (rank 0 — dense is tiny next to the
+//!                                   sparse tables, so it ships whole)
+//! <dir>/delta_<seq:05>/sparse_rank<r>_of<n>.bin
+//!         u64 n_removed | removed ids u64 × n_removed
+//!         | u64 count | u64 dim | rows (id | row | m | v | t) × count
+//! ```
+//!
+//! The row wire format is byte-identical to the full checkpoint's
+//! ([`super::save`]), so one codec serves both. **Reconstruction
+//! contract** (tested): installing a base snapshot and applying every
+//! delta in `seq` order — removals first, then upserts — yields a state
+//! bit-identical to a full checkpoint taken at the same step: same row
+//! set, same row values, same Adam `m`/`v`/`t`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    parse_sparse_file, push_row_bytes, rows_block_bytes, write_dense_bin, CheckpointMeta,
+    SparseRow,
+};
+use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::GlobalId;
+use crate::optim::adam::{DenseAdam, RowState, SparseAdam};
+use crate::util::json::Json;
+
+/// Metadata of one delta snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaMeta {
+    /// Sync sequence number (1-based; deltas apply in ascending order).
+    pub seq: u64,
+    pub world: usize,
+    /// Step the snapshot was taken at.
+    pub step: u64,
+    /// Step of the state this delta applies on top of (the previous
+    /// sync point; 0 for the first delta, which applies to the empty /
+    /// base state).
+    pub base_step: u64,
+    pub model: String,
+    pub dim: usize,
+    pub param_count: usize,
+}
+
+/// Directory of delta `seq` under the sync root.
+pub fn delta_dir(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("delta_{seq:05}"))
+}
+
+fn sparse_delta_path(dir: &Path, seq: u64, rank: usize, world: usize) -> PathBuf {
+    delta_dir(dir, seq).join(format!("sparse_rank{rank:05}_of{world}.bin"))
+}
+
+/// Write one rank's shard of a delta snapshot (rank 0 additionally
+/// writes the metadata and the full dense replica). Returns the bytes
+/// of this rank's sparse payload — the sync volume the trainer accounts
+/// per interval.
+pub fn save_delta(
+    dir: &Path,
+    meta: &DeltaMeta,
+    rank: usize,
+    dense: Option<(&[f32], &DenseAdam)>,
+    upserts: &[SparseRow],
+    removed: &[GlobalId],
+) -> Result<usize> {
+    let ddir = delta_dir(dir, meta.seq);
+    std::fs::create_dir_all(&ddir)?;
+    if rank == 0 {
+        let (params, adam) =
+            dense.context("rank 0 must provide the dense params + optimizer")?;
+        anyhow::ensure!(params.len() == meta.param_count, "params arity");
+        let mut j = Json::obj();
+        j.set("seq", (meta.seq as usize).into());
+        j.set("world", meta.world.into());
+        j.set("step", (meta.step as usize).into());
+        j.set("base_step", (meta.base_step as usize).into());
+        j.set("model", meta.model.as_str().into());
+        j.set("dim", meta.dim.into());
+        j.set("param_count", meta.param_count.into());
+        std::fs::write(ddir.join("meta.json"), j.pretty())?;
+        write_dense_bin(&ddir, params, adam)?;
+    }
+
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(removed.len() as u64).to_le_bytes());
+    for id in removed {
+        bytes.extend_from_slice(&id.to_le_bytes());
+    }
+    let mut body = Vec::new();
+    for r in upserts {
+        anyhow::ensure!(r.row.len() == meta.dim, "row dim mismatch in delta");
+        push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+    }
+    bytes.extend_from_slice(&rows_block_bytes(upserts.len() as u64, meta.dim, &body));
+    let n = bytes.len();
+    std::fs::write(sparse_delta_path(dir, meta.seq, rank, meta.world), bytes)?;
+    Ok(n)
+}
+
+/// Read delta `seq`'s metadata.
+pub fn load_delta_meta(dir: &Path, seq: u64) -> Result<DeltaMeta> {
+    let path = delta_dir(dir, seq).join("meta.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no delta meta at {}", path.display()))?;
+    let j = Json::parse(&text).context("parse delta meta")?;
+    Ok(DeltaMeta {
+        seq: j.expect_usize("seq")? as u64,
+        world: j.expect_usize("world")?,
+        step: j.expect_usize("step")? as u64,
+        base_step: j.expect_usize("base_step")? as u64,
+        model: j.expect_str("model")?.to_string(),
+        dim: j.expect_usize("dim")?,
+        param_count: j.expect_usize("param_count")?,
+    })
+}
+
+/// Read one rank's shard of delta `seq`: `(upserted rows, removed ids)`.
+pub fn load_delta_shard(
+    dir: &Path,
+    meta: &DeltaMeta,
+    rank: usize,
+) -> Result<(Vec<SparseRow>, Vec<GlobalId>)> {
+    let path = sparse_delta_path(dir, meta.seq, rank, meta.world);
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+    if bytes.len() < 8 {
+        bail!("delta shard truncated header");
+    }
+    let n_removed = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    let rows_off = 8 + n_removed * 8;
+    if bytes.len() < rows_off + 16 {
+        bail!("delta shard truncated removed-ids block");
+    }
+    let removed: Vec<GlobalId> = bytes[8..rows_off]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let rows = parse_sparse_file(&bytes[rows_off..])?;
+    Ok((rows, removed))
+}
+
+/// Sync sequence numbers present under `dir`, ascending.
+pub fn list_delta_seqs(dir: &Path) -> Result<Vec<u64>> {
+    let mut seqs = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("read sync dir {}", dir.display()))?
+    {
+        let name = entry?.file_name();
+        if let Some(tail) = name.to_string_lossy().strip_prefix("delta_") {
+            if let Ok(seq) = tail.parse::<u64>() {
+                seqs.push(seq);
+            }
+        }
+    }
+    seqs.sort_unstable();
+    Ok(seqs)
+}
+
+/// Materialize the rows for `ids` (with Adam state) from a concurrent
+/// shard — the delta's upsert payload. Ids whose rows vanished between
+/// tracking and snapshot (cannot happen under the trainer's quiescent
+/// sync point, but cheap to guard) are skipped.
+pub fn collect_rows(
+    table: &ConcurrentDynamicTable,
+    opt: &SparseAdam,
+    ids: &[GlobalId],
+) -> Vec<SparseRow> {
+    let d = table.dim();
+    let mut out = Vec::with_capacity(ids.len());
+    for &id in ids {
+        let Some(row) = table.row(id) else { continue };
+        let (m, v, t) = match opt.row_state(id) {
+            Some(st) => (st.m.clone(), st.v.clone(), st.t),
+            None => (vec![0.0; d], vec![0.0; d], 0),
+        };
+        out.push(SparseRow { id, row, m, v, t });
+    }
+    out
+}
+
+/// Every live row of a concurrent shard (with Adam state), sorted by id
+/// — the full-state witness used to verify reconstruction and to write
+/// full checkpoints from concurrent tables.
+pub fn snapshot_rows(table: &ConcurrentDynamicTable, opt: &SparseAdam) -> Vec<SparseRow> {
+    let mut ids = table.live_ids();
+    ids.sort_unstable();
+    collect_rows(table, opt, &ids)
+}
+
+/// Full checkpoint of a concurrent shard, byte-compatible with
+/// [`super::load_meta`] / [`super::load_dense`] /
+/// [`super::load_sparse_shard`]. Rows are written sorted by id, so the
+/// file bytes are identical for every `--threads` value.
+pub fn save_full(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    rank: usize,
+    dense: Option<(&[f32], &DenseAdam)>,
+    table: &ConcurrentDynamicTable,
+    opt: &SparseAdam,
+) -> Result<()> {
+    anyhow::ensure!(table.dim() == meta.dim, "table dim != meta dim");
+    std::fs::create_dir_all(dir)?;
+    if rank == 0 {
+        let (params, adam) =
+            dense.context("rank 0 must provide the dense params + optimizer")?;
+        anyhow::ensure!(params.len() == meta.param_count, "params arity");
+        let mut j = Json::obj();
+        j.set("world", meta.world.into());
+        j.set("step", (meta.step as usize).into());
+        j.set("model", meta.model.as_str().into());
+        j.set("dim", meta.dim.into());
+        j.set("param_count", meta.param_count.into());
+        std::fs::write(dir.join("meta.json"), j.pretty())?;
+        write_dense_bin(dir, params, adam)?;
+    }
+    let rows = snapshot_rows(table, opt);
+    let mut body = Vec::new();
+    for r in &rows {
+        push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+    }
+    std::fs::write(
+        dir.join(format!("sparse_rank{rank:05}_of{}.bin", meta.world)),
+        rows_block_bytes(rows.len() as u64, meta.dim, &body),
+    )?;
+    Ok(())
+}
+
+/// Install full-checkpoint rows into a concurrent shard (serving-side
+/// base install). Row bits are copied verbatim ([`ConcurrentDynamicTable::set_row`]),
+/// so the target's init seed is irrelevant.
+pub fn install_rows_concurrent(
+    rows: Vec<SparseRow>,
+    table: &ConcurrentDynamicTable,
+    opt: &mut SparseAdam,
+) {
+    let mut scratch = Vec::new();
+    for r in rows {
+        table.set_row_scratch(r.id, &r.row, &mut scratch);
+        if r.t > 0 {
+            opt.restore_row(
+                r.id,
+                RowState {
+                    m: r.m,
+                    v: r.v,
+                    t: r.t,
+                },
+            );
+        } else {
+            opt.drop_row(r.id);
+        }
+    }
+}
+
+/// Apply one delta on top of the current state: removals first (retired
+/// rows and their optimizer state disappear), then upserts (exact row +
+/// Adam bits). Deltas must be applied in ascending `seq` order.
+pub fn apply_delta(
+    table: &ConcurrentDynamicTable,
+    opt: &mut SparseAdam,
+    rows: Vec<SparseRow>,
+    removed: &[GlobalId],
+) {
+    for &id in removed {
+        table.remove(id);
+        opt.drop_row(id);
+    }
+    install_rows_concurrent(rows, table, opt);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::dynamic_table::DynamicTableConfig;
+    use crate::optim::adam::AdamParams;
+
+    const DIM: usize = 3;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mtgr_delta_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn table(seed: u64) -> ConcurrentDynamicTable {
+        ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(DIM).with_capacity(128).with_seed(seed),
+            4,
+        )
+    }
+
+    fn meta(seq: u64, step: u64) -> DeltaMeta {
+        DeltaMeta {
+            seq,
+            world: 1,
+            step,
+            base_step: step.saturating_sub(5),
+            model: "tiny".into(),
+            dim: DIM,
+            param_count: 2,
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_preserves_rows_and_removals() {
+        let dir = tmp("rt");
+        let t = table(1);
+        let mut o = SparseAdam::new(DIM, AdamParams::default());
+        let mut buf = vec![0.0f32; DIM];
+        for id in 0..20u64 {
+            t.lookup_or_insert(id, &mut buf);
+        }
+        let ids: Vec<u64> = (0..20).collect();
+        let grads = vec![0.5f32; 20 * DIM];
+        o.step_concurrent(
+            &crate::util::pool::WorkerPool::new(1),
+            &t,
+            &ids,
+            &grads,
+            1.0,
+        );
+        let upserts = collect_rows(&t, &o, &ids);
+        let removed = vec![100u64, 200];
+        let m = meta(1, 5);
+        let params = [0.25f32, -1.0];
+        let dopt = DenseAdam::new(2, AdamParams::default());
+        let bytes =
+            save_delta(&dir, &m, 0, Some((&params[..], &dopt)), &upserts, &removed).unwrap();
+        assert!(bytes > 16 + removed.len() * 8);
+
+        let m2 = load_delta_meta(&dir, 1).unwrap();
+        assert_eq!(m2, m);
+        let (rows, rem) = load_delta_shard(&dir, &m2, 0).unwrap();
+        assert_eq!(rem, removed);
+        assert_eq!(rows, upserts, "rows roundtrip bit-exactly");
+        assert!(rows.iter().all(|r| r.t == 1), "Adam state rides along");
+        assert_eq!(list_delta_seqs(&dir).unwrap(), vec![1]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn base_plus_delta_reconstructs_exactly() {
+        let dir = tmp("recon");
+        // "Training" shard with churn across two intervals.
+        let train = table(7);
+        let mut train_opt = SparseAdam::new(DIM, AdamParams::default());
+        let mut buf = vec![0.0f32; DIM];
+        let pool = crate::util::pool::WorkerPool::new(1);
+
+        // Interval 1: ids 0..30 inserted + updated → full base snapshot.
+        for id in 0..30u64 {
+            train.lookup_or_insert(id, &mut buf);
+        }
+        let ids1: Vec<u64> = (0..30).collect();
+        let g1 = vec![0.1f32; 30 * DIM];
+        train_opt.step_concurrent(&pool, &train, &ids1, &g1, 1.0);
+        let base = snapshot_rows(&train, &train_opt);
+
+        // Interval 2: update some, insert some, remove some.
+        let ids2: Vec<u64> = (10..40).collect();
+        for &id in &ids2 {
+            train.lookup_or_insert(id, &mut buf);
+        }
+        let g2 = vec![-0.2f32; 30 * DIM];
+        train_opt.step_concurrent(&pool, &train, &ids2, &g2, 0.5);
+        for id in 0..5u64 {
+            train.remove(id);
+            train_opt.drop_row(id);
+        }
+        let m = meta(1, 10);
+        let upserts = collect_rows(&train, &train_opt, &ids2);
+        let removed: Vec<u64> = (0..5).collect();
+        let params = [1.0f32, 2.0];
+        let dopt = DenseAdam::new(2, AdamParams::default());
+        save_delta(&dir, &m, 0, Some((&params[..], &dopt)), &upserts, &removed).unwrap();
+
+        // Serving side: install base (different seed!), apply the delta.
+        let serve = table(99);
+        let mut serve_opt = SparseAdam::new(DIM, AdamParams::default());
+        install_rows_concurrent(base, &serve, &mut serve_opt);
+        let dm = load_delta_meta(&dir, 1).unwrap();
+        let (rows, rem) = load_delta_shard(&dir, &dm, 0).unwrap();
+        apply_delta(&serve, &mut serve_opt, rows, &rem);
+
+        assert_eq!(
+            snapshot_rows(&serve, &serve_opt),
+            snapshot_rows(&train, &train_opt),
+            "base + delta must reconstruct rows AND Adam state exactly"
+        );
+        assert_eq!(serve.content_checksum(), train.content_checksum());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_full_is_readable_by_the_standard_loader() {
+        let dir = tmp("full");
+        let t = table(3);
+        let mut o = SparseAdam::new(DIM, AdamParams::default());
+        let mut buf = vec![0.0f32; DIM];
+        for id in 0..15u64 {
+            t.lookup_or_insert(id, &mut buf);
+        }
+        let g = vec![0.3f32; 15 * DIM];
+        o.step_concurrent(
+            &crate::util::pool::WorkerPool::new(1),
+            &t,
+            &(0..15).collect::<Vec<_>>(),
+            &g,
+            1.0,
+        );
+        let cm = CheckpointMeta {
+            world: 1,
+            step: 9,
+            model: "tiny".into(),
+            dim: DIM,
+            param_count: 2,
+        };
+        let params = [0.5f32, 0.25];
+        let dopt = DenseAdam::new(2, AdamParams::default());
+        save_full(&dir, &cm, 0, Some((&params[..], &dopt)), &t, &o).unwrap();
+
+        let m2 = super::super::load_meta(&dir).unwrap();
+        assert_eq!(m2.step, 9);
+        let (p, _) = super::super::load_dense(&dir, 2).unwrap();
+        assert_eq!(p, params);
+        let rows = super::super::load_sparse_shard(&dir, &m2, 1, 0).unwrap();
+        assert_eq!(rows.len(), 15);
+        assert_eq!(rows, snapshot_rows(&t, &o), "sorted full snapshot");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_delta_errors() {
+        let dir = tmp("bad");
+        let ddir = delta_dir(&dir, 2);
+        std::fs::create_dir_all(&ddir).unwrap();
+        std::fs::write(sparse_delta_path(&dir, 2, 0, 1), [0u8; 4]).unwrap();
+        let m = meta(2, 1);
+        assert!(load_delta_shard(&dir, &m, 0).is_err());
+        assert!(load_delta_meta(&dir, 2).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -23,6 +23,8 @@
 //! keeps the ids it now owns — no device ever scans the whole
 //! checkpoint (the flaw the paper calls out in prior systems).
 
+pub mod delta;
+
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -98,6 +100,9 @@ pub fn save(
     anyhow::ensure!(d == meta.dim, "table dim != meta dim");
 
     if rank == 0 {
+        let (params, adam) =
+            dense.context("rank 0 must provide the dense params + optimizer")?;
+        anyhow::ensure!(params.len() == meta.param_count, "params arity");
         let mut j = Json::obj();
         j.set("world", meta.world.into());
         j.set("step", (meta.step as usize).into());
@@ -105,20 +110,11 @@ pub fn save(
         j.set("dim", meta.dim.into());
         j.set("param_count", meta.param_count.into());
         std::fs::write(meta_path(dir), j.pretty())?;
-        let (params, adam) =
-            dense.context("rank 0 must provide the dense params + optimizer")?;
-        anyhow::ensure!(params.len() == meta.param_count, "params arity");
-        let mut bytes = Vec::with_capacity(params.len() * 4);
-        for p in params {
-            bytes.extend_from_slice(&p.to_le_bytes());
-        }
-        bytes.extend_from_slice(&adam.state_bytes());
-        std::fs::write(dir.join("dense.bin"), bytes)?;
+        write_dense_bin(dir, params, adam)?;
     }
 
     // Sparse shard: every live row this rank owns, with optimizer state
     // (zeros when the row was never updated).
-    let mut bytes = Vec::new();
     let zero = RowState {
         m: vec![0.0; d],
         v: vec![0.0; d],
@@ -128,17 +124,51 @@ pub fn save(
     let mut body = Vec::new();
     for (id, row) in table.iter_rows() {
         let st = opt.row_state(id).unwrap_or(&zero);
-        body.extend_from_slice(&id.to_le_bytes());
-        for x in row.iter().chain(st.m.iter()).chain(st.v.iter()) {
-            body.extend_from_slice(&x.to_le_bytes());
-        }
-        body.extend_from_slice(&st.t.to_le_bytes());
+        push_row_bytes(&mut body, id, row, &st.m, &st.v, st.t);
         count += 1;
     }
+    std::fs::write(
+        sparse_path(dir, rank, meta.world),
+        rows_block_bytes(count, d, &body),
+    )?;
+    Ok(())
+}
+
+/// Serialize one sparse row (id | row | m | v | t, all little-endian)
+/// onto `body` — the wire format shared by full checkpoints and delta
+/// snapshots.
+pub(crate) fn push_row_bytes(
+    body: &mut Vec<u8>,
+    id: GlobalId,
+    row: &[f32],
+    m: &[f32],
+    v: &[f32],
+    t: u64,
+) {
+    body.extend_from_slice(&id.to_le_bytes());
+    for x in row.iter().chain(m.iter()).chain(v.iter()) {
+        body.extend_from_slice(&x.to_le_bytes());
+    }
+    body.extend_from_slice(&t.to_le_bytes());
+}
+
+/// Frame a serialized row body with its `count | dim` header.
+pub(crate) fn rows_block_bytes(count: u64, d: usize, body: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(16 + body.len());
     bytes.extend_from_slice(&count.to_le_bytes());
     bytes.extend_from_slice(&(d as u64).to_le_bytes());
-    bytes.extend_from_slice(&body);
-    std::fs::write(sparse_path(dir, rank, meta.world), bytes)?;
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+/// Write `dense.bin` (replicated params + DenseAdam state).
+pub(crate) fn write_dense_bin(dir: &Path, params: &[f32], adam: &DenseAdam) -> Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    bytes.extend_from_slice(&adam.state_bytes());
+    std::fs::write(dir.join("dense.bin"), bytes)?;
     Ok(())
 }
 
@@ -170,7 +200,7 @@ pub fn load_dense(dir: &Path, param_count: usize) -> Result<(Vec<f32>, Vec<u8>)>
     Ok((params, bytes[p_bytes..].to_vec()))
 }
 
-fn parse_sparse_file(bytes: &[u8]) -> Result<Vec<SparseRow>> {
+pub(crate) fn parse_sparse_file(bytes: &[u8]) -> Result<Vec<SparseRow>> {
     if bytes.len() < 16 {
         bail!("sparse shard truncated header");
     }

@@ -129,6 +129,20 @@ impl NetModel {
         };
         hops * (lat + bytes as f64 / bw)
     }
+
+    /// Time for one rank to push a `bytes`-sized delta snapshot to the
+    /// serving fleet (online training → serving sync). Serving lives
+    /// off-cluster behind the inter-node fabric, and its ingest link is
+    /// shared by all `world` ranks pushing their shards concurrently,
+    /// so the effective per-rank bandwidth is `inter_bw / world`. Zero
+    /// bytes means "nothing changed this interval": no push, no
+    /// latency.
+    pub fn delta_sync_time(&self, world: usize, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.inter_lat + bytes as f64 * world.max(1) as f64 / self.inter_bw
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +200,17 @@ mod tests {
         assert!(t128 > t8);
         // Bandwidth term: 2·(7/8)·0.1GB / 600GB/s ≈ 0.29 ms (+latency).
         assert!(t8 > 0.00029 && t8 < 0.00035, "t8={t8}");
+    }
+
+    #[test]
+    fn delta_sync_scales_with_bytes_and_world() {
+        let m = NetModel::default();
+        assert_eq!(m.delta_sync_time(8, 0), 0.0, "empty delta costs nothing");
+        let t1 = m.delta_sync_time(8, 100_000_000);
+        let t2 = m.delta_sync_time(8, 200_000_000);
+        assert!(t2 > t1, "more bytes, more time");
+        let wide = m.delta_sync_time(64, 100_000_000);
+        assert!(wide > t1, "shared ingest link contended by more ranks");
     }
 
     #[test]

@@ -131,15 +131,7 @@ impl ConcurrentDynamicTable {
     pub fn stats(&self) -> TableStats {
         let mut total = TableStats::default();
         for s in &self.stripes {
-            let st = s.read().unwrap().stats;
-            total.inserts += st.inserts;
-            total.hits += st.hits;
-            total.misses += st.misses;
-            total.probes += st.probes;
-            total.expansions += st.expansions;
-            total.expansion_bytes_moved += st.expansion_bytes_moved;
-            total.expansion_bytes_avoided += st.expansion_bytes_avoided;
-            total.evictions += st.evictions;
+            total.merge(&s.read().unwrap().stats);
         }
         total
     }
@@ -155,6 +147,48 @@ impl ConcurrentDynamicTable {
     pub fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
         let s = self.stripe_of(id);
         self.stripes[s].read().unwrap().lookup(id, out)
+    }
+
+    /// Whether `id` has a live row (read lock; no metadata bump).
+    pub fn contains(&self, id: GlobalId) -> bool {
+        let s = self.stripe_of(id);
+        self.stripes[s].read().unwrap().contains(id)
+    }
+
+    /// Whether a row budget (auto-eviction) is configured. Budgeted
+    /// tables evict victims *inside* `lookup_or_insert`, invisibly to
+    /// wrappers — the online delta tracker refuses them (it could not
+    /// record the removals).
+    pub fn has_row_budget(&self) -> bool {
+        self.stripes[0].read().unwrap().config().max_rows.is_some()
+    }
+
+    /// Insert-or-overwrite a row with exact bits (checkpoint/delta
+    /// install): the row is materialized if absent, then its value is
+    /// copied from `row` verbatim, so the stored bits never depend on
+    /// the table's init seed.
+    pub fn set_row(&self, id: GlobalId, row: &[f32]) {
+        let mut scratch = Vec::new();
+        self.set_row_scratch(id, row, &mut scratch);
+    }
+
+    /// [`set_row`](Self::set_row) with a caller-owned scratch buffer,
+    /// hoisting the per-call allocation out of bulk install loops
+    /// (serving-side base/delta installs touch every row).
+    pub fn set_row_scratch(&self, id: GlobalId, row: &[f32], scratch: &mut Vec<f32>) {
+        assert_eq!(row.len(), self.dim);
+        let s = self.stripe_of(id);
+        let mut t = self.stripes[s].write().unwrap();
+        if let Some(slot) = t.row_mut(id) {
+            slot.copy_from_slice(row);
+            return;
+        }
+        scratch.clear();
+        scratch.resize(self.dim, 0.0);
+        t.lookup_or_insert(id, scratch);
+        t.row_mut(id)
+            .expect("row just inserted")
+            .copy_from_slice(row);
     }
 
     /// Additive row update (optimizer delta).
@@ -275,6 +309,67 @@ impl ConcurrentDynamicTable {
                     for &i in idxs {
                         // SAFETY: as above — one bucket per occurrence.
                         let row = unsafe { window.slice_mut(i as usize * d, d) };
+                        t.lookup(ids[i as usize], row);
+                    }
+                }
+            }
+        });
+    }
+
+    /// [`fetch_rows_shared`](Self::fetch_rows_shared) with a per-id
+    /// admission mask: `admit[i] == true` serves occurrence `i` with
+    /// insert-on-miss semantics, `false` with read-only semantics (an
+    /// absent rejected id yields the default all-zero row and never
+    /// allocates). Used by the online feature-admission gate; the same
+    /// stripe-bucketed fan-out and per-stripe occurrence order as the
+    /// unmasked path, so results are bit-identical for every pool size.
+    pub fn fetch_rows_masked(
+        &self,
+        ids: &[GlobalId],
+        admit: &[bool],
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        let d = self.dim;
+        assert_eq!(out.len(), ids.len() * d);
+        assert_eq!(admit.len(), ids.len());
+        if ids.is_empty() {
+            return;
+        }
+        let parallel =
+            matches!(pool, Some(p) if p.threads() > 1) && ids.len() >= par_fetch_threshold();
+        if !parallel {
+            for (i, (row, &id)) in out.chunks_exact_mut(d).zip(ids).enumerate() {
+                if admit[i] {
+                    self.lookup_or_insert(id, row);
+                } else {
+                    self.lookup(id, row);
+                }
+            }
+            return;
+        }
+        let ns = self.stripes.len();
+        let mut by_stripe: Vec<Vec<u32>> = vec![Vec::new(); ns];
+        for (i, &id) in ids.iter().enumerate() {
+            by_stripe[self.stripe_of(id)].push(i as u32);
+        }
+        let window = SharedSliceMut::new(out);
+        pool.unwrap().parallel_for(ns, |stripes| {
+            for s in stripes {
+                let idxs = &by_stripe[s];
+                if idxs.is_empty() {
+                    continue;
+                }
+                // Write lock regardless: admitted occurrences may
+                // insert; rejected ones just read under the same lock.
+                let mut t = self.stripes[s].write().unwrap();
+                for &i in idxs {
+                    // SAFETY: every occurrence index lands in exactly
+                    // one stripe bucket, so row windows are disjoint.
+                    let row = unsafe { window.slice_mut(i as usize * d, d) };
+                    if admit[i as usize] {
+                        t.lookup_or_insert(ids[i as usize], row);
+                    } else {
                         t.lookup(ids[i as usize], row);
                     }
                 }

@@ -180,6 +180,21 @@ pub struct TableStats {
     pub evictions: u64,
 }
 
+impl TableStats {
+    /// Fold another stats snapshot into this one (stripe / shard
+    /// aggregation).
+    pub fn merge(&mut self, other: &TableStats) {
+        self.inserts += other.inserts;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.probes += other.probes;
+        self.expansions += other.expansions;
+        self.expansion_bytes_moved += other.expansion_bytes_moved;
+        self.expansion_bytes_avoided += other.expansion_bytes_avoided;
+        self.evictions += other.evictions;
+    }
+}
+
 /// The dynamic hash embedding table.
 pub struct DynamicEmbeddingTable {
     cfg: DynamicTableConfig,
@@ -438,6 +453,11 @@ impl DynamicEmbeddingTable {
         self.remove(key);
         self.stats.evictions += 1;
         Some(key)
+    }
+
+    /// Whether `id` currently has a live row (no metadata bump).
+    pub fn contains(&self, id: GlobalId) -> bool {
+        self.find(id).is_some()
     }
 
     /// Immutable access to a row's slice, if present.

@@ -59,6 +59,20 @@
 //!   `MTGR_DEDUP_SORT_THRESHOLD` / `MTGR_PAR_ROWS_THRESHOLD` /
 //!   `MTGR_PAR_FETCH_THRESHOLD`, calibrated per machine by
 //!   `bench_parallel_lookup --calibrate`.
+//! - [`online`] — the online-learning subsystem (`--mode online`): an
+//!   endless day-advancing stream ([`online::stream`]), count-min
+//!   feature admission with a deterministic seeded lottery
+//!   ([`online::admission`] — rare one-shot IDs never allocate rows),
+//!   the [`online::OnlineTable`] gate layering per-row touch stamps
+//!   (TTL input) and [`online::delta::DeltaTracker`] change tracking
+//!   over the concurrent shard, a TTL sweeper retiring stale rows, and
+//!   incremental delta snapshots ([`checkpoint::delta`]) emitted every
+//!   `--sync-interval` steps that a serving replica applies on top of a
+//!   base snapshot to reconstruct the exact training state row for row.
+//!   Admission decisions are pure functions of `(seed, id, count)` and
+//!   every sweep/drain runs in sorted id order, so online runs are
+//!   bit-identical across `--threads` — including the emitted delta
+//!   bytes.
 //! - [`util::pool`] — the deterministic work-stealing-free worker pool
 //!   (`parallel_for` / `parallel_map` over stable index chunks), with
 //!   fair-share views for concurrent callers of one global pool.
@@ -74,6 +88,7 @@ pub mod checkpoint;
 pub mod collective;
 pub mod config;
 pub mod data;
+pub mod online;
 pub mod optim;
 pub mod metrics;
 pub mod runtime;

@@ -4,12 +4,23 @@
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
 //!                 [--cross-step on|off] [--threads N] [--lr 0.001]
+//! mtgrboost train --mode online --sync-interval 50 [--intervals N]
+//!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
+//!                 [--sync-dir DIR] [--day-every N] ...
 //! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
 //!                 [--no-balancing] [--dedup ...] [--overlap on|off]
 //!                 [--cross-step on|off] [--backend hash|mch]
 //! mtgrboost data  --out /tmp/shards --sequences 1000 --shards 4
 //! mtgrboost info  [--artifacts artifacts]
 //! ```
+//!
+//! `--mode online` turns the trainer into a continuously running online
+//! learner: an endless day-advancing stream, feature admission in front
+//! of sparse insertion, TTL expiry of stale rows, and an incremental
+//! delta snapshot to `--sync-dir` every `--sync-interval` steps.
+//! Contradictory combinations (`--steps` with online mode, zero
+//! `--sync-interval`, TTL below the sync interval, online-only knobs in
+//! offline mode) are rejected up front.
 
 use anyhow::{bail, Context, Result};
 
@@ -18,6 +29,7 @@ use mtgrboost::data::generator::{GeneratorConfig, WorkloadGenerator};
 use mtgrboost::data::schema::Schema;
 use mtgrboost::data::shards::write_sharded_dataset;
 use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::runtime::Engine;
 use mtgrboost::sim::{simulate, SimOptions, TableBackend};
 use mtgrboost::train::{Trainer, TrainerOptions};
@@ -39,6 +51,73 @@ fn parse_dedup(s: &str) -> Result<DedupStrategy> {
         "two-stage" | "twostage" => DedupStrategy::TwoStage,
         other => bail!("unknown dedup strategy `{other}`"),
     })
+}
+
+/// Parse and validate `--mode` plus the online-only knobs, rejecting
+/// contradictory flag combinations up front with actionable errors.
+fn parse_online_mode(args: &Args) -> Result<Option<OnlineOptions>> {
+    const ONLINE_ONLY: &[&str] = &[
+        "intervals",
+        "sync-interval",
+        "feature-ttl",
+        "admit-threshold",
+        "admit-prob",
+        "sync-dir",
+        "day-every",
+    ];
+    match args.get_or("mode", "offline").as_str() {
+        "offline" => {
+            for key in ONLINE_ONLY {
+                if args.get(key).is_some() {
+                    bail!("--{key} requires --mode online");
+                }
+            }
+            Ok(None)
+        }
+        "online" => {
+            if args.get("steps").is_some() {
+                bail!(
+                    "--mode online runs are bounded by --intervals × --sync-interval \
+                     (--intervals 0 = run until interrupted); --steps only applies \
+                     to --mode offline"
+                );
+            }
+            let mut o = OnlineOptions::new(args.get_usize("sync-interval", 50));
+            o.intervals = args.get_usize("intervals", 0);
+            o.feature_ttl = args.get_u64("feature-ttl", 0);
+            o.day_every = args.get_usize("day-every", 8);
+            // Admission: distinguish "flag omitted" from explicit values
+            // so `--admit-threshold 0` cannot silently mean something
+            // else, and an out-of-range probability errors instead of
+            // disabling the filter.
+            let threshold_given = args.get("admit-threshold").is_some();
+            let threshold = args.get_usize("admit-threshold", 0);
+            let prob = args.get_f64("admit-prob", 0.0);
+            if args.get("admit-prob").is_some() && !(0.0..=1.0).contains(&prob) {
+                bail!("--admit-prob must be in [0, 1], got {prob}");
+            }
+            if threshold_given && threshold == 0 {
+                bail!(
+                    "--admit-threshold 0 is ambiguous: omit the flag to disable \
+                     admission, or use 1 to admit on first sight"
+                );
+            }
+            o.admission = if threshold_given {
+                Some(AdmissionConfig::new(threshold as u32, prob))
+            } else if prob > 0.0 {
+                // Lottery-only filtering: never admit by count alone.
+                Some(AdmissionConfig::new(u32::MAX, prob))
+            } else {
+                None
+            };
+            o.sync_dir = args.get("sync-dir").map(std::path::PathBuf::from);
+            // Trainer::new re-validates; failing here keeps the error at
+            // the flag-parsing layer where the wording can name flags.
+            o.validate()?;
+            Ok(Some(o))
+        }
+        other => bail!("--mode expects offline|online, got `{other}`"),
+    }
 }
 
 fn main() -> Result<()> {
@@ -89,9 +168,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.generator.len_mu = args.get_f64("len-mu", 3.8);
     opts.generator.max_len = args.get_usize("max-len", 256);
     opts.log_every = args.get_usize("log-every", 10);
-    opts.gauc_warmup = args.get_usize("gauc-warmup", steps / 4);
+    opts.online = parse_online_mode(args)?;
+    let default_warmup = match &opts.online {
+        Some(o) => o.sync_interval,
+        None => steps / 4,
+    };
+    opts.gauc_warmup = args.get_usize("gauc-warmup", default_warmup);
 
     let overlap = opts.overlap;
+    let online = opts.online.is_some();
     let prefetch_depth = opts.prefetch_depth;
     let report = Trainer::new(opts, engine)?.run()?;
     let (lc, lv) = report.final_losses();
@@ -141,6 +226,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.table_rows,
         report.table_memory_bytes as f64 / 1e6
     );
+    println!(
+        "table evict/expand   : {} / {} (inserts {})",
+        report.table_stats.evictions, report.table_stats.expansions, report.table_stats.inserts
+    );
+    if online {
+        println!(
+            "online admit/reject  : {} / {}",
+            report.online_admitted, report.online_rejected
+        );
+        println!(
+            "online expired/sync  : {} rows expired, {} rows synced ({:.2} MB of deltas)",
+            report.online_expired,
+            report.online_synced_rows,
+            report.online_sync_bytes as f64 / 1e6
+        );
+    }
     println!(
         "dedup                : ids {} -> {}, lookups {} -> {}",
         report.dedup_volume.ids_raw,
@@ -216,6 +317,91 @@ fn cmd_data(args: &Args) -> Result<()> {
         out
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_of(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string()), &[])
+    }
+
+    #[test]
+    fn offline_mode_rejects_online_only_flags() {
+        let a = args_of(&["train", "--sync-interval", "10"]);
+        let err = parse_online_mode(&a).unwrap_err().to_string();
+        assert!(err.contains("--sync-interval requires --mode online"), "{err}");
+        let a = args_of(&["train", "--mode", "offline", "--feature-ttl", "5"]);
+        assert!(parse_online_mode(&a).is_err());
+        let a = args_of(&["train", "--steps", "10"]);
+        assert!(parse_online_mode(&a).unwrap().is_none());
+    }
+
+    #[test]
+    fn online_mode_rejects_steps_and_bad_intervals() {
+        let a = args_of(&["train", "--mode", "online", "--steps", "10"]);
+        let err = parse_online_mode(&a).unwrap_err().to_string();
+        assert!(err.contains("--steps"), "{err}");
+
+        let a = args_of(&["train", "--mode", "online", "--sync-interval", "0"]);
+        assert!(parse_online_mode(&a).is_err(), "zero sync interval");
+
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "20", "--feature-ttl", "5",
+        ]);
+        let err = parse_online_mode(&a).unwrap_err().to_string();
+        assert!(err.contains("--feature-ttl"), "{err}");
+
+        let a = args_of(&["train", "--mode", "bogus"]);
+        assert!(parse_online_mode(&a).is_err());
+    }
+
+    #[test]
+    fn online_mode_parses_admission_variants() {
+        let a = args_of(&["train", "--mode", "online", "--sync-interval", "10"]);
+        let o = parse_online_mode(&a).unwrap().unwrap();
+        assert!(o.admission.is_none(), "no knobs → admission off");
+        assert_eq!(o.total_steps(), None, "endless by default");
+
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "10", "--intervals", "3",
+            "--admit-threshold", "2", "--admit-prob", "0.1", "--feature-ttl", "20",
+        ]);
+        let o = parse_online_mode(&a).unwrap().unwrap();
+        assert_eq!(o.total_steps(), Some(30));
+        let adm = o.admission.unwrap();
+        assert_eq!(adm.threshold, 2);
+        assert!((adm.admit_prob - 0.1).abs() < 1e-12);
+
+        // Lottery-only filtering: threshold omitted, prob set.
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "10", "--admit-prob", "0.2",
+        ]);
+        let o = parse_online_mode(&a).unwrap().unwrap();
+        assert_eq!(o.admission.unwrap().threshold, u32::MAX);
+    }
+
+    #[test]
+    fn online_mode_rejects_ambiguous_admission_flags() {
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "10",
+            "--admit-threshold", "0", "--admit-prob", "0.9",
+        ]);
+        let err = parse_online_mode(&a).unwrap_err().to_string();
+        assert!(err.contains("--admit-threshold 0"), "{err}");
+
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "10", "--admit-prob", "-0.5",
+        ]);
+        let err = parse_online_mode(&a).unwrap_err().to_string();
+        assert!(err.contains("--admit-prob"), "{err}");
+
+        let a = args_of(&[
+            "train", "--mode", "online", "--sync-interval", "10", "--admit-prob", "1.5",
+        ]);
+        assert!(parse_online_mode(&a).is_err());
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

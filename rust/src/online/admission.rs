@@ -1,0 +1,239 @@
+//! Feature admission for streaming training (Monolith-style
+//! probabilistic/frequency filtering).
+//!
+//! Production ID streams are dominated by a long tail of IDs that occur
+//! once or twice and never again; allocating an embedding row (plus
+//! Adam state) for each would blow the memory budget without moving the
+//! loss. [`FeatureAdmission`] keeps a seeded **count-min sketch** of
+//! how often each not-yet-admitted ID has been requested and admits a
+//! row only when
+//!
+//! 1. the estimated count reaches `threshold` (frequency filtering), or
+//! 2. a deterministic per-(seed, id, count) lottery fires with
+//!    probability `admit_prob` (probabilistic filtering — lets a sample
+//!    of the tail through so brand-new hot IDs are not starved for
+//!    `threshold` steps).
+//!
+//! **Determinism contract**: [`FeatureAdmission::decide`] is a pure
+//! function of `(seed, id, count)`, and the sketch state is a pure
+//! function of the observation sequence. The trainer only observes IDs
+//! from a serial pre-pass in server-side occurrence order, so admission
+//! decisions — and therefore the entire online run — are bit-identical
+//! across `--threads` values.
+
+use crate::embedding::hash::hash_id;
+use crate::embedding::GlobalId;
+
+/// Salt mixed into the probabilistic-admission lottery hash.
+const LOTTERY_SEED: u64 = 0xAD317_10;
+
+/// Configuration for [`FeatureAdmission`].
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Estimated occurrence count at which an ID is admitted
+    /// unconditionally. `1` admits on first sight (filtering
+    /// effectively off).
+    pub threshold: u32,
+    /// Probability (per observation) that a below-threshold ID is
+    /// admitted anyway; `0.0` disables the lottery.
+    pub admit_prob: f64,
+    /// Counters per sketch row.
+    pub sketch_width: usize,
+    /// Independent sketch rows (the count-min estimate is their min).
+    pub sketch_depth: usize,
+    /// Seed for both the sketch hashes and the admission lottery.
+    pub seed: u64,
+}
+
+impl AdmissionConfig {
+    pub fn new(threshold: u32, admit_prob: f64) -> Self {
+        AdmissionConfig {
+            threshold,
+            admit_prob,
+            sketch_width: 1 << 14,
+            sketch_depth: 4,
+            seed: 0xAD317,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.threshold >= 1, "--admit-threshold must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.admit_prob),
+            "--admit-prob must be in [0, 1], got {}",
+            self.admit_prob
+        );
+        anyhow::ensure!(self.sketch_width >= 1, "sketch width must be >= 1");
+        anyhow::ensure!(
+            (1..=8).contains(&self.sketch_depth),
+            "sketch depth must be in 1..=8"
+        );
+        Ok(())
+    }
+}
+
+/// Count-min-sketch frequency filter with a deterministic admission
+/// lottery. See the module docs for the policy and the determinism
+/// contract.
+#[derive(Clone, Debug)]
+pub struct FeatureAdmission {
+    cfg: AdmissionConfig,
+    /// `sketch_depth` rows of `sketch_width` counters, row-major.
+    counters: Vec<u32>,
+    /// Observations that ended in admission / rejection (cumulative).
+    admitted: u64,
+    rejected: u64,
+}
+
+impl FeatureAdmission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let cells = cfg.sketch_width * cfg.sketch_depth;
+        FeatureAdmission {
+            counters: vec![0; cells],
+            admitted: 0,
+            rejected: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// The pure admission decision for an ID whose estimated count just
+    /// reached `count`: admit at the threshold, else run the seeded
+    /// lottery. Depends on nothing but the three arguments (plus the
+    /// configured probability), so replays are exact.
+    pub fn decide(seed: u64, id: GlobalId, count: u32, threshold: u32, admit_prob: f64) -> bool {
+        if count >= threshold {
+            return true;
+        }
+        if admit_prob <= 0.0 {
+            return false;
+        }
+        // 53 uniform bits from the (seed, id, count) hash → [0, 1).
+        let h = hash_id(id, seed ^ LOTTERY_SEED ^ ((count as u64) << 32)) >> 11;
+        (h as f64) < admit_prob * (1u64 << 53) as f64
+    }
+
+    /// Record one observation of `id` and return whether it is admitted
+    /// now. Counting uses conservative-update count-min: only the
+    /// minimal cells are bumped, tightening the estimate under skew.
+    pub fn observe(&mut self, id: GlobalId) -> bool {
+        let w = self.cfg.sketch_width as u64;
+        let mut est = u32::MAX;
+        let mut cells = [0usize; 8];
+        let depth = self.cfg.sketch_depth.min(8);
+        for d in 0..depth {
+            let h = hash_id(id, self.cfg.seed ^ (d as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let idx = d * self.cfg.sketch_width + (h % w) as usize;
+            cells[d] = idx;
+            est = est.min(self.counters[idx]);
+        }
+        let count = est.saturating_add(1);
+        for &idx in cells.iter().take(depth) {
+            if self.counters[idx] < count {
+                self.counters[idx] = count;
+            }
+        }
+        let admit = Self::decide(
+            self.cfg.seed,
+            id,
+            count,
+            self.cfg.threshold,
+            self.cfg.admit_prob,
+        );
+        if admit {
+            self.admitted += 1;
+        } else {
+            self.rejected += 1;
+        }
+        admit
+    }
+
+    /// Cumulative (admitted, rejected) observation counts.
+    pub fn totals(&self) -> (u64, u64) {
+        (self.admitted, self.rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_admits_at_exact_count() {
+        let mut a = FeatureAdmission::new(AdmissionConfig::new(3, 0.0));
+        assert!(!a.observe(42), "count 1 < 3");
+        assert!(!a.observe(42), "count 2 < 3");
+        assert!(a.observe(42), "count 3 admits");
+        assert!(a.observe(42), "stays admitted");
+        assert_eq!(a.totals(), (2, 2));
+    }
+
+    #[test]
+    fn threshold_one_admits_everything() {
+        let mut a = FeatureAdmission::new(AdmissionConfig::new(1, 0.0));
+        for id in 0..100u64 {
+            assert!(a.observe(id));
+        }
+        assert_eq!(a.totals(), (100, 0));
+    }
+
+    #[test]
+    fn one_shot_ids_rejected_without_lottery() {
+        let mut a = FeatureAdmission::new(AdmissionConfig::new(2, 0.0));
+        for id in 0..1000u64 {
+            assert!(!a.observe(id), "one-shot id {id} must not allocate");
+        }
+        assert_eq!(a.totals(), (0, 1000));
+    }
+
+    #[test]
+    fn decide_is_pure_and_seed_sensitive() {
+        for id in 0..200u64 {
+            for count in 1..4u32 {
+                let a = FeatureAdmission::decide(7, id, count, 10, 0.25);
+                let b = FeatureAdmission::decide(7, id, count, 10, 0.25);
+                assert_eq!(a, b, "pure function of (seed, id, count)");
+            }
+        }
+        // Different seeds must flip at least one decision.
+        let flips = (0..500u64)
+            .filter(|&id| {
+                FeatureAdmission::decide(1, id, 1, 10, 0.3)
+                    != FeatureAdmission::decide(2, id, 1, 10, 0.3)
+            })
+            .count();
+        assert!(flips > 0, "lottery must depend on the seed");
+    }
+
+    #[test]
+    fn lottery_rate_roughly_matches_probability() {
+        let n = 20_000u64;
+        let hits = (0..n)
+            .filter(|&id| FeatureAdmission::decide(99, id, 1, u32::MAX, 0.2))
+            .count() as f64;
+        let rate = hits / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "lottery rate {rate:.3} vs 0.2");
+    }
+
+    #[test]
+    fn identical_observation_sequences_are_bit_identical() {
+        let seq: Vec<u64> = (0..5000).map(|i| (i * i + 3) % 700).collect();
+        let mut a = FeatureAdmission::new(AdmissionConfig::new(3, 0.1));
+        let mut b = FeatureAdmission::new(AdmissionConfig::new(3, 0.1));
+        let da: Vec<bool> = seq.iter().map(|&id| a.observe(id)).collect();
+        let db: Vec<bool> = seq.iter().map(|&id| b.observe(id)).collect();
+        assert_eq!(da, db);
+        assert_eq!(a.totals(), b.totals());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        assert!(AdmissionConfig::new(0, 0.0).validate().is_err());
+        assert!(AdmissionConfig::new(1, -0.1).validate().is_err());
+        assert!(AdmissionConfig::new(1, 1.5).validate().is_err());
+        assert!(AdmissionConfig::new(2, 0.5).validate().is_ok());
+    }
+}

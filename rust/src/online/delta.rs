@@ -1,0 +1,113 @@
+//! Row-level change tracking between incremental sync points.
+//!
+//! [`DeltaTracker`] records which rows of a shard were **upserted**
+//! (inserted or value-updated) and which were **removed** (TTL expiry,
+//! eviction) since the last sync. At every `--sync-interval` boundary
+//! the trainer drains it ([`DeltaTracker::take`]) into a delta snapshot
+//! ([`crate::checkpoint::delta`]); replaying base + ordered deltas
+//! reconstructs the full shard state exactly.
+//!
+//! Invariant: `upserts` and `removed` are disjoint at all times — a
+//! remove cancels a pending upsert and vice versa, so each id appears
+//! in at most one set and the *last* operation within the interval
+//! wins, exactly matching the table's end-of-interval contents.
+
+use std::collections::HashSet;
+
+use crate::embedding::GlobalId;
+
+/// Dirty/removed row sets for one sync interval.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaTracker {
+    upserts: HashSet<GlobalId>,
+    removed: HashSet<GlobalId>,
+}
+
+impl DeltaTracker {
+    pub fn new() -> Self {
+        DeltaTracker::default()
+    }
+
+    /// Record an insert or value update of `id`.
+    pub fn upsert(&mut self, id: GlobalId) {
+        self.removed.remove(&id);
+        self.upserts.insert(id);
+    }
+
+    /// Record a removal of `id` (expiry/eviction).
+    pub fn remove(&mut self, id: GlobalId) {
+        self.upserts.remove(&id);
+        self.removed.insert(id);
+    }
+
+    pub fn pending_upserts(&self) -> usize {
+        self.upserts.len()
+    }
+
+    pub fn pending_removals(&self) -> usize {
+        self.removed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.upserts.is_empty() && self.removed.is_empty()
+    }
+
+    /// Drain into `(upserted_ids, removed_ids)`, both **sorted
+    /// ascending** so the emitted delta bytes are identical no matter
+    /// what order the operations were recorded in (the cross-thread
+    /// bit-identity witness rides on this).
+    pub fn take(&mut self) -> (Vec<GlobalId>, Vec<GlobalId>) {
+        let mut ups: Vec<GlobalId> = self.upserts.drain().collect();
+        let mut rem: Vec<GlobalId> = self.removed.drain().collect();
+        ups.sort_unstable();
+        rem.sort_unstable();
+        (ups, rem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_operation_wins() {
+        let mut t = DeltaTracker::new();
+        t.upsert(5);
+        t.remove(5);
+        assert_eq!(t.take(), (vec![], vec![5]));
+
+        let mut t = DeltaTracker::new();
+        t.remove(7);
+        t.upsert(7);
+        assert_eq!(t.take(), (vec![7], vec![]));
+    }
+
+    #[test]
+    fn take_drains_and_sorts() {
+        let mut t = DeltaTracker::new();
+        for id in [9u64, 3, 7, 1] {
+            t.upsert(id);
+        }
+        t.remove(100);
+        t.remove(50);
+        assert_eq!(t.pending_upserts(), 4);
+        assert_eq!(t.pending_removals(), 2);
+        let (ups, rem) = t.take();
+        assert_eq!(ups, vec![1, 3, 7, 9]);
+        assert_eq!(rem, vec![50, 100]);
+        assert!(t.is_empty(), "take must reset the tracker");
+    }
+
+    #[test]
+    fn sets_stay_disjoint() {
+        let mut t = DeltaTracker::new();
+        t.upsert(1);
+        t.upsert(2);
+        t.remove(2);
+        t.upsert(2);
+        t.remove(1);
+        let (ups, rem) = t.take();
+        assert_eq!(ups, vec![2]);
+        assert_eq!(rem, vec![1]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Online-learning subsystem: continuous (streaming) training with
+//! feature admission, TTL expiry and incremental delta sync to serving.
+//!
+//! MTGenRec's deployment story is continuous operation — the trainer
+//! ingests an endless log stream while serving handles hundreds of
+//! millions of requests a day. This module turns the offline trainer
+//! into that shape (the Monolith recipe: probabilistic/frequency
+//! feature filtering, expiry of stale embeddings, periodic incremental
+//! parameter sync from training to serving):
+//!
+//! - [`stream`] — an unbounded, time-stamped sequence stream over the
+//!   workload generator; each generator *day* mints fresh ID space.
+//! - [`admission`] — count-min frequency filtering with a deterministic
+//!   seeded probabilistic lottery, so rare one-shot IDs never allocate
+//!   embedding rows.
+//! - [`table`] — [`table::OnlineTable`], the gate that layers
+//!   admission, per-row touch stamps (the TTL input) and
+//!   [`delta::DeltaTracker`] change tracking over the lock-striped
+//!   concurrent shard table.
+//! - [`delta`] — dirty/removed row sets per sync interval; drained into
+//!   delta snapshots by [`crate::checkpoint::delta`], which a serving
+//!   replica applies on top of a base snapshot to reconstruct the exact
+//!   training state.
+//!
+//! Everything is deterministic: admission decisions are pure functions
+//! of `(seed, id, count)`, sweeps and delta drains process ids in
+//! sorted order, and the stream replays exactly — an online run is
+//! bit-identical across `--threads` values, and base + deltas
+//! reconstruct the full state row for row.
+
+pub mod admission;
+pub mod delta;
+pub mod stream;
+pub mod table;
+
+use std::path::PathBuf;
+
+pub use admission::{AdmissionConfig, FeatureAdmission};
+pub use table::OnlineTable;
+
+/// Knobs for an online (`--mode online`) training run.
+#[derive(Clone, Debug)]
+pub struct OnlineOptions {
+    /// Steps per sync interval: every `sync_interval` steps the TTL
+    /// sweeper runs and a delta snapshot is emitted. Must be >= 1.
+    pub sync_interval: usize,
+    /// Number of sync intervals to run; `0` = run until interrupted
+    /// (the production shape). Tests and benches set a bound.
+    pub intervals: usize,
+    /// Steps a row may go untrained before the sweeper retires it;
+    /// `0` = never expire. When nonzero it must be >= `sync_interval`
+    /// (a TTL shorter than the sweep cadence would expire rows that
+    /// never had a full interval to be touched).
+    pub feature_ttl: u64,
+    /// Feature admission policy; `None` admits every ID (dynamic-table
+    /// default behavior).
+    pub admission: Option<AdmissionConfig>,
+    /// Where delta snapshots are written (the "serving" directory);
+    /// `None` tracks deltas and accounts their volume without file I/O.
+    pub sync_dir: Option<PathBuf>,
+    /// Advance the generator's day every `day_every` stream chunks
+    /// (fresh-ID arrival cadence); `0` = never.
+    pub day_every: usize,
+}
+
+impl OnlineOptions {
+    pub fn new(sync_interval: usize) -> Self {
+        OnlineOptions {
+            sync_interval,
+            intervals: 0,
+            feature_ttl: 0,
+            admission: None,
+            sync_dir: None,
+            day_every: 8,
+        }
+    }
+
+    /// Total steps of a bounded run; `None` when endless.
+    pub fn total_steps(&self) -> Option<usize> {
+        if self.intervals == 0 {
+            None
+        } else {
+            Some(self.intervals * self.sync_interval)
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.sync_interval >= 1,
+            "--sync-interval must be >= 1 (got 0): online mode syncs every N steps"
+        );
+        anyhow::ensure!(
+            self.feature_ttl == 0 || self.feature_ttl >= self.sync_interval as u64,
+            "--feature-ttl ({}) must be >= --sync-interval ({}): a shorter TTL would \
+             expire rows before they complete one interval",
+            self.feature_ttl,
+            self.sync_interval
+        );
+        if let Some(a) = &self.admission {
+            a.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_rejects_contradictory_knobs() {
+        assert!(OnlineOptions::new(0).validate().is_err(), "zero interval");
+        let mut o = OnlineOptions::new(10);
+        assert!(o.validate().is_ok());
+        o.feature_ttl = 5;
+        assert!(o.validate().is_err(), "ttl below sync interval");
+        o.feature_ttl = 10;
+        assert!(o.validate().is_ok(), "ttl == interval is allowed");
+        o.admission = Some(AdmissionConfig::new(0, 0.0));
+        assert!(o.validate().is_err(), "invalid admission config bubbles");
+    }
+
+    #[test]
+    fn total_steps_bounds() {
+        let mut o = OnlineOptions::new(10);
+        assert_eq!(o.total_steps(), None, "endless by default");
+        o.intervals = 3;
+        assert_eq!(o.total_steps(), Some(30));
+    }
+}

@@ -1,0 +1,463 @@
+//! The online feature gate: admission, touch/TTL bookkeeping and delta
+//! tracking layered over a [`ConcurrentDynamicTable`].
+//!
+//! [`OnlineTable`] implements [`EmbeddingStore`] so it drops into
+//! [`crate::embedding::sharded::ShardedEmbedding`] unchanged. In
+//! **passthrough** mode (offline training) every call delegates
+//! directly to the inner table — byte-for-byte the pre-online behavior.
+//! In **online** mode the training-time fetch runs a *serial* pre-pass
+//! over the served occurrence stream that
+//!
+//! 1. consults [`FeatureAdmission`] for IDs not yet resident (rejected
+//!    IDs are served the default row and never allocate),
+//! 2. stamps every admitted ID's `last_touch` with the current step
+//!    (the TTL input), and
+//! 3. records the ID in the [`DeltaTracker`] (it is being trained on,
+//!    so its bits are about to change).
+//!
+//! The pre-pass is serial and in occurrence order, so its decisions —
+//! and everything downstream — are identical for every `--threads`
+//! value; the actual row fetch then fans out through the inner table's
+//! stripe-bucketed masked path.
+//!
+//! The sparse optimizer writes through the [`ConcurrentEmbeddingStore`]
+//! delegation (disjoint rows, pool-parallel); because that path cannot
+//! observe `&mut self`, the trainer marks the updated ids explicitly
+//! via [`OnlineTable::mark_updated`] right after the optimizer applies
+//! — a serial pass over the already-unique id list.
+
+use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::dedup::IdMap;
+use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
+use crate::online::admission::FeatureAdmission;
+use crate::online::delta::DeltaTracker;
+use crate::optim::adam::SparseAdam;
+use crate::util::pool::WorkerPool;
+
+/// Admission + TTL + delta gate over a concurrent shard table.
+pub struct OnlineTable {
+    inner: ConcurrentDynamicTable,
+    /// Online bookkeeping on/off; `false` = pure passthrough.
+    tracking: bool,
+    admission: Option<FeatureAdmission>,
+    /// Current training step (the TTL clock), set by the trainer.
+    clock: u64,
+    /// Per-id last step the row was trained on.
+    last_touch: IdMap<u64>,
+    delta: DeltaTracker,
+    /// Rows retired by TTL sweeps (cumulative).
+    expired: u64,
+    /// Reusable admission-mask buffer for the gated fetch (serve_reply
+    /// fetches several times per micro round; no steady-state allocs).
+    mask_scratch: Vec<bool>,
+}
+
+impl OnlineTable {
+    /// Offline passthrough: no admission, no bookkeeping.
+    pub fn passthrough(inner: ConcurrentDynamicTable) -> Self {
+        OnlineTable {
+            inner,
+            tracking: false,
+            admission: None,
+            clock: 0,
+            last_touch: IdMap::default(),
+            delta: DeltaTracker::new(),
+            expired: 0,
+            mask_scratch: Vec::new(),
+        }
+    }
+
+    /// Online mode: track touches/deltas; `admission` optionally gates
+    /// new-row allocation.
+    ///
+    /// Panics if `inner` has a row budget: budgeted tables auto-evict
+    /// *inside* `lookup_or_insert`, invisible to the tracker, which
+    /// would silently break the base+deltas reconstruction contract.
+    /// Online residency is bounded by admission + TTL instead.
+    pub fn online(inner: ConcurrentDynamicTable, admission: Option<FeatureAdmission>) -> Self {
+        assert!(
+            !inner.has_row_budget(),
+            "OnlineTable cannot track a row-budgeted table (hidden auto-evictions \
+             would corrupt delta sync); bound residency with admission + TTL instead"
+        );
+        OnlineTable {
+            inner,
+            tracking: true,
+            admission,
+            clock: 0,
+            last_touch: IdMap::default(),
+            delta: DeltaTracker::new(),
+            expired: 0,
+            mask_scratch: Vec::new(),
+        }
+    }
+
+    pub fn inner(&self) -> &ConcurrentDynamicTable {
+        &self.inner
+    }
+
+    pub fn tracking(&self) -> bool {
+        self.tracking
+    }
+
+    /// Set the TTL clock (the trainer calls this at the top of every
+    /// step).
+    pub fn set_step(&mut self, step: u64) {
+        self.clock = step;
+    }
+
+    pub fn step(&self) -> u64 {
+        self.clock
+    }
+
+    /// Cumulative (admitted, rejected) admission observations; (0, 0)
+    /// when admission is off.
+    pub fn admission_totals(&self) -> (u64, u64) {
+        self.admission.as_ref().map_or((0, 0), |a| a.totals())
+    }
+
+    /// Rows retired by TTL sweeps so far.
+    pub fn expired_total(&self) -> u64 {
+        self.expired
+    }
+
+    /// Admission decision + bookkeeping for one training-time
+    /// occurrence of `id`. Serial by construction (`&mut self`).
+    fn admit_and_touch(&mut self, id: GlobalId) -> bool {
+        let admit = match &mut self.admission {
+            // Resident rows were admitted in the past; only new rows
+            // consult (and count toward) the frequency filter.
+            Some(a) => self.inner.contains(id) || a.observe(id),
+            None => true,
+        };
+        if admit {
+            self.last_touch.insert(id, self.clock);
+            self.delta.upsert(id);
+        }
+        admit
+    }
+
+    /// Record optimizer updates for `ids` (already applied to the inner
+    /// table through the concurrent delegation). No-op in passthrough
+    /// mode, so the offline trainer can call it unconditionally.
+    pub fn mark_updated(&mut self, ids: &[GlobalId]) {
+        if !self.tracking {
+            return;
+        }
+        for &id in ids {
+            self.last_touch.insert(id, self.clock);
+            self.delta.upsert(id);
+        }
+    }
+
+    /// Remove one row (manual eviction), recording it for the next
+    /// delta and dropping its optimizer state. Returns whether the row
+    /// existed.
+    pub fn remove_row(&mut self, id: GlobalId, opt: &mut SparseAdam) -> bool {
+        let existed = self.inner.remove(id);
+        opt.drop_row(id);
+        self.last_touch.remove(&id);
+        if self.tracking && existed {
+            self.delta.remove(id);
+        }
+        existed
+    }
+
+    /// Retire every row untouched for at least `ttl` steps: a row last
+    /// trained on at step `t` expires once `clock - t >= ttl`, so a row
+    /// touched in the current step can never expire (`ttl >= 1`).
+    /// Expired ids are processed in ascending order (determinism), each
+    /// removal riding the inner table's striped write path; optimizer
+    /// state is dropped alongside and the removal lands in the delta.
+    /// Returns how many rows were retired.
+    pub fn sweep_expired(&mut self, ttl: u64, opt: &mut SparseAdam) -> usize {
+        if !self.tracking || ttl == 0 {
+            return 0;
+        }
+        let now = self.clock;
+        let mut expired: Vec<GlobalId> = Vec::new();
+        for (&id, &t) in self.last_touch.iter() {
+            if now.saturating_sub(t) >= ttl {
+                expired.push(id);
+            }
+        }
+        expired.sort_unstable();
+        for &id in &expired {
+            // One audited removal path: table row + optimizer state +
+            // touch stamp + delta record all retire together.
+            self.remove_row(id, opt);
+        }
+        self.expired += expired.len() as u64;
+        expired.len()
+    }
+
+    /// Drain the rows changed since the last sync:
+    /// `(upserted_ids, removed_ids)`, both sorted ascending.
+    pub fn take_delta(&mut self) -> (Vec<GlobalId>, Vec<GlobalId>) {
+        self.delta.take()
+    }
+
+    /// Rows pending in the next delta (upserts).
+    pub fn pending_upserts(&self) -> usize {
+        self.delta.pending_upserts()
+    }
+}
+
+impl EmbeddingStore for OnlineTable {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len(&self) -> usize {
+        ConcurrentDynamicTable::len(&self.inner)
+    }
+
+    fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
+        if !self.tracking {
+            return ConcurrentDynamicTable::lookup_or_insert(&self.inner, id, out);
+        }
+        if self.admit_and_touch(id) {
+            ConcurrentDynamicTable::lookup_or_insert(&self.inner, id, out)
+        } else {
+            ConcurrentDynamicTable::lookup(&self.inner, id, out)
+        }
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        ConcurrentDynamicTable::lookup(&self.inner, id, out)
+    }
+
+    fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
+        let applied = ConcurrentDynamicTable::apply_delta(&self.inner, id, delta);
+        if self.tracking && applied {
+            self.last_touch.insert(id, self.clock);
+            self.delta.upsert(id);
+        }
+        applied
+    }
+
+    fn fetch_rows(
+        &mut self,
+        ids: &[GlobalId],
+        train: bool,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        if !self.tracking || !train {
+            self.inner.fetch_rows_shared(ids, train, out, pool);
+            return;
+        }
+        // Serial pre-pass in occurrence order: admission decisions,
+        // touch stamps and delta records are identical for every pool
+        // size; only the row fetch itself fans out.
+        let mut admit = std::mem::take(&mut self.mask_scratch);
+        admit.clear();
+        admit.reserve(ids.len());
+        for &id in ids {
+            let a = self.admit_and_touch(id);
+            admit.push(a);
+        }
+        self.inner.fetch_rows_masked(ids, &admit, out, pool);
+        self.mask_scratch = admit;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ConcurrentDynamicTable::memory_bytes(&self.inner)
+    }
+}
+
+/// Shared-reference delegation so the pool-parallel sparse optimizer
+/// ([`SparseAdam::step_concurrent`]) writes straight through to the
+/// striped table. These writes bypass the tracker — the trainer calls
+/// [`OnlineTable::mark_updated`] with the same id list immediately
+/// after the optimizer applies.
+impl ConcurrentEmbeddingStore for OnlineTable {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn len(&self) -> usize {
+        ConcurrentDynamicTable::len(&self.inner)
+    }
+
+    fn lookup_or_insert(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        ConcurrentDynamicTable::lookup_or_insert(&self.inner, id, out)
+    }
+
+    fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
+        ConcurrentDynamicTable::lookup(&self.inner, id, out)
+    }
+
+    fn apply_delta(&self, id: GlobalId, delta: &[f32]) -> bool {
+        ConcurrentDynamicTable::apply_delta(&self.inner, id, delta)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ConcurrentDynamicTable::memory_bytes(&self.inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::dynamic_table::DynamicTableConfig;
+    use crate::online::admission::AdmissionConfig;
+    use crate::optim::adam::AdamParams;
+
+    const DIM: usize = 4;
+
+    fn table() -> ConcurrentDynamicTable {
+        ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(DIM).with_capacity(256).with_seed(5),
+            8,
+        )
+    }
+
+    fn opt() -> SparseAdam {
+        SparseAdam::new(DIM, AdamParams::default())
+    }
+
+    #[test]
+    fn passthrough_matches_bare_table() {
+        let mut gate = OnlineTable::passthrough(table());
+        let bare = table();
+        let mut a = vec![0.0f32; DIM];
+        let mut b = vec![0.0f32; DIM];
+        for id in 0..300u64 {
+            let ea = EmbeddingStore::lookup_or_insert(&mut gate, id, &mut a);
+            let eb = ConcurrentDynamicTable::lookup_or_insert(&bare, id, &mut b);
+            assert_eq!(ea, eb);
+            assert_eq!(a, b, "id {id}");
+        }
+        assert_eq!(gate.inner().content_checksum(), bare.content_checksum());
+        assert_eq!(gate.take_delta(), (vec![], vec![]), "no tracking");
+    }
+
+    #[test]
+    fn admission_blocks_rare_ids_from_allocating() {
+        let mut gate = OnlineTable::online(
+            table(),
+            Some(FeatureAdmission::new(AdmissionConfig::new(3, 0.0))),
+        );
+        let mut buf = vec![0.0f32; DIM];
+        // Two sightings: below threshold — served the default row, no
+        // allocation.
+        for _ in 0..2 {
+            let hit = EmbeddingStore::lookup_or_insert(&mut gate, 42, &mut buf);
+            assert!(!hit);
+            assert_eq!(buf, vec![0.0; DIM], "rejected id gets the default row");
+        }
+        assert_eq!(EmbeddingStore::len(&gate), 0);
+        // Third sighting crosses the threshold: a real row appears.
+        EmbeddingStore::lookup_or_insert(&mut gate, 42, &mut buf);
+        assert_eq!(EmbeddingStore::len(&gate), 1);
+        assert!(buf.iter().any(|&x| x != 0.0), "admitted row is initialized");
+        let (ups, rem) = gate.take_delta();
+        assert_eq!(ups, vec![42]);
+        assert!(rem.is_empty());
+    }
+
+    #[test]
+    fn ttl_sweep_expires_only_stale_rows() {
+        let mut gate = OnlineTable::online(table(), None);
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        gate.set_step(0);
+        for id in 0..10u64 {
+            EmbeddingStore::lookup_or_insert(&mut gate, id, &mut buf);
+        }
+        // Steps 1..5: keep ids 0..3 hot.
+        for step in 1..=5u64 {
+            gate.set_step(step);
+            for id in 0..3u64 {
+                EmbeddingStore::lookup_or_insert(&mut gate, id, &mut buf);
+            }
+        }
+        gate.take_delta();
+        let n = gate.sweep_expired(5, &mut o);
+        assert_eq!(n, 7, "ids 3..10 untouched for 5 steps expire");
+        assert_eq!(EmbeddingStore::len(&gate), 3);
+        for id in 0..3u64 {
+            assert!(gate.inner().contains(id), "hot id {id} survives");
+        }
+        let (ups, rem) = gate.take_delta();
+        assert!(ups.is_empty());
+        assert_eq!(rem, (3..10).collect::<Vec<u64>>());
+        assert_eq!(gate.expired_total(), 7);
+    }
+
+    #[test]
+    fn ttl_never_expires_rows_touched_in_current_window() {
+        let mut gate = OnlineTable::online(table(), None);
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        for step in 0..20u64 {
+            gate.set_step(step);
+            // Touch a rotating pair every step; with ttl == 1 only rows
+            // touched exactly this step may survive a sweep.
+            EmbeddingStore::lookup_or_insert(&mut gate, step % 4, &mut buf);
+            EmbeddingStore::lookup_or_insert(&mut gate, 100 + step, &mut buf);
+            gate.sweep_expired(1, &mut o);
+            assert!(
+                gate.inner().contains(step % 4),
+                "step {step}: row touched this step must survive the sweep"
+            );
+            assert!(gate.inner().contains(100 + step));
+            // The previous step's one-shot row is now 1 step stale.
+            if step > 0 {
+                assert!(!gate.inner().contains(100 + step - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn mark_updated_and_expiry_drop_optimizer_state() {
+        let mut gate = OnlineTable::online(table(), None);
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        gate.set_step(0);
+        EmbeddingStore::lookup_or_insert(&mut gate, 7, &mut buf);
+        o.step(&mut gate, &[7], &[0.1; DIM], 1.0);
+        gate.mark_updated(&[7]);
+        assert!(o.row_state(7).is_some());
+        gate.set_step(10);
+        let n = gate.sweep_expired(5, &mut o);
+        assert_eq!(n, 1);
+        assert!(o.row_state(7).is_none(), "expiry must drop Adam state");
+        assert!(!gate.inner().contains(7));
+    }
+
+    #[test]
+    fn fetch_rows_masked_gate_identical_across_pool_sizes() {
+        // Enough occurrences to clear the parallel-fetch threshold, with
+        // an admission filter active: contents and outputs must match
+        // the 1-thread gate bit-for-bit.
+        let ids: Vec<u64> = (0..4000u64).map(|i| (i * 7 + 1) % 900).collect();
+        let run = |threads: usize| {
+            let pool = WorkerPool::new(threads);
+            let mut gate = OnlineTable::online(
+                table(),
+                Some(FeatureAdmission::new(AdmissionConfig::new(2, 0.05))),
+            );
+            gate.set_step(3);
+            let mut out = vec![0.0f32; ids.len() * DIM];
+            gate.fetch_rows(&ids, true, &mut out, Some(&pool));
+            let (ups, rem) = gate.take_delta();
+            (
+                out,
+                gate.inner().content_checksum(),
+                EmbeddingStore::len(&gate),
+                gate.admission_totals(),
+                ups,
+                rem,
+            )
+        };
+        let reference = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run(threads), reference, "{threads} threads diverged");
+        }
+        // The filter actually filtered something.
+        assert!(reference.3 .1 > 0, "some ids must be rejected");
+        assert!(reference.2 > 0, "some ids must be admitted");
+    }
+}

@@ -319,6 +319,12 @@ impl SparseAdam {
         self.state.retain(|id, _| keep(*id));
     }
 
+    /// Drop a single row's state (TTL expiry / eviction); returns
+    /// whether any state was tracked.
+    pub fn drop_row(&mut self, id: GlobalId) -> bool {
+        self.state.remove(&id).is_some()
+    }
+
     pub fn row_state(&self, id: GlobalId) -> Option<&RowState> {
         self.state.get(&id)
     }

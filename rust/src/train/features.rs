@@ -29,31 +29,91 @@ pub struct BatchIds {
 }
 
 impl BatchIds {
-    /// Build the occurrence stream for a batch under the merge plan.
+    /// Build the occurrence stream for a batch under the merge plan
+    /// (serial reference; see [`build_pooled`](Self::build_pooled)).
     pub fn build(batch: &Batch, schema: &Schema, plan: &MergePlan) -> BatchIds {
+        Self::build_pooled(batch, schema, plan, None)
+    }
+
+    /// [`build`](Self::build) with the per-token ID-mapping pass fanned
+    /// across `pool` — the last serial per-token pass in the step.
+    /// Every sequence owns a contiguous occurrence span whose bounds
+    /// are a pure function of the sequence lengths, so chunks write
+    /// disjoint windows and each id is a pure function of its
+    /// occurrence: the output is bit-identical for every pool size.
+    pub fn build_pooled(
+        batch: &Batch,
+        schema: &Schema,
+        plan: &MergePlan,
+        pool: Option<&WorkerPool>,
+    ) -> BatchIds {
         let n_ctx = schema.num_context_features();
         let n_tok = schema.num_token_features();
-        let total: usize = batch
-            .sequences
-            .iter()
-            .map(|s| n_ctx + s.len() * n_tok)
-            .sum();
-        let mut ids = Vec::with_capacity(total);
-        let mut layout = Vec::with_capacity(batch.sequences.len());
+        let n = batch.sequences.len();
+        // Span layout first (cheap, serial): sequence `b` owns
+        // occurrences `[layout[b].0, layout[b].0 + n_ctx + len·n_tok)`.
+        let mut layout = Vec::with_capacity(n);
+        let mut off = 0usize;
         for seq in &batch.sequences {
-            let ctx_off = ids.len();
+            layout.push((off, off + n_ctx, seq.len()));
+            off += n_ctx + seq.len() * n_tok;
+        }
+        let total = off;
+        let mut ids: Vec<GlobalId> = vec![0; total];
+        // Map one sequence's ids into its span (`dst` starts at the
+        // sequence's first occurrence).
+        let write_seq = |b: usize, dst: &mut [GlobalId]| {
+            let seq = &batch.sequences[b];
+            let mut k = 0usize;
             for (f, &id) in seq.context.iter().enumerate() {
                 let (_g, gid) = plan.global_id(&schema.context_features[f].name, id);
-                ids.push(gid);
+                dst[k] = gid;
+                k += 1;
             }
-            let tok_off = ids.len();
             for tok in &seq.tokens {
                 for (f, &id) in tok.iter().enumerate() {
                     let (_g, gid) = plan.global_id(&schema.token_features[f].name, id);
-                    ids.push(gid);
+                    dst[k] = gid;
+                    k += 1;
                 }
             }
-            layout.push((ctx_off, tok_off, seq.len()));
+        };
+        match pool {
+            Some(p) if p.threads() > 1 && n > 1 => {
+                let occ_start =
+                    |b: usize| -> usize { if b < n { layout[b].0 } else { total } };
+                let window = SharedSliceMut::new(&mut ids[..]);
+                let window = &window;
+                let write_seq = &write_seq;
+                let layout = &layout;
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    WorkerPool::chunk_ranges(n, p.threads())
+                        .into_iter()
+                        .map(|sr| {
+                            let (o0, o1) = (occ_start(sr.start), occ_start(sr.end));
+                            Box::new(move || {
+                                // SAFETY: sequence chunks are disjoint
+                                // and each owns the contiguous
+                                // occurrence span [o0, o1).
+                                let dst = unsafe { window.slice_mut(o0, o1 - o0) };
+                                let mut cur = 0usize;
+                                for b in sr {
+                                    let span = n_ctx + layout[b].2 * n_tok;
+                                    write_seq(b, &mut dst[cur..cur + span]);
+                                    cur += span;
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                p.run_scope(tasks);
+            }
+            _ => {
+                for b in 0..n {
+                    let (start, _, len) = layout[b];
+                    let span = n_ctx + len * n_tok;
+                    write_seq(b, &mut ids[start..start + span]);
+                }
+            }
         }
         BatchIds {
             ids,
@@ -334,6 +394,35 @@ mod tests {
         let lhs: f64 = emb.iter().zip(&g).map(|(a, b)| (*a * *b) as f64).sum();
         let rhs: f64 = rows.iter().zip(&occ_g).map(|(a, b)| (*a * *b) as f64).sum();
         assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn build_pooled_bit_identical_for_every_pool_size() {
+        // A batch large enough that several chunks form at 4 threads,
+        // with ragged lengths so span boundaries are nontrivial.
+        let schema = Schema::meituan_like(4, 1);
+        let plan = MergePlan::build(&schema.all_features());
+        let seqs: Vec<Sequence> = (0..37)
+            .map(|i| Sequence {
+                user_id: i as u64,
+                context: vec![i as u64, 2 * i as u64, 3 * i as u64],
+                tokens: vec![vec![i as u64, 1, 2, 3]; 1 + (i * 7) % 13],
+                labels: [0.0, 1.0],
+            })
+            .collect();
+        let tokens = seqs.iter().map(|s| s.len()).sum();
+        let batch = Batch {
+            sequences: seqs,
+            tokens,
+        };
+        let serial = BatchIds::build(&batch, &schema, &plan);
+        for threads in [1usize, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let pooled = BatchIds::build_pooled(&batch, &schema, &plan, Some(&pool));
+            assert_eq!(pooled.ids, serial.ids, "{threads} threads: ids diverged");
+            assert_eq!(pooled.layout, serial.layout, "{threads} threads: layout");
+            assert_eq!(pooled.num_sequences(), serial.num_sequences());
+        }
     }
 
     #[test]

@@ -30,15 +30,18 @@ use crate::balance::{Batch, Batcher, DynamicBatcher, FixedBatcher};
 use crate::collective::comm::{CommGroup, CommHandle};
 use crate::collective::netmodel::NetModel;
 use crate::config::{ClusterConfig, ModelConfig, TrainConfig};
-use crate::data::generator::{GeneratorConfig, WorkloadGenerator};
-use crate::data::prefetch::Prefetcher;
+use crate::checkpoint::delta::DeltaMeta;
+use crate::data::generator::GeneratorConfig;
 use crate::data::schema::Schema;
 use crate::embedding::concurrent::ConcurrentDynamicTable;
-use crate::embedding::dynamic_table::DynamicTableConfig;
+use crate::embedding::dynamic_table::{DynamicTableConfig, TableStats};
 use crate::embedding::merge::MergePlan;
 use crate::embedding::sharded::{PendingBackward, PendingLookup, ShardedEmbedding};
 use crate::embedding::dedup::DedupVolume;
+use crate::embedding::GlobalId;
 use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
+use crate::online::stream::StreamingSource;
+use crate::online::{FeatureAdmission, OnlineOptions, OnlineTable};
 use crate::optim::adam::{AdamParams, DenseAdam, SparseAdam};
 use crate::optim::{DenseAccumulator, SparseAccumulator};
 use crate::runtime::{Engine, TrainScratch};
@@ -86,6 +89,14 @@ pub struct TrainerOptions {
     /// an untrained model only add noise to the running metric).
     pub gauc_warmup: usize,
     pub log_every: usize,
+    /// `Some` switches the trainer into **online** mode: an endless
+    /// time-stamped stream (new IDs arriving per generator day) with
+    /// feature admission in front of sparse insertion, a TTL sweeper
+    /// retiring stale rows, and an incremental delta sync every
+    /// `sync_interval` steps. `steps` is ignored — the run is bounded
+    /// by `intervals × sync_interval` (or endless when `intervals` is
+    /// 0). Numerics stay bit-identical across `--threads` values.
+    pub online: Option<OnlineOptions>,
 }
 
 impl TrainerOptions {
@@ -106,7 +117,19 @@ impl TrainerOptions {
             collect_gauc: true,
             gauc_warmup: 0,
             log_every: 0,
+            online: None,
         }
+    }
+
+    /// Reject contradictory option combinations before any thread
+    /// spawns (also the backing check for the CLI's flag validation).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(o) = &self.online {
+            o.validate()?;
+        } else {
+            anyhow::ensure!(self.steps > 0, "offline runs need --steps > 0");
+        }
+        Ok(())
     }
 }
 
@@ -140,7 +163,17 @@ pub struct StepRecord {
     pub sim_hidden_boundary_s: Vec<f64>,
     /// Simulated synchronous step seconds (max device + dense sync).
     pub sim_step_s: f64,
+    /// Simulated delta-sync push seconds (slowest rank's payload on the
+    /// inter-node fabric); nonzero only on online interval boundaries.
+    pub sim_sync_s: f64,
     pub wall_s: f64,
+    /// Online per-interval counters, summed across ranks; populated on
+    /// interval-boundary steps of `--mode online` runs, zero otherwise.
+    pub online_admitted: u64,
+    pub online_rejected: u64,
+    pub online_expired: u64,
+    pub online_synced_rows: u64,
+    pub online_sync_bytes: u64,
 }
 
 /// Aggregated outcome of a run.
@@ -165,6 +198,17 @@ pub struct TrainReport {
     /// shard contents (ids + row bits) — the e2e bitwise-equality
     /// witness for `--threads`/`--overlap` ablations.
     pub embedding_checksum: u64,
+    /// Aggregate dynamic-table statistics across worker shards
+    /// (inserts, probes, expansions, **evictions** — the
+    /// memory-pressure counters).
+    pub table_stats: TableStats,
+    /// Online-mode run totals (sums of the per-interval counters in
+    /// [`StepRecord`]); all zero for offline runs.
+    pub online_admitted: u64,
+    pub online_rejected: u64,
+    pub online_expired: u64,
+    pub online_synced_rows: u64,
+    pub online_sync_bytes: u64,
 }
 
 impl TrainReport {
@@ -241,6 +285,11 @@ fn slice_mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len().max(1) as f64
 }
 
+/// Rolling-tail cap on per-step records for endless online runs
+/// (`--intervals 0`): once the log reaches twice this, the oldest half
+/// is dropped, bounding memory at O(cap) with amortized O(1) cost.
+const ENDLESS_RECORD_CAP: usize = 1 << 16;
+
 /// The coordinator.
 pub struct Trainer {
     pub opts: TrainerOptions,
@@ -250,6 +299,7 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(opts: TrainerOptions, engine: Engine) -> Result<Trainer> {
+        opts.validate()?;
         let model_cfg = ModelConfig::by_name(&opts.model)
             .with_context(|| format!("unknown model preset `{}`", opts.model))?;
         // Real execution requires the sparse dim to match the model dim.
@@ -309,8 +359,10 @@ impl Trainer {
         let mut wall = Throughput::default();
         let mut prefetch_occ = 0.0;
         let mut checksum = 0u64;
+        let mut table_stats = TableStats::default();
         let n_workers = outputs.len().max(1) as f64;
         for out in outputs {
+            table_stats.merge(&out.table_stats);
             gauc_ctr.merge(out.gauc_ctr);
             gauc_ctcvr.merge(out.gauc_ctcvr);
             phases.merge(&out.phases);
@@ -333,7 +385,21 @@ impl Trainer {
         let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
         let total_samples: u64 = steps.iter().map(|s| s.samples).sum();
         let total_tokens: u64 = steps.iter().map(|s| s.tokens.iter().sum::<u64>()).sum();
+        // Online counters are already globally summed per interval
+        // (collective gathers at the boundary); totalling rank 0's step
+        // records yields the run totals.
+        let online_admitted: u64 = steps.iter().map(|s| s.online_admitted).sum();
+        let online_rejected: u64 = steps.iter().map(|s| s.online_rejected).sum();
+        let online_expired: u64 = steps.iter().map(|s| s.online_expired).sum();
+        let online_synced_rows: u64 = steps.iter().map(|s| s.online_synced_rows).sum();
+        let online_sync_bytes: u64 = steps.iter().map(|s| s.online_sync_bytes).sum();
         Ok(TrainReport {
+            table_stats,
+            online_admitted,
+            online_rejected,
+            online_expired,
+            online_synced_rows,
+            online_sync_bytes,
             gauc_ctr: gauc_ctr.gauc(),
             gauc_ctcvr: gauc_ctcvr.gauc(),
             phases,
@@ -365,6 +431,7 @@ struct WorkerOutput {
     truncated: u64,
     prefetch_occupancy: f64,
     table_checksum: u64,
+    table_stats: TableStats,
 }
 
 /// One micro-batch prepared for the engine.
@@ -416,18 +483,23 @@ fn worker_main(
     // background prefetcher (the paper's copy stream) so chunk
     // generation overlaps training; the bounded queue's occupancy is
     // surfaced in the report. The channel preserves stream order, so
-    // determinism is untouched.
+    // determinism is untouched. Online mode additionally advances the
+    // generator's day every `day_every` chunks, so fresh IDs keep
+    // arriving (the admission/TTL workload); offline keeps
+    // `day_every = 0`, which reproduces the plain generator stream.
     let mut gen_cfg = opts.generator.clone();
     gen_cfg.seed = opts.generator.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9);
     // Cap lengths at the largest bucket so nothing needs truncation.
     let max_l = arts.largest_bucket().len;
     gen_cfg.max_len = gen_cfg.max_len.min(max_l);
-    let mut gen = WorkloadGenerator::new(gen_cfg);
-    let schema_prod = schema.clone();
-    let mut prefetch = Prefetcher::spawn(opts.prefetch_depth.max(1), move || {
-        let chunk = gen.batch(&schema_prod, 32);
-        Some(chunk)
-    });
+    let day_every = opts.online.as_ref().map_or(0, |o| o.day_every);
+    let mut stream = StreamingSource::spawn(
+        gen_cfg,
+        schema.clone(),
+        32,
+        opts.prefetch_depth.max(1),
+        day_every,
+    );
 
     // Batcher per the ablation toggle.
     let mut batcher: Box<dyn Batcher> = if opts.train.sequence_balancing {
@@ -453,8 +525,19 @@ fn worker_main(
             .with_seed(engine.manifest().seed ^ 0xEB),
         8,
     );
+    // The online gate wraps every shard; in offline mode it is a pure
+    // passthrough (bit-identical to the bare table), in online mode it
+    // runs the serial admission/touch/delta pre-pass in front of the
+    // striped fetch.
+    let gate = match &opts.online {
+        Some(o) => OnlineTable::online(
+            table,
+            o.admission.clone().map(FeatureAdmission::new),
+        ),
+        None => OnlineTable::passthrough(table),
+    };
     let mut sharded =
-        ShardedEmbedding::new(table, opts.train.dedup).with_pool(Arc::clone(&pool));
+        ShardedEmbedding::new(gate, opts.train.dedup).with_pool(Arc::clone(&pool));
     let mut sparse_opt = SparseAdam::new(
         d,
         AdamParams {
@@ -479,10 +562,23 @@ fn worker_main(
     );
     let mut dense_acc = DenseAccumulator::new(params.len());
 
+    // Online runs are bounded by `intervals × sync_interval` (`None` =
+    // run until interrupted); offline runs by `steps`.
+    let total_steps: Option<usize> = match &opts.online {
+        None => Some(opts.steps),
+        Some(o) => o.total_steps(),
+    };
+    let online_mode = opts.online.is_some();
+    // GAUC accumulates every sample's (score, label) per user; on an
+    // endless run that grows without bound AND the report it would feed
+    // is unreachable (the run only ends by interruption) — so endless
+    // runs never accumulate it.
+    let collect_gauc = opts.collect_gauc && total_steps.is_some();
+
     let mut phases = PhaseTimer::new();
     let mut gauc_ctr = GaucAccumulator::new();
     let mut gauc_ctcvr = GaucAccumulator::new();
-    let mut records = Vec::with_capacity(opts.steps);
+    let mut records = Vec::with_capacity(total_steps.unwrap_or(0).clamp(16, 1 << 16));
     let mut wall = Throughput::default();
     let truncated = 0u64;
     let mut vol_prev = DedupVolume::default();
@@ -513,7 +609,7 @@ fn worker_main(
             if let Some(b) = batcher.next_batch() {
                 break b;
             }
-            batcher.push_chunk(prefetch.next().expect("prefetch stream is endless"));
+            batcher.push_chunk(stream.next_chunk().sequences);
         });
         let tokens = batch.tokens as u64;
         let samples = batch.sequences.len() as u64;
@@ -533,7 +629,12 @@ fn worker_main(
         let round_ids: Vec<(BatchIds, (usize, usize))> = phases.time("2_lookup", || {
             micros
                 .iter()
-                .map(|m| (BatchIds::build(&m.batch, &schema, &plan), m.bucket))
+                .map(|m| {
+                    (
+                        BatchIds::build_pooled(&m.batch, &schema, &plan, Some(pool.as_ref())),
+                        m.bucket,
+                    )
+                })
                 .collect()
         });
         StepData {
@@ -548,12 +649,25 @@ fn worker_main(
     // Step data prepared one step ahead (None only before step 0, so
     // the first step's data wait lands inside its own wall window).
     let mut next_data: Option<StepData> = None;
+    // Admission totals at the previous interval boundary (the deltas
+    // are what each interval reports).
+    let mut prev_admitted = 0u64;
+    let mut prev_rejected = 0u64;
     // Carried across the step boundary in cross-step mode: step s+1's
     // first posted ID exchange.
     let mut posted: Option<PendingLookup> = None;
 
-    for step in 0..opts.steps {
+    let mut step = 0usize;
+    loop {
+        if let Some(total) = total_steps {
+            if step >= total {
+                break;
+            }
+        }
         let step_t0 = std::time::Instant::now();
+        // The TTL clock: every touch/admission decision this step is
+        // stamped with it (no-op for the passthrough gate).
+        sharded.table_mut().set_step(step as u64);
         let data = match next_data.take() {
             Some(d) => d,
             None => prepare(&mut phases),
@@ -635,7 +749,7 @@ fn worker_main(
                 step_loss[0] += scratch.loss_sums[0] as f64;
                 step_loss[1] += scratch.loss_sums[1] as f64;
                 dense_acc.add(&scratch.grads, scratch.n_valid as u64);
-                if opts.collect_gauc && step >= opts.gauc_warmup {
+                if collect_gauc && step >= opts.gauc_warmup {
                     for (i, s) in m.batch.sequences.iter().enumerate() {
                         let z0 = scratch.logits[i * arts.tasks];
                         let z1 = scratch.logits[i * arts.tasks + 1];
@@ -693,7 +807,11 @@ fn worker_main(
         // critical path. Posting order is identical on every rank, and
         // posting earlier cannot change any arithmetic — only when the
         // wire time is waited on.
-        if step + 1 < opts.steps {
+        let has_next_step = match total_steps {
+            Some(total) => step + 1 < total,
+            None => true,
+        };
+        if has_next_step {
             let next = prepare(&mut phases);
             if cross {
                 let first_ids: &[crate::embedding::GlobalId] = next
@@ -722,9 +840,90 @@ fn worker_main(
                 // size (disjoint elements / rows).
                 dense_opt.step_pooled(&mut params, &grads, scale, Some(pool.as_ref()));
                 let (sids, sgrads, _) = sparse_acc.take();
+                // Online mode: gradients may target rows that admission
+                // rejected or the TTL sweeper retired — drop them before
+                // the optimizer so no phantom Adam state accumulates
+                // (serial pass; identical for every pool size).
+                let (sids, sgrads) = if online_mode {
+                    filter_present(sharded.table().inner(), sids, sgrads, d)
+                } else {
+                    (sids, sgrads)
+                };
                 sparse_opt.step_concurrent(&pool, sharded.table(), &sids, &sgrads, scale);
+                // The concurrent optimizer writes through the shared
+                // delegation; record the touched rows for TTL + delta
+                // tracking (no-op for the passthrough gate).
+                sharded.table_mut().mark_updated(&sids);
             }
         });
+
+        // ---- online interval boundary ---------------------------------
+        // Every `sync_interval` steps: TTL-sweep stale rows, drain the
+        // delta tracker into an incremental snapshot (rows touched since
+        // the last sync + retired ids) and account the sync volume. The
+        // boundary falls on the same step on every rank, so the
+        // collective gathers below stay aligned.
+        let mut online_counts = [0u64; 5];
+        let mut my_sync_s = 0.0f64;
+        if let Some(ocfg) = &opts.online {
+            if (step + 1) % ocfg.sync_interval == 0 {
+                let seq = ((step + 1) / ocfg.sync_interval) as u64;
+                let (expired, upsert_ids, removed_ids) =
+                    phases.time("6_online_sync", || {
+                        let expired = sharded
+                            .table_mut()
+                            .sweep_expired(ocfg.feature_ttl, &mut sparse_opt);
+                        let (ups, rem) = sharded.table_mut().take_delta();
+                        (expired as u64, ups, rem)
+                    });
+                // Shard delta payload: header + removed ids + full rows
+                // (values + Adam state) — the same size whether or not
+                // the snapshot is actually written.
+                let row_bytes = 8 + 3 * d * 4 + 8;
+                let mut my_sync_bytes =
+                    (24 + upsert_ids.len() * row_bytes + removed_ids.len() * 8) as u64;
+                if let Some(dir) = &ocfg.sync_dir {
+                    let written = phases.time("6_online_sync", || -> Result<usize> {
+                        let rows = crate::checkpoint::delta::collect_rows(
+                            sharded.table().inner(),
+                            &sparse_opt,
+                            &upsert_ids,
+                        );
+                        let dmeta = DeltaMeta {
+                            seq,
+                            world,
+                            step: (step + 1) as u64,
+                            base_step: (step + 1 - ocfg.sync_interval) as u64,
+                            model: opts.model.clone(),
+                            dim: d,
+                            param_count: params.len(),
+                        };
+                        let dense = (rank == 0).then_some((&params[..], &dense_opt));
+                        crate::checkpoint::delta::save_delta(
+                            dir, &dmeta, rank, dense, &rows, &removed_ids,
+                        )
+                    })?;
+                    my_sync_bytes = written as u64;
+                }
+                // Simulated push of this rank's delta to serving rides
+                // the network model; the step completes when the slowest
+                // rank's push does.
+                my_sync_s = opts.net.delta_sync_time(world, my_sync_bytes as usize);
+                let (adm_total, rej_total) = sharded.table().admission_totals();
+                let my_counts = [
+                    adm_total - prev_admitted,
+                    rej_total - prev_rejected,
+                    expired,
+                    upsert_ids.len() as u64,
+                    my_sync_bytes,
+                ];
+                prev_admitted = adm_total;
+                prev_rejected = rej_total;
+                for (slot, mine) in online_counts.iter_mut().zip(my_counts) {
+                    *slot = comm.all_gather_u64(mine).iter().sum();
+                }
+            }
+        }
 
         // ---- bookkeeping (collective gathers for the records) ---------
         let tokens = comm.all_gather_u64(my_tokens);
@@ -796,6 +995,7 @@ fn worker_main(
                 shares[1].1 as f32,
                 shares[2].1 as f32,
                 t_hidden_boundary as f32,
+                my_sync_s as f32,
             ]))
             .into_iter()
             .map(|m| m.into_floats())
@@ -806,7 +1006,14 @@ fn worker_main(
         let hidden_reply_all: Vec<f64> = gathered.iter().map(|v| v[3] as f64).collect();
         let hidden_grad_all: Vec<f64> = gathered.iter().map(|v| v[4] as f64).collect();
         let hidden_boundary_all: Vec<f64> = gathered.iter().map(|v| v[5] as f64).collect();
-        let sim_step = sim_all.iter().cloned().fold(0.0, f64::max) + t_allreduce;
+        // Delta-sync push completes at the slowest rank; zero except on
+        // online interval boundaries, so offline step times are
+        // untouched bit-for-bit.
+        let max_sync = gathered
+            .iter()
+            .map(|v| v[6] as f64)
+            .fold(0.0, f64::max);
+        let sim_step = sim_all.iter().cloned().fold(0.0, f64::max) + t_allreduce + max_sync;
 
         let wall_s = step_t0.elapsed().as_secs_f64();
         wall.add(samples, tokens.iter().sum(), wall_s);
@@ -825,8 +1032,19 @@ fn worker_main(
             sim_hidden_grad_s: hidden_grad_all,
             sim_hidden_boundary_s: hidden_boundary_all,
             sim_step_s: sim_step,
+            sim_sync_s: max_sync,
             wall_s,
+            online_admitted: online_counts[0],
+            online_rejected: online_counts[1],
+            online_expired: online_counts[2],
+            online_synced_rows: online_counts[3],
+            online_sync_bytes: online_counts[4],
         });
+        // Endless runs would otherwise grow the record log without
+        // bound; keep a rolling tail (`step` fields stay absolute).
+        if total_steps.is_none() && records.len() >= 2 * ENDLESS_RECORD_CAP {
+            records.drain(..ENDLESS_RECORD_CAP);
+        }
         if rank == 0 && opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
             let r = records.last().unwrap();
             eprintln!(
@@ -838,6 +1056,7 @@ fn worker_main(
                 r.sim_step_s * 1e3
             );
         }
+        step += 1;
     }
     debug_assert!(posted.is_none(), "a posted lookup outlived the run");
 
@@ -858,9 +1077,32 @@ fn worker_main(
         },
         volume: sharded.volume,
         truncated,
-        prefetch_occupancy: prefetch.depth_occupancy(),
-        table_checksum: sharded.table().content_checksum(),
+        prefetch_occupancy: stream.depth_occupancy(),
+        table_checksum: sharded.table().inner().content_checksum(),
+        table_stats: sharded.table().inner().stats(),
     })
+}
+
+/// Keep only the (id, gradient-row) pairs whose row is live in `table`
+/// — online mode's guard against training rows that admission rejected
+/// or the TTL sweeper retired. Single pass: one striped `contains` per
+/// id (admission rejects something on virtually every online step, so
+/// an all-present fast path would just double the lock traffic).
+fn filter_present(
+    table: &ConcurrentDynamicTable,
+    ids: Vec<GlobalId>,
+    grads: Vec<f32>,
+    d: usize,
+) -> (Vec<GlobalId>, Vec<f32>) {
+    let mut out_ids = Vec::with_capacity(ids.len());
+    let mut out_grads = Vec::with_capacity(grads.len());
+    for (i, &id) in ids.iter().enumerate() {
+        if table.contains(id) {
+            out_ids.push(id);
+            out_grads.extend_from_slice(&grads[i * d..(i + 1) * d]);
+        }
+    }
+    (out_ids, out_grads)
 }
 
 /// Split a balanced batch into engine micro-batches, choosing for each

@@ -1,0 +1,236 @@
+//! End-to-end online-learning suite: `--mode online` runs with feature
+//! admission, TTL expiry and periodic delta sync must be (1)
+//! bit-identical across `--threads {1, 4}` — loss trace, embedding
+//! checksum, counters, and the delta snapshot *bytes* themselves — and
+//! (2) exactly reconstructible: replaying the emitted deltas in order
+//! onto an empty table rebuilds every rank's final shard state
+//! row-for-row (checksum witness).
+
+use std::path::PathBuf;
+
+use mtgrboost::checkpoint::delta::{
+    apply_delta, list_delta_seqs, load_delta_meta, load_delta_shard,
+};
+use mtgrboost::data::generator::GeneratorConfig;
+use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
+use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
+use mtgrboost::online::{AdmissionConfig, OnlineOptions};
+use mtgrboost::optim::adam::{AdamParams, SparseAdam};
+use mtgrboost::runtime::Engine;
+use mtgrboost::train::{TrainReport, Trainer, TrainerOptions};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mtgr_online_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// ~30 intervals × 3 steps of online training at toy scale: small
+/// populations with aggressive new-ID arrival so admission and expiry
+/// both trigger inside the test budget.
+fn online_opts(threads: usize, sync_dir: Option<PathBuf>) -> TrainerOptions {
+    let mut o = TrainerOptions::new("tiny", 2, 0);
+    o.generator = GeneratorConfig {
+        len_mu: 2.5,
+        len_sigma: 0.5,
+        min_len: 2,
+        max_len: 60,
+        num_users: 400,
+        num_items: 250,
+        new_user_rate: 0.3,
+        new_item_rate: 0.3,
+        ..Default::default()
+    };
+    o.train.target_tokens = 900;
+    o.train.lr = 0.01;
+    o.shard_capacity = 1024;
+    o.collect_gauc = false;
+    o.threads = threads;
+    let mut online = OnlineOptions::new(3);
+    online.intervals = 30;
+    online.feature_ttl = 9;
+    online.admission = Some(AdmissionConfig::new(2, 0.05));
+    online.day_every = 2;
+    online.sync_dir = sync_dir;
+    o.online = Some(online);
+    o
+}
+
+fn run(threads: usize, sync_dir: Option<PathBuf>) -> TrainReport {
+    let engine = Engine::reference(7).unwrap();
+    Trainer::new(online_opts(threads, sync_dir), engine)
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Bit-level fingerprint: losses, samples, checksum, and every online
+/// counter.
+fn fingerprint(r: &TrainReport) -> (Vec<(u64, u64, u64, u64, u64, u64)>, u64, u64, u64) {
+    (
+        r.steps
+            .iter()
+            .map(|s| {
+                (
+                    s.loss_ctr.to_bits(),
+                    s.loss_ctcvr.to_bits(),
+                    s.samples,
+                    s.online_admitted,
+                    s.online_expired,
+                    s.online_sync_bytes,
+                )
+            })
+            .collect(),
+        r.embedding_checksum,
+        r.online_admitted,
+        r.online_rejected,
+    )
+}
+
+#[test]
+fn online_run_bit_identical_across_thread_counts_and_exercises_all_paths() {
+    let dir1 = tmp("t1");
+    let dir4 = tmp("t4");
+    let r1 = run(1, Some(dir1.clone()));
+    let r4 = run(4, Some(dir4.clone()));
+
+    assert_eq!(r1.steps.len(), 90, "30 intervals × 3 steps");
+    assert_eq!(
+        fingerprint(&r1),
+        fingerprint(&r4),
+        "online run must be bit-identical across --threads {{1,4}}"
+    );
+
+    // The run actually exercised the online machinery.
+    assert!(r1.online_admitted > 0, "admissions must happen");
+    assert!(r1.online_rejected > 0, "one-shot ids must be rejected");
+    assert!(r1.online_expired > 0, "TTL must retire stale rows");
+    assert!(r1.online_synced_rows > 0, "deltas must carry rows");
+    assert!(r1.online_sync_bytes > 0);
+    assert!(
+        r1.steps.iter().any(|s| s.sim_sync_s > 0.0),
+        "sync traffic must be accounted in simulated time"
+    );
+    // Off-boundary steps carry no counters.
+    assert!(r1
+        .steps
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| (i + 1) % 3 != 0)
+        .all(|(_, s)| s.online_sync_bytes == 0 && s.sim_sync_s == 0.0));
+
+    // Strongest witness: the delta snapshot FILES are byte-identical
+    // across thread counts.
+    let seqs = list_delta_seqs(&dir1).unwrap();
+    assert_eq!(seqs.len(), 30, "one delta per interval");
+    assert_eq!(seqs, list_delta_seqs(&dir4).unwrap());
+    for &seq in &seqs {
+        let m1 = load_delta_meta(&dir1, seq).unwrap();
+        for rank in 0..m1.world {
+            let p = format!("delta_{seq:05}/sparse_rank{rank:05}_of{}.bin", m1.world);
+            let b1 = std::fs::read(dir1.join(&p)).unwrap();
+            let b4 = std::fs::read(dir4.join(&p)).unwrap();
+            assert_eq!(b1, b4, "delta {seq} rank {rank} bytes diverged");
+        }
+    }
+    std::fs::remove_dir_all(dir1).ok();
+    std::fs::remove_dir_all(dir4).ok();
+}
+
+#[test]
+fn replaying_deltas_reconstructs_the_final_trainer_state() {
+    let dir = tmp("recon");
+    let report = run(1, Some(dir.clone()));
+
+    // The base state is empty (deltas start at interval 1 and the
+    // tracker has recorded every mutation since step 0), so replaying
+    // all deltas in order rebuilds each rank's shard exactly.
+    let seqs = list_delta_seqs(&dir).unwrap();
+    let meta0 = load_delta_meta(&dir, seqs[0]).unwrap();
+    let mut checksum = 0u64;
+    let mut rows = 0usize;
+    for rank in 0..meta0.world {
+        // Seed/capacity are irrelevant: rows install with exact bits.
+        let table = ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(meta0.dim).with_capacity(64).with_seed(0xDEAD),
+            8,
+        );
+        let mut opt = SparseAdam::new(meta0.dim, AdamParams::default());
+        for &seq in &seqs {
+            let m = load_delta_meta(&dir, seq).unwrap();
+            let (upserts, removed) = load_delta_shard(&dir, &m, rank).unwrap();
+            apply_delta(&table, &mut opt, upserts, &removed);
+        }
+        checksum = checksum.wrapping_add(table.content_checksum());
+        rows += table.len();
+    }
+    assert_eq!(
+        checksum, report.embedding_checksum,
+        "base + ordered deltas must reconstruct the exact final embedding state"
+    );
+    assert_eq!(rows, report.table_rows, "row counts must match");
+    assert!(rows > 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn ttl_bounds_resident_rows_versus_no_ttl() {
+    // Identical stream; the only difference is the sweeper. The TTL run
+    // must end with fewer resident rows and report expiries.
+    let with_ttl = run(1, None);
+    let engine = Engine::reference(7).unwrap();
+    let mut o = online_opts(1, None);
+    if let Some(online) = &mut o.online {
+        online.feature_ttl = 0;
+    }
+    let no_ttl = Trainer::new(o, engine).unwrap().run().unwrap();
+    assert_eq!(no_ttl.online_expired, 0, "no TTL, no expiries");
+    assert!(with_ttl.online_expired > 0);
+    assert!(
+        with_ttl.table_rows < no_ttl.table_rows,
+        "TTL must bound the table: {} vs {}",
+        with_ttl.table_rows,
+        no_ttl.table_rows
+    );
+}
+
+#[test]
+fn offline_runs_report_zero_online_activity() {
+    let mut o = TrainerOptions::new("tiny", 2, 6);
+    o.generator = GeneratorConfig {
+        len_mu: 2.5,
+        len_sigma: 0.5,
+        min_len: 2,
+        max_len: 60,
+        num_users: 400,
+        num_items: 250,
+        ..Default::default()
+    };
+    o.train.target_tokens = 600;
+    o.collect_gauc = false;
+    let engine = Engine::reference(7).unwrap();
+    let r = Trainer::new(o, engine).unwrap().run().unwrap();
+    assert_eq!(r.online_admitted, 0);
+    assert_eq!(r.online_rejected, 0);
+    assert_eq!(r.online_expired, 0);
+    assert_eq!(r.online_sync_bytes, 0);
+    assert!(r.steps.iter().all(|s| s.sim_sync_s == 0.0));
+    // Offline table stats still surface (inserts happen; nothing evicts
+    // at this scale).
+    assert!(r.table_stats.inserts > 0);
+}
+
+#[test]
+fn trainer_rejects_contradictory_online_options() {
+    let engine = Engine::reference(7).unwrap();
+    let mut o = TrainerOptions::new("tiny", 2, 10);
+    o.online = Some(OnlineOptions::new(0));
+    assert!(Trainer::new(o, engine).is_err(), "zero sync interval");
+
+    let engine = Engine::reference(7).unwrap();
+    let mut o = TrainerOptions::new("tiny", 2, 10);
+    let mut online = OnlineOptions::new(10);
+    online.feature_ttl = 3;
+    o.online = Some(online);
+    assert!(Trainer::new(o, engine).is_err(), "ttl below sync interval");
+}
