@@ -9,13 +9,20 @@
 //! ```text
 //! <dir>/delta_<seq:05>/meta.json    seq, world, step, base_step, model,
 //!                                   dim, param_count
+//!                                   [+ group_dims when > 1 merge group]
 //! <dir>/delta_<seq:05>/dense.bin    full dense params + Adam state
 //!                                   (rank 0 — dense is tiny next to the
 //!                                   sparse tables, so it ships whole)
-//! <dir>/delta_<seq:05>/sparse_rank<r>_of<n>.bin
+//! <dir>/delta_<seq:05>/sparse_rank<r>_of<n>.bin         (merge group 0)
+//! <dir>/delta_<seq:05>/sparse_rank<r>_of<n>_g<k>.bin    (merge group k ≥ 1)
 //!         u64 n_removed | removed ids u64 × n_removed
 //!         | u64 count | u64 dim | rows (id | row | m | v | t) × count
 //! ```
+//!
+//! Heterogeneous schemas sync **one shard file per merge group** at the
+//! group's dim ([`save_delta_groups`] / [`load_delta_shard_group`]);
+//! a single-group save is byte-identical to the historical layout
+//! (legacy file name, no `group_dims` key).
 //!
 //! The row wire format is byte-identical to the full checkpoint's
 //! ([`super::save`]), so one codec serves both. **Reconstruction
@@ -63,18 +70,46 @@ fn sparse_delta_path(dir: &Path, seq: u64, rank: usize, world: usize) -> PathBuf
     delta_dir(dir, seq).join(format!("sparse_rank{rank:05}_of{world}.bin"))
 }
 
-/// Write one rank's shard of a delta snapshot (rank 0 additionally
-/// writes the metadata and the full dense replica). Returns the bytes
-/// of this rank's sparse payload — the sync volume the trainer accounts
-/// per interval.
-pub fn save_delta(
+/// Merge group `group`'s shard file of delta `seq` (group 0 keeps the
+/// historical single-group name).
+fn sparse_delta_group_path(
+    dir: &Path,
+    seq: u64,
+    rank: usize,
+    world: usize,
+    group: usize,
+) -> PathBuf {
+    if group == 0 {
+        sparse_delta_path(dir, seq, rank, world)
+    } else {
+        delta_dir(dir, seq).join(format!("sparse_rank{rank:05}_of{world}_g{group}.bin"))
+    }
+}
+
+/// One merge group's payload for [`save_delta_groups`]: the group's
+/// embedding dim, the rows upserted since the last sync and the ids
+/// retired in between.
+pub struct GroupDelta<'a> {
+    pub dim: usize,
+    pub upserts: &'a [SparseRow],
+    pub removed: &'a [GlobalId],
+}
+
+/// Write one rank's shard of a delta snapshot, one sparse file per
+/// merge group (rank 0 additionally writes the metadata — including
+/// `group_dims` when there are ≥ 2 groups — and the full dense
+/// replica). Returns the total bytes of this rank's sparse payloads —
+/// the sync volume the trainer accounts per interval. A single-group
+/// call produces byte-identical files to the historical
+/// [`save_delta`].
+pub fn save_delta_groups(
     dir: &Path,
     meta: &DeltaMeta,
     rank: usize,
     dense: Option<(&[f32], &DenseAdam)>,
-    upserts: &[SparseRow],
-    removed: &[GlobalId],
+    groups: &[GroupDelta],
 ) -> Result<usize> {
+    anyhow::ensure!(!groups.is_empty(), "delta needs at least one group");
     let ddir = delta_dir(dir, meta.seq);
     std::fs::create_dir_all(&ddir)?;
     if rank == 0 {
@@ -89,24 +124,62 @@ pub fn save_delta(
         j.set("model", meta.model.as_str().into());
         j.set("dim", meta.dim.into());
         j.set("param_count", meta.param_count.into());
+        if groups.len() > 1 {
+            j.set(
+                "group_dims",
+                Json::Arr(groups.iter().map(|g| g.dim.into()).collect()),
+            );
+        }
         std::fs::write(ddir.join("meta.json"), j.pretty())?;
         write_dense_bin(&ddir, params, adam)?;
     }
 
-    let mut bytes = Vec::new();
-    bytes.extend_from_slice(&(removed.len() as u64).to_le_bytes());
-    for id in removed {
-        bytes.extend_from_slice(&id.to_le_bytes());
+    let mut total = 0usize;
+    for (g, gd) in groups.iter().enumerate() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(gd.removed.len() as u64).to_le_bytes());
+        for id in gd.removed {
+            bytes.extend_from_slice(&id.to_le_bytes());
+        }
+        let mut body = Vec::new();
+        for r in gd.upserts {
+            anyhow::ensure!(
+                r.row.len() == gd.dim,
+                "row dim mismatch in delta group {g}"
+            );
+            push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+        }
+        bytes.extend_from_slice(&rows_block_bytes(gd.upserts.len() as u64, gd.dim, &body));
+        total += bytes.len();
+        std::fs::write(
+            sparse_delta_group_path(dir, meta.seq, rank, meta.world, g),
+            bytes,
+        )?;
     }
-    let mut body = Vec::new();
-    for r in upserts {
-        anyhow::ensure!(r.row.len() == meta.dim, "row dim mismatch in delta");
-        push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
-    }
-    bytes.extend_from_slice(&rows_block_bytes(upserts.len() as u64, meta.dim, &body));
-    let n = bytes.len();
-    std::fs::write(sparse_delta_path(dir, meta.seq, rank, meta.world), bytes)?;
-    Ok(n)
+    Ok(total)
+}
+
+/// Write one rank's shard of a single-group delta snapshot (the
+/// historical layout). Returns the bytes of this rank's sparse payload.
+pub fn save_delta(
+    dir: &Path,
+    meta: &DeltaMeta,
+    rank: usize,
+    dense: Option<(&[f32], &DenseAdam)>,
+    upserts: &[SparseRow],
+    removed: &[GlobalId],
+) -> Result<usize> {
+    save_delta_groups(
+        dir,
+        meta,
+        rank,
+        dense,
+        &[GroupDelta {
+            dim: meta.dim,
+            upserts,
+            removed,
+        }],
+    )
 }
 
 /// Read delta `seq`'s metadata.
@@ -126,13 +199,24 @@ pub fn load_delta_meta(dir: &Path, seq: u64) -> Result<DeltaMeta> {
     })
 }
 
-/// Read one rank's shard of delta `seq`: `(upserted rows, removed ids)`.
+/// Read one rank's shard of delta `seq` (merge group 0 — the
+/// historical single-group layout): `(upserted rows, removed ids)`.
 pub fn load_delta_shard(
     dir: &Path,
     meta: &DeltaMeta,
     rank: usize,
 ) -> Result<(Vec<SparseRow>, Vec<GlobalId>)> {
-    let path = sparse_delta_path(dir, meta.seq, rank, meta.world);
+    load_delta_shard_group(dir, meta, rank, 0)
+}
+
+/// Read one rank's shard of delta `seq` for merge group `group`.
+pub fn load_delta_shard_group(
+    dir: &Path,
+    meta: &DeltaMeta,
+    rank: usize,
+    group: usize,
+) -> Result<(Vec<SparseRow>, Vec<GlobalId>)> {
+    let path = sparse_delta_group_path(dir, meta.seq, rank, meta.world, group);
     let bytes =
         std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
     if bytes.len() < 8 {
@@ -149,6 +233,16 @@ pub fn load_delta_shard(
         .collect();
     let rows = parse_sparse_file(&bytes[rows_off..])?;
     Ok((rows, removed))
+}
+
+/// Per-group dims recorded in delta `seq`'s metadata; `[meta.dim]` for
+/// single-group (historical) snapshots, which never write the key.
+pub fn load_delta_group_dims(dir: &Path, meta: &DeltaMeta) -> Result<Vec<usize>> {
+    let path = delta_dir(dir, meta.seq).join("meta.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no delta meta at {}", path.display()))?;
+    let j = Json::parse(&text).context("parse delta meta")?;
+    super::parse_group_dims(&j, meta.dim)
 }
 
 /// Sync sequence numbers present under `dir`, ascending.
@@ -199,19 +293,20 @@ pub fn snapshot_rows(table: &ConcurrentDynamicTable, opt: &SparseAdam) -> Vec<Sp
     collect_rows(table, opt, &ids)
 }
 
-/// Full checkpoint of a concurrent shard, byte-compatible with
-/// [`super::load_meta`] / [`super::load_dense`] /
-/// [`super::load_sparse_shard`]. Rows are written sorted by id, so the
-/// file bytes are identical for every `--threads` value.
-pub fn save_full(
+/// Full checkpoint of a set of concurrent shards (one per merge
+/// group), byte-compatible with [`super::load_meta`] /
+/// [`super::load_dense`] / [`super::load_sparse_shard_group`]. Rows are
+/// written sorted by id, so the file bytes are identical for every
+/// `--threads` value. With one group this is byte-identical to the
+/// historical [`save_full`] layout.
+pub fn save_full_groups(
     dir: &Path,
     meta: &CheckpointMeta,
     rank: usize,
     dense: Option<(&[f32], &DenseAdam)>,
-    table: &ConcurrentDynamicTable,
-    opt: &SparseAdam,
+    groups: &[(&ConcurrentDynamicTable, &SparseAdam)],
 ) -> Result<()> {
-    anyhow::ensure!(table.dim() == meta.dim, "table dim != meta dim");
+    anyhow::ensure!(!groups.is_empty(), "checkpoint needs at least one group");
     std::fs::create_dir_all(dir)?;
     if rank == 0 {
         let (params, adam) =
@@ -223,19 +318,41 @@ pub fn save_full(
         j.set("model", meta.model.as_str().into());
         j.set("dim", meta.dim.into());
         j.set("param_count", meta.param_count.into());
+        if groups.len() > 1 {
+            j.set(
+                "group_dims",
+                Json::Arr(groups.iter().map(|(t, _)| t.dim().into()).collect()),
+            );
+        }
         std::fs::write(dir.join("meta.json"), j.pretty())?;
         write_dense_bin(dir, params, adam)?;
     }
-    let rows = snapshot_rows(table, opt);
-    let mut body = Vec::new();
-    for r in &rows {
-        push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+    for (g, (table, opt)) in groups.iter().enumerate() {
+        let rows = snapshot_rows(table, opt);
+        let mut body = Vec::new();
+        for r in &rows {
+            push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+        }
+        std::fs::write(
+            super::sparse_group_path(dir, rank, meta.world, g),
+            rows_block_bytes(rows.len() as u64, table.dim(), &body),
+        )?;
     }
-    std::fs::write(
-        dir.join(format!("sparse_rank{rank:05}_of{}.bin", meta.world)),
-        rows_block_bytes(rows.len() as u64, meta.dim, &body),
-    )?;
     Ok(())
+}
+
+/// Full checkpoint of a single concurrent shard (the historical
+/// single-group layout).
+pub fn save_full(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    rank: usize,
+    dense: Option<(&[f32], &DenseAdam)>,
+    table: &ConcurrentDynamicTable,
+    opt: &SparseAdam,
+) -> Result<()> {
+    anyhow::ensure!(table.dim() == meta.dim, "table dim != meta dim");
+    save_full_groups(dir, meta, rank, dense, &[(table, opt)])
 }
 
 /// Install full-checkpoint rows into a concurrent shard (serving-side

@@ -85,6 +85,50 @@ fn sparse_path(dir: &Path, rank: usize, world: usize) -> std::path::PathBuf {
     dir.join(format!("sparse_rank{rank:05}_of{world}.bin"))
 }
 
+/// Merge group `group`'s sparse shard file (group 0 keeps the
+/// historical single-group name, so homogeneous checkpoints are
+/// byte-identical to pre-multi-group builds).
+pub(crate) fn sparse_group_path(
+    dir: &Path,
+    rank: usize,
+    world: usize,
+    group: usize,
+) -> std::path::PathBuf {
+    if group == 0 {
+        sparse_path(dir, rank, world)
+    } else {
+        dir.join(format!("sparse_rank{rank:05}_of{world}_g{group}.bin"))
+    }
+}
+
+/// Parse the optional `group_dims` key of a checkpoint/delta meta JSON;
+/// absent (historical single-group snapshots) ⇒ `[default_dim]`.
+pub(crate) fn parse_group_dims(j: &Json, default_dim: usize) -> Result<Vec<usize>> {
+    match j.get("group_dims").as_arr() {
+        None => Ok(vec![default_dim]),
+        Some(arr) => {
+            let mut dims = Vec::with_capacity(arr.len());
+            for v in arr {
+                dims.push(
+                    v.as_usize()
+                        .context("group_dims entries must be integers")?,
+                );
+            }
+            anyhow::ensure!(!dims.is_empty(), "group_dims must not be empty");
+            Ok(dims)
+        }
+    }
+}
+
+/// Per-group dims of the checkpoint at `dir` (`[meta.dim]` when the
+/// snapshot predates multi-group or has one group).
+pub fn load_group_dims(dir: &Path, meta: &CheckpointMeta) -> Result<Vec<usize>> {
+    let text = std::fs::read_to_string(meta_path(dir))
+        .with_context(|| format!("no checkpoint at {}", dir.display()))?;
+    let j = Json::parse(&text).context("parse checkpoint meta")?;
+    parse_group_dims(&j, meta.dim)
+}
+
 /// Save one rank's checkpoint shard. Rank 0 additionally writes the
 /// metadata and the replicated dense parameters + optimizer state.
 pub fn save(
@@ -236,16 +280,30 @@ pub(crate) fn parse_sparse_file(bytes: &[u8]) -> Result<Vec<SparseRow>> {
 }
 
 /// Load the sparse rows a new rank owns under the new world size,
-/// reading only the modulo-selected files.
+/// reading only the modulo-selected files (merge group 0 — the
+/// historical single-group layout).
 pub fn load_sparse_shard(
     dir: &Path,
     meta: &CheckpointMeta,
     new_world: usize,
     new_rank: usize,
 ) -> Result<Vec<SparseRow>> {
+    load_sparse_shard_group(dir, meta, new_world, new_rank, 0)
+}
+
+/// [`load_sparse_shard`] for merge group `group` of a multi-group
+/// checkpoint — the same modulo-selected resharding, one physical table
+/// per group.
+pub fn load_sparse_shard_group(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    new_world: usize,
+    new_rank: usize,
+    group: usize,
+) -> Result<Vec<SparseRow>> {
     let mut out = Vec::new();
     for old_rank in files_to_read(meta.world, new_world, new_rank) {
-        let path = sparse_path(dir, old_rank, meta.world);
+        let path = sparse_group_path(dir, old_rank, meta.world, group);
         let bytes = std::fs::read(&path)
             .with_context(|| format!("read {}", path.display()))?;
         for row in parse_sparse_file(&bytes)? {

@@ -157,15 +157,29 @@ impl WorkloadGenerator {
         }
     }
 
-    /// Generate one sequence under `schema`.
+    /// Generate one sequence under `schema`. Feature values are routed
+    /// by *name*, so heterogeneous schema presets (e.g.
+    /// [`Schema::meituan_mixed`]'s `exp_item_id` alias feature) work
+    /// without changing the base draw order: the default schema
+    /// consumes exactly the same RNG stream as before (user, length,
+    /// then per token item + action), and only features *beyond* the
+    /// base set draw extra samples after the base draws of their token.
     pub fn next_sequence(&mut self, schema: &Schema) -> Sequence {
         self.generated += 1;
         let user = self.sample_user();
         let len = self.sample_len();
         let city = hash_id(user, 0xC17) % self.cfg.num_cities;
         let segment = hash_id(user, 0x5E6) % 16;
-        assert_eq!(schema.num_context_features(), 3, "schema mismatch");
-        let context = vec![user, city, segment];
+        let context: Vec<u64> = schema
+            .context_features
+            .iter()
+            .map(|f| match f.name.as_str() {
+                "user_id" => user,
+                "user_city" => city,
+                "user_segment" => segment,
+                other => panic!("generator does not know context feature `{other}`"),
+            })
+            .collect();
 
         let mut tokens = Vec::with_capacity(len);
         let mut cates = Vec::with_capacity(len);
@@ -175,8 +189,22 @@ impl WorkloadGenerator {
             cates.push(cate);
             let action = self.rng.gen_range(4); // click/order/fav/view
             let hour = (hash_id(user, 0x40) + t as u64 / 8) % 24;
-            assert_eq!(schema.num_token_features(), 4, "schema mismatch");
-            tokens.push(vec![item, cate, action, hour]);
+            let mut tok = Vec::with_capacity(schema.num_token_features());
+            for f in &schema.token_features {
+                let v = match f.name.as_str() {
+                    "item_id" => item,
+                    "cate_id" => cate,
+                    "action_type" => action,
+                    "hour_of_day" => hour,
+                    // Real-time exposure item: an independent draw from
+                    // the same item popularity distribution (it aliases
+                    // the item table in the merge plan).
+                    "exp_item_id" => self.sample_item(),
+                    other => panic!("generator does not know token feature `{other}`"),
+                };
+                tok.push(v);
+            }
+            tokens.push(tok);
         }
 
         let (lc, lv) = planted_logit(user, &cates, self.cfg.seed);
@@ -240,6 +268,32 @@ mod tests {
         assert!(sum.max <= 3000.0);
         assert!(sum.max > 2000.0, "long tail reaches the cap");
         assert!(sum.p50 < sum.mean, "right-skewed");
+    }
+
+    #[test]
+    fn mixed_schema_emits_exposure_items_deterministically() {
+        let s = Schema::meituan_mixed(32);
+        let mut g1 = WorkloadGenerator::new(GeneratorConfig::default());
+        let mut g2 = WorkloadGenerator::new(GeneratorConfig::default());
+        for _ in 0..10 {
+            let a = g1.next_sequence(&s);
+            let b = g2.next_sequence(&s);
+            assert_eq!(a, b);
+            assert_eq!(a.context.len(), 3);
+            for tok in &a.tokens {
+                assert_eq!(tok.len(), 5, "5 token features incl. exp_item_id");
+                assert!(
+                    tok[4] < GeneratorConfig::default().num_items,
+                    "day-0 exposure items come from the base item space"
+                );
+            }
+        }
+        // The exposure draw is independent of the history item draw.
+        let some_differ = (0..20).any(|_| {
+            let seq = g1.next_sequence(&s);
+            seq.tokens.iter().any(|t| t[0] != t[4])
+        });
+        assert!(some_differ, "exp_item_id must not mirror item_id");
     }
 
     #[test]

@@ -10,6 +10,10 @@
 use crate::embedding::merge::FeatureConfig;
 use crate::embedding::FeatureId;
 
+/// Context-feature embedding dim of the heterogeneous
+/// [`Schema::meituan_mixed`] preset (clamped to the model dim).
+pub const MIXED_CONTEXT_DIM: usize = 8;
+
 /// Declarative schema: context features (one value per sequence) and
 /// token features (one value per token).
 #[derive(Clone, Debug)]
@@ -38,6 +42,63 @@ impl Schema {
                 FeatureConfig::new("hour_of_day", d),
             ],
         }
+    }
+
+    /// Heterogeneous-dim Meituan-like schema: low-dim (8D) context
+    /// features, model-dim token features, and an exposure-item token
+    /// feature that *aliases* the history item table (`shared_table`).
+    /// [`crate::embedding::merge::MergePlan`] folds this into two merge
+    /// groups (one per dim), so the full distributed path — dedup,
+    /// exchange, gather/scatter, optimizer, checkpoints — runs at two
+    /// physical widths. Rows narrower than the model dim pool into the
+    /// *leading* components of the token embedding (zero-extension);
+    /// gradients mirror that truncation exactly.
+    pub fn meituan_mixed(emb_dim: usize) -> Schema {
+        let d = emb_dim;
+        let d_ctx = MIXED_CONTEXT_DIM.min(d);
+        Schema {
+            context_features: vec![
+                FeatureConfig::new("user_id", d_ctx),
+                FeatureConfig::new("user_city", d_ctx),
+                FeatureConfig::new("user_segment", d_ctx),
+            ],
+            token_features: vec![
+                FeatureConfig::new("item_id", d),
+                FeatureConfig::new("cate_id", d),
+                FeatureConfig::new("action_type", d),
+                FeatureConfig::new("hour_of_day", d),
+                FeatureConfig::new("exp_item_id", d).shared("item_id"),
+            ],
+        }
+    }
+
+    /// Schema preset names accepted by `--schema`.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["meituan", "meituan-mixed"]
+    }
+
+    /// Whether `name` is a known preset (CLI validation without needing
+    /// the model dim).
+    pub fn is_preset(name: &str) -> bool {
+        Self::preset_names().contains(&name)
+    }
+
+    /// Resolve a preset by name at the model's embedding dim.
+    pub fn by_name(name: &str, emb_dim: usize) -> anyhow::Result<Schema> {
+        match name {
+            "meituan" => Ok(Schema::meituan_like(emb_dim, 1)),
+            "meituan-mixed" => Ok(Schema::meituan_mixed(emb_dim)),
+            other => anyhow::bail!(
+                "unknown schema preset `{other}` (expected one of {:?})",
+                Self::preset_names()
+            ),
+        }
+    }
+
+    /// The widest feature dim — must not exceed the model dim (narrower
+    /// features zero-extend into the token embedding).
+    pub fn max_dim(&self) -> usize {
+        self.all_features().iter().map(|f| f.dim).max().unwrap_or(0)
     }
 
     /// All features, context first (the order used by merged lookups).
@@ -119,6 +180,45 @@ mod tests {
         for f in s.all_features() {
             assert_eq!(f.dim, 128);
         }
+    }
+
+    #[test]
+    fn mixed_schema_has_two_merge_groups() {
+        use crate::embedding::merge::MergePlan;
+        let s = Schema::meituan_mixed(32);
+        assert_eq!(s.num_context_features(), 3);
+        assert_eq!(s.num_token_features(), 5);
+        for f in &s.context_features {
+            assert_eq!(f.dim, MIXED_CONTEXT_DIM);
+        }
+        for f in &s.token_features {
+            assert_eq!(f.dim, 32);
+        }
+        assert_eq!(s.max_dim(), 32);
+        let plan = MergePlan::build(&s.all_features());
+        // 7 logical tables (exp_item aliases item), 2 dim groups.
+        assert_eq!(plan.ops_before, 7);
+        assert_eq!(plan.ops_after, 2);
+        // The alias pair lands on the same (group, table).
+        assert_eq!(
+            plan.feature_to_table["item_id"],
+            plan.feature_to_table["exp_item_id"]
+        );
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert!(Schema::is_preset("meituan"));
+        assert!(Schema::is_preset("meituan-mixed"));
+        assert!(!Schema::is_preset("bogus"));
+        let s = Schema::by_name("meituan", 16).unwrap();
+        assert_eq!(s.all_features().len(), 7);
+        let m = Schema::by_name("meituan-mixed", 16).unwrap();
+        assert_eq!(m.all_features().len(), 8);
+        assert!(Schema::by_name("bogus", 16).is_err());
+        // Degenerate tiny dim: context dim clamps to the model dim.
+        let t = Schema::meituan_mixed(4);
+        assert!(t.all_features().iter().all(|f| f.dim <= 4));
     }
 
     #[test]

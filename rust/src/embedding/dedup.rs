@@ -387,6 +387,17 @@ pub struct DedupVolume {
 }
 
 impl DedupVolume {
+    /// Accumulate another volume (field-wise sum) — used to fold
+    /// per-group and per-worker volumes into aggregates.
+    pub fn merge(&mut self, other: &DedupVolume) {
+        self.ids_raw += other.ids_raw;
+        self.ids_sent += other.ids_sent;
+        self.emb_rows_raw += other.emb_rows_raw;
+        self.emb_rows_sent += other.emb_rows_sent;
+        self.lookups_raw += other.lookups_raw;
+        self.lookups_done += other.lookups_done;
+    }
+
     pub fn id_bytes_saved(&self) -> usize {
         (self.ids_raw - self.ids_sent) * 8
     }

@@ -15,6 +15,28 @@
 //!   feature-table index: `ID = (i << (63 − k)) | x`.
 //! - [`HashTableCollection`] — the merged physical tables, one dynamic
 //!   hash table per merge group, addressed by global IDs.
+//!
+//! # Multi-group data flow (the trainer's path)
+//!
+//! The distributed trainer instantiates **one physical shard table per
+//! merge group** on every worker (each behind its own
+//! [`crate::online::OnlineTable`] gate and
+//! [`crate::embedding::sharded::ShardedEmbedding`] exchange). Per micro
+//! round the occurrence stream is split per group
+//! ([`crate::train::features::BatchIds`]), and every exchange phase —
+//! stage-1/2 dedup, the ID and embedding all-to-alls, gather/scatter,
+//! the gradient push, row-wise Adam, checkpoints and delta sync — runs
+//! once per group at the group's width, in ascending group order on
+//! every rank (the comm lanes are FIFO, so the collective discipline is
+//! preserved). IDs are globalized through [`GlobalIdCodec`] *before*
+//! they enter the exchange, so an id is unique system-wide and aliased
+//! features ([`FeatureConfig::shared`]) transparently hit one row set.
+//!
+//! **Single-group compatibility guarantee:** when the schema is
+//! homogeneous (one dim ⇒ one group, e.g. `Schema::meituan_like`), the
+//! per-group machinery degenerates to exactly one table, one exchange
+//! and one optimizer whose message contents, arithmetic order and file
+//! formats are byte-identical to the historical single-table path.
 
 use std::collections::BTreeMap;
 
@@ -190,6 +212,16 @@ impl MergePlan {
             feature_to_table,
             codec,
         }
+    }
+
+    /// Number of merge groups (= physical tables after fusion).
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Per-group embedding dims, in group order.
+    pub fn group_dims(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.dim).collect()
     }
 
     /// Translate (feature name, local id) → (group index, global id).

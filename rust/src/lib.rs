@@ -52,6 +52,18 @@
 //!   [`embedding::sharded::ShardedEmbedding::complete_backward`] — the
 //!   three-phase sharded exchange over the communicator's posted
 //!   (isend/irecv-style) all-to-all lanes.
+//! - [`embedding::merge`] — automatic table merging (§4.2) end to end:
+//!   `--schema meituan-mixed` declares heterogeneous feature dims (8D
+//!   context + model-dim token features with a `shared_table` alias),
+//!   [`embedding::merge::MergePlan`] folds them into one physical
+//!   table per dim group, and the trainer runs the **entire**
+//!   distributed path per group — per-group occurrence streams
+//!   ([`train::features::BatchIds`]), per-group sharded exchanges and
+//!   dedup, per-group row-wise Adam, and per-group checkpoint/delta
+//!   shards — with fused-vs-unmerged lookup-op counts surfaced in
+//!   `StepRecord`/`TrainReport`. Homogeneous schemas form exactly one
+//!   group and stay byte-identical to the historical single-table
+//!   path (the single-group compatibility guarantee).
 //! - [`embedding::dedup`] — two-stage dedup with a size-switched
 //!   hash/sort kernel ([`embedding::dedup::DedupKernel`]) and
 //!   pool-parallel sort, gather and scatter kernels. The kernel

@@ -4,6 +4,7 @@
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
 //!                 [--cross-step on|off] [--threads N] [--lr 0.001]
+//!                 [--schema meituan|meituan-mixed]
 //! mtgrboost train --mode online --sync-interval 50 [--intervals N]
 //!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
 //!                 [--sync-dir DIR] [--day-every N] ...
@@ -21,6 +22,16 @@
 //! Contradictory combinations (`--steps` with online mode, zero
 //! `--sync-interval`, TTL below the sync interval, online-only knobs in
 //! offline mode) are rejected up front.
+//!
+//! `--schema meituan-mixed` switches the trainer onto the
+//! heterogeneous-dim feature schema (8D context features, model-dim
+//! token features, an exposure-item `shared_table` alias): automatic
+//! table merging folds it into one physical table per dim group and the
+//! whole distributed path runs per group. Unknown preset names and
+//! contradictory combos (`--no-merging` under `train` — the trainer has
+//! no unmerged path, the ablation lives in `sim`; `--schema` under
+//! `sim`) are rejected up front; online knobs apply uniformly to every
+//! group.
 
 use anyhow::{bail, Context, Result};
 
@@ -51,6 +62,32 @@ fn parse_dedup(s: &str) -> Result<DedupStrategy> {
         "two-stage" | "twostage" => DedupStrategy::TwoStage,
         other => bail!("unknown dedup strategy `{other}`"),
     })
+}
+
+/// Parse + validate `--schema`, rejecting unknown presets and
+/// combinations the trainer cannot honor (mirrors the `--mode`
+/// validation style: fail at the flag layer with flag-named errors;
+/// `TrainerOptions::validate` re-checks the preset name).
+fn parse_schema(args: &Args) -> Result<String> {
+    let name = args.get_or("schema", "meituan");
+    if !Schema::is_preset(&name) {
+        bail!(
+            "unknown --schema `{name}` (expected one of {:?})",
+            Schema::preset_names()
+        );
+    }
+    // The real trainer has no unmerged path — it always builds one
+    // physical table per dim group — so accepting the flag would
+    // silently report fused lookup-op counts as if the ablation ran.
+    // The unmerged ablation lives in `sim` (`--no-merging` there).
+    if args.has_flag("no-merging") {
+        bail!(
+            "--no-merging applies to `sim` only: the trainer always runs \
+             the merged path (one physical table per dim group); its \
+             fused-vs-unmerged op counts are reported either way"
+        );
+    }
+    Ok(name)
 }
 
 /// Parse and validate `--mode` plus the online-only knobs, rejecting
@@ -149,7 +186,6 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let mut opts = TrainerOptions::new(&model, world, steps);
     opts.train.sequence_balancing = !args.has_flag("no-balancing");
-    opts.train.table_merging = !args.has_flag("no-merging");
     opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
     opts.overlap = parse_overlap(&args.get_or("overlap", "on"))?;
     // Cross-step pipelining (post step s+1's first ID exchange during
@@ -168,6 +204,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.generator.len_mu = args.get_f64("len-mu", 3.8);
     opts.generator.max_len = args.get_usize("max-len", 256);
     opts.log_every = args.get_usize("log-every", 10);
+    // Feature schema preset: `meituan` (homogeneous, one merge group)
+    // or `meituan-mixed` (8D context + model-dim token features — the
+    // multi-group table-merging path). Online knobs apply uniformly to
+    // every group.
+    opts.schema = parse_schema(args)?;
     opts.online = parse_online_mode(args)?;
     let default_warmup = match &opts.online {
         Some(o) => o.sync_interval,
@@ -249,11 +290,33 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.dedup_volume.lookups_raw,
         report.dedup_volume.lookups_done
     );
+    println!(
+        "lookup ops           : {} merged vs {} unmerged ({} merge group{})",
+        report.lookup_ops_merged,
+        report.lookup_ops_unmerged,
+        report.group_dims.len(),
+        if report.group_dims.len() == 1 { "" } else { "s" }
+    );
+    if report.group_dims.len() > 1 {
+        for (g, dim) in report.group_dims.iter().enumerate() {
+            let v = &report.group_volumes[g];
+            println!(
+                "  group {g} ({dim:>3}D)     : {} rows, ids {} -> {}, lookups {} -> {}",
+                report.group_rows[g], v.ids_raw, v.ids_sent, v.lookups_raw, v.lookups_done
+            );
+        }
+    }
     println!("\nphase decomposition (wall):\n{}", report.phases.report());
     Ok(())
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
+    if args.get("schema").is_some() {
+        bail!(
+            "--schema only applies to `train`; the simulator models the \
+             schema analytically (use --merge-groups for the fused-op count)"
+        );
+    }
     let model = args.get_or("model", "4g");
     let world = args.get_usize("world", 8);
     let dim_factor = args.get_usize("dim-factor", 1);
@@ -276,6 +339,18 @@ fn cmd_sim(args: &Args) -> Result<()> {
     };
     opts.fixed_batch = args.get_usize("batch", 32);
     opts.target_tokens = args.get_usize("target-tokens", 600 * 32);
+    // Fused lookup ops per exchange with merging on: one per merge
+    // group (heterogeneous dims cannot fuse below one op per dim, nor
+    // above one op per logical table). Validated here so the CLI errors
+    // like every other flag instead of panicking inside simulate().
+    opts.merge_groups = args.get_usize("merge-groups", 1);
+    let logical_tables = opts.token_features + opts.context_features;
+    if opts.merge_groups < 1 || opts.merge_groups > logical_tables {
+        bail!(
+            "--merge-groups must be in 1..={logical_tables} (one fused lookup op \
+             per dim group, at most one per logical table)"
+        );
+    }
 
     let r = simulate(&opts);
     println!("world                : {world} GPUs");
@@ -380,6 +455,61 @@ mod tests {
         ]);
         let o = parse_online_mode(&a).unwrap().unwrap();
         assert_eq!(o.admission.unwrap().threshold, u32::MAX);
+    }
+
+    #[test]
+    fn schema_flag_validation() {
+        // Unknown preset names are rejected with the candidate list.
+        let a = args_of(&["train", "--schema", "bogus"]);
+        let err = parse_schema(&a).unwrap_err().to_string();
+        assert!(err.contains("unknown --schema"), "{err}");
+        assert!(err.contains("meituan-mixed"), "candidates listed: {err}");
+
+        // Known presets parse; omission defaults to the homogeneous one.
+        let a = args_of(&["train", "--schema", "meituan-mixed"]);
+        assert_eq!(parse_schema(&a).unwrap(), "meituan-mixed");
+        let a = args_of(&["train"]);
+        assert_eq!(parse_schema(&a).unwrap(), "meituan");
+    }
+
+    #[test]
+    fn train_rejects_no_merging() {
+        // The trainer has no unmerged path (one physical table per dim
+        // group always); a silently ignored flag would make the fused
+        // op counts in the report look like a measured ablation.
+        for argv in [
+            &["train", "--schema", "meituan-mixed", "--no-merging"][..],
+            &["train", "--no-merging"][..],
+        ] {
+            let a = Args::parse(argv.iter().map(|s| s.to_string()), &["no-merging"]);
+            let err = parse_schema(&a).unwrap_err().to_string();
+            assert!(err.contains("--no-merging"), "{err}");
+            assert!(err.contains("sim"), "points at the sim ablation: {err}");
+        }
+        // Without the flag both schemas parse.
+        let a = args_of(&["train", "--schema", "meituan-mixed"]);
+        assert!(parse_schema(&a).is_ok());
+    }
+
+    #[test]
+    fn online_knobs_apply_uniformly_across_schema_groups() {
+        // `--schema meituan-mixed --mode online` parses to ONE
+        // OnlineOptions — there is deliberately no per-group TTL or
+        // sync-interval syntax, so the knobs cannot diverge per group.
+        let a = args_of(&[
+            "train", "--schema", "meituan-mixed", "--mode", "online",
+            "--sync-interval", "10", "--feature-ttl", "20", "--intervals", "2",
+        ]);
+        assert_eq!(parse_schema(&a).unwrap(), "meituan-mixed");
+        let o = parse_online_mode(&a).unwrap().unwrap();
+        assert_eq!(o.sync_interval, 10);
+        assert_eq!(o.feature_ttl, 20);
+        // Contradictions within the uniform knobs still fail fast.
+        let a = args_of(&[
+            "train", "--schema", "meituan-mixed", "--mode", "online",
+            "--sync-interval", "20", "--feature-ttl", "5",
+        ]);
+        assert!(parse_online_mode(&a).is_err(), "ttl below interval");
     }
 
     #[test]

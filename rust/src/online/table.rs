@@ -25,6 +25,14 @@
 //! observe `&mut self`, the trainer marks the updated ids explicitly
 //! via [`OnlineTable::mark_updated`] right after the optimizer applies
 //! — a serial pass over the already-unique id list.
+//!
+//! Under a heterogeneous schema the trainer instantiates **one gate per
+//! merge group** (each with its own admission sketch, touch map and
+//! delta tracker over its own group table). The online knobs —
+//! admission config, TTL, sync cadence — are global options applied
+//! uniformly to every gate; global IDs are unique across groups
+//! ([`crate::embedding::merge::GlobalIdCodec`]), so per-group sketches
+//! never alias each other's ids.
 
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dedup::IdMap;

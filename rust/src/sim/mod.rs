@@ -144,6 +144,12 @@ pub struct SimOptions {
     /// Merged lookup ops (true) vs one op per logical table (false);
     /// per-op fixed launch overhead models the §4.2 fusion win.
     pub table_merging: bool,
+    /// Merge groups the schema's dims fold into: with merging on, one
+    /// fused lookup op per *group* (a heterogeneous-dim schema cannot
+    /// fuse below one op per distinct dim). 1 = homogeneous (the
+    /// historical default, byte-identical); must be ≤ the logical table
+    /// count.
+    pub merge_groups: usize,
     pub backend: TableBackend,
     // ---- batching --------------------------------------------------
     /// Per-device batch size when balancing is off.
@@ -175,6 +181,7 @@ impl SimOptions {
             overlap: false,
             cross_step: false,
             table_merging: true,
+            merge_groups: 1,
             backend: TableBackend::DynamicHash,
             fixed_batch: batch,
             target_tokens: avg_len * batch,
@@ -272,14 +279,20 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
     let f = opts.token_features;
     let params_bytes = opts.model.dense_params() * 4;
     let allreduce_s = opts.net.all_reduce_time(world, params_bytes);
-    // Lookup-op launch overhead: merged = 1 fused op, unmerged = one op
-    // per logical table (F + C tables). Each op costs a kernel launch +
-    // collective setup (~60 µs on GPU+NCCL) on each of the three
-    // exchange rounds (id a2a, emb a2a, grad a2a).
+    // Lookup-op launch overhead: merged = one fused op per merge group
+    // (1 for a homogeneous schema), unmerged = one op per logical table
+    // (F + C tables). Each op costs a kernel launch + collective setup
+    // (~60 µs on GPU+NCCL) on each of the three exchange rounds (id
+    // a2a, emb a2a, grad a2a).
+    let logical_tables = opts.token_features + opts.context_features;
+    assert!(
+        opts.merge_groups >= 1 && opts.merge_groups <= logical_tables,
+        "merge_groups must be in 1..=logical tables ({logical_tables})"
+    );
     let ops = if opts.table_merging {
-        1
+        opts.merge_groups
     } else {
-        opts.token_features + opts.context_features
+        logical_tables
     };
     let op_overhead = 6.0e-5 * ops as f64 * 3.0;
 
@@ -710,6 +723,32 @@ mod tests {
         let mut unmerged = merged.clone();
         unmerged.table_merging = false;
         assert!(simulate(&merged).throughput > simulate(&unmerged).throughput);
+    }
+
+    #[test]
+    fn heterogeneous_groups_sit_between_fused_and_unmerged() {
+        // A mixed-dim schema fuses to one op per dim group: more groups
+        // ⇒ more launch overhead than full fusion, still far below one
+        // op per logical table.
+        let mut one = quick_opts(8);
+        one.merge_groups = 1;
+        let mut four = one.clone();
+        four.merge_groups = 4;
+        let mut unmerged = one.clone();
+        unmerged.table_merging = false;
+        let t1 = simulate(&one).throughput;
+        let t4 = simulate(&four).throughput;
+        let tu = simulate(&unmerged).throughput;
+        assert!(t1 >= t4, "fewer groups cannot be slower: {t1} vs {t4}");
+        assert!(t4 > tu, "4 fused groups still beat 40 per-table ops");
+    }
+
+    #[test]
+    #[should_panic(expected = "merge_groups")]
+    fn merge_groups_out_of_range_rejected() {
+        let mut o = quick_opts(4);
+        o.merge_groups = o.token_features + o.context_features + 1;
+        let _ = simulate(&o);
     }
 
     #[test]

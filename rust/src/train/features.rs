@@ -3,13 +3,24 @@
 //! tensor the L2 model consumes, and scatter the model's embedding
 //! gradient back onto the contributing occurrences.
 //!
-//! Layout: for each sequence `b` (in batch order) the occurrence stream
-//! is `context ids (C)`, then `F token-feature ids` per token. Token
-//! embeddings are the SUM of their feature rows plus the pooled context
-//! embedding (context features influence every position); gradients
-//! mirror that sum exactly (each contributing occurrence receives the
-//! token's gradient; context occurrences receive the sequence-summed
-//! gradient).
+//! The occurrence stream is split **per merge group**
+//! ([`crate::embedding::merge::MergePlan`]): each feature routes to
+//! exactly one group, and each group's IDs form their own
+//! occurrence-ordered list at the group's embedding width — the unit
+//! the per-group [`crate::embedding::sharded::ShardedEmbedding`]
+//! exchanges operate on. With a homogeneous schema there is exactly one
+//! group and the stream is byte-identical to the historical flat
+//! layout.
+//!
+//! Layout within a group: for each sequence `b` (in batch order) the
+//! group's occurrences are `its context ids`, then `its token-feature
+//! ids` per token, features in declaration order. Token embeddings are
+//! the SUM of their feature rows plus the pooled context embedding
+//! (context features influence every position); rows narrower than the
+//! model dim add into the *leading* components (zero-extension).
+//! Gradients mirror that sum exactly: each contributing occurrence
+//! receives the leading `dim_g` components of the token's gradient;
+//! context occurrences receive the sequence-summed gradient.
 
 use crate::balance::Batch;
 use crate::data::schema::Schema;
@@ -17,90 +28,131 @@ use crate::embedding::merge::MergePlan;
 use crate::embedding::GlobalId;
 use crate::util::pool::{SharedSliceMut, WorkerPool};
 
-/// Flattened occurrence ids + the layout needed to pool and scatter.
+/// One merge group's flattened occurrence ids + pooling layout.
+#[derive(Clone, Debug)]
+pub struct GroupIds {
+    /// The group's embedding dim (row width on the wire and in the
+    /// shard table).
+    pub dim: usize,
+    /// Occurrence-ordered global IDs of this group (context-first per
+    /// sequence).
+    pub ids: Vec<GlobalId>,
+    /// Per-sequence (context_offset, token_offset, len) in this group's
+    /// occurrence space.
+    layout: Vec<(usize, usize, usize)>,
+    /// Context / token features routed to this group.
+    n_ctx: usize,
+    n_tok: usize,
+}
+
+/// Flattened occurrence ids for a batch, one stream per merge group.
 #[derive(Clone, Debug)]
 pub struct BatchIds {
-    /// Occurrence-ordered global IDs (context-first per sequence).
-    pub ids: Vec<GlobalId>,
-    /// Per-sequence (context_offset, token_offset, len).
-    layout: Vec<(usize, usize, usize)>,
-    n_ctx: usize,
-    n_tok_feat: usize,
+    /// Per merge-plan group, in group order.
+    pub groups: Vec<GroupIds>,
+    n_sequences: usize,
 }
 
 impl BatchIds {
-    /// Build the occurrence stream for a batch under the merge plan
+    /// Build the occurrence streams for a batch under the merge plan
     /// (serial reference; see [`build_pooled`](Self::build_pooled)).
     pub fn build(batch: &Batch, schema: &Schema, plan: &MergePlan) -> BatchIds {
         Self::build_pooled(batch, schema, plan, None)
     }
 
     /// [`build`](Self::build) with the per-token ID-mapping pass fanned
-    /// across `pool` — the last serial per-token pass in the step.
-    /// Every sequence owns a contiguous occurrence span whose bounds
-    /// are a pure function of the sequence lengths, so chunks write
-    /// disjoint windows and each id is a pure function of its
-    /// occurrence: the output is bit-identical for every pool size.
+    /// across `pool`. Every sequence owns a contiguous occurrence span
+    /// *per group* whose bounds are a pure function of the sequence
+    /// lengths, so chunks write disjoint windows and each id is a pure
+    /// function of its occurrence: the output is bit-identical for
+    /// every pool size.
     pub fn build_pooled(
         batch: &Batch,
         schema: &Schema,
         plan: &MergePlan,
         pool: Option<&WorkerPool>,
     ) -> BatchIds {
-        let n_ctx = schema.num_context_features();
-        let n_tok = schema.num_token_features();
+        let n_groups = plan.num_groups();
         let n = batch.sequences.len();
-        // Span layout first (cheap, serial): sequence `b` owns
-        // occurrences `[layout[b].0, layout[b].0 + n_ctx + len·n_tok)`.
-        let mut layout = Vec::with_capacity(n);
-        let mut off = 0usize;
-        for seq in &batch.sequences {
-            layout.push((off, off + n_ctx, seq.len()));
-            off += n_ctx + seq.len() * n_tok;
+        // Route features to groups (declaration order within a group).
+        let mut ctx_feats: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        let mut tok_feats: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        for (f, fc) in schema.context_features.iter().enumerate() {
+            ctx_feats[plan.feature_to_table[&fc.name].0].push(f);
         }
-        let total = off;
-        let mut ids: Vec<GlobalId> = vec![0; total];
-        // Map one sequence's ids into its span (`dst` starts at the
-        // sequence's first occurrence).
-        let write_seq = |b: usize, dst: &mut [GlobalId]| {
+        for (f, fc) in schema.token_features.iter().enumerate() {
+            tok_feats[plan.feature_to_table[&fc.name].0].push(f);
+        }
+        // Span layouts first (cheap, serial): in group `g`, sequence `b`
+        // owns occurrences `[layouts[g][b].0, layouts[g][b].0 + n_ctx_g
+        // + len·n_tok_g)`.
+        let mut layouts: Vec<Vec<(usize, usize, usize)>> = Vec::with_capacity(n_groups);
+        let mut totals: Vec<usize> = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let (n_ctx, n_tok) = (ctx_feats[g].len(), tok_feats[g].len());
+            let mut layout = Vec::with_capacity(n);
+            let mut off = 0usize;
+            for seq in &batch.sequences {
+                layout.push((off, off + n_ctx, seq.len()));
+                off += n_ctx + seq.len() * n_tok;
+            }
+            layouts.push(layout);
+            totals.push(off);
+        }
+        let mut ids_bufs: Vec<Vec<GlobalId>> =
+            totals.iter().map(|&t| vec![0; t]).collect();
+
+        // Map one sequence's ids of one group into its span (`dst`
+        // starts at the sequence's first occurrence in that group).
+        let write_seq = |g: usize, b: usize, dst: &mut [GlobalId]| {
             let seq = &batch.sequences[b];
             let mut k = 0usize;
-            for (f, &id) in seq.context.iter().enumerate() {
-                let (_g, gid) = plan.global_id(&schema.context_features[f].name, id);
+            for &f in &ctx_feats[g] {
+                let (_g, gid) =
+                    plan.global_id(&schema.context_features[f].name, seq.context[f]);
                 dst[k] = gid;
                 k += 1;
             }
             for tok in &seq.tokens {
-                for (f, &id) in tok.iter().enumerate() {
-                    let (_g, gid) = plan.global_id(&schema.token_features[f].name, id);
+                for &f in &tok_feats[g] {
+                    let (_g, gid) =
+                        plan.global_id(&schema.token_features[f].name, tok[f]);
                     dst[k] = gid;
                     k += 1;
                 }
             }
         };
+        // First occurrence of sequence `b` in group `g` (end = total).
+        let occ_start =
+            |g: usize, b: usize| -> usize { if b < n { layouts[g][b].0 } else { totals[g] } };
         match pool {
             Some(p) if p.threads() > 1 && n > 1 => {
-                let occ_start =
-                    |b: usize| -> usize { if b < n { layout[b].0 } else { total } };
-                let window = SharedSliceMut::new(&mut ids[..]);
-                let window = &window;
+                let windows: Vec<SharedSliceMut<GlobalId>> = ids_bufs
+                    .iter_mut()
+                    .map(|v| SharedSliceMut::new(&mut v[..]))
+                    .collect();
+                let windows = &windows;
                 let write_seq = &write_seq;
-                let layout = &layout;
+                let occ_start = &occ_start;
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
                     WorkerPool::chunk_ranges(n, p.threads())
                         .into_iter()
                         .map(|sr| {
-                            let (o0, o1) = (occ_start(sr.start), occ_start(sr.end));
                             Box::new(move || {
-                                // SAFETY: sequence chunks are disjoint
-                                // and each owns the contiguous
-                                // occurrence span [o0, o1).
-                                let dst = unsafe { window.slice_mut(o0, o1 - o0) };
-                                let mut cur = 0usize;
-                                for b in sr {
-                                    let span = n_ctx + layout[b].2 * n_tok;
-                                    write_seq(b, &mut dst[cur..cur + span]);
-                                    cur += span;
+                                for g in 0..n_groups {
+                                    let (o0, o1) =
+                                        (occ_start(g, sr.start), occ_start(g, sr.end));
+                                    // SAFETY: sequence chunks are
+                                    // disjoint and each owns the
+                                    // contiguous per-group occurrence
+                                    // span [o0, o1).
+                                    let dst = unsafe { windows[g].slice_mut(o0, o1 - o0) };
+                                    let mut cur = 0usize;
+                                    for b in sr.clone() {
+                                        let span = occ_start(g, b + 1) - occ_start(g, b);
+                                        write_seq(g, b, &mut dst[cur..cur + span]);
+                                        cur += span;
+                                    }
                                 }
                             }) as Box<dyn FnOnce() + Send + '_>
                         })
@@ -108,32 +160,55 @@ impl BatchIds {
                 p.run_scope(tasks);
             }
             _ => {
-                for b in 0..n {
-                    let (start, _, len) = layout[b];
-                    let span = n_ctx + len * n_tok;
-                    write_seq(b, &mut ids[start..start + span]);
+                for g in 0..n_groups {
+                    for b in 0..n {
+                        let start = layouts[g][b].0;
+                        let span = occ_start(g, b + 1) - start;
+                        write_seq(g, b, &mut ids_bufs[g][start..start + span]);
+                    }
                 }
             }
         }
+        let groups = ids_bufs
+            .into_iter()
+            .zip(layouts)
+            .enumerate()
+            .map(|(g, (ids, layout))| GroupIds {
+                dim: plan.groups[g].dim,
+                ids,
+                layout,
+                n_ctx: ctx_feats[g].len(),
+                n_tok: tok_feats[g].len(),
+            })
+            .collect();
         BatchIds {
-            ids,
-            layout,
-            n_ctx,
-            n_tok_feat: n_tok,
+            groups,
+            n_sequences: n,
         }
     }
 
     pub fn num_sequences(&self) -> usize {
-        self.layout.len()
+        self.n_sequences
     }
 
-    /// Pool looked-up rows (occurrence-ordered, `dim` wide) into the
-    /// padded (bucket_b, bucket_l, dim) embedding tensor. Sequences
-    /// beyond `bucket_l` tokens are *not* truncated by this function —
-    /// callers must have bucketized correctly (asserted).
+    /// Total occurrences across all groups.
+    pub fn total_ids(&self) -> usize {
+        self.groups.iter().map(|g| g.ids.len()).sum()
+    }
+
+    /// Token count of sequence `b`.
+    fn seq_len(&self, b: usize) -> usize {
+        self.groups.first().map_or(0, |g| g.layout[b].2)
+    }
+
+    /// Pool looked-up rows (one occurrence-ordered buffer per group,
+    /// `groups[g].dim` wide) into the padded (bucket_b, bucket_l, dim)
+    /// embedding tensor. Sequences beyond `bucket_l` tokens are *not*
+    /// truncated by this function — callers must have bucketized
+    /// correctly (asserted).
     pub fn pool(
         &self,
-        rows: &[f32],
+        rows: &[Vec<f32>],
         dim: usize,
         bucket_b: usize,
         bucket_l: usize,
@@ -144,25 +219,39 @@ impl BatchIds {
     }
 
     /// Pool one sequence's rows into its (bucket_l, dim) slot.
-    fn pool_one(&self, b: usize, rows: &[f32], dim: usize, bucket_l: usize, dst: &mut [f32]) {
-        let (ctx_off, tok_off, len) = self.layout[b];
+    fn pool_one(
+        &self,
+        b: usize,
+        rows: &[Vec<f32>],
+        dim: usize,
+        bucket_l: usize,
+        dst: &mut [f32],
+    ) {
+        let len = self.seq_len(b);
         assert!(len <= bucket_l, "sequence exceeds bucket length");
-        // Pooled context embedding.
+        // Pooled context embedding: narrower groups add into the
+        // leading components.
         let mut ctx = vec![0.0f32; dim];
-        for c in 0..self.n_ctx {
-            let r = &rows[(ctx_off + c) * dim..(ctx_off + c + 1) * dim];
-            for (a, x) in ctx.iter_mut().zip(r) {
-                *a += x;
+        for (gi, g) in self.groups.iter().enumerate() {
+            let (ctx_off, _, _) = g.layout[b];
+            for c in 0..g.n_ctx {
+                let r = &rows[gi][(ctx_off + c) * g.dim..(ctx_off + c + 1) * g.dim];
+                for (a, x) in ctx[..g.dim].iter_mut().zip(r) {
+                    *a += x;
+                }
             }
         }
         for t in 0..len {
             let e = &mut dst[t * dim..(t + 1) * dim];
             e.copy_from_slice(&ctx);
-            for f in 0..self.n_tok_feat {
-                let occ = tok_off + t * self.n_tok_feat + f;
-                let r = &rows[occ * dim..(occ + 1) * dim];
-                for (a, x) in e.iter_mut().zip(r) {
-                    *a += x;
+            for (gi, g) in self.groups.iter().enumerate() {
+                let (_, tok_off, _) = g.layout[b];
+                for f in 0..g.n_tok {
+                    let occ = tok_off + t * g.n_tok + f;
+                    let r = &rows[gi][occ * g.dim..(occ + 1) * g.dim];
+                    for (a, x) in e[..g.dim].iter_mut().zip(r) {
+                        *a += x;
+                    }
                 }
             }
         }
@@ -174,18 +263,21 @@ impl BatchIds {
     /// the result is bit-identical for every pool size.
     pub fn pool_into(
         &self,
-        rows: &[f32],
+        rows: &[Vec<f32>],
         dim: usize,
         bucket_b: usize,
         bucket_l: usize,
         pool: Option<&WorkerPool>,
         out: &mut Vec<f32>,
     ) {
-        assert_eq!(rows.len(), self.ids.len() * dim);
-        assert!(self.layout.len() <= bucket_b, "batch exceeds bucket");
+        assert_eq!(rows.len(), self.groups.len(), "one row buffer per group");
+        for (g, r) in self.groups.iter().zip(rows) {
+            assert_eq!(r.len(), g.ids.len() * g.dim, "group row arity");
+        }
+        assert!(self.n_sequences <= bucket_b, "batch exceeds bucket");
         out.clear();
         out.resize(bucket_b * bucket_l * dim, 0.0);
-        let n = self.layout.len();
+        let n = self.n_sequences;
         if n == 0 {
             return;
         }
@@ -194,7 +286,13 @@ impl BatchIds {
             Some(p) if p.threads() > 1 && n > 1 => {
                 p.parallel_for_chunks_mut(&mut out[..n * stride], n, stride, |r, chunk| {
                     for (j, b) in r.enumerate() {
-                        self.pool_one(b, rows, dim, bucket_l, &mut chunk[j * stride..(j + 1) * stride]);
+                        self.pool_one(
+                            b,
+                            rows,
+                            dim,
+                            bucket_l,
+                            &mut chunk[j * stride..(j + 1) * stride],
+                        );
                     }
                 });
             }
@@ -206,56 +304,65 @@ impl BatchIds {
         }
     }
 
-    /// Scatter one sequence's gradient into occurrence positions,
-    /// relative to `base_occ` (the first occurrence index of `dst`).
+    /// Scatter one sequence's gradient into each group's occurrence
+    /// positions, relative to `base[g]` (the first occurrence index of
+    /// `dst[g]` in group `g`'s occurrence space).
     fn scatter_one(
         &self,
         b: usize,
         emb_grad: &[f32],
         dim: usize,
         bucket_l: usize,
-        base_occ: usize,
-        dst: &mut [f32],
+        base: &[usize],
+        dst: &mut [&mut [f32]],
     ) {
-        let (ctx_off, tok_off, len) = self.layout[b];
+        let len = self.seq_len(b);
         // Context occurrences accumulate the sequence-summed grad.
         let mut ctx_g = vec![0.0f32; dim];
         for t in 0..len {
             let src = (b * bucket_l + t) * dim;
-            let g = &emb_grad[src..src + dim];
-            for (a, x) in ctx_g.iter_mut().zip(g) {
+            let g_row = &emb_grad[src..src + dim];
+            for (a, x) in ctx_g.iter_mut().zip(g_row) {
                 *a += x;
             }
-            for f in 0..self.n_tok_feat {
-                let occ = tok_off + t * self.n_tok_feat + f - base_occ;
-                dst[occ * dim..(occ + 1) * dim].copy_from_slice(g);
+            for (gi, g) in self.groups.iter().enumerate() {
+                let (_, tok_off, _) = g.layout[b];
+                for f in 0..g.n_tok {
+                    let occ = tok_off + t * g.n_tok + f - base[gi];
+                    dst[gi][occ * g.dim..(occ + 1) * g.dim]
+                        .copy_from_slice(&g_row[..g.dim]);
+                }
             }
         }
-        for c in 0..self.n_ctx {
-            let occ = ctx_off + c - base_occ;
-            dst[occ * dim..(occ + 1) * dim].copy_from_slice(&ctx_g);
+        for (gi, g) in self.groups.iter().enumerate() {
+            let (ctx_off, _, _) = g.layout[b];
+            for c in 0..g.n_ctx {
+                let occ = ctx_off + c - base[gi];
+                dst[gi][occ * g.dim..(occ + 1) * g.dim].copy_from_slice(&ctx_g[..g.dim]);
+            }
         }
     }
 
     /// Scatter the model's embedding gradient (bucket_b, bucket_l, dim)
-    /// back to occurrence order (matching `ids`).
+    /// back to per-group occurrence order (matching `groups[g].ids`).
     pub fn scatter_grad(
         &self,
         emb_grad: &[f32],
         dim: usize,
         bucket_b: usize,
         bucket_l: usize,
-    ) -> Vec<f32> {
+    ) -> Vec<Vec<f32>> {
         let mut out = Vec::new();
         self.scatter_grad_into(emb_grad, dim, bucket_b, bucket_l, None, &mut out);
         out
     }
 
-    /// [`scatter_grad`](Self::scatter_grad) into a caller-owned buffer,
-    /// fanning sequence chunks across `pool`. Each sequence owns a
-    /// contiguous occurrence span (context ids then token ids, in batch
-    /// order — the `build` layout), so chunk windows are disjoint and
-    /// the result is bit-identical for every pool size.
+    /// [`scatter_grad`](Self::scatter_grad) into caller-owned buffers
+    /// (one per group), fanning sequence chunks across `pool`. Each
+    /// sequence owns a contiguous occurrence span per group (context
+    /// ids then token ids, in batch order — the `build` layout), so
+    /// chunk windows are disjoint and the result is bit-identical for
+    /// every pool size.
     pub fn scatter_grad_into(
         &self,
         emb_grad: &[f32],
@@ -263,40 +370,62 @@ impl BatchIds {
         bucket_b: usize,
         bucket_l: usize,
         pool: Option<&WorkerPool>,
-        out: &mut Vec<f32>,
+        outs: &mut Vec<Vec<f32>>,
     ) {
         assert_eq!(emb_grad.len(), bucket_b * bucket_l * dim);
-        out.clear();
-        out.resize(self.ids.len() * dim, 0.0);
-        let n = self.layout.len();
+        let n_groups = self.groups.len();
+        outs.resize_with(n_groups, Vec::new);
+        for (g, o) in self.groups.iter().zip(outs.iter_mut()) {
+            o.clear();
+            o.resize(g.ids.len() * g.dim, 0.0);
+        }
+        let n = self.n_sequences;
         if n == 0 {
             return;
         }
-        // First occurrence of each sequence chunk (spans are contiguous).
-        let occ_start = |b: usize| -> usize {
+        // First occurrence of sequence `b` in group `g`'s space.
+        let occ_start = |g: usize, b: usize| -> usize {
             if b < n {
-                self.layout[b].0
+                self.groups[g].layout[b].0
             } else {
-                self.ids.len()
+                self.groups[g].ids.len()
             }
         };
         match pool {
             Some(p) if p.threads() > 1 && n > 1 => {
-                let window = SharedSliceMut::new(&mut out[..]);
-                let window = &window;
+                let windows: Vec<SharedSliceMut<f32>> = outs
+                    .iter_mut()
+                    .map(|o| SharedSliceMut::new(&mut o[..]))
+                    .collect();
+                let windows = &windows;
+                let occ_start = &occ_start;
                 let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
                     WorkerPool::chunk_ranges(n, p.threads())
                         .into_iter()
                         .map(|sr| {
-                            let (o0, o1) = (occ_start(sr.start), occ_start(sr.end));
                             Box::new(move || {
-                                // SAFETY: sequence chunks are disjoint
-                                // and each owns the contiguous
-                                // occurrence span [o0, o1).
-                                let dst =
-                                    unsafe { window.slice_mut(o0 * dim, (o1 - o0) * dim) };
-                                for b in sr {
-                                    self.scatter_one(b, emb_grad, dim, bucket_l, o0, dst);
+                                let base: Vec<usize> =
+                                    (0..n_groups).map(|g| occ_start(g, sr.start)).collect();
+                                let mut dsts: Vec<&mut [f32]> = (0..n_groups)
+                                    .map(|g| {
+                                        let o1 = occ_start(g, sr.end);
+                                        let d = self.groups[g].dim;
+                                        // SAFETY: sequence chunks are
+                                        // disjoint and each owns the
+                                        // contiguous per-group span
+                                        // [base[g], o1).
+                                        unsafe {
+                                            windows[g].slice_mut(
+                                                base[g] * d,
+                                                (o1 - base[g]) * d,
+                                            )
+                                        }
+                                    })
+                                    .collect();
+                                for b in sr.clone() {
+                                    self.scatter_one(
+                                        b, emb_grad, dim, bucket_l, &base, &mut dsts,
+                                    );
                                 }
                             }) as Box<dyn FnOnce() + Send + '_>
                         })
@@ -304,8 +433,11 @@ impl BatchIds {
                 p.run_scope(tasks);
             }
             _ => {
+                let base = vec![0usize; n_groups];
+                let mut dsts: Vec<&mut [f32]> =
+                    outs.iter_mut().map(|o| &mut o[..]).collect();
                 for b in 0..n {
-                    self.scatter_one(b, emb_grad, dim, bucket_l, 0, out);
+                    self.scatter_one(b, emb_grad, dim, bucket_l, &base, &mut dsts);
                 }
             }
         }
@@ -346,16 +478,68 @@ mod tests {
         )
     }
 
+    /// A mixed-dim batch: 8D context group + 4D token group (5 token
+    /// features incl. the exp_item alias).
+    fn setup_mixed() -> (Schema, MergePlan, Batch) {
+        let mut schema = Schema::meituan_mixed(4);
+        // meituan_mixed(4) clamps context to the model dim (one group);
+        // narrow it back to 2D so the plan genuinely forms two groups.
+        for f in schema.context_features.iter_mut() {
+            f.dim = 2;
+        }
+        let plan = MergePlan::build(&schema.all_features());
+        assert_eq!(plan.num_groups(), 2);
+        let seqs: Vec<Sequence> = (0..5)
+            .map(|i| Sequence {
+                user_id: i as u64,
+                context: vec![10 + i as u64, 20 + i as u64, 30 + i as u64],
+                tokens: vec![vec![i as u64, 1, 2, 3, 90 + i as u64]; 1 + (i % 3)],
+                labels: [0.0, 1.0],
+            })
+            .collect();
+        let tokens = seqs.iter().map(|s| s.len()).sum();
+        (
+            schema,
+            plan,
+            Batch {
+                sequences: seqs,
+                tokens,
+            },
+        )
+    }
+
     #[test]
     fn occurrence_count_and_order() {
         let (schema, plan, batch) = setup();
         let bi = BatchIds::build(&batch, &schema, &plan);
+        assert_eq!(bi.groups.len(), 1, "homogeneous schema: one group");
         // 3 ctx + 2×4 tok for seq 0; 3 ctx + 1×4 for seq 1.
-        assert_eq!(bi.ids.len(), 3 + 8 + 3 + 4);
+        assert_eq!(bi.groups[0].ids.len(), 3 + 8 + 3 + 4);
+        assert_eq!(bi.total_ids(), 3 + 8 + 3 + 4);
         assert_eq!(bi.num_sequences(), 2);
         // Same local id in different features maps to different globals.
         let (_, item1) = plan.global_id("item_id", 1);
-        assert_eq!(bi.ids[3], item1);
+        assert_eq!(bi.groups[0].ids[3], item1);
+    }
+
+    #[test]
+    fn mixed_schema_splits_occurrences_per_group() {
+        let (schema, plan, batch) = setup_mixed();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        assert_eq!(bi.groups.len(), 2);
+        // Group dims follow the plan (sorted ascending by dim).
+        assert_eq!(bi.groups[0].dim, 2);
+        assert_eq!(bi.groups[1].dim, 4);
+        let total_tokens: usize = batch.sequences.iter().map(|s| s.len()).sum();
+        // 2D group: only the 3 context features.
+        assert_eq!(bi.groups[0].ids.len(), 3 * batch.sequences.len());
+        // 4D group: 5 token features per token.
+        assert_eq!(bi.groups[1].ids.len(), 5 * total_tokens);
+        // The alias feature resolves to the same global id space as its
+        // host table.
+        let (_, a) = plan.global_id("item_id", 7);
+        let (_, b) = plan.global_id("exp_item_id", 7);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -364,18 +548,34 @@ mod tests {
         let bi = BatchIds::build(&batch, &schema, &plan);
         let dim = 4;
         // rows[i] = constant i+1 so pooled values are countable.
-        let rows: Vec<f32> = (0..bi.ids.len())
+        let rows: Vec<f32> = (0..bi.groups[0].ids.len())
             .flat_map(|i| vec![(i + 1) as f32; dim])
             .collect();
-        let emb = bi.pool(&rows, dim, 3, 4);
+        let emb = bi.pool(&[rows], dim, 3, 4);
         assert_eq!(emb.len(), 3 * 4 * dim);
         // Seq 0 token 0 = ctx rows (1+2+3) + token rows (4+5+6+7) = 28.
         assert_eq!(emb[0], 28.0);
-        // Seq 0 token 1 = 6 + (8+9+10+11) = 44.
-        assert_eq!(emb[(0 * 4 + 1) * dim], 44.0);
+        // Seq 0 token 1 (slot 1 of bucket_l 4) = 6 + (8+9+10+11) = 44.
+        assert_eq!(emb[dim], 44.0);
         // Padded positions zero.
-        assert_eq!(emb[(0 * 4 + 2) * dim], 0.0);
-        assert_eq!(emb[(2 * 4) * dim], 0.0); // padded sequence slot
+        assert_eq!(emb[2 * dim], 0.0);
+        assert_eq!(emb[2 * 4 * dim], 0.0); // padded sequence slot
+    }
+
+    #[test]
+    fn narrow_rows_pool_into_leading_components() {
+        let (schema, plan, batch) = setup_mixed();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        let dim = 4;
+        // Context rows (2D) all ones; token rows (4D) all zero → every
+        // real token position must read [3, 3, 0, 0] (3 ctx features).
+        let rows = vec![
+            vec![1.0f32; bi.groups[0].ids.len() * 2],
+            vec![0.0f32; bi.groups[1].ids.len() * 4],
+        ];
+        let emb = bi.pool(&rows, dim, 8, 4);
+        let e0 = &emb[0..dim];
+        assert_eq!(e0, &[3.0, 3.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -385,43 +585,108 @@ mod tests {
         let bi = BatchIds::build(&batch, &schema, &plan);
         let dim = 4;
         let mut rng = crate::util::rng::Xoshiro256::new(2);
-        let rows: Vec<f32> = (0..bi.ids.len() * dim)
+        let rows: Vec<f32> = (0..bi.groups[0].ids.len() * dim)
             .map(|_| rng.next_f32() - 0.5)
             .collect();
         let g: Vec<f32> = (0..3 * 4 * dim).map(|_| rng.next_f32() - 0.5).collect();
-        let emb = bi.pool(&rows, dim, 3, 4);
+        let emb = bi.pool(std::slice::from_ref(&rows), dim, 3, 4);
         let occ_g = bi.scatter_grad(&g, dim, 3, 4);
         let lhs: f64 = emb.iter().zip(&g).map(|(a, b)| (*a * *b) as f64).sum();
-        let rhs: f64 = rows.iter().zip(&occ_g).map(|(a, b)| (*a * *b) as f64).sum();
+        let rhs: f64 = rows.iter().zip(&occ_g[0]).map(|(a, b)| (*a * *b) as f64).sum();
         assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn scatter_is_adjoint_of_pool_mixed_dims() {
+        // The adjoint identity must hold across heterogeneous groups:
+        // <pool(rows), g> == Σ_g <rows_g, scatter(g)_g>.
+        let (schema, plan, batch) = setup_mixed();
+        let bi = BatchIds::build(&batch, &schema, &plan);
+        let dim = 4;
+        let mut rng = crate::util::rng::Xoshiro256::new(11);
+        let rows: Vec<Vec<f32>> = bi
+            .groups
+            .iter()
+            .map(|g| {
+                (0..g.ids.len() * g.dim)
+                    .map(|_| rng.next_f32() - 0.5)
+                    .collect()
+            })
+            .collect();
+        let bucket = (8usize, 4usize);
+        let g: Vec<f32> = (0..bucket.0 * bucket.1 * dim)
+            .map(|_| rng.next_f32() - 0.5)
+            .collect();
+        let emb = bi.pool(&rows, dim, bucket.0, bucket.1);
+        let occ_g = bi.scatter_grad(&g, dim, bucket.0, bucket.1);
+        let lhs: f64 = emb.iter().zip(&g).map(|(a, b)| (*a * *b) as f64).sum();
+        let rhs: f64 = rows
+            .iter()
+            .zip(&occ_g)
+            .map(|(r, og)| r.iter().zip(og).map(|(a, b)| (*a * *b) as f64).sum::<f64>())
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
     }
 
     #[test]
     fn build_pooled_bit_identical_for_every_pool_size() {
         // A batch large enough that several chunks form at 4 threads,
-        // with ragged lengths so span boundaries are nontrivial.
-        let schema = Schema::meituan_like(4, 1);
-        let plan = MergePlan::build(&schema.all_features());
-        let seqs: Vec<Sequence> = (0..37)
-            .map(|i| Sequence {
-                user_id: i as u64,
-                context: vec![i as u64, 2 * i as u64, 3 * i as u64],
-                tokens: vec![vec![i as u64, 1, 2, 3]; 1 + (i * 7) % 13],
-                labels: [0.0, 1.0],
-            })
-            .collect();
-        let tokens = seqs.iter().map(|s| s.len()).sum();
-        let batch = Batch {
-            sequences: seqs,
-            tokens,
-        };
-        let serial = BatchIds::build(&batch, &schema, &plan);
-        for threads in [1usize, 2, 4] {
-            let pool = crate::util::pool::WorkerPool::new(threads);
-            let pooled = BatchIds::build_pooled(&batch, &schema, &plan, Some(&pool));
-            assert_eq!(pooled.ids, serial.ids, "{threads} threads: ids diverged");
-            assert_eq!(pooled.layout, serial.layout, "{threads} threads: layout");
-            assert_eq!(pooled.num_sequences(), serial.num_sequences());
+        // with ragged lengths so span boundaries are nontrivial — run
+        // over BOTH the homogeneous and the mixed-dim schema.
+        for mixed in [false, true] {
+            // Mixed: 8D context group + 16D token group (2 groups).
+            let schema = if mixed {
+                Schema::meituan_mixed(16)
+            } else {
+                Schema::meituan_like(4, 1)
+            };
+            let d = schema.max_dim();
+            let n_tok_feat = schema.num_token_features();
+            let plan = MergePlan::build(&schema.all_features());
+            let seqs: Vec<Sequence> = (0..37)
+                .map(|i| Sequence {
+                    user_id: i as u64,
+                    context: vec![i as u64, 2 * i as u64, 3 * i as u64],
+                    tokens: vec![
+                        (0..n_tok_feat as u64).map(|f| i as u64 + f).collect();
+                        1 + (i * 7) % 13
+                    ],
+                    labels: [0.0, 1.0],
+                })
+                .collect();
+            let tokens = seqs.iter().map(|s| s.len()).sum();
+            let batch = Batch {
+                sequences: seqs,
+                tokens,
+            };
+            let serial = BatchIds::build(&batch, &schema, &plan);
+            if mixed {
+                assert_eq!(serial.groups.len(), 2, "mixed schema must form 2 groups");
+            }
+            // Pooled scatter reference for the same batch.
+            let grad: Vec<f32> = (0..64 * 16 * d).map(|i| (i % 23) as f32 * 0.5).collect();
+            let ref_rows: Vec<Vec<f32>> = serial
+                .groups
+                .iter()
+                .map(|g| (0..g.ids.len() * g.dim).map(|i| (i % 7) as f32).collect())
+                .collect();
+            let ref_emb = serial.pool(&ref_rows, d, 64, 16);
+            let ref_scatter = serial.scatter_grad(&grad, d, 64, 16);
+            for threads in [1usize, 2, 4] {
+                let pool = crate::util::pool::WorkerPool::new(threads);
+                let pooled = BatchIds::build_pooled(&batch, &schema, &plan, Some(&pool));
+                assert_eq!(pooled.groups.len(), serial.groups.len());
+                for (gp, gs) in pooled.groups.iter().zip(&serial.groups) {
+                    assert_eq!(gp.ids, gs.ids, "mixed={mixed} {threads}t: ids diverged");
+                    assert_eq!(gp.layout, gs.layout, "mixed={mixed} {threads}t: layout");
+                }
+                let mut emb = Vec::new();
+                pooled.pool_into(&ref_rows, d, 64, 16, Some(&pool), &mut emb);
+                assert_eq!(emb, ref_emb, "mixed={mixed} {threads}t: pooled emb");
+                let mut sc = Vec::new();
+                pooled.scatter_grad_into(&grad, d, 64, 16, Some(&pool), &mut sc);
+                assert_eq!(sc, ref_scatter, "mixed={mixed} {threads}t: scatter");
+            }
         }
     }
 
@@ -430,7 +695,7 @@ mod tests {
     fn oversized_batch_rejected() {
         let (schema, plan, batch) = setup();
         let bi = BatchIds::build(&batch, &schema, &plan);
-        let rows = vec![0.0; bi.ids.len() * 4];
+        let rows = vec![vec![0.0; bi.groups[0].ids.len() * 4]];
         let _ = bi.pool(&rows, 4, 1, 4); // 2 sequences into bucket_b = 1
     }
 }

@@ -6,9 +6,13 @@
 //!
 //! 1. **Data I/O** — per-worker seeded generator shard feeding the
 //!    batcher ([`crate::balance`]) through a prefetcher.
-//! 2. **Embedding lookup** — occurrence ids ([`features::BatchIds`])
-//!    through the model-parallel sharded exchange with two-stage dedup
-//!    ([`crate::embedding::sharded`]).
+//! 2. **Embedding lookup** — occurrence ids ([`features::BatchIds`]),
+//!    split per merge group ([`crate::embedding::merge::MergePlan`];
+//!    one physical shard table, exchange, and optimizer per group, in
+//!    group order), through the model-parallel sharded exchange with
+//!    two-stage dedup ([`crate::embedding::sharded`]). Homogeneous
+//!    schemas form one group — byte-identical to the historical
+//!    single-table path.
 //! 3. **Forward/Backward** — the AOT train artifact on the PJRT engine
 //!    (data parallelism: every worker holds a dense replica).
 //! 4. **Backward update** — sparse: gradient all-to-all onto the owning
@@ -36,7 +40,7 @@ use crate::data::schema::Schema;
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::{DynamicTableConfig, TableStats};
 use crate::embedding::merge::MergePlan;
-use crate::embedding::sharded::{PendingBackward, PendingLookup, ShardedEmbedding};
+use crate::embedding::sharded::{PendingBackward, PendingLookup, PendingReply, ShardedEmbedding};
 use crate::embedding::dedup::DedupVolume;
 use crate::embedding::GlobalId;
 use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
@@ -96,7 +100,15 @@ pub struct TrainerOptions {
     /// `sync_interval` steps. `steps` is ignored — the run is bounded
     /// by `intervals × sync_interval` (or endless when `intervals` is
     /// 0). Numerics stay bit-identical across `--threads` values.
+    /// Online knobs (admission, TTL, sync cadence) apply **uniformly to
+    /// every merge group** — there are no per-group policies.
     pub online: Option<OnlineOptions>,
+    /// Feature-schema preset (`--schema`): `"meituan"` (homogeneous
+    /// dims — one merge group, the historical path, byte-identical to
+    /// pre-multi-group builds) or `"meituan-mixed"` (8D context + d-dim
+    /// token features with a `shared_table` alias — ≥ 2 merge groups,
+    /// one physical shard table, exchange and optimizer per group).
+    pub schema: String,
 }
 
 impl TrainerOptions {
@@ -118,12 +130,19 @@ impl TrainerOptions {
             gauc_warmup: 0,
             log_every: 0,
             online: None,
+            schema: "meituan".to_string(),
         }
     }
 
     /// Reject contradictory option combinations before any thread
     /// spawns (also the backing check for the CLI's flag validation).
     pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            Schema::is_preset(&self.schema),
+            "unknown schema preset `{}` (expected one of {:?})",
+            self.schema,
+            Schema::preset_names()
+        );
         if let Some(o) = &self.online {
             o.validate()?;
         } else {
@@ -167,6 +186,14 @@ pub struct StepRecord {
     /// inter-node fabric); nonzero only on online interval boundaries.
     pub sim_sync_s: f64,
     pub wall_s: f64,
+    /// Fused lookup operators this step actually issued: one per merge
+    /// group per micro round (§4.2 operator fusion). Identical on every
+    /// rank (rounds are collectively aligned).
+    pub lookup_ops_merged: u64,
+    /// Lookup operators the same step would have issued *without* table
+    /// merging: one per logical table per micro round. The merged count
+    /// is strictly below this whenever any group fuses ≥ 2 tables.
+    pub lookup_ops_unmerged: u64,
     /// Online per-interval counters, summed across ranks; populated on
     /// interval-boundary steps of `--mode online` runs, zero otherwise.
     pub online_admitted: u64,
@@ -202,6 +229,20 @@ pub struct TrainReport {
     /// (inserts, probes, expansions, **evictions** — the
     /// memory-pressure counters).
     pub table_stats: TableStats,
+    /// Embedding dim of each merge group (len 1 for homogeneous
+    /// schemas; the order matches every other `group_*` field).
+    pub group_dims: Vec<usize>,
+    /// Per-group communication/dedup volumes, summed across workers —
+    /// per-group dedup ratios for the table-merge bench.
+    pub group_volumes: Vec<DedupVolume>,
+    /// Per-group order-independent state fingerprints (summed across
+    /// worker shards); `embedding_checksum` is their wrapping sum.
+    pub group_checksums: Vec<u64>,
+    /// Rows resident per merge group (summed across worker shards).
+    pub group_rows: Vec<usize>,
+    /// Run totals of the per-step lookup-operator counts.
+    pub lookup_ops_merged: u64,
+    pub lookup_ops_unmerged: u64,
     /// Online-mode run totals (sums of the per-interval counters in
     /// [`StepRecord`]); all zero for offline runs.
     pub online_admitted: u64,
@@ -307,7 +348,13 @@ impl Trainer {
             model_cfg.dim_factor == 1,
             "real training runs require dim_factor == 1 (use sim mode)"
         );
-        engine.manifest().model(&opts.model)?;
+        let arts = engine.manifest().model(&opts.model)?;
+        // Resolve the schema here so an unknown preset fails in
+        // Trainer::new rather than inside a worker thread. Presets are
+        // constructed *at* the model dim (context dims clamp to it), so
+        // no feature can be wider than the token embedding it pools
+        // into.
+        Schema::by_name(&opts.schema, arts.emb_dim)?;
         Ok(Trainer {
             opts,
             engine,
@@ -360,6 +407,10 @@ impl Trainer {
         let mut prefetch_occ = 0.0;
         let mut checksum = 0u64;
         let mut table_stats = TableStats::default();
+        let mut group_dims: Vec<usize> = Vec::new();
+        let mut group_volumes: Vec<DedupVolume> = Vec::new();
+        let mut group_checksums: Vec<u64> = Vec::new();
+        let mut group_rows: Vec<usize> = Vec::new();
         let n_workers = outputs.len().max(1) as f64;
         for out in outputs {
             table_stats.merge(&out.table_stats);
@@ -370,13 +421,25 @@ impl Trainer {
             table_memory += out.table_memory;
             prefetch_occ += out.prefetch_occupancy / n_workers;
             checksum = checksum.wrapping_add(out.table_checksum);
-            volume.ids_raw += out.volume.ids_raw;
-            volume.ids_sent += out.volume.ids_sent;
-            volume.emb_rows_raw += out.volume.emb_rows_raw;
-            volume.emb_rows_sent += out.volume.emb_rows_sent;
-            volume.lookups_raw += out.volume.lookups_raw;
-            volume.lookups_done += out.volume.lookups_done;
+            volume.merge(&out.volume);
             truncated += out.truncated;
+            // Per-group aggregates: every worker carries the same group
+            // structure (same schema, same plan).
+            if group_dims.is_empty() {
+                group_dims = out.group_dims.clone();
+                group_volumes = vec![DedupVolume::default(); group_dims.len()];
+                group_checksums = vec![0; group_dims.len()];
+                group_rows = vec![0; group_dims.len()];
+            }
+            for (g, v) in out.group_volumes.iter().enumerate() {
+                group_volumes[g].merge(v);
+            }
+            for (g, &c) in out.group_checksums.iter().enumerate() {
+                group_checksums[g] = group_checksums[g].wrapping_add(c);
+            }
+            for (g, &r) in out.group_rows.iter().enumerate() {
+                group_rows[g] += r;
+            }
             if out.rank == 0 {
                 steps = out.steps;
                 wall = out.wall;
@@ -393,8 +456,16 @@ impl Trainer {
         let online_expired: u64 = steps.iter().map(|s| s.online_expired).sum();
         let online_synced_rows: u64 = steps.iter().map(|s| s.online_synced_rows).sum();
         let online_sync_bytes: u64 = steps.iter().map(|s| s.online_sync_bytes).sum();
+        let lookup_ops_merged: u64 = steps.iter().map(|s| s.lookup_ops_merged).sum();
+        let lookup_ops_unmerged: u64 = steps.iter().map(|s| s.lookup_ops_unmerged).sum();
         Ok(TrainReport {
             table_stats,
+            group_dims,
+            group_volumes,
+            group_checksums,
+            group_rows,
+            lookup_ops_merged,
+            lookup_ops_unmerged,
             online_admitted,
             online_rejected,
             online_expired,
@@ -432,6 +503,10 @@ struct WorkerOutput {
     prefetch_occupancy: f64,
     table_checksum: u64,
     table_stats: TableStats,
+    group_dims: Vec<usize>,
+    group_volumes: Vec<DedupVolume>,
+    group_checksums: Vec<u64>,
+    group_rows: Vec<usize>,
 }
 
 /// One micro-batch prepared for the engine.
@@ -461,7 +536,8 @@ struct WorkerArena {
     emb: Vec<f32>,
     lengths: Vec<i32>,
     labels: Vec<f32>,
-    occ_grads: Vec<f32>,
+    /// One occurrence-gradient buffer per merge group.
+    occ_grads: Vec<Vec<f32>>,
 }
 
 fn worker_main(
@@ -476,8 +552,9 @@ fn worker_main(
     let arts = engine.manifest().model(&opts.model)?.clone();
     let dir = engine.manifest().dir.clone();
     let d = arts.emb_dim;
-    let schema = Schema::meituan_like(d, 1);
+    let schema = Schema::by_name(&opts.schema, d)?;
     let plan = MergePlan::build(&schema.all_features());
+    let n_groups = plan.num_groups();
 
     // Per-worker data shard: independent generator stream feeding a
     // background prefetcher (the paper's copy stream) so chunk
@@ -513,41 +590,53 @@ fn worker_main(
     // fan-out, row expansion, gradient aggregation and both optimizers
     // all ride it. Results are bit-identical for every pool size.
 
-    // Sparse side: one merged lock-striped shard table (table merging
-    // is reflected in lookup-op counts; physically we always store one
-    // table per merge group — here the schema is single-dim so one
-    // group). The stripe count is fixed (8) independent of `threads`,
-    // so per-stripe state — and thus the checksum — cannot depend on
-    // the pool size.
-    let table = ConcurrentDynamicTable::new(
-        DynamicTableConfig::new(d)
-            .with_capacity(opts.shard_capacity)
-            .with_seed(engine.manifest().seed ^ 0xEB),
-        8,
-    );
-    // The online gate wraps every shard; in offline mode it is a pure
-    // passthrough (bit-identical to the bare table), in online mode it
-    // runs the serial admission/touch/delta pre-pass in front of the
-    // striped fetch.
-    let gate = match &opts.online {
-        Some(o) => OnlineTable::online(
-            table,
-            o.admission.clone().map(FeatureAdmission::new),
-        ),
-        None => OnlineTable::passthrough(table),
+    // Sparse side: **one merged lock-striped shard table per merge
+    // group** (the §4.2 fusion made physical — a homogeneous schema has
+    // exactly one group and reproduces the historical single-table path
+    // byte for byte). The stripe count is fixed (8) independent of
+    // `threads`, so per-stripe state — and thus the checksum — cannot
+    // depend on the pool size. Each group's table sits behind its own
+    // online gate (pure passthrough offline; serial
+    // admission/touch/delta pre-pass online — the online knobs apply
+    // uniformly to every group) and its own sharded exchange. All
+    // per-group collectives run in ascending group order on every rank,
+    // so the FIFO comm lanes stay aligned.
+    let mut sharded: Vec<ShardedEmbedding<OnlineTable>> = plan
+        .groups
+        .iter()
+        .map(|g| {
+            let table = ConcurrentDynamicTable::new(
+                DynamicTableConfig::new(g.dim)
+                    .with_capacity(opts.shard_capacity)
+                    .with_seed(engine.manifest().seed ^ 0xEB),
+                8,
+            );
+            let gate = match &opts.online {
+                Some(o) => OnlineTable::online(
+                    table,
+                    o.admission.clone().map(FeatureAdmission::new),
+                ),
+                None => OnlineTable::passthrough(table),
+            };
+            ShardedEmbedding::new(gate, opts.train.dedup).with_pool(Arc::clone(&pool))
+        })
+        .collect();
+    let adam_params = AdamParams {
+        lr: opts.train.lr,
+        beta1: opts.train.beta1,
+        beta2: opts.train.beta2,
+        eps: opts.train.eps,
     };
-    let mut sharded =
-        ShardedEmbedding::new(gate, opts.train.dedup).with_pool(Arc::clone(&pool));
-    let mut sparse_opt = SparseAdam::new(
-        d,
-        AdamParams {
-            lr: opts.train.lr,
-            beta1: opts.train.beta1,
-            beta2: opts.train.beta2,
-            eps: opts.train.eps,
-        },
-    );
-    let mut sparse_acc = SparseAccumulator::new(d);
+    let mut sparse_opt: Vec<SparseAdam> = plan
+        .groups
+        .iter()
+        .map(|g| SparseAdam::new(g.dim, adam_params))
+        .collect();
+    let mut sparse_acc: Vec<SparseAccumulator> = plan
+        .groups
+        .iter()
+        .map(|g| SparseAccumulator::new(g.dim))
+        .collect();
 
     // Dense replica + optimizer (identical init on every worker).
     let mut params = arts.load_params(&dir)?;
@@ -581,7 +670,7 @@ fn worker_main(
     let mut records = Vec::with_capacity(total_steps.unwrap_or(0).clamp(16, 1 << 16));
     let mut wall = Throughput::default();
     let truncated = 0u64;
-    let mut vol_prev = DedupVolume::default();
+    let mut vol_prev: Vec<DedupVolume> = vec![DedupVolume::default(); n_groups];
     let mut scratch = TrainScratch::new();
     let mut arena = WorkerArena::default();
 
@@ -654,8 +743,8 @@ fn worker_main(
     let mut prev_admitted = 0u64;
     let mut prev_rejected = 0u64;
     // Carried across the step boundary in cross-step mode: step s+1's
-    // first posted ID exchange.
-    let mut posted: Option<PendingLookup> = None;
+    // first posted ID exchanges (one per merge group, group order).
+    let mut posted: Option<Vec<PendingLookup>> = None;
 
     let mut step = 0usize;
     loop {
@@ -666,8 +755,10 @@ fn worker_main(
         }
         let step_t0 = std::time::Instant::now();
         // The TTL clock: every touch/admission decision this step is
-        // stamped with it (no-op for the passthrough gate).
-        sharded.table_mut().set_step(step as u64);
+        // stamped with it (no-op for the passthrough gates).
+        for se in sharded.iter_mut() {
+            se.table_mut().set_step(step as u64);
+        }
         let data = match next_data.take() {
             Some(d) => d,
             None => prepare(&mut phases),
@@ -684,7 +775,7 @@ fn worker_main(
         let rounds = *n_micro.iter().max().unwrap() as usize;
 
         let mut step_loss = [0.0f64; 2];
-        let mut posted_bwd: Option<PendingBackward> = None;
+        let mut posted_bwd: Option<Vec<PendingBackward>> = None;
         for round in 0..rounds {
             let micro = data.micros.get(round);
             let (bi, bucket): (&BatchIds, (usize, usize)) = match data.round_ids.get(round) {
@@ -692,34 +783,55 @@ fn worker_main(
                 None => (&empty_ids, (0, 0)),
             };
 
-            // ---- lookup (collective, three-phase) ---------------------
+            // ---- lookup (collective, three-phase, per group) ----------
             // With overlap on, this round's IDs were already posted
             // during the previous round (or, for round 0 in cross-step
             // mode, during the previous step's dense sync); serve the
-            // shard now and post the embedding reply...
-            let pending = match posted.take() {
+            // shards now and post the embedding replies...
+            let pending: Vec<PendingLookup> = match posted.take() {
                 Some(p) => p,
-                None => phases.time("2_lookup", || sharded.post_ids(&mut comm, &bi.ids)),
+                None => phases.time("2_lookup", || {
+                    (0..n_groups)
+                        .map(|g| sharded[g].post_ids(&mut comm, &bi.groups[g].ids))
+                        .collect()
+                }),
             };
-            let served =
-                phases.time("2_lookup", || sharded.serve_reply(&mut comm, pending, true));
+            let served: Vec<PendingReply> = phases.time("2_lookup", || {
+                pending
+                    .into_iter()
+                    .enumerate()
+                    .map(|(g, p)| sharded[g].serve_reply(&mut comm, p, true))
+                    .collect()
+            });
             if opts.overlap && round + 1 < rounds {
-                // ...then post the next round's ID all-to-all while this
-                // round's reply is still on the wire — the
+                // ...then post the next round's ID all-to-alls while
+                // this round's replies are still on the wire — the
                 // double-buffered round: both exchanges in flight at
-                // once, each on its own comm lane.
-                let next_ids: &[crate::embedding::GlobalId] = data
-                    .round_ids
-                    .get(round + 1)
-                    .map(|p| p.0.ids.as_slice())
-                    .unwrap_or(&[]);
-                posted =
-                    Some(phases.time("2_lookup", || sharded.post_ids(&mut comm, next_ids)));
+                // once, each on its own comm lane (groups share the
+                // lanes FIFO, posted and completed in group order).
+                posted = Some(phases.time("2_lookup", || {
+                    (0..n_groups)
+                        .map(|g| {
+                            let next_ids: &[crate::embedding::GlobalId] = data
+                                .round_ids
+                                .get(round + 1)
+                                .map(|p| p.0.groups[g].ids.as_slice())
+                                .unwrap_or(&[]);
+                            sharded[g].post_ids(&mut comm, next_ids)
+                        })
+                        .collect()
+                }));
             }
-            let rows = phases.time("2_lookup", || sharded.complete_reply(&mut comm, served));
+            let rows: Vec<Vec<f32>> = phases.time("2_lookup", || {
+                served
+                    .into_iter()
+                    .enumerate()
+                    .map(|(g, s)| sharded[g].complete_reply(&mut comm, s))
+                    .collect()
+            });
 
             // ---- forward + backward (local, pool-parallel) ------------
-            let occ_grads: &[f32] = if let Some(m) = micro {
+            let have_grads = if let Some(m) = micro {
                 let (bb, bl) = bucket;
                 phases.time("3_compute", || -> Result<()> {
                     bi.pool_into(&rows, d, bb, bl, Some(pool.as_ref()), &mut arena.emb);
@@ -758,39 +870,50 @@ fn worker_main(
                     }
                 }
                 bi.scatter_grad_into(&scratch.emb_grad, d, bb, bl, Some(pool.as_ref()), &mut arena.occ_grads);
-                &arena.occ_grads
+                true
             } else {
-                &[]
+                false
             };
 
             // ---- sparse backward (collective) + local accumulation ----
-            // Complete the *previous* round's gradient exchange only
-            // now — its wire time hid behind this round's forward and
-            // backward compute. Then post this round's gradients; with
-            // overlap on they stay in flight until the next round (or
-            // the post-loop flush). Round order of accumulation is
-            // identical to the blocking schedule, so numerics match
-            // bitwise.
+            // Complete the *previous* round's gradient exchanges only
+            // now — their wire time hid behind this round's forward and
+            // backward compute. Then post this round's gradients (one
+            // exchange per group, group order); with overlap on they
+            // stay in flight until the next round (or the post-loop
+            // flush). Round order of accumulation is identical to the
+            // blocking schedule, so numerics match bitwise.
             phases.time("4_sparse_update", || {
-                if let Some(pb) = posted_bwd.take() {
-                    let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
-                    sparse_acc.add(&lids, &lgrads, 0);
+                if let Some(pbs) = posted_bwd.take() {
+                    for (g, pb) in pbs.into_iter().enumerate() {
+                        let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
+                        sparse_acc[g].add(&lids, &lgrads, 0);
+                    }
                 }
-                let pb = sharded.post_backward(&mut comm, &bi.ids, occ_grads);
+                let pbs: Vec<PendingBackward> = (0..n_groups)
+                    .map(|g| {
+                        let occ: &[f32] = if have_grads { &arena.occ_grads[g] } else { &[] };
+                        sharded[g].post_backward(&mut comm, &bi.groups[g].ids, occ)
+                    })
+                    .collect();
                 if opts.overlap {
-                    posted_bwd = Some(pb);
+                    posted_bwd = Some(pbs);
                 } else {
-                    let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
-                    sparse_acc.add(&lids, &lgrads, 0);
+                    for (g, pb) in pbs.into_iter().enumerate() {
+                        let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
+                        sparse_acc[g].add(&lids, &lgrads, 0);
+                    }
                 }
             });
         }
-        // Flush the last round's in-flight gradient exchange before the
-        // optimizer applies updates.
+        // Flush the last round's in-flight gradient exchanges before
+        // the optimizer applies updates.
         phases.time("4_sparse_update", || {
-            if let Some(pb) = posted_bwd.take() {
-                let (lids, lgrads) = sharded.complete_backward(&mut comm, pb);
-                sparse_acc.add(&lids, &lgrads, 0);
+            if let Some(pbs) = posted_bwd.take() {
+                for (g, pb) in pbs.into_iter().enumerate() {
+                    let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
+                    sparse_acc[g].add(&lids, &lgrads, 0);
+                }
             }
         });
         debug_assert!(posted.is_none(), "a posted lookup outlived its rounds");
@@ -798,7 +921,7 @@ fn worker_main(
         // Volume snapshot BEFORE the cross-step post, so each step's
         // deltas cover exactly its own rounds whether or not the next
         // step's first exchange is posted early.
-        let dv = sharded.volume;
+        let dv: Vec<DedupVolume> = sharded.iter().map(|s| s.volume).collect();
 
         // ---- cross-step boundary -------------------------------------
         // Prepare step s+1 and (cross-step mode) post its first ID
@@ -814,13 +937,18 @@ fn worker_main(
         if has_next_step {
             let next = prepare(&mut phases);
             if cross {
-                let first_ids: &[crate::embedding::GlobalId] = next
-                    .round_ids
-                    .first()
-                    .map(|p| p.0.ids.as_slice())
-                    .unwrap_or(&[]);
-                posted =
-                    Some(phases.time("2_lookup", || sharded.post_ids(&mut comm, first_ids)));
+                posted = Some(phases.time("2_lookup", || {
+                    (0..n_groups)
+                        .map(|g| {
+                            let first_ids: &[crate::embedding::GlobalId] = next
+                                .round_ids
+                                .first()
+                                .map(|p| p.0.groups[g].ids.as_slice())
+                                .unwrap_or(&[]);
+                            sharded[g].post_ids(&mut comm, first_ids)
+                        })
+                        .collect()
+                }));
             }
             next_data = Some(next);
         }
@@ -837,23 +965,32 @@ fn worker_main(
                 // Dense Adam chunks elements across the pool; sparse
                 // row-wise Adam fans unique rows out. Both are
                 // bit-identical to their serial steps for every pool
-                // size (disjoint elements / rows).
+                // size (disjoint elements / rows). Sparse state applies
+                // group by group (disjoint id spaces).
                 dense_opt.step_pooled(&mut params, &grads, scale, Some(pool.as_ref()));
-                let (sids, sgrads, _) = sparse_acc.take();
-                // Online mode: gradients may target rows that admission
-                // rejected or the TTL sweeper retired — drop them before
-                // the optimizer so no phantom Adam state accumulates
-                // (serial pass; identical for every pool size).
-                let (sids, sgrads) = if online_mode {
-                    filter_present(sharded.table().inner(), sids, sgrads, d)
-                } else {
-                    (sids, sgrads)
-                };
-                sparse_opt.step_concurrent(&pool, sharded.table(), &sids, &sgrads, scale);
-                // The concurrent optimizer writes through the shared
-                // delegation; record the touched rows for TTL + delta
-                // tracking (no-op for the passthrough gate).
-                sharded.table_mut().mark_updated(&sids);
+                for g in 0..n_groups {
+                    let (sids, sgrads, _) = sparse_acc[g].take();
+                    // Online mode: gradients may target rows that
+                    // admission rejected or the TTL sweeper retired —
+                    // drop them before the optimizer so no phantom Adam
+                    // state accumulates (serial pass; identical for
+                    // every pool size).
+                    let (sids, sgrads) = if online_mode {
+                        filter_present(
+                            sharded[g].table().inner(),
+                            sids,
+                            sgrads,
+                            plan.groups[g].dim,
+                        )
+                    } else {
+                        (sids, sgrads)
+                    };
+                    sparse_opt[g].step_concurrent(&pool, sharded[g].table(), &sids, &sgrads, scale);
+                    // The concurrent optimizer writes through the shared
+                    // delegation; record the touched rows for TTL +
+                    // delta tracking (no-op for the passthrough gate).
+                    sharded[g].table_mut().mark_updated(&sids);
+                }
             }
         });
 
@@ -868,27 +1005,55 @@ fn worker_main(
         if let Some(ocfg) = &opts.online {
             if (step + 1) % ocfg.sync_interval == 0 {
                 let seq = ((step + 1) / ocfg.sync_interval) as u64;
-                let (expired, upsert_ids, removed_ids) =
-                    phases.time("6_online_sync", || {
-                        let expired = sharded
+                // Per-group sweep + delta drain: the TTL and sync
+                // cadence apply uniformly to every group, in group
+                // order (deterministic).
+                let (expired, group_payload) = phases.time("6_online_sync", || {
+                    let mut expired = 0u64;
+                    let mut payload: Vec<(Vec<GlobalId>, Vec<GlobalId>)> =
+                        Vec::with_capacity(n_groups);
+                    for g in 0..n_groups {
+                        expired += sharded[g]
                             .table_mut()
-                            .sweep_expired(ocfg.feature_ttl, &mut sparse_opt);
-                        let (ups, rem) = sharded.table_mut().take_delta();
-                        (expired as u64, ups, rem)
-                    });
-                // Shard delta payload: header + removed ids + full rows
-                // (values + Adam state) — the same size whether or not
-                // the snapshot is actually written.
-                let row_bytes = 8 + 3 * d * 4 + 8;
-                let mut my_sync_bytes =
-                    (24 + upsert_ids.len() * row_bytes + removed_ids.len() * 8) as u64;
+                            .sweep_expired(ocfg.feature_ttl, &mut sparse_opt[g])
+                            as u64;
+                        payload.push(sharded[g].table_mut().take_delta());
+                    }
+                    (expired, payload)
+                });
+                // Shard delta payload: per group, header + removed ids
+                // + full rows (values + Adam state at the group's dim)
+                // — the same size whether or not the snapshot is
+                // actually written.
+                let mut upserts_total = 0u64;
+                let mut my_sync_bytes = 0u64;
+                for (g, (ups, rem)) in group_payload.iter().enumerate() {
+                    let row_bytes = 8 + 3 * plan.groups[g].dim * 4 + 8;
+                    my_sync_bytes += (24 + ups.len() * row_bytes + rem.len() * 8) as u64;
+                    upserts_total += ups.len() as u64;
+                }
                 if let Some(dir) = &ocfg.sync_dir {
                     let written = phases.time("6_online_sync", || -> Result<usize> {
-                        let rows = crate::checkpoint::delta::collect_rows(
-                            sharded.table().inner(),
-                            &sparse_opt,
-                            &upsert_ids,
-                        );
+                        let rows: Vec<Vec<crate::checkpoint::SparseRow>> = group_payload
+                            .iter()
+                            .enumerate()
+                            .map(|(g, (ups, _))| {
+                                crate::checkpoint::delta::collect_rows(
+                                    sharded[g].table().inner(),
+                                    &sparse_opt[g],
+                                    ups,
+                                )
+                            })
+                            .collect();
+                        let shards: Vec<crate::checkpoint::delta::GroupDelta> = group_payload
+                            .iter()
+                            .enumerate()
+                            .map(|(g, (_, rem))| crate::checkpoint::delta::GroupDelta {
+                                dim: plan.groups[g].dim,
+                                upserts: &rows[g],
+                                removed: rem,
+                            })
+                            .collect();
                         let dmeta = DeltaMeta {
                             seq,
                             world,
@@ -899,8 +1064,8 @@ fn worker_main(
                             param_count: params.len(),
                         };
                         let dense = (rank == 0).then_some((&params[..], &dense_opt));
-                        crate::checkpoint::delta::save_delta(
-                            dir, &dmeta, rank, dense, &rows, &removed_ids,
+                        crate::checkpoint::delta::save_delta_groups(
+                            dir, &dmeta, rank, dense, &shards,
                         )
                     })?;
                     my_sync_bytes = written as u64;
@@ -909,12 +1074,16 @@ fn worker_main(
                 // the network model; the step completes when the slowest
                 // rank's push does.
                 my_sync_s = opts.net.delta_sync_time(world, my_sync_bytes as usize);
-                let (adm_total, rej_total) = sharded.table().admission_totals();
+                let (adm_total, rej_total) =
+                    sharded.iter().fold((0u64, 0u64), |acc, se| {
+                        let (a, r) = se.table().admission_totals();
+                        (acc.0 + a, acc.1 + r)
+                    });
                 let my_counts = [
                     adm_total - prev_admitted,
                     rej_total - prev_rejected,
                     expired,
-                    upsert_ids.len() as u64,
+                    upserts_total,
                     my_sync_bytes,
                 ];
                 prev_admitted = adm_total;
@@ -938,15 +1107,23 @@ fn worker_main(
         // (completed behind the next round's forward). Cross-step mode
         // additionally hides the first round's ID share behind the
         // previous step's dense sync (the boundary lane). Fig. 12's
-        // decomposition reports every share.
-        let lookups = dv.lookups_done - vol_prev.lookups_done;
-        let rows_moved = dv.emb_rows_sent - vol_prev.emb_rows_sent;
-        let ids_moved = dv.ids_sent - vol_prev.ids_sent;
+        // decomposition reports every share. Lookup cost and wire bytes
+        // accumulate per group at the group's width (identical to the
+        // historical single-width formulas when there is one group).
+        let mut t_lookup = 0.0f64;
+        let mut emb_bytes = 0usize;
+        let mut ids_moved = 0usize;
+        for g in 0..n_groups {
+            let lookups_g = dv[g].lookups_done - vol_prev[g].lookups_done;
+            let rows_g = dv[g].emb_rows_sent - vol_prev[g].emb_rows_sent;
+            ids_moved += dv[g].ids_sent - vol_prev[g].ids_sent;
+            t_lookup += opts.device.lookup_time(lookups_g, rows_g, plan.groups[g].dim);
+            emb_bytes += rows_g * plan.groups[g].dim * 4;
+        }
         vol_prev = dv;
         let t_compute = opts.device.compute_time(my_flops);
-        let t_lookup = opts.device.lookup_time(lookups, rows_moved, d);
         let pairs = world.max(1).pow(2).max(1);
-        let emb_bytes_per_pair = (rows_moved * d * 4) / pairs;
+        let emb_bytes_per_pair = emb_bytes / pairs;
         let id_bytes_per_pair = (ids_moved * 8) / pairs;
         let t_reply_comm = opts.net.all_to_all_uniform_time(world, emb_bytes_per_pair.max(1));
         let t_grad_comm = t_reply_comm;
@@ -1034,6 +1211,12 @@ fn worker_main(
             sim_step_s: sim_step,
             sim_sync_s: max_sync,
             wall_s,
+            // §4.2 operator fusion made measurable: ops actually issued
+            // (one per group per round) vs what an unmerged layout would
+            // have issued (one per logical table per round). Identical
+            // on every rank — rounds are collectively aligned.
+            lookup_ops_merged: rounds as u64 * plan.ops_after as u64,
+            lookup_ops_unmerged: rounds as u64 * plan.ops_before as u64,
             online_admitted: online_counts[0],
             online_rejected: online_counts[1],
             online_expired: online_counts[2],
@@ -1060,6 +1243,29 @@ fn worker_main(
     }
     debug_assert!(posted.is_none(), "a posted lookup outlived the run");
 
+    // Per-group aggregates plus their cross-group sums (the historical
+    // scalar fields are the sums, so single-group reports are
+    // unchanged).
+    let group_checksums: Vec<u64> = sharded
+        .iter()
+        .map(|s| s.table().inner().content_checksum())
+        .collect();
+    let group_rows: Vec<usize> = sharded
+        .iter()
+        .map(|s| {
+            use crate::embedding::EmbeddingStore;
+            EmbeddingStore::len(s.table())
+        })
+        .collect();
+    let group_volumes: Vec<DedupVolume> = sharded.iter().map(|s| s.volume).collect();
+    let mut volume = DedupVolume::default();
+    for v in &group_volumes {
+        volume.merge(v);
+    }
+    let mut table_stats = TableStats::default();
+    for s in &sharded {
+        table_stats.merge(&s.table().inner().stats());
+    }
     Ok(WorkerOutput {
         rank,
         steps: records,
@@ -1067,19 +1273,25 @@ fn worker_main(
         gauc_ctcvr,
         phases,
         wall,
-        table_rows: {
-            use crate::embedding::EmbeddingStore;
-            EmbeddingStore::len(sharded.table())
-        },
+        table_rows: group_rows.iter().sum(),
         table_memory: {
             use crate::embedding::EmbeddingStore;
-            EmbeddingStore::memory_bytes(sharded.table())
+            sharded
+                .iter()
+                .map(|s| EmbeddingStore::memory_bytes(s.table()))
+                .sum()
         },
-        volume: sharded.volume,
+        volume,
         truncated,
         prefetch_occupancy: stream.depth_occupancy(),
-        table_checksum: sharded.table().inner().content_checksum(),
-        table_stats: sharded.table().inner().stats(),
+        table_checksum: group_checksums
+            .iter()
+            .fold(0u64, |a, &c| a.wrapping_add(c)),
+        table_stats,
+        group_dims: plan.group_dims(),
+        group_volumes,
+        group_checksums,
+        group_rows,
     })
 }
 

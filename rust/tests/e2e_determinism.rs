@@ -175,6 +175,86 @@ fn threads_and_overlap_grid_bit_identical() {
 }
 
 #[test]
+fn mixed_schema_grid_bit_identical() {
+    // The heterogeneous-dim path (ISSUE 5 acceptance grid): `--schema
+    // meituan-mixed` forms TWO merge groups on the tiny model (8D
+    // context features, 32D token features incl. the exp_item alias),
+    // and the full `--threads {1,4} × --overlap {on,off} ×
+    // --cross-step {on,off}` grid must produce bit-identical losses AND
+    // bit-identical *per-group* embedding checksums.
+    let grid_run = |overlap: bool, threads: usize, cross_step: bool| {
+        let mut o = opts(overlap, threads);
+        o.schema = "meituan-mixed".to_string();
+        o.cross_step = cross_step;
+        // Several micro rounds per step so the per-group double-buffered
+        // exchanges genuinely pipeline.
+        o.train.target_tokens = 1400;
+        o.steps = 8;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let reference = grid_run(false, 1, false);
+    assert_eq!(
+        reference.group_dims,
+        vec![8, 32],
+        "tiny model: an 8D context group and a 32D token group"
+    );
+    assert!(
+        reference.group_rows.iter().all(|&r| r > 0),
+        "both groups must fill rows: {:?}",
+        reference.group_rows
+    );
+    assert!(
+        reference.group_checksums.iter().all(|&c| c != 0),
+        "per-group checksums must witness state"
+    );
+    assert!(
+        reference.lookup_ops_merged < reference.lookup_ops_unmerged,
+        "2 fused ops per round must undercut the 7 per-table ops: {} vs {}",
+        reference.lookup_ops_merged,
+        reference.lookup_ops_unmerged
+    );
+    // Dedup must engage inside each group independently.
+    for (g, v) in reference.group_volumes.iter().enumerate() {
+        assert!(v.ids_sent < v.ids_raw, "group {g}: stage-1 dedup inert");
+        assert!(v.lookups_done < v.lookups_raw, "group {g}: stage-2 dedup inert");
+    }
+    let reference_fp = (fingerprint(&reference), reference.group_checksums.clone());
+    for overlap in [false, true] {
+        for threads in [1usize, 4] {
+            for cross_step in [false, true] {
+                if !overlap && threads == 1 && !cross_step {
+                    continue; // the reference itself
+                }
+                let r = grid_run(overlap, threads, cross_step);
+                assert_eq!(
+                    (fingerprint(&r), r.group_checksums.clone()),
+                    reference_fp,
+                    "overlap={overlap} threads={threads} cross={cross_step} \
+                     diverged from threads=1/overlap=off"
+                );
+                assert_eq!(r.group_rows, reference.group_rows);
+                assert_eq!(r.group_volumes, reference.group_volumes);
+                assert_eq!(r.table_rows, reference.table_rows);
+            }
+        }
+    }
+}
+
+#[test]
+fn default_schema_unaffected_by_multi_group_plumbing() {
+    // The single-group compatibility guarantee, observable side: the
+    // default schema reports exactly one group whose checksum equals
+    // the aggregate checksum, and fused ops == 1 per round while the
+    // unmerged count reflects the 7 logical tables.
+    let r = run(true, 1);
+    assert_eq!(r.group_dims.len(), 1);
+    assert_eq!(r.group_checksums[0], r.embedding_checksum);
+    assert_eq!(r.group_rows[0], r.table_rows);
+    assert_eq!(r.lookup_ops_unmerged, 7 * r.lookup_ops_merged);
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guard against the fingerprint being vacuous (e.g. constant zero).
     let a = run(true, 1);

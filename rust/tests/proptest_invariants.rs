@@ -12,7 +12,7 @@ use mtgrboost::embedding::dynamic_table::{
     DynamicEmbeddingTable, DynamicTableConfig, EvictionPolicy,
 };
 use mtgrboost::embedding::hash::hash_id;
-use mtgrboost::embedding::merge::GlobalIdCodec;
+use mtgrboost::embedding::merge::{FeatureConfig, GlobalIdCodec, MergePlan};
 use mtgrboost::embedding::sharded::shard_owner;
 use mtgrboost::embedding::EmbeddingStore;
 use mtgrboost::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
@@ -270,4 +270,91 @@ fn prop_hash_avalanche() {
     }
     let mean = total as f64 / trials as f64;
     assert!((mean - 32.0).abs() < 1.5, "avalanche mean {mean}");
+}
+
+/// Property: MergePlan invariants over randomized heterogeneous feature
+/// sets — every feature lands in exactly one group, `shared_table`
+/// aliases resolve to the same (group, logical table), and the Eq. 8
+/// codec roundtrips at max-magnitude local IDs for every table count
+/// m ∈ 1..=33 (covering the k = ⌈log₂(m+1)⌉ bit boundaries at 1, 3, 7,
+/// 15, 31).
+#[test]
+fn prop_merge_plan_invariants() {
+    const DIMS: [usize; 5] = [4, 8, 16, 32, 64];
+    for m in 1usize..=33 {
+        let mut rng = Xoshiro256::new(9000 + m as u64);
+        // m host tables with random dims, plus a few alias features.
+        let mut features: Vec<FeatureConfig> = (0..m)
+            .map(|i| FeatureConfig::new(&format!("f{i}"), DIMS[rng.gen_range(5) as usize]))
+            .collect();
+        let n_alias = rng.range_usize(0, 4.min(m + 1));
+        for a in 0..n_alias {
+            let host = rng.range_usize(0, m);
+            let dim = features[host].dim;
+            features.push(FeatureConfig::new(&format!("alias{a}"), dim).shared(&format!("f{host}")));
+        }
+        let plan = MergePlan::build(&features);
+
+        // Codec: built over the m *logical* tables (aliases add none).
+        assert_eq!(plan.ops_before, m, "m={m}: logical table count");
+        assert_eq!(
+            plan.ops_after,
+            plan.groups.len(),
+            "m={m}: one fused op per group"
+        );
+        assert!(plan.ops_after <= plan.ops_before);
+
+        // Every feature in exactly one group; group index consistent
+        // with the group listing; aliases share (group, table) with
+        // their host.
+        for f in &features {
+            let (g, t) = *plan.feature_to_table.get(&f.name).unwrap();
+            assert!(g < plan.groups.len(), "m={m}: group index in range");
+            assert_eq!(plan.groups[g].dim, f.dim, "m={m}: feature in its dim group");
+            let key = f.table_key();
+            assert!(
+                plan.groups[g].tables.contains(&key),
+                "m={m}: `{}` listed in its group",
+                f.name
+            );
+            // The logical table appears in exactly ONE group overall.
+            let appearances: usize = plan
+                .groups
+                .iter()
+                .map(|grp| grp.tables.iter().filter(|k| **k == key).count())
+                .sum();
+            assert_eq!(appearances, 1, "m={m}: `{key}` in exactly one group");
+            if let Some(host) = &f.shared_table {
+                let host_feat = features.iter().find(|h| &h.name == host).unwrap();
+                assert_eq!(
+                    (g, t),
+                    *plan.feature_to_table.get(&host_feat.name).unwrap(),
+                    "m={m}: alias `{}` shares (group, table) with `{host}`",
+                    f.name
+                );
+            }
+        }
+
+        // Codec roundtrip across groups at extreme local IDs: 0, 1, a
+        // random mid value, and the max-magnitude id for this k.
+        let max_local = plan.codec.max_local_id();
+        for f in &features {
+            let (_g, t_global) = *plan.feature_to_table.get(&f.name).unwrap();
+            for local in [0u64, 1, rng.next_u64() & max_local, max_local] {
+                let gid = plan.codec.encode(t_global, local);
+                assert_eq!(gid >> 63, 0, "m={m}: sign bit stays clear");
+                assert_eq!(
+                    plan.codec.decode(gid),
+                    (t_global, local),
+                    "m={m}: roundtrip table {t_global} local {local}"
+                );
+            }
+        }
+        // Distinct tables never collide even at identical local ids.
+        if m > 1 {
+            let a = plan.codec.encode(0, max_local);
+            let b = plan.codec.encode(m - 1, max_local);
+            assert_ne!(a, b, "m={m}");
+        }
+    }
 }
