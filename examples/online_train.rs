@@ -3,13 +3,19 @@
 //! replay the deltas like a serving replica would and verify the
 //! reconstructed state matches the trainer bit-for-bit.
 //!
+//! The manual replay below is the *minimal* consumer — it validates the
+//! chain and folds each delta by hand to show the wire contract. The
+//! production-shaped consumer lives in `rust/src/serve/`:
+//! [`mtgrboost::serve::ServingReplica`] bootstraps from the newest
+//! compacted base + delta chain, refreshes live, caches hot ids, and
+//! answers lookup+forward traffic — see `examples/serve_loop.rs` and
+//! `cargo run --release -- serve --sync-dir <dir>`.
+//!
 //! ```bash
 //! cargo run --release --example online_train
 //! ```
 
-use mtgrboost::checkpoint::delta::{
-    apply_delta, list_delta_seqs, load_delta_meta, load_delta_shard,
-};
+use mtgrboost::checkpoint::delta::{apply_delta, list_delta_seqs, load_delta_shard, validate_chain};
 use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
 use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
@@ -61,11 +67,15 @@ fn main() -> anyhow::Result<()> {
     );
     println!("resident rows : {}", report.table_rows);
 
-    // 3. Serving side: replay every delta, in order, onto empty shards
-    //    — exactly what a serving replica does after loading a base
-    //    snapshot (here the base is the empty step-0 state).
-    let seqs = list_delta_seqs(&serving_dir)?;
-    let meta = load_delta_meta(&serving_dir, seqs[0])?;
+    // 3. Serving side: validate the chain (gaps, torn dirs, step
+    //    discontinuities all fail loudly here instead of silently
+    //    serving stale rows), then replay every delta in order onto
+    //    empty shards — exactly what a serving replica does after
+    //    loading a base snapshot (here the base is the empty step-0
+    //    state, so base_seq = 0 and base_step = 0).
+    let chain = validate_chain(&serving_dir, 0, 0)?;
+    assert!(!chain.is_empty(), "trainer emitted no deltas");
+    let meta = &chain[0];
     let mut checksum = 0u64;
     for rank in 0..meta.world {
         let table = ConcurrentDynamicTable::new(
@@ -73,9 +83,8 @@ fn main() -> anyhow::Result<()> {
             8,
         );
         let mut opt = SparseAdam::new(meta.dim, AdamParams::default());
-        for &seq in &seqs {
-            let m = load_delta_meta(&serving_dir, seq)?;
-            let (rows, removed) = load_delta_shard(&serving_dir, &m, rank)?;
+        for m in &chain {
+            let (rows, removed) = load_delta_shard(&serving_dir, m, rank)?;
             apply_delta(&table, &mut opt, rows, &removed);
         }
         checksum = checksum.wrapping_add(table.content_checksum());

@@ -1,0 +1,120 @@
+//! The full train→sync→serve loop: run the online trainer with delta
+//! sync enabled, then stand up a [`mtgrboost::serve::ServingReplica`]
+//! over the sync dir and drive it with generated closed-loop traffic —
+//! micro-batched embedding lookups + dense forwards, periodic delta
+//! refreshes, and a mid-run log-structured compaction pass.
+//!
+//! Two witnesses close the loop:
+//! * the replica's content checksum must equal the trainer report's
+//!   `embedding_checksum` bit-for-bit (lean no-Adam serving state still
+//!   reconstructs the exact trained rows), and
+//! * after compaction folds the delta chain into a fresh `base_<seq>`,
+//!   a cold replica bootstrapped from that base alone must carry the
+//!   same checksum — compaction lost nothing.
+//!
+//! ```bash
+//! cargo run --release --example serve_loop
+//! ```
+
+use mtgrboost::online::{AdmissionConfig, OnlineOptions};
+use mtgrboost::runtime::Engine;
+use mtgrboost::serve::{
+    compact_chain, run_serve, CompactOptions, ReplicaOptions, ServeOptions, ServingReplica,
+    TrafficConfig,
+};
+use mtgrboost::train::{Trainer, TrainerOptions};
+
+fn main() -> anyhow::Result<()> {
+    let sync_dir = std::env::temp_dir().join("mtgr_serve_loop_sync");
+    std::fs::remove_dir_all(&sync_dir).ok();
+
+    // 1. Train online: 8 sync intervals of 5 steps, each publishing a
+    //    delta snapshot into the sync dir the replica will consume.
+    let mut opts = TrainerOptions::new("tiny", 2, 0);
+    opts.train.target_tokens = 512;
+    opts.train.lr = 0.005;
+    opts.generator.len_mu = 3.0;
+    opts.generator.max_len = 64;
+    opts.generator.new_user_rate = 0.3;
+    opts.generator.new_item_rate = 0.3;
+    opts.collect_gauc = false;
+    opts.log_every = 10;
+    let mut online = OnlineOptions::new(5);
+    online.intervals = 8;
+    online.feature_ttl = 15;
+    online.admission = Some(AdmissionConfig::new(2, 0.1));
+    online.day_every = 2;
+    online.sync_dir = Some(sync_dir.clone());
+    opts.online = Some(online);
+    let train_report = Trainer::new(opts, Engine::reference(7)?)?.run()?;
+    println!("=== trainer ===");
+    println!("steps          : {}", train_report.steps.len());
+    println!("resident rows  : {}", train_report.table_rows);
+    println!(
+        "trained checksum: {:#018x}",
+        train_report.embedding_checksum
+    );
+
+    // 2. Serve: bootstrap the replica from the sync dir and push 512
+    //    requests through it. Mid-run (`compact_every`) the delta chain
+    //    is folded into a fresh base and the folded deltas pruned.
+    let engine = Engine::reference(7)?;
+    let serve_opts = ServeOptions {
+        requests: 512,
+        micro_batch: 8,
+        refresh_every: 128,
+        compact_every: 256,
+        traffic: TrafficConfig {
+            users: 50_000,
+            qps: 4000.0,
+            day_seconds: 2.0,
+            ..TrafficConfig::default()
+        },
+        ..ServeOptions::default()
+    };
+    let report = run_serve(&sync_dir, &engine, &serve_opts)?;
+    println!("\n=== serving ===");
+    println!("requests       : {} in {} micro-batches", report.requests, report.micro_batches);
+    println!(
+        "latency        : p50 {:.3} ms, p99 {:.3} ms (mean {:.3} ms)",
+        report.latency_ms.p50, report.latency_ms.p99, report.latency_ms.mean
+    );
+    println!(
+        "throughput     : {:.0} req/s achieved ({:.0} req/s offered)",
+        report.achieved_qps, report.offered_qps
+    );
+    println!(
+        "lookups        : {} ({} resident, {} cold-miss), cache hit rate {:.1}%",
+        report.stats.lookups,
+        report.stats.resident,
+        report.stats.missing,
+        report.cache_hit_rate * 100.0
+    );
+    println!(
+        "sync           : applied seq {} (step {}), {} compaction(s)",
+        report.applied_seq, report.applied_step, report.compactions
+    );
+    assert!(report.compactions >= 1, "compaction pass should have run");
+    assert_eq!(
+        report.embedding_checksum, train_report.embedding_checksum,
+        "replica diverged from the trainer"
+    );
+    println!("replica state matches the trainer bit-for-bit ✓");
+
+    // 3. Cold restart from the compacted base: the chain was folded and
+    //    pruned, so a fresh replica boots from `base_<seq>` alone — and
+    //    must still carry the exact trained state.
+    assert!(
+        compact_chain(&sync_dir, &CompactOptions::default())?.is_none(),
+        "everything is already folded; a second pass has nothing to do"
+    );
+    let cold = ServingReplica::open(&sync_dir, ReplicaOptions::default())?;
+    assert_eq!(cold.applied_seq(), report.applied_seq);
+    assert_eq!(cold.content_checksum(), train_report.embedding_checksum);
+    println!(
+        "cold restart from compacted base_{:05} reproduces it too ✓",
+        cold.applied_seq()
+    );
+    std::fs::remove_dir_all(&sync_dir).ok();
+    Ok(())
+}

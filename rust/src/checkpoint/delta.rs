@@ -245,21 +245,132 @@ pub fn load_delta_group_dims(dir: &Path, meta: &DeltaMeta) -> Result<Vec<usize>>
     super::parse_group_dims(&j, meta.dim)
 }
 
+/// The smallest byte count a real snapshot `meta.json` can have; a
+/// shorter (or missing) meta marks a **torn** snapshot directory — a
+/// crash between `create_dir_all` and the meta write — which must never
+/// be surfaced as an applyable delta.
+const MIN_META_BYTES: u64 = 64;
+
+/// Parse a canonical `<prefix><seq:05>` snapshot directory name.
+/// Returns `Ok(None)` for names that don't start with `prefix`, and an
+/// **error** for names that do but are not the canonical zero-padded
+/// spelling: `delta_7` and `delta_007` would both alias `delta_00007`'s
+/// sequence number, so a replica that accepted them could apply the
+/// same delta twice (or an attacker-/tooling-mangled dir once too
+/// often).
+pub(crate) fn parse_canonical_seq(prefix: &str, name: &str) -> Result<Option<u64>> {
+    let Some(tail) = name.strip_prefix(prefix) else {
+        return Ok(None);
+    };
+    let seq = match tail.parse::<u64>() {
+        Ok(s) if tail.bytes().all(|b| b.is_ascii_digit()) => s,
+        _ => bail!(
+            "`{name}` is not a canonical snapshot name (expected `{prefix}<seq:05>`)"
+        ),
+    };
+    anyhow::ensure!(
+        tail == format!("{seq:05}"),
+        "`{name}` aliases seq {seq}: the canonical name is `{prefix}{seq:05}` \
+         (refusing ambiguous snapshot names)"
+    );
+    Ok(Some(seq))
+}
+
 /// Sync sequence numbers present under `dir`, ascending.
+///
+/// Only canonical `delta_<seq:05>` names are accepted — a non-canonical
+/// spelling (`delta_7`, `delta_007`) is an error, not a silent alias —
+/// duplicates error, and torn snapshot directories (meta file missing
+/// or shorter than any valid meta) error instead of being surfaced as
+/// applyable deltas.
 pub fn list_delta_seqs(dir: &Path) -> Result<Vec<u64>> {
     let mut seqs = Vec::new();
     for entry in std::fs::read_dir(dir)
         .with_context(|| format!("read sync dir {}", dir.display()))?
     {
-        let name = entry?.file_name();
-        if let Some(tail) = name.to_string_lossy().strip_prefix("delta_") {
-            if let Ok(seq) = tail.parse::<u64>() {
-                seqs.push(seq);
-            }
-        }
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(seq) = parse_canonical_seq("delta_", &name)? else {
+            continue; // bases, tmp dirs, unrelated files
+        };
+        let meta = entry.path().join("meta.json");
+        let meta_len = std::fs::metadata(&meta).map(|m| m.len()).unwrap_or(0);
+        anyhow::ensure!(
+            meta_len >= MIN_META_BYTES,
+            "torn delta snapshot `{name}`: meta.json {} ({meta_len} bytes) — \
+             the write was interrupted; refusing to surface it as applyable",
+            if meta_len == 0 { "missing" } else { "truncated" }
+        );
+        seqs.push(seq);
     }
     seqs.sort_unstable();
+    // Canonical names make one seq ↔ one directory, but keep the
+    // invariant checked so a filesystem surprise fails loudly rather
+    // than double-applying a delta.
+    for w in seqs.windows(2) {
+        anyhow::ensure!(
+            w[0] != w[1],
+            "duplicate delta snapshots for seq {} under {}",
+            w[0],
+            dir.display()
+        );
+    }
     Ok(seqs)
+}
+
+/// Validate and load the delta chain that applies on top of a base at
+/// (`base_seq`, `base_step`) — `(0, 0)` for the empty state. The chain
+/// must be `base_seq+1 ..= newest` with **no holes**, every meta's
+/// `seq` must match its directory name, each delta's `base_step` must
+/// equal the previous snapshot's `step`, and `world` must not change
+/// mid-chain. Returns the metas in apply order. A gap is a hard error:
+/// replaying across a hole would silently reconstruct stale state, the
+/// exact failure a serving replica must never ship.
+pub fn validate_chain(dir: &Path, base_seq: u64, base_step: u64) -> Result<Vec<DeltaMeta>> {
+    let seqs = list_delta_seqs(dir)?;
+    let mut metas: Vec<DeltaMeta> = Vec::new();
+    let mut prev_seq = base_seq;
+    let mut prev_step = base_step;
+    for seq in seqs {
+        if seq <= base_seq {
+            continue; // already folded into the base
+        }
+        anyhow::ensure!(
+            seq == prev_seq + 1,
+            "delta chain has a gap: delta_{:05} is missing under {} (next present \
+             snapshot is delta_{seq:05}); refusing to replay across the hole",
+            prev_seq + 1,
+            dir.display()
+        );
+        let m = load_delta_meta(dir, seq)?;
+        anyhow::ensure!(
+            m.seq == seq,
+            "delta_{seq:05}: meta says seq {} — the snapshot dir was renamed or torn",
+            m.seq
+        );
+        anyhow::ensure!(
+            m.base_step == prev_step,
+            "delta_{seq:05} applies on top of step {} but the chain is at step \
+             {prev_step}: the base it expects is not the state being replayed",
+            m.base_step
+        );
+        if let Some(prev) = metas.last() {
+            anyhow::ensure!(
+                m.world == prev.world && m.param_count == prev.param_count,
+                "delta_{seq:05} changes world/param_count mid-chain \
+                 ({}/{} → {}/{})",
+                prev.world,
+                prev.param_count,
+                m.world,
+                m.param_count
+            );
+        }
+        prev_seq = seq;
+        prev_step = m.step;
+        metas.push(m);
+    }
+    Ok(metas)
 }
 
 /// Materialize the rows for `ids` (with Adam state) from a concurrent
@@ -558,6 +669,110 @@ mod tests {
         let rows = super::super::load_sparse_shard(&dir, &m2, 1, 0).unwrap();
         assert_eq!(rows.len(), 15);
         assert_eq!(rows, snapshot_rows(&t, &o), "sorted full snapshot");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Write a minimal-but-complete delta snapshot (world 1, empty
+    /// payload) so listing/chain tests can build arbitrary chains.
+    fn write_delta(dir: &Path, seq: u64, step: u64, base_step: u64) {
+        let m = DeltaMeta {
+            seq,
+            world: 1,
+            step,
+            base_step,
+            model: "tiny".into(),
+            dim: DIM,
+            param_count: 2,
+        };
+        let dopt = DenseAdam::new(2, crate::optim::adam::AdamParams::default());
+        save_delta(dir, &m, 0, Some((&[0.0, 0.0][..], &dopt)), &[], &[]).unwrap();
+    }
+
+    #[test]
+    fn list_rejects_non_canonical_delta_names() {
+        let dir = tmp("canon");
+        write_delta(&dir, 7, 35, 30);
+        assert_eq!(list_delta_seqs(&dir).unwrap(), vec![7]);
+        // `delta_007` would alias seq 7 — listing must error, not fold
+        // two directories onto one sequence number.
+        std::fs::create_dir_all(dir.join("delta_007")).unwrap();
+        let err = list_delta_seqs(&dir).unwrap_err().to_string();
+        assert!(err.contains("delta_00007"), "names the canonical spelling: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Same for an unpadded spelling and for non-numeric tails.
+        write_delta(&dir, 7, 35, 30);
+        std::fs::create_dir_all(dir.join("delta_7")).unwrap();
+        assert!(list_delta_seqs(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        write_delta(&dir, 7, 35, 30);
+        std::fs::create_dir_all(dir.join("delta_+0007")).unwrap();
+        assert!(list_delta_seqs(&dir).is_err(), "sign prefixes are not canonical");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn list_ignores_unrelated_names_and_accepts_wide_seqs() {
+        let dir = tmp("wide");
+        write_delta(&dir, 1, 5, 0);
+        // Bases, tmp dirs and stray files are not deltas.
+        std::fs::create_dir_all(dir.join("base_00001")).unwrap();
+        std::fs::create_dir_all(dir.join("base_00002.tmp")).unwrap();
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        // Seqs past 5 digits have no padding to get wrong.
+        write_delta(&dir, 123456, 617280, 617275);
+        assert_eq!(list_delta_seqs(&dir).unwrap(), vec![1, 123456]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn list_rejects_torn_snapshot_dirs() {
+        let dir = tmp("torn");
+        write_delta(&dir, 1, 5, 0);
+        // Crash after create_dir_all, before the meta write.
+        std::fs::create_dir_all(delta_dir(&dir, 2)).unwrap();
+        let err = list_delta_seqs(&dir).unwrap_err().to_string();
+        assert!(err.contains("torn"), "{err}");
+        assert!(err.contains("missing"), "{err}");
+        // Crash mid-meta-write: a short meta is equally torn.
+        std::fs::write(delta_dir(&dir, 2).join("meta.json"), "{\"seq\":").unwrap();
+        let err = list_delta_seqs(&dir).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_chain_accepts_contiguous_and_rejects_gaps() {
+        let dir = tmp("chain");
+        for seq in 1..=4u64 {
+            write_delta(&dir, seq, seq * 5, (seq - 1) * 5);
+        }
+        // Full chain from the empty state.
+        let metas = validate_chain(&dir, 0, 0).unwrap();
+        assert_eq!(metas.iter().map(|m| m.seq).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        // From a base at seq 2 / step 10: only the suffix applies.
+        let metas = validate_chain(&dir, 2, 10).unwrap();
+        assert_eq!(metas.iter().map(|m| m.seq).collect::<Vec<_>>(), vec![3, 4]);
+        // Punch a hole: replay must fail loudly, not reconstruct stale
+        // state from the surviving suffix.
+        std::fs::remove_dir_all(delta_dir(&dir, 2)).unwrap();
+        let err = validate_chain(&dir, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("gap"), "{err}");
+        assert!(err.contains("delta_00002"), "names the missing seq: {err}");
+        // A base past the hole is fine again.
+        assert_eq!(validate_chain(&dir, 2, 10).unwrap().len(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_chain_rejects_step_discontinuity() {
+        let dir = tmp("steps");
+        write_delta(&dir, 1, 5, 0);
+        // Seq is contiguous but the step lineage is not: delta 2 claims
+        // to apply on top of step 7, the chain is at step 5.
+        write_delta(&dir, 2, 12, 7);
+        let err = validate_chain(&dir, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("step"), "{err}");
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -230,6 +230,27 @@ mod tests {
     }
 
     #[test]
+    fn depth_occupancy_is_zero_before_any_fetch() {
+        // Zero-sample edge: a fresh prefetcher has recorded no fetch
+        // samples, so the mean must be a well-defined 0.0 — not NaN
+        // from a 0/0 division — because callers feed it straight into
+        // JSON reports.
+        let mut i = 0;
+        let p = Prefetcher::spawn(2, move || {
+            i += 1;
+            if i <= 3 {
+                Some(i)
+            } else {
+                None
+            }
+        });
+        let occ = p.depth_occupancy();
+        assert!(occ.is_finite(), "zero-sample occupancy must be finite");
+        assert_eq!(occ, 0.0);
+        assert_eq!(p.delivered(), 0);
+    }
+
+    #[test]
     fn iterator_interface() {
         let mut i = 0;
         let p = Prefetcher::spawn(2, move || {

@@ -12,6 +12,11 @@
 //!                 [--no-balancing] [--dedup ...] [--overlap on|off]
 //!                 [--cross-step on|off] [--backend hash|mch]
 //! mtgrboost data  --out /tmp/shards --sequences 1000 --shards 4
+//! mtgrboost serve --sync-dir DIR [--requests N] [--micro-batch N]
+//!                 [--refresh-every N] [--compact-every N] [--group K]
+//!                 [--qps F] [--users N] [--zipf-alpha F] [--burst F]
+//!                 [--day-seconds F] [--ids-per-request N] [--miss-rate F]
+//!                 [--cache-slots N] [--seed S] [--artifacts DIR]
 //! mtgrboost info  [--artifacts artifacts]
 //! ```
 //!
@@ -22,6 +27,14 @@
 //! Contradictory combinations (`--steps` with online mode, zero
 //! `--sync-interval`, TTL below the sync interval, online-only knobs in
 //! offline mode) are rejected up front.
+//!
+//! `serve` is the consumer end of that sync path: it bootstraps a
+//! read-optimized serving replica from the base + delta chain under
+//! `--sync-dir` (gapped or torn chains are rejected, never served
+//! stale), drives it with deterministic Zipf/diurnal traffic through
+//! micro-batched lookup + dense-forward requests, optionally refreshes
+//! and compacts while serving, and prints p50/p99 latency, achieved
+//! QPS and cache hit rates.
 //!
 //! `--schema meituan-mixed` switches the trainer onto the
 //! heterogeneous-dim feature schema (8D context features, model-dim
@@ -42,6 +55,7 @@ use mtgrboost::data::shards::write_sharded_dataset;
 use mtgrboost::embedding::dedup::DedupStrategy;
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::runtime::Engine;
+use mtgrboost::serve::{run_serve, ServeOptions};
 use mtgrboost::sim::{simulate, SimOptions, TableBackend};
 use mtgrboost::train::{Trainer, TrainerOptions};
 use mtgrboost::util::cli::Args;
@@ -163,10 +177,11 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("sim") => cmd_sim(&args),
         Some("data") => cmd_data(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: mtgrboost <train|sim|data|info> [--key value ...]\n\
+                "usage: mtgrboost <train|sim|data|serve|info> [--key value ...]\n\
                  see rust/src/main.rs for the full flag list"
             );
             Ok(())
@@ -394,6 +409,101 @@ fn cmd_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse + validate the `serve` flags (same discipline as
+/// [`parse_online_mode`]: fail at the flag layer with flag-named
+/// errors; `run_serve` and `TrafficConfig::validate` re-check).
+/// Returns the sync dir and the assembled serve options.
+fn parse_serve(args: &Args) -> Result<(String, ServeOptions)> {
+    if args.get("mode").is_some() {
+        bail!("--mode applies to `train`; `serve` always consumes a sync dir");
+    }
+    let Some(sync_dir) = args.get("sync-dir") else {
+        bail!(
+            "serve requires --sync-dir DIR (the base + delta_<seq> snapshots \
+             an online trainer published with --sync-dir)"
+        );
+    };
+    let d = ServeOptions::default();
+    let requests = args.get_usize("requests", d.requests);
+    if requests == 0 {
+        bail!("--requests must be positive");
+    }
+    let micro_batch = args.get_usize("micro-batch", d.micro_batch);
+    if micro_batch == 0 {
+        bail!("--micro-batch must be positive (requests batched per forward)");
+    }
+    let qps = args.get_f64("qps", d.traffic.qps);
+    if !qps.is_finite() || qps <= 0.0 {
+        bail!("--qps must be positive, got {qps}");
+    }
+    let burst = args.get_f64("burst", d.traffic.burst_amplitude);
+    if !(0.0..1.0).contains(&burst) {
+        bail!("--burst must be in [0, 1) (relative diurnal amplitude), got {burst}");
+    }
+    let miss_rate = args.get_f64("miss-rate", d.traffic.miss_rate);
+    if !(0.0..=1.0).contains(&miss_rate) {
+        bail!("--miss-rate must be in [0, 1], got {miss_rate}");
+    }
+    let opts = ServeOptions {
+        requests,
+        micro_batch,
+        refresh_every: args.get_usize("refresh-every", d.refresh_every),
+        compact_every: args.get_usize("compact-every", d.compact_every),
+        group: args.get_usize("group", 0),
+        traffic: mtgrboost::serve::TrafficConfig {
+            users: args.get_usize("users", d.traffic.users),
+            alpha: args.get_f64("zipf-alpha", d.traffic.alpha),
+            qps,
+            burst_amplitude: burst,
+            day_seconds: args.get_f64("day-seconds", d.traffic.day_seconds),
+            ids_per_request: args.get_usize("ids-per-request", d.traffic.ids_per_request),
+            miss_rate,
+            seed: args.get_u64("seed", d.traffic.seed),
+        },
+        replica: mtgrboost::serve::ReplicaOptions {
+            cache_slots: args.get_usize("cache-slots", d.replica.cache_slots),
+            ..d.replica
+        },
+    };
+    opts.traffic.validate()?;
+    Ok((sync_dir.to_string(), opts))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (sync_dir, opts) = parse_serve(args)?;
+    // Serving reuses the training engine contract: a PJRT artifacts dir
+    // when one is given, the deterministic reference backend otherwise.
+    let engine = match args.get("artifacts") {
+        Some(dir) => Engine::start(std::path::Path::new(dir)).context("start PJRT engine")?,
+        None => Engine::reference(args.get_u64("seed", 2026))?,
+    };
+    let r = run_serve(std::path::Path::new(&sync_dir), &engine, &opts)?;
+    println!("requests             : {} ({} micro-batches)", r.requests, r.micro_batches);
+    println!(
+        "latency p50/p99      : {:.3} / {:.3} ms (mean {:.3})",
+        r.latency_ms.p50, r.latency_ms.p99, r.latency_ms.mean
+    );
+    println!(
+        "qps achieved/offered : {:.0} / {:.0}",
+        r.achieved_qps, r.offered_qps
+    );
+    println!(
+        "cache hit rate       : {:.1}% ({} invalidations)",
+        r.cache_hit_rate * 100.0,
+        r.stats.cache_invalidations
+    );
+    println!(
+        "lookups              : {} ({} resident, {} missing)",
+        r.stats.lookups, r.stats.resident, r.stats.missing
+    );
+    println!(
+        "sync state           : seq {} step {} ({} deltas refreshed, {} compactions)",
+        r.applied_seq, r.applied_step, r.deltas_refreshed, r.compactions
+    );
+    println!("embedding checksum   : {:#018x}", r.embedding_checksum);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -510,6 +620,61 @@ mod tests {
             "--sync-interval", "20", "--feature-ttl", "5",
         ]);
         assert!(parse_online_mode(&a).is_err(), "ttl below interval");
+    }
+
+    #[test]
+    fn serve_requires_sync_dir_and_rejects_mode() {
+        let a = args_of(&["serve"]);
+        let err = parse_serve(&a).unwrap_err().to_string();
+        assert!(err.contains("--sync-dir"), "{err}");
+
+        let a = args_of(&["serve", "--sync-dir", "/tmp/x", "--mode", "online"]);
+        let err = parse_serve(&a).unwrap_err().to_string();
+        assert!(err.contains("--mode"), "{err}");
+    }
+
+    #[test]
+    fn serve_validates_traffic_knobs_at_the_flag_layer() {
+        let base = ["serve", "--sync-dir", "/tmp/x"];
+        let bad = [
+            (vec!["--qps", "0"], "--qps"),
+            (vec!["--qps", "-5"], "--qps"),
+            (vec!["--burst", "1.0"], "--burst"),
+            (vec!["--miss-rate", "1.5"], "--miss-rate"),
+            (vec!["--micro-batch", "0"], "--micro-batch"),
+            (vec!["--requests", "0"], "--requests"),
+        ];
+        for (extra, flag) in bad {
+            let mut argv: Vec<&str> = base.to_vec();
+            argv.extend(extra.iter());
+            let err = parse_serve(&args_of(&argv)).unwrap_err().to_string();
+            assert!(err.contains(flag), "`{flag}` named in: {err}");
+        }
+        // Remaining invalid combos fall through to TrafficConfig checks.
+        let a = args_of(&["serve", "--sync-dir", "/tmp/x", "--users", "0"]);
+        assert!(parse_serve(&a).is_err());
+    }
+
+    #[test]
+    fn serve_defaults_and_overrides_parse() {
+        let a = args_of(&["serve", "--sync-dir", "/tmp/x"]);
+        let (dir, o) = parse_serve(&a).unwrap();
+        assert_eq!(dir, "/tmp/x");
+        assert!(o.requests > 0 && o.micro_batch > 0);
+        assert_eq!(o.group, 0);
+
+        let a = args_of(&[
+            "serve", "--sync-dir", "/tmp/x", "--requests", "100", "--micro-batch", "4",
+            "--qps", "500", "--burst", "0.3", "--miss-rate", "0.1", "--group", "1",
+            "--cache-slots", "64", "--refresh-every", "10", "--compact-every", "50",
+        ]);
+        let (_, o) = parse_serve(&a).unwrap();
+        assert_eq!((o.requests, o.micro_batch, o.group), (100, 4, 1));
+        assert_eq!((o.refresh_every, o.compact_every), (10, 50));
+        assert_eq!(o.replica.cache_slots, 64);
+        assert!((o.traffic.qps - 500.0).abs() < 1e-12);
+        assert!((o.traffic.burst_amplitude - 0.3).abs() < 1e-12);
+        assert!((o.traffic.miss_rate - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -419,6 +419,51 @@ mod tests {
     }
 
     #[test]
+    fn ttl_sweep_boundary_is_exactly_clock_minus_touch_geq_ttl() {
+        // Pins the audited boundary semantics of `sweep_expired`
+        // (`now.saturating_sub(t) >= ttl`): a row last touched at step
+        // `t` expires at the FIRST sweep where `clock - t == ttl` —
+        // `>=`, not `>` — and survives every sweep before that.
+        let mut gate = OnlineTable::online(table(), None);
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        gate.set_step(10);
+        EmbeddingStore::lookup_or_insert(&mut gate, 1, &mut buf);
+        // clock - t == ttl - 1: one step short of stale — survives.
+        gate.set_step(10 + 5 - 1);
+        assert_eq!(gate.sweep_expired(5, &mut o), 0);
+        assert!(gate.inner().contains(1));
+        // clock - t == ttl exactly: expires on this sweep.
+        gate.set_step(10 + 5);
+        assert_eq!(gate.sweep_expired(5, &mut o), 1);
+        assert!(!gate.inner().contains(1));
+    }
+
+    #[test]
+    fn ttl_sweep_survives_clock_regression() {
+        // `saturating_sub` pins the behavior when the TTL clock moves
+        // backwards (a restarted trainer replaying an earlier step): a
+        // row touched "in the future" must never underflow into a huge
+        // age and get swept — it just reads as age 0.
+        let mut gate = OnlineTable::online(table(), None);
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        gate.set_step(5);
+        EmbeddingStore::lookup_or_insert(&mut gate, 9, &mut buf);
+        gate.set_step(0); // clock went backwards past the touch stamp
+        assert_eq!(gate.sweep_expired(1, &mut o), 0);
+        assert!(
+            gate.inner().contains(9),
+            "future-touched row must read as fresh, not as u64::MAX old"
+        );
+        // Once the clock catches back up past touch + ttl, it expires
+        // normally.
+        gate.set_step(6);
+        assert_eq!(gate.sweep_expired(1, &mut o), 1);
+        assert!(!gate.inner().contains(9));
+    }
+
+    #[test]
     fn mark_updated_and_expiry_drop_optimizer_state() {
         let mut gate = OnlineTable::online(table(), None);
         let mut o = opt();

@@ -1,0 +1,259 @@
+//! Log-structured compaction of delta chains into fresh bases.
+//!
+//! A replica that replays `base + delta_1 ... delta_n` from scratch pays
+//! O(chain length) on every cold start, and the sync dir grows without
+//! bound. Compaction folds the validated chain into a new full base
+//! `base_<seq:05>` (seq = newest folded delta), after which bootstrap
+//! cost resets to one base read and the folded deltas can be pruned.
+//!
+//! The compacted base is a **full checkpoint** in the standard layout
+//! (`meta.json` + `dense.bin` + per-rank/per-group sparse files, rows
+//! sorted by id), so `checkpoint::load_*` reads it unchanged and its
+//! bytes are independent of the trainer's `--threads` or the order
+//! deltas were applied in. Compaction preserves Adam `m`/`v`/`t` bits —
+//! a base it writes is byte-identical to a full checkpoint taken at the
+//! same step.
+//!
+//! Crash safety: the new base is staged at `base_<seq:05>.tmp` and
+//! published with a single `rename`; [`recover_leftovers`] sweeps any
+//! `.tmp` stage a crash left behind before the replica trusts the dir.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::delta::{
+    apply_delta, delta_dir, install_rows_concurrent, load_delta_group_dims,
+    load_delta_shard_group, parse_canonical_seq, snapshot_rows, validate_chain,
+};
+use crate::checkpoint::{
+    load_group_dims, load_meta, load_sparse_shard_group, push_row_bytes, rows_block_bytes,
+    sparse_group_path, CheckpointMeta,
+};
+use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::dynamic_table::DynamicTableConfig;
+use crate::optim::adam::{AdamParams, SparseAdam};
+use crate::util::json::Json;
+
+/// Directory of compacted base `seq` under the sync root.
+pub fn base_dir(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("base_{seq:05}"))
+}
+
+/// Knobs for one compaction pass.
+#[derive(Clone, Debug)]
+pub struct CompactOptions {
+    /// Initial capacity of the per-(rank, group) fold tables.
+    pub capacity: usize,
+    /// Remove the folded deltas and superseded bases after publishing
+    /// the new base. Off when an auditor wants the full history kept.
+    pub prune: bool,
+}
+
+impl Default for CompactOptions {
+    fn default() -> Self {
+        CompactOptions {
+            capacity: 1 << 14,
+            prune: true,
+        }
+    }
+}
+
+/// What one compaction pass did.
+#[derive(Clone, Debug)]
+pub struct CompactionReport {
+    /// Seq of the base that was folded into (0 = empty state).
+    pub prev_base_seq: u64,
+    /// Seq of the freshly published base.
+    pub base_seq: u64,
+    /// Step the new base captures.
+    pub step: u64,
+    /// Deltas folded by this pass.
+    pub folded_deltas: usize,
+    /// Live rows written into the new base (all ranks, all groups).
+    pub rows: usize,
+    /// Snapshot dirs removed by pruning (0 when `prune` is off).
+    pub pruned_dirs: usize,
+    /// Wrapping sum of the fold tables' content checksums — comparable
+    /// to the trainer's `embedding_checksum` at the same step.
+    pub checksum: u64,
+}
+
+/// Newest valid compacted base under `dir`, if any: `(seq, meta)`.
+/// Non-canonical `base_*` names are rejected like delta aliases;
+/// `.tmp` stages (crash leftovers) are ignored — run
+/// [`recover_leftovers`] to clear them.
+pub fn latest_base(dir: &Path) -> Result<Option<(u64, CheckpointMeta)>> {
+    let mut newest: Option<u64> = None;
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("read sync dir {}", dir.display()))?
+    {
+        let name = entry?.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(".tmp") {
+            continue;
+        }
+        if let Some(seq) = parse_canonical_seq("base_", &name)? {
+            newest = Some(newest.map_or(seq, |n: u64| n.max(seq)));
+        }
+    }
+    match newest {
+        None => Ok(None),
+        Some(seq) => {
+            let meta = load_meta(&base_dir(dir, seq))
+                .with_context(|| format!("base_{seq:05} is unreadable"))?;
+            Ok(Some((seq, meta)))
+        }
+    }
+}
+
+/// Remove crash leftovers: `base_*.tmp` stages whose publishing rename
+/// never happened. Returns how many were swept.
+pub fn recover_leftovers(dir: &Path) -> Result<usize> {
+    let mut swept = 0;
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("read sync dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if name.starts_with("base_") && name.ends_with(".tmp") {
+            std::fs::remove_dir_all(entry.path())
+                .with_context(|| format!("sweep stale stage {name}"))?;
+            swept += 1;
+        }
+    }
+    Ok(swept)
+}
+
+/// Fold the current valid delta chain into a fresh base. Returns
+/// `Ok(None)` when there is nothing to fold (no deltas past the newest
+/// base). Errors on gapped/malformed chains ([`validate_chain`]) and on
+/// base/chain disagreements — compaction must never bake stale or
+/// mixed-lineage state into a base.
+pub fn compact_chain(dir: &Path, opts: &CompactOptions) -> Result<Option<CompactionReport>> {
+    recover_leftovers(dir)?;
+    let base = latest_base(dir)?;
+    let (base_seq, base_step) = base
+        .as_ref()
+        .map_or((0, 0), |(seq, m)| (*seq, m.step));
+    let chain = validate_chain(dir, base_seq, base_step)?;
+    let Some(newest) = chain.last().cloned() else {
+        return Ok(None);
+    };
+
+    if let Some((seq, bm)) = &base {
+        anyhow::ensure!(
+            bm.world == newest.world,
+            "base_{seq:05} was written for world {} but the chain is world {}",
+            bm.world,
+            newest.world
+        );
+        anyhow::ensure!(
+            bm.param_count == newest.param_count && bm.model == newest.model,
+            "base_{seq:05} model/{} params disagree with the chain",
+            bm.model
+        );
+    }
+
+    let group_dims = load_delta_group_dims(dir, &newest)?;
+    if let Some((seq, bm)) = &base {
+        let bdims = load_group_dims(&base_dir(dir, *seq), bm)?;
+        anyhow::ensure!(
+            bdims == group_dims,
+            "base_{seq:05} group dims {bdims:?} disagree with the chain's {group_dims:?}"
+        );
+    }
+
+    let world = newest.world;
+    let stage = dir.join(format!("base_{:05}.tmp", newest.seq));
+    std::fs::remove_dir_all(&stage).ok();
+    std::fs::create_dir_all(&stage)?;
+
+    let mut rows_written = 0usize;
+    let mut checksum = 0u64;
+    for rank in 0..world {
+        for (g, &gdim) in group_dims.iter().enumerate() {
+            // Fold with full Adam state so the published base is
+            // byte-identical to a real checkpoint at the same step.
+            let table = ConcurrentDynamicTable::new(
+                DynamicTableConfig::new(gdim)
+                    .with_capacity(opts.capacity)
+                    .with_seed(0),
+                1,
+            );
+            let mut opt = SparseAdam::new(gdim, AdamParams::default());
+            if let Some((seq, bm)) = &base {
+                let rows =
+                    load_sparse_shard_group(&base_dir(dir, *seq), bm, world, rank, g)?;
+                install_rows_concurrent(rows, &table, &mut opt);
+            }
+            for m in &chain {
+                let (rows, removed) = load_delta_shard_group(dir, m, rank, g)?;
+                apply_delta(&table, &mut opt, rows, &removed);
+            }
+            let rows = snapshot_rows(&table, &opt);
+            let mut body = Vec::new();
+            for r in &rows {
+                push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
+            }
+            std::fs::write(
+                sparse_group_path(&stage, rank, world, g),
+                rows_block_bytes(rows.len() as u64, gdim, &body),
+            )?;
+            rows_written += rows.len();
+            checksum = checksum.wrapping_add(table.content_checksum());
+        }
+    }
+
+    // Dense state ships whole in every delta; the newest one is the
+    // fold result by construction. Copy its bytes verbatim.
+    std::fs::copy(
+        delta_dir(dir, newest.seq).join("dense.bin"),
+        stage.join("dense.bin"),
+    )
+    .context("copy dense.bin into the staged base")?;
+
+    // Same key order as a trainer-written full checkpoint.
+    let mut j = Json::obj();
+    j.set("world", world.into());
+    j.set("step", (newest.step as usize).into());
+    j.set("model", newest.model.as_str().into());
+    j.set("dim", newest.dim.into());
+    j.set("param_count", newest.param_count.into());
+    if group_dims.len() > 1 {
+        j.set(
+            "group_dims",
+            Json::Arr(group_dims.iter().map(|&d| d.into()).collect()),
+        );
+    }
+    std::fs::write(stage.join("meta.json"), j.pretty())?;
+
+    let published = base_dir(dir, newest.seq);
+    if published.exists() {
+        bail!("base_{:05} already exists; refusing to overwrite", newest.seq);
+    }
+    std::fs::rename(&stage, &published).context("publish compacted base")?;
+
+    let mut pruned = 0usize;
+    if opts.prune {
+        for m in &chain {
+            std::fs::remove_dir_all(delta_dir(dir, m.seq))?;
+            pruned += 1;
+        }
+        if let Some((seq, _)) = &base {
+            std::fs::remove_dir_all(base_dir(dir, *seq))?;
+            pruned += 1;
+        }
+    }
+
+    Ok(Some(CompactionReport {
+        prev_base_seq: base_seq,
+        base_seq: newest.seq,
+        step: newest.step,
+        folded_deltas: chain.len(),
+        rows: rows_written,
+        pruned_dirs: pruned,
+        checksum,
+    }))
+}

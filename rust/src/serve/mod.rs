@@ -1,0 +1,213 @@
+//! Serving subsystem: the consumer end of the train→sync→serve loop.
+//!
+//! The paper's deployment handles hundreds of millions of daily
+//! requests against models the trainer refreshes every few minutes via
+//! base + delta parameter sync. This module is that consumer side:
+//!
+//! * [`replica`] — a read-optimized [`ServingReplica`] that folds all
+//!   trainer rank shards into one striped table per merge group,
+//!   bootstraps from the newest `base_<seq>` + validated delta chain,
+//!   and [`ServingReplica::refresh`]es as the trainer publishes syncs.
+//! * [`compact`] — log-structured compaction: fold base + deltas into a
+//!   fresh `base_<seq>` (crash-safe stage + rename) so cold-start
+//!   replay cost stays bounded and folded deltas can be pruned.
+//! * [`cache`] — a direct-mapped [`HotIdCache`] in front of the tables,
+//!   invalidated per delta-touched id, with hit-rate counters.
+//! * [`traffic`] — a deterministic closed-loop [`TrafficGenerator`]:
+//!   Zipf user popularity, diurnal burst curve, configurable QPS and
+//!   miss rate.
+//!
+//! [`run_serve`] wires them together: it drives generated traffic
+//! through micro-batched embedding-lookup + dense-forward requests,
+//! periodically refreshing from and compacting the sync dir, and
+//! reports p50/p99 service latency, achieved QPS and cache hit rates
+//! ([`ServeReport`]) — the numbers `bench_serving` sweeps against
+//! `--sync-interval`.
+
+pub mod cache;
+pub mod compact;
+pub mod replica;
+pub mod traffic;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+pub use cache::HotIdCache;
+pub use compact::{compact_chain, CompactOptions, CompactionReport};
+pub use replica::{ReplicaOptions, ReplicaStats, ServingReplica};
+pub use traffic::{Request, TrafficConfig, TrafficGenerator};
+
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Knobs for one closed-loop serving run.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Total requests to serve.
+    pub requests: usize,
+    /// Requests batched into one dense forward.
+    pub micro_batch: usize,
+    /// Poll the sync dir for new deltas every N requests (0 = never).
+    pub refresh_every: usize,
+    /// Compact the delta chain every N requests (0 = never).
+    pub compact_every: usize,
+    /// Merge group the request ids address (must match the model's
+    /// embedding dim; group 0 for homogeneous schemas).
+    pub group: usize,
+    pub traffic: TrafficConfig,
+    pub replica: ReplicaOptions,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            requests: 2_000,
+            micro_batch: 8,
+            refresh_every: 256,
+            compact_every: 0,
+            group: 0,
+            traffic: TrafficConfig::default(),
+            replica: ReplicaOptions::default(),
+        }
+    }
+}
+
+/// What a [`run_serve`] pass measured.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub micro_batches: usize,
+    /// Real wall time spent serving.
+    pub wall_s: f64,
+    /// Requests per real second actually served (closed loop).
+    pub achieved_qps: f64,
+    /// Mean offered rate of the modeled traffic (requests / modeled
+    /// seconds) — what an open-loop client would have sent.
+    pub offered_qps: f64,
+    /// Per-request service latency, milliseconds.
+    pub latency_ms: Summary,
+    pub stats: ReplicaStats,
+    pub cache_hit_rate: f64,
+    pub deltas_refreshed: usize,
+    pub compactions: usize,
+    pub applied_seq: u64,
+    pub applied_step: u64,
+    /// Replica embedding checksum after the run — comparable to the
+    /// trainer report's `embedding_checksum`.
+    pub embedding_checksum: u64,
+    /// Order-stable sum of all served logits: a cheap end-to-end
+    /// witness that two runs served identical predictions.
+    pub logits_sum: f64,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("requests", self.requests.into());
+        j.set("micro_batches", self.micro_batches.into());
+        j.set("wall_s", self.wall_s.into());
+        j.set("achieved_qps", self.achieved_qps.into());
+        j.set("offered_qps", self.offered_qps.into());
+        j.set("latency_p50_ms", self.latency_ms.p50.into());
+        j.set("latency_p90_ms", self.latency_ms.p90.into());
+        j.set("latency_p99_ms", self.latency_ms.p99.into());
+        j.set("latency_mean_ms", self.latency_ms.mean.into());
+        j.set("lookups", (self.stats.lookups as usize).into());
+        j.set("resident", (self.stats.resident as usize).into());
+        j.set("missing", (self.stats.missing as usize).into());
+        j.set("cache_hit_rate", self.cache_hit_rate.into());
+        j.set(
+            "cache_invalidations",
+            (self.stats.cache_invalidations as usize).into(),
+        );
+        j.set("deltas_refreshed", self.deltas_refreshed.into());
+        j.set("compactions", self.compactions.into());
+        j.set("applied_seq", (self.applied_seq as usize).into());
+        j.set("applied_step", (self.applied_step as usize).into());
+        j.set("embedding_checksum", self.embedding_checksum.into());
+        j.set("logits_sum", self.logits_sum.into());
+        j
+    }
+}
+
+/// Serve `opts.requests` generated requests against the sync dir at
+/// `dir`: bootstrap the replica, then loop micro-batches of
+/// lookup+forward, interleaving delta refreshes and compaction passes.
+/// Closed loop — the next micro-batch starts when the previous one
+/// finishes, so achieved QPS is what this host can actually sustain.
+pub fn run_serve(dir: &Path, engine: &Engine, opts: &ServeOptions) -> Result<ServeReport> {
+    anyhow::ensure!(opts.requests > 0, "must serve at least one request");
+    anyhow::ensure!(opts.micro_batch > 0, "micro-batch must be positive");
+    let mut replica = ServingReplica::open(dir, opts.replica.clone())?;
+    let catalog = replica.live_ids(opts.group);
+    let mut gen = TrafficGenerator::new(opts.traffic.clone(), catalog)?;
+
+    let mut latencies_ms = Vec::with_capacity(opts.requests);
+    let mut logits_sum = 0.0f64;
+    let mut served = 0usize;
+    let mut micro_batches = 0usize;
+    let mut refreshed = 0usize;
+    let mut compactions = 0usize;
+    let compact_opts = CompactOptions::default();
+
+    let wall_start = Instant::now();
+    while served < opts.requests {
+        let n = opts.micro_batch.min(opts.requests - served);
+        let requests: Vec<Request> = (0..n).map(|_| gen.next_request()).collect();
+        let ids: Vec<&[u64]> = requests.iter().map(|r| r.ids.as_slice()).collect();
+
+        let t0 = Instant::now();
+        let logits = replica.forward(engine, opts.group, &ids)?;
+        let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // Closed loop: every request in the micro-batch waits for the
+        // whole batch, so each one experiences the batch service time.
+        for _ in 0..n {
+            latencies_ms.push(batch_ms);
+        }
+        logits_sum += logits.iter().map(|&x| x as f64).sum::<f64>();
+        served += n;
+        micro_batches += 1;
+
+        if opts.refresh_every > 0 && served % opts.refresh_every < n {
+            refreshed += replica.refresh()?;
+        }
+        if opts.compact_every > 0 && served % opts.compact_every < n {
+            // The replica has already applied everything the pass
+            // folds, so pruning under it is safe.
+            if compact_chain(dir, &compact_opts)?.is_some() {
+                compactions += 1;
+            }
+        }
+    }
+    // Final refresh so the report reflects the newest published state.
+    if opts.refresh_every > 0 {
+        refreshed += replica.refresh()?;
+    }
+    let wall_s = wall_start.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = replica.stats();
+    let cache_total = stats.cache_hits + stats.cache_misses;
+    Ok(ServeReport {
+        requests: served,
+        micro_batches,
+        wall_s,
+        achieved_qps: served as f64 / wall_s,
+        offered_qps: gen.issued() as f64 / gen.clock_s().max(1e-9),
+        latency_ms: Summary::of(&latencies_ms),
+        cache_hit_rate: if cache_total == 0 {
+            0.0
+        } else {
+            stats.cache_hits as f64 / cache_total as f64
+        },
+        stats,
+        deltas_refreshed: refreshed,
+        compactions,
+        applied_seq: replica.applied_seq(),
+        applied_step: replica.applied_step(),
+        embedding_checksum: replica.content_checksum(),
+        logits_sum,
+    })
+}

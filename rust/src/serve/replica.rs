@@ -1,0 +1,380 @@
+//! Read-optimized serving replica over the base + delta sync dir.
+//!
+//! The trainer shards its embedding state across `world` ranks because
+//! training is write-heavy; serving is read-heavy and single-host here,
+//! so the replica **folds all rank shards into one striped table per
+//! merge group** — a lookup is one hash, no shard routing. Optimizer
+//! state is deliberately dropped on the serving side (Adam `m`/`v`/`t`
+//! never influence inference); the row-content checksum still matches
+//! the trainer's report bit-for-bit, which is the witness the tests
+//! pin. Compaction (`super::compact`), which must preserve Adam bits,
+//! keeps per-rank tables instead.
+//!
+//! Bootstrap = newest valid `base_<seq:05>` + the validated delta chain
+//! on top ([`validate_chain`] — gapped or torn chains are a hard error,
+//! never a silently stale replica). [`ServingReplica::refresh`] picks
+//! up deltas the trainer published since, invalidating the hot-ID
+//! cache for every id a delta touches before the rows become servable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::delta::{delta_dir, load_delta_group_dims, load_delta_shard_group, validate_chain, DeltaMeta};
+use crate::checkpoint::{load_dense, load_group_dims, load_sparse_shard_group};
+use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::dynamic_table::DynamicTableConfig;
+use crate::embedding::GlobalId;
+use crate::runtime::{Engine, Tensor};
+use crate::serve::cache::HotIdCache;
+use crate::serve::compact::{base_dir, latest_base, recover_leftovers};
+
+/// Sizing knobs for the replica's tables and cache.
+#[derive(Clone, Debug)]
+pub struct ReplicaOptions {
+    /// Initial capacity of each merge group's folded table.
+    pub capacity: usize,
+    /// Lock stripes per table (reads are shared; stripes only matter
+    /// while a refresh is applying a delta).
+    pub stripes: usize,
+    /// Hot-ID cache slots per merge group (rounded to a power of two).
+    pub cache_slots: usize,
+}
+
+impl Default for ReplicaOptions {
+    fn default() -> Self {
+        ReplicaOptions {
+            capacity: 1 << 14,
+            stripes: 8,
+            cache_slots: 1 << 12,
+        }
+    }
+}
+
+/// Serving-side counters, reported alongside bench latencies.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaStats {
+    pub lookups: u64,
+    /// Lookups answered from table or cache.
+    pub resident: u64,
+    /// Lookups for ids the trainer never shipped (served as zeros).
+    pub missing: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_inserts: u64,
+    pub cache_invalidations: u64,
+    pub deltas_applied: u64,
+}
+
+/// One folded, continuously-refreshed copy of the trainer's state.
+pub struct ServingReplica {
+    dir: PathBuf,
+    opts: ReplicaOptions,
+    model: String,
+    world: usize,
+    param_count: usize,
+    group_dims: Vec<usize>,
+    /// One table per merge group, all ranks folded in.
+    tables: Vec<ConcurrentDynamicTable>,
+    caches: Vec<HotIdCache>,
+    /// Replicated dense params from the newest applied snapshot.
+    dense: Vec<f32>,
+    applied_seq: u64,
+    applied_step: u64,
+    lookups: u64,
+    resident: u64,
+    missing: u64,
+    deltas_applied: u64,
+    scratch: Vec<f32>,
+}
+
+impl ServingReplica {
+    /// Bootstrap from `dir`: sweep crash leftovers, install the newest
+    /// base (if any), then replay the validated delta chain. Errors when
+    /// the dir holds nothing servable or the chain is gapped/malformed.
+    pub fn open(dir: &Path, opts: ReplicaOptions) -> Result<ServingReplica> {
+        recover_leftovers(dir)?;
+        let base = latest_base(dir)?;
+        let (base_seq, base_step) = base.as_ref().map_or((0, 0), |(s, m)| (*s, m.step));
+        let chain = validate_chain(dir, base_seq, base_step)?;
+
+        // Snapshot-format facts come from the newest state present.
+        let (model, world, param_count, group_dims, dense_from) = match (&base, chain.last())
+        {
+            (_, Some(m)) => {
+                if let Some((bseq, bm)) = &base {
+                    anyhow::ensure!(
+                        bm.world == m.world && bm.param_count == m.param_count,
+                        "base_{bseq:05} and the delta chain disagree on world/params"
+                    );
+                }
+                (
+                    m.model.clone(),
+                    m.world,
+                    m.param_count,
+                    load_delta_group_dims(dir, m)?,
+                    delta_dir(dir, m.seq),
+                )
+            }
+            (Some((seq, bm)), None) => (
+                bm.model.clone(),
+                bm.world,
+                bm.param_count,
+                load_group_dims(&base_dir(dir, *seq), bm)?,
+                base_dir(dir, *seq),
+            ),
+            (None, None) => bail!(
+                "nothing to serve under {}: no base and no delta snapshots",
+                dir.display()
+            ),
+        };
+
+        let tables: Vec<ConcurrentDynamicTable> = group_dims
+            .iter()
+            .map(|&d| {
+                ConcurrentDynamicTable::new(
+                    DynamicTableConfig::new(d)
+                        .with_capacity(opts.capacity)
+                        .with_seed(0),
+                    opts.stripes,
+                )
+            })
+            .collect();
+        let caches: Vec<HotIdCache> = group_dims
+            .iter()
+            .map(|&d| HotIdCache::new(opts.cache_slots, d))
+            .collect();
+
+        let mut replica = ServingReplica {
+            dir: dir.to_path_buf(),
+            opts,
+            model,
+            world,
+            param_count,
+            group_dims,
+            tables,
+            caches,
+            dense: Vec::new(),
+            applied_seq: base_seq,
+            applied_step: base_step,
+            lookups: 0,
+            resident: 0,
+            missing: 0,
+            deltas_applied: 0,
+            scratch: Vec::new(),
+        };
+
+        if let Some((seq, bm)) = &base {
+            let bdims = load_group_dims(&base_dir(dir, *seq), bm)?;
+            anyhow::ensure!(
+                bdims == replica.group_dims,
+                "base_{seq:05} group dims {bdims:?} disagree with the chain's {:?}",
+                replica.group_dims
+            );
+            for rank in 0..bm.world {
+                for g in 0..replica.group_dims.len() {
+                    let rows =
+                        load_sparse_shard_group(&base_dir(dir, *seq), bm, bm.world, rank, g)?;
+                    for r in rows {
+                        replica.tables[g].set_row_scratch(r.id, &r.row, &mut replica.scratch);
+                    }
+                }
+            }
+        }
+        for m in &chain {
+            replica.apply_one(m)?;
+        }
+        let (dense, _) = load_dense(&dense_from, replica.param_count)
+            .context("load dense params for serving")?;
+        replica.dense = dense;
+        Ok(replica)
+    }
+
+    /// Fold one delta into the tables, invalidating every touched id in
+    /// the hot cache *before* its new state becomes servable.
+    fn apply_one(&mut self, m: &DeltaMeta) -> Result<()> {
+        let dims = load_delta_group_dims(&self.dir, m)?;
+        anyhow::ensure!(
+            dims == self.group_dims,
+            "delta_{:05} group dims {dims:?} disagree with the replica's {:?}",
+            m.seq,
+            self.group_dims
+        );
+        for rank in 0..m.world {
+            for g in 0..self.group_dims.len() {
+                let (rows, removed) = load_delta_shard_group(&self.dir, m, rank, g)?;
+                for &id in &removed {
+                    self.caches[g].invalidate(id);
+                    self.tables[g].remove(id);
+                }
+                for r in rows {
+                    self.caches[g].invalidate(r.id);
+                    self.tables[g].set_row_scratch(r.id, &r.row, &mut self.scratch);
+                }
+            }
+        }
+        self.applied_seq = m.seq;
+        self.applied_step = m.step;
+        self.deltas_applied += 1;
+        Ok(())
+    }
+
+    /// Consume any deltas published since the last apply; returns how
+    /// many were folded in. A gap in the chain (pruned or torn dirs) is
+    /// an error — the replica refuses to go silently stale.
+    pub fn refresh(&mut self) -> Result<usize> {
+        let chain = validate_chain(&self.dir, self.applied_seq, self.applied_step)?;
+        let n = chain.len();
+        for m in &chain {
+            self.apply_one(m)?;
+        }
+        if let Some(m) = chain.last() {
+            let (dense, _) = load_dense(&delta_dir(&self.dir, m.seq), self.param_count)?;
+            self.dense = dense;
+        }
+        Ok(n)
+    }
+
+    /// Embedding lookup through the hot-ID cache. Returns `true` when
+    /// `id` is resident; unknown ids zero-fill `out` (cold items serve
+    /// the zero embedding, they don't fail the request).
+    pub fn lookup(&mut self, group: usize, id: GlobalId, out: &mut [f32]) -> bool {
+        self.lookups += 1;
+        if self.caches[group].get(id, out) {
+            self.resident += 1;
+            return true;
+        }
+        if self.tables[group].lookup(id, out) {
+            self.caches[group].insert(id, out);
+            self.resident += 1;
+            true
+        } else {
+            out.fill(0.0);
+            self.missing += 1;
+            false
+        }
+    }
+
+    /// Dense forward over one micro-batch of id sequences (all from
+    /// merge group `group`). The batch is padded up to the engine's
+    /// smallest fitting shape bucket — padding rows get length 0, which
+    /// the kernels treat as an empty sequence. Returns `tasks` logits
+    /// per real request (padding logits are sliced off).
+    pub fn forward(
+        &mut self,
+        engine: &Engine,
+        group: usize,
+        batch: &[&[GlobalId]],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(!batch.is_empty(), "empty micro-batch");
+        let arts = engine.manifest().model(&self.model)?.clone();
+        let d = self.group_dims[group];
+        anyhow::ensure!(
+            d == arts.emb_dim,
+            "merge group {group} has dim {d} but model `{}` consumes {}-dim embeddings",
+            self.model,
+            arts.emb_dim
+        );
+        let max_len = batch.iter().map(|ids| ids.len()).max().unwrap_or(0);
+        let bucket = match arts.pick_bucket(batch.len(), max_len) {
+            Some(b) => b,
+            None => {
+                let b = arts.largest_bucket();
+                anyhow::ensure!(
+                    batch.len() <= b.batch && max_len <= b.len,
+                    "micro-batch {}x{max_len} exceeds the largest shape bucket {}x{}",
+                    batch.len(),
+                    b.batch,
+                    b.len
+                );
+                b
+            }
+        };
+        let (bb, bl) = (bucket.batch, bucket.len);
+        let mut emb = vec![0.0f32; bb * bl * d];
+        let mut lengths = vec![0i32; bb];
+        for (i, ids) in batch.iter().enumerate() {
+            lengths[i] = ids.len() as i32;
+            for (j, &id) in ids.iter().enumerate() {
+                let off = (i * bl + j) * d;
+                self.lookup(group, id, &mut emb[off..off + d]);
+            }
+        }
+        let dense = self.dense.clone();
+        let logits = engine.forward(
+            &self.model,
+            (bb, bl),
+            &dense,
+            Tensor::f32(&[bb, bl, d], emb),
+            lengths,
+        )?;
+        Ok(logits[..batch.len() * arts.tasks].to_vec())
+    }
+
+    /// Live ids of merge group `group` — the traffic generator's
+    /// resident-id catalog.
+    pub fn live_ids(&self, group: usize) -> Vec<GlobalId> {
+        let mut ids = self.tables[group].live_ids();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Wrapping sum of the group tables' content checksums — directly
+    /// comparable to the trainer report's `embedding_checksum` at the
+    /// replica's applied step.
+    pub fn content_checksum(&self) -> u64 {
+        self.tables
+            .iter()
+            .fold(0u64, |acc, t| acc.wrapping_add(t.content_checksum()))
+    }
+
+    pub fn resident_rows(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn groups(&self) -> usize {
+        self.group_dims.len()
+    }
+
+    pub fn group_dim(&self, group: usize) -> usize {
+        self.group_dims[group]
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn applied_seq(&self) -> u64 {
+        self.applied_seq
+    }
+
+    pub fn applied_step(&self) -> u64 {
+        self.applied_step
+    }
+
+    pub fn cache_slots(&self) -> usize {
+        self.opts.cache_slots
+    }
+
+    pub fn stats(&self) -> ReplicaStats {
+        let mut s = ReplicaStats {
+            lookups: self.lookups,
+            resident: self.resident,
+            missing: self.missing,
+            deltas_applied: self.deltas_applied,
+            ..ReplicaStats::default()
+        };
+        for c in &self.caches {
+            let (h, m, i, inv) = c.counters();
+            s.cache_hits += h;
+            s.cache_misses += m;
+            s.cache_inserts += i;
+            s.cache_invalidations += inv;
+        }
+        s
+    }
+}

@@ -1,0 +1,314 @@
+//! Closed-loop serving traffic generator.
+//!
+//! Models the request stream a Meituan-scale replica sees: millions of
+//! users whose activity follows a Zipf power law (a hot head of heavy
+//! users dominates), a diurnal load curve (lunch/dinner bursts, late
+//! night troughs), and a configurable offered QPS. Requests are a pure
+//! function of `(config, seed, index)` — the generator never consults a
+//! wall clock, so benches replay identical traffic across runs and
+//! machines.
+//!
+//! Each [`Request`] carries the ids the user's recent behavior sequence
+//! resolves to. Ids are drawn from a catalog of *live* ids snapshotted
+//! from the replica (so resident lookups hit real rows), plus a
+//! configurable fraction of fabricated never-trained ids that model
+//! cold items and exercise the miss path.
+
+use anyhow::{bail, Result};
+
+use crate::embedding::GlobalId;
+use crate::util::rng::{Xoshiro256, Zipf};
+
+/// Knobs for the synthetic request stream.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Modeled user population (Zipf support size).
+    pub users: usize,
+    /// Zipf exponent for user activity; production logs are ~1.0–1.2.
+    pub alpha: f64,
+    /// Mean offered load in requests per second.
+    pub qps: f64,
+    /// Relative amplitude of the diurnal sine (0 = flat, 0.6 = strong
+    /// lunch/dinner swing). Must stay < 1 so the rate never hits zero.
+    pub burst_amplitude: f64,
+    /// Modeled seconds per diurnal cycle ("day length"); compressed in
+    /// benches so a short run sweeps trough and peak.
+    pub day_seconds: f64,
+    /// Ids per request (the user's behavior-sequence length).
+    pub ids_per_request: usize,
+    /// Fraction of ids fabricated as never-trained (cache/table misses).
+    pub miss_rate: f64,
+    /// RNG seed; the whole stream is a pure function of it.
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            users: 1_000_000,
+            alpha: 1.1,
+            qps: 2000.0,
+            burst_amplitude: 0.5,
+            day_seconds: 60.0,
+            ids_per_request: 32,
+            miss_rate: 0.02,
+            seed: 0x7EA77FE,
+        }
+    }
+}
+
+impl TrafficConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.users == 0 {
+            bail!("traffic users must be positive");
+        }
+        if !self.alpha.is_finite() || self.alpha <= 0.0 {
+            bail!("traffic alpha must be positive, got {}", self.alpha);
+        }
+        if !self.qps.is_finite() || self.qps <= 0.0 {
+            bail!("traffic qps must be positive, got {}", self.qps);
+        }
+        if !(0.0..1.0).contains(&self.burst_amplitude) {
+            bail!(
+                "traffic burst amplitude must be in [0, 1), got {}",
+                self.burst_amplitude
+            );
+        }
+        if !self.day_seconds.is_finite() || self.day_seconds <= 0.0 {
+            bail!("traffic day length must be positive seconds");
+        }
+        if self.ids_per_request == 0 {
+            bail!("traffic ids-per-request must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.miss_rate) {
+            bail!("traffic miss rate must be in [0, 1], got {}", self.miss_rate);
+        }
+        Ok(())
+    }
+}
+
+/// One serving request: a user and the embedding ids their sequence
+/// needs, stamped with the modeled arrival time.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Zipf rank of the issuing user (0 = heaviest user).
+    pub user: u64,
+    /// Modeled arrival time in seconds since stream start.
+    pub arrival_s: f64,
+    /// Embedding ids to look up (may contain duplicates, like a real
+    /// behavior sequence).
+    pub ids: Vec<GlobalId>,
+}
+
+/// Deterministic closed-loop request stream over a live-id catalog.
+pub struct TrafficGenerator {
+    cfg: TrafficConfig,
+    zipf: Zipf,
+    rng: Xoshiro256,
+    catalog: Vec<GlobalId>,
+    clock_s: f64,
+    issued: u64,
+}
+
+/// Fabricated ids live at the top of the id space, far above anything
+/// the trainer's `GlobalIdCodec` hands out.
+const MISS_ID_BASE: GlobalId = GlobalId::MAX - (1 << 20);
+
+impl TrafficGenerator {
+    /// `catalog` is the replica's live-id snapshot; resident lookups are
+    /// drawn from it, so it must be non-empty.
+    pub fn new(cfg: TrafficConfig, catalog: Vec<GlobalId>) -> Result<Self> {
+        cfg.validate()?;
+        if catalog.is_empty() {
+            bail!("traffic generator needs a non-empty live-id catalog");
+        }
+        let zipf = Zipf::new(cfg.users, cfg.alpha);
+        let rng = Xoshiro256::new(cfg.seed);
+        Ok(TrafficGenerator {
+            cfg,
+            zipf,
+            rng,
+            catalog,
+            clock_s: 0.0,
+            issued: 0,
+        })
+    }
+
+    /// Instantaneous offered rate at modeled time `t_s`:
+    /// `qps * (1 + A * sin(2πt/day))`.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t_s / self.cfg.day_seconds;
+        self.cfg.qps * (1.0 + self.cfg.burst_amplitude * phase.sin())
+    }
+
+    /// Modeled clock after the last issued request.
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Draw the next request. Inter-arrival gaps follow the diurnal
+    /// rate deterministically (gap = 1/λ(t)), so a fixed request count
+    /// sweeps a known span of modeled time.
+    pub fn next_request(&mut self) -> Request {
+        let arrival_s = self.clock_s;
+        self.clock_s += 1.0 / self.rate_at(arrival_s);
+        self.issued += 1;
+
+        let user = self.zipf.sample(&mut self.rng) as u64;
+        // The user's id mix is a stable function of the user, so hot
+        // users re-request the same hot ids — what makes a hot-ID cache
+        // pay off — while the per-request sample still varies.
+        let mut ids = Vec::with_capacity(self.cfg.ids_per_request);
+        for _ in 0..self.cfg.ids_per_request {
+            if self.rng.bernoulli(self.cfg.miss_rate) {
+                ids.push(MISS_ID_BASE + self.rng.gen_range(1 << 20));
+            } else {
+                let span = (self.catalog.len() as u64 / 8).max(1);
+                let base = user.wrapping_mul(0x9E37_79B9_7F4A_7C15) % self.catalog.len() as u64;
+                let off = self.rng.gen_range(span);
+                ids.push(self.catalog[((base + off) % self.catalog.len() as u64) as usize]);
+            }
+        }
+        Request {
+            user,
+            arrival_s,
+            ids,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog(n: u64) -> Vec<GlobalId> {
+        (0..n).map(|i| i * 7 + 3).collect()
+    }
+
+    fn gen(cfg: TrafficConfig) -> TrafficGenerator {
+        TrafficGenerator::new(cfg, catalog(512)).unwrap()
+    }
+
+    #[test]
+    fn stream_is_deterministic_in_the_seed() {
+        let cfg = TrafficConfig {
+            users: 10_000,
+            ..TrafficConfig::default()
+        };
+        let mut a = gen(cfg.clone());
+        let mut b = gen(cfg.clone());
+        let mut c = gen(TrafficConfig { seed: 1, ..cfg });
+        let ra: Vec<Request> = (0..64).map(|_| a.next_request()).collect();
+        let rb: Vec<Request> = (0..64).map(|_| b.next_request()).collect();
+        let rc: Vec<Request> = (0..64).map(|_| c.next_request()).collect();
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.user, y.user);
+            assert_eq!(x.ids, y.ids);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+        assert!(
+            ra.iter().zip(rc.iter()).any(|(x, y)| x.ids != y.ids),
+            "different seeds should diverge"
+        );
+    }
+
+    #[test]
+    fn user_popularity_is_zipf_skewed() {
+        let mut g = gen(TrafficConfig {
+            users: 1000,
+            alpha: 1.2,
+            miss_rate: 0.0,
+            ..TrafficConfig::default()
+        });
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            counts[g.next_request().user as usize] += 1;
+        }
+        assert!(
+            counts[0] > 20 * counts[500].max(1),
+            "head user {} vs mid user {}",
+            counts[0],
+            counts[500]
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_swings_and_arrivals_follow_it() {
+        let cfg = TrafficConfig {
+            qps: 100.0,
+            burst_amplitude: 0.5,
+            day_seconds: 40.0,
+            ..TrafficConfig::default()
+        };
+        let g = gen(cfg);
+        // Peak at quarter-day, trough at three-quarter-day.
+        let peak = g.rate_at(10.0);
+        let trough = g.rate_at(30.0);
+        assert!((peak - 150.0).abs() < 1e-9, "peak {peak}");
+        assert!((trough - 50.0).abs() < 1e-9, "trough {trough}");
+        // Arrival gaps shrink at the peak: issue through a quarter day
+        // and check the local gap tracks 1/rate.
+        let mut g = gen(TrafficConfig {
+            qps: 100.0,
+            burst_amplitude: 0.5,
+            day_seconds: 40.0,
+            ..TrafficConfig::default()
+        });
+        let mut prev = g.next_request().arrival_s;
+        let mut min_gap = f64::MAX;
+        let mut max_gap: f64 = 0.0;
+        for _ in 0..4000 {
+            let t = g.next_request().arrival_s;
+            let gap = t - prev;
+            min_gap = min_gap.min(gap);
+            max_gap = max_gap.max(gap);
+            prev = t;
+        }
+        assert!(min_gap > 0.0);
+        assert!(
+            max_gap > 2.5 * min_gap,
+            "diurnal swing should separate gaps: min {min_gap} max {max_gap}"
+        );
+    }
+
+    #[test]
+    fn miss_rate_controls_fabricated_ids() {
+        let mut g = gen(TrafficConfig {
+            miss_rate: 0.25,
+            ids_per_request: 16,
+            ..TrafficConfig::default()
+        });
+        let cat: std::collections::HashSet<GlobalId> = catalog(512).into_iter().collect();
+        let mut total = 0usize;
+        let mut missing = 0usize;
+        for _ in 0..2000 {
+            for id in g.next_request().ids {
+                total += 1;
+                if !cat.contains(&id) {
+                    missing += 1;
+                    assert!(id >= MISS_ID_BASE, "fabricated ids live at the top");
+                }
+            }
+        }
+        let frac = missing as f64 / total as f64;
+        assert!((frac - 0.25).abs() < 0.02, "miss fraction {frac}");
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        let ok = TrafficConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(TrafficConfig { users: 0, ..ok.clone() }.validate().is_err());
+        assert!(TrafficConfig { qps: 0.0, ..ok.clone() }.validate().is_err());
+        assert!(TrafficConfig { burst_amplitude: 1.0, ..ok.clone() }
+            .validate()
+            .is_err());
+        assert!(TrafficConfig { miss_rate: 1.5, ..ok.clone() }.validate().is_err());
+        assert!(TrafficConfig { ids_per_request: 0, ..ok }.validate().is_err());
+        assert!(TrafficGenerator::new(TrafficConfig::default(), vec![]).is_err());
+    }
+}

@@ -1,0 +1,444 @@
+//! End-to-end serving suite: the delta-sync consumer side.
+//!
+//! Pins the hardened chain contract (gapped/torn/aliased snapshot dirs
+//! are loud errors, never silent staleness), log-structured compaction
+//! (the published base is bit-identical to a full-chain replay —
+//! including Adam state — per merge group, across trainer `--threads`
+//! values, and whether the chain was folded in one pass or
+//! incrementally), crash-mid-compaction recovery, and the
+//! [`ServingReplica`] bootstrap/refresh/lookup/forward path whose
+//! content checksum must equal the trainer report's
+//! `embedding_checksum` bit-for-bit.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use mtgrboost::checkpoint::delta::{
+    apply_delta, delta_dir, list_delta_seqs, load_delta_group_dims, load_delta_meta,
+    load_delta_shard_group, snapshot_rows, validate_chain,
+};
+use mtgrboost::checkpoint::{load_sparse_shard_group, SparseRow};
+use mtgrboost::data::generator::GeneratorConfig;
+use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
+use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
+use mtgrboost::online::{AdmissionConfig, OnlineOptions};
+use mtgrboost::optim::adam::{AdamParams, SparseAdam};
+use mtgrboost::runtime::Engine;
+use mtgrboost::serve::compact::latest_base;
+use mtgrboost::serve::{
+    compact_chain, run_serve, CompactOptions, ReplicaOptions, ServeOptions, ServingReplica,
+    TrafficConfig,
+};
+use mtgrboost::train::{TrainReport, Trainer, TrainerOptions};
+
+const SYNC_INTERVAL: usize = 3;
+const INTERVALS: usize = 8;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mtgr_serving_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// 8 intervals × 3 steps of online training at toy scale, with
+/// admission and TTL expiry both active so the emitted deltas carry
+/// upserts AND removals.
+fn train(schema: &str, threads: usize, dir: &Path) -> TrainReport {
+    let mut o = TrainerOptions::new("tiny", 2, 0);
+    o.schema = schema.to_string();
+    o.generator = GeneratorConfig {
+        len_mu: 2.5,
+        len_sigma: 0.5,
+        min_len: 2,
+        max_len: 60,
+        num_users: 400,
+        num_items: 250,
+        new_user_rate: 0.3,
+        new_item_rate: 0.3,
+        ..Default::default()
+    };
+    o.train.target_tokens = 900;
+    o.train.lr = 0.01;
+    o.shard_capacity = 1024;
+    o.collect_gauc = false;
+    o.threads = threads;
+    let mut online = OnlineOptions::new(SYNC_INTERVAL);
+    online.intervals = INTERVALS;
+    online.feature_ttl = (3 * SYNC_INTERVAL) as u64;
+    online.admission = Some(AdmissionConfig::new(2, 0.05));
+    online.day_every = 2;
+    online.sync_dir = Some(dir.to_path_buf());
+    o.online = Some(online);
+    Trainer::new(o, Engine::reference(7).unwrap())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Full-chain replay of one (rank, group) shard with Adam state — the
+/// ground truth a compacted base must reproduce bit-for-bit.
+fn replay_group(dir: &Path, rank: usize, group: usize) -> (ConcurrentDynamicTable, SparseAdam) {
+    let seqs = list_delta_seqs(dir).unwrap();
+    let m0 = load_delta_meta(dir, seqs[0]).unwrap();
+    let dim = load_delta_group_dims(dir, &m0).unwrap()[group];
+    // Seed/capacity/stripes are irrelevant: rows carry exact bits.
+    let table = ConcurrentDynamicTable::new(
+        DynamicTableConfig::new(dim).with_capacity(128).with_seed(0xBEEF),
+        4,
+    );
+    let mut opt = SparseAdam::new(dim, AdamParams::default());
+    for &seq in &seqs {
+        let m = load_delta_meta(dir, seq).unwrap();
+        let (rows, removed) = load_delta_shard_group(dir, &m, rank, group).unwrap();
+        apply_delta(&table, &mut opt, rows, &removed);
+    }
+    (table, opt)
+}
+
+/// Every file under `dir` as name → bytes (one level, no subdirs).
+fn dir_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(dir).unwrap() {
+        let e = e.unwrap();
+        out.insert(
+            e.file_name().to_string_lossy().into_owned(),
+            std::fs::read(e.path()).unwrap(),
+        );
+    }
+    out
+}
+
+#[test]
+fn compacted_base_matches_full_replay_bit_for_bit_across_threads() {
+    let mut base_files: Vec<BTreeMap<String, Vec<u8>>> = Vec::new();
+    for threads in [1usize, 4] {
+        let dir = tmp(&format!("compact_{threads}t"));
+        let report = train("meituan", threads, &dir);
+
+        // Ground truth BEFORE compaction prunes the chain: replay every
+        // (rank, group) shard and snapshot its rows (sorted, with Adam).
+        let newest = *list_delta_seqs(&dir).unwrap().last().unwrap();
+        assert_eq!(newest as usize, INTERVALS, "one delta per interval");
+        let meta = load_delta_meta(&dir, newest).unwrap();
+        let n_groups = load_delta_group_dims(&dir, &meta).unwrap().len();
+        assert_eq!(n_groups, 1, "homogeneous schema folds to one group");
+        let mut expected: Vec<Vec<SparseRow>> = Vec::new();
+        let mut expected_checksum = 0u64;
+        for rank in 0..meta.world {
+            let (table, opt) = replay_group(&dir, rank, 0);
+            expected_checksum = expected_checksum.wrapping_add(table.content_checksum());
+            expected.push(snapshot_rows(&table, &opt));
+        }
+        assert_eq!(expected_checksum, report.embedding_checksum);
+        let dense_bytes =
+            std::fs::read(delta_dir(&dir, newest).join("dense.bin")).unwrap();
+
+        let folded = compact_chain(&dir, &CompactOptions::default())
+            .unwrap()
+            .expect("a chain to fold");
+        assert_eq!(folded.prev_base_seq, 0);
+        assert_eq!(folded.base_seq, newest);
+        assert_eq!(folded.folded_deltas, INTERVALS);
+        assert_eq!(folded.step as usize, INTERVALS * SYNC_INTERVAL);
+        assert_eq!(folded.checksum, report.embedding_checksum);
+        assert!(
+            list_delta_seqs(&dir).unwrap().is_empty(),
+            "folded deltas must be pruned"
+        );
+
+        // The published base IS the replay state, Adam bits included.
+        let (bseq, bmeta) = latest_base(&dir).unwrap().expect("a published base");
+        assert_eq!(bseq, newest);
+        assert_eq!(bmeta.step as usize, INTERVALS * SYNC_INTERVAL);
+        let bdir = dir.join(format!("base_{bseq:05}"));
+        let mut rows_total = 0usize;
+        for (rank, exp) in expected.iter().enumerate() {
+            let got =
+                load_sparse_shard_group(&bdir, &bmeta, bmeta.world, rank, 0).unwrap();
+            assert_eq!(&got, exp, "rank {rank} base rows != full-chain replay");
+            rows_total += got.len();
+        }
+        assert_eq!(rows_total, folded.rows);
+        assert_eq!(rows_total, report.table_rows);
+        assert_eq!(
+            std::fs::read(bdir.join("dense.bin")).unwrap(),
+            dense_bytes,
+            "dense.bin must be the newest delta's bytes verbatim"
+        );
+
+        // A cold replica bootstrapped from the base alone carries the
+        // exact trained state, and serves real logits through the model.
+        let mut replica = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+        assert_eq!(replica.content_checksum(), report.embedding_checksum);
+        assert_eq!(replica.resident_rows(), report.table_rows);
+        assert_eq!(replica.applied_seq(), newest);
+        let ids = replica.live_ids(0);
+        assert!(!ids.is_empty());
+        let engine = Engine::reference(7).unwrap();
+        let tasks = engine.manifest().model("tiny").unwrap().tasks;
+        let batch: Vec<&[u64]> = vec![&ids[..4.min(ids.len())], &ids[..1]];
+        let logits = replica.forward(&engine, 0, &batch).unwrap();
+        assert_eq!(logits.len(), batch.len() * tasks);
+        assert!(logits.iter().all(|l| l.is_finite()));
+
+        base_files.push(dir_files(&bdir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    assert_eq!(
+        base_files[0], base_files[1],
+        "compacted base must be byte-identical across trainer --threads {{1,4}}"
+    );
+}
+
+#[test]
+fn incremental_compaction_equals_one_shot_per_merge_group() {
+    // Two identical multi-group trainings; fold one chain in a single
+    // pass and the other in two (base_4, then base_4 + 5..8): the
+    // published base_00008 must be byte-identical either way.
+    let dir_a = tmp("oneshot");
+    let dir_b = tmp("incremental");
+    let report_a = train("meituan-mixed", 1, &dir_a);
+    let report_b = train("meituan-mixed", 1, &dir_b);
+    assert_eq!(report_a.embedding_checksum, report_b.embedding_checksum);
+
+    let a = compact_chain(&dir_a, &CompactOptions::default())
+        .unwrap()
+        .expect("chain to fold");
+    assert_eq!(a.base_seq as usize, INTERVALS);
+
+    // Stash the back half of b's chain, fold the front, restore, fold
+    // the rest on top of the intermediate base.
+    let stash = tmp("stash");
+    std::fs::create_dir_all(&stash).unwrap();
+    for seq in (INTERVALS / 2 + 1)..=INTERVALS {
+        let name = format!("delta_{seq:05}");
+        std::fs::rename(dir_b.join(&name), stash.join(&name)).unwrap();
+    }
+    let first = compact_chain(&dir_b, &CompactOptions::default())
+        .unwrap()
+        .expect("front half to fold");
+    assert_eq!(first.base_seq as usize, INTERVALS / 2);
+    for seq in (INTERVALS / 2 + 1)..=INTERVALS {
+        let name = format!("delta_{seq:05}");
+        std::fs::rename(stash.join(&name), dir_b.join(&name)).unwrap();
+    }
+    let second = compact_chain(&dir_b, &CompactOptions::default())
+        .unwrap()
+        .expect("back half to fold");
+    assert_eq!(second.prev_base_seq as usize, INTERVALS / 2);
+    assert_eq!(second.base_seq as usize, INTERVALS);
+    assert_eq!(second.checksum, a.checksum);
+
+    let base_name = format!("base_{INTERVALS:05}");
+    let files_a = dir_files(&dir_a.join(&base_name));
+    let files_b = dir_files(&dir_b.join(&base_name));
+    // meituan-mixed forms two merge groups on tiny: group 0 keeps the
+    // historical name, group 1 gets the `_g1` suffix — both per rank.
+    for rank in 0..2 {
+        let g0 = format!("sparse_rank{rank:05}_of2.bin");
+        let g1 = format!("sparse_rank{rank:05}_of2_g1.bin");
+        assert!(files_a.contains_key(&g0), "missing {g0}");
+        assert!(files_a.contains_key(&g1), "missing {g1}");
+    }
+    assert_eq!(
+        files_a, files_b,
+        "incremental folding must publish byte-identical bases"
+    );
+
+    // Both bases serve the exact trained state across both groups.
+    let replica = ServingReplica::open(&dir_b, ReplicaOptions::default()).unwrap();
+    assert_eq!(replica.groups(), 2);
+    assert_eq!(replica.content_checksum(), report_b.embedding_checksum);
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+    std::fs::remove_dir_all(&stash).ok();
+}
+
+#[test]
+fn crash_leftover_stages_are_swept_not_trusted() {
+    let dir = tmp("crash");
+    let report = train("meituan", 1, &dir);
+
+    // A crash mid-compaction leaves a half-written `.tmp` stage behind.
+    // It must never be read as a base, and both compaction and replica
+    // bootstrap must sweep it.
+    let junk = dir.join("base_00099.tmp");
+    std::fs::create_dir_all(&junk).unwrap();
+    std::fs::write(junk.join("meta.json"), b"{ half-written garbage").unwrap();
+    assert!(
+        latest_base(&dir).unwrap().is_none(),
+        "a .tmp stage is not a base"
+    );
+
+    let folded = compact_chain(&dir, &CompactOptions::default())
+        .unwrap()
+        .expect("chain still folds");
+    assert_eq!(folded.checksum, report.embedding_checksum);
+    assert!(!junk.exists(), "compaction must sweep crash leftovers");
+
+    // Plant another leftover after the base exists: replica bootstrap
+    // sweeps it and serves from the real base.
+    std::fs::create_dir_all(&junk).unwrap();
+    std::fs::write(junk.join("garbage.bin"), [0u8; 16]).unwrap();
+    let replica = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+    assert_eq!(replica.content_checksum(), report.embedding_checksum);
+    assert!(!junk.exists(), "replica bootstrap must sweep crash leftovers");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn gapped_or_malformed_chains_are_rejected_loudly() {
+    let dir = tmp("reject");
+    let report = train("meituan", 1, &dir);
+    let opts = ReplicaOptions::default();
+
+    // (a) Gap: hide a middle delta. Bootstrap must refuse to replay
+    // across the hole rather than serve silently stale rows.
+    let hole = delta_dir(&dir, 3);
+    let stashed = dir.join("stashed_delta");
+    std::fs::rename(&hole, &stashed).unwrap();
+    let err = ServingReplica::open(&dir, opts.clone()).unwrap_err().to_string();
+    assert!(err.contains("gap"), "gap must be named: {err}");
+    std::fs::rename(&stashed, &hole).unwrap();
+
+    // (b) Torn snapshot: a truncated meta.json marks an interrupted
+    // write; the whole dir is rejected, not skipped.
+    let meta_path = delta_dir(&dir, 5).join("meta.json");
+    let meta_bytes = std::fs::read(&meta_path).unwrap();
+    std::fs::write(&meta_path, b"{}").unwrap();
+    let err = ServingReplica::open(&dir, opts.clone()).unwrap_err().to_string();
+    assert!(err.contains("torn"), "torn dirs must be named: {err}");
+    std::fs::write(&meta_path, &meta_bytes).unwrap();
+
+    // (c) Aliased spelling: `delta_7` would shadow `delta_00007`;
+    // ambiguous names are an error, never a silent alias.
+    let alias = dir.join("delta_7");
+    std::fs::create_dir_all(&alias).unwrap();
+    let err = ServingReplica::open(&dir, opts.clone()).unwrap_err().to_string();
+    assert!(err.contains("alias"), "aliases must be rejected: {err}");
+    std::fs::remove_dir_all(&alias).unwrap();
+
+    // (d) Swapped dirs: the name set stays contiguous but delta_00003
+    // now holds delta_00004's meta — the seq↔dirname check catches it.
+    let d3 = delta_dir(&dir, 3);
+    let d4 = delta_dir(&dir, 4);
+    let swap = dir.join("swap_tmp");
+    std::fs::rename(&d3, &swap).unwrap();
+    std::fs::rename(&d4, &d3).unwrap();
+    std::fs::rename(&swap, &d4).unwrap();
+    let err = ServingReplica::open(&dir, opts.clone()).unwrap_err().to_string();
+    assert!(
+        err.contains("renamed or torn"),
+        "seq mismatch must be rejected: {err}"
+    );
+    std::fs::rename(&d3, &swap).unwrap();
+    std::fs::rename(&d4, &d3).unwrap();
+    std::fs::rename(&swap, &d4).unwrap();
+
+    // Restored chain is whole again and validate_chain agrees.
+    assert_eq!(validate_chain(&dir, 0, 0).unwrap().len(), INTERVALS);
+    let replica = ServingReplica::open(&dir, opts).unwrap();
+    assert_eq!(replica.content_checksum(), report.embedding_checksum);
+
+    // (e) An empty sync dir is "nothing to serve", not an empty replica.
+    let empty = tmp("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = ServingReplica::open(&empty, ReplicaOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nothing to serve"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&empty).ok();
+}
+
+#[test]
+fn refresh_consumes_newly_published_deltas() {
+    let dir = tmp("refresh");
+    let report = train("meituan", 1, &dir);
+
+    // Hide the back half of the chain: the replica boots at seq 4, then
+    // "the trainer publishes" (restore) and refresh folds the rest in.
+    let stash = tmp("refresh_stash");
+    std::fs::create_dir_all(&stash).unwrap();
+    for seq in (INTERVALS / 2 + 1)..=INTERVALS {
+        let name = format!("delta_{seq:05}");
+        std::fs::rename(dir.join(&name), stash.join(&name)).unwrap();
+    }
+    let mut replica = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+    assert_eq!(replica.applied_seq() as usize, INTERVALS / 2);
+    // Warm the cache with every live id so refresh invalidation is
+    // actually exercised (the later deltas touch many of these rows).
+    let warm_ids = replica.live_ids(0);
+    let dim = replica.group_dim(0);
+    let mut buf = vec![0.0f32; dim];
+    for &id in &warm_ids {
+        replica.lookup(0, id, &mut buf);
+        replica.lookup(0, id, &mut buf); // second hit comes from cache
+    }
+    assert!(replica.stats().cache_hits > 0);
+
+    for seq in (INTERVALS / 2 + 1)..=INTERVALS {
+        let name = format!("delta_{seq:05}");
+        std::fs::rename(stash.join(&name), dir.join(&name)).unwrap();
+    }
+    assert_eq!(replica.refresh().unwrap(), INTERVALS / 2);
+    assert_eq!(replica.applied_seq() as usize, INTERVALS);
+    assert_eq!(replica.content_checksum(), report.embedding_checksum);
+    assert!(
+        replica.stats().cache_invalidations > 0,
+        "refresh must invalidate delta-touched cached ids"
+    );
+    // Served rows reflect the refreshed state: every cached id re-read
+    // after refresh matches the table's row bits.
+    for &id in warm_ids.iter().take(64) {
+        if replica.lookup(0, id, &mut buf) {
+            let mut again = vec![0.0f32; dim];
+            assert!(replica.lookup(0, id, &mut again));
+            assert_eq!(buf, again, "cache and table disagree for id {id}");
+        }
+    }
+    assert_eq!(replica.refresh().unwrap(), 0, "nothing new to fold");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&stash).ok();
+}
+
+#[test]
+fn run_serve_end_to_end_over_a_live_sync_dir() {
+    let dir = tmp("run_serve");
+    let report = train("meituan", 1, &dir);
+    let engine = Engine::reference(7).unwrap();
+    let opts = ServeOptions {
+        requests: 64,
+        micro_batch: 8,
+        refresh_every: 32,
+        compact_every: 48,
+        traffic: TrafficConfig {
+            users: 5_000,
+            qps: 1000.0,
+            day_seconds: 0.5,
+            ids_per_request: 16,
+            ..TrafficConfig::default()
+        },
+        ..ServeOptions::default()
+    };
+    let serve = run_serve(&dir, &engine, &opts).unwrap();
+    assert_eq!(serve.requests, 64);
+    assert_eq!(serve.micro_batches, 8);
+    assert_eq!(serve.stats.lookups, 64 * 16);
+    assert_eq!(
+        serve.stats.resident + serve.stats.missing,
+        serve.stats.lookups
+    );
+    assert!(serve.stats.missing > 0, "miss traffic must exercise cold ids");
+    assert!(serve.cache_hit_rate > 0.0, "hot ids must hit the cache");
+    assert!(serve.latency_ms.p50 > 0.0 && serve.latency_ms.p50.is_finite());
+    assert!(serve.latency_ms.p99 >= serve.latency_ms.p50);
+    assert!(serve.achieved_qps > 0.0);
+    assert!(serve.compactions >= 1, "compact_every must trigger");
+    assert_eq!(serve.applied_seq as usize, INTERVALS);
+    assert_eq!(serve.embedding_checksum, report.embedding_checksum);
+    // The compaction pass published a base and pruned the chain.
+    assert!(list_delta_seqs(&dir).unwrap().is_empty());
+    assert!(latest_base(&dir).unwrap().is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
