@@ -17,11 +17,14 @@
 //! rows); only the schedule differs.
 //!
 //! `--iters N` / `--occurrences N` (after `--`) shrink the run for CI.
-//! `--calibrate` instead sweeps the three runtime-tunable thresholds
+//! `--calibrate` instead sweeps the four runtime-tunable thresholds
 //! (`MTGR_DEDUP_SORT_THRESHOLD`, `MTGR_PAR_ROWS_THRESHOLD`,
-//! `MTGR_PAR_FETCH_THRESHOLD`) across input sizes and prints the
-//! serial/parallel crossover points measured on THIS machine, so the
-//! defaults can be tuned per deployment.
+//! `MTGR_PAR_FETCH_THRESHOLD`, `MTGR_PAR_DENSE_THRESHOLD`) across
+//! input sizes, prints the serial/parallel crossover points measured
+//! on THIS machine, and writes them to `calibration.json` next to the
+//! working directory so a deployment can compare them against the
+//! baked defaults in `util::tuning::calibrated` and export the env
+//! overrides without recompiling.
 
 use mtgrboost::embedding::concurrent::{ConcurrentDynamicTable, PAR_FETCH};
 use mtgrboost::embedding::dedup::{
@@ -30,8 +33,9 @@ use mtgrboost::embedding::dedup::{
 };
 use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
 use mtgrboost::embedding::EmbeddingStore;
-use mtgrboost::optim::adam::{AdamParams, SparseAdam};
+use mtgrboost::optim::adam::{AdamParams, DenseAdam, SparseAdam, PAR_DENSE};
 use mtgrboost::util::bench::{bench_fn, ratio, BenchReport, Table};
+use mtgrboost::util::json::Json;
 use mtgrboost::util::cli::Args;
 use mtgrboost::util::pool::WorkerPool;
 use mtgrboost::util::rng::{Xoshiro256, Zipf};
@@ -118,13 +122,15 @@ fn calibrate(iters: usize, threads: usize) {
     DEDUP_SORT.set(1);
     PAR_ROWS.set(1);
     PAR_FETCH.set(1);
+    PAR_DENSE.set(1);
 
     let mut tbl = Table::new(
         &format!("Threshold calibration ({threads}-thread pool, µs per call)"),
         &["n", "dedup hash", "dedup sort-par", "gather ser", "gather par", "scatter ser",
-          "scatter par", "fetch ser", "fetch par"],
+          "scatter par", "fetch ser", "fetch par", "dense ser", "dense par"],
     );
-    let mut cross = [None::<usize>; 3]; // dedup, rows (gather|scatter), fetch
+    // dedup, rows (gather|scatter), fetch, dense adam
+    let mut cross = [None::<usize>; 4];
     for &n in &sizes {
         let ids = zipf_ids(n, 11);
         let d = Dedup::of_hash(&ids);
@@ -162,6 +168,24 @@ fn calibrate(iters: usize, threads: usize) {
         let t_fetch_p = time_it(iters, || {
             ft.fetch_rows_shared(&ids, true, &mut fetched, Some(&pool))
         });
+        // Dense Adam over n parameters (the element-chunked pooled step
+        // vs the serial loop; `n` doubles as the dense size axis).
+        let mut dense_params: Vec<f32> = {
+            let mut rng = Xoshiro256::new(5);
+            (0..n).map(|_| rng.next_f32()).collect()
+        };
+        let dense_grads: Vec<f32> = {
+            let mut rng = Xoshiro256::new(6);
+            (0..n).map(|_| rng.next_f32() - 0.5).collect()
+        };
+        let mut dense_s = DenseAdam::new(n, AdamParams::default());
+        let t_dense_s = time_it(iters, || {
+            dense_s.step_pooled(&mut dense_params, &dense_grads, 1.0, None)
+        });
+        let mut dense_p = DenseAdam::new(n, AdamParams::default());
+        let t_dense_p = time_it(iters, || {
+            dense_p.step_pooled(&mut dense_params, &dense_grads, 1.0, Some(&pool))
+        });
         if cross[0].is_none() && t_sort < t_hash {
             cross[0] = Some(n);
         }
@@ -170,6 +194,9 @@ fn calibrate(iters: usize, threads: usize) {
         }
         if cross[2].is_none() && t_fetch_p < t_fetch_s {
             cross[2] = Some(n);
+        }
+        if cross[3].is_none() && t_dense_p < t_dense_s {
+            cross[3] = Some(n);
         }
         let us = |t: f64| format!("{:.1}", t * 1e6);
         tbl.row(&[
@@ -182,29 +209,42 @@ fn calibrate(iters: usize, threads: usize) {
             us(t_scatter_p),
             us(t_fetch_s),
             us(t_fetch_p),
+            us(t_dense_s),
+            us(t_dense_p),
         ]);
     }
     DEDUP_SORT.set(DEDUP_SORT.default_value());
     PAR_ROWS.set(PAR_ROWS.default_value());
     PAR_FETCH.set(PAR_FETCH.default_value());
+    PAR_DENSE.set(PAR_DENSE.default_value());
 
     let names = [
-        ("suggested_dedup_sort_threshold", DEDUP_SORT.default_value()),
-        ("suggested_par_rows_threshold", PAR_ROWS.default_value()),
-        ("suggested_par_fetch_threshold", PAR_FETCH.default_value()),
+        ("suggested_dedup_sort_threshold", &DEDUP_SORT),
+        ("suggested_par_rows_threshold", &PAR_ROWS),
+        ("suggested_par_fetch_threshold", &PAR_FETCH),
+        ("suggested_par_dense_threshold", &PAR_DENSE),
     ];
-    for (i, (key, default)) in names.iter().enumerate() {
+    let mut cal = Json::obj();
+    cal.set("threads", threads.into());
+    for (i, (key, knob)) in names.iter().enumerate() {
         // "Not reached" reports a sentinel above the sweep ceiling:
         // keep the kernel serial on this machine.
         let suggested = cross[i].unwrap_or(1 << 20);
         rep.add_metric(key, suggested.into());
+        cal.set(knob.env_var(), suggested.into());
         println!(
-            "{key}: crossover ≈ {} (compiled default {default})",
+            "{key}: crossover ≈ {} (compiled default {})",
             cross[i]
                 .map(|n| n.to_string())
                 .unwrap_or_else(|| "not reached in sweep".into()),
+            knob.default_value(),
         );
     }
+    // The machine-local calibration artifact: env-var name → measured
+    // crossover, ready to `export` (or to diff against the baked
+    // defaults in `util::tuning::calibrated`).
+    std::fs::write("calibration.json", cal.pretty()).unwrap();
+    println!("saved calibration.json");
     rep.add_table(tbl);
     rep.save().unwrap();
 }

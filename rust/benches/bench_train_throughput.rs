@@ -1,17 +1,19 @@
 //! Whole-step training throughput on the reference engine: steps/s and
-//! tokens/s at `--threads {1,2,4}` (PR 3's tentpole — the global worker
-//! pool, the batch-chunked dense forward/backward and cross-step
-//! pipelining turn per-kernel speedups into end-to-end step-time
-//! speedups).
+//! tokens/s over the raw-speed grid — `--threads {1, top}` ×
+//! `--overlap {on,off}` × `--cross-step {on,off}` × schema
+//! `{meituan, meituan-mixed}` — plus the multiplexed-exchange ablation
+//! (one packed message per comm lane vs one exchange per merge group)
+//! at the widest pool on the two-group schema.
 //!
 //! Correctness is asserted, not assumed: per-step losses and the final
-//! `embedding_checksum` must be **bit-identical** across every thread
-//! count and across cross-step overlap on/off; only wall-clock may
-//! differ.
+//! `embedding_checksum` must be **bit-identical** across every grid
+//! point of a schema, and the multiplexed exchange must move exactly
+//! the same payload bytes per lane as the per-group schedule; only
+//! wall-clock may differ.
 //!
 //! CLI (after `--`): `--steps N` (default 30), `--world N` (default 1),
 //! `--target-tokens N` (default 4096), `--model NAME` (default small),
-//! `--threads-max N` (default 4; sweeps {1,2,4,...} up to it).
+//! `--threads-max N` (default 4; the grid's top pool size).
 
 use std::time::Instant;
 
@@ -28,9 +30,17 @@ struct Bench {
     target_tokens: usize,
 }
 
+#[derive(Clone, Copy)]
+struct Point {
+    threads: usize,
+    overlap: bool,
+    cross_step: bool,
+    multiplex: bool,
+}
+
 impl Bench {
-    fn run(&self, threads: usize, cross_step: bool) -> (TrainReport, f64) {
-        let mut o = TrainerOptions::new(&self.model, self.world, self.steps);
+    fn run(&self, schema: &str, world: usize, p: Point) -> (TrainReport, f64) {
+        let mut o = TrainerOptions::new(&self.model, world, self.steps);
         o.generator = GeneratorConfig {
             len_mu: 3.4,
             len_sigma: 0.6,
@@ -40,11 +50,13 @@ impl Bench {
             num_items: 20_000,
             ..Default::default()
         };
+        o.schema = schema.to_string();
         o.train.target_tokens = self.target_tokens;
         o.collect_gauc = false;
-        o.overlap = true;
-        o.cross_step = cross_step;
-        o.threads = threads;
+        o.overlap = p.overlap;
+        o.cross_step = p.cross_step;
+        o.multiplex_exchange = p.multiplex;
+        o.threads = p.threads;
         o.shard_capacity = 1 << 14;
         let engine = Engine::reference(7).unwrap();
         let t0 = Instant::now();
@@ -74,16 +86,7 @@ fn main() {
         steps: args.get_usize("steps", 30),
         target_tokens: args.get_usize("target-tokens", 4096),
     };
-    let threads_max = args.get_usize("threads-max", 4);
-    let mut thread_counts = vec![1usize];
-    let mut t = 2;
-    while t <= threads_max {
-        thread_counts.push(t);
-        t *= 2;
-    }
-    // The widest pool actually swept (== threads_max only when it is a
-    // power of two); the speedup metric and ablation run at this count.
-    let top = *thread_counts.last().unwrap();
+    let top = args.get_usize("threads-max", 4).max(2);
 
     let mut rep = BenchReport::new("bench_train_throughput");
     rep.add_metric("model", bench.model.as_str().into());
@@ -94,79 +97,149 @@ fn main() {
             "Whole-step training throughput ({} × world {}, {} steps, target {} tokens)",
             bench.model, bench.world, bench.steps, bench.target_tokens
         ),
-        &["threads", "steps/s", "tokens/s", "vs 1t"],
+        &["schema", "threads", "overlap", "cross", "steps/s", "tokens/s", "vs base"],
     );
 
-    let mut base_steps_per_s = 0.0f64;
-    let mut base_fp = None;
-    let mut speedup_max = 0.0f64;
-    for &threads in &thread_counts {
-        let (report, secs) = bench.run(threads, true);
-        let fp = fingerprint(&report);
-        if let Some(reference) = &base_fp {
+    // ---- the raw-speed grid, per schema ------------------------------
+    // Every point of a schema must agree bit for bit with the first
+    // (threads=1, overlap off); only wall-clock may differ.
+    for schema in ["meituan", "meituan-mixed"] {
+        let tag = schema.replace('-', "_");
+        let mut base_fp = None;
+        let mut base_steps_per_s = 0.0f64;
+        let mut top_pipelined = 0.0f64;
+        for threads in [1usize, top] {
+            // Cross-step without overlap is ignored by the trainer, so
+            // the grid runs the three distinct flag combinations.
+            for (overlap, cross_step) in [(false, false), (true, false), (true, true)] {
+                let p = Point {
+                    threads,
+                    overlap,
+                    cross_step,
+                    multiplex: true,
+                };
+                let (report, secs) = bench.run(schema, bench.world, p);
+                let fp = fingerprint(&report);
+                match &base_fp {
+                    None => base_fp = Some(fp),
+                    Some(reference) => assert_eq!(
+                        &fp, reference,
+                        "{schema}: threads={threads} overlap={overlap} \
+                         cross={cross_step} diverged from the base point"
+                    ),
+                }
+                let steps_per_s = bench.steps as f64 / secs;
+                if threads == 1 && !overlap {
+                    base_steps_per_s = steps_per_s;
+                }
+                if threads == top && overlap && cross_step {
+                    top_pipelined = steps_per_s;
+                    assert!(
+                        report.mean_hidden_boundary_s() > 0.0,
+                        "cross-step pipelining must report boundary-hidden time"
+                    );
+                    assert!(
+                        report.mean_hidden_boundary_grad_s() > 0.0,
+                        "the cross-step gradient lane must report hidden time"
+                    );
+                }
+                rep.add_metric(
+                    &format!(
+                        "steps_per_s_{tag}_{threads}t_ov{}_cs{}",
+                        overlap as u8, cross_step as u8
+                    ),
+                    steps_per_s.into(),
+                );
+                tbl.row(&[
+                    schema.into(),
+                    format!("{threads}"),
+                    format!("{}", overlap as u8),
+                    format!("{}", cross_step as u8),
+                    format!("{steps_per_s:.2}"),
+                    format!("{:.0}", report.wall.tokens_per_sec()),
+                    ratio(steps_per_s, base_steps_per_s),
+                ]);
+            }
+        }
+        rep.add_metric(
+            &format!("speedup_{tag}_{top}t_vs_1t"),
+            (top_pipelined / base_steps_per_s).into(),
+        );
+    }
+
+    // ---- multiplexed-exchange ablation -------------------------------
+    // Two merge groups (meituan-mixed) at world ≥ 2, widest pool, fully
+    // pipelined: the packed path (one message per lane) vs one exchange
+    // per group. Identical numbers, identical per-lane payload bytes —
+    // the packing may only add its metered section headers.
+    {
+        let world = bench.world.max(2);
+        let full = |multiplex| Point {
+            threads: top,
+            overlap: true,
+            cross_step: true,
+            multiplex,
+        };
+        let (muxed, secs_mux) = bench.run("meituan-mixed", world, full(true));
+        let (plain, secs_plain) = bench.run("meituan-mixed", world, full(false));
+        assert_eq!(
+            fingerprint(&muxed),
+            fingerprint(&plain),
+            "multiplexing changed arithmetic"
+        );
+        for lane in 1..5 {
             assert_eq!(
-                &fp, reference,
-                "--threads {threads} diverged from the 1-thread run"
+                muxed.wire_payload_bytes[lane], plain.wire_payload_bytes[lane],
+                "lane {lane}: packed exchange moved different payload"
             );
-        }
-        if base_fp.is_none() {
-            base_fp = Some(fp);
-        }
-        let steps_per_s = bench.steps as f64 / secs;
-        let tokens_per_s = report.wall.tokens_per_sec();
-        if threads == 1 {
-            base_steps_per_s = steps_per_s;
-        }
-        let speed = steps_per_s / base_steps_per_s;
-        if threads == top {
-            speedup_max = speed;
             assert!(
-                report.mean_hidden_boundary_s() > 0.0,
-                "cross-step pipelining must report boundary-hidden time"
+                muxed.wire_payload_bytes[lane] > 0,
+                "lane {lane} must carry exchange traffic at world {world}"
             );
         }
-        rep.add_metric(&format!("steps_per_s_{threads}t"), steps_per_s.into());
-        rep.add_metric(&format!("tokens_per_s_{threads}t"), tokens_per_s.into());
+        assert!(muxed.wire_header_bytes > 0, "packed headers must be metered");
+        assert_eq!(plain.wire_header_bytes, 0, "per-group path has no headers");
+        let mux_sps = bench.steps as f64 / secs_mux;
+        let plain_sps = bench.steps as f64 / secs_plain;
+        rep.add_metric(&format!("steps_per_s_mixed_{top}t_mux"), mux_sps.into());
+        rep.add_metric(
+            &format!("steps_per_s_mixed_{top}t_per_group"),
+            plain_sps.into(),
+        );
+        rep.add_metric(
+            &format!("mux_speedup_mixed_{top}t"),
+            (mux_sps / plain_sps).into(),
+        );
+        rep.add_metric(
+            "mux_header_bytes",
+            (muxed.wire_header_bytes as f64).into(),
+        );
         tbl.row(&[
-            format!("{threads}"),
-            format!("{steps_per_s:.2}"),
-            format!("{tokens_per_s:.0}"),
-            ratio(steps_per_s, base_steps_per_s),
+            "meituan-mixed".into(),
+            format!("{top} (mux)"),
+            "1".into(),
+            "1".into(),
+            format!("{mux_sps:.2}"),
+            format!("{:.0}", muxed.wall.tokens_per_sec()),
+            ratio(mux_sps, plain_sps),
+        ]);
+        tbl.row(&[
+            "meituan-mixed".into(),
+            format!("{top} (per-group)"),
+            "1".into(),
+            "1".into(),
+            format!("{plain_sps:.2}"),
+            format!("{:.0}", plain.wall.tokens_per_sec()),
+            "1.00x".into(),
         ]);
     }
 
-    // Cross-step ablation at the widest pool: bit-identical numerics,
-    // only the schedule differs.
-    let (no_cross, secs_off) = bench.run(top, false);
-    assert_eq!(
-        &fingerprint(&no_cross),
-        base_fp.as_ref().unwrap(),
-        "cross-step off diverged from cross-step on"
-    );
-    assert_eq!(
-        no_cross.mean_hidden_boundary_s(),
-        0.0,
-        "no boundary hiding without cross-step"
-    );
-    let steps_per_s_off = bench.steps as f64 / secs_off;
-    rep.add_metric(
-        &format!("steps_per_s_{top}t_cross_off"),
-        steps_per_s_off.into(),
-    );
-    tbl.row(&[
-        format!("{top} (cross off)"),
-        format!("{steps_per_s_off:.2}"),
-        format!("{:.0}", no_cross.wall.tokens_per_sec()),
-        ratio(steps_per_s_off, base_steps_per_s),
-    ]);
-
-    rep.add_metric(&format!("speedup_{top}t_vs_1t"), speedup_max.into());
     rep.add_table(tbl);
     rep.save().unwrap();
     println!(
         "\nOne global pool fair-shared across workers, batch-chunked dense \
-         compute and cross-step pipelining: whole-step wall-clock should \
-         scale with --threads while losses and the embedding checksum stay \
-         bit-identical."
+         compute, cross-step pipelining in both directions and one packed \
+         message per comm lane: whole-step wall-clock should improve down \
+         the grid while losses and the embedding checksum stay bit-identical."
     );
 }

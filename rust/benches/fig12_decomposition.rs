@@ -7,8 +7,9 @@
 //! The overlap ablation additionally decomposes hidden communication
 //! per lane: the ID exchange, the embedding reply (double-buffered
 //! round), the backward gradient push (completed behind the next
-//! micro-batch's forward), and the cross-step boundary (the next step's
-//! first ID exchange riding the dense all-reduce).
+//! micro-batch's forward), and the two cross-step boundary lanes (the
+//! next step's first ID exchange and this step's last gradient push,
+//! both riding the dense all-reduce).
 //!
 //! `--steps N` (after `--`) shrinks the run for CI smoke tests.
 
@@ -43,7 +44,7 @@ fn main() {
         &format!("Fig 12: cumulative phase times over {steps} steps, 8 GPUs (simulated s)"),
         &[
             "config", "system", "lookup", "forward", "backward", "hid_id", "hid_reply",
-            "hid_grad", "hid_bnd", "total",
+            "hid_grad", "hid_bnd", "hid_bndg", "total",
         ],
     );
     let mut rep = BenchReport::new("fig12_decomposition");
@@ -71,6 +72,7 @@ fn main() {
             let mut hid_reply = 0.0;
             let mut hid_grad = 0.0;
             let mut hid_bnd = 0.0;
+            let mut hid_bndg = 0.0;
             let mut comm = 0.0;
             for s in &r.steps {
                 // Synchronous steps are gated by the slowest device.
@@ -102,12 +104,17 @@ fn main() {
                     .iter()
                     .map(|d| d.hidden_boundary_s)
                     .fold(0.0f64, f64::max);
+                hid_bndg += s
+                    .devices
+                    .iter()
+                    .map(|d| d.hidden_boundary_grad_s)
+                    .fold(0.0f64, f64::max);
                 comm += s.devices.iter().map(|d| d.comm_s).fold(0.0f64, f64::max);
             }
             let total = lookup + fwd + bwd;
             totals.push(total);
             exposed_comm.push(comm);
-            hidden_lanes.push((hid_id, hid_reply, hid_grad, hid_bnd));
+            hidden_lanes.push((hid_id, hid_reply, hid_grad, hid_bnd, hid_bndg));
             table.row(&[
                 label.into(),
                 system.into(),
@@ -118,6 +125,7 @@ fn main() {
                 format!("{hid_reply:.2}"),
                 format!("{hid_grad:.2}"),
                 format!("{hid_bnd:.2}"),
+                format!("{hid_bndg:.2}"),
                 format!("{total:.2}"),
             ]);
         }
@@ -133,13 +141,17 @@ fn main() {
             &format!("exposed_comm_s_{tag}_overlap_on"),
             exposed_comm[2].into(),
         );
-        let (hid_id, hid_reply, hid_grad, hid_bnd) = hidden_lanes[2];
+        let (hid_id, hid_reply, hid_grad, hid_bnd, hid_bndg) = hidden_lanes[2];
         rep.add_metric(&format!("hidden_id_s_{tag}_overlap_on"), hid_id.into());
         rep.add_metric(&format!("hidden_reply_s_{tag}_overlap_on"), hid_reply.into());
         rep.add_metric(&format!("hidden_grad_s_{tag}_overlap_on"), hid_grad.into());
         rep.add_metric(
             &format!("sim_hidden_boundary_s_{tag}_overlap_on"),
             hid_bnd.into(),
+        );
+        rep.add_metric(
+            &format!("sim_hidden_boundary_grad_s_{tag}_overlap_on"),
+            hid_bndg.into(),
         );
         assert!(
             exposed_comm[2] < exposed_comm[1],
@@ -149,12 +161,16 @@ fn main() {
         );
         assert_eq!(
             hidden_lanes[1],
-            (0.0, 0.0, 0.0, 0.0),
+            (0.0, 0.0, 0.0, 0.0, 0.0),
             "no hidden time without overlap"
         );
         assert!(
             hid_bnd > 0.0,
             "cross-step overlap must hide boundary time on the ID lane"
+        );
+        assert!(
+            hid_bndg > 0.0,
+            "cross-step overlap must hide boundary time on the gradient lane"
         );
         if label == "4G 1D" {
             // Compute dominates every lane at 4G scale: the

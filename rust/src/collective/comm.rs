@@ -117,6 +117,10 @@ pub struct CommStats {
     pub all_reduce_bytes: u64,
     pub all_to_all_ops: u64,
     pub all_reduce_ops: u64,
+    /// All-to-all bytes split by lane (`all_to_all_bytes` is the sum):
+    /// the per-lane wire meters behind the trainer's payload-conservation
+    /// accounting for the multiplexed exchange.
+    pub lane_bytes: [u64; LANES],
 }
 
 /// One rank's endpoint.
@@ -232,6 +236,7 @@ impl CommHandle {
             self.senders[lane][dst].send(m).expect("peer hung up");
         }
         self.stats.all_to_all_bytes += sent;
+        self.stats.lane_bytes[lane] += sent;
         self.stats.all_to_all_ops += 1;
         let seq = self.posted_seq[lane];
         self.posted_seq[lane] += 1;
@@ -471,6 +476,10 @@ mod tests {
             assert_eq!(s.all_reduce_bytes, 40);
             assert_eq!(s.all_to_all_ops, 1);
             assert_eq!(s.all_reduce_ops, 1);
+            // The default-lane meter carries the whole exchange; per-lane
+            // meters always sum to the aggregate.
+            assert_eq!(s.lane_bytes[LANE_DEFAULT], s.all_to_all_bytes);
+            assert_eq!(s.lane_bytes.iter().sum::<u64>(), s.all_to_all_bytes);
         }
     }
 

@@ -37,7 +37,7 @@ use crate::util::tuning::TunableThreshold;
 /// Default occurrence count below which the stripe fan-out is not worth
 /// the fork/join overhead (the serial per-id path is used instead). The
 /// live value is [`PAR_FETCH`] (env `MTGR_PAR_FETCH_THRESHOLD`).
-pub const PAR_FETCH_THRESHOLD: usize = 512;
+pub const PAR_FETCH_THRESHOLD: usize = crate::util::tuning::calibrated::PAR_FETCH;
 
 /// Runtime knob for the per-id→striped batch fetch switch.
 pub static PAR_FETCH: TunableThreshold =

@@ -71,7 +71,7 @@ pub enum DedupKernel {
 /// hash kernel to the sorted kernel. The live value is the
 /// runtime-tunable [`DEDUP_SORT`] (env `MTGR_DEDUP_SORT_THRESHOLD`);
 /// `bench_parallel_lookup --calibrate` sweeps the crossover.
-pub const DEDUP_SORT_THRESHOLD: usize = 8192;
+pub const DEDUP_SORT_THRESHOLD: usize = crate::util::tuning::calibrated::DEDUP_SORT;
 
 /// Runtime knob for the hash→sort dedup switch.
 pub static DEDUP_SORT: TunableThreshold =
@@ -246,7 +246,7 @@ const MERGE_MAX_RUNS: usize = 8;
 /// Default row count above which the parallel gather/scatter kernels
 /// split across the pool (below it, fork/join overhead dominates). The
 /// live value is [`PAR_ROWS`] (env `MTGR_PAR_ROWS_THRESHOLD`).
-pub const PAR_ROWS_THRESHOLD: usize = 2048;
+pub const PAR_ROWS_THRESHOLD: usize = crate::util::tuning::calibrated::PAR_ROWS;
 
 /// Runtime knob for the serial→parallel gather/scatter switch.
 pub static PAR_ROWS: TunableThreshold =
@@ -257,14 +257,69 @@ pub fn par_rows_threshold() -> usize {
     PAR_ROWS.get()
 }
 
+/// Width of the straight-line inner blocks the gather/scatter/Adam
+/// kernels unroll to (8 f32 lanes = one AVX2 register / two NEON
+/// registers). Blocking only regroups independent per-element ops, so
+/// every blocked kernel stays bit-identical to its scalar reference.
+pub const SIMD_BLOCK: usize = 8;
+
+/// `dst[k] += src[k]` split into [`SIMD_BLOCK`]-wide exact chunks (the
+/// array conversion pins the length so the autovectorizer emits
+/// straight vector adds) plus a scalar tail for non-multiple lengths.
+/// Element order and pairing are unchanged — bit-identical to the naive
+/// zip loop.
+#[inline]
+pub fn add_assign_blocked(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut dc = dst.chunks_exact_mut(SIMD_BLOCK);
+    let mut sc = src.chunks_exact(SIMD_BLOCK);
+    for (db, sb) in (&mut dc).zip(&mut sc) {
+        let db: &mut [f32; SIMD_BLOCK] = db.try_into().unwrap();
+        let sb: &[f32; SIMD_BLOCK] = sb.try_into().unwrap();
+        for (d, s) in db.iter_mut().zip(sb) {
+            *d += *s;
+        }
+    }
+    for (d, s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d += *s;
+    }
+}
+
+/// Fixed-width gather body: monomorphized `[f32; D]` row moves compile
+/// to straight vector loads/stores (no per-row length dispatch) for the
+/// power-of-two dims the schema presets use.
+#[inline]
+fn gather_rows_fixed<const D: usize>(rows: &[f32], inverse: &[u32], out: &mut [f32]) {
+    let n_unique = rows.len() / D;
+    for (dst, &u) in out.chunks_exact_mut(D).zip(inverse) {
+        debug_assert!(
+            (u as usize) < n_unique,
+            "inverse index {u} out of bounds ({n_unique} unique rows)"
+        );
+        let src: &[f32; D] = rows[u as usize * D..(u as usize + 1) * D]
+            .try_into()
+            .unwrap();
+        let dst: &mut [f32; D] = dst.try_into().unwrap();
+        *dst = *src;
+    }
+}
+
 /// Expand unique embedding rows back to occurrence order:
 /// `out[i] = rows[inverse[i]]`. (The forward scatter after lookup.)
-/// Chunked `copy_from_slice` row moves; `inverse` bounds are
-/// debug-asserted against the unique-row count.
+/// Common power-of-two dims dispatch to a monomorphized fixed-width
+/// copy; other dims keep the generic `copy_from_slice` row moves.
+/// `inverse` bounds are debug-asserted against the unique-row count.
 pub fn gather_rows(rows: &[f32], dim: usize, inverse: &[u32], out: &mut [f32]) {
     assert!(dim > 0, "gather_rows requires dim > 0");
     assert_eq!(out.len(), inverse.len() * dim);
     assert_eq!(rows.len() % dim, 0);
+    match dim {
+        8 => return gather_rows_fixed::<8>(rows, inverse, out),
+        16 => return gather_rows_fixed::<16>(rows, inverse, out),
+        32 => return gather_rows_fixed::<32>(rows, inverse, out),
+        64 => return gather_rows_fixed::<64>(rows, inverse, out),
+        _ => {}
+    }
     let n_unique = rows.len() / dim;
     for (dst, &u) in out.chunks_exact_mut(dim).zip(inverse) {
         debug_assert!(
@@ -298,6 +353,10 @@ pub fn gather_rows_par(
 /// Accumulate occurrence-order gradients into unique rows:
 /// `out[inverse[i]] += grads[i]`. (The backward counterpart: duplicate
 /// occurrences of an ID sum their gradients — §5.2 sparse accumulation.)
+/// Row additions go through the blocked kernel
+/// ([`add_assign_blocked`]); per-row accumulation order is the
+/// occurrence order, same as ever, so results are bit-identical to the
+/// historical scalar loop.
 pub fn scatter_accumulate(grads: &[f32], dim: usize, inverse: &[u32], out: &mut [f32]) {
     assert!(dim > 0, "scatter_accumulate requires dim > 0");
     assert_eq!(grads.len(), inverse.len() * dim);
@@ -309,9 +368,7 @@ pub fn scatter_accumulate(grads: &[f32], dim: usize, inverse: &[u32], out: &mut 
             "inverse index {u} out of bounds ({n_unique} unique rows)"
         );
         let dst = &mut out[u as usize * dim..(u as usize + 1) * dim];
-        for (a, b) in dst.iter_mut().zip(g) {
-            *a += b;
-        }
+        add_assign_blocked(dst, g);
     }
 }
 
@@ -362,9 +419,7 @@ pub fn scatter_accumulate_par(
             let dst = &mut chunk[j * dim..(j + 1) * dim];
             for &occ in &occ_by_row[starts[u] as usize..starts[u + 1] as usize] {
                 let g = &grads[occ as usize * dim..(occ as usize + 1) * dim];
-                for (a, b) in dst.iter_mut().zip(g) {
-                    *a += b;
-                }
+                add_assign_blocked(dst, g);
             }
         }
     });
@@ -569,6 +624,48 @@ mod tests {
             scatter_accumulate_par(&grads, dim, &d.inverse, &mut acc, Some(&pool));
             assert_eq!(acc, acc_serial, "{threads} threads scatter");
         }
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive_for_odd_shapes() {
+        // Odd dims, non-block-multiple dims and the fixed-dim
+        // specializations (8/16/32/64) must all reproduce the naive
+        // scalar loops bit for bit.
+        let mut rng = Xoshiro256::new(21);
+        for &dim in &[1usize, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65] {
+            let ids: Vec<u64> = (0..57).map(|_| rng.gen_range(13)).collect();
+            let d = Dedup::of(&ids);
+            let rows: Vec<f32> = (0..d.unique.len() * dim)
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let grads: Vec<f32> = (0..ids.len() * dim)
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let mut exp_ref = vec![0.0f32; ids.len() * dim];
+            for (i, &u) in d.inverse.iter().enumerate() {
+                exp_ref[i * dim..(i + 1) * dim]
+                    .copy_from_slice(&rows[u as usize * dim..(u as usize + 1) * dim]);
+            }
+            let mut acc_ref = vec![0.0f32; d.unique.len() * dim];
+            for (i, &u) in d.inverse.iter().enumerate() {
+                for (j, &g) in grads[i * dim..(i + 1) * dim].iter().enumerate() {
+                    acc_ref[u as usize * dim + j] += g;
+                }
+            }
+            let mut exp = vec![0.0f32; ids.len() * dim];
+            gather_rows(&rows, dim, &d.inverse, &mut exp);
+            assert_eq!(exp, exp_ref, "dim {dim} gather");
+            let mut acc = vec![0.0f32; d.unique.len() * dim];
+            scatter_accumulate(&grads, dim, &d.inverse, &mut acc);
+            assert_eq!(acc, acc_ref, "dim {dim} scatter");
+        }
+        // Empty inverse map: both kernels are no-ops on empty outputs.
+        let mut empty_out: Vec<f32> = Vec::new();
+        gather_rows(&[1.0; 8], 8, &[], &mut empty_out);
+        assert!(empty_out.is_empty());
+        let mut acc = vec![3.0f32; 8];
+        scatter_accumulate(&[], 8, &[], &mut acc);
+        assert_eq!(acc, vec![3.0f32; 8], "no grads → rows untouched");
     }
 
     #[test]

@@ -214,6 +214,42 @@ impl MergePlan {
         }
     }
 
+    /// Build the *unmerged* ablation plan: one group (= one physical
+    /// table and one exchange per step) per logical table. Groups keep
+    /// the walked order of [`build`](Self::build) and the codec spans
+    /// the same logical-table index space, so a feature's global IDs
+    /// are identical under both plans — only the grouping (and thus
+    /// the number of lookup operators / exchanges) differs. This is
+    /// the trainer-side `--no-merging` ablation: the fusion win is
+    /// measured in wall-clock seconds, not just sim op counts.
+    pub fn build_unmerged(features: &[FeatureConfig]) -> MergePlan {
+        let merged = MergePlan::build(features);
+        let groups: Vec<MergeGroup> = merged
+            .groups
+            .iter()
+            .flat_map(|g| {
+                g.tables.iter().map(|t| MergeGroup {
+                    dim: g.dim,
+                    tables: vec![t.clone()],
+                })
+            })
+            .collect();
+        // Table indices were assigned walking groups in order, so after
+        // splitting, a table's group index equals its codec index.
+        let feature_to_table = merged
+            .feature_to_table
+            .iter()
+            .map(|(name, &(_, ti))| (name.clone(), (ti, ti)))
+            .collect();
+        MergePlan {
+            ops_before: merged.ops_before,
+            ops_after: groups.len(),
+            groups,
+            feature_to_table,
+            codec: merged.codec,
+        }
+    }
+
     /// Number of merge groups (= physical tables after fusion).
     pub fn num_groups(&self) -> usize {
         self.groups.len()
@@ -389,6 +425,28 @@ mod tests {
         let mut c = vec![0.0; 32];
         assert!(!coll.lookup_or_insert("user_id", 42, &mut c));
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn unmerged_plan_one_group_per_table_same_global_ids() {
+        let feats = demo_features();
+        let merged = MergePlan::build(&feats);
+        let unmerged = MergePlan::build_unmerged(&feats);
+        // One group per logical table; fusion win disappears.
+        assert_eq!(unmerged.num_groups(), merged.ops_before);
+        assert_eq!(unmerged.ops_after, unmerged.ops_before);
+        for g in &unmerged.groups {
+            assert_eq!(g.tables.len(), 1);
+        }
+        // Same codec space: every feature's global id is bit-identical
+        // under both plans (only the group routing differs).
+        for f in &feats {
+            let (_, gid_m) = merged.global_id(&f.name, 12345);
+            let (gi, gid_u) = unmerged.global_id(&f.name, 12345);
+            assert_eq!(gid_m, gid_u);
+            assert_eq!(unmerged.groups[gi].dim, f.dim);
+            assert_eq!(unmerged.groups[gi].tables[0], f.table_key());
+        }
     }
 
     #[test]

@@ -31,11 +31,18 @@
 //! TurboGR-style overlap the `--overlap` ablation toggles. Every
 //! parallel path is bit-identical to the serial reference for every
 //! pool size (disjoint writes; per-row accumulation order preserved).
+//!
+//! With several merge groups (heterogeneous schemas), [`GroupExchange`]
+//! **multiplexes** the per-group exchanges: all groups' payloads ride
+//! ONE message per comm lane with u64 section headers on the ID lanes,
+//! so each pipeline phase costs one all-to-all regardless of the group
+//! count. Single-group runs keep the historical per-group wire format
+//! byte for byte.
 
 use std::sync::Arc;
 
 use crate::collective::comm::{
-    CommHandle, Message, PendingAllToAll, LANE_EMB, LANE_GRAD, LANE_GRAD_IDS, LANE_IDS,
+    CommHandle, Message, PendingAllToAll, LANES, LANE_EMB, LANE_GRAD, LANE_GRAD_IDS, LANE_IDS,
 };
 use crate::embedding::dedup::{
     gather_rows_par, scatter_accumulate_par, Dedup, DedupStrategy, DedupVolume,
@@ -71,11 +78,10 @@ pub fn shard_owner(id: GlobalId, world: usize) -> usize {
     (hash_id(id, SHARD_SEED) % world as u64) as usize
 }
 
-/// In-flight state of a posted sharded lookup: the ID all-to-all is on
-/// the wire; the partition layout needed to serve and scatter rides
-/// along until [`ShardedEmbedding::complete_lookup`] consumes it.
-#[must_use = "a posted lookup must be completed or peers deadlock"]
-pub struct PendingLookup {
+/// Partition/dedup layout captured when a lookup is prepared, consumed
+/// when it is served and scattered. Shared by the per-group and the
+/// multiplexed ([`GroupExchange`]) schedules.
+struct LookupLayout {
     num_ids: usize,
     pos_by_dst: Vec<Vec<u32>>,
     stage1_inverse: Vec<Option<Vec<u32>>>,
@@ -84,9 +90,39 @@ pub struct PendingLookup {
     /// Per-destination raw occurrence counts.
     raw_lens: Vec<usize>,
     /// Per-destination ID bytes posted (installed into
-    /// `last_id_bytes` at completion so the `last_*_bytes` pair always
+    /// `last_id_bytes` at serve time so the `last_*_bytes` pair always
     /// describes the same exchange, even under pipelining).
     id_bytes: Vec<usize>,
+}
+
+/// Scatter layout of a served lookup (what
+/// [`ShardedEmbedding::complete_reply`] needs).
+struct ReplyLayout {
+    num_ids: usize,
+    pos_by_dst: Vec<Vec<u32>>,
+    stage1_inverse: Vec<Option<Vec<u32>>>,
+    /// Per-destination unique id counts — the reply row counts, which
+    /// the multiplexed schedule uses to split packed reply sections.
+    sent_lens: Vec<usize>,
+}
+
+impl LookupLayout {
+    fn into_reply(self) -> ReplyLayout {
+        ReplyLayout {
+            num_ids: self.num_ids,
+            pos_by_dst: self.pos_by_dst,
+            stage1_inverse: self.stage1_inverse,
+            sent_lens: self.sent_lens,
+        }
+    }
+}
+
+/// In-flight state of a posted sharded lookup: the ID all-to-all is on
+/// the wire; the partition layout needed to serve and scatter rides
+/// along until [`ShardedEmbedding::complete_lookup`] consumes it.
+#[must_use = "a posted lookup must be completed or peers deadlock"]
+pub struct PendingLookup {
+    layout: LookupLayout,
     pending: PendingAllToAll,
 }
 
@@ -95,9 +131,7 @@ pub struct PendingLookup {
 /// [`ShardedEmbedding::complete_reply`] consumes it.
 #[must_use = "a served lookup must be completed or peers deadlock"]
 pub struct PendingReply {
-    num_ids: usize,
-    pos_by_dst: Vec<Vec<u32>>,
-    stage1_inverse: Vec<Option<Vec<u32>>>,
+    layout: ReplyLayout,
     pending: PendingAllToAll,
 }
 
@@ -170,8 +204,26 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
     ///
     /// Collective: all ranks must post and complete in the same order.
     pub fn post_ids(&mut self, comm: &mut CommHandle, ids: &[GlobalId]) -> PendingLookup {
-        let world = comm.world;
+        let (send_ids, layout) = self.prepare_lookup(comm.world, ids);
 
+        // ---- ID all-to-all (posted, non-blocking) --------------------
+        let pending = comm.post_all_to_all_on(
+            LANE_IDS,
+            send_ids.into_iter().map(Message::Ids).collect(),
+        );
+        PendingLookup { layout, pending }
+    }
+
+    /// Partition `ids` by owner and apply stage-1 dedup; returns the
+    /// per-destination send lists plus the layout needed to serve and
+    /// scatter. Pure bookkeeping — nothing touches the wire, so the
+    /// multiplexed schedule can pack several groups' send lists into one
+    /// message.
+    fn prepare_lookup(
+        &mut self,
+        world: usize,
+        ids: &[GlobalId],
+    ) -> (Vec<Vec<GlobalId>>, LookupLayout) {
         // ---- partition by owner ------------------------------------
         let mut ids_by_dst: Vec<Vec<GlobalId>> = vec![Vec::new(); world];
         let mut pos_by_dst: Vec<Vec<u32>> = vec![Vec::new(); world];
@@ -201,21 +253,15 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         let id_bytes: Vec<usize> = send_ids.iter().map(|v| v.len() * 8).collect();
         let sent_lens: Vec<usize> = send_ids.iter().map(|v| v.len()).collect();
         let raw_lens: Vec<usize> = ids_by_dst.iter().map(|v| v.len()).collect();
-
-        // ---- ID all-to-all (posted, non-blocking) --------------------
-        let pending = comm.post_all_to_all_on(
-            LANE_IDS,
-            send_ids.into_iter().map(Message::Ids).collect(),
-        );
-        PendingLookup {
+        let layout = LookupLayout {
             num_ids: ids.len(),
             pos_by_dst,
             stage1_inverse,
             sent_lens,
             raw_lens,
             id_bytes,
-            pending,
-        }
+        };
+        (send_ids, layout)
     }
 
     /// Phase 2 of the pipelined lookup: receive the requested IDs,
@@ -232,23 +278,41 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         train: bool,
     ) -> PendingReply {
         let world = comm.world;
-        let dim = self.dim;
-        let pool = self.pool.clone();
-        let PendingLookup {
-            num_ids,
-            pos_by_dst,
-            stage1_inverse,
-            sent_lens,
-            raw_lens,
-            id_bytes,
-            pending,
-        } = lookup;
-        self.last_id_bytes = id_bytes;
+        let PendingLookup { mut layout, pending } = lookup;
+        self.last_id_bytes = std::mem::take(&mut layout.id_bytes);
         let requested: Vec<Vec<GlobalId>> = comm
             .complete_all_to_all(pending)
             .into_iter()
             .map(Message::into_ids)
             .collect();
+        let replies =
+            self.serve_requested(world, requested, &layout.sent_lens, &layout.raw_lens, train);
+
+        // ---- embedding all-to-all (posted) ---------------------------
+        let pending = comm.post_all_to_all_on(
+            LANE_EMB,
+            replies.into_iter().map(Message::Floats).collect(),
+        );
+        PendingReply {
+            layout: layout.into_reply(),
+            pending,
+        }
+    }
+
+    /// Serve a received request set from the local shard: stage-2 dedup,
+    /// batched fetch, per-source expansion. Updates the volume meters and
+    /// `last_emb_bytes`; returns the per-destination reply rows (the wire
+    /// payload, whatever schedule carries it).
+    fn serve_requested(
+        &mut self,
+        world: usize,
+        requested: Vec<Vec<GlobalId>>,
+        sent_lens: &[usize],
+        raw_lens: &[usize],
+        train: bool,
+    ) -> Vec<Vec<f32>> {
+        let dim = self.dim;
+        let pool = self.pool.clone();
 
         // ---- serve: stage-2 dedup + local table lookup ---------------
         let total_req: usize = requested.iter().map(|r| r.len()).sum();
@@ -284,7 +348,6 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 .collect()
         };
 
-        // ---- embedding all-to-all (posted) ---------------------------
         // Reply row counts mirror the *received* id counts; the raw
         // (no-stage-1) counterpart is what we would have sent without
         // dedup — accounted for Fig. 16.
@@ -293,42 +356,31 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             self.volume.emb_rows_sent += sent_lens[dst];
         }
         self.last_emb_bytes = replies.iter().map(|r| r.len() * 4).collect();
-        let pending = comm.post_all_to_all_on(
-            LANE_EMB,
-            replies.into_iter().map(Message::Floats).collect(),
-        );
-        PendingReply {
-            num_ids,
-            pos_by_dst,
-            stage1_inverse,
-            pending,
-        }
+        replies
     }
 
     /// Phase 3 of the pipelined lookup: receive the embedding reply and
     /// scatter rows back to occurrence order (`num_ids × dim`).
     pub fn complete_reply(&mut self, comm: &mut CommHandle, reply: PendingReply) -> Vec<f32> {
-        let world = comm.world;
-        let dim = self.dim;
-        let pool = self.pool.clone();
-        let PendingReply {
-            num_ids,
-            pos_by_dst,
-            stage1_inverse,
-            pending,
-        } = reply;
+        let PendingReply { layout, pending } = reply;
         let returned: Vec<Vec<f32>> = comm
             .complete_all_to_all(pending)
             .into_iter()
             .map(Message::into_floats)
             .collect();
+        self.scatter_reply(&layout, &returned)
+    }
 
-        // ---- scatter back to occurrence order ------------------------
-        let mut out = vec![0.0f32; num_ids * dim];
-        for dst in 0..world {
-            let rows = &returned[dst];
+    /// Scatter received reply rows back to occurrence order
+    /// (`num_ids × dim`), expanding through the stage-1 inverse where
+    /// the requester deduped.
+    fn scatter_reply(&self, layout: &ReplyLayout, returned: &[Vec<f32>]) -> Vec<f32> {
+        let dim = self.dim;
+        let pool = self.pool.clone();
+        let mut out = vec![0.0f32; layout.num_ids * dim];
+        for (dst, rows) in returned.iter().enumerate() {
             // Expand through the stage-1 inverse if we deduped.
-            let expanded: Vec<f32> = match &stage1_inverse[dst] {
+            let expanded: Vec<f32> = match &layout.stage1_inverse[dst] {
                 Some(inv) => {
                     let mut e = vec![0.0f32; inv.len() * dim];
                     gather_rows_par(rows, dim, inv, &mut e, pool.as_deref());
@@ -336,7 +388,7 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 }
                 None => rows.clone(),
             };
-            for (j, &pos) in pos_by_dst[dst].iter().enumerate() {
+            for (j, &pos) in layout.pos_by_dst[dst].iter().enumerate() {
                 out[pos as usize * dim..(pos as usize + 1) * dim]
                     .copy_from_slice(&expanded[j * dim..(j + 1) * dim]);
             }
@@ -372,8 +424,35 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         ids: &[GlobalId],
         grads: &[f32],
     ) -> PendingBackward {
+        let (ids_by_dst, grad_by_dst) = self.prepare_backward(comm.world, ids, grads);
+
+        // Two posted all-to-alls: ids then gradients (same wire pattern
+        // as forward, reversed direction for the payload), on dedicated
+        // lanes so they can stay in flight across rounds.
+        let ids_pending = comm.post_all_to_all_on(
+            LANE_GRAD_IDS,
+            ids_by_dst.into_iter().map(Message::Ids).collect(),
+        );
+        let grads_pending = comm.post_all_to_all_on(
+            LANE_GRAD,
+            grad_by_dst.into_iter().map(Message::Floats).collect(),
+        );
+        PendingBackward {
+            ids_pending,
+            grads_pending,
+        }
+    }
+
+    /// Partition occurrence-order gradients by owner and aggregate
+    /// duplicates per destination; returns `(ids_by_dst, grad_by_dst)`
+    /// ready for the wire. Pure bookkeeping — no communication.
+    fn prepare_backward(
+        &mut self,
+        world: usize,
+        ids: &[GlobalId],
+        grads: &[f32],
+    ) -> (Vec<Vec<GlobalId>>, Vec<Vec<f32>>) {
         assert_eq!(grads.len(), ids.len() * self.dim);
-        let world = comm.world;
         let dim = self.dim;
         let pool = self.pool.clone();
 
@@ -406,22 +485,7 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 }
             }
         }
-
-        // Two posted all-to-alls: ids then gradients (same wire pattern
-        // as forward, reversed direction for the payload), on dedicated
-        // lanes so they can stay in flight across rounds.
-        let ids_pending = comm.post_all_to_all_on(
-            LANE_GRAD_IDS,
-            ids_by_dst.into_iter().map(Message::Ids).collect(),
-        );
-        let grads_pending = comm.post_all_to_all_on(
-            LANE_GRAD,
-            grad_by_dst.into_iter().map(Message::Floats).collect(),
-        );
-        PendingBackward {
-            ids_pending,
-            grads_pending,
-        }
+        (ids_by_dst, grad_by_dst)
     }
 
     /// Phase 2 of the distributed backward: receive the exchanged
@@ -435,8 +499,6 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         comm: &mut CommHandle,
         pending: PendingBackward,
     ) -> (Vec<GlobalId>, Vec<f32>) {
-        let dim = self.dim;
-        let pool = self.pool.clone();
         let PendingBackward {
             ids_pending,
             grads_pending,
@@ -451,7 +513,20 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             .into_iter()
             .map(Message::into_floats)
             .collect();
+        self.aggregate_backward(recv_ids, recv_grads)
+    }
 
+    /// Aggregate exchanged gradients across sources (always —
+    /// correctness requires the owner to apply each id's total gradient
+    /// once). The per-source flatten order is fixed, so every schedule
+    /// that delivers the same per-source lists gets bit-identical sums.
+    fn aggregate_backward(
+        &mut self,
+        recv_ids: Vec<Vec<GlobalId>>,
+        recv_grads: Vec<Vec<f32>>,
+    ) -> (Vec<GlobalId>, Vec<f32>) {
+        let dim = self.dim;
+        let pool = self.pool.clone();
         let flat_ids: Vec<GlobalId> = recv_ids.iter().flatten().copied().collect();
         let flat_grads: Vec<f32> = recv_grads.into_iter().flatten().collect();
         let d = Dedup::of_auto(&flat_ids, pool.as_deref());
@@ -474,10 +549,352 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
     }
 }
 
+/// In-flight state of a multi-group posted lookup (forward ID lane).
+#[must_use = "a posted lookup must be completed or peers deadlock"]
+pub struct MultiLookup(MultiLookupInner);
+
+enum MultiLookupInner {
+    PerGroup(Vec<PendingLookup>),
+    Packed {
+        layouts: Vec<LookupLayout>,
+        pending: PendingAllToAll,
+    },
+}
+
+/// In-flight state of a multi-group served lookup (embedding reply lane).
+#[must_use = "a served lookup must be completed or peers deadlock"]
+pub struct MultiReply(MultiReplyInner);
+
+enum MultiReplyInner {
+    PerGroup(Vec<PendingReply>),
+    Packed {
+        layouts: Vec<ReplyLayout>,
+        pending: PendingAllToAll,
+    },
+}
+
+/// In-flight state of a multi-group posted backward (gradient lanes).
+#[must_use = "a posted backward must be completed or peers deadlock"]
+pub struct MultiBackward(MultiBackwardInner);
+
+enum MultiBackwardInner {
+    PerGroup(Vec<PendingBackward>),
+    Packed {
+        ids_pending: PendingAllToAll,
+        grads_pending: PendingAllToAll,
+    },
+}
+
+/// Multiplexed multi-group exchange: packs every merge group's payload
+/// into ONE message per comm lane instead of running one all-to-all per
+/// group, cutting the per-exchange message count (and thus per-message
+/// latency cost) from O(groups) to O(1).
+///
+/// Packed wire format (`groups > 1` with multiplexing on): each ID-lane
+/// chunk carries `groups` u64 section-length headers followed by the
+/// concatenated per-group id sections. Float lanes carry bare
+/// concatenated sections — the receiver derives section lengths from
+/// layout it already holds (its own stage-1 unique counts for replies;
+/// the parsed ID headers for gradients), so replies and gradients pay
+/// zero framing overhead. With one group — or with multiplexing
+/// disabled — every call delegates to the historical per-group methods,
+/// so the wire bytes are byte-identical to the unmultiplexed path (the
+/// single-group compatibility guarantee).
+///
+/// The numerical results are bit-identical in both modes: packing only
+/// reorders which wire message carries a section, never the per-source
+/// section contents or the order they are folded in.
+pub struct GroupExchange {
+    mux: bool,
+    /// Cumulative packing-header bytes per lane, counted with the same
+    /// convention as [`crate::collective::comm::CommStats`] (remote
+    /// chunks only). Subtract from `CommStats::lane_bytes` deltas to
+    /// recover pure payload bytes — the trainer's wire-conservation
+    /// accounting.
+    pub header_bytes: [u64; LANES],
+}
+
+impl GroupExchange {
+    pub fn new(mux: bool) -> Self {
+        GroupExchange {
+            mux,
+            header_bytes: [0; LANES],
+        }
+    }
+
+    /// Whether exchanges over `groups` merge groups take the packed path.
+    pub fn packed(&self, groups: usize) -> bool {
+        self.mux && groups > 1
+    }
+
+    /// Post every group's ID all-to-all — one packed message per lane in
+    /// multiplexed mode, one exchange per group otherwise.
+    ///
+    /// Collective: all ranks must post and complete in the same order.
+    pub fn post_ids<S: EmbeddingStore>(
+        &mut self,
+        comm: &mut CommHandle,
+        sharded: &mut [ShardedEmbedding<S>],
+        ids_per_group: &[&[GlobalId]],
+    ) -> MultiLookup {
+        assert_eq!(ids_per_group.len(), sharded.len());
+        let world = comm.world;
+        if !self.packed(sharded.len()) {
+            return MultiLookup(MultiLookupInner::PerGroup(
+                sharded
+                    .iter_mut()
+                    .zip(ids_per_group)
+                    .map(|(se, ids)| se.post_ids(comm, ids))
+                    .collect(),
+            ));
+        }
+        let groups = sharded.len();
+        let prepared: Vec<(Vec<Vec<GlobalId>>, LookupLayout)> = sharded
+            .iter_mut()
+            .zip(ids_per_group)
+            .map(|(se, ids)| se.prepare_lookup(world, ids))
+            .collect();
+        let mut chunks: Vec<Message> = Vec::with_capacity(world);
+        for dst in 0..world {
+            let sections: usize = prepared.iter().map(|(s, _)| s[dst].len()).sum();
+            let mut packed: Vec<u64> = Vec::with_capacity(groups + sections);
+            for (send_ids, _) in &prepared {
+                packed.push(send_ids[dst].len() as u64);
+            }
+            for (send_ids, _) in &prepared {
+                packed.extend_from_slice(&send_ids[dst]);
+            }
+            if dst != comm.rank {
+                self.header_bytes[LANE_IDS] += groups as u64 * 8;
+            }
+            chunks.push(Message::Ids(packed));
+        }
+        let pending = comm.post_all_to_all_on(LANE_IDS, chunks);
+        let layouts = prepared.into_iter().map(|(_, l)| l).collect();
+        MultiLookup(MultiLookupInner::Packed { layouts, pending })
+    }
+
+    /// Serve every group's received requests and post the (packed)
+    /// embedding reply.
+    pub fn serve_reply<S: EmbeddingStore>(
+        &mut self,
+        comm: &mut CommHandle,
+        sharded: &mut [ShardedEmbedding<S>],
+        lookup: MultiLookup,
+        train: bool,
+    ) -> MultiReply {
+        let world = comm.world;
+        match lookup.0 {
+            MultiLookupInner::PerGroup(pendings) => MultiReply(MultiReplyInner::PerGroup(
+                sharded
+                    .iter_mut()
+                    .zip(pendings)
+                    .map(|(se, p)| se.serve_reply(comm, p, train))
+                    .collect(),
+            )),
+            MultiLookupInner::Packed {
+                mut layouts,
+                pending,
+            } => {
+                let groups = sharded.len();
+                assert_eq!(layouts.len(), groups);
+                for (se, layout) in sharded.iter_mut().zip(&mut layouts) {
+                    se.last_id_bytes = std::mem::take(&mut layout.id_bytes);
+                }
+                // Unpack: `groups` section-length headers, then sections.
+                let mut requested: Vec<Vec<Vec<GlobalId>>> =
+                    (0..groups).map(|_| Vec::with_capacity(world)).collect();
+                for msg in comm.complete_all_to_all(pending) {
+                    let packed = msg.into_ids();
+                    let mut off = groups;
+                    for (g, req) in requested.iter_mut().enumerate() {
+                        let len = packed[g] as usize;
+                        req.push(packed[off..off + len].to_vec());
+                        off += len;
+                    }
+                    debug_assert_eq!(off, packed.len());
+                }
+                // Serve every group, then concatenate the replies per
+                // destination — no headers: the requester splits by its
+                // own stage-1 unique counts.
+                let replies: Vec<Vec<Vec<f32>>> = sharded
+                    .iter_mut()
+                    .zip(&layouts)
+                    .zip(requested)
+                    .map(|((se, layout), req)| {
+                        se.serve_requested(world, req, &layout.sent_lens, &layout.raw_lens, train)
+                    })
+                    .collect();
+                let mut chunks: Vec<Message> = Vec::with_capacity(world);
+                for dst in 0..world {
+                    let total: usize = replies.iter().map(|r| r[dst].len()).sum();
+                    let mut packed = Vec::with_capacity(total);
+                    for r in &replies {
+                        packed.extend_from_slice(&r[dst]);
+                    }
+                    chunks.push(Message::Floats(packed));
+                }
+                let pending = comm.post_all_to_all_on(LANE_EMB, chunks);
+                let layouts = layouts.into_iter().map(LookupLayout::into_reply).collect();
+                MultiReply(MultiReplyInner::Packed { layouts, pending })
+            }
+        }
+    }
+
+    /// Complete every group's embedding reply; returns occurrence-order
+    /// rows per group.
+    pub fn complete_reply<S: EmbeddingStore>(
+        &mut self,
+        comm: &mut CommHandle,
+        sharded: &mut [ShardedEmbedding<S>],
+        reply: MultiReply,
+    ) -> Vec<Vec<f32>> {
+        match reply.0 {
+            MultiReplyInner::PerGroup(pendings) => sharded
+                .iter_mut()
+                .zip(pendings)
+                .map(|(se, p)| se.complete_reply(comm, p))
+                .collect(),
+            MultiReplyInner::Packed { layouts, pending } => {
+                let groups = sharded.len();
+                let mut returned: Vec<Vec<Vec<f32>>> = (0..groups).map(|_| Vec::new()).collect();
+                for (src, msg) in comm.complete_all_to_all(pending).into_iter().enumerate() {
+                    let packed = msg.into_floats();
+                    let mut off = 0usize;
+                    for (g, ret) in returned.iter_mut().enumerate() {
+                        let len = layouts[g].sent_lens[src] * sharded[g].dim;
+                        ret.push(packed[off..off + len].to_vec());
+                        off += len;
+                    }
+                    debug_assert_eq!(off, packed.len());
+                }
+                sharded
+                    .iter_mut()
+                    .zip(&layouts)
+                    .zip(returned)
+                    .map(|((se, layout), rows)| se.scatter_reply(layout, &rows))
+                    .collect()
+            }
+        }
+    }
+
+    /// Post every group's backward gradient exchange — packed ID and
+    /// gradient lanes in multiplexed mode.
+    ///
+    /// Collective: all ranks must post and complete in the same order.
+    pub fn post_backward<S: EmbeddingStore>(
+        &mut self,
+        comm: &mut CommHandle,
+        sharded: &mut [ShardedEmbedding<S>],
+        ids_per_group: &[&[GlobalId]],
+        grads_per_group: &[&[f32]],
+    ) -> MultiBackward {
+        assert_eq!(ids_per_group.len(), sharded.len());
+        assert_eq!(grads_per_group.len(), sharded.len());
+        let world = comm.world;
+        if !self.packed(sharded.len()) {
+            return MultiBackward(MultiBackwardInner::PerGroup(
+                sharded
+                    .iter_mut()
+                    .zip(ids_per_group.iter().zip(grads_per_group))
+                    .map(|(se, (ids, grads))| se.post_backward(comm, ids, grads))
+                    .collect(),
+            ));
+        }
+        let groups = sharded.len();
+        let parts: Vec<(Vec<Vec<GlobalId>>, Vec<Vec<f32>>)> = sharded
+            .iter_mut()
+            .zip(ids_per_group.iter().zip(grads_per_group))
+            .map(|(se, (ids, grads))| se.prepare_backward(world, ids, grads))
+            .collect();
+        let mut id_chunks: Vec<Message> = Vec::with_capacity(world);
+        let mut grad_chunks: Vec<Message> = Vec::with_capacity(world);
+        for dst in 0..world {
+            let sections: usize = parts.iter().map(|(i, _)| i[dst].len()).sum();
+            let mut packed_ids: Vec<u64> = Vec::with_capacity(groups + sections);
+            for (ids_by_dst, _) in &parts {
+                packed_ids.push(ids_by_dst[dst].len() as u64);
+            }
+            for (ids_by_dst, _) in &parts {
+                packed_ids.extend_from_slice(&ids_by_dst[dst]);
+            }
+            let floats: usize = parts.iter().map(|(_, g)| g[dst].len()).sum();
+            let mut packed_grads: Vec<f32> = Vec::with_capacity(floats);
+            for (_, grad_by_dst) in &parts {
+                packed_grads.extend_from_slice(&grad_by_dst[dst]);
+            }
+            if dst != comm.rank {
+                self.header_bytes[LANE_GRAD_IDS] += groups as u64 * 8;
+            }
+            id_chunks.push(Message::Ids(packed_ids));
+            grad_chunks.push(Message::Floats(packed_grads));
+        }
+        let ids_pending = comm.post_all_to_all_on(LANE_GRAD_IDS, id_chunks);
+        let grads_pending = comm.post_all_to_all_on(LANE_GRAD, grad_chunks);
+        MultiBackward(MultiBackwardInner::Packed {
+            ids_pending,
+            grads_pending,
+        })
+    }
+
+    /// Complete every group's backward exchange; returns per-group
+    /// `(ids, grads)` for the local shards.
+    pub fn complete_backward<S: EmbeddingStore>(
+        &mut self,
+        comm: &mut CommHandle,
+        sharded: &mut [ShardedEmbedding<S>],
+        pending: MultiBackward,
+    ) -> Vec<(Vec<GlobalId>, Vec<f32>)> {
+        match pending.0 {
+            MultiBackwardInner::PerGroup(pendings) => sharded
+                .iter_mut()
+                .zip(pendings)
+                .map(|(se, pb)| se.complete_backward(comm, pb))
+                .collect(),
+            MultiBackwardInner::Packed {
+                ids_pending,
+                grads_pending,
+            } => {
+                let groups = sharded.len();
+                let mut recv_ids: Vec<Vec<Vec<GlobalId>>> =
+                    (0..groups).map(|_| Vec::new()).collect();
+                for msg in comm.complete_all_to_all(ids_pending) {
+                    let packed = msg.into_ids();
+                    let mut off = groups;
+                    for (g, recv) in recv_ids.iter_mut().enumerate() {
+                        let len = packed[g] as usize;
+                        recv.push(packed[off..off + len].to_vec());
+                        off += len;
+                    }
+                    debug_assert_eq!(off, packed.len());
+                }
+                let mut recv_grads: Vec<Vec<Vec<f32>>> =
+                    (0..groups).map(|_| Vec::new()).collect();
+                for (src, msg) in comm.complete_all_to_all(grads_pending).into_iter().enumerate()
+                {
+                    let packed = msg.into_floats();
+                    let mut off = 0usize;
+                    for (g, recv) in recv_grads.iter_mut().enumerate() {
+                        let len = recv_ids[g][src].len() * sharded[g].dim;
+                        recv.push(packed[off..off + len].to_vec());
+                        off += len;
+                    }
+                    debug_assert_eq!(off, packed.len());
+                }
+                sharded
+                    .iter_mut()
+                    .zip(recv_ids.into_iter().zip(recv_grads))
+                    .map(|(se, (ids, grads))| se.aggregate_backward(ids, grads))
+                    .collect()
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collective::comm::CommGroup;
+    use crate::collective::comm::{CommGroup, CommStats};
     use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
     use std::sync::Arc;
     use std::thread;
@@ -807,6 +1224,158 @@ mod tests {
         for &c in &counts {
             let dev = (c as f64 - 10_000.0).abs() / 10_000.0;
             assert!(dev < 0.05, "shard imbalance {c}");
+        }
+    }
+
+    /// Dim-parametric unsharded reference row.
+    fn expected_row_dim(dim: usize, id: GlobalId) -> Vec<f32> {
+        let mut t = DynamicEmbeddingTable::new(
+            DynamicTableConfig::new(dim).with_capacity(256).with_seed(7),
+        );
+        let mut out = vec![0.0; dim];
+        t.lookup_or_insert(id, &mut out);
+        out
+    }
+
+    /// Canonical backward result at an arbitrary dim (id-sorted rows).
+    fn sorted_pairs_dim(dim: usize, lids: &[u64], lgrads: &[f32]) -> Vec<(u64, Vec<f32>)> {
+        let mut pairs: Vec<(u64, Vec<f32>)> = lids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, lgrads[i * dim..(i + 1) * dim].to_vec()))
+            .collect();
+        pairs.sort_by_key(|p| p.0);
+        pairs
+    }
+
+    /// Per-rank output of a three-round two-group schedule: rows per
+    /// round per group, sorted backward pairs per round per group, comm
+    /// stats, exchange header bytes, per-group volume.
+    type GroupRun = (
+        Vec<Vec<Vec<f32>>>,
+        Vec<Vec<Vec<(u64, Vec<f32>)>>>,
+        CommStats,
+        [u64; LANES],
+        Vec<DedupVolume>,
+    );
+
+    /// Three forward+backward rounds over two merge groups (dims 4 and
+    /// 8) through [`GroupExchange`], multiplexed or per-group.
+    fn run_group_exchange(mux: bool) -> Vec<GroupRun> {
+        let world = 4;
+        let handles = CommGroup::new(world);
+        let mut joins = Vec::new();
+        for (rank, mut comm) in handles.into_iter().enumerate() {
+            joins.push(thread::spawn(move || {
+                let dims = [4usize, 8];
+                let mut groups: Vec<ShardedEmbedding<DynamicEmbeddingTable>> = dims
+                    .iter()
+                    .map(|&d| {
+                        ShardedEmbedding::new(
+                            DynamicEmbeddingTable::new(
+                                DynamicTableConfig::new(d).with_capacity(256).with_seed(7),
+                            ),
+                            DedupStrategy::TwoStage,
+                        )
+                    })
+                    .collect();
+                let mut ex = GroupExchange::new(mux);
+                let mut rows_all = Vec::new();
+                let mut grads_all = Vec::new();
+                for round in 0..3u64 {
+                    let ids0: Vec<u64> = vec![1 + round, 2, 3, 40 + rank as u64, 2];
+                    let ids1: Vec<u64> = vec![7, 7, 9 + round, 100 + rank as u64];
+                    let lookup = ex.post_ids(&mut comm, &mut groups, &[&ids0, &ids1]);
+                    let reply = ex.serve_reply(&mut comm, &mut groups, lookup, true);
+                    let rows = ex.complete_reply(&mut comm, &mut groups, reply);
+                    for (g, ids) in [&ids0, &ids1].into_iter().enumerate() {
+                        for (i, &id) in ids.iter().enumerate() {
+                            assert_eq!(
+                                &rows[g][i * dims[g]..(i + 1) * dims[g]],
+                                expected_row_dim(dims[g], id).as_slice(),
+                                "mux {mux} group {g} id {id}"
+                            );
+                        }
+                    }
+                    let g0 = vec![0.25f32; ids0.len() * dims[0]];
+                    let g1 = vec![0.5f32; ids1.len() * dims[1]];
+                    let pb =
+                        ex.post_backward(&mut comm, &mut groups, &[&ids0, &ids1], &[&g0, &g1]);
+                    let bwd = ex.complete_backward(&mut comm, &mut groups, pb);
+                    rows_all.push(rows);
+                    grads_all.push(
+                        bwd.iter()
+                            .enumerate()
+                            .map(|(g, (lids, lgrads))| sorted_pairs_dim(dims[g], lids, lgrads))
+                            .collect::<Vec<_>>(),
+                    );
+                }
+                let volumes = groups.iter().map(|g| g.volume).collect::<Vec<_>>();
+                (rows_all, grads_all, comm.stats, ex.header_bytes, volumes)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn multiplexed_exchange_bit_identical_to_per_group() {
+        let per_group = run_group_exchange(false);
+        let muxed = run_group_exchange(true);
+        for (rank, (p, m)) in per_group.iter().zip(&muxed).enumerate() {
+            assert_eq!(p.0, m.0, "rank {rank}: forward rows diverged");
+            assert_eq!(p.1, m.1, "rank {rank}: backward gradients diverged");
+            assert_eq!(p.4, m.4, "rank {rank}: volume accounting diverged");
+            // Payload conservation: per-lane wire bytes minus the packing
+            // headers must equal the unmultiplexed bytes exactly.
+            for lane in [LANE_IDS, LANE_EMB, LANE_GRAD_IDS, LANE_GRAD] {
+                assert_eq!(
+                    m.2.lane_bytes[lane] - m.3[lane],
+                    p.2.lane_bytes[lane] - p.3[lane],
+                    "rank {rank}: lane {lane} payload bytes not conserved"
+                );
+            }
+            // The point of multiplexing: per round, 4 messages instead of
+            // 2 groups × 4 lanes = 8.
+            assert_eq!(p.2.all_to_all_ops, 3 * 2 * 4);
+            assert_eq!(m.2.all_to_all_ops, 3 * 4);
+            // Headers: `groups` u64 section-length words per remote chunk
+            // on each ID lane, per round; float lanes are frameless.
+            assert_eq!(m.3[LANE_IDS], 3 * 3 * 2 * 8);
+            assert_eq!(m.3[LANE_GRAD_IDS], 3 * 3 * 2 * 8);
+            assert_eq!(m.3[LANE_EMB], 0);
+            assert_eq!(m.3[LANE_GRAD], 0);
+            assert_eq!(p.3, [0u64; LANES], "per-group mode never adds headers");
+        }
+    }
+
+    #[test]
+    fn single_group_multiplexed_wire_identical() {
+        // One merge group: GroupExchange (mux on) must degenerate to the
+        // historical wire format — same op count, same per-lane bytes,
+        // zero headers — and produce the same rows.
+        let run = |via_exchange: bool| {
+            run_sharded(2, DedupStrategy::TwoStage, move |rank, se, comm| {
+                let ids: Vec<u64> = vec![1, 2, 3, 1, 50 + rank as u64];
+                let rows = if via_exchange {
+                    let mut ex = GroupExchange::new(true);
+                    let groups = std::slice::from_mut(se);
+                    let lookup = ex.post_ids(comm, groups, &[&ids]);
+                    let reply = ex.serve_reply(comm, groups, lookup, true);
+                    let mut rows = ex.complete_reply(comm, groups, reply);
+                    assert_eq!(ex.header_bytes, [0u64; LANES]);
+                    rows.pop().unwrap()
+                } else {
+                    se.lookup(comm, &ids, true)
+                };
+                (rows, comm.stats)
+            })
+        };
+        let direct = run(false);
+        let muxed = run(true);
+        for ((r_d, s_d), (r_m, s_m)) in direct.iter().zip(&muxed) {
+            assert_eq!(r_d, r_m, "rows must match the direct path");
+            assert_eq!(s_d.lane_bytes, s_m.lane_bytes, "wire bytes must be identical");
+            assert_eq!(s_d.all_to_all_ops, s_m.all_to_all_ops);
         }
     }
 }

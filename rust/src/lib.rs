@@ -24,9 +24,18 @@
 //!   (micro-batch *k+1*'s ID all-to-all and *k*'s embedding reply in
 //!   flight together, *k*'s gradient push completed behind *k+1*'s
 //!   forward), `TrainerOptions::cross_step` extends the double buffer
-//!   across step boundaries (step *s+1*'s first ID exchange posts
-//!   before step *s*'s dense all-reduce + optimizer apply, with the
-//!   hidden time reported on the `sim_hidden_boundary_s` lane), and
+//!   across step boundaries in **both directions** (step *s+1*'s first
+//!   ID exchange posts before step *s*'s dense all-reduce + optimizer
+//!   apply, and step *s*'s last gradient push stays in flight across
+//!   the same window, with the hidden time reported on the
+//!   `sim_hidden_boundary_s` / `sim_hidden_boundary_grad_s` lanes),
+//!   `TrainerOptions::multiplex_exchange` packs every merge group's
+//!   exchange into one message per comm lane
+//!   ([`embedding::sharded::GroupExchange`], `--no-multiplex` to
+//!   ablate; per-lane payload bytes are metered in `StepRecord` and
+//!   asserted conserved against the per-group schedule),
+//!   `TrainerOptions::table_merging` (`--no-merging`) ablates §4.2
+//!   fusion to one exchange per logical table, and
 //!   `TrainerOptions::threads` sizes the **one process-global**
 //!   [`util::pool::WorkerPool`] shared by every worker — each worker
 //!   chunks on a deterministic fair-share view
@@ -65,12 +74,18 @@
 //!   group and stay byte-identical to the historical single-table
 //!   path (the single-group compatibility guarantee).
 //! - [`embedding::dedup`] — two-stage dedup with a size-switched
-//!   hash/sort kernel ([`embedding::dedup::DedupKernel`]) and
-//!   pool-parallel sort, gather and scatter kernels. The kernel
-//!   switch points are runtime-tunable ([`util::tuning`]):
+//!   hash/sort kernel ([`embedding::dedup::DedupKernel`]),
+//!   pool-parallel sort, gather and scatter kernels, and cache-blocked
+//!   inner loops (`gather_rows` / `scatter_accumulate` /
+//!   [`optim::adam::SparseAdam`] process rows in fixed-width blocks
+//!   with fixed-dim fast paths — bit-identical to the scalar loops by
+//!   construction, property-tested in `tests/simd_kernels.rs`). The
+//!   kernel switch points are runtime-tunable ([`util::tuning`]):
 //!   `MTGR_DEDUP_SORT_THRESHOLD` / `MTGR_PAR_ROWS_THRESHOLD` /
-//!   `MTGR_PAR_FETCH_THRESHOLD`, calibrated per machine by
-//!   `bench_parallel_lookup --calibrate`.
+//!   `MTGR_PAR_FETCH_THRESHOLD` / `MTGR_PAR_DENSE_THRESHOLD`, with the
+//!   calibrated defaults baked in [`util::tuning::calibrated`] and
+//!   re-measured per machine by `bench_parallel_lookup --calibrate`
+//!   (which writes `calibration.json`).
 //! - [`online`] — the online-learning subsystem (`--mode online`): an
 //!   endless day-advancing stream ([`online::stream`]), count-min
 //!   feature admission with a deterministic seeded lottery

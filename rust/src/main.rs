@@ -4,7 +4,8 @@
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
 //!                 [--cross-step on|off] [--threads N] [--lr 0.001]
-//!                 [--schema meituan|meituan-mixed]
+//!                 [--schema meituan|meituan-mixed] [--no-merging]
+//!                 [--no-multiplex]
 //! mtgrboost train --mode online --sync-interval 50 [--intervals N]
 //!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
 //!                 [--sync-dir DIR] [--day-every N] ...
@@ -40,11 +41,16 @@
 //! heterogeneous-dim feature schema (8D context features, model-dim
 //! token features, an exposure-item `shared_table` alias): automatic
 //! table merging folds it into one physical table per dim group and the
-//! whole distributed path runs per group. Unknown preset names and
-//! contradictory combos (`--no-merging` under `train` — the trainer has
-//! no unmerged path, the ablation lives in `sim`; `--schema` under
-//! `sim`) are rejected up front; online knobs apply uniformly to every
-//! group.
+//! whole distributed path runs per group. `--no-merging` runs the
+//! unmerged ablation in the real trainer — one physical table and one
+//! exchange per logical table — so the fusion win of §4.2 is measured
+//! in wall-clock seconds, not just sim op counts. `--no-multiplex`
+//! posts one exchange per merge group instead of packing every group
+//! into one message per comm lane (the multiplexed default; payload
+//! bytes are identical either way, only message counts and header
+//! bytes differ). Unknown preset names
+//! and contradictory combos (`--schema` under `sim`) are rejected up
+//! front; online knobs apply uniformly to every group.
 
 use anyhow::{bail, Context, Result};
 
@@ -78,27 +84,15 @@ fn parse_dedup(s: &str) -> Result<DedupStrategy> {
     })
 }
 
-/// Parse + validate `--schema`, rejecting unknown presets and
-/// combinations the trainer cannot honor (mirrors the `--mode`
-/// validation style: fail at the flag layer with flag-named errors;
-/// `TrainerOptions::validate` re-checks the preset name).
+/// Parse + validate `--schema`, rejecting unknown presets (mirrors the
+/// `--mode` validation style: fail at the flag layer with flag-named
+/// errors; `TrainerOptions::validate` re-checks the preset name).
 fn parse_schema(args: &Args) -> Result<String> {
     let name = args.get_or("schema", "meituan");
     if !Schema::is_preset(&name) {
         bail!(
             "unknown --schema `{name}` (expected one of {:?})",
             Schema::preset_names()
-        );
-    }
-    // The real trainer has no unmerged path — it always builds one
-    // physical table per dim group — so accepting the flag would
-    // silently report fused lookup-op counts as if the ablation ran.
-    // The unmerged ablation lives in `sim` (`--no-merging` there).
-    if args.has_flag("no-merging") {
-        bail!(
-            "--no-merging applies to `sim` only: the trainer always runs \
-             the merged path (one physical table per dim group); its \
-             fused-vs-unmerged op counts are reported either way"
         );
     }
     Ok(name)
@@ -172,7 +166,13 @@ fn parse_online_mode(args: &Args) -> Result<Option<OnlineOptions>> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["no-balancing", "no-merging", "verbose", "fixed"]);
+    let args = Args::from_env(&[
+        "no-balancing",
+        "no-merging",
+        "no-multiplex",
+        "verbose",
+        "fixed",
+    ]);
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("sim") => cmd_sim(&args),
@@ -224,6 +224,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     // multi-group table-merging path). Online knobs apply uniformly to
     // every group.
     opts.schema = parse_schema(args)?;
+    // Unmerged ablation: one physical table + one exchange per logical
+    // table instead of one per dim group, so the §4.2 fusion win shows
+    // up as measured wall-clock, not just op counts.
+    opts.table_merging = !args.has_flag("no-merging");
+    // Exchange multiplexing ablation: post one exchange per merge
+    // group instead of one packed message per comm lane. Payload bytes
+    // and numerics are bit-identical either way.
+    opts.multiplex_exchange = !args.has_flag("no-multiplex");
     opts.online = parse_online_mode(args)?;
     let default_warmup = match &opts.online {
         Some(o) => o.sync_interval,
@@ -249,8 +257,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.mean_hidden_grad_s() * 1e3,
     );
     println!(
-        "hidden boundary      : {:.3} ms per step (cross-step)",
+        "hidden boundary      : {:.3} id / {:.3} grad ms per step (cross-step)",
         report.mean_hidden_boundary_s() * 1e3,
+        report.mean_hidden_boundary_grad_s() * 1e3,
     );
     println!(
         "prefetch occupancy   : {:.2} of depth {}",
@@ -583,20 +592,28 @@ mod tests {
     }
 
     #[test]
-    fn train_rejects_no_merging() {
-        // The trainer has no unmerged path (one physical table per dim
-        // group always); a silently ignored flag would make the fused
-        // op counts in the report look like a measured ablation.
+    fn train_accepts_no_merging() {
+        // The trainer now has a real unmerged path (one physical table
+        // per logical table), so `--no-merging` parses with any schema
+        // and simply disables grouping in TrainerOptions.
         for argv in [
             &["train", "--schema", "meituan-mixed", "--no-merging"][..],
             &["train", "--no-merging"][..],
         ] {
             let a = Args::parse(argv.iter().map(|s| s.to_string()), &["no-merging"]);
-            let err = parse_schema(&a).unwrap_err().to_string();
-            assert!(err.contains("--no-merging"), "{err}");
-            assert!(err.contains("sim"), "points at the sim ablation: {err}");
+            assert!(parse_schema(&a).is_ok());
+            assert!(a.has_flag("no-merging"));
         }
-        // Without the flag both schemas parse.
+        // The multiplexing ablation parses alongside either plan.
+        let a = Args::parse(
+            ["train", "--schema", "meituan-mixed", "--no-multiplex"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["no-multiplex"],
+        );
+        assert!(parse_schema(&a).is_ok());
+        assert!(a.has_flag("no-multiplex"));
+        // Without the flag both schemas still parse.
         let a = args_of(&["train", "--schema", "meituan-mixed"]);
         assert!(parse_schema(&a).is_ok());
     }

@@ -9,7 +9,7 @@ use crate::util::tuning::TunableThreshold;
 /// chunks the element loop across the pool (below it, fork/join
 /// overhead dominates). The live value is [`PAR_DENSE`]
 /// (env `MTGR_PAR_DENSE_THRESHOLD`).
-pub const PAR_DENSE_THRESHOLD: usize = 4096;
+pub const PAR_DENSE_THRESHOLD: usize = crate::util::tuning::calibrated::PAR_DENSE;
 
 /// Runtime knob for the serial→parallel dense-Adam switch.
 pub static PAR_DENSE: TunableThreshold =
@@ -33,6 +33,106 @@ impl Default for AdamParams {
             eps: 1e-8,
         }
     }
+}
+
+/// Width of the straight-line inner blocks the Adam kernels unroll to
+/// (matches [`crate::embedding::dedup::SIMD_BLOCK`]). Blocking only
+/// regroups independent per-element updates, so every blocked path is
+/// bit-identical to the scalar loop.
+pub const ADAM_BLOCK: usize = 8;
+
+/// Per-call Adam coefficients with the bias corrections baked in
+/// (`bcX = 1 − βX^t`; sparse rows carry per-row `t`, dense uses the
+/// global step count).
+#[derive(Clone, Copy)]
+struct AdamCoeffs {
+    scale: f32,
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+}
+
+/// One Adam element: update the first/second moments in place and
+/// return the bias-corrected step `lr·m̂ / (√v̂ + ε)`. Callers subtract
+/// it from the parameter (dense) or negate it into a delta (sparse);
+/// IEEE negation is a sign flip, so both forms are bitwise equal to the
+/// historical inline expressions.
+#[inline(always)]
+fn adam_elem(m: &mut f32, v: &mut f32, g_raw: f32, c: AdamCoeffs) -> f32 {
+    let g = g_raw * c.scale;
+    *m = c.b1 * *m + (1.0 - c.b1) * g;
+    *v = c.b2 * *v + (1.0 - c.b2) * g * g;
+    let mhat = *m / c.bc1;
+    let vhat = *v / c.bc2;
+    c.lr * mhat / (vhat.sqrt() + c.eps)
+}
+
+/// `p[j] -= step(g[j])` over one span (same-length slices).
+#[inline(always)]
+fn adam_span_params(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], c: AdamCoeffs) {
+    for (((p, m), v), &g) in p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g) {
+        *p -= adam_elem(m, v, g, c);
+    }
+}
+
+/// `delta[j] = -step(g[j])` over one span (same-length slices).
+#[inline(always)]
+fn adam_span_delta(delta: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], c: AdamCoeffs) {
+    for (((d, m), v), &g) in delta.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g) {
+        *d = -adam_elem(m, v, g, c);
+    }
+}
+
+/// [`adam_span_params`] split into [`ADAM_BLOCK`]-wide exact chunks
+/// (the array conversions pin the block length so the autovectorizer
+/// emits straight vector lanes) plus a scalar tail for odd lengths.
+#[inline]
+fn adam_blocked_params(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], c: AdamCoeffs) {
+    let mut pc = p.chunks_exact_mut(ADAM_BLOCK);
+    let mut mc = m.chunks_exact_mut(ADAM_BLOCK);
+    let mut vc = v.chunks_exact_mut(ADAM_BLOCK);
+    let mut gc = g.chunks_exact(ADAM_BLOCK);
+    for (((pb, mb), vb), gb) in (&mut pc).zip(&mut mc).zip(&mut vc).zip(&mut gc) {
+        let pb: &mut [f32; ADAM_BLOCK] = pb.try_into().unwrap();
+        let mb: &mut [f32; ADAM_BLOCK] = mb.try_into().unwrap();
+        let vb: &mut [f32; ADAM_BLOCK] = vb.try_into().unwrap();
+        let gb: &[f32; ADAM_BLOCK] = gb.try_into().unwrap();
+        adam_span_params(pb, mb, vb, gb, c);
+    }
+    adam_span_params(
+        pc.into_remainder(),
+        mc.into_remainder(),
+        vc.into_remainder(),
+        gc.remainder(),
+        c,
+    );
+}
+
+/// [`adam_span_delta`] with the same blocked structure as
+/// [`adam_blocked_params`].
+#[inline]
+fn adam_blocked_delta(delta: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], c: AdamCoeffs) {
+    let mut dc = delta.chunks_exact_mut(ADAM_BLOCK);
+    let mut mc = m.chunks_exact_mut(ADAM_BLOCK);
+    let mut vc = v.chunks_exact_mut(ADAM_BLOCK);
+    let mut gc = g.chunks_exact(ADAM_BLOCK);
+    for (((db, mb), vb), gb) in (&mut dc).zip(&mut mc).zip(&mut vc).zip(&mut gc) {
+        let db: &mut [f32; ADAM_BLOCK] = db.try_into().unwrap();
+        let mb: &mut [f32; ADAM_BLOCK] = mb.try_into().unwrap();
+        let vb: &mut [f32; ADAM_BLOCK] = vb.try_into().unwrap();
+        let gb: &[f32; ADAM_BLOCK] = gb.try_into().unwrap();
+        adam_span_delta(db, mb, vb, gb, c);
+    }
+    adam_span_delta(
+        dc.into_remainder(),
+        mc.into_remainder(),
+        vc.into_remainder(),
+        gc.remainder(),
+        c,
+    );
 }
 
 /// Adam over the flat dense parameter vector.
@@ -79,19 +179,17 @@ impl DenseAdam {
         self.t += 1;
         let b1 = self.hp.beta1;
         let b2 = self.hp.beta2;
-        let bc1 = 1.0 - b1.powi(self.t as i32);
-        let bc2 = 1.0 - b2.powi(self.t as i32);
-        let lr = self.hp.lr;
-        let eps = self.hp.eps;
+        let c = AdamCoeffs {
+            scale,
+            b1,
+            b2,
+            bc1: 1.0 - b1.powi(self.t as i32),
+            bc2: 1.0 - b2.powi(self.t as i32),
+            lr: self.hp.lr,
+            eps: self.hp.eps,
+        };
         let kernel = |r: std::ops::Range<usize>, p: &mut [f32], m: &mut [f32], v: &mut [f32]| {
-            for (j, i) in r.enumerate() {
-                let g = grads[i] * scale;
-                m[j] = b1 * m[j] + (1.0 - b1) * g;
-                v[j] = b2 * v[j] + (1.0 - b2) * g * g;
-                let mhat = m[j] / bc1;
-                let vhat = v[j] / bc2;
-                p[j] -= lr * mhat / (vhat.sqrt() + eps);
-            }
+            adam_blocked_params(p, m, v, &grads[r], c);
         };
         match pool {
             Some(pl) if pl.threads() > 1 && params.len() >= PAR_DENSE.get() => {
@@ -202,10 +300,7 @@ impl SparseAdam {
     ) {
         assert_eq!(grads.len(), ids.len() * self.dim);
         let d = self.dim;
-        let b1 = self.hp.beta1;
-        let b2 = self.hp.beta2;
-        let lr = self.hp.lr;
-        let eps = self.hp.eps;
+        let hp = self.hp;
         let mut delta = vec![0.0f32; d];
         for (i, &id) in ids.iter().enumerate() {
             let st = self.state.entry(id).or_insert_with(|| RowState {
@@ -214,16 +309,16 @@ impl SparseAdam {
                 t: 0,
             });
             st.t += 1;
-            let bc1 = 1.0 - b1.powi(st.t as i32);
-            let bc2 = 1.0 - b2.powi(st.t as i32);
-            for j in 0..d {
-                let g = grads[i * d + j] * scale;
-                st.m[j] = b1 * st.m[j] + (1.0 - b1) * g;
-                st.v[j] = b2 * st.v[j] + (1.0 - b2) * g * g;
-                let mhat = st.m[j] / bc1;
-                let vhat = st.v[j] / bc2;
-                delta[j] = -lr * mhat / (vhat.sqrt() + eps);
-            }
+            let c = AdamCoeffs {
+                scale,
+                b1: hp.beta1,
+                b2: hp.beta2,
+                bc1: 1.0 - hp.beta1.powi(st.t as i32),
+                bc2: 1.0 - hp.beta2.powi(st.t as i32),
+                lr: hp.lr,
+                eps: hp.eps,
+            };
+            adam_blocked_delta(&mut delta, &mut st.m, &mut st.v, &grads[i * d..(i + 1) * d], c);
             table.apply_delta(id, &delta);
         }
     }
@@ -287,16 +382,22 @@ impl SparseAdam {
                 // scope runs (phase 1 finished, `self` is borrowed).
                 let st = unsafe { &mut *states.0[i] };
                 st.t += 1;
-                let bc1 = 1.0 - hp.beta1.powi(st.t as i32);
-                let bc2 = 1.0 - hp.beta2.powi(st.t as i32);
-                for j in 0..d {
-                    let g = grads[i * d + j] * scale;
-                    st.m[j] = hp.beta1 * st.m[j] + (1.0 - hp.beta1) * g;
-                    st.v[j] = hp.beta2 * st.v[j] + (1.0 - hp.beta2) * g * g;
-                    let mhat = st.m[j] / bc1;
-                    let vhat = st.v[j] / bc2;
-                    delta[j] = -hp.lr * mhat / (vhat.sqrt() + hp.eps);
-                }
+                let c = AdamCoeffs {
+                    scale,
+                    b1: hp.beta1,
+                    b2: hp.beta2,
+                    bc1: 1.0 - hp.beta1.powi(st.t as i32),
+                    bc2: 1.0 - hp.beta2.powi(st.t as i32),
+                    lr: hp.lr,
+                    eps: hp.eps,
+                };
+                adam_blocked_delta(
+                    &mut delta,
+                    &mut st.m,
+                    &mut st.v,
+                    &grads[i * d..(i + 1) * d],
+                    c,
+                );
                 table.apply_delta(ids[i], &delta);
             }
         });

@@ -135,10 +135,13 @@ pub struct SimOptions {
     /// paper's serial-exchange semantics; the overlap ablation
     /// (fig12, `--overlap`) enables it explicitly.
     pub overlap: bool,
-    /// Extend the double buffer across *step boundaries*: step s+1's
-    /// first ID all-to-all posts during step s's dense all-reduce +
-    /// optimizer apply, so the ID lane additionally hides behind the
-    /// boundary window ([`DeviceStep::hidden_boundary_s`]). Only
+    /// Extend the double buffer across *step boundaries*, both ways:
+    /// step s+1's first ID all-to-all posts during step s's dense
+    /// all-reduce + optimizer apply, and step s's last gradient push
+    /// stays in flight across the same window — so the ID lane and the
+    /// gradient lane additionally hide behind the boundary
+    /// ([`DeviceStep::hidden_boundary_s`] and
+    /// [`DeviceStep::hidden_boundary_grad_s`], IDs first). Only
     /// meaningful with `overlap` on; defaults to off like `overlap`.
     pub cross_step: bool,
     /// Merged lookup ops (true) vs one op per logical table (false);
@@ -218,6 +221,10 @@ pub struct DeviceStep {
     /// all-reduce (cross-step pipelining; 0 unless `cross_step` and
     /// `overlap` are both on).
     pub hidden_boundary_s: f64,
+    /// Last-round gradient-push seconds hidden behind the dense
+    /// all-reduce (the cross-step gradient lane; 0 unless `cross_step`
+    /// and `overlap` are both on).
+    pub hidden_boundary_grad_s: f64,
 }
 
 /// One simulated step.
@@ -366,17 +373,21 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
 
             // Cross-step pipelining: the step's *first* micro-round ID
             // exchange was posted during the previous step's dense
-            // all-reduce, so that share of the ID lane hides behind the
-            // boundary window first (it is on the wire before this
-            // step's compute even starts); the later rounds' share
-            // still competes for the compute window. The sim models the
-            // minimum pipelined configuration of R = 2 micro-rounds, so
-            // the boundary share is half the lane.
-            let boundary_hidden = if opts.overlap && opts.cross_step {
-                (id_comm * 0.5).min(allreduce_s)
-            } else {
-                0.0
-            };
+            // all-reduce, and the step's *last* gradient push stays in
+            // flight across its own all-reduce (the cross-step gradient
+            // lane) — both shares hide behind the boundary window, IDs
+            // first (they are on the wire before this step's compute
+            // even starts); the later rounds' shares still compete for
+            // the compute window. The sim models the minimum pipelined
+            // configuration of R = 2 micro-rounds, so each boundary
+            // share is half its lane.
+            let bshares = crate::metrics::overlap_exposure_lanes(
+                allreduce_s,
+                &[id_comm * 0.5, grad_comm * 0.5],
+                opts.overlap && opts.cross_step,
+            );
+            let boundary_hidden = bshares[0].1;
+            let boundary_grad_hidden = bshares[1].1;
 
             let mult = opts.backend.lookup_cost_multiplier(opts.resident_rows);
             // Forward lookups + backward sparse update: the optimizer
@@ -392,7 +403,11 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
             let compute_s = opts.device.compute_time(flops);
             let shares = crate::metrics::overlap_exposure_lanes(
                 compute_s,
-                &[id_comm - boundary_hidden, reply_comm, grad_comm],
+                &[
+                    id_comm - boundary_hidden,
+                    reply_comm,
+                    grad_comm - boundary_grad_hidden,
+                ],
                 opts.overlap,
             );
             let comm_s = shares[0].0 + shares[1].0 + shares[2].0 + op_overhead;
@@ -409,6 +424,7 @@ pub fn simulate(opts: &SimOptions) -> SimResult {
                 hidden_reply_s: shares[1].1,
                 hidden_grad_s: shares[2].1,
                 hidden_boundary_s: boundary_hidden,
+                hidden_boundary_grad_s: boundary_grad_hidden,
             });
         }
         let busy: Vec<f64> = devices
@@ -682,6 +698,12 @@ mod tests {
                 .flat_map(|s| s.devices.iter().map(|d| d.hidden_boundary_s))
                 .sum::<f64>()
         };
+        let boundary_grad = |r: &SimResult| {
+            r.steps
+                .iter()
+                .flat_map(|s| s.devices.iter().map(|d| d.hidden_boundary_grad_s))
+                .sum::<f64>()
+        };
         let exposed = |r: &SimResult| {
             r.steps
                 .iter()
@@ -690,10 +712,26 @@ mod tests {
         };
         assert!(boundary(&r_on) > 0.0, "boundary lane must report hidden time");
         assert_eq!(boundary(&r_off), 0.0, "no boundary hiding without cross-step");
+        assert_eq!(
+            boundary_grad(&r_off),
+            0.0,
+            "no gradient-lane boundary hiding without cross-step"
+        );
         assert!(
             exposed(&r_on) <= exposed(&r_off) + 1e-12,
             "cross-step cannot increase exposed comm"
         );
+        // The boundary window hides the ID lane first; the gradient
+        // lane only gets the remainder, so the two shares together
+        // never exceed the window.
+        for s in &r_on.steps {
+            for d in &s.devices {
+                assert!(
+                    d.hidden_boundary_s + d.hidden_boundary_grad_s <= s.allreduce_s + 1e-12,
+                    "boundary lanes overflow the all-reduce window"
+                );
+            }
+        }
         // Conservation on the ID lane: boundary + compute-hidden +
         // exposed shares never exceed the lane totals, and overlap-off
         // reports zero on every hidden lane.
@@ -702,6 +740,7 @@ mod tests {
         plain.cross_step = true; // ignored without overlap
         let r_plain = simulate(&plain);
         assert_eq!(boundary(&r_plain), 0.0, "cross-step requires overlap");
+        assert_eq!(boundary_grad(&r_plain), 0.0, "cross-step requires overlap");
     }
 
     #[test]

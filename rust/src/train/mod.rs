@@ -31,7 +31,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::balance::{Batch, Batcher, DynamicBatcher, FixedBatcher};
-use crate::collective::comm::{CommGroup, CommHandle};
+use crate::collective::comm::{CommGroup, CommHandle, LANES};
 use crate::collective::netmodel::NetModel;
 use crate::config::{ClusterConfig, ModelConfig, TrainConfig};
 use crate::checkpoint::delta::DeltaMeta;
@@ -40,7 +40,7 @@ use crate::data::schema::Schema;
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::{DynamicTableConfig, TableStats};
 use crate::embedding::merge::MergePlan;
-use crate::embedding::sharded::{PendingBackward, PendingLookup, PendingReply, ShardedEmbedding};
+use crate::embedding::sharded::{GroupExchange, MultiBackward, MultiLookup, ShardedEmbedding};
 use crate::embedding::dedup::DedupVolume;
 use crate::embedding::GlobalId;
 use crate::metrics::{DeviceModel, GaucAccumulator, Throughput};
@@ -68,12 +68,27 @@ pub struct TrainerOptions {
     /// reproduces the strictly sequential baseline; the numerics are
     /// bit-identical either way (ablation axis for Fig. 12).
     pub overlap: bool,
-    /// Extend the double buffer across *step boundaries*: step s+1's
-    /// first ID all-to-all posts before step s's dense all-reduce +
-    /// optimizer apply, so the exchange rides the boundary window
-    /// (`StepRecord::sim_hidden_boundary_s`). Requires `overlap`;
+    /// Extend the double buffer across *step boundaries*, in both
+    /// directions: step s+1's first ID all-to-all posts before step s's
+    /// dense all-reduce + optimizer apply
+    /// (`StepRecord::sim_hidden_boundary_s`), and step s's last gradient
+    /// push stays in flight across the dense all-reduce, completing only
+    /// right before the sparse optimizer needs its sums
+    /// (`StepRecord::sim_hidden_boundary_grad_s`). Requires `overlap`;
     /// numerics are bit-identical on or off (`--cross-step`).
     pub cross_step: bool,
+    /// Pack all merge groups' exchange payloads into ONE message per
+    /// comm lane ([`crate::embedding::sharded::GroupExchange`]) instead
+    /// of one all-to-all per group — per-message latency stops scaling
+    /// with the group count. Single-group schemas keep the historical
+    /// wire format byte for byte either way, and numerics are
+    /// bit-identical on or off (`--no-multiplex` disables).
+    pub multiplex_exchange: bool,
+    /// Fold same-dim logical tables into one physical table per merge
+    /// group (§4.2). `false` (`--no-merging`) keeps one group per
+    /// logical table — the unmerged ablation baseline; global ids are
+    /// identical, so numerics match bitwise.
+    pub table_merging: bool,
     /// Threads in the **process-global** worker pool shared by every
     /// trainer worker (dense forward/backward chunking, dedup, stage-2
     /// serve fan-out over table stripes, row expansion, gradient
@@ -123,6 +138,8 @@ impl TrainerOptions {
             steps,
             overlap: true,
             cross_step: true,
+            multiplex_exchange: true,
+            table_merging: true,
             threads: 1,
             prefetch_depth: 2,
             shard_capacity: 4096,
@@ -180,6 +197,10 @@ pub struct StepRecord {
     /// previous step's dense all-reduce + optimizer apply (cross-step
     /// pipelining; zero unless `overlap` and `cross_step` are on).
     pub sim_hidden_boundary_s: Vec<f64>,
+    /// Simulated per-worker last-round gradient-push seconds hidden
+    /// behind this step's dense all-reduce (the cross-step gradient
+    /// lane; zero unless `overlap` and `cross_step` are on).
+    pub sim_hidden_boundary_grad_s: Vec<f64>,
     /// Simulated synchronous step seconds (max device + dense sync).
     pub sim_step_s: f64,
     /// Simulated delta-sync push seconds (slowest rank's payload on the
@@ -201,6 +222,17 @@ pub struct StepRecord {
     pub online_expired: u64,
     pub online_synced_rows: u64,
     pub online_sync_bytes: u64,
+    /// Per-lane all-to-all payload bytes this step, summed across ranks
+    /// (index = comm lane). Lane 0 also carries collective bookkeeping
+    /// traffic; lanes 1–4 carry exactly the sparse exchanges, with the
+    /// multiplexed packing headers excluded — so they are conserved
+    /// between the multiplexed and per-group paths. Attribution follows
+    /// the posting schedule (a cross-step post counts in the step that
+    /// posted it).
+    pub wire_payload_bytes: Vec<u64>,
+    /// Packing-header bytes the multiplexed exchange added this step,
+    /// summed across ranks (zero when unmultiplexed or single-group).
+    pub wire_header_bytes: u64,
 }
 
 /// Aggregated outcome of a run.
@@ -250,6 +282,11 @@ pub struct TrainReport {
     pub online_expired: u64,
     pub online_synced_rows: u64,
     pub online_sync_bytes: u64,
+    /// Run totals of the per-step per-lane payload bytes (summed across
+    /// ranks and steps; index = comm lane).
+    pub wire_payload_bytes: Vec<u64>,
+    /// Run total of the multiplexed packing-header bytes.
+    pub wire_header_bytes: u64,
 }
 
 impl TrainReport {
@@ -306,6 +343,17 @@ impl TrainReport {
             .steps
             .iter()
             .map(|s| slice_mean(&s.sim_hidden_boundary_s))
+            .collect();
+        slice_mean(&per_step)
+    }
+
+    /// Mean last-round gradient-push seconds per step hidden behind the
+    /// dense sync (the cross-step gradient lane).
+    pub fn mean_hidden_boundary_grad_s(&self) -> f64 {
+        let per_step: Vec<f64> = self
+            .steps
+            .iter()
+            .map(|s| slice_mean(&s.sim_hidden_boundary_grad_s))
             .collect();
         slice_mean(&per_step)
     }
@@ -458,6 +506,16 @@ impl Trainer {
         let online_sync_bytes: u64 = steps.iter().map(|s| s.online_sync_bytes).sum();
         let lookup_ops_merged: u64 = steps.iter().map(|s| s.lookup_ops_merged).sum();
         let lookup_ops_unmerged: u64 = steps.iter().map(|s| s.lookup_ops_unmerged).sum();
+        // Wire meters are already globally summed per step (collective
+        // gathers at the step boundary), like the online counters.
+        let mut wire_payload_bytes = vec![0u64; LANES];
+        let mut wire_header_bytes = 0u64;
+        for s in &steps {
+            for (l, &b) in s.wire_payload_bytes.iter().enumerate() {
+                wire_payload_bytes[l] += b;
+            }
+            wire_header_bytes += s.wire_header_bytes;
+        }
         Ok(TrainReport {
             table_stats,
             group_dims,
@@ -471,6 +529,8 @@ impl Trainer {
             online_expired,
             online_synced_rows,
             online_sync_bytes,
+            wire_payload_bytes,
+            wire_header_bytes,
             gauc_ctr: gauc_ctr.gauc(),
             gauc_ctcvr: gauc_ctcvr.gauc(),
             phases,
@@ -553,7 +613,14 @@ fn worker_main(
     let dir = engine.manifest().dir.clone();
     let d = arts.emb_dim;
     let schema = Schema::by_name(&opts.schema, d)?;
-    let plan = MergePlan::build(&schema.all_features());
+    // §4.2 table merging unless ablated away (`--no-merging` keeps one
+    // group per logical table, so every round pays one exchange per
+    // table instead of one per merge group).
+    let plan = if opts.table_merging {
+        MergePlan::build(&schema.all_features())
+    } else {
+        MergePlan::build_unmerged(&schema.all_features())
+    };
     let n_groups = plan.num_groups();
 
     // Per-worker data shard: independent generator stream feeding a
@@ -621,6 +688,11 @@ fn worker_main(
             ShardedEmbedding::new(gate, opts.train.dedup).with_pool(Arc::clone(&pool))
         })
         .collect();
+    // The multiplexed exchange front-end: packs every group's payload
+    // into one message per comm lane (§3.3 raw-speed pass). Falls back
+    // to the per-group schedule when disabled or single-group, where it
+    // is wire-identical by construction.
+    let mut exchange = GroupExchange::new(opts.multiplex_exchange);
     let adam_params = AdamParams {
         lr: opts.train.lr,
         beta1: opts.train.beta1,
@@ -743,8 +815,13 @@ fn worker_main(
     let mut prev_admitted = 0u64;
     let mut prev_rejected = 0u64;
     // Carried across the step boundary in cross-step mode: step s+1's
-    // first posted ID exchanges (one per merge group, group order).
-    let mut posted: Option<Vec<PendingLookup>> = None;
+    // first posted ID exchange (all merge groups' lanes in one handle).
+    let mut posted: Option<MultiLookup> = None;
+    // Per-rank wire meters at the previous step boundary: payload bytes
+    // per lane minus the multiplexed packing headers, so the records
+    // can assert payload conservation against the per-group schedule.
+    let mut wire_prev = comm.stats.lane_bytes;
+    let mut hdr_prev = [0u64; LANES];
 
     let mut step = 0usize;
     loop {
@@ -775,7 +852,7 @@ fn worker_main(
         let rounds = *n_micro.iter().max().unwrap() as usize;
 
         let mut step_loss = [0.0f64; 2];
-        let mut posted_bwd: Option<Vec<PendingBackward>> = None;
+        let mut posted_bwd: Option<MultiBackward> = None;
         for round in 0..rounds {
             let micro = data.micros.get(round);
             let (bi, bucket): (&BatchIds, (usize, usize)) = match data.round_ids.get(round) {
@@ -783,51 +860,43 @@ fn worker_main(
                 None => (&empty_ids, (0, 0)),
             };
 
-            // ---- lookup (collective, three-phase, per group) ----------
+            // ---- lookup (collective, three-phase, multiplexed) --------
             // With overlap on, this round's IDs were already posted
             // during the previous round (or, for round 0 in cross-step
             // mode, during the previous step's dense sync); serve the
             // shards now and post the embedding replies...
-            let pending: Vec<PendingLookup> = match posted.take() {
+            let pending: MultiLookup = match posted.take() {
                 Some(p) => p,
                 None => phases.time("2_lookup", || {
-                    (0..n_groups)
-                        .map(|g| sharded[g].post_ids(&mut comm, &bi.groups[g].ids))
-                        .collect()
+                    let ids: Vec<&[crate::embedding::GlobalId]> =
+                        (0..n_groups).map(|g| bi.groups[g].ids.as_slice()).collect();
+                    exchange.post_ids(&mut comm, &mut sharded, &ids)
                 }),
             };
-            let served: Vec<PendingReply> = phases.time("2_lookup", || {
-                pending
-                    .into_iter()
-                    .enumerate()
-                    .map(|(g, p)| sharded[g].serve_reply(&mut comm, p, true))
-                    .collect()
+            let served = phases.time("2_lookup", || {
+                exchange.serve_reply(&mut comm, &mut sharded, pending, true)
             });
             if opts.overlap && round + 1 < rounds {
-                // ...then post the next round's ID all-to-alls while
+                // ...then post the next round's ID all-to-all while
                 // this round's replies are still on the wire — the
                 // double-buffered round: both exchanges in flight at
-                // once, each on its own comm lane (groups share the
-                // lanes FIFO, posted and completed in group order).
+                // once, each on its own comm lane (multiplexed mode
+                // packs all groups into one message per lane; per-group
+                // mode keeps the lanes FIFO in group order).
                 posted = Some(phases.time("2_lookup", || {
-                    (0..n_groups)
+                    let next_ids: Vec<&[crate::embedding::GlobalId]> = (0..n_groups)
                         .map(|g| {
-                            let next_ids: &[crate::embedding::GlobalId] = data
-                                .round_ids
+                            data.round_ids
                                 .get(round + 1)
                                 .map(|p| p.0.groups[g].ids.as_slice())
-                                .unwrap_or(&[]);
-                            sharded[g].post_ids(&mut comm, next_ids)
+                                .unwrap_or(&[])
                         })
-                        .collect()
+                        .collect();
+                    exchange.post_ids(&mut comm, &mut sharded, &next_ids)
                 }));
             }
             let rows: Vec<Vec<f32>> = phases.time("2_lookup", || {
-                served
-                    .into_iter()
-                    .enumerate()
-                    .map(|(g, s)| sharded[g].complete_reply(&mut comm, s))
-                    .collect()
+                exchange.complete_reply(&mut comm, &mut sharded, served)
             });
 
             // ---- forward + backward (local, pool-parallel) ------------
@@ -876,46 +945,67 @@ fn worker_main(
             };
 
             // ---- sparse backward (collective) + local accumulation ----
-            // Complete the *previous* round's gradient exchanges only
-            // now — their wire time hid behind this round's forward and
-            // backward compute. Then post this round's gradients (one
-            // exchange per group, group order); with overlap on they
-            // stay in flight until the next round (or the post-loop
-            // flush). Round order of accumulation is identical to the
-            // blocking schedule, so numerics match bitwise.
+            // Complete the *previous* round's gradient exchange only
+            // now — its wire time hid behind this round's forward and
+            // backward compute. Then post this round's gradients; with
+            // overlap on they stay in flight until the next round (or
+            // the flush at the step boundary). Round order of
+            // accumulation is identical to the blocking schedule, so
+            // numerics match bitwise.
             phases.time("4_sparse_update", || {
-                if let Some(pbs) = posted_bwd.take() {
-                    for (g, pb) in pbs.into_iter().enumerate() {
-                        let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
+                if let Some(pb) = posted_bwd.take() {
+                    for (g, (lids, lgrads)) in exchange
+                        .complete_backward(&mut comm, &mut sharded, pb)
+                        .into_iter()
+                        .enumerate()
+                    {
                         sparse_acc[g].add(&lids, &lgrads, 0);
                     }
                 }
-                let pbs: Vec<PendingBackward> = (0..n_groups)
+                let ids: Vec<&[crate::embedding::GlobalId]> =
+                    (0..n_groups).map(|g| bi.groups[g].ids.as_slice()).collect();
+                let grads: Vec<&[f32]> = (0..n_groups)
                     .map(|g| {
-                        let occ: &[f32] = if have_grads { &arena.occ_grads[g] } else { &[] };
-                        sharded[g].post_backward(&mut comm, &bi.groups[g].ids, occ)
+                        if have_grads {
+                            arena.occ_grads[g].as_slice()
+                        } else {
+                            &[][..]
+                        }
                     })
                     .collect();
+                let pb = exchange.post_backward(&mut comm, &mut sharded, &ids, &grads);
                 if opts.overlap {
-                    posted_bwd = Some(pbs);
+                    posted_bwd = Some(pb);
                 } else {
-                    for (g, pb) in pbs.into_iter().enumerate() {
-                        let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
+                    for (g, (lids, lgrads)) in exchange
+                        .complete_backward(&mut comm, &mut sharded, pb)
+                        .into_iter()
+                        .enumerate()
+                    {
                         sparse_acc[g].add(&lids, &lgrads, 0);
                     }
                 }
             });
         }
-        // Flush the last round's in-flight gradient exchanges before
-        // the optimizer applies updates.
-        phases.time("4_sparse_update", || {
-            if let Some(pbs) = posted_bwd.take() {
-                for (g, pb) in pbs.into_iter().enumerate() {
-                    let (lids, lgrads) = sharded[g].complete_backward(&mut comm, pb);
-                    sparse_acc[g].add(&lids, &lgrads, 0);
+        // Flush the last round's in-flight gradient exchange before the
+        // optimizer applies updates — unless cross-step mode keeps it in
+        // flight across the dense all-reduce (the cross-step gradient
+        // lane); the dense-sync block below drains it right before the
+        // sparse optimizer reads the accumulators, so the accumulation
+        // order — and every number — is unchanged.
+        if !cross {
+            phases.time("4_sparse_update", || {
+                if let Some(pb) = posted_bwd.take() {
+                    for (g, (lids, lgrads)) in exchange
+                        .complete_backward(&mut comm, &mut sharded, pb)
+                        .into_iter()
+                        .enumerate()
+                    {
+                        sparse_acc[g].add(&lids, &lgrads, 0);
+                    }
                 }
-            }
-        });
+            });
+        }
         debug_assert!(posted.is_none(), "a posted lookup outlived its rounds");
 
         // Volume snapshot BEFORE the cross-step post, so each step's
@@ -938,16 +1028,15 @@ fn worker_main(
             let next = prepare(&mut phases);
             if cross {
                 posted = Some(phases.time("2_lookup", || {
-                    (0..n_groups)
+                    let first_ids: Vec<&[crate::embedding::GlobalId]> = (0..n_groups)
                         .map(|g| {
-                            let first_ids: &[crate::embedding::GlobalId] = next
-                                .round_ids
+                            next.round_ids
                                 .first()
                                 .map(|p| p.0.groups[g].ids.as_slice())
-                                .unwrap_or(&[]);
-                            sharded[g].post_ids(&mut comm, first_ids)
+                                .unwrap_or(&[])
                         })
-                        .collect()
+                        .collect();
+                    exchange.post_ids(&mut comm, &mut sharded, &first_ids)
                 }));
             }
             next_data = Some(next);
@@ -968,6 +1057,24 @@ fn worker_main(
                 // size (disjoint elements / rows). Sparse state applies
                 // group by group (disjoint id spaces).
                 dense_opt.step_pooled(&mut params, &grads, scale, Some(pool.as_ref()));
+            }
+            // Cross-step gradient lane: the last round's gradient push
+            // stayed in flight across the dense all-reduce above; drain
+            // it now, before the sparse optimizer reads the
+            // accumulators. No-op when cross-step mode is off (the
+            // post-round-loop flush already ran) — and the accumulation
+            // always lands before any sparse read, so the per-step
+            // accumulation order is identical either way.
+            if let Some(pb) = posted_bwd.take() {
+                for (g, (lids, lgrads)) in exchange
+                    .complete_backward(&mut comm, &mut sharded, pb)
+                    .into_iter()
+                    .enumerate()
+                {
+                    sparse_acc[g].add(&lids, &lgrads, 0);
+                }
+            }
+            if apply_now {
                 for g in 0..n_groups {
                     let (sids, sgrads, _) = sparse_acc[g].take();
                     // Online mode: gradients may target rows that
@@ -1095,6 +1202,37 @@ fn worker_main(
         }
 
         // ---- bookkeeping (collective gathers for the records) ---------
+        // Per-lane wire delta since the previous capture, with the
+        // multiplexed packing headers peeled off into their own meter so
+        // lanes 1–4 carry exactly the sparse-exchange payload.
+        // Attribution follows the posting schedule: a cross-step post
+        // counts in the step that posted it — identical in both mux
+        // modes, so conservation still holds step by step. Lane 0 also
+        // carries the bookkeeping collectives below from the *previous*
+        // capture, which is why conservation is only asserted on the
+        // exchange lanes.
+        let mut my_wire = [0u64; 6];
+        for l in 0..LANES {
+            let lane_total = comm.stats.lane_bytes[l] - wire_prev[l];
+            let hdr = exchange.header_bytes[l] - hdr_prev[l];
+            my_wire[l] = lane_total - hdr;
+            my_wire[5] += hdr;
+        }
+        wire_prev = comm.stats.lane_bytes;
+        hdr_prev = exchange.header_bytes;
+        let wire_gathered: Vec<Vec<u64>> = comm
+            .all_gather(crate::collective::comm::Message::Counts(my_wire.to_vec()))
+            .into_iter()
+            .map(|m| m.into_counts())
+            .collect();
+        let mut wire_payload_bytes = vec![0u64; LANES];
+        let mut wire_header_bytes = 0u64;
+        for w in &wire_gathered {
+            for l in 0..LANES {
+                wire_payload_bytes[l] += w[l];
+            }
+            wire_header_bytes += w[5];
+        }
         let tokens = comm.all_gather_u64(my_tokens);
         let samples: u64 = comm.all_gather_u64(my_samples).iter().sum();
         let mut losses = [step_loss[0] as f32, step_loss[1] as f32, my_samples as f32];
@@ -1146,11 +1284,23 @@ fn worker_main(
         } else {
             0.0
         };
-        let t_hidden_boundary = if cross && step > 0 {
-            t_first_id.min(t_allreduce)
+        // The dense all-reduce window hides two boundary lanes in
+        // priority order: the next step's first ID post (steps after the
+        // first) and this step's last gradient push (the cross-step
+        // gradient lane, which stays in flight across the all-reduce and
+        // drains inside the dense sync).
+        let t_last_grad = if rounds > 0 {
+            t_grad_comm / rounds as f64
         } else {
             0.0
         };
+        let bshares = crate::metrics::overlap_exposure_lanes(
+            t_allreduce,
+            &[if step > 0 { t_first_id } else { 0.0 }, t_last_grad],
+            cross,
+        );
+        let t_hidden_boundary = bshares[0].1;
+        let t_hidden_boundary_grad = bshares[1].1;
         let t_window = t_compute * pipelined_frac;
         let hideable = [
             t_id_comm * pipelined_frac,
@@ -1162,7 +1312,8 @@ fn worker_main(
         let t_exposed_comm = (t_id_comm - hideable[0] - t_hidden_boundary).max(0.0)
             + shares[0].0
             + (t_reply_comm - hideable[1]) + shares[1].0
-            + (t_grad_comm - hideable[2]) + shares[2].0;
+            + (t_grad_comm - hideable[2] - t_hidden_boundary_grad).max(0.0)
+            + shares[2].0;
         let my_sim = t_compute + t_lookup + t_exposed_comm;
         let gathered: Vec<Vec<f32>> = comm
             .all_gather(crate::collective::comm::Message::Floats(vec![
@@ -1172,6 +1323,7 @@ fn worker_main(
                 shares[1].1 as f32,
                 shares[2].1 as f32,
                 t_hidden_boundary as f32,
+                t_hidden_boundary_grad as f32,
                 my_sync_s as f32,
             ]))
             .into_iter()
@@ -1183,12 +1335,14 @@ fn worker_main(
         let hidden_reply_all: Vec<f64> = gathered.iter().map(|v| v[3] as f64).collect();
         let hidden_grad_all: Vec<f64> = gathered.iter().map(|v| v[4] as f64).collect();
         let hidden_boundary_all: Vec<f64> = gathered.iter().map(|v| v[5] as f64).collect();
+        let hidden_boundary_grad_all: Vec<f64> =
+            gathered.iter().map(|v| v[6] as f64).collect();
         // Delta-sync push completes at the slowest rank; zero except on
         // online interval boundaries, so offline step times are
         // untouched bit-for-bit.
         let max_sync = gathered
             .iter()
-            .map(|v| v[6] as f64)
+            .map(|v| v[7] as f64)
             .fold(0.0, f64::max);
         let sim_step = sim_all.iter().cloned().fold(0.0, f64::max) + t_allreduce + max_sync;
 
@@ -1208,6 +1362,7 @@ fn worker_main(
             sim_hidden_reply_s: hidden_reply_all,
             sim_hidden_grad_s: hidden_grad_all,
             sim_hidden_boundary_s: hidden_boundary_all,
+            sim_hidden_boundary_grad_s: hidden_boundary_grad_all,
             sim_step_s: sim_step,
             sim_sync_s: max_sync,
             wall_s,
@@ -1222,6 +1377,8 @@ fn worker_main(
             online_expired: online_counts[2],
             online_synced_rows: online_counts[3],
             online_sync_bytes: online_counts[4],
+            wire_payload_bytes,
+            wire_header_bytes,
         });
         // Endless runs would otherwise grow the record log without
         // bound; keep a rolling tail (`step` fields stay absolute).

@@ -12,6 +12,28 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Once;
 
+/// Calibrated default crossover points for every tunable threshold —
+/// the single source of truth the kernel-side `*_THRESHOLD` constants
+/// re-export. The values are the `bench_parallel_lookup --calibrate`
+/// crossovers measured on the reference development box (8-core x86,
+/// 4-thread pool); the sweep writes its machine-local measurements to
+/// `calibration.json` so a deployment can compare and override via the
+/// `MTGR_*_THRESHOLD` environment variables without recompiling.
+pub mod calibrated {
+    /// Occurrences above which sorted (pool-parallel) dedup beats the
+    /// serial hash kernel (`MTGR_DEDUP_SORT_THRESHOLD`).
+    pub const DEDUP_SORT: usize = 8192;
+    /// Rows above which parallel gather/scatter beats the serial loops
+    /// (`MTGR_PAR_ROWS_THRESHOLD`).
+    pub const PAR_ROWS: usize = 2048;
+    /// Occurrences above which the stripe-bucketed batch fetch beats
+    /// per-id fetch (`MTGR_PAR_FETCH_THRESHOLD`).
+    pub const PAR_FETCH: usize = 512;
+    /// Dense parameter count above which pooled dense Adam beats the
+    /// serial element loop (`MTGR_PAR_DENSE_THRESHOLD`).
+    pub const PAR_DENSE: usize = 4096;
+}
+
 /// A `usize` knob with a compile-time default, a one-shot env override
 /// and a programmatic setter. Reads are a relaxed atomic load after the
 /// first access, so hot-path call sites stay branch-cheap.

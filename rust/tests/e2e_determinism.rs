@@ -242,6 +242,105 @@ fn mixed_schema_grid_bit_identical() {
 }
 
 #[test]
+fn multiplexed_exchange_bit_identical_and_payload_conserved() {
+    // The raw-speed pass acceptance grid: `--multiplex` (the default)
+    // packs every merge group's exchange into ONE message per comm lane;
+    // `--no-multiplex` keeps one exchange per group. On the two-group
+    // meituan-mixed schema, with overlap + cross-step + threads=4 all
+    // on, both modes must produce bit-identical losses and per-group
+    // checksums — and, lane by lane, move exactly the same payload
+    // bytes (the packed path may only add its per-group section
+    // headers, metered separately).
+    let grid_run = |mux: bool| {
+        let mut o = opts(true, 4);
+        o.schema = "meituan-mixed".to_string();
+        o.cross_step = true;
+        o.multiplex_exchange = mux;
+        o.train.target_tokens = 1400;
+        o.steps = 8;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let muxed = grid_run(true);
+    let plain = grid_run(false);
+    assert_eq!(
+        (fingerprint(&muxed), muxed.group_checksums.clone()),
+        (fingerprint(&plain), plain.group_checksums.clone()),
+        "multiplexing changed arithmetic"
+    );
+    assert_eq!(muxed.group_rows, plain.group_rows);
+    assert_eq!(muxed.group_volumes, plain.group_volumes);
+    // Payload conservation on the four exchange lanes (ids, reply,
+    // grad-ids, grads), per step and over the run. Lane 0 is excluded:
+    // it carries the bookkeeping collectives.
+    assert_eq!(muxed.steps.len(), plain.steps.len());
+    for (sm, sp) in muxed.steps.iter().zip(&plain.steps) {
+        assert_eq!(
+            sm.wire_payload_bytes[1..],
+            sp.wire_payload_bytes[1..],
+            "step {}: packed exchange moved different payload",
+            sm.step
+        );
+    }
+    for lane in 1..5 {
+        assert_eq!(muxed.wire_payload_bytes[lane], plain.wire_payload_bytes[lane]);
+        assert!(
+            muxed.wire_payload_bytes[lane] > 0,
+            "lane {lane} must carry exchange traffic"
+        );
+    }
+    // Two groups → the packed path really engaged (headers on the wire)
+    // while the per-group path added none.
+    assert!(muxed.wire_header_bytes > 0, "packed headers must be metered");
+    assert_eq!(plain.wire_header_bytes, 0, "per-group path has no headers");
+}
+
+#[test]
+fn unmerged_ablation_bit_identical() {
+    // `--no-merging` keeps one group (and one exchange per round) per
+    // logical table. Global IDs are identical under both plans — only
+    // the grouping differs — so losses and the aggregate embedding
+    // state must match the merged run bit for bit, while the operator
+    // counts lose the fusion win.
+    let grid_run = |merging: bool| {
+        let mut o = opts(true, 1);
+        o.schema = "meituan-mixed".to_string();
+        o.cross_step = true;
+        o.table_merging = merging;
+        o.train.target_tokens = 1400;
+        o.steps = 8;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let merged = grid_run(true);
+    let unmerged = grid_run(false);
+    assert_eq!(
+        fingerprint(&merged),
+        fingerprint(&unmerged),
+        "table merging changed arithmetic"
+    );
+    assert_eq!(merged.table_rows, unmerged.table_rows);
+    assert!(
+        unmerged.group_dims.len() > merged.group_dims.len(),
+        "unmerged must split groups: {:?} vs {:?}",
+        unmerged.group_dims,
+        merged.group_dims
+    );
+    assert_eq!(
+        unmerged.lookup_ops_merged, unmerged.lookup_ops_unmerged,
+        "no fusion win without merging"
+    );
+    assert!(merged.lookup_ops_merged < merged.lookup_ops_unmerged);
+    // One table per group → the same run repeated is still
+    // deterministic through the unmerged path.
+    let again = grid_run(false);
+    assert_eq!(
+        (fingerprint(&again), again.group_checksums.clone()),
+        (fingerprint(&unmerged), unmerged.group_checksums.clone())
+    );
+}
+
+#[test]
 fn default_schema_unaffected_by_multi_group_plumbing() {
     // The single-group compatibility guarantee, observable side: the
     // default schema reports exactly one group whose checksum equals
