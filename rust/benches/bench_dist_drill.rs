@@ -1,0 +1,195 @@
+//! The crash-recovery drill matrix through the real binary: for each
+//! world size, kill each rank once at an early / mid / late step and
+//! assert the recovered run is **bit-identical** to an uninterrupted
+//! single-process run of the same argv (final losses, per-group
+//! embedding checksums, overlapping step records). One reference run
+//! per world is cached and reused across the kills.
+//!
+//! Every drill's recovery accounting (recoveries, replayed steps,
+//! heartbeat misses, transport retries) lands in the bench JSON, so CI
+//! archives the fault-tolerance trajectory next to the perf benches.
+//! Any bit divergence or missed recovery panics → nonzero exit.
+//!
+//! CLI (after `--`): `--worlds 2,4` (comma list), `--kill-steps 2,7,12`
+//! (early/mid/late; the run is 15 steps = 3 intervals × 5).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Instant;
+
+use mtgrboost::dist::worker::parse_hex64;
+use mtgrboost::util::bench::{BenchReport, Table};
+use mtgrboost::util::cli::Args;
+use mtgrboost::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mtgrboost");
+
+fn tmp(tag: &str) -> PathBuf {
+    // Short: Unix socket paths cap at ~108 bytes.
+    let d = std::env::temp_dir().join(format!("mtgr_bdd_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn train_tail(world: usize, sync_dir: &Path) -> Vec<String> {
+    [
+        "--model", "tiny", "--mode", "online", "--sync-interval", "5",
+        "--intervals", "3", "--seed", "977", "--threads", "1",
+        "--log-every", "0", "--target-tokens", "512", "--max-len", "32",
+        "--len-mu", "2.5", "--gauc", "off",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--world".to_string(),
+        world.to_string(),
+        "--sync-dir".to_string(),
+        sync_dir.display().to_string(),
+    ])
+    .collect()
+}
+
+fn run_to_json(subcmd: &str, args: &[String], report: &Path) -> Json {
+    let out = Command::new(BIN)
+        .arg(subcmd)
+        .args(args)
+        .arg("--report-json")
+        .arg(report)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{subcmd} failed ({}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(&std::fs::read_to_string(report).unwrap()).unwrap()
+}
+
+fn checksums(j: &Json) -> Vec<u64> {
+    j.get("group_checksums")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| parse_hex64(c.as_str().unwrap()).unwrap())
+        .collect()
+}
+
+fn final_bits(j: &Json) -> (u64, u64) {
+    (
+        parse_hex64(j.expect_str("final_loss_ctr_bits").unwrap()).unwrap(),
+        parse_hex64(j.expect_str("final_loss_ctcvr_bits").unwrap()).unwrap(),
+    )
+}
+
+fn step_bits(j: &Json) -> Vec<(usize, u64, u64)> {
+    j.get("steps")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.expect_usize("step").unwrap(),
+                parse_hex64(s.expect_str("loss_ctr_bits").unwrap()).unwrap(),
+                parse_hex64(s.expect_str("loss_ctcvr_bits").unwrap()).unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn assert_bit_identical(dist: &Json, reference: &Json, drill: &str) {
+    assert_eq!(final_bits(dist), final_bits(reference), "{drill}: final loss bits");
+    assert_eq!(checksums(dist), checksums(reference), "{drill}: group checksums");
+    let ref_steps = step_bits(reference);
+    for (step, ctr, ctcvr) in step_bits(dist) {
+        let r = ref_steps
+            .iter()
+            .find(|(s, _, _)| *s == step)
+            .unwrap_or_else(|| panic!("{drill}: reference has no step {step}"));
+        assert_eq!((ctr, ctcvr), (r.1, r.2), "{drill}: loss bits at step {step}");
+    }
+}
+
+fn parse_list(s: &str, flag: &str) -> Vec<usize> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .unwrap_or_else(|_| panic!("--{flag} expects comma-separated integers, got `{t}`"))
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env(&["bench"]);
+    let worlds = parse_list(&args.get_or("worlds", "2,4"), "worlds");
+    let kill_steps = parse_list(&args.get_or("kill-steps", "2,7,12"), "kill-steps");
+
+    let mut rep = BenchReport::new("bench_dist_drill");
+    let mut tbl = Table::new(
+        "Crash-recovery drill matrix (kill rank r at step s, 3 intervals × 5 steps)",
+        &["world", "rank", "kill step", "recoveries", "replayed", "hb misses", "secs", "bits"],
+    );
+
+    let mut drills = 0usize;
+    let mut total_replayed = 0u64;
+    for &world in &worlds {
+        let ref_dir = tmp(&format!("ref{world}"));
+        let sync = ref_dir.join("sync");
+        std::fs::create_dir_all(&sync).unwrap();
+        let reference = run_to_json("train", &train_tail(world, &sync), &ref_dir.join("r.json"));
+
+        for rank in 0..world {
+            for &step in &kill_steps {
+                let drill = format!("w{world}_r{rank}_s{step}");
+                let d = tmp(&drill);
+                let sync = d.join("sync");
+                std::fs::create_dir_all(&sync).unwrap();
+                let mut dist_args = train_tail(world, &sync);
+                dist_args.extend([
+                    "--run-dir".to_string(),
+                    d.join("run").display().to_string(),
+                    "--fault".to_string(),
+                    format!("kill:rank={rank},step={step}"),
+                ]);
+                let t0 = Instant::now();
+                let dist = run_to_json("train-dist", &dist_args, &d.join("d.json"));
+                let secs = t0.elapsed().as_secs_f64();
+
+                let stats = dist.get("dist");
+                let recoveries = stats.expect_usize("recoveries").unwrap();
+                let replayed = stats.expect_usize("replayed_steps").unwrap();
+                let misses = stats.expect_usize("heartbeat_misses").unwrap();
+                assert_eq!(recoveries, 1, "{drill}: exactly one gang restart");
+                assert!(replayed > 0, "{drill}: a mid-run kill must replay steps");
+                assert_bit_identical(&dist, &reference, &drill);
+
+                rep.add_metric(&format!("replayed_steps_{drill}"), replayed.into());
+                tbl.row(&[
+                    format!("{world}"),
+                    format!("{rank}"),
+                    format!("{step}"),
+                    format!("{recoveries}"),
+                    format!("{replayed}"),
+                    format!("{misses}"),
+                    format!("{secs:.2}"),
+                    "identical".to_string(),
+                ]);
+                drills += 1;
+                total_replayed += replayed as u64;
+                std::fs::remove_dir_all(&d).ok();
+            }
+        }
+        std::fs::remove_dir_all(&ref_dir).ok();
+    }
+
+    rep.add_metric("drills", drills.into());
+    rep.add_metric("total_replayed_steps", (total_replayed as usize).into());
+    rep.add_table(tbl);
+    rep.save().unwrap();
+    println!(
+        "\n{drills} kill drills across worlds {worlds:?}: every recovered run \
+         bit-identical to its uninterrupted single-process reference."
+    );
+}

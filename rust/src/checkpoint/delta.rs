@@ -36,8 +36,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::{
-    parse_sparse_file, push_row_bytes, rows_block_bytes, write_dense_bin, CheckpointMeta,
-    SparseRow,
+    parse_sparse_file, push_row_bytes, read_sealed, rows_block_bytes, write_dense_bin,
+    write_sealed, CheckpointMeta, SparseRow,
 };
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::GlobalId;
@@ -71,8 +71,10 @@ fn sparse_delta_path(dir: &Path, seq: u64, rank: usize, world: usize) -> PathBuf
 }
 
 /// Merge group `group`'s shard file of delta `seq` (group 0 keeps the
-/// historical single-group name).
-fn sparse_delta_group_path(
+/// historical single-group name). Public so the distributed
+/// supervisor's recovery scan can CRC-verify every shard of a delta,
+/// and so the fault harness can tear a specific shard file.
+pub fn sparse_delta_group_path(
     dir: &Path,
     seq: u64,
     rank: usize,
@@ -151,8 +153,8 @@ pub fn save_delta_groups(
         }
         bytes.extend_from_slice(&rows_block_bytes(gd.upserts.len() as u64, gd.dim, &body));
         total += bytes.len();
-        std::fs::write(
-            sparse_delta_group_path(dir, meta.seq, rank, meta.world, g),
+        write_sealed(
+            &sparse_delta_group_path(dir, meta.seq, rank, meta.world, g),
             bytes,
         )?;
     }
@@ -217,8 +219,7 @@ pub fn load_delta_shard_group(
     group: usize,
 ) -> Result<(Vec<SparseRow>, Vec<GlobalId>)> {
     let path = sparse_delta_group_path(dir, meta.seq, rank, meta.world, group);
-    let bytes =
-        std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+    let bytes = read_sealed(&path)?;
     if bytes.len() < 8 {
         bail!("delta shard truncated header");
     }
@@ -444,8 +445,8 @@ pub fn save_full_groups(
         for r in &rows {
             push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
         }
-        std::fs::write(
-            super::sparse_group_path(dir, rank, meta.world, g),
+        write_sealed(
+            &super::sparse_group_path(dir, rank, meta.world, g),
             rows_block_bytes(rows.len() as u64, table.dim(), &body),
         )?;
     }

@@ -22,6 +22,14 @@
 //! `{r | r ≡ r' (mod min(n, n'))}` picked by [`files_to_read`], then
 //! keeps the ids it now owns — no device ever scans the whole
 //! checkpoint (the flaw the paper calls out in prior systems).
+//!
+//! Every binary file (sparse shards, delta shards, `dense.bin`) is
+//! *sealed* with a trailing CRC-32 footer ([`crate::util::crc32`]):
+//! loaders verify integrity before parsing, so truncation, torn writes
+//! and bit rot are loud errors — the property the distributed
+//! supervisor's recovery scan relies on to pick the last fully-valid
+//! delta. `meta.json` stays plain JSON (human-inspectable; its parse
+//! already rejects truncation).
 
 pub mod delta;
 
@@ -79,6 +87,26 @@ pub fn files_to_read(old_world: usize, new_world: usize, new_rank: usize) -> Vec
 
 fn meta_path(dir: &Path) -> std::path::PathBuf {
     dir.join("meta.json")
+}
+
+/// Write `bytes` to `path` with the CRC-32 integrity footer appended.
+pub(crate) fn write_sealed(path: &Path, bytes: Vec<u8>) -> Result<()> {
+    std::fs::write(path, crate::util::crc32::seal(bytes))
+        .with_context(|| format!("write {}", path.display()))
+}
+
+/// Read `path`, verify its CRC-32 footer and return the payload.
+pub(crate) fn read_sealed(path: &Path) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    crate::util::crc32::unseal_vec(bytes)
+        .with_context(|| format!("integrity check failed for {}", path.display()))
+}
+
+/// Verify the CRC-32 footer of `path` without keeping the payload —
+/// the supervisor's recovery scan uses this to decide whether a delta
+/// snapshot survived a crash intact.
+pub fn verify_sealed(path: &Path) -> Result<()> {
+    read_sealed(path).map(|_| ())
 }
 
 fn sparse_path(dir: &Path, rank: usize, world: usize) -> std::path::PathBuf {
@@ -171,8 +199,8 @@ pub fn save(
         push_row_bytes(&mut body, id, row, &st.m, &st.v, st.t);
         count += 1;
     }
-    std::fs::write(
-        sparse_path(dir, rank, meta.world),
+    write_sealed(
+        &sparse_path(dir, rank, meta.world),
         rows_block_bytes(count, d, &body),
     )?;
     Ok(())
@@ -212,7 +240,7 @@ pub(crate) fn write_dense_bin(dir: &Path, params: &[f32], adam: &DenseAdam) -> R
         bytes.extend_from_slice(&p.to_le_bytes());
     }
     bytes.extend_from_slice(&adam.state_bytes());
-    std::fs::write(dir.join("dense.bin"), bytes)?;
+    write_sealed(&dir.join("dense.bin"), bytes)?;
     Ok(())
 }
 
@@ -232,7 +260,7 @@ pub fn load_meta(dir: &Path) -> Result<CheckpointMeta> {
 
 /// Load the replicated dense parameters + optimizer state.
 pub fn load_dense(dir: &Path, param_count: usize) -> Result<(Vec<f32>, Vec<u8>)> {
-    let bytes = std::fs::read(dir.join("dense.bin")).context("read dense.bin")?;
+    let bytes = read_sealed(&dir.join("dense.bin")).context("read dense.bin")?;
     let p_bytes = param_count * 4;
     if bytes.len() < p_bytes {
         bail!("dense.bin truncated");
@@ -304,8 +332,7 @@ pub fn load_sparse_shard_group(
     let mut out = Vec::new();
     for old_rank in files_to_read(meta.world, new_world, new_rank) {
         let path = sparse_group_path(dir, old_rank, meta.world, group);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("read {}", path.display()))?;
+        let bytes = read_sealed(&path)?;
         for row in parse_sparse_file(&bytes)? {
             if shard_owner(row.id, new_world) == new_rank {
                 out.push(row);
@@ -521,6 +548,66 @@ mod tests {
         };
         assert!(load_sparse_shard(&dir, &meta, 1, 0).is_err());
         assert!(load_meta(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Satellite: fuzz the CRC seal — random byte flips and random
+    /// truncations of real checkpoint files must all be loud load
+    /// errors, never silently-wrong rows.
+    #[test]
+    fn fuzz_corruption_is_always_detected() {
+        let dim = 4;
+        let dir = tmp("fuzz");
+        let shards = build_world(1, dim, 40);
+        let meta = CheckpointMeta {
+            world: 1,
+            step: 5,
+            model: "tiny".into(),
+            dim,
+            param_count: 2,
+        };
+        let dense_opt = DenseAdam::new(2, AdamParams::default());
+        save(&dir, &meta, 0, Some((&[0.1, 0.2], &dense_opt)), &shards[0].0, &shards[0].1)
+            .unwrap();
+
+        // Both loaders succeed on the pristine files.
+        assert!(load_sparse_shard(&dir, &meta, 1, 0).is_ok());
+        assert!(load_dense(&dir, meta.param_count).is_ok());
+
+        let mut rng = crate::util::rng::Xoshiro256::new(0xC0FFEE);
+        for target in ["sparse", "dense"] {
+            let path = match target {
+                "sparse" => sparse_path(&dir, 0, 1),
+                _ => dir.join("dense.bin"),
+            };
+            let pristine = std::fs::read(&path).unwrap();
+            assert!(pristine.len() > 16);
+            for trial in 0..60 {
+                let mut bad = pristine.clone();
+                if trial % 3 == 2 {
+                    // Random truncation (torn write).
+                    let keep = (rng.next_u64() as usize) % bad.len();
+                    bad.truncate(keep);
+                } else {
+                    // Random single-byte corruption.
+                    let pos = (rng.next_u64() as usize) % bad.len();
+                    let flip = (rng.next_u64() % 255 + 1) as u8;
+                    bad[pos] ^= flip;
+                }
+                std::fs::write(&path, &bad).unwrap();
+                let res = match target {
+                    "sparse" => load_sparse_shard(&dir, &meta, 1, 0).map(|_| ()),
+                    _ => load_dense(&dir, meta.param_count).map(|_| ()),
+                };
+                assert!(
+                    res.is_err(),
+                    "{target} trial {trial}: corruption of {} -> {} bytes went undetected",
+                    pristine.len(),
+                    bad.len()
+                );
+            }
+            std::fs::write(&path, &pristine).unwrap();
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -1,21 +1,43 @@
-//! In-process communicator: the NCCL substitute for simulated devices.
+//! Communicator: the NCCL substitute for simulated and real devices.
 //!
 //! A [`CommGroup`] creates one [`CommHandle`] per rank; handles move into
-//! worker threads. Primitives:
-//! - `all_to_all` — per-pair unbounded channels (deterministic source
+//! worker threads. Since the distributed runtime landed, a handle runs on
+//! one of two backends behind the same API:
+//!
+//! - **Local** (in-process, [`CommGroup::new`]): per-pair unbounded
+//!   channels plus a shared-memory reduce — the historical simulated
+//!   path, byte- and bit-identical to before.
+//! - **Remote** ([`CommHandle::from_remote`]): every send/receive goes
+//!   through a [`RemoteTransport`] — in production a Unix-domain-socket
+//!   mesh ([`crate::dist::transport::SocketTransport`]) connecting real
+//!   worker *processes*. Reductions ride a dedicated pseudo-lane
+//!   ([`REDUCE_LANE`]) as an all-gather folded **in rank order**, so the
+//!   floating-point result is bit-identical to the local shared-buffer
+//!   fold.
+//!
+//! Primitives:
+//! - `all_to_all` — one message to/from every rank (deterministic source
 //!   order on receive);
 //! - `post_all_to_all_on` / `complete_all_to_all` — the non-blocking
 //!   isend/irecv-style split of the same exchange: `post` enqueues the
 //!   sends immediately and returns a [`PendingAllToAll`] token;
 //!   `complete` blocks for the receives. Each in-flight exchange rides a
-//!   dedicated **lane** (an independent per-pair channel set, the
-//!   software analogue of a NCCL stream/tag), so an ID exchange for
-//!   micro-batch *k+1* can overlap an embedding exchange for *k* without
-//!   the FIFO streams interleaving mismatched payloads;
-//! - `all_reduce_sum` / `all_reduce_max` — shared-buffer reduction with a
-//!   two-phase epoch protocol (every caller returns only after the group
-//!   fully resets, so back-to-back reductions cannot interleave);
+//!   dedicated **lane** (an independent per-pair FIFO, the software
+//!   analogue of a NCCL stream/tag), so an ID exchange for micro-batch
+//!   *k+1* can overlap an embedding exchange for *k* without the FIFO
+//!   streams interleaving mismatched payloads;
+//! - `all_reduce_sum` / `all_reduce_max` — rank-order-deterministic
+//!   reduction (shared-buffer epoch protocol locally, [`REDUCE_LANE`]
+//!   gather remotely);
 //! - `barrier`, `broadcast`, `all_gather`.
+//!
+//! **Failure policy**: a transport error (peer process died, socket
+//! reset) is a *panic*, not a `Result` — the exchange API stays
+//! infallible for the trainer hot loop, the panicking worker process
+//! exits nonzero, and the supervisor's crash-recovery path takes over.
+//! Transient faults are retried *inside* the transport
+//! ([`crate::util::retry`]) before they ever surface here; the retry
+//! count is exposed via [`CommHandle::transport_retries`].
 //!
 //! Every handle tracks sent-byte counts per primitive so callers can
 //! charge simulated network time via [`crate::collective::NetModel`].
@@ -41,6 +63,12 @@ pub const LANE_EMB: usize = 2;
 pub const LANE_GRAD_IDS: usize = 3;
 /// Lane carrying the backward gradient payloads.
 pub const LANE_GRAD: usize = 4;
+/// Pseudo-lane carrying remote reductions (all-reduce / barrier). Not a
+/// postable lane — [`post_all_to_all_on`](CommHandle::post_all_to_all_on)
+/// rejects it — but a [`RemoteTransport`] must provision `LANES + 1`
+/// FIFO streams per pair so reductions never interleave with posted
+/// exchanges.
+pub const REDUCE_LANE: usize = LANES;
 
 /// Typed payloads exchanged between ranks (a tiny closed set instead of
 /// generic serialization).
@@ -88,7 +116,28 @@ impl Message {
     }
 }
 
-/// Shared reduce/barrier state (epoch protocol).
+/// A byte transport connecting this rank to every peer, with `LANES + 1`
+/// independent FIFO streams per ordered pair (the posted lanes plus
+/// [`REDUCE_LANE`]). Implementations must deliver messages per
+/// `(lane, src)` in send order and must route self-sends
+/// (`dst == own rank`) back to their own receive queue without touching
+/// the wire. Transient failures should be retried internally
+/// ([`crate::util::retry`]); an `Err` from `send`/`recv` is terminal —
+/// the communicator panics on it and the worker process dies for the
+/// supervisor to restart.
+pub trait RemoteTransport: Send {
+    /// Enqueue `msg` for `dst` on `lane`. May block only for
+    /// backpressure-free internal queuing; must not wait for the peer to
+    /// receive.
+    fn send(&mut self, lane: usize, dst: usize, msg: Message) -> anyhow::Result<()>;
+    /// Blocking receive of the next message from `src` on `lane`.
+    fn recv(&mut self, lane: usize, src: usize) -> anyhow::Result<Message>;
+    /// Cumulative transient-failure retries performed internally (for
+    /// `TrainReport` fault accounting).
+    fn retries(&self) -> u64;
+}
+
+/// Shared reduce/barrier state (epoch protocol, local backend).
 struct ReduceState {
     buf: Vec<f32>,
     /// Per-rank contribution buffers (reused across epochs), folded in
@@ -123,21 +172,31 @@ pub struct CommStats {
     pub lane_bytes: [u64; LANES],
 }
 
+/// The communication substrate behind a handle.
+enum Backend {
+    /// In-process: per-pair unbounded channels + shared-memory reduce.
+    Local {
+        /// senders[lane][dst] — channel into dst's inbox from this rank.
+        senders: Vec<Vec<Sender<Message>>>,
+        /// receivers[lane][src] — this rank's inbox from src.
+        receivers: Vec<Vec<Receiver<Message>>>,
+        shared: Arc<Shared>,
+    },
+    /// Cross-process: everything rides the transport.
+    Remote(Box<dyn RemoteTransport>),
+}
+
 /// One rank's endpoint.
 pub struct CommHandle {
     pub rank: usize,
     pub world: usize,
-    /// senders[lane][dst] — channel into dst's inbox from this rank.
-    senders: Vec<Vec<Sender<Message>>>,
-    /// receivers[lane][src] — this rank's inbox from src.
-    receivers: Vec<Vec<Receiver<Message>>>,
+    backend: Backend,
     /// Per-lane count of posted exchanges (stamps the pending token).
     posted_seq: Vec<u64>,
     /// Per-lane count of completed exchanges (checked on completion:
     /// lanes are FIFO, so completing out of post order would silently
     /// deliver the wrong payloads — instead it panics).
     completed_seq: Vec<u64>,
-    shared: Arc<Shared>,
     pub stats: CommStats,
 }
 
@@ -154,7 +213,7 @@ pub struct PendingAllToAll {
 pub struct CommGroup;
 
 impl CommGroup {
-    /// Create `world` connected handles (index = rank).
+    /// Create `world` connected in-process handles (index = rank).
     pub fn new(world: usize) -> Vec<CommHandle> {
         assert!(world >= 1);
         // txs[src][lane][dst], rxs[dst][lane][src]
@@ -191,17 +250,19 @@ impl CommGroup {
             .map(|(rank, (tx_lanes, rx_lanes))| CommHandle {
                 rank,
                 world,
-                senders: tx_lanes
-                    .into_iter()
-                    .map(|row| row.into_iter().map(Option::unwrap).collect())
-                    .collect(),
-                receivers: rx_lanes
-                    .into_iter()
-                    .map(|row| row.into_iter().map(Option::unwrap).collect())
-                    .collect(),
+                backend: Backend::Local {
+                    senders: tx_lanes
+                        .into_iter()
+                        .map(|row| row.into_iter().map(Option::unwrap).collect())
+                        .collect(),
+                    receivers: rx_lanes
+                        .into_iter()
+                        .map(|row| row.into_iter().map(Option::unwrap).collect())
+                        .collect(),
+                    shared: Arc::clone(&shared),
+                },
                 posted_seq: vec![0; LANES],
                 completed_seq: vec![0; LANES],
-                shared: Arc::clone(&shared),
                 stats: CommStats::default(),
             })
             .collect()
@@ -209,6 +270,30 @@ impl CommGroup {
 }
 
 impl CommHandle {
+    /// Wrap a [`RemoteTransport`] as this process's communicator
+    /// endpoint: rank `rank` of `world` worker processes. The transport
+    /// must already be connected to every peer.
+    pub fn from_remote(rank: usize, world: usize, transport: Box<dyn RemoteTransport>) -> Self {
+        assert!(rank < world);
+        CommHandle {
+            rank,
+            world,
+            backend: Backend::Remote(transport),
+            posted_seq: vec![0; LANES],
+            completed_seq: vec![0; LANES],
+            stats: CommStats::default(),
+        }
+    }
+
+    /// Cumulative transient-failure retries the transport performed (0
+    /// on the local backend, which cannot fail transiently).
+    pub fn transport_retries(&self) -> u64 {
+        match &self.backend {
+            Backend::Local { .. } => 0,
+            Backend::Remote(t) => t.retries(),
+        }
+    }
+
     /// All-to-all: send `chunks[dst]` to each rank, receive one message
     /// from every rank (indexed by source). `chunks.len()` must equal
     /// `world`; the self-chunk short-circuits through the local channel
@@ -228,12 +313,27 @@ impl CommHandle {
     pub fn post_all_to_all_on(&mut self, lane: usize, chunks: Vec<Message>) -> PendingAllToAll {
         assert_eq!(chunks.len(), self.world);
         assert!(lane < LANES, "lane {lane} out of range");
+        let rank = self.rank;
         let mut sent = 0u64;
-        for (dst, m) in chunks.into_iter().enumerate() {
-            if dst != self.rank {
-                sent += m.bytes() as u64;
+        match &mut self.backend {
+            Backend::Local { senders, .. } => {
+                for (dst, m) in chunks.into_iter().enumerate() {
+                    if dst != rank {
+                        sent += m.bytes() as u64;
+                    }
+                    senders[lane][dst].send(m).expect("peer hung up");
+                }
             }
-            self.senders[lane][dst].send(m).expect("peer hung up");
+            Backend::Remote(t) => {
+                for (dst, m) in chunks.into_iter().enumerate() {
+                    if dst != rank {
+                        sent += m.bytes() as u64;
+                    }
+                    t.send(lane, dst, m).unwrap_or_else(|e| {
+                        panic!("transport send to rank {dst} on lane {lane} failed: {e:#}")
+                    });
+                }
+            }
         }
         self.stats.all_to_all_bytes += sent;
         self.stats.lane_bytes[lane] += sent;
@@ -254,9 +354,18 @@ impl CommHandle {
             "all-to-all on lane {lane} completed out of post order"
         );
         self.completed_seq[lane] += 1;
-        (0..self.world)
-            .map(|src| self.receivers[lane][src].recv().expect("peer hung up"))
-            .collect()
+        match &mut self.backend {
+            Backend::Local { receivers, .. } => (0..self.world)
+                .map(|src| receivers[lane][src].recv().expect("peer hung up"))
+                .collect(),
+            Backend::Remote(t) => (0..self.world)
+                .map(|src| {
+                    t.recv(lane, src).unwrap_or_else(|e| {
+                        panic!("transport recv from rank {src} on lane {lane} failed: {e:#}")
+                    })
+                })
+                .collect(),
+        }
     }
 
     /// Element-wise sum all-reduce over an f32 buffer (in place).
@@ -277,53 +386,98 @@ impl CommHandle {
         self.stats.all_reduce_ops += 1;
     }
 
-    fn reduce_with(&self, data: &mut [f32], combine: impl Fn(&mut f32, f32)) {
-        let sh = &self.shared;
-        let mut st = sh.reduce.lock().unwrap();
-        // Wait out any previous operation that hasn't fully reset.
-        while st.writers != 0 && st.readers != 0 {
-            st = sh.cv.wait(st).unwrap();
-        }
-        // Contribute. Contributions park in reusable per-rank buffers;
-        // the completing writer folds them in rank order so the result
-        // is independent of thread arrival order (bitwise determinism
-        // across runs) with no steady-state allocation.
-        {
-            let contrib = &mut st.contribs[self.rank];
-            contrib.clear();
-            contrib.extend_from_slice(data);
-        }
-        st.writers += 1;
-        if st.writers == sh.world {
-            let ReduceState { buf, contribs, .. } = &mut *st;
-            buf.clear();
-            buf.extend_from_slice(&contribs[0]);
-            for c in contribs.iter().skip(1) {
-                assert_eq!(c.len(), buf.len(), "all_reduce length mismatch");
-                for (acc, &x) in buf.iter_mut().zip(c.iter()) {
-                    combine(acc, x);
+    /// Rank-order-deterministic reduction. Locally this is the
+    /// shared-buffer epoch protocol; remotely each rank all-gathers the
+    /// contributions on [`REDUCE_LANE`] and folds them in rank order —
+    /// the same fold order, so the f32 result is bit-identical across
+    /// backends.
+    fn reduce_with(&mut self, data: &mut [f32], combine: impl Fn(&mut f32, f32)) {
+        let rank = self.rank;
+        let world = self.world;
+        match &mut self.backend {
+            Backend::Local { shared, .. } => {
+                let sh = shared;
+                let mut st = sh.reduce.lock().unwrap();
+                // Wait out any previous operation that hasn't fully reset.
+                while st.writers != 0 && st.readers != 0 {
+                    st = sh.cv.wait(st).unwrap();
+                }
+                // Contribute. Contributions park in reusable per-rank
+                // buffers; the completing writer folds them in rank order
+                // so the result is independent of thread arrival order
+                // (bitwise determinism across runs) with no steady-state
+                // allocation.
+                {
+                    let contrib = &mut st.contribs[rank];
+                    contrib.clear();
+                    contrib.extend_from_slice(data);
+                }
+                st.writers += 1;
+                if st.writers == sh.world {
+                    let ReduceState { buf, contribs, .. } = &mut *st;
+                    buf.clear();
+                    buf.extend_from_slice(&contribs[0]);
+                    for c in contribs.iter().skip(1) {
+                        assert_eq!(c.len(), buf.len(), "all_reduce length mismatch");
+                        for (acc, &x) in buf.iter_mut().zip(c.iter()) {
+                            combine(acc, x);
+                        }
+                    }
+                    st.write_gen += 1;
+                    sh.cv.notify_all();
+                } else {
+                    let gen = st.write_gen;
+                    while st.write_gen == gen {
+                        st = sh.cv.wait(st).unwrap();
+                    }
+                }
+                // Consume.
+                data.copy_from_slice(&st.buf);
+                st.readers += 1;
+                if st.readers == sh.world {
+                    st.writers = 0;
+                    st.readers = 0;
+                    st.reset_gen += 1;
+                    sh.cv.notify_all();
+                } else {
+                    let gen = st.reset_gen;
+                    while st.reset_gen == gen {
+                        st = sh.cv.wait(st).unwrap();
+                    }
                 }
             }
-            st.write_gen += 1;
-            sh.cv.notify_all();
-        } else {
-            let gen = st.write_gen;
-            while st.write_gen == gen {
-                st = sh.cv.wait(st).unwrap();
-            }
-        }
-        // Consume.
-        data.copy_from_slice(&st.buf);
-        st.readers += 1;
-        if st.readers == sh.world {
-            st.writers = 0;
-            st.readers = 0;
-            st.reset_gen += 1;
-            sh.cv.notify_all();
-        } else {
-            let gen = st.reset_gen;
-            while st.reset_gen == gen {
-                st = sh.cv.wait(st).unwrap();
+            Backend::Remote(t) => {
+                // All-gather contributions on the reduce lane, fold in
+                // rank order (own contribution at its own position).
+                for dst in 0..world {
+                    if dst != rank {
+                        t.send(REDUCE_LANE, dst, Message::Floats(data.to_vec()))
+                            .unwrap_or_else(|e| {
+                                panic!("transport reduce send to rank {dst} failed: {e:#}")
+                            });
+                    }
+                }
+                let mut acc: Vec<f32> = Vec::new();
+                for src in 0..world {
+                    let contrib: Vec<f32> = if src == rank {
+                        data.to_vec()
+                    } else {
+                        t.recv(REDUCE_LANE, src)
+                            .unwrap_or_else(|e| {
+                                panic!("transport reduce recv from rank {src} failed: {e:#}")
+                            })
+                            .into_floats()
+                    };
+                    if src == 0 {
+                        acc = contrib;
+                    } else {
+                        assert_eq!(contrib.len(), acc.len(), "all_reduce length mismatch");
+                        for (a, &x) in acc.iter_mut().zip(contrib.iter()) {
+                            combine(a, x);
+                        }
+                    }
+                }
+                data.copy_from_slice(&acc);
             }
         }
     }
@@ -371,6 +525,7 @@ impl CommHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::VecDeque;
     use std::thread;
 
     /// Run `f(rank, handle)` on `world` threads, returning per-rank results.
@@ -384,6 +539,75 @@ mod tests {
         for (rank, mut h) in handles.into_iter().enumerate() {
             let f = Arc::clone(&f);
             joins.push(thread::spawn(move || f(rank, &mut h)));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    /// In-memory [`RemoteTransport`] mesh: per-(dst, lane, src) queues
+    /// behind one mutex. Exercises the Remote backend's code paths
+    /// (rank-order reduce fold, self-send routing, lane demux) without
+    /// sockets; the real UDS transport lives in `dist::transport`.
+    struct MockMesh {
+        // queues[dst][lane][src]
+        queues: Mutex<Vec<Vec<Vec<VecDeque<Message>>>>>,
+        cv: Condvar,
+    }
+
+    struct MockTransport {
+        rank: usize,
+        mesh: Arc<MockMesh>,
+    }
+
+    impl RemoteTransport for MockTransport {
+        fn send(&mut self, lane: usize, dst: usize, msg: Message) -> anyhow::Result<()> {
+            let mut q = self.mesh.queues.lock().unwrap();
+            q[dst][lane][self.rank].push_back(msg);
+            self.mesh.cv.notify_all();
+            Ok(())
+        }
+        fn recv(&mut self, lane: usize, src: usize) -> anyhow::Result<Message> {
+            let mut q = self.mesh.queues.lock().unwrap();
+            loop {
+                if let Some(m) = q[self.rank][lane][src].pop_front() {
+                    return Ok(m);
+                }
+                q = self.mesh.cv.wait(q).unwrap();
+            }
+        }
+        fn retries(&self) -> u64 {
+            7 // distinguishable constant for the accounting test
+        }
+    }
+
+    /// Run `f(rank, handle)` over Remote-backend handles on a mock mesh.
+    fn run_remote_group<T: Send + 'static>(
+        world: usize,
+        f: impl Fn(usize, &mut CommHandle) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let mesh = Arc::new(MockMesh {
+            queues: Mutex::new(
+                (0..world)
+                    .map(|_| {
+                        (0..=LANES)
+                            .map(|_| (0..world).map(|_| VecDeque::new()).collect())
+                            .collect()
+                    })
+                    .collect(),
+            ),
+            cv: Condvar::new(),
+        });
+        let f = Arc::new(f);
+        let mut joins = Vec::new();
+        for rank in 0..world {
+            let f = Arc::clone(&f);
+            let t = MockTransport {
+                rank,
+                mesh: Arc::clone(&mesh),
+            };
+            joins.push(thread::spawn(move || {
+                let mut h = CommHandle::from_remote(rank, world, Box::new(t));
+                f(rank, &mut h)
+            }));
         }
         joins.into_iter().map(|j| j.join().unwrap()).collect()
     }
@@ -581,5 +805,84 @@ mod tests {
         for w in out.windows(2) {
             assert_eq!(w[0], w[1]);
         }
+    }
+
+    /// The same mixed workload over the Local and Remote backends must
+    /// produce bit-identical results — the invariant the distributed
+    /// drill scales up to whole training runs.
+    #[test]
+    fn remote_backend_matches_local_bitwise() {
+        fn workload(rank: usize, h: &mut CommHandle) -> (Vec<u64>, Vec<f32>, f32, Vec<u64>) {
+            let chunks = (0..h.world)
+                .map(|dst| Message::Ids(vec![rank as u64 * 100 + dst as u64]))
+                .collect();
+            let a2a: Vec<u64> = h
+                .all_to_all(chunks)
+                .into_iter()
+                .map(|m| m.into_ids()[0])
+                .collect();
+            // Values chosen so fold order changes the f32 result: the
+            // rank-order contract is what keeps backends bit-identical.
+            let mut v = vec![0.1f32 + rank as f32 * 1e-7, rank as f32];
+            h.all_reduce_sum(&mut v);
+            let mut m = vec![rank as f32 * if rank % 2 == 0 { 1.0 } else { -1.5 }];
+            h.all_reduce_max(&mut m);
+            h.barrier();
+            let gathered = h.all_gather_u64(rank as u64 + 7);
+            (a2a, v, m[0], gathered)
+        }
+        for world in [1usize, 2, 4] {
+            let local = run_group(world, workload);
+            let remote = run_remote_group(world, workload);
+            for rank in 0..world {
+                assert_eq!(local[rank].0, remote[rank].0, "a2a world {world} rank {rank}");
+                let (lv, rv) = (&local[rank].1, &remote[rank].1);
+                assert_eq!(
+                    lv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    rv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "reduce bits world {world} rank {rank}"
+                );
+                assert_eq!(local[rank].2.to_bits(), remote[rank].2.to_bits());
+                assert_eq!(local[rank].3, remote[rank].3);
+            }
+        }
+    }
+
+    #[test]
+    fn remote_posted_lanes_and_retry_accounting() {
+        let out = run_remote_group(3, |rank, h| {
+            let ids = (0..3)
+                .map(|dst| Message::Ids(vec![rank as u64 * 10 + dst as u64]))
+                .collect();
+            let pending = h.post_all_to_all_on(LANE_IDS, ids);
+            let floats = (0..3)
+                .map(|dst| Message::Floats(vec![(rank * 3 + dst) as f32]))
+                .collect();
+            let emb_pending = h.post_all_to_all_on(LANE_EMB, floats);
+            let emb: Vec<f32> = h
+                .complete_all_to_all(emb_pending)
+                .into_iter()
+                .map(|m| m.into_floats()[0])
+                .collect();
+            let ids: Vec<u64> = h
+                .complete_all_to_all(pending)
+                .into_iter()
+                .map(|m| m.into_ids()[0])
+                .collect();
+            (ids, emb, h.transport_retries())
+        });
+        for (rank, (ids, emb, retries)) in out.iter().enumerate() {
+            for src in 0..3 {
+                assert_eq!(ids[src], src as u64 * 10 + rank as u64);
+                assert_eq!(emb[src], (src * 3 + rank) as f32);
+            }
+            assert_eq!(*retries, 7, "transport retry counter surfaces");
+        }
+        // Local handles report zero transport retries.
+        let retries = run_group(2, |_r, h| {
+            h.barrier();
+            h.transport_retries()
+        });
+        assert_eq!(retries, vec![0, 0]);
     }
 }

@@ -1,14 +1,18 @@
-//! Simulated-cluster collectives.
+//! Cluster collectives.
 //!
-//! Each "GPU" is a worker thread; [`comm`] provides the in-process
-//! communicator (all-to-all over per-pair channels, shared-state
-//! all-reduce/barrier/broadcast — the NCCL substitute), and [`netmodel`]
-//! the analytic network cost model (NVLink 600 GB/s intra-node, InfiniBand
-//! 200 GB/s inter-node, per the paper's testbed) used to charge simulated
+//! [`comm`] provides the communicator (all-to-all over per-pair FIFO
+//! lanes, rank-order-deterministic all-reduce/barrier/broadcast — the
+//! NCCL substitute). A handle is backed either by in-process channels
+//! (each "GPU" a worker thread, [`CommGroup::new`]) or by a
+//! [`comm::RemoteTransport`] connecting real worker processes
+//! ([`CommHandle::from_remote`]; the UDS mesh lives in
+//! [`crate::dist::transport`]). [`netmodel`] is the analytic network
+//! cost model (NVLink 600 GB/s intra-node, InfiniBand 200 GB/s
+//! inter-node, per the paper's testbed) used to charge simulated
 //! communication time to every exchange.
 
 pub mod comm;
 pub mod netmodel;
 
-pub use comm::{CommGroup, CommHandle, Message, PendingAllToAll};
+pub use comm::{CommGroup, CommHandle, Message, PendingAllToAll, RemoteTransport};
 pub use netmodel::NetModel;

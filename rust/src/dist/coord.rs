@@ -1,0 +1,640 @@
+//! The run coordinator: registration, seeded shard assignment, the
+//! interval barrier, and heartbeat-based failure detection.
+//!
+//! The coordinator lives **inside the supervisor process** and listens
+//! on `coord.sock` in the run dir. Workers register with their rank and
+//! incarnation, get back a [`wire::CoordMsg::Welcome`] carrying the
+//! resume point and the run's base generator seed (the single source of
+//! truth for seeded shard assignment — no worker ever picks its own
+//! resume point), then heartbeat every `heartbeat_ms` and rendezvous at
+//! a barrier after publishing each online delta.
+//!
+//! Failure detection is a [`HeartbeatTracker`] per rank — a **pure**
+//! state machine over a millisecond clock, so every timeout edge
+//! (exactly-at-deadline, clock regression) is unit-testable without
+//! sockets or sleeps. The monitor thread samples the trackers at half
+//! the heartbeat interval and reports the first death per incarnation
+//! as a [`CoordEvent::Dead`]; the supervisor then pauses the barrier,
+//! restarts the gang, and bumps the incarnation so stale messages from
+//! half-dead workers are ignored by tag.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::wire::{self, CoordMsg};
+
+/// Liveness verdict for one rank at one instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BeatState {
+    /// Beat seen within one heartbeat interval.
+    Alive,
+    /// `k` whole intervals have elapsed without a beat (k >= 1), but the
+    /// timeout has not been reached.
+    Missed(u64),
+    /// The timeout elapsed — `now - last_beat >= timeout_ms`. Note the
+    /// `>=`: *exactly at* the deadline is dead, one millisecond before
+    /// it is only missed.
+    Dead,
+}
+
+/// Pure per-rank heartbeat clock. All times are caller-supplied
+/// millisecond stamps (the coordinator uses ms since its own `Instant`
+/// epoch; tests use literals), so the tracker itself never reads a
+/// clock and every edge is deterministic.
+#[derive(Clone, Copy, Debug)]
+pub struct HeartbeatTracker {
+    interval_ms: u64,
+    timeout_ms: u64,
+    last_beat: u64,
+    /// Miss count already credited to the cumulative counter for the
+    /// current silence, so repeated [`observe`](Self::observe) calls
+    /// during one silence don't double-count.
+    credited: u64,
+}
+
+impl HeartbeatTracker {
+    /// A fresh tracker that considers `now_ms` its first beat.
+    /// `interval_ms` is clamped to at least 1 (a zero interval would
+    /// divide by zero in miss accounting).
+    pub fn new(interval_ms: u64, timeout_ms: u64, now_ms: u64) -> Self {
+        HeartbeatTracker {
+            interval_ms: interval_ms.max(1),
+            timeout_ms,
+            last_beat: now_ms,
+            credited: 0,
+        }
+    }
+
+    /// Record a beat. A stamp *earlier* than the last beat (clock
+    /// regression, out-of-order delivery) still proves the worker is
+    /// alive *now*, so it clears the silence without moving `last_beat`
+    /// backwards — a regressed clock must never fake a timeout.
+    pub fn beat(&mut self, now_ms: u64) {
+        if now_ms > self.last_beat {
+            self.last_beat = now_ms;
+        }
+        self.credited = 0;
+    }
+
+    /// Liveness at `now_ms` (pure; does not mutate miss accounting).
+    /// `now_ms` earlier than the last beat saturates to zero elapsed.
+    pub fn check(&self, now_ms: u64) -> BeatState {
+        let elapsed = now_ms.saturating_sub(self.last_beat);
+        if elapsed >= self.timeout_ms {
+            BeatState::Dead
+        } else {
+            match elapsed / self.interval_ms {
+                0 => BeatState::Alive,
+                k => BeatState::Missed(k),
+            }
+        }
+    }
+
+    /// [`check`](Self::check) plus miss accounting: returns the state
+    /// and how many *new* whole-interval misses occurred since the last
+    /// observation (monotone within one silence; resets on a beat).
+    pub fn observe(&mut self, now_ms: u64) -> (BeatState, u64) {
+        let state = self.check(now_ms);
+        let elapsed = now_ms.saturating_sub(self.last_beat);
+        let total = elapsed / self.interval_ms;
+        let new = total.saturating_sub(self.credited);
+        self.credited = self.credited.max(total);
+        (state, new)
+    }
+}
+
+/// Failure notifications the supervisor consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoordEvent {
+    /// Rank `rank` missed heartbeats past the timeout in the current
+    /// incarnation. Reported at most once per incarnation.
+    Dead { rank: usize },
+}
+
+/// Coordinator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordConfig {
+    pub world: usize,
+    /// Expected beat cadence.
+    pub heartbeat_ms: u64,
+    /// Silence length that declares a rank dead.
+    pub timeout_ms: u64,
+    /// Base generator seed distributed via `Welcome` (ranks derive
+    /// their data shard from it).
+    pub seed: u64,
+}
+
+/// Mutable coordinator state behind one mutex.
+struct CoordState {
+    /// Current incarnation; messages tagged with any other are stale.
+    incarnation: u32,
+    /// Resume point handed to registrants of the current incarnation.
+    resume_seq: u64,
+    /// While paused (during recovery) barriers never release and the
+    /// monitor reports no deaths (the gang is known-down).
+    paused: bool,
+    /// Per-rank liveness; `None` until registered / after `Bye`.
+    trackers: Vec<Option<HeartbeatTracker>>,
+    /// Per-rank write halves for `Welcome` / `Release`.
+    writers: Vec<Option<UnixStream>>,
+    /// Barrier attendance per seq.
+    ready: HashMap<u64, Vec<bool>>,
+    /// Dead already reported this incarnation?
+    dead_reported: bool,
+}
+
+struct CoordInner {
+    cfg: CoordConfig,
+    epoch: Instant,
+    state: Mutex<CoordState>,
+    stop: AtomicBool,
+    /// Highest training step any heartbeat has carried (monotone across
+    /// incarnations; the supervisor diffs it against the recovery point
+    /// to count replayed steps).
+    max_step: AtomicU64,
+    /// Cumulative whole-interval heartbeat misses across all ranks and
+    /// incarnations.
+    misses: AtomicU64,
+    events: Sender<CoordEvent>,
+}
+
+impl CoordInner {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// Handle owned by the supervisor. Dropping it shuts the listener and
+/// monitor down.
+pub struct Coordinator {
+    inner: Arc<CoordInner>,
+    events: Receiver<CoordEvent>,
+    accept_thread: Option<JoinHandle<()>>,
+    monitor_thread: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Bind `sock` (unlinking any stale socket first) and start the
+    /// accept + monitor threads.
+    pub fn start(sock: &Path, cfg: CoordConfig) -> Result<Coordinator> {
+        anyhow::ensure!(cfg.world >= 1, "coordinator needs world >= 1");
+        anyhow::ensure!(
+            cfg.timeout_ms > 0 && cfg.heartbeat_ms > 0,
+            "heartbeat and timeout must be positive"
+        );
+        let _ = std::fs::remove_file(sock);
+        let listener = UnixListener::bind(sock)
+            .with_context(|| format!("bind coordinator socket {}", sock.display()))?;
+        // Nonblocking so the accept loop can poll the stop flag.
+        listener.set_nonblocking(true)?;
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let inner = Arc::new(CoordInner {
+            cfg,
+            epoch: Instant::now(),
+            state: Mutex::new(CoordState {
+                incarnation: 0,
+                resume_seq: 0,
+                paused: false,
+                trackers: (0..cfg.world).map(|_| None).collect(),
+                writers: (0..cfg.world).map(|_| None).collect(),
+                ready: HashMap::new(),
+                dead_reported: false,
+            }),
+            stop: AtomicBool::new(false),
+            max_step: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            events: tx,
+        });
+
+        let accept_inner = Arc::clone(&inner);
+        let accept_thread = std::thread::spawn(move || {
+            while !accept_inner.stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let conn_inner = Arc::clone(&accept_inner);
+                        // Connection readers block on their own stream
+                        // and exit on EOF; they are detached on purpose
+                        // (a dead worker's socket EOFs when the kernel
+                        // reaps it, which may outlive the coordinator).
+                        std::thread::spawn(move || conn_main(stream, conn_inner));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        let monitor_inner = Arc::clone(&inner);
+        let monitor_thread = std::thread::spawn(move || monitor_main(monitor_inner));
+
+        Ok(Coordinator {
+            inner,
+            events: rx,
+            accept_thread: Some(accept_thread),
+            monitor_thread: Some(monitor_thread),
+        })
+    }
+
+    /// Freeze the barrier and failure detector (recovery in progress).
+    pub fn pause(&self) {
+        self.inner.state.lock().unwrap().paused = true;
+    }
+
+    /// Arm the next incarnation: clear liveness/barrier state, set the
+    /// resume point future `Welcome`s will carry, and unpause.
+    pub fn reset(&self, resume_seq: u64, incarnation: u32) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.incarnation = incarnation;
+        st.resume_seq = resume_seq;
+        st.paused = false;
+        st.dead_reported = false;
+        st.ready.clear();
+        for t in &mut st.trackers {
+            *t = None;
+        }
+        for w in &mut st.writers {
+            *w = None;
+        }
+    }
+
+    /// Nonblocking poll for the next failure event.
+    pub fn try_event(&self) -> Option<CoordEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Cumulative whole-interval heartbeat misses (all ranks, all
+    /// incarnations).
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
+    }
+
+    /// Highest training step any heartbeat has reported.
+    pub fn max_step(&self) -> u64 {
+        self.inner.max_step.load(Ordering::Relaxed)
+    }
+
+    /// Stop the accept and monitor threads (idempotent; also run by
+    /// `Drop`).
+    pub fn shutdown(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-connection reader: register, then pump heartbeats/barriers until
+/// EOF. Malformed or protocol-violating traffic drops the connection;
+/// liveness tracking then declares the rank dead if it mattered.
+fn conn_main(stream: UnixStream, inner: Arc<CoordInner>) {
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(read_half);
+    // Incarnation this connection registered under; learned at
+    // Register, then used to drop stale messages after a reset.
+    let mut my_inc: Option<u32> = None;
+    loop {
+        let msg = match wire::read_coord(&mut reader) {
+            Ok(m) => m,
+            Err(_) => return, // EOF or corrupt stream
+        };
+        match msg {
+            CoordMsg::Register {
+                rank,
+                incarnation,
+                pid: _,
+            } => {
+                let rank = rank as usize;
+                let mut st = inner.state.lock().unwrap();
+                if incarnation != st.incarnation || rank >= inner.cfg.world {
+                    return; // stale or bogus registrant: drop it
+                }
+                my_inc = Some(incarnation);
+                let now = inner.now_ms();
+                st.trackers[rank] = Some(HeartbeatTracker::new(
+                    inner.cfg.heartbeat_ms,
+                    inner.cfg.timeout_ms,
+                    now,
+                ));
+                let write_half = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => return,
+                };
+                st.writers[rank] = Some(write_half);
+                let welcome = CoordMsg::Welcome {
+                    resume_seq: st.resume_seq,
+                    seed: inner.cfg.seed,
+                };
+                if let Some(w) = st.writers[rank].as_mut() {
+                    if wire::write_coord(w, &welcome).is_err() {
+                        return;
+                    }
+                }
+            }
+            CoordMsg::Heartbeat { rank, step } => {
+                let mut st = inner.state.lock().unwrap();
+                if my_inc != Some(st.incarnation) {
+                    continue; // stale incarnation: ignore, keep draining
+                }
+                let now = inner.now_ms();
+                if let Some(t) = st
+                    .trackers
+                    .get_mut(rank as usize)
+                    .and_then(|t| t.as_mut())
+                {
+                    t.beat(now);
+                }
+                inner.max_step.fetch_max(step, Ordering::Relaxed);
+            }
+            CoordMsg::Ready { rank, seq } => {
+                let rank = rank as usize;
+                let mut st = inner.state.lock().unwrap();
+                if my_inc != Some(st.incarnation) || rank >= inner.cfg.world {
+                    continue;
+                }
+                let world = inner.cfg.world;
+                let attendance = st.ready.entry(seq).or_insert_with(|| vec![false; world]);
+                attendance[rank] = true;
+                let complete = attendance.iter().all(|&b| b);
+                if complete && !st.paused {
+                    st.ready.remove(&seq);
+                    // Broadcast the release; a write error here means
+                    // that worker died after Ready — the heartbeat
+                    // monitor owns that failure, not the barrier.
+                    for w in st.writers.iter_mut().flatten() {
+                        let _ = wire::write_coord(w, &CoordMsg::Release { seq });
+                    }
+                }
+            }
+            CoordMsg::Bye { rank } => {
+                let mut st = inner.state.lock().unwrap();
+                if my_inc == Some(st.incarnation) {
+                    if let Some(t) = st.trackers.get_mut(rank as usize) {
+                        *t = None; // clean exit: stop tracking liveness
+                    }
+                }
+            }
+            // Coordinator-to-worker messages arriving at the
+            // coordinator are a protocol violation.
+            CoordMsg::Welcome { .. } | CoordMsg::Release { .. } => return,
+        }
+    }
+}
+
+/// Monitor thread: sample every tracker at half the heartbeat interval,
+/// accumulate misses, and report the first death per incarnation.
+fn monitor_main(inner: Arc<CoordInner>) {
+    let every = Duration::from_millis((inner.cfg.heartbeat_ms / 2).max(1));
+    while !inner.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(every);
+        let now = inner.now_ms();
+        let mut guard = inner.state.lock().unwrap();
+        let st = &mut *guard;
+        if st.paused {
+            continue;
+        }
+        let mut dead_rank = None;
+        for (rank, slot) in st.trackers.iter_mut().enumerate() {
+            if let Some(t) = slot {
+                let (state, new_misses) = t.observe(now);
+                if new_misses > 0 {
+                    inner.misses.fetch_add(new_misses, Ordering::Relaxed);
+                }
+                if state == BeatState::Dead && dead_rank.is_none() {
+                    dead_rank = Some(rank);
+                }
+            }
+        }
+        if let Some(rank) = dead_rank {
+            if !st.dead_reported {
+                st.dead_reported = true;
+                let _ = inner.events.send(CoordEvent::Dead { rank });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- HeartbeatTracker edges (pure, no sockets, no sleeps) ----
+
+    #[test]
+    fn exactly_at_deadline_is_dead() {
+        let t = HeartbeatTracker::new(10, 40, 100);
+        assert_eq!(t.check(139), BeatState::Missed(3), "1ms early: not dead");
+        assert_eq!(t.check(140), BeatState::Dead, ">= timeout is dead");
+        assert_eq!(t.check(141), BeatState::Dead);
+    }
+
+    #[test]
+    fn alive_then_missed_progression() {
+        let t = HeartbeatTracker::new(10, 100, 0);
+        assert_eq!(t.check(0), BeatState::Alive);
+        assert_eq!(t.check(9), BeatState::Alive);
+        assert_eq!(t.check(10), BeatState::Missed(1));
+        assert_eq!(t.check(35), BeatState::Missed(3));
+        assert_eq!(t.check(99), BeatState::Missed(9));
+        assert_eq!(t.check(100), BeatState::Dead);
+    }
+
+    #[test]
+    fn clock_regression_is_harmless() {
+        let mut t = HeartbeatTracker::new(10, 40, 100);
+        t.beat(120);
+        // A beat stamped before the last one proves liveness but must
+        // not move the deadline backwards...
+        t.beat(90);
+        assert_eq!(t.check(125), BeatState::Alive, "deadline anchored at 120");
+        // ...and a regressed observation clock must not fake a timeout.
+        assert_eq!(t.check(80), BeatState::Alive, "now < last_beat saturates");
+        assert_eq!(t.check(160), BeatState::Dead, "real deadline still fires");
+    }
+
+    #[test]
+    fn observe_accumulates_misses_monotonically() {
+        let mut t = HeartbeatTracker::new(10, 1000, 0);
+        assert_eq!(t.observe(5), (BeatState::Alive, 0));
+        assert_eq!(t.observe(25), (BeatState::Missed(2), 2));
+        // Re-observing the same silence credits only the delta.
+        assert_eq!(t.observe(25), (BeatState::Missed(2), 0));
+        assert_eq!(t.observe(31), (BeatState::Missed(3), 1));
+        // A beat ends the silence and resets the credit.
+        t.beat(31);
+        assert_eq!(t.observe(35), (BeatState::Alive, 0));
+        assert_eq!(t.observe(52), (BeatState::Missed(2), 2));
+        // Death still counts its missed intervals.
+        let mut d = HeartbeatTracker::new(10, 40, 0);
+        let (state, new) = d.observe(40);
+        assert_eq!(state, BeatState::Dead);
+        assert_eq!(new, 4);
+    }
+
+    #[test]
+    fn zero_interval_is_clamped() {
+        let t = HeartbeatTracker::new(0, 10, 0);
+        assert_eq!(t.check(5), BeatState::Missed(5), "interval clamped to 1");
+    }
+
+    // ---- Coordinator over real sockets ----
+
+    fn tmp_sock(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("mtgr_coord_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("coord.sock")
+    }
+
+    fn fake_worker(sock: &Path, rank: u32, incarnation: u32) -> (UnixStream, BufReader<UnixStream>) {
+        let mut stream = UnixStream::connect(sock).unwrap();
+        wire::write_coord(
+            &mut stream,
+            &CoordMsg::Register {
+                rank,
+                incarnation,
+                pid: std::process::id(),
+            },
+        )
+        .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    #[test]
+    fn register_welcome_then_silence_is_reported_dead() {
+        let sock = tmp_sock("death");
+        let coord = Coordinator::start(
+            &sock,
+            CoordConfig {
+                world: 1,
+                heartbeat_ms: 10,
+                timeout_ms: 80,
+                seed: 0xABCD,
+            },
+        )
+        .unwrap();
+        let (mut w, mut r) = fake_worker(&sock, 0, 0);
+        let welcome = wire::read_coord(&mut r).unwrap();
+        assert_eq!(
+            welcome,
+            CoordMsg::Welcome {
+                resume_seq: 0,
+                seed: 0xABCD
+            }
+        );
+        // Beat for a bit, reporting a step, then go silent.
+        for step in 0..3 {
+            wire::write_coord(&mut w, &CoordMsg::Heartbeat { rank: 0, step }).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let event = loop {
+            if let Some(e) = coord.try_event() {
+                break e;
+            }
+            assert!(Instant::now() < deadline, "death not detected in time");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(event, CoordEvent::Dead { rank: 0 });
+        assert!(coord.misses() > 0, "silence accrued misses");
+        assert_eq!(coord.max_step(), 2, "heartbeats carried the step");
+    }
+
+    #[test]
+    fn barrier_releases_when_all_ranks_ready() {
+        let sock = tmp_sock("barrier");
+        let _coord = Coordinator::start(
+            &sock,
+            CoordConfig {
+                world: 2,
+                heartbeat_ms: 50,
+                timeout_ms: 60_000,
+                seed: 1,
+            },
+        )
+        .unwrap();
+        let (mut w0, mut r0) = fake_worker(&sock, 0, 0);
+        let (mut w1, mut r1) = fake_worker(&sock, 1, 0);
+        wire::read_coord(&mut r0).unwrap();
+        wire::read_coord(&mut r1).unwrap();
+
+        wire::write_coord(&mut w1, &CoordMsg::Ready { rank: 1, seq: 1 }).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        wire::write_coord(&mut w0, &CoordMsg::Ready { rank: 0, seq: 1 }).unwrap();
+        // Both sides (blocking reads) get the release.
+        assert_eq!(wire::read_coord(&mut r0).unwrap(), CoordMsg::Release { seq: 1 });
+        assert_eq!(wire::read_coord(&mut r1).unwrap(), CoordMsg::Release { seq: 1 });
+    }
+
+    #[test]
+    fn paused_barrier_holds_and_stale_incarnation_is_ignored() {
+        let sock = tmp_sock("pause");
+        let coord = Coordinator::start(
+            &sock,
+            CoordConfig {
+                world: 1,
+                heartbeat_ms: 50,
+                timeout_ms: 60_000,
+                seed: 1,
+            },
+        )
+        .unwrap();
+        let (mut w, mut r) = fake_worker(&sock, 0, 0);
+        wire::read_coord(&mut r).unwrap();
+
+        coord.pause();
+        wire::write_coord(&mut w, &CoordMsg::Ready { rank: 0, seq: 1 }).unwrap();
+        // No release while paused: poll with a read timeout.
+        r.get_ref()
+            .set_read_timeout(Some(Duration::from_millis(150)))
+            .unwrap();
+        assert!(
+            wire::read_coord(&mut r).is_err(),
+            "paused barrier must not release"
+        );
+
+        // Next incarnation welcomes with the new resume point; the
+        // stale worker's registration is refused (connection dropped).
+        coord.reset(3, 1);
+        let (_w2, mut r2) = fake_worker(&sock, 0, 1);
+        assert_eq!(
+            wire::read_coord(&mut r2).unwrap(),
+            CoordMsg::Welcome {
+                resume_seq: 3,
+                seed: 1
+            }
+        );
+        let (_w3, mut r3) = fake_worker(&sock, 0, 0); // stale incarnation
+        r3.get_ref()
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        assert!(
+            wire::read_coord(&mut r3).is_err(),
+            "stale registrant gets dropped, not welcomed"
+        );
+    }
+}

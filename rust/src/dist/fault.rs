@@ -1,0 +1,235 @@
+//! Deterministic fault-injection plans for crash-recovery drills.
+//!
+//! A [`FaultPlan`] is parsed from the `--fault` CLI flag and describes
+//! *at most one* fault of each kind, pinned to an exact rank and an
+//! exact point in the run, so a drill is reproducible byte-for-byte:
+//!
+//! ```text
+//! kill:rank=1,step=7;drop:rank=0,frame=3;delay:rank=0,frame=5,ms=20;torn:rank=0,seq=2
+//! ```
+//!
+//! * `kill` — the worker calls `abort()` at the top of training step
+//!   `step` (before its first collective, so peers die cleanly on EOF).
+//! * `drop` — the rank's `frame`-th outbound transport frame fails
+//!   transiently on its first send attempt; `util::retry` must recover
+//!   it (exercised retries show up in `TrainReport.dist`).
+//! * `delay` — the rank sleeps `ms` before sending its `frame`-th
+//!   outbound frame (a slow-link stand-in; must not change any bytes).
+//! * `torn` — while publishing delta `seq`, the rank truncates its own
+//!   group-0 shard file mid-write and then aborts: the torn delta must
+//!   be detected by the recovery scan and never applied.
+//!
+//! Frame indices count the rank's outbound *remote* frames from 0,
+//! process-wide across lanes (self-sends never hit the wire). The
+//! supervisor hands the plan only to **incarnation 0** workers, so a
+//! recovered run is fault-free and converges.
+
+use anyhow::{bail, Context, Result};
+
+/// `kill:rank=K,step=S` — abort at the top of step `S` on rank `K`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub rank: usize,
+    pub step: usize,
+}
+
+/// `drop:rank=K,frame=N` — `N`-th outbound frame fails once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DropSpec {
+    pub rank: usize,
+    pub frame: u64,
+}
+
+/// `delay:rank=K,frame=N,ms=M` — sleep `M` ms before the `N`-th frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DelaySpec {
+    pub rank: usize,
+    pub frame: u64,
+    pub ms: u64,
+}
+
+/// `torn:rank=K,seq=Q` — tear own shard of delta `Q`, then abort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TornSpec {
+    pub rank: usize,
+    pub seq: u64,
+}
+
+/// The full plan: at most one fault per kind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kill: Option<KillSpec>,
+    pub drop_frame: Option<DropSpec>,
+    pub delay: Option<DelaySpec>,
+    pub torn: Option<TornSpec>,
+}
+
+fn parse_kv(body: &str, clause: &str) -> Result<std::collections::BTreeMap<String, u64>> {
+    let mut kv = std::collections::BTreeMap::new();
+    for pair in body.split(',') {
+        let (k, v) = pair
+            .split_once('=')
+            .with_context(|| format!("fault clause `{clause}`: `{pair}` is not key=value"))?;
+        let val: u64 = v
+            .trim()
+            .parse()
+            .with_context(|| format!("fault clause `{clause}`: `{v}` is not an integer"))?;
+        if kv.insert(k.trim().to_string(), val).is_some() {
+            bail!("fault clause `{clause}`: duplicate key `{}`", k.trim());
+        }
+    }
+    Ok(kv)
+}
+
+fn need(kv: &std::collections::BTreeMap<String, u64>, key: &str, clause: &str) -> Result<u64> {
+    kv.get(key)
+        .copied()
+        .with_context(|| format!("fault clause `{clause}` is missing `{key}=`"))
+}
+
+fn only(
+    kv: &std::collections::BTreeMap<String, u64>,
+    keys: &[&str],
+    clause: &str,
+) -> Result<()> {
+    for k in kv.keys() {
+        if !keys.contains(&k.as_str()) {
+            bail!("fault clause `{clause}`: unknown key `{k}` (expected {keys:?})");
+        }
+    }
+    Ok(())
+}
+
+impl FaultPlan {
+    /// Parse the `--fault` string. Strict: unknown clauses, unknown or
+    /// missing keys, and duplicate clauses are errors — a silently
+    /// ignored fault would make a drill vacuously pass.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in s.split(';').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            let (name, body) = clause
+                .split_once(':')
+                .with_context(|| format!("fault clause `{clause}` is missing `kind:`"))?;
+            let kv = parse_kv(body, clause)?;
+            match name.trim() {
+                "kill" => {
+                    only(&kv, &["rank", "step"], clause)?;
+                    anyhow::ensure!(plan.kill.is_none(), "duplicate `kill` clause");
+                    plan.kill = Some(KillSpec {
+                        rank: need(&kv, "rank", clause)? as usize,
+                        step: need(&kv, "step", clause)? as usize,
+                    });
+                }
+                "drop" => {
+                    only(&kv, &["rank", "frame"], clause)?;
+                    anyhow::ensure!(plan.drop_frame.is_none(), "duplicate `drop` clause");
+                    plan.drop_frame = Some(DropSpec {
+                        rank: need(&kv, "rank", clause)? as usize,
+                        frame: need(&kv, "frame", clause)?,
+                    });
+                }
+                "delay" => {
+                    only(&kv, &["rank", "frame", "ms"], clause)?;
+                    anyhow::ensure!(plan.delay.is_none(), "duplicate `delay` clause");
+                    plan.delay = Some(DelaySpec {
+                        rank: need(&kv, "rank", clause)? as usize,
+                        frame: need(&kv, "frame", clause)?,
+                        ms: need(&kv, "ms", clause)?,
+                    });
+                }
+                "torn" => {
+                    only(&kv, &["rank", "seq"], clause)?;
+                    anyhow::ensure!(plan.torn.is_none(), "duplicate `torn` clause");
+                    plan.torn = Some(TornSpec {
+                        rank: need(&kv, "rank", clause)? as usize,
+                        seq: need(&kv, "seq", clause)?,
+                    });
+                }
+                other => bail!("unknown fault kind `{other}` in `{clause}`"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Canonical string form (fixed clause order); `parse(encode(p)) == p`.
+    pub fn encode(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(k) = &self.kill {
+            parts.push(format!("kill:rank={},step={}", k.rank, k.step));
+        }
+        if let Some(d) = &self.drop_frame {
+            parts.push(format!("drop:rank={},frame={}", d.rank, d.frame));
+        }
+        if let Some(d) = &self.delay {
+            parts.push(format!("delay:rank={},frame={},ms={}", d.rank, d.frame, d.ms));
+        }
+        if let Some(t) = &self.torn {
+            parts.push(format!("torn:rank={},seq={}", t.rank, t.seq));
+        }
+        parts.join(";")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_plan_roundtrips() {
+        let s = "kill:rank=1,step=7;drop:rank=0,frame=3;delay:rank=0,frame=5,ms=20;torn:rank=0,seq=2";
+        let p = FaultPlan::parse(s).unwrap();
+        assert_eq!(p.kill, Some(KillSpec { rank: 1, step: 7 }));
+        assert_eq!(p.drop_frame, Some(DropSpec { rank: 0, frame: 3 }));
+        assert_eq!(
+            p.delay,
+            Some(DelaySpec {
+                rank: 0,
+                frame: 5,
+                ms: 20
+            })
+        );
+        assert_eq!(p.torn, Some(TornSpec { rank: 0, seq: 2 }));
+        assert_eq!(p.encode(), s, "canonical order re-encodes verbatim");
+        assert_eq!(FaultPlan::parse(&p.encode()).unwrap(), p);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn single_clause_and_whitespace() {
+        let p = FaultPlan::parse(" kill:rank=0,step=12 ; ").unwrap();
+        assert_eq!(p.kill, Some(KillSpec { rank: 0, step: 12 }));
+        assert!(p.drop_frame.is_none() && p.delay.is_none() && p.torn.is_none());
+        // Shuffled clause order parses; encode canonicalizes it.
+        let q = FaultPlan::parse("torn:rank=1,seq=3;kill:rank=0,step=1").unwrap();
+        assert_eq!(q.encode(), "kill:rank=0,step=1;torn:rank=1,seq=3");
+    }
+
+    #[test]
+    fn empty_plan() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.encode(), "");
+        assert_eq!(FaultPlan::parse(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            "boom:rank=0",                     // unknown kind
+            "kill:rank=0",                     // missing step
+            "kill:rank=0,step=1,extra=2",      // unknown key
+            "kill:rank=0,rank=1,step=2",       // duplicate key
+            "kill:rank=0,step=1;kill:rank=1,step=2", // duplicate clause
+            "kill:rank=x,step=1",              // non-integer
+            "kill=rank0",                      // no colon
+            "delay:rank=0,frame=1",            // delay missing ms
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! The fault-tolerant multi-process runtime.
+//!
+//! Everything below this module turns the single-process simulator into
+//! N real worker *processes* training together and surviving crashes:
+//!
+//! * [`wire`] — length-prefixed little-endian codecs: peer frames
+//!   carrying [`crate::collective::Message`] payloads, the coordinator
+//!   control protocol, and the per-connection hello handshake.
+//! * [`transport`] — [`SocketTransport`], the Unix-domain-socket mesh
+//!   behind [`crate::collective::RemoteTransport`]: one stream per
+//!   ordered rank pair, per-destination writer threads (sends never
+//!   block on the peer), per-source reader threads demultiplexing into
+//!   per-lane FIFOs, EOF poisoning so a dead peer fails receives
+//!   loudly.
+//! * [`coord`] — the [`Coordinator`] (registration, seeded shard
+//!   assignment via the `Welcome` seed, the interval barrier) and the
+//!   pure [`HeartbeatTracker`] failure detector.
+//! * [`fault`] — [`FaultPlan`], the deterministic crash/drop/delay/
+//!   torn-write injection the drills are built on.
+//! * [`worker`] — the `dist-worker` process body: coordinator client,
+//!   heartbeats, fault hooks, bit-exact JSON reports.
+//! * [`supervisor`] — [`run_dist`]: spawn the gang, watch exits and
+//!   heartbeats, and on failure recover by gang restart from the
+//!   newest CRC-durable delta ([`scan_recovery_point`]).
+//!
+//! The invariant the whole stack defends: a run that crashes and
+//! recovers produces **bit-identical** final losses and per-group
+//! embedding checksums to an uninterrupted run (`tests/dist_drill.rs`
+//! drives kill/torn drills through the real binary to assert it).
+
+pub mod coord;
+pub mod fault;
+pub mod supervisor;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use coord::{BeatState, CoordConfig, CoordEvent, Coordinator, HeartbeatTracker};
+pub use fault::FaultPlan;
+pub use supervisor::{
+    dist_report_to_json, run_dist, scan_recovery_point, DistOptions, DistReport,
+};
+pub use transport::SocketTransport;
+pub use worker::{report_to_json, run_worker, WorkerOptions};

@@ -1,0 +1,530 @@
+//! The supervisor: spawn N worker processes, watch them, and recover.
+//!
+//! `mtgrboost train-dist` lands in [`run_dist`]. The supervisor owns
+//! the [`Coordinator`] and the worker children; the workers own the
+//! training. Failure handling is a **gang restart** (the torchelastic
+//! model): collectives entangle every rank with every other, so a
+//! single dead rank makes the survivors' state unrecoverable in place —
+//! on any nonzero child exit *or* heartbeat-timeout event, the
+//! supervisor pauses the barrier, kills the whole gang, finds the
+//! newest fully-durable delta, and respawns everyone from it under a
+//! bumped incarnation (stale sockets and messages from half-dead
+//! workers are refused by incarnation tag).
+//!
+//! The recovery point is [`scan_recovery_point`]: the largest `R` such
+//! that deltas `1..=R` all parse, match the world size, and pass the
+//! CRC32 footer check on every rank x group shard *and* the dense
+//! state. Anything newer — including a torn shard from a crash inside
+//! a publish — is deleted, so a recovered worker replays a clean
+//! prefix. No full base checkpoint is needed: dist mode disallows
+//! TTL/admission (see `TrainerOptions::validate`), so deltas carry
+//! full rows (with Adam state) and every resident row appears in some
+//! delta `<= R`.
+//!
+//! Everything observable lands in the merged [`DistReport`]: heartbeat
+//! misses, transport retries, gang recoveries, and how many steps were
+//! replayed because they fell after the newest durable delta.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::delta::{
+    delta_dir, load_delta_group_dims, load_delta_meta, parse_canonical_seq,
+    sparse_delta_group_path,
+};
+use crate::checkpoint::verify_sealed;
+use crate::train::{DistStats, TrainerOptions};
+use crate::util::json::Json;
+
+use super::coord::{CoordConfig, CoordEvent, Coordinator};
+use super::fault::FaultPlan;
+use super::worker::{coord_sock, hex64, parse_hex64, report_path};
+
+/// Supervisor-side knobs (everything the workers don't parse from the
+/// shared training-option tail).
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// Scratch dir for sockets and per-rank reports.
+    pub run_dir: PathBuf,
+    /// Worker beat cadence.
+    pub heartbeat_ms: u64,
+    /// Silence that declares a worker dead.
+    pub heartbeat_timeout_ms: u64,
+    /// Gang restarts to attempt before giving up.
+    pub max_recoveries: usize,
+    /// Fault plan injected into incarnation 0's workers.
+    pub fault: Option<FaultPlan>,
+    /// Binary to spawn (`current_exe` in production; tests point at the
+    /// built binary).
+    pub worker_bin: PathBuf,
+    /// The training-option argv tail forwarded verbatim to every worker
+    /// (per-rank flags are appended after it and win on conflict).
+    pub worker_args: Vec<String>,
+}
+
+/// One step's loss bits (from rank 0's report).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepBits {
+    pub step: usize,
+    pub loss_ctr_bits: u64,
+    pub loss_ctcvr_bits: u64,
+}
+
+/// The merged outcome of a distributed run: the drill-comparable slice
+/// of every rank's report plus the failure/recovery accounting.
+#[derive(Clone, Debug)]
+pub struct DistReport {
+    pub world: usize,
+    /// Rank 0's per-step loss bits for the final incarnation (a
+    /// recovered run's records start at its resume step).
+    pub steps: Vec<StepBits>,
+    pub final_loss_ctr_bits: u64,
+    pub final_loss_ctcvr_bits: u64,
+    /// Element-wise wrapping sums over the rank shards — directly
+    /// comparable to a single-process report's `group_checksums`.
+    pub group_checksums: Vec<u64>,
+    pub group_rows: Vec<usize>,
+    pub table_rows: usize,
+    pub online_synced_rows: u64,
+    pub dist: DistStats,
+}
+
+/// Largest `R` with deltas `1..=R` fully durable for `world`, deleting
+/// every newer (necessarily torn or unreachable) delta dir. `R == 0`
+/// means restart from scratch.
+pub fn scan_recovery_point(sync_dir: &Path, world: usize) -> Result<u64> {
+    let mut newest_valid = 0u64;
+    loop {
+        let seq = newest_valid + 1;
+        if !delta_dir(sync_dir, seq).is_dir() {
+            break;
+        }
+        if delta_is_durable(sync_dir, seq, world) {
+            newest_valid = seq;
+        } else {
+            break;
+        }
+    }
+    for entry in std::fs::read_dir(sync_dir)
+        .with_context(|| format!("read sync dir {}", sync_dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        // Canonical delta dirs past the recovery point are dead weight
+        // (a torn delta, or a valid one stranded behind a gap); a
+        // recovered run must never see them. Non-canonical names are
+        // left for the loaders' own validation to reject.
+        if let Ok(Some(seq)) = parse_canonical_seq("delta_", &name) {
+            if seq > newest_valid {
+                std::fs::remove_dir_all(entry.path())
+                    .with_context(|| format!("drop undurable {name}"))?;
+            }
+        }
+    }
+    Ok(newest_valid)
+}
+
+/// Full durability check for one delta: meta parses, world matches,
+/// every rank x group shard and the dense state pass their CRC32
+/// footers. Any failure means "not durable" — the distinction between
+/// torn, corrupt and missing doesn't change the recovery decision.
+fn delta_is_durable(sync_dir: &Path, seq: u64, world: usize) -> bool {
+    let Ok(meta) = load_delta_meta(sync_dir, seq) else {
+        return false;
+    };
+    if meta.world != world {
+        return false;
+    }
+    let Ok(dims) = load_delta_group_dims(sync_dir, &meta) else {
+        return false;
+    };
+    for rank in 0..world {
+        for group in 0..dims.len() {
+            if verify_sealed(&sparse_delta_group_path(sync_dir, seq, rank, world, group))
+                .is_err()
+            {
+                return false;
+            }
+        }
+    }
+    verify_sealed(&delta_dir(sync_dir, seq).join("dense.bin")).is_ok()
+}
+
+fn spawn_workers(
+    topts: &TrainerOptions,
+    dopts: &DistOptions,
+    incarnation: u32,
+) -> Result<Vec<Child>> {
+    let world = topts.cluster.world;
+    (0..world)
+        .map(|rank| {
+            // Stale reports must never satisfy the merge step.
+            let _ = std::fs::remove_file(report_path(&dopts.run_dir, rank));
+            let mut cmd = Command::new(&dopts.worker_bin);
+            cmd.arg("dist-worker")
+                .args(&dopts.worker_args)
+                // Appended per-rank flags override the tail (the CLI
+                // parser keeps the last occurrence of a key).
+                .arg("--world")
+                .arg(world.to_string())
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--incarnation")
+                .arg(incarnation.to_string())
+                .arg("--run-dir")
+                .arg(&dopts.run_dir)
+                .arg("--heartbeat-ms")
+                .arg(dopts.heartbeat_ms.to_string())
+                .stdin(Stdio::null());
+            // Faults arm only the first incarnation: drills assert the
+            // *recovered* run converges, so it must run clean.
+            if incarnation == 0 {
+                if let Some(plan) = &dopts.fault {
+                    if !plan.is_empty() {
+                        cmd.arg("--fault").arg(plan.encode());
+                    }
+                }
+            }
+            cmd.spawn()
+                .with_context(|| format!("spawn worker rank {rank}"))
+        })
+        .collect()
+}
+
+/// Watch one incarnation: `Ok(true)` when every child exited cleanly,
+/// `Ok(false)` on the first nonzero exit or heartbeat-death event
+/// (children may still be running; the caller kills them).
+fn watch_gang(children: &mut [Child], coord: &Coordinator) -> Result<bool> {
+    loop {
+        let mut all_done = true;
+        for child in children.iter_mut() {
+            match child.try_wait().context("poll worker")? {
+                Some(status) if !status.success() => {
+                    eprintln!("[dist] worker exited with {status}");
+                    return Ok(false);
+                }
+                Some(_) => {}
+                None => all_done = false,
+            }
+        }
+        if let Some(CoordEvent::Dead { rank }) = coord.try_event() {
+            eprintln!("[dist] rank {rank} heartbeat-timed out");
+            return Ok(false);
+        }
+        if all_done {
+            return Ok(true);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Run a multi-process training job to completion, recovering from
+/// worker deaths, and merge the per-rank reports.
+pub fn run_dist(topts: &TrainerOptions, dopts: &DistOptions) -> Result<DistReport> {
+    // Validate what the *workers* will run (dist set), so a config the
+    // dist rules reject (TTL, admission, GAUC) fails here instead of
+    // crash-looping every worker through max_recoveries.
+    let mut probe = topts.clone();
+    probe.dist = Some(crate::train::DistTrainOptions::default());
+    probe.validate()?;
+    let world = topts.cluster.world;
+    let ocfg = topts
+        .online
+        .as_ref()
+        .context("train-dist requires --mode online")?;
+    let sync_dir = ocfg
+        .sync_dir
+        .clone()
+        .context("train-dist requires --sync-dir")?;
+    let sync_interval = ocfg.sync_interval as u64;
+    std::fs::create_dir_all(&dopts.run_dir)?;
+
+    let mut coord = Coordinator::start(
+        &coord_sock(&dopts.run_dir),
+        CoordConfig {
+            world,
+            heartbeat_ms: dopts.heartbeat_ms,
+            timeout_ms: dopts.heartbeat_timeout_ms,
+            seed: topts.generator.seed,
+        },
+    )?;
+
+    let mut incarnation: u32 = 0;
+    let mut resume_seq: u64 = 0;
+    let mut recoveries = 0u64;
+    let mut replayed_steps = 0u64;
+    loop {
+        coord.reset(resume_seq, incarnation);
+        let mut children = spawn_workers(topts, dopts, incarnation)?;
+        let clean = watch_gang(&mut children, &coord)?;
+        if clean {
+            break;
+        }
+        // Gang restart: pause the barrier so in-flight Readys from
+        // survivors can't release anything, take everyone down, then
+        // rewind to the newest durable delta.
+        coord.pause();
+        for child in &mut children {
+            let _ = child.kill();
+        }
+        for child in &mut children {
+            let _ = child.wait();
+        }
+        anyhow::ensure!(
+            (recoveries as usize) < dopts.max_recoveries,
+            "giving up after {recoveries} gang recoveries (max {})",
+            dopts.max_recoveries
+        );
+        recoveries += 1;
+        let point = scan_recovery_point(&sync_dir, world)?;
+        replayed_steps += coord
+            .max_step()
+            .saturating_sub(point * sync_interval);
+        eprintln!(
+            "[dist] recovery {recoveries}: resuming from delta {point} \
+             (incarnation {})",
+            incarnation + 1
+        );
+        resume_seq = point;
+        incarnation += 1;
+    }
+
+    let stats = DistStats {
+        heartbeat_misses: coord.misses(),
+        transport_retries: 0, // summed from rank reports below
+        recoveries,
+        replayed_steps,
+    };
+    coord.shutdown();
+    merge_reports(&dopts.run_dir, world, stats)
+}
+
+/// Fold the per-rank `report_rank<r>.json` files into one [`DistReport`].
+fn merge_reports(run_dir: &Path, world: usize, mut stats: DistStats) -> Result<DistReport> {
+    let mut steps = Vec::new();
+    let mut final_ctr = 0u64;
+    let mut final_ctcvr = 0u64;
+    let mut group_checksums: Vec<u64> = Vec::new();
+    let mut group_rows: Vec<usize> = Vec::new();
+    let mut table_rows = 0usize;
+    let mut online_synced_rows = 0u64;
+    for rank in 0..world {
+        let path = report_path(run_dir, rank);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read worker report {}", path.display()))?;
+        let j = Json::parse(&text).context("parse worker report")?;
+        let checksums: Vec<u64> = j
+            .get("group_checksums")
+            .as_arr()
+            .context("report missing group_checksums")?
+            .iter()
+            .map(|c| parse_hex64(c.as_str().context("checksum not a string")?))
+            .collect::<Result<_>>()?;
+        if group_checksums.is_empty() {
+            group_checksums = vec![0; checksums.len()];
+            group_rows = vec![0; checksums.len()];
+        }
+        for (g, c) in checksums.into_iter().enumerate() {
+            group_checksums[g] = group_checksums[g].wrapping_add(c);
+        }
+        let rows = j
+            .get("group_rows")
+            .as_arr()
+            .context("report missing group_rows")?;
+        for (g, r) in rows.iter().enumerate() {
+            group_rows[g] += r.expect_usize("group_rows entry")?;
+        }
+        table_rows += j.expect_usize("table_rows")?;
+        stats.transport_retries += j.expect_usize("transport_retries")? as u64;
+        if rank == 0 {
+            // Step records and the online totals are identical on every
+            // rank (losses are global means, the counters are gathered
+            // at each boundary); take rank 0's like the single-process
+            // merge does.
+            final_ctr = parse_hex64(j.expect_str("final_loss_ctr_bits")?)?;
+            final_ctcvr = parse_hex64(j.expect_str("final_loss_ctcvr_bits")?)?;
+            online_synced_rows = j.expect_usize("online_synced_rows")? as u64;
+            for s in j.get("steps").as_arr().context("report missing steps")? {
+                steps.push(StepBits {
+                    step: s.expect_usize("step")?,
+                    loss_ctr_bits: parse_hex64(s.expect_str("loss_ctr_bits")?)?,
+                    loss_ctcvr_bits: parse_hex64(s.expect_str("loss_ctcvr_bits")?)?,
+                });
+            }
+        }
+    }
+    Ok(DistReport {
+        world,
+        steps,
+        final_loss_ctr_bits: final_ctr,
+        final_loss_ctcvr_bits: final_ctcvr,
+        group_checksums,
+        group_rows,
+        table_rows,
+        online_synced_rows,
+        dist: stats,
+    })
+}
+
+/// The merged report as JSON (`train-dist --report-json`), field names
+/// matching the worker/reference reports plus the `dist` accounting.
+pub fn dist_report_to_json(r: &DistReport) -> Json {
+    let mut j = Json::obj();
+    j.set("world", r.world.into());
+    let steps: Vec<Json> = r
+        .steps
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("step", s.step.into());
+            o.set("loss_ctr_bits", hex64(s.loss_ctr_bits).into());
+            o.set("loss_ctcvr_bits", hex64(s.loss_ctcvr_bits).into());
+            o
+        })
+        .collect();
+    j.set("steps", Json::Arr(steps));
+    j.set("final_loss_ctr_bits", hex64(r.final_loss_ctr_bits).into());
+    j.set("final_loss_ctcvr_bits", hex64(r.final_loss_ctcvr_bits).into());
+    j.set(
+        "group_checksums",
+        Json::Arr(r.group_checksums.iter().map(|&c| hex64(c).into()).collect()),
+    );
+    j.set(
+        "group_rows",
+        Json::Arr(r.group_rows.iter().map(|&n| n.into()).collect()),
+    );
+    j.set("table_rows", r.table_rows.into());
+    j.set("online_synced_rows", r.online_synced_rows.into());
+    let mut d = Json::obj();
+    d.set("heartbeat_misses", d_u64(r.dist.heartbeat_misses));
+    d.set("transport_retries", d_u64(r.dist.transport_retries));
+    d.set("recoveries", d_u64(r.dist.recoveries));
+    d.set("replayed_steps", d_u64(r.dist.replayed_steps));
+    j.set("dist", d);
+    j
+}
+
+fn d_u64(x: u64) -> Json {
+    // Counters are far below 2^53; plain numbers read better than hex.
+    (x as usize).into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mtgr_sup_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn scan_of_empty_dir_is_zero() {
+        let d = tmp("empty");
+        assert_eq!(scan_recovery_point(&d, 2).unwrap(), 0);
+    }
+
+    #[test]
+    fn scan_stops_at_torn_delta_and_prunes_it() {
+        use crate::checkpoint::delta::{save_delta_groups, DeltaMeta, GroupDelta};
+        use crate::checkpoint::SparseRow;
+        use crate::optim::adam::{AdamParams, DenseAdam};
+
+        let d = tmp("torn");
+        let world = 2;
+        let dim = 4;
+        let params = [0.5f32; 3];
+        let adam = DenseAdam::new(params.len(), AdamParams::default());
+        // Write three tiny but real deltas via the production writer.
+        for seq in 1..=3u64 {
+            let meta = DeltaMeta {
+                seq,
+                world,
+                step: seq * 5,
+                base_step: (seq - 1) * 5,
+                model: "tiny".to_string(),
+                dim,
+                param_count: params.len(),
+            };
+            for rank in 0..world {
+                let rows = vec![SparseRow {
+                    id: seq * 10 + rank as u64,
+                    row: vec![0.25; dim],
+                    m: vec![0.0; dim],
+                    v: vec![0.0; dim],
+                    t: seq,
+                }];
+                let dense = (rank == 0).then_some((&params[..], &adam));
+                save_delta_groups(
+                    &d,
+                    &meta,
+                    rank,
+                    dense,
+                    &[GroupDelta {
+                        dim,
+                        upserts: &rows,
+                        removed: &[],
+                    }],
+                )
+                .unwrap();
+            }
+        }
+        assert_eq!(scan_recovery_point(&d, world).unwrap(), 3, "all durable");
+
+        // Tear delta 3's rank-1 shard mid-file: scan must stop at 2 and
+        // delete delta 3 entirely.
+        let shard = sparse_delta_group_path(&d, 3, 1, world, 0);
+        let len = std::fs::metadata(&shard).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&shard).unwrap();
+        f.set_len(len / 2).unwrap();
+        drop(f);
+        assert_eq!(scan_recovery_point(&d, world).unwrap(), 2);
+        assert!(!delta_dir(&d, 3).exists(), "torn delta pruned");
+        // Idempotent.
+        assert_eq!(scan_recovery_point(&d, world).unwrap(), 2);
+
+        // A world mismatch also stops the scan.
+        assert_eq!(scan_recovery_point(&d, 4).unwrap(), 0);
+    }
+
+    #[test]
+    fn dist_report_json_roundtrips_bits() {
+        let r = DistReport {
+            world: 2,
+            steps: vec![StepBits {
+                step: 3,
+                loss_ctr_bits: 0x3FE6_2E42_FEFA_39EF,
+                loss_ctcvr_bits: u64::MAX,
+            }],
+            final_loss_ctr_bits: 1,
+            final_loss_ctcvr_bits: 0x8000_0000_0000_0000,
+            group_checksums: vec![u64::MAX, 0xDEAD],
+            group_rows: vec![10, 2],
+            table_rows: 12,
+            online_synced_rows: 99,
+            dist: DistStats {
+                heartbeat_misses: 4,
+                transport_retries: 2,
+                recoveries: 1,
+                replayed_steps: 7,
+            },
+        };
+        let j = dist_report_to_json(&r);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let cs = parsed.get("group_checksums").as_arr().unwrap();
+        assert_eq!(
+            parse_hex64(cs[0].as_str().unwrap()).unwrap(),
+            u64::MAX,
+            "u64::MAX survives JSON exactly (a plain number would round)"
+        );
+        let d = parsed.get("dist");
+        assert_eq!(d.expect_usize("recoveries").unwrap(), 1);
+        assert_eq!(d.expect_usize("replayed_steps").unwrap(), 7);
+    }
+}

@@ -1,0 +1,445 @@
+//! Unix-domain-socket mesh implementing [`RemoteTransport`].
+//!
+//! Topology: every rank binds `peer_<rank>.sock` in the shared socket
+//! dir and runs an acceptor; for each ordered pair `(src, dst)` the
+//! *source* connects to the destination's socket, so a full mesh is
+//! `world * (world - 1)` streams, each carrying all lanes (the frame
+//! header demultiplexes). Connections open with the
+//! [`wire::write_hello`] handshake so the acceptor knows the source
+//! rank and can refuse strays from a previous incarnation.
+//!
+//! Deadlock freedom: [`RemoteTransport::send`] must never wait on the
+//! peer (the collectives post all sends before any receive, but two
+//! ranks writing large frames head-on would still deadlock on raw
+//! sockets). Each destination therefore gets a dedicated writer thread
+//! fed by an unbounded channel — `send` enqueues and returns. Each
+//! source gets a dedicated reader thread that demultiplexes frames into
+//! per-`(lane, src)` FIFO queues under one mutex + condvar.
+//!
+//! Failure semantics: a reader hitting EOF or a corrupt frame poisons
+//! *every* lane of its source, so any blocked `recv` fails loudly
+//! ("peer disconnected") instead of hanging; the communicator panics,
+//! the worker dies nonzero, and the supervisor's recovery path takes
+//! over. A `recv` that sees neither data nor poison for 120 s bails —
+//! a wedged-but-alive peer must not hang CI forever.
+//!
+//! Fault injection ([`FaultPlan`]) hooks the send path: `drop` makes
+//! one frame fail transiently (recovered by [`retry`] and counted in
+//! `retries()`), `delay` sleeps before one frame. Neither changes the
+//! bytes that ultimately flow, so drills stay bit-identical.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::collective::comm::{Message, RemoteTransport, LANES};
+use crate::util::retry::{retry, RetryPolicy};
+
+use super::fault::FaultPlan;
+use super::wire;
+
+/// Lanes provisioned per ordered pair: the posted lanes plus the
+/// pseudo-lane the blocking reduce/broadcast collectives use.
+pub const TRANSPORT_LANES: usize = LANES + 1;
+
+/// How long a `recv` waits before declaring the run wedged.
+const RECV_STALL: Duration = Duration::from_secs(120);
+
+/// Socket path for `rank`'s acceptor. Callers should keep `dir` short:
+/// `sockaddr_un` caps UDS paths at ~108 bytes.
+pub fn sock_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("peer_{rank}.sock"))
+}
+
+/// Inbound demultiplexer: one FIFO per `(lane, src)`, poisoned wholesale
+/// when the source's stream dies.
+struct Inbox {
+    world: usize,
+    /// Flattened `[lane][src]`; `Err(())` is the poison marker.
+    slots: Mutex<Vec<VecDeque<Result<Message, ()>>>>,
+    cv: Condvar,
+}
+
+impl Inbox {
+    fn new(world: usize) -> Self {
+        Inbox {
+            world,
+            slots: Mutex::new(
+                (0..TRANSPORT_LANES * world)
+                    .map(|_| VecDeque::new())
+                    .collect(),
+            ),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, lane: usize, src: usize, msg: Message) {
+        let mut slots = self.slots.lock().unwrap();
+        slots[lane * self.world + src].push_back(Ok(msg));
+        self.cv.notify_all();
+    }
+
+    /// Mark `src` lost on every lane so all pending and future receives
+    /// from it fail fast.
+    fn poison(&self, src: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        for lane in 0..TRANSPORT_LANES {
+            slots[lane * self.world + src].push_back(Err(()));
+        }
+        self.cv.notify_all();
+    }
+
+    fn recv(&self, lane: usize, src: usize) -> Result<Message> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            match slots[lane * self.world + src].pop_front() {
+                Some(Ok(msg)) => return Ok(msg),
+                Some(Err(())) => {
+                    // Keep the queue poisoned for any later receive.
+                    slots[lane * self.world + src].push_front(Err(()));
+                    anyhow::bail!("peer rank {src} disconnected mid-run (lane {lane})");
+                }
+                None => {
+                    let (guard, wait) = self.cv.wait_timeout(slots, RECV_STALL).unwrap();
+                    slots = guard;
+                    if wait.timed_out() && slots[lane * self.world + src].is_empty() {
+                        anyhow::bail!(
+                            "recv from rank {src} on lane {lane} stalled for {}s — \
+                             peer wedged or collective schedule mismatch",
+                            RECV_STALL.as_secs()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The UDS mesh transport for one rank. Construct with [`connect`],
+/// then hand to [`crate::collective::CommHandle::from_remote`].
+///
+/// [`connect`]: SocketTransport::connect
+pub struct SocketTransport {
+    rank: usize,
+    world: usize,
+    inbox: Arc<Inbox>,
+    /// Per-destination writer-thread feeds (`None` at `self.rank`).
+    senders: Vec<Option<Sender<(u8, Message)>>>,
+    /// Loopback queues per lane: self-sends never touch the wire.
+    self_q: Vec<VecDeque<Message>>,
+    /// Outbound remote frames sent so far (fault frame indices).
+    frames: u64,
+    /// Frame index that must fail transiently once (from the plan).
+    drop_at: Option<u64>,
+    /// `(frame index, ms)` to sleep before sending (from the plan).
+    delay_at: Option<(u64, u64)>,
+    retries: u64,
+}
+
+impl SocketTransport {
+    /// Join the mesh: bind our socket, accept `world - 1` valid inbound
+    /// streams in the background, and connect (with deterministic
+    /// retry/backoff — peers may still be binding) to every other rank.
+    /// `fault` is this rank's slice of the drill plan; clauses aimed at
+    /// other ranks are ignored here.
+    pub fn connect(
+        dir: &Path,
+        rank: usize,
+        world: usize,
+        incarnation: u32,
+        fault: Option<&FaultPlan>,
+    ) -> Result<SocketTransport> {
+        anyhow::ensure!(world >= 1 && rank < world, "bad rank {rank} of {world}");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create socket dir {}", dir.display()))?;
+        let my_path = sock_path(dir, rank);
+        // Unlink any stale socket from a previous incarnation before
+        // binding, or bind fails with AddrInUse.
+        let _ = std::fs::remove_file(&my_path);
+        let listener = UnixListener::bind(&my_path)
+            .with_context(|| format!("bind {}", my_path.display()))?;
+
+        let inbox = Arc::new(Inbox::new(world));
+        if world > 1 {
+            let acceptor_inbox = Arc::clone(&inbox);
+            let expected = world - 1;
+            std::thread::spawn(move || {
+                let mut accepted = 0usize;
+                while accepted < expected {
+                    let Ok((mut stream, _)) = listener.accept() else {
+                        return;
+                    };
+                    // A peer from a previous incarnation (or garbage)
+                    // is dropped; keep accepting until the real mesh
+                    // is complete.
+                    let Ok((src, inc)) = wire::read_hello(&mut stream) else {
+                        continue;
+                    };
+                    if inc != incarnation || src as usize >= world {
+                        continue;
+                    }
+                    accepted += 1;
+                    let reader_inbox = Arc::clone(&acceptor_inbox);
+                    let src = src as usize;
+                    std::thread::spawn(move || reader_main(stream, src, reader_inbox));
+                }
+            });
+        }
+
+        let mut senders: Vec<Option<Sender<(u8, Message)>>> = vec![None; world];
+        let mut retries = 0u64;
+        for dst in 0..world {
+            if dst == rank {
+                continue;
+            }
+            let path = sock_path(dir, dst);
+            // Generous budget: peers start concurrently and may take a
+            // while to bind under load. Seed mixes the pair so retriers
+            // desynchronize deterministically.
+            let policy = RetryPolicy {
+                max_attempts: 400,
+                base_delay_ms: 5,
+                max_delay_ms: 100,
+                seed: 0x5EED ^ ((rank as u64) << 16) ^ dst as u64,
+            };
+            let (mut stream, r) = retry(
+                &policy,
+                &format!("rank {rank} connect to rank {dst}"),
+                |_| UnixStream::connect(&path),
+            )?;
+            retries += r;
+            wire::write_hello(&mut stream, rank as u32, incarnation)?;
+            let (tx, rx) = std::sync::mpsc::channel::<(u8, Message)>();
+            std::thread::spawn(move || {
+                let mut w = BufWriter::new(stream);
+                for (lane, msg) in rx {
+                    if wire::write_frame(&mut w, lane, &msg).is_err() || w.flush().is_err() {
+                        return; // peer gone; its supervisor handles it
+                    }
+                }
+            });
+            senders[dst] = Some(tx);
+        }
+
+        let mine = |r: usize| r == rank;
+        let (drop_at, delay_at) = match fault {
+            Some(plan) => (
+                plan.drop_frame.filter(|d| mine(d.rank)).map(|d| d.frame),
+                plan.delay.filter(|d| mine(d.rank)).map(|d| (d.frame, d.ms)),
+            ),
+            None => (None, None),
+        };
+
+        Ok(SocketTransport {
+            rank,
+            world,
+            inbox,
+            senders,
+            self_q: (0..TRANSPORT_LANES).map(|_| VecDeque::new()).collect(),
+            frames: 0,
+            drop_at,
+            delay_at,
+            retries,
+        })
+    }
+}
+
+fn reader_main(stream: UnixStream, src: usize, inbox: Arc<Inbox>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok((lane, msg)) if (lane as usize) < TRANSPORT_LANES => {
+                inbox.push(lane as usize, src, msg);
+            }
+            _ => {
+                inbox.poison(src);
+                return;
+            }
+        }
+    }
+}
+
+impl RemoteTransport for SocketTransport {
+    fn send(&mut self, lane: usize, dst: usize, msg: Message) -> Result<()> {
+        anyhow::ensure!(
+            lane < TRANSPORT_LANES && dst < self.world,
+            "send lane {lane} dst {dst} out of range"
+        );
+        if dst == self.rank {
+            self.self_q[lane].push_back(msg);
+            return Ok(());
+        }
+        let frame = self.frames;
+        self.frames += 1;
+        if let Some((at, ms)) = self.delay_at {
+            if at == frame {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        let inject_drop = self.drop_at == Some(frame);
+        let sender = self.senders[dst]
+            .as_ref()
+            .expect("sender exists for every remote dst");
+        let (_, r) = retry(
+            &RetryPolicy::default(),
+            &format!("send frame {frame} to rank {dst}"),
+            |attempt| {
+                if inject_drop && attempt == 0 {
+                    return Err(format!("injected transient drop of frame {frame}"));
+                }
+                sender
+                    .send((lane as u8, msg.clone()))
+                    .map_err(|_| format!("writer thread for rank {dst} is gone"))
+            },
+        )?;
+        self.retries += r;
+        Ok(())
+    }
+
+    fn recv(&mut self, lane: usize, src: usize) -> Result<Message> {
+        anyhow::ensure!(
+            lane < TRANSPORT_LANES && src < self.world,
+            "recv lane {lane} src {src} out of range"
+        );
+        if src == self.rank {
+            return self.self_q[lane]
+                .pop_front()
+                .context("self-recv on an empty lane (collective schedule bug)");
+        }
+        self.inbox.recv(lane, src)
+    }
+
+    fn retries(&self) -> u64 {
+        self.retries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::CommHandle;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mtgr_tp_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Run `f` on `world` in-process "ranks", each over its own socket
+    /// transport, and return the per-rank results.
+    fn run_mesh<T: Send + 'static>(
+        dir: &Path,
+        world: usize,
+        fault: Option<FaultPlan>,
+        f: impl Fn(CommHandle) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let dir = dir.to_path_buf();
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || {
+                    let tp =
+                        SocketTransport::connect(&dir, rank, world, 0, fault.as_ref()).unwrap();
+                    f(CommHandle::from_remote(rank, world, Box::new(tp)))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn world3_collectives_over_sockets() {
+        let dir = tmp_dir("w3");
+        let out = run_mesh(&dir, 3, None, |mut comm| {
+            let rank = comm.rank;
+            // all_gather exercises LANE_DEFAULT all-to-all.
+            let gathered = comm.all_gather_u64(100 + rank as u64);
+            // all_reduce exercises the REDUCE_LANE pseudo-lane.
+            let mut acc = [rank as f32, 1.0];
+            comm.all_reduce_sum(&mut acc);
+            // Directed all-to-all with distinct payloads per pair.
+            let chunks: Vec<Message> = (0..3)
+                .map(|dst| Message::Ids(vec![(rank * 10 + dst) as u64]))
+                .collect();
+            let got = comm.all_to_all(chunks);
+            comm.barrier();
+            (gathered, acc, got)
+        });
+        for (rank, (gathered, acc, got)) in out.into_iter().enumerate() {
+            assert_eq!(gathered, vec![100, 101, 102]);
+            assert_eq!(acc, [3.0, 3.0], "0+1+2 and 1+1+1");
+            for src in 0..3 {
+                assert_eq!(
+                    got[src],
+                    Message::Ids(vec![(src * 10 + rank) as u64]),
+                    "rank {rank} from {src}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drop_and_delay_faults_recover_with_identical_bytes() {
+        let clean_dir = tmp_dir("clean");
+        let clean = run_mesh(&clean_dir, 2, None, |mut comm| {
+            let g = comm.all_gather_u64(comm.rank as u64 + 7);
+            (g, comm.transport_retries())
+        });
+        let plan = FaultPlan::parse("drop:rank=0,frame=0;delay:rank=1,frame=0,ms=15").unwrap();
+        let faulty_dir = tmp_dir("faulty");
+        let faulty = run_mesh(&faulty_dir, 2, Some(plan), |mut comm| {
+            let g = comm.all_gather_u64(comm.rank as u64 + 7);
+            (g, comm.transport_retries())
+        });
+        for rank in 0..2 {
+            assert_eq!(clean[rank].0, faulty[rank].0, "faults change no bytes");
+        }
+        assert_eq!(clean[0].1, 0, "clean run retries nothing");
+        assert!(
+            faulty[0].1 >= 1,
+            "rank 0's dropped frame is retried and counted, got {}",
+            faulty[0].1
+        );
+    }
+
+    #[test]
+    fn world1_is_pure_loopback() {
+        let dir = tmp_dir("w1");
+        let out = run_mesh(&dir, 1, None, |mut comm| {
+            let mut x = [2.5f32];
+            comm.all_reduce_sum(&mut x);
+            (comm.all_gather_u64(9), x[0])
+        });
+        assert_eq!(out[0].0, vec![9]);
+        assert_eq!(out[0].1, 2.5);
+    }
+
+    #[test]
+    fn dead_peer_poisons_receives() {
+        let dir = tmp_dir("dead");
+        // Rank 1 connects and immediately drops its transport; rank 0's
+        // recv must fail loudly instead of hanging.
+        let d0 = dir.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut tp = SocketTransport::connect(&d0, 0, 2, 0, None).unwrap();
+            // Wait for the poison (EOF) to land.
+            tp.recv(0, 1)
+        });
+        let d1 = dir.clone();
+        let h1 = std::thread::spawn(move || {
+            let tp = SocketTransport::connect(&d1, 1, 2, 0, None).unwrap();
+            drop(tp); // writer channels close; streams EOF
+        });
+        h1.join().unwrap();
+        let err = h0.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("disconnected"), "{err}");
+    }
+}

@@ -1,0 +1,349 @@
+//! Byte-level wire formats for the multi-process runtime.
+//!
+//! Two tiny codecs share this file because they share discipline:
+//! everything is length-prefixed little-endian, readers validate before
+//! allocating, and a malformed byte is a loud error — never a silent
+//! resync attempt (a desynchronized stream has no recoverable framing).
+//!
+//! * **Peer frames** carry [`Message`] payloads between worker ranks
+//!   over the UDS mesh: `[lane u8][kind u8][len u32 LE][payload LE]`
+//!   where `len` counts *elements*, not bytes.
+//! * **Coordinator messages** carry the control protocol (register /
+//!   welcome / heartbeat / barrier / bye) as `[tag u8][fields LE]`.
+//! * The **hello** handshake (`[src u32 LE][incarnation u32 LE]`) opens
+//!   every peer connection so the acceptor can demultiplex by source
+//!   rank and drop strays from a previous incarnation.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::comm::Message;
+
+/// Frame payload kinds (the [`Message`] variants).
+pub const KIND_EMPTY: u8 = 0;
+pub const KIND_IDS: u8 = 1;
+pub const KIND_FLOATS: u8 = 2;
+pub const KIND_COUNTS: u8 = 3;
+
+/// Sanity cap on the element count of a single frame. A corrupt or
+/// desynchronized stream must fail fast instead of asking the allocator
+/// for terabytes; 2^28 u64s (2 GiB) is far above any real exchange.
+pub const MAX_FRAME_ELEMS: usize = 1 << 28;
+
+/// Serialize one peer frame onto `w`. Does not flush — the caller's
+/// writer loop flushes once per dequeued frame.
+pub fn write_frame(w: &mut impl Write, lane: u8, msg: &Message) -> Result<()> {
+    let (kind, len) = match msg {
+        Message::Empty => (KIND_EMPTY, 0),
+        Message::Ids(v) => (KIND_IDS, v.len()),
+        Message::Floats(v) => (KIND_FLOATS, v.len()),
+        Message::Counts(v) => (KIND_COUNTS, v.len()),
+    };
+    anyhow::ensure!(
+        len <= MAX_FRAME_ELEMS,
+        "frame of {len} elements exceeds the {MAX_FRAME_ELEMS} cap"
+    );
+    let mut buf = Vec::with_capacity(6 + len * 8);
+    buf.push(lane);
+    buf.push(kind);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    match msg {
+        Message::Empty => {}
+        Message::Ids(v) | Message::Counts(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Message::Floats(v) => {
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    w.write_all(&buf).context("write peer frame")
+}
+
+fn read_u64s(r: &mut impl Read, len: usize) -> Result<Vec<u64>> {
+    let mut bytes = vec![0u8; len * 8];
+    r.read_exact(&mut bytes).context("read frame payload")?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Read one peer frame. Returns `(lane, message)`.
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Message)> {
+    let mut header = [0u8; 6];
+    r.read_exact(&mut header).context("read frame header")?;
+    let lane = header[0];
+    let kind = header[1];
+    let len = u32::from_le_bytes([header[2], header[3], header[4], header[5]]) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME_ELEMS,
+        "frame header claims {len} elements (cap {MAX_FRAME_ELEMS}); stream is corrupt"
+    );
+    let msg = match kind {
+        KIND_EMPTY => {
+            anyhow::ensure!(len == 0, "Empty frame with {len} elements");
+            Message::Empty
+        }
+        KIND_IDS => Message::Ids(read_u64s(r, len)?),
+        KIND_COUNTS => Message::Counts(read_u64s(r, len)?),
+        KIND_FLOATS => {
+            let mut bytes = vec![0u8; len * 4];
+            r.read_exact(&mut bytes).context("read frame payload")?;
+            Message::Floats(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        k => bail!("unknown frame kind {k}; stream is corrupt"),
+    };
+    Ok((lane, msg))
+}
+
+/// Open a peer connection: identify ourselves and our incarnation.
+pub fn write_hello(w: &mut impl Write, src: u32, incarnation: u32) -> Result<()> {
+    let mut buf = [0u8; 8];
+    buf[..4].copy_from_slice(&src.to_le_bytes());
+    buf[4..].copy_from_slice(&incarnation.to_le_bytes());
+    w.write_all(&buf).context("write hello")
+}
+
+/// Read the peer handshake: `(src_rank, incarnation)`.
+pub fn read_hello(r: &mut impl Read) -> Result<(u32, u32)> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf).context("read hello")?;
+    Ok((
+        u32::from_le_bytes(buf[..4].try_into().unwrap()),
+        u32::from_le_bytes(buf[4..].try_into().unwrap()),
+    ))
+}
+
+/// Coordinator control protocol. Workers send `Register`, `Heartbeat`,
+/// `Ready` and `Bye`; the coordinator replies with `Welcome` (once, to
+/// a registration) and `Release` (to a complete, unpaused barrier).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoordMsg {
+    /// A worker announces itself for `incarnation` of the run.
+    Register {
+        rank: u32,
+        incarnation: u32,
+        pid: u32,
+    },
+    /// The coordinator's registration reply: where to resume from and
+    /// the run's base generator seed (the single source of truth for
+    /// seeded shard assignment — ranks derive their shard from it).
+    Welcome { resume_seq: u64, seed: u64 },
+    /// Liveness beat; `step` is the worker's current training step.
+    Heartbeat { rank: u32, step: u64 },
+    /// The worker reached interval barrier `seq` with its delta durable.
+    Ready { rank: u32, seq: u64 },
+    /// All ranks reached barrier `seq`; proceed.
+    Release { seq: u64 },
+    /// Clean exit notice.
+    Bye { rank: u32 },
+}
+
+const TAG_REGISTER: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_HEARTBEAT: u8 = 3;
+const TAG_READY: u8 = 4;
+const TAG_RELEASE: u8 = 5;
+const TAG_BYE: u8 = 6;
+
+/// Serialize one coordinator message (writes are small and atomic
+/// enough for a mutex-guarded stream; no flushing games needed on UDS).
+pub fn write_coord(w: &mut impl Write, msg: &CoordMsg) -> Result<()> {
+    let mut buf = Vec::with_capacity(17);
+    match *msg {
+        CoordMsg::Register {
+            rank,
+            incarnation,
+            pid,
+        } => {
+            buf.push(TAG_REGISTER);
+            buf.extend_from_slice(&rank.to_le_bytes());
+            buf.extend_from_slice(&incarnation.to_le_bytes());
+            buf.extend_from_slice(&pid.to_le_bytes());
+        }
+        CoordMsg::Welcome { resume_seq, seed } => {
+            buf.push(TAG_WELCOME);
+            buf.extend_from_slice(&resume_seq.to_le_bytes());
+            buf.extend_from_slice(&seed.to_le_bytes());
+        }
+        CoordMsg::Heartbeat { rank, step } => {
+            buf.push(TAG_HEARTBEAT);
+            buf.extend_from_slice(&rank.to_le_bytes());
+            buf.extend_from_slice(&step.to_le_bytes());
+        }
+        CoordMsg::Ready { rank, seq } => {
+            buf.push(TAG_READY);
+            buf.extend_from_slice(&rank.to_le_bytes());
+            buf.extend_from_slice(&seq.to_le_bytes());
+        }
+        CoordMsg::Release { seq } => {
+            buf.push(TAG_RELEASE);
+            buf.extend_from_slice(&seq.to_le_bytes());
+        }
+        CoordMsg::Bye { rank } => {
+            buf.push(TAG_BYE);
+            buf.extend_from_slice(&rank.to_le_bytes());
+        }
+    }
+    w.write_all(&buf).context("write coordinator message")
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read coordinator field")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("read coordinator field")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read one coordinator message (blocking until a full message or EOF).
+pub fn read_coord(r: &mut impl Read) -> Result<CoordMsg> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag).context("read coordinator tag")?;
+    Ok(match tag[0] {
+        TAG_REGISTER => CoordMsg::Register {
+            rank: read_u32(r)?,
+            incarnation: read_u32(r)?,
+            pid: read_u32(r)?,
+        },
+        TAG_WELCOME => CoordMsg::Welcome {
+            resume_seq: read_u64(r)?,
+            seed: read_u64(r)?,
+        },
+        TAG_HEARTBEAT => CoordMsg::Heartbeat {
+            rank: read_u32(r)?,
+            step: read_u64(r)?,
+        },
+        TAG_READY => CoordMsg::Ready {
+            rank: read_u32(r)?,
+            seq: read_u64(r)?,
+        },
+        TAG_RELEASE => CoordMsg::Release { seq: read_u64(r)? },
+        TAG_BYE => CoordMsg::Bye { rank: read_u32(r)? },
+        t => bail!("unknown coordinator tag {t}; stream is corrupt"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrips_every_kind() {
+        let msgs = vec![
+            Message::Empty,
+            Message::Ids(vec![0, 1, u64::MAX, 42]),
+            Message::Floats(vec![0.0, -1.5, f32::MIN_POSITIVE, 3.25e7]),
+            Message::Counts(vec![7]),
+            Message::Ids(Vec::new()),
+            Message::Floats(Vec::new()),
+        ];
+        for (lane, msg) in msgs.iter().enumerate() {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, lane as u8, msg).unwrap();
+            let (got_lane, got) = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(got_lane as usize, lane);
+            assert_eq!(&got, msg);
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_on_one_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0, &Message::Ids(vec![9, 8])).unwrap();
+        write_frame(&mut buf, 5, &Message::Floats(vec![1.0])).unwrap();
+        write_frame(&mut buf, 2, &Message::Empty).unwrap();
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), (0, Message::Ids(vec![9, 8])));
+        assert_eq!(
+            read_frame(&mut cur).unwrap(),
+            (5, Message::Floats(vec![1.0]))
+        );
+        assert_eq!(read_frame(&mut cur).unwrap(), (2, Message::Empty));
+        assert!(read_frame(&mut cur).is_err(), "EOF is an error, not a frame");
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_are_loud() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, &Message::Ids(vec![1, 2, 3])).unwrap();
+        // Truncation anywhere inside the frame errors.
+        for cut in [1, 5, 6, buf.len() - 1] {
+            assert!(
+                read_frame(&mut Cursor::new(&buf[..cut])).is_err(),
+                "cut at {cut} must error"
+            );
+        }
+        // Unknown kind byte.
+        let mut bad = buf.clone();
+        bad[1] = 99;
+        assert!(read_frame(&mut Cursor::new(&bad)).is_err());
+        // Oversize element count fails before allocating.
+        let mut huge = vec![0u8, KIND_IDS];
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&huge)).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+        // Non-empty Empty frame.
+        let mut lying = vec![0u8, KIND_EMPTY];
+        lying.extend_from_slice(&3u32.to_le_bytes());
+        assert!(read_frame(&mut Cursor::new(&lying)).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf, 3, 17).unwrap();
+        assert_eq!(read_hello(&mut Cursor::new(&buf)).unwrap(), (3, 17));
+        assert!(read_hello(&mut Cursor::new(&buf[..5])).is_err());
+    }
+
+    #[test]
+    fn coord_messages_roundtrip() {
+        let msgs = [
+            CoordMsg::Register {
+                rank: 2,
+                incarnation: 1,
+                pid: 4242,
+            },
+            CoordMsg::Welcome {
+                resume_seq: 7,
+                seed: 0xDEAD_BEEF_CAFE_F00D,
+            },
+            CoordMsg::Heartbeat { rank: 0, step: 123 },
+            CoordMsg::Ready { rank: 3, seq: 9 },
+            CoordMsg::Release { seq: 9 },
+            CoordMsg::Bye { rank: 1 },
+        ];
+        for msg in msgs {
+            let mut buf = Vec::new();
+            write_coord(&mut buf, &msg).unwrap();
+            assert_eq!(read_coord(&mut Cursor::new(&buf)).unwrap(), msg);
+        }
+        // Stream of several messages in sequence.
+        let mut buf = Vec::new();
+        for msg in msgs {
+            write_coord(&mut buf, &msg).unwrap();
+        }
+        let mut cur = Cursor::new(&buf);
+        for msg in msgs {
+            assert_eq!(read_coord(&mut cur).unwrap(), msg);
+        }
+        // Unknown tag.
+        assert!(read_coord(&mut Cursor::new(&[200u8])).is_err());
+    }
+}

@@ -1,0 +1,345 @@
+//! The worker-process side of the multi-process runtime.
+//!
+//! `mtgrboost dist-worker` (a hidden subcommand the supervisor spawns)
+//! lands in [`run_worker`]: register with the coordinator, take the
+//! `Welcome`'s resume point and base seed as gospel, join the UDS mesh,
+//! and run one rank of the trainer with [`WorkerHooks`] wired into the
+//! step/interval hot points. The hooks send an **inline heartbeat at
+//! the top of every step** (so the coordinator's `max_step` is exact
+//! and `replayed_steps` accounting is too) on top of a background
+//! cadence thread that covers long stalls *within* a step, and carry
+//! the rank's slice of the fault plan (kill at step / torn publish).
+//!
+//! The worker's result is a JSON report (`report_rank<r>.json` in the
+//! run dir) whose float and checksum fields are **hex bit strings** —
+//! JSON numbers are f64 and would silently round u64 checksums, and the
+//! whole point of the drill harness is bit-exact comparison.
+
+use std::io::BufReader;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::delta::sparse_delta_group_path;
+use crate::runtime::engine::Engine;
+use crate::train::{DistHooks, DistTrainOptions, TrainReport, Trainer, TrainerOptions};
+use crate::util::json::Json;
+use crate::util::retry::{retry, RetryPolicy};
+
+use super::fault::FaultPlan;
+use super::transport::SocketTransport;
+use super::wire::{self, CoordMsg};
+
+/// Socket / file layout inside a run dir.
+pub fn coord_sock(run_dir: &Path) -> PathBuf {
+    run_dir.join("coord.sock")
+}
+pub fn mesh_dir(run_dir: &Path) -> PathBuf {
+    run_dir.join("sock")
+}
+pub fn report_path(run_dir: &Path, rank: usize) -> PathBuf {
+    run_dir.join(format!("report_rank{rank}.json"))
+}
+
+/// Per-worker launch parameters (everything *not* in the shared
+/// training-option tail).
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    pub rank: usize,
+    pub run_dir: PathBuf,
+    pub heartbeat_ms: u64,
+    pub incarnation: u32,
+    /// This run's fault plan (incarnation 0 only; the supervisor never
+    /// re-arms faults on a recovered gang).
+    pub fault: Option<FaultPlan>,
+    /// Real artifacts dir, or `None` for the reference engine.
+    pub artifacts: Option<PathBuf>,
+}
+
+/// Connection to the coordinator. The write half is shared (mutex)
+/// between the training thread and the background heartbeat thread;
+/// the read half is only ever used by the training thread (barriers).
+pub struct CoordClient {
+    write: Mutex<UnixStream>,
+    read: Mutex<BufReader<UnixStream>>,
+    rank: u32,
+    step: AtomicU64,
+    resume_seq: u64,
+    seed: u64,
+}
+
+impl CoordClient {
+    /// Connect (with retry — the supervisor binds the socket
+    /// concurrently with spawning us), register, and consume `Welcome`.
+    pub fn connect(sock: &Path, rank: usize, incarnation: u32) -> Result<CoordClient> {
+        let policy = RetryPolicy {
+            max_attempts: 400,
+            base_delay_ms: 5,
+            max_delay_ms: 100,
+            seed: 0xC0_0D ^ rank as u64,
+        };
+        let (stream, _) = retry(&policy, &format!("rank {rank} connect coordinator"), |_| {
+            UnixStream::connect(sock)
+        })?;
+        let mut write_half = stream.try_clone()?;
+        wire::write_coord(
+            &mut write_half,
+            &CoordMsg::Register {
+                rank: rank as u32,
+                incarnation,
+                pid: std::process::id(),
+            },
+        )?;
+        let mut reader = BufReader::new(stream);
+        let msg = wire::read_coord(&mut reader).context("await Welcome")?;
+        let CoordMsg::Welcome { resume_seq, seed } = msg else {
+            bail!("expected Welcome from coordinator, got {msg:?}");
+        };
+        Ok(CoordClient {
+            write: Mutex::new(write_half),
+            read: Mutex::new(reader),
+            rank: rank as u32,
+            step: AtomicU64::new(0),
+            resume_seq,
+            seed,
+        })
+    }
+
+    /// `(resume_seq, seed)` from the coordinator's `Welcome`.
+    pub fn welcome(&self) -> (u64, u64) {
+        (self.resume_seq, self.seed)
+    }
+
+    fn send(&self, msg: &CoordMsg) -> Result<()> {
+        let mut w = self.write.lock().unwrap();
+        wire::write_coord(&mut *w, msg)
+    }
+
+    /// Record the current step and beat inline. Failures are swallowed:
+    /// a worker that has lost the coordinator keeps training and lets
+    /// liveness detection on the other side sort it out.
+    pub fn stamp_step(&self, step: u64) {
+        self.step.store(step, Ordering::Relaxed);
+        let _ = self.send(&CoordMsg::Heartbeat {
+            rank: self.rank,
+            step,
+        });
+    }
+
+    /// Background cadence beats, covering stalls within one step.
+    pub fn spawn_heartbeats(self: &Arc<Self>, every_ms: u64) {
+        let client = Arc::clone(self);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_millis(every_ms.max(1)));
+            let beat = CoordMsg::Heartbeat {
+                rank: client.rank,
+                step: client.step.load(Ordering::Relaxed),
+            };
+            if client.send(&beat).is_err() {
+                return; // coordinator gone; nothing left to prove
+            }
+        });
+    }
+
+    /// Interval barrier: announce `Ready(seq)`, block until the
+    /// coordinator releases it. Blocks indefinitely while the
+    /// coordinator pauses for a recovery — the supervisor kills us.
+    pub fn barrier(&self, seq: u64) -> Result<()> {
+        self.send(&CoordMsg::Ready {
+            rank: self.rank,
+            seq,
+        })?;
+        let mut r = self.read.lock().unwrap();
+        loop {
+            match wire::read_coord(&mut *r).context("await barrier release")? {
+                CoordMsg::Release { seq: s } if s == seq => return Ok(()),
+                CoordMsg::Release { .. } => continue, // stale release
+                other => bail!("unexpected coordinator message at barrier: {other:?}"),
+            }
+        }
+    }
+
+    pub fn bye(&self) {
+        let _ = self.send(&CoordMsg::Bye { rank: self.rank });
+    }
+}
+
+/// [`DistHooks`] implementation: heartbeats, the coordinator barrier,
+/// and this rank's fault-plan slice.
+struct WorkerHooks {
+    coord: Arc<CoordClient>,
+    rank: usize,
+    world: usize,
+    sync_dir: PathBuf,
+    kill_at: Option<usize>,
+    torn_at: Option<u64>,
+}
+
+impl DistHooks for WorkerHooks {
+    fn on_step(&self, step: usize) {
+        // Runs before the step's first collective, so an injected crash
+        // never leaves peers blocked mid-exchange: they see EOF on
+        // their next receive and die loudly.
+        self.coord.stamp_step(step as u64);
+        if self.kill_at == Some(step) {
+            eprintln!("[dist] rank {} fault: kill at step {step}", self.rank);
+            std::process::abort();
+        }
+    }
+
+    fn on_interval(&self, seq: u64) -> Result<()> {
+        if self.torn_at == Some(seq) {
+            // Torn publish: our shard of delta `seq` is durable right
+            // now — truncate it mid-file and crash, simulating a
+            // machine dying inside the write. Recovery must refuse the
+            // whole delta.
+            let path = sparse_delta_group_path(&self.sync_dir, seq, self.rank, self.world, 0);
+            let len = std::fs::metadata(&path)
+                .with_context(|| format!("torn fault: stat {}", path.display()))?
+                .len();
+            let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+            f.set_len(len / 2)?;
+            f.sync_all()?;
+            eprintln!("[dist] rank {} fault: torn publish of delta {seq}", self.rank);
+            std::process::abort();
+        }
+        self.coord.barrier(seq)
+    }
+}
+
+/// Entry point for the `dist-worker` subcommand: run one rank to
+/// completion and leave `report_rank<r>.json` behind.
+pub fn run_worker(mut topts: TrainerOptions, w: &WorkerOptions) -> Result<()> {
+    let world = topts.cluster.world;
+    anyhow::ensure!(w.rank < world, "rank {} out of world {world}", w.rank);
+    let ocfg = topts
+        .online
+        .as_ref()
+        .context("dist workers require --mode online")?;
+    let sync_dir = ocfg
+        .sync_dir
+        .clone()
+        .context("dist workers require --sync-dir")?;
+
+    let client = Arc::new(CoordClient::connect(
+        &coord_sock(&w.run_dir),
+        w.rank,
+        w.incarnation,
+    )?);
+    let (resume_seq, seed) = client.welcome();
+    // Seeded shard assignment: the coordinator's seed is authoritative;
+    // every rank derives its data shard from it identically.
+    topts.generator.seed = seed;
+    client.spawn_heartbeats(w.heartbeat_ms);
+
+    let transport = SocketTransport::connect(
+        &mesh_dir(&w.run_dir),
+        w.rank,
+        world,
+        w.incarnation,
+        w.fault.as_ref(),
+    )?;
+    let comm = crate::collective::CommHandle::from_remote(w.rank, world, Box::new(transport));
+
+    let plan = w.fault.unwrap_or_default();
+    topts.dist = Some(DistTrainOptions {
+        resume_seq,
+        hooks: Some(Arc::new(WorkerHooks {
+            coord: Arc::clone(&client),
+            rank: w.rank,
+            world,
+            sync_dir,
+            kill_at: plan.kill.filter(|k| k.rank == w.rank).map(|k| k.step),
+            torn_at: plan.torn.filter(|t| t.rank == w.rank).map(|t| t.seq),
+        })),
+    });
+
+    let engine = match &w.artifacts {
+        Some(dir) => Engine::start(dir)?,
+        None => Engine::reference(seed)?,
+    };
+    let report = Trainer::new(topts, engine)?.run_rank(comm)?;
+
+    let json = report_to_json(&report, w.rank, world);
+    std::fs::write(report_path(&w.run_dir, w.rank), json.pretty())
+        .context("write worker report")?;
+    client.bye();
+    Ok(())
+}
+
+/// `0x`-prefixed, zero-padded 16-digit hex — the bit-exact JSON form
+/// for u64 checksums and f64 loss bits.
+pub fn hex64(x: u64) -> String {
+    format!("{x:#018x}")
+}
+
+/// Inverse of [`hex64`] (tolerates unpadded values).
+pub fn parse_hex64(s: &str) -> Result<u64> {
+    let digits = s
+        .strip_prefix("0x")
+        .with_context(|| format!("`{s}` is not 0x-prefixed hex"))?;
+    u64::from_str_radix(digits, 16).with_context(|| format!("`{s}` is not hex"))
+}
+
+/// The drill-comparable slice of a [`TrainReport`] as JSON. Shared by
+/// `train --report-json` (the single-process reference) and the dist
+/// worker reports, so bit-identity checks compare like with like.
+pub fn report_to_json(report: &TrainReport, rank: usize, world: usize) -> Json {
+    let mut j = Json::obj();
+    j.set("rank", rank.into());
+    j.set("world", world.into());
+    let steps: Vec<Json> = report
+        .steps
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("step", s.step.into());
+            o.set("loss_ctr_bits", hex64(s.loss_ctr.to_bits()).into());
+            o.set("loss_ctcvr_bits", hex64(s.loss_ctcvr.to_bits()).into());
+            o
+        })
+        .collect();
+    j.set("steps", Json::Arr(steps));
+    let (ctr, ctcvr) = report.final_losses();
+    j.set("final_loss_ctr_bits", hex64(ctr.to_bits()).into());
+    j.set("final_loss_ctcvr_bits", hex64(ctcvr.to_bits()).into());
+    j.set(
+        "group_checksums",
+        Json::Arr(report.group_checksums.iter().map(|&c| hex64(c).into()).collect()),
+    );
+    j.set(
+        "group_rows",
+        Json::Arr(report.group_rows.iter().map(|&r| r.into()).collect()),
+    );
+    j.set("table_rows", report.table_rows.into());
+    j.set("online_synced_rows", report.online_synced_rows.into());
+    j.set("transport_retries", report.dist.transport_retries.into());
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex64_roundtrips_edges() {
+        for x in [0u64, 1, 0x8000_0000_0000_0000, u64::MAX, 0xDEAD_BEEF] {
+            let s = hex64(x);
+            assert_eq!(s.len(), 18, "{s} is zero-padded");
+            assert_eq!(parse_hex64(&s).unwrap(), x);
+        }
+        assert_eq!(parse_hex64("0xff").unwrap(), 255, "unpadded tolerated");
+        assert!(parse_hex64("ff").is_err());
+        assert!(parse_hex64("0xzz").is_err());
+        // f64 bits survive exactly, including negatives and subnormals.
+        for f in [0.693_147_180_559_9, -0.0, f64::MIN_POSITIVE, 1e300] {
+            assert_eq!(
+                f64::from_bits(parse_hex64(&hex64(f.to_bits())).unwrap()).to_bits(),
+                f.to_bits()
+            );
+        }
+    }
+}

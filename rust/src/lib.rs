@@ -112,6 +112,25 @@
 //!   bursts) driving micro-batched lookup + dense-forward serving —
 //!   measured by `bench_serving` as p50/p99 latency and achieved QPS
 //!   versus `--sync-interval`.
+//! - [`dist`] — the fault-tolerant multi-process runtime
+//!   (`train-dist`): a real byte transport over Unix-domain sockets
+//!   ([`dist::SocketTransport`], length-prefixed frames, one stream per
+//!   ordered rank pair) behind the communicator's
+//!   [`collective::RemoteTransport`] seam, a coordinator
+//!   ([`dist::Coordinator`]) doing registration, seeded shard
+//!   assignment, interval barriers and heartbeat failure detection
+//!   (pure [`dist::HeartbeatTracker`]), a deterministic fault harness
+//!   ([`dist::FaultPlan`]: kill at step, drop/delay a frame, torn
+//!   checkpoint publish), and a supervisor ([`dist::run_dist`]) that
+//!   recovers from any worker death by gang restart from the newest
+//!   CRC-durable delta — with the drill suite asserting recovered runs
+//!   are bit-identical to uninterrupted ones. Every failure event
+//!   (heartbeat misses, transport retries, recoveries, replayed steps)
+//!   lands in `TrainReport::dist`.
+//! - [`util::retry`] — deterministic retry/backoff (pure jittered
+//!   schedule) used by the transport; [`util::crc32`] — the CRC32
+//!   footer sealing every checkpoint/delta row file against torn or
+//!   bit-flipped reads.
 //! - [`util::pool`] — the deterministic work-stealing-free worker pool
 //!   (`parallel_for` / `parallel_map` over stable index chunks), with
 //!   fair-share views for concurrent callers of one global pool.
@@ -127,6 +146,7 @@ pub mod checkpoint;
 pub mod collective;
 pub mod config;
 pub mod data;
+pub mod dist;
 pub mod online;
 pub mod optim;
 pub mod metrics;

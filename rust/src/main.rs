@@ -9,6 +9,11 @@
 //! mtgrboost train --mode online --sync-interval 50 [--intervals N]
 //!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
 //!                 [--sync-dir DIR] [--day-every N] ...
+//! mtgrboost train-dist --world 2 --mode online --sync-interval 5
+//!                 --sync-dir DIR --intervals N [--run-dir DIR]
+//!                 [--heartbeat-ms N] [--heartbeat-timeout-ms N]
+//!                 [--max-recoveries N] [--fault PLAN] [--report-json F]
+//!                 [--gauc on|off] [...train flags...]
 //! mtgrboost sim   --model 4g --world 64 --dim-factor 1 --steps 50
 //!                 [--no-balancing] [--dedup ...] [--overlap on|off]
 //!                 [--cross-step on|off] [--backend hash|mch]
@@ -28,6 +33,18 @@
 //! Contradictory combinations (`--steps` with online mode, zero
 //! `--sync-interval`, TTL below the sync interval, online-only knobs in
 //! offline mode) are rejected up front.
+//!
+//! `train-dist` runs the same online trainer as N real worker
+//! *processes* over the Unix-domain-socket transport: the supervisor
+//! owns a coordinator (registration, seeded shard assignment, interval
+//! barrier, heartbeat failure detection) and recovers from any worker
+//! death by gang restart from the newest CRC-durable delta under
+//! `--sync-dir`. `--fault kill:rank=R,step=S` (also `drop:`/`delay:`/
+//! `torn:`) injects deterministic failures for the recovery drills;
+//! `--report-json` writes the merged bit-exact report. Every training
+//! flag after the supervisor knobs is forwarded verbatim to the
+//! workers. The hidden `dist-worker` subcommand is the per-rank process
+//! body the supervisor spawns.
 //!
 //! `serve` is the consumer end of that sync path: it bootstraps a
 //! read-optimized serving replica from the base + delta chain under
@@ -58,6 +75,10 @@ use mtgrboost::config::ModelConfig;
 use mtgrboost::data::generator::{GeneratorConfig, WorkloadGenerator};
 use mtgrboost::data::schema::Schema;
 use mtgrboost::data::shards::write_sharded_dataset;
+use mtgrboost::dist::{
+    dist_report_to_json, report_to_json, run_dist, run_worker, DistOptions, FaultPlan,
+    WorkerOptions,
+};
 use mtgrboost::embedding::dedup::DedupStrategy;
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::runtime::Engine;
@@ -66,11 +87,11 @@ use mtgrboost::sim::{simulate, SimOptions, TableBackend};
 use mtgrboost::train::{Trainer, TrainerOptions};
 use mtgrboost::util::cli::Args;
 
-fn parse_overlap(s: &str) -> Result<bool> {
+fn parse_switch(flag: &str, s: &str) -> Result<bool> {
     Ok(match s {
         "on" => true,
         "off" => false,
-        other => bail!("--overlap expects on|off, got `{other}`"),
+        other => bail!("--{flag} expects on|off, got `{other}`"),
     })
 }
 
@@ -175,13 +196,15 @@ fn main() -> Result<()> {
     ]);
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("train-dist") => cmd_train_dist(&args),
+        Some("dist-worker") => cmd_dist_worker(&args),
         Some("sim") => cmd_sim(&args),
         Some("data") => cmd_data(&args),
         Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: mtgrboost <train|sim|data|serve|info> [--key value ...]\n\
+                "usage: mtgrboost <train|train-dist|sim|data|serve|info> [--key value ...]\n\
                  see rust/src/main.rs for the full flag list"
             );
             Ok(())
@@ -189,24 +212,24 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Build [`TrainerOptions`] from the shared training-flag tail. Used
+/// identically by `train`, by `train-dist` (supervisor side, for
+/// validation and the coordinator seed) and by `dist-worker` — so one
+/// argv means one option set in every process. `dist` flips the
+/// GAUC default off (per-process GAUC state cannot be merged and
+/// `TrainerOptions::validate` rejects it under `dist`).
+fn parse_train_opts(args: &Args, dist: bool) -> Result<TrainerOptions> {
     let model = args.get_or("model", "tiny");
     let world = args.get_usize("world", 2);
     let steps = args.get_usize("steps", 50);
-    let engine = Engine::start(std::path::Path::new(&args.get_or(
-        "artifacts",
-        "artifacts",
-    )))
-    .context("start PJRT engine")?;
-
     let mut opts = TrainerOptions::new(&model, world, steps);
     opts.train.sequence_balancing = !args.has_flag("no-balancing");
     opts.train.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
-    opts.overlap = parse_overlap(&args.get_or("overlap", "on"))?;
+    opts.overlap = parse_switch("overlap", &args.get_or("overlap", "on"))?;
     // Cross-step pipelining (post step s+1's first ID exchange during
     // step s's dense sync); only meaningful with overlap on. Numerics
     // are bit-identical on or off.
-    opts.cross_step = parse_overlap(&args.get_or("cross-step", "on"))?;
+    opts.cross_step = parse_switch("cross-step", &args.get_or("cross-step", "on"))?;
     // Size of the process-global worker pool shared by all trainer
     // workers (each gets a deterministic fair share); 0 = size to the
     // machine. Numerics are bit-identical for every value.
@@ -219,6 +242,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.generator.len_mu = args.get_f64("len-mu", 3.8);
     opts.generator.max_len = args.get_usize("max-len", 256);
     opts.log_every = args.get_usize("log-every", 10);
+    opts.prefetch_depth = args.get_usize("prefetch-depth", opts.prefetch_depth);
     // Feature schema preset: `meituan` (homogeneous, one merge group)
     // or `meituan-mixed` (8D context + model-dim token features — the
     // multi-group table-merging path). Online knobs apply uniformly to
@@ -232,17 +256,45 @@ fn cmd_train(args: &Args) -> Result<()> {
     // group instead of one packed message per comm lane. Payload bytes
     // and numerics are bit-identical either way.
     opts.multiplex_exchange = !args.has_flag("no-multiplex");
+    opts.collect_gauc = parse_switch(
+        "gauc",
+        &args.get_or("gauc", if dist { "off" } else { "on" }),
+    )?;
     opts.online = parse_online_mode(args)?;
     let default_warmup = match &opts.online {
         Some(o) => o.sync_interval,
         None => steps / 4,
     };
     opts.gauc_warmup = args.get_usize("gauc-warmup", default_warmup);
+    Ok(opts)
+}
 
+/// The engine every trainer-shaped command shares: a PJRT artifacts dir
+/// when one is given, the deterministic reference backend otherwise
+/// (seeded identically to the data generator, so reference runs are
+/// reproducible end to end).
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    match args.get("artifacts") {
+        Some(dir) => Engine::start(std::path::Path::new(dir)).context("start PJRT engine"),
+        None => Engine::reference(args.get_u64("seed", 2026)),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let opts = parse_train_opts(args, false)?;
+    let engine = engine_from_args(args)?;
+
+    let world = opts.cluster.world;
     let overlap = opts.overlap;
     let online = opts.online.is_some();
     let prefetch_depth = opts.prefetch_depth;
     let report = Trainer::new(opts, engine)?.run()?;
+    if let Some(path) = args.get("report-json") {
+        // The single-process reference report for the dist drills: the
+        // same bit-exact JSON shape the dist workers emit.
+        std::fs::write(path, report_to_json(&report, 0, world).pretty())
+            .with_context(|| format!("write {path}"))?;
+    }
     let (lc, lv) = report.final_losses();
     println!("steps                : {}", report.steps.len());
     println!(
@@ -334,6 +386,123 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Supervisor-only keys that must NOT be forwarded to workers: the
+/// worker either gets its own value appended per rank (`rank`,
+/// `run-dir`, `heartbeat-ms`, `incarnation`, `fault`) or the key is
+/// meaningless in a worker (`report-json`, the timeout/recovery knobs).
+const SUPERVISOR_ONLY: &[&str] = &[
+    "report-json",
+    "run-dir",
+    "heartbeat-ms",
+    "heartbeat-timeout-ms",
+    "max-recoveries",
+    "fault",
+    "rank",
+    "incarnation",
+];
+
+/// Reconstruct the training-flag tail to forward to every worker from
+/// the supervisor's own parsed argv. Per-rank flags are appended after
+/// this tail by the supervisor and win on conflict (the parser keeps
+/// the last occurrence of a key).
+fn worker_args_from(args: &Args) -> Vec<String> {
+    let mut out = Vec::new();
+    for (k, v) in &args.options {
+        if !SUPERVISOR_ONLY.contains(&k.as_str()) {
+            out.push(format!("--{k}"));
+            out.push(v.clone());
+        }
+    }
+    for f in &args.flags {
+        out.push(format!("--{f}"));
+    }
+    out
+}
+
+fn parse_fault_flag(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.get("fault") {
+        Some(s) => {
+            let plan = FaultPlan::parse(s)?;
+            Ok((!plan.is_empty()).then_some(plan))
+        }
+        None => Ok(None),
+    }
+}
+
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    let topts = parse_train_opts(args, true)?;
+    let run_dir = match args.get("run-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        // Keep the default short: Unix socket paths cap at ~108 bytes.
+        None => std::env::temp_dir().join(format!("mtgr_dist_{}", std::process::id())),
+    };
+    let dopts = DistOptions {
+        run_dir,
+        heartbeat_ms: args.get_u64("heartbeat-ms", 25),
+        heartbeat_timeout_ms: args.get_u64("heartbeat-timeout-ms", 2000),
+        max_recoveries: args.get_usize("max-recoveries", 3),
+        fault: parse_fault_flag(args)?,
+        worker_bin: std::env::current_exe().context("resolve worker binary")?,
+        worker_args: worker_args_from(args),
+    };
+    let report = run_dist(&topts, &dopts)?;
+    let (lc, lv) = (
+        f64::from_bits(report.final_loss_ctr_bits),
+        f64::from_bits(report.final_loss_ctcvr_bits),
+    );
+    println!("world                : {} processes", report.world);
+    println!("steps (rank 0, last incarnation): {}", report.steps.len());
+    println!("final loss ctr/ctcvr : {lc:.4} / {lv:.4}");
+    println!(
+        "sparse rows          : {} across {} group{}",
+        report.table_rows,
+        report.group_rows.len(),
+        if report.group_rows.len() == 1 { "" } else { "s" }
+    );
+    println!("rows synced          : {}", report.online_synced_rows);
+    println!(
+        "recoveries           : {} ({} steps replayed)",
+        report.dist.recoveries, report.dist.replayed_steps
+    );
+    println!(
+        "heartbeat misses     : {} (transport retries {})",
+        report.dist.heartbeat_misses, report.dist.transport_retries
+    );
+    for (g, c) in report.group_checksums.iter().enumerate() {
+        println!("group {g} checksum     : {c:#018x}");
+    }
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, dist_report_to_json(&report).pretty())
+            .with_context(|| format!("write {path}"))?;
+    }
+    Ok(())
+}
+
+/// The hidden per-rank process body `train-dist` spawns. Parses the
+/// same training tail as the supervisor plus its appended per-rank
+/// flags.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let topts = parse_train_opts(args, true)?;
+    let Some(rank) = args.get("rank") else {
+        bail!("dist-worker requires --rank (spawned by train-dist, not by hand)");
+    };
+    let rank: usize = rank
+        .parse()
+        .with_context(|| format!("--rank expects an integer, got `{rank}`"))?;
+    let Some(run_dir) = args.get("run-dir") else {
+        bail!("dist-worker requires --run-dir");
+    };
+    let w = WorkerOptions {
+        rank,
+        run_dir: std::path::PathBuf::from(run_dir),
+        heartbeat_ms: args.get_u64("heartbeat-ms", 25),
+        incarnation: args.get_u64("incarnation", 0) as u32,
+        fault: parse_fault_flag(args)?,
+        artifacts: args.get("artifacts").map(std::path::PathBuf::from),
+    };
+    run_worker(topts, &w)
+}
+
 fn cmd_sim(args: &Args) -> Result<()> {
     if args.get("schema").is_some() {
         bail!(
@@ -354,8 +523,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     opts.dedup = parse_dedup(&args.get_or("dedup", "two-stage"))?;
     // Sim default mirrors SimOptions::new (off): figure baselines keep
     // the paper's serial-exchange semantics unless the ablation asks.
-    opts.overlap = parse_overlap(&args.get_or("overlap", "off"))?;
-    opts.cross_step = parse_overlap(&args.get_or("cross-step", "off"))?;
+    opts.overlap = parse_switch("overlap", &args.get_or("overlap", "off"))?;
+    opts.cross_step = parse_switch("cross-step", &args.get_or("cross-step", "off"))?;
     opts.backend = match args.get_or("backend", "hash").as_str() {
         "hash" => TableBackend::DynamicHash,
         "mch" => TableBackend::Mch,
@@ -713,6 +882,85 @@ mod tests {
             "train", "--mode", "online", "--sync-interval", "10", "--admit-prob", "1.5",
         ]);
         assert!(parse_online_mode(&a).is_err());
+    }
+
+    #[test]
+    fn train_opts_parse_with_gauc_defaults_per_mode() {
+        let a = args_of(&["train", "--model", "tiny", "--world", "2", "--steps", "4"]);
+        let o = parse_train_opts(&a, false).unwrap();
+        assert!(o.collect_gauc, "single-process default: gauc on");
+        assert_eq!((o.cluster.world, o.steps), (2, 4));
+
+        // Dist parsing flips the default off (validate rejects it on).
+        let o = parse_train_opts(&a, true).unwrap();
+        assert!(!o.collect_gauc, "dist default: gauc off");
+
+        // Explicit values win over either default, and junk is loud.
+        let a = args_of(&["train", "--gauc", "off"]);
+        assert!(!parse_train_opts(&a, false).unwrap().collect_gauc);
+        let a = args_of(&["train", "--gauc", "sometimes"]);
+        let err = parse_train_opts(&a, false).unwrap_err().to_string();
+        assert!(err.contains("--gauc"), "{err}");
+    }
+
+    #[test]
+    fn worker_args_strip_supervisor_keys_and_keep_training_tail() {
+        let a = Args::parse(
+            [
+                "train-dist", "--mode", "online", "--sync-interval", "5",
+                "--sync-dir", "/tmp/sync", "--world", "2", "--seed", "7",
+                "--run-dir", "/tmp/run", "--heartbeat-ms", "10",
+                "--heartbeat-timeout-ms", "500", "--max-recoveries", "2",
+                "--fault", "kill:rank=1,step=3", "--report-json", "/tmp/r.json",
+                "--no-balancing",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &["no-balancing"],
+        );
+        let tail = worker_args_from(&a);
+        for kept in ["--mode", "--sync-interval", "--sync-dir", "--world", "--seed"] {
+            assert!(tail.contains(&kept.to_string()), "{kept} forwarded: {tail:?}");
+        }
+        for stripped in SUPERVISOR_ONLY {
+            assert!(
+                !tail.contains(&format!("--{stripped}")),
+                "--{stripped} must not be forwarded: {tail:?}"
+            );
+        }
+        assert!(tail.contains(&"--no-balancing".to_string()), "flags forwarded");
+        // Values travel right after their keys (argv pairing intact).
+        let i = tail.iter().position(|t| t == "--sync-dir").unwrap();
+        assert_eq!(tail[i + 1], "/tmp/sync");
+    }
+
+    #[test]
+    fn fault_flag_parses_and_rejects_junk() {
+        let a = args_of(&["train-dist", "--fault", "kill:rank=1,step=3"]);
+        let plan = parse_fault_flag(&a).unwrap().unwrap();
+        assert_eq!(plan.kill.unwrap().rank, 1);
+        assert_eq!(plan.kill.unwrap().step, 3);
+
+        let a = args_of(&["train-dist"]);
+        assert!(parse_fault_flag(&a).unwrap().is_none(), "no flag → no plan");
+
+        let a = args_of(&["train-dist", "--fault", "explode:rank=1"]);
+        assert!(parse_fault_flag(&a).is_err(), "unknown fault kind is loud");
+    }
+
+    #[test]
+    fn dist_worker_requires_rank_and_run_dir() {
+        let base = [
+            "dist-worker", "--mode", "online", "--sync-interval", "5",
+            "--sync-dir", "/tmp/s", "--intervals", "1",
+        ];
+        let err = cmd_dist_worker(&args_of(&base)).unwrap_err().to_string();
+        assert!(err.contains("--rank"), "{err}");
+
+        let mut argv = base.to_vec();
+        argv.extend(["--rank", "0"]);
+        let err = cmd_dist_worker(&args_of(&argv)).unwrap_err().to_string();
+        assert!(err.contains("--run-dir"), "{err}");
     }
 }
 

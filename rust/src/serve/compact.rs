@@ -28,7 +28,7 @@ use crate::checkpoint::delta::{
 };
 use crate::checkpoint::{
     load_group_dims, load_meta, load_sparse_shard_group, push_row_bytes, rows_block_bytes,
-    sparse_group_path, CheckpointMeta,
+    sparse_group_path, write_sealed, CheckpointMeta,
 };
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::DynamicTableConfig;
@@ -197,8 +197,8 @@ pub fn compact_chain(dir: &Path, opts: &CompactOptions) -> Result<Option<Compact
             for r in &rows {
                 push_row_bytes(&mut body, r.id, &r.row, &r.m, &r.v, r.t);
             }
-            std::fs::write(
-                sparse_group_path(&stage, rank, world, g),
+            write_sealed(
+                &sparse_group_path(&stage, rank, world, g),
                 rows_block_bytes(rows.len() as u64, gdim, &body),
             )?;
             rows_written += rows.len();

@@ -15,13 +15,18 @@
 //! never a silently stale replica). [`ServingReplica::refresh`] picks
 //! up deltas the trainer published since, invalidating the hot-ID
 //! cache for every id a delta touches before the rows become servable.
+//! A refresh that trips on a gapped or torn chain degrades gracefully:
+//! every load is staged before any install, so the replica keeps
+//! serving its last good state, counts the failure in
+//! [`ReplicaStats::refresh_failures`] and surfaces the message in
+//! [`ReplicaStats::last_refresh_error`] — only bootstrap is hard-fail.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::delta::{delta_dir, load_delta_group_dims, load_delta_shard_group, validate_chain, DeltaMeta};
-use crate::checkpoint::{load_dense, load_group_dims, load_sparse_shard_group};
+use crate::checkpoint::{load_dense, load_group_dims, load_sparse_shard_group, SparseRow};
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::DynamicTableConfig;
 use crate::embedding::GlobalId;
@@ -64,6 +69,11 @@ pub struct ReplicaStats {
     pub cache_inserts: u64,
     pub cache_invalidations: u64,
     pub deltas_applied: u64,
+    /// Refreshes that failed (gapped or torn chain) with the replica
+    /// kept serving its last good state.
+    pub refresh_failures: u64,
+    /// The most recent refresh failure, for operators polling stats.
+    pub last_refresh_error: Option<String>,
 }
 
 /// One folded, continuously-refreshed copy of the trainer's state.
@@ -85,7 +95,19 @@ pub struct ServingReplica {
     resident: u64,
     missing: u64,
     deltas_applied: u64,
+    refresh_failures: u64,
+    last_refresh_error: Option<String>,
     scratch: Vec<f32>,
+}
+
+/// One delta fully loaded (and CRC-checked) into memory, not yet
+/// installed — the staging half of the refresh path's all-or-nothing
+/// apply.
+struct StagedDelta {
+    meta: DeltaMeta,
+    /// `(group, upserts, removed)` in (rank, group)-major order — the
+    /// same order the bootstrap apply uses.
+    shards: Vec<(usize, Vec<SparseRow>, Vec<GlobalId>)>,
 }
 
 impl ServingReplica {
@@ -161,6 +183,8 @@ impl ServingReplica {
             resident: 0,
             missing: 0,
             deltas_applied: 0,
+            refresh_failures: 0,
+            last_refresh_error: None,
             scratch: Vec::new(),
         };
 
@@ -190,9 +214,9 @@ impl ServingReplica {
         Ok(replica)
     }
 
-    /// Fold one delta into the tables, invalidating every touched id in
-    /// the hot cache *before* its new state becomes servable.
-    fn apply_one(&mut self, m: &DeltaMeta) -> Result<()> {
+    /// Load one delta's every shard into memory, CRC-checked, without
+    /// touching the tables — the failure-safe half of an apply.
+    fn stage_one(&self, m: &DeltaMeta) -> Result<StagedDelta> {
         let dims = load_delta_group_dims(&self.dir, m)?;
         anyhow::ensure!(
             dims == self.group_dims,
@@ -200,37 +224,84 @@ impl ServingReplica {
             m.seq,
             self.group_dims
         );
+        let mut shards = Vec::with_capacity(m.world * self.group_dims.len());
         for rank in 0..m.world {
             for g in 0..self.group_dims.len() {
                 let (rows, removed) = load_delta_shard_group(&self.dir, m, rank, g)?;
-                for &id in &removed {
-                    self.caches[g].invalidate(id);
-                    self.tables[g].remove(id);
-                }
-                for r in rows {
-                    self.caches[g].invalidate(r.id);
-                    self.tables[g].set_row_scratch(r.id, &r.row, &mut self.scratch);
-                }
+                shards.push((g, rows, removed));
             }
         }
-        self.applied_seq = m.seq;
-        self.applied_step = m.step;
+        Ok(StagedDelta {
+            meta: m.clone(),
+            shards,
+        })
+    }
+
+    /// Install a staged delta, invalidating every touched id in the hot
+    /// cache *before* its new state becomes servable. Infallible: every
+    /// load already happened in [`Self::stage_one`].
+    fn install_one(&mut self, d: StagedDelta) {
+        for (g, rows, removed) in d.shards {
+            for id in removed {
+                self.caches[g].invalidate(id);
+                self.tables[g].remove(id);
+            }
+            for r in rows {
+                self.caches[g].invalidate(r.id);
+                self.tables[g].set_row_scratch(r.id, &r.row, &mut self.scratch);
+            }
+        }
+        self.applied_seq = d.meta.seq;
+        self.applied_step = d.meta.step;
         self.deltas_applied += 1;
+    }
+
+    /// Fold one delta into the tables (bootstrap path — errors here are
+    /// hard failures in [`Self::open`]).
+    fn apply_one(&mut self, m: &DeltaMeta) -> Result<()> {
+        let staged = self.stage_one(m)?;
+        self.install_one(staged);
         Ok(())
     }
 
     /// Consume any deltas published since the last apply; returns how
-    /// many were folded in. A gap in the chain (pruned or torn dirs) is
-    /// an error — the replica refuses to go silently stale.
+    /// many were folded in. A gapped or torn chain is an error, but a
+    /// **serving-safe** one: every load is staged before any install,
+    /// so the replica keeps serving its last good state untouched, the
+    /// failure is counted in [`ReplicaStats::refresh_failures`], and
+    /// the message lands in [`ReplicaStats::last_refresh_error`] for
+    /// operators who only poll stats. (Bootstrap via [`Self::open`]
+    /// stays hard-fail: there is no good state to fall back to.)
     pub fn refresh(&mut self) -> Result<usize> {
-        let chain = validate_chain(&self.dir, self.applied_seq, self.applied_step)?;
-        let n = chain.len();
-        for m in &chain {
-            self.apply_one(m)?;
+        match self.try_refresh() {
+            Ok(n) => Ok(n),
+            Err(e) => {
+                self.refresh_failures += 1;
+                self.last_refresh_error = Some(format!("{e:#}"));
+                Err(e)
+            }
         }
-        if let Some(m) = chain.last() {
-            let (dense, _) = load_dense(&delta_dir(&self.dir, m.seq), self.param_count)?;
-            self.dense = dense;
+    }
+
+    fn try_refresh(&mut self) -> Result<usize> {
+        let chain = validate_chain(&self.dir, self.applied_seq, self.applied_step)?;
+        // Stage everything — every delta's shards and the newest dense
+        // params — before mutating anything, so a torn file surfacing
+        // mid-chain can never leave the replica half-refreshed.
+        let staged: Vec<StagedDelta> = chain
+            .iter()
+            .map(|m| self.stage_one(m))
+            .collect::<Result<_>>()?;
+        let dense = match chain.last() {
+            Some(m) => Some(load_dense(&delta_dir(&self.dir, m.seq), self.param_count)?.0),
+            None => None,
+        };
+        let n = staged.len();
+        for d in staged {
+            self.install_one(d);
+        }
+        if let Some(d) = dense {
+            self.dense = d;
         }
         Ok(n)
     }
@@ -366,6 +437,8 @@ impl ServingReplica {
             resident: self.resident,
             missing: self.missing,
             deltas_applied: self.deltas_applied,
+            refresh_failures: self.refresh_failures,
+            last_refresh_error: self.last_refresh_error.clone(),
             ..ReplicaStats::default()
         };
         for c in &self.caches {

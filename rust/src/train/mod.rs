@@ -124,6 +124,12 @@ pub struct TrainerOptions {
     /// token features with a `shared_table` alias — ≥ 2 merge groups,
     /// one physical shard table, exchange and optimizer per group).
     pub schema: String,
+    /// `Some` marks this process as one rank of a **multi-process**
+    /// run ([`crate::dist`]): resume-from-delta replay plus per-step /
+    /// per-interval callbacks (heartbeats, coordinator barrier, fault
+    /// injection). `None` — the default — is the single-process path,
+    /// untouched byte for byte.
+    pub dist: Option<DistTrainOptions>,
 }
 
 impl TrainerOptions {
@@ -148,6 +154,7 @@ impl TrainerOptions {
             log_every: 0,
             online: None,
             schema: "meituan".to_string(),
+            dist: None,
         }
     }
 
@@ -165,8 +172,101 @@ impl TrainerOptions {
         } else {
             anyhow::ensure!(self.steps > 0, "offline runs need --steps > 0");
         }
+        if self.dist.is_some() {
+            // Multi-process runs lean on the delta chain as the ONLY
+            // recovery substrate: every resident row must appear in
+            // some delta ≤ R for replay to be exact, which rules out
+            // admission (rows trained but never inserted) and TTL
+            // (rows retired between syncs). GAUC accumulates unmerged
+            // per-process state the supervisor cannot combine.
+            let o = self
+                .online
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("dist runs require --mode online"))?;
+            anyhow::ensure!(
+                o.sync_dir.is_some(),
+                "dist runs require --sync-dir (the delta chain is the recovery substrate)"
+            );
+            anyhow::ensure!(
+                o.intervals > 0,
+                "dist runs need bounded --intervals (> 0)"
+            );
+            anyhow::ensure!(
+                o.feature_ttl == 0,
+                "dist runs do not support --feature-ttl (expired rows would be \
+                 unrecoverable from the delta chain)"
+            );
+            anyhow::ensure!(
+                o.admission.is_none(),
+                "dist runs do not support feature admission (rejected-row state \
+                 would be unrecoverable from the delta chain)"
+            );
+            anyhow::ensure!(
+                !self.collect_gauc,
+                "dist runs require --gauc off (per-process GAUC state cannot be merged)"
+            );
+        }
         Ok(())
     }
+}
+
+/// Per-step / per-interval callbacks a multi-process rank installs via
+/// [`TrainerOptions::dist`]. The trainer stays ignorant of sockets,
+/// heartbeats and fault plans — `dist` implements them behind this
+/// trait, so `train` never depends on `dist`.
+pub trait DistHooks: Send + Sync {
+    /// Top of every step, right after the TTL clock advances and before
+    /// the first collective of the step — the heartbeat step stamp and
+    /// the kill-fault injection point.
+    fn on_step(&self, _step: usize) {}
+
+    /// After an online interval's delta publish and counter gathers
+    /// (delta `seq` is durable on disk at this point) — the
+    /// coordinator's step barrier. An error aborts the run.
+    fn on_interval(&self, _seq: u64) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Multi-process knobs carried inside [`TrainerOptions`].
+#[derive(Clone, Default)]
+pub struct DistTrainOptions {
+    /// Resume point: restore deltas `1..=resume_seq` (plus delta
+    /// `resume_seq`'s dense state), replay the data stream past the
+    /// covered steps, and start training at step
+    /// `resume_seq × sync_interval`. `0` = fresh start.
+    pub resume_seq: u64,
+    /// Runtime callbacks (heartbeats, barrier, fault injection).
+    pub hooks: Option<Arc<dyn DistHooks>>,
+}
+
+impl std::fmt::Debug for DistTrainOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DistTrainOptions")
+            .field("resume_seq", &self.resume_seq)
+            .field("hooks", &self.hooks.is_some())
+            .finish()
+    }
+}
+
+/// Failure/recovery counters surfaced in [`TrainReport`]. Worker
+/// processes account their own transport retries; the supervisor fills
+/// in heartbeat misses, recoveries and replayed steps when it merges
+/// rank reports ([`crate::dist::supervisor`]). All zero for
+/// single-process runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DistStats {
+    /// Heartbeat intervals that elapsed without a beat (coordinator
+    /// view, summed over ranks and incarnations).
+    pub heartbeat_misses: u64,
+    /// Transport-level send retries that eventually succeeded
+    /// (connect retries + injected transient faults).
+    pub transport_retries: u64,
+    /// Gang restarts the supervisor performed.
+    pub recoveries: u64,
+    /// Steps re-run because they fell after the newest durable delta
+    /// at recovery time.
+    pub replayed_steps: u64,
 }
 
 /// Per-step record (identical on every worker; rank 0's copy returned).
@@ -287,6 +387,10 @@ pub struct TrainReport {
     pub wire_payload_bytes: Vec<u64>,
     /// Run total of the multiplexed packing-header bytes.
     pub wire_header_bytes: u64,
+    /// Failure/recovery counters (all zero for single-process runs;
+    /// the supervisor adds heartbeat misses / recoveries / replayed
+    /// steps when merging multi-process rank reports).
+    pub dist: DistStats,
 }
 
 impl TrainReport {
@@ -442,109 +546,151 @@ impl Trainer {
         for j in joins {
             outputs.push(j.join().expect("worker panicked")?);
         }
-        // Merge worker-local results; rank 0 carries the step records.
-        let mut gauc_ctr = GaucAccumulator::new();
-        let mut gauc_ctcvr = GaucAccumulator::new();
-        let mut phases = PhaseTimer::new();
-        let mut table_rows = 0;
-        let mut table_memory = 0;
-        let mut volume = DedupVolume::default();
-        let mut truncated = 0;
-        let mut steps = Vec::new();
-        let mut wall = Throughput::default();
-        let mut prefetch_occ = 0.0;
-        let mut checksum = 0u64;
-        let mut table_stats = TableStats::default();
-        let mut group_dims: Vec<usize> = Vec::new();
-        let mut group_volumes: Vec<DedupVolume> = Vec::new();
-        let mut group_checksums: Vec<u64> = Vec::new();
-        let mut group_rows: Vec<usize> = Vec::new();
-        let n_workers = outputs.len().max(1) as f64;
-        for out in outputs {
-            table_stats.merge(&out.table_stats);
-            gauc_ctr.merge(out.gauc_ctr);
-            gauc_ctcvr.merge(out.gauc_ctcvr);
-            phases.merge(&out.phases);
-            table_rows += out.table_rows;
-            table_memory += out.table_memory;
-            prefetch_occ += out.prefetch_occupancy / n_workers;
-            checksum = checksum.wrapping_add(out.table_checksum);
-            volume.merge(&out.volume);
-            truncated += out.truncated;
-            // Per-group aggregates: every worker carries the same group
-            // structure (same schema, same plan).
-            if group_dims.is_empty() {
-                group_dims = out.group_dims.clone();
-                group_volumes = vec![DedupVolume::default(); group_dims.len()];
-                group_checksums = vec![0; group_dims.len()];
-                group_rows = vec![0; group_dims.len()];
-            }
-            for (g, v) in out.group_volumes.iter().enumerate() {
-                group_volumes[g].merge(v);
-            }
-            for (g, &c) in out.group_checksums.iter().enumerate() {
-                group_checksums[g] = group_checksums[g].wrapping_add(c);
-            }
-            for (g, &r) in out.group_rows.iter().enumerate() {
-                group_rows[g] += r;
-            }
-            if out.rank == 0 {
-                steps = out.steps;
-                wall = out.wall;
-            }
+        Ok(report_from_outputs(outputs))
+    }
+
+    /// Run exactly ONE rank of a multi-process group in this process,
+    /// over the given (remote-backed) communicator; blocks until done.
+    /// The returned report carries only this rank's shard state
+    /// (`group_checksums`, `group_rows`, ...) — the supervisor sums
+    /// them across rank reports. Step records are collective values and
+    /// identical on every rank.
+    ///
+    /// The worker pool is sized from `--threads` directly — NOT the
+    /// single-process fair share `⌈threads/world⌉` — because this
+    /// process hosts one rank and owns the whole machine share the
+    /// launcher gave it. Results are bit-identical for every pool size,
+    /// so the two paths still agree bitwise.
+    pub fn run_rank(&self, comm: CommHandle) -> Result<TrainReport> {
+        let rank = comm.rank;
+        let opts = Arc::new(self.opts.clone());
+        let cfg = Arc::new(self.model_cfg.clone());
+        let pool = Arc::new(WorkerPool::new(WorkerPool::resolve_threads(
+            self.opts.threads,
+        )));
+        let out = worker_main(rank, comm, opts, cfg, self.engine.clone(), pool)?;
+        Ok(report_from_outputs(vec![out]))
+    }
+}
+
+/// Merge worker-local results into the run report. The lowest-rank
+/// output carries the step records (they are collective values,
+/// identical on every worker; rank 0 wins in a full group, and a
+/// single-rank group — [`Trainer::run_rank`] — contributes its own).
+fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
+    let mut gauc_ctr = GaucAccumulator::new();
+    let mut gauc_ctcvr = GaucAccumulator::new();
+    let mut phases = PhaseTimer::new();
+    let mut table_rows = 0;
+    let mut table_memory = 0;
+    let mut volume = DedupVolume::default();
+    let mut truncated = 0;
+    let mut steps = Vec::new();
+    let mut wall = Throughput::default();
+    let mut steps_rank: Option<usize> = None;
+    let mut prefetch_occ = 0.0;
+    let mut checksum = 0u64;
+    let mut transport_retries = 0u64;
+    let mut table_stats = TableStats::default();
+    let mut group_dims: Vec<usize> = Vec::new();
+    let mut group_volumes: Vec<DedupVolume> = Vec::new();
+    let mut group_checksums: Vec<u64> = Vec::new();
+    let mut group_rows: Vec<usize> = Vec::new();
+    let n_workers = outputs.len().max(1) as f64;
+    for out in outputs {
+        table_stats.merge(&out.table_stats);
+        gauc_ctr.merge(out.gauc_ctr);
+        gauc_ctcvr.merge(out.gauc_ctcvr);
+        phases.merge(&out.phases);
+        table_rows += out.table_rows;
+        table_memory += out.table_memory;
+        prefetch_occ += out.prefetch_occupancy / n_workers;
+        checksum = checksum.wrapping_add(out.table_checksum);
+        transport_retries += out.transport_retries;
+        volume.merge(&out.volume);
+        truncated += out.truncated;
+        // Per-group aggregates: every worker carries the same group
+        // structure (same schema, same plan).
+        if group_dims.is_empty() {
+            group_dims = out.group_dims.clone();
+            group_volumes = vec![DedupVolume::default(); group_dims.len()];
+            group_checksums = vec![0; group_dims.len()];
+            group_rows = vec![0; group_dims.len()];
         }
-        let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
-        let total_samples: u64 = steps.iter().map(|s| s.samples).sum();
-        let total_tokens: u64 = steps.iter().map(|s| s.tokens.iter().sum::<u64>()).sum();
-        // Online counters are already globally summed per interval
-        // (collective gathers at the boundary); totalling rank 0's step
-        // records yields the run totals.
-        let online_admitted: u64 = steps.iter().map(|s| s.online_admitted).sum();
-        let online_rejected: u64 = steps.iter().map(|s| s.online_rejected).sum();
-        let online_expired: u64 = steps.iter().map(|s| s.online_expired).sum();
-        let online_synced_rows: u64 = steps.iter().map(|s| s.online_synced_rows).sum();
-        let online_sync_bytes: u64 = steps.iter().map(|s| s.online_sync_bytes).sum();
-        let lookup_ops_merged: u64 = steps.iter().map(|s| s.lookup_ops_merged).sum();
-        let lookup_ops_unmerged: u64 = steps.iter().map(|s| s.lookup_ops_unmerged).sum();
-        // Wire meters are already globally summed per step (collective
-        // gathers at the step boundary), like the online counters.
-        let mut wire_payload_bytes = vec![0u64; LANES];
-        let mut wire_header_bytes = 0u64;
-        for s in &steps {
-            for (l, &b) in s.wire_payload_bytes.iter().enumerate() {
-                wire_payload_bytes[l] += b;
-            }
-            wire_header_bytes += s.wire_header_bytes;
+        for (g, v) in out.group_volumes.iter().enumerate() {
+            group_volumes[g].merge(v);
         }
-        Ok(TrainReport {
-            table_stats,
-            group_dims,
-            group_volumes,
-            group_checksums,
-            group_rows,
-            lookup_ops_merged,
-            lookup_ops_unmerged,
-            online_admitted,
-            online_rejected,
-            online_expired,
-            online_synced_rows,
-            online_sync_bytes,
-            wire_payload_bytes,
-            wire_header_bytes,
-            gauc_ctr: gauc_ctr.gauc(),
-            gauc_ctcvr: gauc_ctcvr.gauc(),
-            phases,
-            wall,
-            sim_samples_per_sec: total_samples as f64 / sim_total.max(1e-12),
-            sim_tokens_per_sec: total_tokens as f64 / sim_total.max(1e-12),
-            table_rows,
-            table_memory_bytes: table_memory,
-            dedup_volume: volume,
-            truncated_sequences: truncated,
-            prefetch_occupancy: prefetch_occ,
-            embedding_checksum: checksum,
-            steps,
-        })
+        for (g, &c) in out.group_checksums.iter().enumerate() {
+            group_checksums[g] = group_checksums[g].wrapping_add(c);
+        }
+        for (g, &r) in out.group_rows.iter().enumerate() {
+            group_rows[g] += r;
+        }
+        let lowest_so_far = match steps_rank {
+            None => true,
+            Some(r) => out.rank < r,
+        };
+        if lowest_so_far {
+            steps_rank = Some(out.rank);
+            steps = out.steps;
+            wall = out.wall;
+        }
+    }
+    let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
+    let total_samples: u64 = steps.iter().map(|s| s.samples).sum();
+    let total_tokens: u64 = steps.iter().map(|s| s.tokens.iter().sum::<u64>()).sum();
+    // Online counters are already globally summed per interval
+    // (collective gathers at the boundary); totalling rank 0's step
+    // records yields the run totals.
+    let online_admitted: u64 = steps.iter().map(|s| s.online_admitted).sum();
+    let online_rejected: u64 = steps.iter().map(|s| s.online_rejected).sum();
+    let online_expired: u64 = steps.iter().map(|s| s.online_expired).sum();
+    let online_synced_rows: u64 = steps.iter().map(|s| s.online_synced_rows).sum();
+    let online_sync_bytes: u64 = steps.iter().map(|s| s.online_sync_bytes).sum();
+    let lookup_ops_merged: u64 = steps.iter().map(|s| s.lookup_ops_merged).sum();
+    let lookup_ops_unmerged: u64 = steps.iter().map(|s| s.lookup_ops_unmerged).sum();
+    // Wire meters are already globally summed per step (collective
+    // gathers at the step boundary), like the online counters.
+    let mut wire_payload_bytes = vec![0u64; LANES];
+    let mut wire_header_bytes = 0u64;
+    for s in &steps {
+        for (l, &b) in s.wire_payload_bytes.iter().enumerate() {
+            wire_payload_bytes[l] += b;
+        }
+        wire_header_bytes += s.wire_header_bytes;
+    }
+    TrainReport {
+        table_stats,
+        group_dims,
+        group_volumes,
+        group_checksums,
+        group_rows,
+        lookup_ops_merged,
+        lookup_ops_unmerged,
+        online_admitted,
+        online_rejected,
+        online_expired,
+        online_synced_rows,
+        online_sync_bytes,
+        wire_payload_bytes,
+        wire_header_bytes,
+        dist: DistStats {
+            transport_retries,
+            ..DistStats::default()
+        },
+        gauc_ctr: gauc_ctr.gauc(),
+        gauc_ctcvr: gauc_ctcvr.gauc(),
+        phases,
+        wall,
+        sim_samples_per_sec: total_samples as f64 / sim_total.max(1e-12),
+        sim_tokens_per_sec: total_tokens as f64 / sim_total.max(1e-12),
+        table_rows,
+        table_memory_bytes: table_memory,
+        dedup_volume: volume,
+        truncated_sequences: truncated,
+        prefetch_occupancy: prefetch_occ,
+        embedding_checksum: checksum,
+        steps,
     }
 }
 
@@ -567,6 +713,9 @@ struct WorkerOutput {
     group_volumes: Vec<DedupVolume>,
     group_checksums: Vec<u64>,
     group_rows: Vec<usize>,
+    /// Transport-level send retries that eventually succeeded (0 for
+    /// the in-process channel backend).
+    transport_retries: u64,
 }
 
 /// One micro-batch prepared for the engine.
@@ -817,13 +966,69 @@ fn worker_main(
     // Carried across the step boundary in cross-step mode: step s+1's
     // first posted ID exchange (all merge groups' lanes in one handle).
     let mut posted: Option<MultiLookup> = None;
+
+    // ---- multi-process resume (dist mode) --------------------------
+    // Recovery replays the delta chain: deltas carry FULL rows (values
+    // + Adam m/v/t), and dist mode disallows TTL/admission, so every
+    // row resident at step R×sync_interval appears in some delta ≤ R.
+    // Installing deltas 1..=R into the empty tables plus delta R's
+    // dense state reproduces the uninterrupted state bit for bit. The
+    // data stream is then fast-forwarded past the covered steps (one
+    // discarded `prepare` per step — the loop consumes exactly one per
+    // step), so the first live step sees exactly the batch it would
+    // have in the uninterrupted run.
+    let dist_hooks = opts.dist.as_ref().and_then(|dc| dc.hooks.clone());
+    let resume_seq = opts.dist.as_ref().map_or(0, |dc| dc.resume_seq);
+    let start_step = if resume_seq > 0 {
+        let ocfg = opts.online.as_ref().expect("validate: dist requires online");
+        let sdir = ocfg
+            .sync_dir
+            .as_ref()
+            .expect("validate: dist requires --sync-dir");
+        for seq in 1..=resume_seq {
+            let meta = crate::checkpoint::delta::load_delta_meta(sdir, seq)
+                .with_context(|| format!("resume: delta {seq} meta"))?;
+            anyhow::ensure!(
+                meta.world == world,
+                "resume: delta {seq} was written for world {} (this run is world {world})",
+                meta.world
+            );
+            for g in 0..n_groups {
+                let (rows, removed) =
+                    crate::checkpoint::delta::load_delta_shard_group(sdir, &meta, rank, g)
+                        .with_context(|| {
+                            format!("resume: delta {seq} rank {rank} group {g}")
+                        })?;
+                crate::checkpoint::delta::apply_delta(
+                    sharded[g].table().inner(),
+                    &mut sparse_opt[g],
+                    rows,
+                    &removed,
+                );
+            }
+        }
+        let (restored, opt_state) = crate::checkpoint::load_dense(
+            &crate::checkpoint::delta::delta_dir(sdir, resume_seq),
+            params.len(),
+        )
+        .with_context(|| format!("resume: delta {resume_seq} dense state"))?;
+        params = restored;
+        dense_opt.restore_state(&opt_state)?;
+        let start = resume_seq as usize * ocfg.sync_interval;
+        for _ in 0..start {
+            let _ = prepare(&mut phases);
+        }
+        start
+    } else {
+        0
+    };
     // Per-rank wire meters at the previous step boundary: payload bytes
     // per lane minus the multiplexed packing headers, so the records
     // can assert payload conservation against the per-group schedule.
     let mut wire_prev = comm.stats.lane_bytes;
     let mut hdr_prev = [0u64; LANES];
 
-    let mut step = 0usize;
+    let mut step = start_step;
     loop {
         if let Some(total) = total_steps {
             if step >= total {
@@ -835,6 +1040,12 @@ fn worker_main(
         // stamped with it (no-op for the passthrough gates).
         for se in sharded.iter_mut() {
             se.table_mut().set_step(step as u64);
+        }
+        // Heartbeat step stamp / kill-fault injection point: before the
+        // first collective of the step, so an injected crash never
+        // leaves peers blocked mid-exchange pattern.
+        if let Some(h) = &dist_hooks {
+            h.on_step(step);
         }
         let data = match next_data.take() {
             Some(d) => d,
@@ -1198,6 +1409,12 @@ fn worker_main(
                 for (slot, mine) in online_counts.iter_mut().zip(my_counts) {
                     *slot = comm.all_gather_u64(mine).iter().sum();
                 }
+                // Delta `seq` is durable on EVERY rank here (the
+                // gathers above are a rendezvous) — the coordinator's
+                // step barrier and the torn-publish fault point.
+                if let Some(h) = &dist_hooks {
+                    h.on_interval(seq)?;
+                }
             }
         }
 
@@ -1449,6 +1666,7 @@ fn worker_main(
         group_volumes,
         group_checksums,
         group_rows,
+        transport_retries: comm.transport_retries(),
     })
 }
 

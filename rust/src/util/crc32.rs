@@ -1,0 +1,142 @@
+//! CRC-32 (IEEE) integrity footers for checkpoint row files.
+//!
+//! Every sparse shard / delta shard / dense blob written by the
+//! checkpoint layer is *sealed*: the payload is followed by an 8-byte
+//! footer `[crc32(payload) u32 LE][b"MTCR"]`. Loaders verify the magic
+//! and the checksum before parsing, so a truncated file, a torn write
+//! (killed mid-`fs::write`) or a flipped bit is a loud, named error
+//! instead of silently corrupt embedding state. The footer lives at the
+//! **end** of the file on purpose: a torn write that loses the tail
+//! loses the footer too, which is exactly the failure the supervisor's
+//! recovery scan must detect.
+
+use anyhow::{bail, Result};
+
+/// Footer magic. Distinguishes "sealed but corrupt" from "not a sealed
+/// file at all" in error messages.
+pub const SEAL_MAGIC: [u8; 4] = *b"MTCR";
+/// Footer length in bytes: crc u32 LE + magic.
+pub const SEAL_LEN: usize = 8;
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = make_table();
+
+/// IEEE CRC-32 (the zlib/gzip polynomial, reflected).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append the integrity footer to `bytes` in place and return it.
+pub fn seal(mut bytes: Vec<u8>) -> Vec<u8> {
+    let crc = crc32(&bytes);
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    bytes.extend_from_slice(&SEAL_MAGIC);
+    bytes
+}
+
+/// Verify and strip the footer, returning the payload (truncated in
+/// place — no copy). Errors name the specific failure: too short,
+/// missing magic (not a sealed file / footer torn off), or checksum
+/// mismatch (bit rot or a mid-file torn write).
+pub fn unseal_vec(mut bytes: Vec<u8>) -> Result<Vec<u8>> {
+    if bytes.len() < SEAL_LEN {
+        bail!(
+            "sealed file too short: {} bytes < {SEAL_LEN}-byte integrity footer (truncated?)",
+            bytes.len()
+        );
+    }
+    let body_len = bytes.len() - SEAL_LEN;
+    if bytes[body_len + 4..] != SEAL_MAGIC {
+        bail!("integrity footer magic missing (file truncated or not a sealed checkpoint file)");
+    }
+    let stored = u32::from_le_bytes([
+        bytes[body_len],
+        bytes[body_len + 1],
+        bytes[body_len + 2],
+        bytes[body_len + 3],
+    ]);
+    let actual = crc32(&bytes[..body_len]);
+    if stored != actual {
+        bail!("CRC32 mismatch: stored {stored:#010x}, computed {actual:#010x} (corrupt or torn file)");
+    }
+    bytes.truncate(body_len);
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_crc_vectors() {
+        // Standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn seal_roundtrip() {
+        for payload in [&b""[..], &b"x"[..], &[0u8; 1000][..], b"hello world"] {
+            let sealed = seal(payload.to_vec());
+            assert_eq!(sealed.len(), payload.len() + SEAL_LEN);
+            let body = unseal_vec(sealed).unwrap();
+            assert_eq!(body, payload);
+        }
+    }
+
+    #[test]
+    fn truncation_and_magic_and_crc_failures_are_loud() {
+        let sealed = seal(vec![7u8; 64]);
+
+        let mut torn = sealed.clone();
+        torn.truncate(5);
+        let err = unseal_vec(torn).unwrap_err().to_string();
+        assert!(err.contains("too short"), "{err}");
+
+        let mut tail_cut = sealed.clone();
+        tail_cut.truncate(sealed.len() - 3);
+        let err = unseal_vec(tail_cut).unwrap_err().to_string();
+        assert!(err.contains("magic"), "losing footer tail breaks magic: {err}");
+
+        let mut flipped = sealed.clone();
+        flipped[10] ^= 0x40;
+        let err = unseal_vec(flipped).unwrap_err().to_string();
+        assert!(err.contains("CRC32 mismatch"), "{err}");
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        // CRC-32 detects all 1-bit errors; walk every bit of a small
+        // sealed file (body + footer) and assert each flip is caught.
+        let sealed = seal((0u8..48).collect::<Vec<u8>>());
+        for byte in 0..sealed.len() {
+            for bit in 0..8 {
+                let mut bad = sealed.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    unseal_vec(bad).is_err(),
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+}

@@ -3,14 +3,18 @@
 //! replacement), software half floats (`half` replacement), statistics
 //! helpers, timers, a micro-benchmark harness (`criterion` replacement),
 //! a CLI argument parser (`clap` replacement), a deterministic scoped
-//! worker pool (`rayon` replacement for the sparse hot paths) and
-//! runtime-tunable performance thresholds (`tuning`).
+//! worker pool (`rayon` replacement for the sparse hot paths),
+//! runtime-tunable performance thresholds (`tuning`), deterministic
+//! retry/backoff for transport sends (`retry`) and CRC-32 integrity
+//! footers for checkpoint files (`crc32`).
 
 pub mod bench;
 pub mod cli;
+pub mod crc32;
 pub mod f16;
 pub mod json;
 pub mod pool;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,184 @@
+//! Deterministic retry / timeout / backoff for transport sends.
+//!
+//! The distributed runtime retries transient transport failures (an
+//! injected frame drop, a peer socket that is still binding) on an
+//! exponential backoff schedule. The schedule is a **pure function** of
+//! `(policy, attempt)` — the jitter comes from a splitmix64 hash of the
+//! policy seed and the attempt index, not from a clock or a global RNG —
+//! so two runs with the same policy wait the same milliseconds at every
+//! attempt and test assertions on the schedule are exact.
+
+use anyhow::{bail, Result};
+
+/// Backoff schedule parameters. Delays grow exponentially from
+/// `base_delay_ms`, are capped at `max_delay_ms`, and carry a
+/// deterministic jitter (up to 25% shaved off) derived from `seed` so
+/// concurrent retriers with different seeds desynchronize.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). 0 is rejected by [`retry`].
+    pub max_attempts: usize,
+    pub base_delay_ms: u64,
+    pub max_delay_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay_ms: 2,
+            max_delay_ms: 50,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// splitmix64: the one-u64 mixer used everywhere else in the crate for
+/// deterministic per-key randomness.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Milliseconds to wait after failed attempt `attempt` (0-based).
+/// Exponential (`base << attempt`), capped at `max_delay_ms`, minus a
+/// deterministic jitter of up to a quarter of the capped value. Pure in
+/// `(policy, attempt)`.
+pub fn backoff_delay_ms(policy: &RetryPolicy, attempt: usize) -> u64 {
+    let shift = attempt.min(20) as u32;
+    let raw = policy.base_delay_ms.saturating_mul(1u64 << shift);
+    let capped = raw.min(policy.max_delay_ms);
+    let jitter_span = capped / 4;
+    let jitter = if jitter_span == 0 {
+        0
+    } else {
+        splitmix64(policy.seed ^ attempt as u64) % (jitter_span + 1)
+    };
+    capped - jitter
+}
+
+/// Run `op` until it succeeds or `max_attempts` are exhausted, sleeping
+/// the deterministic backoff between attempts. `op` receives the 0-based
+/// attempt index. Returns the value and the number of **retries** (0
+/// when the first attempt succeeded). Exhaustion is a loud error naming
+/// `label`, the attempt count and the last failure.
+pub fn retry<T, E: std::fmt::Display>(
+    policy: &RetryPolicy,
+    label: &str,
+    mut op: impl FnMut(usize) -> Result<T, E>,
+) -> Result<(T, u64)> {
+    anyhow::ensure!(policy.max_attempts > 0, "retry `{label}`: zero attempts");
+    let mut last_err = String::new();
+    for attempt in 0..policy.max_attempts {
+        match op(attempt) {
+            Ok(v) => return Ok((v, attempt as u64)),
+            Err(e) => last_err = e.to_string(),
+        }
+        if attempt + 1 < policy.max_attempts {
+            let ms = backoff_delay_ms(policy, attempt);
+            if ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+    }
+    bail!(
+        "retry `{label}` exhausted after {} attempts (last error: {last_err})",
+        policy.max_attempts
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_delay_ms: 8,
+            max_delay_ms: 100,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_exponential() {
+        let p = policy();
+        let a: Vec<u64> = (0..6).map(|i| backoff_delay_ms(&p, i)).collect();
+        let b: Vec<u64> = (0..6).map(|i| backoff_delay_ms(&p, i)).collect();
+        assert_eq!(a, b, "pure function of (policy, attempt)");
+        // Jitter shaves at most a quarter, so the exponential floor
+        // (3/4 of base << attempt, pre-cap) still orders the schedule.
+        for (i, &ms) in a.iter().enumerate() {
+            let raw = (8u64 << i.min(20)).min(100);
+            assert!(ms <= raw, "attempt {i}: {ms} > raw {raw}");
+            assert!(ms >= raw - raw / 4, "attempt {i}: {ms} under jitter floor");
+        }
+    }
+
+    #[test]
+    fn backoff_caps_at_max_delay() {
+        let p = policy();
+        for attempt in [10, 20, 40, 1000, usize::MAX] {
+            assert!(backoff_delay_ms(&p, attempt) <= p.max_delay_ms);
+        }
+        // Degenerate policies must not overflow.
+        let wild = RetryPolicy {
+            max_attempts: 3,
+            base_delay_ms: u64::MAX,
+            max_delay_ms: 7,
+            seed: 0,
+        };
+        assert!(backoff_delay_ms(&wild, usize::MAX) <= 7);
+    }
+
+    #[test]
+    fn different_seeds_jitter_differently() {
+        let a = RetryPolicy { seed: 1, ..policy() };
+        let b = RetryPolicy { seed: 2, ..policy() };
+        let sa: Vec<u64> = (0..8).map(|i| backoff_delay_ms(&a, i)).collect();
+        let sb: Vec<u64> = (0..8).map(|i| backoff_delay_ms(&b, i)).collect();
+        assert_ne!(sa, sb, "seeds desynchronize concurrent retriers");
+    }
+
+    #[test]
+    fn retry_counts_retries_and_succeeds() {
+        let p = RetryPolicy {
+            base_delay_ms: 0,
+            ..policy()
+        };
+        let (v, retries) =
+            retry(&p, "test", |attempt| -> Result<usize, &'static str> {
+                if attempt < 2 {
+                    Err("transient")
+                } else {
+                    Ok(attempt * 10)
+                }
+            })
+            .unwrap();
+        assert_eq!(v, 20);
+        assert_eq!(retries, 2);
+
+        let (_, retries) =
+            retry(&p, "first-try", |_| Ok::<_, &'static str>(1)).unwrap();
+        assert_eq!(retries, 0, "no retries on first-attempt success");
+    }
+
+    #[test]
+    fn retry_exhaustion_is_a_loud_error() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base_delay_ms: 0,
+            max_delay_ms: 0,
+            seed: 0,
+        };
+        let err = retry(&p, "doomed-send", |_| Err::<(), _>("net down"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("doomed-send"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+        assert!(err.contains("net down"), "last error surfaced: {err}");
+    }
+}

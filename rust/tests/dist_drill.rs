@@ -1,0 +1,226 @@
+//! Crash-recovery drills through the real binary.
+//!
+//! Each drill runs `train-dist` (N worker processes over the UDS
+//! transport, supervised with heartbeats) against the single-process
+//! `train` reference on the SAME argv, and asserts the bit-exact JSON
+//! reports agree: per-step loss bits, final losses, per-group embedding
+//! checksums. The fault drills inject a kill or a torn checkpoint
+//! publish mid-run and additionally assert the supervisor recovered
+//! (gang restart from the newest CRC-durable delta) and accounted for
+//! it — `recoveries`, `replayed_steps` — while the final state stayed
+//! identical to the uninterrupted run.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use mtgrboost::dist::worker::parse_hex64;
+use mtgrboost::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mtgrboost");
+
+/// Short temp dirs: Unix socket paths cap at ~108 bytes.
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mtgr_dd_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The shared training tail: 3 intervals × 5 steps of the tiny model.
+/// `sync_interval >= 5` keeps `final_losses` (mean of the last ≤5 step
+/// records) comparable even when a recovered run's records start at its
+/// resume step.
+fn train_tail(world: usize, sync_dir: &Path) -> Vec<String> {
+    [
+        "--model",
+        "tiny",
+        "--mode",
+        "online",
+        "--sync-interval",
+        "5",
+        "--intervals",
+        "3",
+        "--seed",
+        "977",
+        "--threads",
+        "1",
+        "--log-every",
+        "0",
+        "--target-tokens",
+        "512",
+        "--max-len",
+        "32",
+        "--len-mu",
+        "2.5",
+        "--gauc",
+        "off",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--world".to_string(),
+        world.to_string(),
+        "--sync-dir".to_string(),
+        sync_dir.display().to_string(),
+    ])
+    .collect()
+}
+
+fn run_to_json(subcmd: &str, args: &[String], report: &Path) -> Json {
+    let out = Command::new(BIN)
+        .arg(subcmd)
+        .args(args)
+        .arg("--report-json")
+        .arg(report)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{subcmd} failed ({}):\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(&std::fs::read_to_string(report).unwrap()).unwrap()
+}
+
+/// Single-process reference on the same argv.
+fn reference_report(dir: &Path, world: usize) -> Json {
+    let sync = dir.join("ref_sync");
+    std::fs::create_dir_all(&sync).unwrap();
+    run_to_json("train", &train_tail(world, &sync), &dir.join("ref.json"))
+}
+
+/// Multi-process run, optionally with an injected fault plan.
+fn dist_report(dir: &Path, world: usize, fault: Option<&str>) -> Json {
+    let sync = dir.join("dist_sync");
+    std::fs::create_dir_all(&sync).unwrap();
+    let mut args = train_tail(world, &sync);
+    args.push("--run-dir".to_string());
+    args.push(dir.join("run").display().to_string());
+    if let Some(plan) = fault {
+        args.push("--fault".to_string());
+        args.push(plan.to_string());
+    }
+    run_to_json("train-dist", &args, &dir.join("dist.json"))
+}
+
+fn checksums(j: &Json) -> Vec<u64> {
+    j.get("group_checksums")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| parse_hex64(c.as_str().unwrap()).unwrap())
+        .collect()
+}
+
+fn final_bits(j: &Json) -> (u64, u64) {
+    (
+        parse_hex64(j.expect_str("final_loss_ctr_bits").unwrap()).unwrap(),
+        parse_hex64(j.expect_str("final_loss_ctcvr_bits").unwrap()).unwrap(),
+    )
+}
+
+fn step_bits(j: &Json) -> Vec<(usize, u64, u64)> {
+    j.get("steps")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.expect_usize("step").unwrap(),
+                parse_hex64(s.expect_str("loss_ctr_bits").unwrap()).unwrap(),
+                parse_hex64(s.expect_str("loss_ctcvr_bits").unwrap()).unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn counter(j: &Json, key: &str) -> u64 {
+    j.get("dist").expect_usize(key).unwrap() as u64
+}
+
+/// The identity the whole subsystem defends: final losses, per-group
+/// checksums, rows, and every step record both runs have, bit for bit.
+fn assert_bit_identical(dist: &Json, reference: &Json) {
+    assert_eq!(final_bits(dist), final_bits(reference), "final loss bits");
+    assert_eq!(checksums(dist), checksums(reference), "group checksums");
+    assert_eq!(
+        dist.expect_usize("table_rows").unwrap(),
+        reference.expect_usize("table_rows").unwrap(),
+        "total resident rows"
+    );
+    assert_eq!(
+        dist.expect_usize("online_synced_rows").unwrap(),
+        reference.expect_usize("online_synced_rows").unwrap(),
+        "synced rows"
+    );
+    // A recovered run's step records start at its resume step; every
+    // step both runs recorded must agree exactly.
+    let ref_steps = step_bits(reference);
+    let dist_steps = step_bits(dist);
+    assert!(!dist_steps.is_empty(), "dist run recorded steps");
+    for (step, ctr, ctcvr) in &dist_steps {
+        let r = ref_steps
+            .iter()
+            .find(|(s, _, _)| s == step)
+            .unwrap_or_else(|| panic!("reference has no record for step {step}"));
+        assert_eq!((ctr, ctcvr), (&r.1, &r.2), "loss bits diverged at step {step}");
+    }
+}
+
+#[test]
+fn world2_clean_run_matches_single_process_bit_for_bit() {
+    let d = tmp("clean2");
+    let reference = reference_report(&d, 2);
+    let dist = dist_report(&d, 2, None);
+    assert_eq!(counter(&dist, "recoveries"), 0, "no faults, no recoveries");
+    assert_eq!(counter(&dist, "replayed_steps"), 0);
+    assert_eq!(
+        step_bits(&dist).len(),
+        step_bits(&reference).len(),
+        "clean dist run records every step"
+    );
+    assert_bit_identical(&dist, &reference);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn world2_kill_mid_interval_recovers_bit_identically() {
+    let d = tmp("kill2");
+    let reference = reference_report(&d, 2);
+    // Step 7 is mid-interval 2: delta 1 is durable, steps 5..7 must be
+    // replayed after the gang restart.
+    let dist = dist_report(&d, 2, Some("kill:rank=1,step=7"));
+    assert_eq!(counter(&dist, "recoveries"), 1, "one gang restart");
+    assert!(
+        counter(&dist, "replayed_steps") > 0,
+        "the kill landed mid-interval, so steps past delta 1 were replayed"
+    );
+    assert_bit_identical(&dist, &reference);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn world2_torn_publish_recovers_from_previous_delta() {
+    let d = tmp("torn2");
+    let reference = reference_report(&d, 2);
+    // Rank 0 truncates its shard of delta 2 mid-file and crashes inside
+    // the publish; recovery must refuse the torn delta and resume from
+    // delta 1.
+    let dist = dist_report(&d, 2, Some("torn:rank=0,seq=2"));
+    assert_eq!(counter(&dist, "recoveries"), 1);
+    assert!(counter(&dist, "replayed_steps") > 0);
+    assert_bit_identical(&dist, &reference);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn world4_kill_recovers_bit_identically() {
+    let d = tmp("kill4");
+    let reference = reference_report(&d, 4);
+    let dist = dist_report(&d, 4, Some("kill:rank=2,step=8"));
+    assert_eq!(counter(&dist, "recoveries"), 1);
+    assert!(counter(&dist, "replayed_steps") > 0);
+    assert_bit_identical(&dist, &reference);
+    std::fs::remove_dir_all(&d).ok();
+}

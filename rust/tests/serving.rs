@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 
 use mtgrboost::checkpoint::delta::{
     apply_delta, delta_dir, list_delta_seqs, load_delta_group_dims, load_delta_meta,
-    load_delta_shard_group, snapshot_rows, validate_chain,
+    load_delta_shard_group, snapshot_rows, sparse_delta_group_path, validate_chain,
 };
 use mtgrboost::checkpoint::{load_sparse_shard_group, SparseRow};
 use mtgrboost::data::generator::GeneratorConfig;
@@ -441,4 +441,74 @@ fn run_serve_end_to_end_over_a_live_sync_dir() {
     assert!(list_delta_seqs(&dir).unwrap().is_empty());
     assert!(latest_base(&dir).unwrap().is_some());
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Flat-copy one snapshot dir (delta dirs hold no subdirs).
+fn copy_delta_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        std::fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+}
+
+#[test]
+fn failed_refresh_keeps_serving_last_good_state() {
+    let dir = tmp("degrade");
+    train("meituan", 1, &dir);
+    let stash = tmp("degrade_stash");
+    std::fs::create_dir_all(&stash).unwrap();
+    // Hold back deltas 5..=8 so the replica bootstraps on 1..=4 and the
+    // "trainer" can publish broken continuations.
+    for seq in 5..=INTERVALS as u64 {
+        let src = delta_dir(&dir, seq);
+        std::fs::rename(&src, stash.join(src.file_name().unwrap())).unwrap();
+    }
+    let mut replica = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+    let good_seq = replica.applied_seq();
+    let good_sum = replica.content_checksum();
+    let probe = replica.live_ids(0)[0];
+    let world = replica.world();
+
+    // Gapped chain: delta 6 appears without delta 5. The refresh must
+    // fail loudly — but the replica keeps serving its pre-refresh state
+    // and the failure is visible in the counters.
+    let d6 = delta_dir(&dir, 6);
+    std::fs::rename(stash.join(d6.file_name().unwrap()), &d6).unwrap();
+    assert!(replica.refresh().is_err(), "gap must not fold in");
+    let stats = replica.stats();
+    assert_eq!(stats.refresh_failures, 1);
+    assert!(
+        stats.last_refresh_error.is_some(),
+        "operators polling stats see the failure reason"
+    );
+    assert_eq!(replica.applied_seq(), good_seq, "state not advanced");
+    assert_eq!(replica.content_checksum(), good_sum, "state untouched");
+    let mut out = vec![0.0; replica.group_dim(0)];
+    assert!(replica.lookup(0, probe, &mut out), "still serving");
+
+    // Torn mid-chain shard: delta 5 arrives but one of its row files is
+    // truncated mid-write. The chain now LOOKS contiguous — only the
+    // staged CRC-checked loads catch it, and because staging precedes
+    // every install, deltas 5 AND 6 both stay out.
+    let d5 = delta_dir(&dir, 5);
+    copy_delta_dir(&stash.join(d5.file_name().unwrap()), &d5);
+    let shard = sparse_delta_group_path(&dir, 5, 0, world, 0);
+    let len = std::fs::metadata(&shard).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&shard).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+    assert!(replica.refresh().is_err(), "torn shard must not fold in");
+    assert_eq!(replica.stats().refresh_failures, 2);
+    assert_eq!(replica.applied_seq(), good_seq);
+    assert_eq!(replica.content_checksum(), good_sum, "no half-applied refresh");
+
+    // Repair delta 5: the very next refresh folds 5 and 6 in — the
+    // degraded window cost availability of fresh rows, never serving.
+    copy_delta_dir(&stash.join(d5.file_name().unwrap()), &d5);
+    assert_eq!(replica.refresh().unwrap(), 2);
+    assert_eq!(replica.applied_seq(), 6);
+    assert_eq!(replica.stats().refresh_failures, 2, "failure count is history");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&stash).ok();
 }
