@@ -10,12 +10,17 @@
 //! workload — the mechanism behind the paper's gap; (2) compose it with
 //! the simulated step decomposition: MCH multiplies the sparse phase
 //! (table ops + exchanges) by the measured ratio, and the A100 memory
-//! model decides the OOM cells.
+//! model decides the OOM cells; (3) rerun the micro-benchmark under the
+//! `churn-storm` scenario's flash-sale ID stream (most draws mint fresh
+//! IDs), where MCH's sorted remap pays an O(n) shifting insert per new
+//! ID and its eviction passes fire continuously.
 
 use mtgrboost::config::ModelConfig;
+use mtgrboost::data::generator::GeneratorConfig;
 use mtgrboost::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig};
 use mtgrboost::embedding::mch::MchTable;
 use mtgrboost::embedding::EmbeddingStore;
+use mtgrboost::scenario::Scenario;
 use mtgrboost::sim::{simulate, would_oom, SimOptions, TableBackend};
 use mtgrboost::util::bench::{bench_fn, BenchReport, Table};
 use mtgrboost::util::rng::{Xoshiro256, Zipf};
@@ -126,5 +131,80 @@ fn main() {
     }
     rep.add_table(table);
     rep.add_metric("paper_range", "1.47x - 2.22x, MCH OOM at 110G-64D".into());
+
+    // ---- part 3: churn-storm rerun ------------------------------------
+    // The scenario engine's flash-sale preset: most draws mint a
+    // brand-new ID (its shaped `new_item_rate`), the rest revisit a
+    // Zipf head over the already-minted space. Fresh IDs are MCH's
+    // worst case — every one is an O(n) shifting insert into the
+    // sorted remap, and the pre-allocated capacity forces continuous
+    // eviction passes — while the dynamic hash table just probes.
+    let mut churn_cfg = GeneratorConfig::default();
+    Scenario::churn_storm().shape_generator(&mut churn_cfg);
+    let mut rng = Xoshiro256::new(11);
+    let revisit = Zipf::new(VOCAB, 1.05);
+    let mut next_fresh = VOCAB as u64;
+    let churn_ids: Vec<u64> = (0..200_000)
+        .map(|_| {
+            if rng.next_f64() < churn_cfg.new_item_rate {
+                next_fresh += 1;
+                next_fresh
+            } else {
+                // Revisit near the newest IDs (flash-sale recency bias).
+                next_fresh - (revisit.sample(&mut rng) as u64).min(next_fresh - 1)
+            }
+        })
+        .collect();
+
+    let mut dyn_churn = DynamicEmbeddingTable::new(
+        DynamicTableConfig::new(DIM)
+            .with_capacity(1024)
+            .with_max_rows(VOCAB),
+    );
+    let mut mch_churn = MchTable::new(DIM, VOCAB, 1);
+    let mut i = 0usize;
+    let r_dyn_churn = bench_fn("dynamic_table_churn_storm", 1, 5, |_| {
+        for _ in 0..churn_ids.len() / 5 {
+            dyn_churn.lookup_or_insert(churn_ids[i % churn_ids.len()], &mut buf);
+            i += 1;
+        }
+    });
+    i = 0;
+    let r_mch_churn = bench_fn("mch_churn_storm", 1, 5, |_| {
+        for _ in 0..churn_ids.len() / 5 {
+            mch_churn.lookup_or_insert(churn_ids[i % churn_ids.len()], &mut buf);
+            i += 1;
+        }
+    });
+    let churn_ratio = r_mch_churn.summary.mean / r_dyn_churn.summary.mean;
+    let mut churn_table = Table::new(
+        "churn-storm rerun: per-table cost and eviction churn",
+        &["table", "mean s/pass", "evictions", "resident"],
+    );
+    churn_table.row(&[
+        "dynamic".into(),
+        format!("{:.4}", r_dyn_churn.summary.mean),
+        format!("{}", dyn_churn.stats.evictions),
+        format!("{}", EmbeddingStore::len(&dyn_churn)),
+    ]);
+    churn_table.row(&[
+        "mch".into(),
+        format!("{:.4}", r_mch_churn.summary.mean),
+        format!("{}", mch_churn.evictions),
+        format!("{}", EmbeddingStore::len(&mch_churn)),
+    ]);
+    rep.add_table(churn_table);
+    rep.add_metric("churn_lookup_slowdown", churn_ratio.into());
+    rep.add_metric("churn_mch_evictions", (mch_churn.evictions as f64).into());
+    rep.add_metric(
+        "churn_dynamic_evictions",
+        (dyn_churn.stats.evictions as f64).into(),
+    );
+    println!(
+        "\nchurn-storm rerun: MCH is {churn_ratio:.2}x slower under the flash-sale \
+         ID stream ({} MCH evictions vs {} dynamic)\n",
+        mch_churn.evictions, dyn_churn.stats.evictions
+    );
+
     rep.save().unwrap();
 }

@@ -46,6 +46,13 @@ pub trait Batcher {
 
     /// Sequences currently buffered.
     fn buffered(&self) -> usize;
+
+    /// Tokens currently buffered (the carry-over the last emission left
+    /// behind) — scenario telemetry. Batchers that don't track token
+    /// counts may report 0.
+    fn queued_tokens(&self) -> usize {
+        0
+    }
 }
 
 /// Algorithm 1: dynamic sequence batching.
@@ -136,6 +143,10 @@ impl Batcher for DynamicBatcher {
 
     fn buffered(&self) -> usize {
         self.queue.len()
+    }
+
+    fn queued_tokens(&self) -> usize {
+        self.queued_tokens
     }
 }
 
@@ -422,6 +433,121 @@ mod tests {
         // Mean lands near the target.
         let rel = (d.mean - target as f64).abs() / (target as f64);
         assert!(rel < 0.05, "mean off target by {rel:.3}");
+    }
+
+    #[test]
+    fn extreme_skew_never_overshoots_past_the_last_sequence() {
+        // The skew-storm shape: length-1 stubs interleaved with
+        // cap-length monsters. Invariant of Algorithm 1's cut: a batch
+        // may exceed the target only by (part of) its LAST sequence —
+        // dropping that sequence always lands strictly below N. Plus
+        // full conservation: nothing lost, nothing duplicated.
+        let lens: Vec<usize> = (0..400)
+            .map(|i| match i % 7 {
+                0 => 3000,
+                1 => 1,
+                2 => 2,
+                3 => 1500,
+                4 => 1,
+                5 => 700,
+                _ => 3,
+            })
+            .collect();
+        let total: usize = lens.iter().sum();
+        let target = 2048usize;
+        let mut b = DynamicBatcher::new(target);
+        let mut seen_tokens = 0usize;
+        let mut seen_seqs = 0usize;
+        let mut emitted = 0usize;
+        for chunk in lens.chunks(13) {
+            b.push_chunk(seqs_of_lens(chunk));
+            while let Some(batch) = b.next_batch() {
+                emitted += 1;
+                seen_tokens += batch.tokens;
+                seen_seqs += batch.batch_size();
+                let last = batch.sequences.last().unwrap().len();
+                assert!(
+                    batch.tokens - last < target,
+                    "batch of {} tokens overshot by more than its last \
+                     sequence ({last})",
+                    batch.tokens
+                );
+                // Emission accounting stays consistent under skew.
+                assert_eq!(
+                    batch.tokens,
+                    batch.sequences.iter().map(|s| s.len()).sum::<usize>()
+                );
+            }
+        }
+        if let Some(tail) = b.flush() {
+            assert!(tail.tokens < target, "flush only holds sub-target residue");
+            seen_tokens += tail.tokens;
+            seen_seqs += tail.batch_size();
+        }
+        assert_eq!(seen_tokens, total, "token conservation under skew");
+        assert_eq!(seen_seqs, lens.len(), "sequence conservation under skew");
+        assert!(emitted > 50, "the storm actually produced many batches");
+        assert_eq!(b.buffered(), 0);
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn adversarial_carryover_boundary_cases() {
+        // Exact-target hit leaves zero carry-over.
+        let mut b = DynamicBatcher::new(100);
+        b.push_chunk(seqs_of_lens(&[100]));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.tokens, 100);
+        assert_eq!(b.queued_tokens(), 0);
+        // A monster right behind an exact hit emits alone; the stub
+        // behind it is held (below target), never dropped.
+        b.push_chunk(seqs_of_lens(&[100, 3000, 1]));
+        assert_eq!(b.next_batch().unwrap().tokens, 100);
+        let monster = b.next_batch().unwrap();
+        assert_eq!(monster.batch_size(), 1);
+        assert_eq!(monster.tokens, 3000);
+        assert!(b.next_batch().is_none(), "1-token residue keeps buffering");
+        assert_eq!(b.queued_tokens(), 1);
+        assert_eq!(b.flush().unwrap().tokens, 1);
+
+        // Back-to-back monsters: each emits alone, in order.
+        let mut b = DynamicBatcher::new(100);
+        b.push_chunk(seqs_of_lens(&[500, 600, 700]));
+        for expect in [500usize, 600, 700] {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.batch_size(), 1);
+            assert_eq!(batch.tokens, expect);
+        }
+        assert!(b.flush().is_none());
+
+        // All-stubs storm: thousands of length-1 sequences pack to
+        // exactly the target, remainder flushes intact.
+        let mut b = DynamicBatcher::new(64);
+        b.push_chunk(seqs_of_lens(&vec![1usize; 1000]));
+        let mut seen = 0usize;
+        while let Some(batch) = b.next_batch() {
+            assert_eq!(batch.tokens, 64, "stubs pack to exactly N");
+            seen += batch.tokens;
+        }
+        assert_eq!(b.queued_tokens(), 1000 - seen);
+        seen += b.flush().map_or(0, |t| t.tokens);
+        assert_eq!(seen, 1000);
+    }
+
+    #[test]
+    fn queued_tokens_tracks_carryover() {
+        let mut b = DynamicBatcher::new(100);
+        assert_eq!(b.queued_tokens(), 0);
+        b.push_chunk(seqs_of_lens(&[40, 40, 40]));
+        assert_eq!(b.queued_tokens(), 120);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.tokens, 80);
+        assert_eq!(b.queued_tokens(), 40, "carry-over after the cut");
+        b.flush();
+        assert_eq!(b.queued_tokens(), 0);
+        // The fixed baseline reports 0 (doesn't track tokens).
+        let f = FixedBatcher::new(4);
+        assert_eq!(Batcher::queued_tokens(&f), 0);
     }
 
     #[test]

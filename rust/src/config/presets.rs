@@ -70,6 +70,25 @@ impl ModelConfig {
         }
     }
 
+    /// CPU-scale config whose dense side runs the real HSTU attention
+    /// blocks in the reference executor (`runtime::reference`) instead
+    /// of the mean-pool toy — paper-shaped FLOPs at test scale. Kept
+    /// deliberately small (d=16, 1 block) so the O(L²·d) attention stays
+    /// fast enough for the bit-identity grids in CI.
+    pub fn tiny_hstu() -> ModelConfig {
+        ModelConfig {
+            name: "grm-tiny-hstu".into(),
+            emb_dim: 16,
+            hstu_blocks: 1,
+            hstu_heads: 2,
+            experts: 2,
+            expert_top_k: 1,
+            expert_hidden: 16,
+            num_tasks: 2,
+            dim_factor: 1,
+        }
+    }
+
     pub fn with_dim_factor(mut self, f: usize) -> ModelConfig {
         self.dim_factor = f;
         self.name = format!("{}-{}d", self.name, f);
@@ -80,6 +99,7 @@ impl ModelConfig {
     pub fn by_name(name: &str) -> Option<ModelConfig> {
         match name {
             "tiny" => Some(ModelConfig::tiny()),
+            "tiny-hstu" => Some(ModelConfig::tiny_hstu()),
             "small" => Some(ModelConfig::small()),
             "4g" | "grm-4g" => Some(ModelConfig::grm_4g()),
             "110g" | "grm-110g" => Some(ModelConfig::grm_110g()),

@@ -72,9 +72,37 @@ impl Schema {
         }
     }
 
+    /// Three-tier multi-tenant schema (the paper's 1D/8D/64D axis made
+    /// literal, scaled to the model dim): scalar-ish 1D features
+    /// (segments, action types, hour-of-day), mid-dim (8D, clamped)
+    /// id-adjacent features, and full model-dim item/user tables, with
+    /// the exposure alias kept from [`Schema::meituan_mixed`].
+    /// [`crate::embedding::merge::MergePlan`] folds this into **three**
+    /// merge groups — one physical table/optimizer/exchange stack per
+    /// tier — which is what the `multi-tenant` scenario's per-group
+    /// capacity budgets press on.
+    pub fn meituan_tiered(emb_dim: usize) -> Schema {
+        let d = emb_dim;
+        let d_mid = MIXED_CONTEXT_DIM.min(d);
+        Schema {
+            context_features: vec![
+                FeatureConfig::new("user_id", d_mid),
+                FeatureConfig::new("user_city", 1),
+                FeatureConfig::new("user_segment", 1),
+            ],
+            token_features: vec![
+                FeatureConfig::new("item_id", d),
+                FeatureConfig::new("cate_id", d_mid),
+                FeatureConfig::new("action_type", 1),
+                FeatureConfig::new("hour_of_day", 1),
+                FeatureConfig::new("exp_item_id", d).shared("item_id"),
+            ],
+        }
+    }
+
     /// Schema preset names accepted by `--schema`.
     pub fn preset_names() -> &'static [&'static str] {
-        &["meituan", "meituan-mixed"]
+        &["meituan", "meituan-mixed", "meituan-tiered"]
     }
 
     /// Whether `name` is a known preset (CLI validation without needing
@@ -88,6 +116,7 @@ impl Schema {
         match name {
             "meituan" => Ok(Schema::meituan_like(emb_dim, 1)),
             "meituan-mixed" => Ok(Schema::meituan_mixed(emb_dim)),
+            "meituan-tiered" => Ok(Schema::meituan_tiered(emb_dim)),
             other => anyhow::bail!(
                 "unknown schema preset `{other}` (expected one of {:?})",
                 Self::preset_names()
@@ -207,9 +236,30 @@ mod tests {
     }
 
     #[test]
+    fn tiered_schema_has_three_merge_groups() {
+        use crate::embedding::merge::MergePlan;
+        let s = Schema::meituan_tiered(32);
+        assert_eq!(s.num_context_features(), 3);
+        assert_eq!(s.num_token_features(), 5);
+        assert_eq!(s.max_dim(), 32);
+        let dims: std::collections::BTreeSet<usize> =
+            s.all_features().iter().map(|f| f.dim).collect();
+        assert_eq!(dims.into_iter().collect::<Vec<_>>(), vec![1, 8, 32]);
+        let plan = MergePlan::build(&s.all_features());
+        // 7 logical tables (exp_item aliases item), 3 dim tiers.
+        assert_eq!(plan.ops_before, 7);
+        assert_eq!(plan.ops_after, 3);
+        assert_eq!(
+            plan.feature_to_table["item_id"],
+            plan.feature_to_table["exp_item_id"]
+        );
+    }
+
+    #[test]
     fn presets_resolve_by_name() {
         assert!(Schema::is_preset("meituan"));
         assert!(Schema::is_preset("meituan-mixed"));
+        assert!(Schema::is_preset("meituan-tiered"));
         assert!(!Schema::is_preset("bogus"));
         let s = Schema::by_name("meituan", 16).unwrap();
         assert_eq!(s.all_features().len(), 7);

@@ -100,6 +100,16 @@
 //!   every sweep/drain runs in sorted id order, so online runs are
 //!   bit-identical across `--threads` — including the emitted delta
 //!   bytes.
+//! - [`scenario`] — named adversarial / long-run workload presets
+//!   (`--scenario skew-storm|churn-storm|multi-tenant|soak`): each is a
+//!   declarative spec that reshapes the generator, picks a schema,
+//!   tunes admission (count-min day decay, re-admission hysteresis)
+//!   and carries per-group row budgets — composing with the existing
+//!   stream/online stack rather than forking it. Per-scenario
+//!   telemetry (admission/eviction churn, batcher fill/carry-over,
+//!   peak resident rows) lands in `StepRecord`/`TrainReport`;
+//!   `bench_scenarios` runs each preset and the soak suite asserts
+//!   bounded resident state over multi-day runs.
 //! - [`serve`] — the consumer end of the train→sync→serve loop: a
 //!   read-optimized [`serve::ServingReplica`] that folds the trainer's
 //!   rank shards into one striped table per merge group and
@@ -151,6 +161,7 @@ pub mod online;
 pub mod optim;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod sim;
 pub mod train;

@@ -4,8 +4,9 @@
 //! mtgrboost train --model tiny --world 2 --steps 50 [--no-balancing]
 //!                 [--dedup none|comm|lookup|two-stage] [--overlap on|off]
 //!                 [--cross-step on|off] [--threads N] [--lr 0.001]
-//!                 [--schema meituan|meituan-mixed] [--no-merging]
-//!                 [--no-multiplex]
+//!                 [--schema meituan|meituan-mixed|meituan-tiered]
+//!                 [--no-merging] [--no-multiplex]
+//!                 [--scenario skew-storm|churn-storm|multi-tenant|soak]
 //! mtgrboost train --mode online --sync-interval 50 [--intervals N]
 //!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
 //!                 [--sync-dir DIR] [--day-every N] ...
@@ -68,6 +69,21 @@
 //! bytes differ). Unknown preset names
 //! and contradictory combos (`--schema` under `sim`) are rejected up
 //! front; online knobs apply uniformly to every group.
+//!
+//! `--scenario <name>` trains under a named adversarial / long-run
+//! workload preset: `skew-storm` (heavy-tailed sequence lengths that
+//! stress the dynamic batcher), `churn-storm` (flash-sale ID churn with
+//! admission day decay + re-admission hysteresis; requires `--mode
+//! online`), `multi-tenant` (the three-tier `meituan-tiered` schema
+//! with per-group row budgets; offline only) and `soak` (multi-day
+//! bounded-memory soak; requires `--mode online`). A scenario only
+//! reshapes the generator and tunes admission/TTL defaults — seeds and
+//! the training hot path are untouched, so runs stay bit-identical
+//! across `--threads`/`--overlap`/`--cross-step`. Scenario telemetry
+//! (peak resident rows, evictions, batcher carry-over and fill) is
+//! printed after training and included in `--report-json`. Unknown
+//! names, mode mismatches, a conflicting `--schema`, and `--scenario`
+//! under `sim` or `train-dist` are rejected up front.
 
 use anyhow::{bail, Context, Result};
 
@@ -82,6 +98,7 @@ use mtgrboost::dist::{
 use mtgrboost::embedding::dedup::DedupStrategy;
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::runtime::Engine;
+use mtgrboost::scenario::Scenario;
 use mtgrboost::serve::{run_serve, ServeOptions};
 use mtgrboost::sim::{simulate, SimOptions, TableBackend};
 use mtgrboost::train::{Trainer, TrainerOptions};
@@ -117,6 +134,27 @@ fn parse_schema(args: &Args) -> Result<String> {
         );
     }
     Ok(name)
+}
+
+/// Parse + validate `--scenario` at the flag layer (unknown presets,
+/// mode mismatches, a conflicting explicit `--schema`) so the errors
+/// name flags; `TrainerOptions::validate` re-checks all of it.
+fn parse_scenario(args: &Args, online: bool) -> Result<Option<Scenario>> {
+    let Some(name) = args.get("scenario") else {
+        return Ok(None);
+    };
+    let sc = Scenario::by_name(name)?;
+    sc.validate(online)?;
+    if let Some(forced) = sc.schema_override {
+        let schema = args.get_or("schema", forced);
+        if schema != forced && schema != "meituan" {
+            bail!(
+                "--scenario {name} forces --schema {forced} (got --schema {schema}); \
+                 drop --schema or pass the forced preset"
+            );
+        }
+    }
+    Ok(Some(sc))
 }
 
 /// Parse and validate `--mode` plus the online-only knobs, rejecting
@@ -261,6 +299,14 @@ fn parse_train_opts(args: &Args, dist: bool) -> Result<TrainerOptions> {
         &args.get_or("gauc", if dist { "off" } else { "on" }),
     )?;
     opts.online = parse_online_mode(args)?;
+    // Named workload scenario: reshapes the generator and may force a
+    // schema / install admission defaults (`Trainer::new` applies the
+    // online defaults and re-validates). Dist runs are refused here —
+    // scenarios are a single-process harness feature.
+    opts.scenario = parse_scenario(args, opts.online.is_some())?;
+    if dist && opts.scenario.is_some() {
+        bail!("--scenario only applies to single-process `train`, not train-dist");
+    }
     let default_warmup = match &opts.online {
         Some(o) => o.sync_interval,
         None => steps / 4,
@@ -357,6 +403,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.online_expired,
             report.online_synced_rows,
             report.online_sync_bytes as f64 / 1e6
+        );
+    }
+    if let Some(name) = &report.scenario {
+        println!("scenario             : {name}");
+        println!(
+            "peak resident rows   : {} ({} row-budget evictions)",
+            report.peak_resident_rows, report.total_evictions
+        );
+        println!(
+            "batcher carry/fill   : {:.0} tokens carried, {:.2} fill",
+            report.batcher_carryover_mean, report.batcher_fill_mean
         );
     }
     println!(
@@ -508,6 +565,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
         bail!(
             "--schema only applies to `train`; the simulator models the \
              schema analytically (use --merge-groups for the fused-op count)"
+        );
+    }
+    if args.get("scenario").is_some() {
+        bail!(
+            "--scenario only applies to `train`; the simulator has no data \
+             stream or admission machinery to reshape"
         );
     }
     let model = args.get_or("model", "4g");
@@ -758,6 +821,71 @@ mod tests {
         assert_eq!(parse_schema(&a).unwrap(), "meituan-mixed");
         let a = args_of(&["train"]);
         assert_eq!(parse_schema(&a).unwrap(), "meituan");
+    }
+
+    #[test]
+    fn scenario_flag_validation() {
+        // Unknown names rejected with the candidate list.
+        let a = args_of(&["train", "--scenario", "bogus"]);
+        let err = parse_scenario(&a, false).unwrap_err().to_string();
+        assert!(err.contains("unknown scenario"), "{err}");
+        assert!(err.contains("skew-storm"), "candidates listed: {err}");
+        // Omitted flag → no scenario.
+        assert!(parse_scenario(&args_of(&["train"]), false).unwrap().is_none());
+
+        // Online-only presets need --mode online; the offline-only one
+        // rejects it.
+        for name in ["churn-storm", "soak"] {
+            let a = args_of(&["train", "--scenario", name]);
+            let err = parse_scenario(&a, false).unwrap_err().to_string();
+            assert!(err.contains("--mode online"), "{err}");
+            assert!(parse_scenario(&a, true).unwrap().is_some());
+        }
+        let a = args_of(&["train", "--scenario", "multi-tenant"]);
+        assert!(parse_scenario(&a, true).is_err(), "offline-only");
+        assert!(parse_scenario(&a, false).unwrap().is_some());
+        let a = args_of(&["train", "--scenario", "skew-storm"]);
+        assert!(parse_scenario(&a, false).unwrap().is_some(), "either mode");
+        assert!(parse_scenario(&a, true).unwrap().is_some());
+
+        // A conflicting explicit --schema is rejected; the forced
+        // preset (or the untouched default) passes.
+        let a = args_of(&[
+            "train", "--scenario", "multi-tenant", "--schema", "meituan-mixed",
+        ]);
+        let err = parse_scenario(&a, false).unwrap_err().to_string();
+        assert!(err.contains("meituan-tiered"), "{err}");
+        let a = args_of(&[
+            "train", "--scenario", "multi-tenant", "--schema", "meituan-tiered",
+        ]);
+        assert!(parse_scenario(&a, false).unwrap().is_some());
+    }
+
+    #[test]
+    fn scenario_wires_into_train_opts_and_is_refused_elsewhere() {
+        let a = args_of(&["train", "--scenario", "skew-storm", "--steps", "4"]);
+        let o = parse_train_opts(&a, false).unwrap();
+        assert_eq!(o.scenario.as_ref().unwrap().name, "skew-storm");
+
+        // train-dist refuses scenarios at the flag layer.
+        let err = parse_train_opts(&a, true).unwrap_err().to_string();
+        assert!(err.contains("--scenario"), "{err}");
+
+        // The simulator refuses the flag like it refuses --schema.
+        let err = cmd_sim(&args_of(&["sim", "--scenario", "soak"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--scenario"), "{err}");
+
+        // An online-only preset parses with the full online tail and
+        // lands in the options.
+        let a = args_of(&[
+            "train", "--scenario", "soak", "--mode", "online",
+            "--sync-interval", "5", "--intervals", "2",
+        ]);
+        let o = parse_train_opts(&a, false).unwrap();
+        assert_eq!(o.scenario.as_ref().unwrap().name, "soak");
+        assert!(o.online.is_some());
     }
 
     #[test]

@@ -43,6 +43,17 @@ pub struct AdmissionConfig {
     pub sketch_depth: usize,
     /// Seed for both the sketch hashes and the admission lottery.
     pub seed: u64,
+    /// Halve every sketch counter when the stream's day advances
+    /// ([`FeatureAdmission::advance_day`]): yesterday's flash-sale
+    /// counts stop vouching for today's IDs. Off by default (the
+    /// historical behavior — counts accumulate forever).
+    pub day_decay: bool,
+    /// Re-admission hysteresis: an ID the TTL sweeper retired
+    /// ([`FeatureAdmission::note_retired`]) must reach
+    /// `threshold + readmit_margin` before re-admission, so an ID
+    /// oscillating around the threshold doesn't thrash
+    /// allocate/evict/allocate. `0` disables hysteresis.
+    pub readmit_margin: u32,
 }
 
 impl AdmissionConfig {
@@ -53,7 +64,19 @@ impl AdmissionConfig {
             sketch_width: 1 << 14,
             sketch_depth: 4,
             seed: 0xAD317,
+            day_decay: false,
+            readmit_margin: 0,
         }
+    }
+
+    pub fn with_day_decay(mut self, on: bool) -> Self {
+        self.day_decay = on;
+        self
+    }
+
+    pub fn with_readmit_margin(mut self, margin: u32) -> Self {
+        self.readmit_margin = margin;
+        self
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -83,6 +106,11 @@ pub struct FeatureAdmission {
     /// Observations that ended in admission / rejection (cumulative).
     admitted: u64,
     rejected: u64,
+    /// IDs the TTL sweeper retired; they face the hysteresis margin
+    /// until re-admitted. Empty unless `readmit_margin > 0`.
+    retired: std::collections::HashSet<GlobalId>,
+    /// Days observed via [`FeatureAdmission::advance_day`].
+    days: u64,
 }
 
 impl FeatureAdmission {
@@ -92,12 +120,53 @@ impl FeatureAdmission {
             counters: vec![0; cells],
             admitted: 0,
             rejected: 0,
+            retired: std::collections::HashSet::new(),
+            days: 0,
             cfg,
         }
     }
 
     pub fn config(&self) -> &AdmissionConfig {
         &self.cfg
+    }
+
+    /// The stream's day advanced. With `day_decay` every sketch
+    /// counter is halved — exponential decay at day granularity, so a
+    /// flash-sale ID that vanished stops looking hot after a couple of
+    /// days. Deterministic (pure state transform, no RNG).
+    pub fn advance_day(&mut self) {
+        self.days += 1;
+        if self.cfg.day_decay {
+            for c in &mut self.counters {
+                *c >>= 1;
+            }
+        }
+    }
+
+    /// Days seen so far.
+    pub fn days(&self) -> u64 {
+        self.days
+    }
+
+    /// The TTL sweeper retired `id`'s row: with hysteresis on, future
+    /// re-admission needs `threshold + readmit_margin`. No-op when the
+    /// margin is 0 (keeps the legacy memory profile).
+    pub fn note_retired(&mut self, id: GlobalId) {
+        if self.cfg.readmit_margin > 0 {
+            self.retired.insert(id);
+        }
+    }
+
+    /// Read-only count-min estimate for `id` (min over its cells).
+    pub fn estimate(&self, id: GlobalId) -> u32 {
+        let w = self.cfg.sketch_width as u64;
+        let depth = self.cfg.sketch_depth.min(8);
+        let mut est = u32::MAX;
+        for d in 0..depth {
+            let h = hash_id(id, self.cfg.seed ^ (d as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            est = est.min(self.counters[d * self.cfg.sketch_width + (h % w) as usize]);
+        }
+        est
     }
 
     /// The pure admission decision for an ID whose estimated count just
@@ -136,15 +205,20 @@ impl FeatureAdmission {
                 self.counters[idx] = count;
             }
         }
-        let admit = Self::decide(
-            self.cfg.seed,
-            id,
-            count,
-            self.cfg.threshold,
-            self.cfg.admit_prob,
-        );
+        // Retired IDs face the hysteresis margin on top of the base
+        // threshold (the lottery still uses the effective threshold's
+        // decision, keeping `decide` pure).
+        let threshold = if self.cfg.readmit_margin > 0 && self.retired.contains(&id) {
+            self.cfg.threshold.saturating_add(self.cfg.readmit_margin)
+        } else {
+            self.cfg.threshold
+        };
+        let admit = Self::decide(self.cfg.seed, id, count, threshold, self.cfg.admit_prob);
         if admit {
             self.admitted += 1;
+            if self.cfg.readmit_margin > 0 {
+                self.retired.remove(&id);
+            }
         } else {
             self.rejected += 1;
         }
@@ -227,6 +301,68 @@ mod tests {
         let db: Vec<bool> = seq.iter().map(|&id| b.observe(id)).collect();
         assert_eq!(da, db);
         assert_eq!(a.totals(), b.totals());
+    }
+
+    #[test]
+    fn day_decay_halves_counts_across_days() {
+        // Without decay: 2 observations on day 0 + 1 on day 1 reach a
+        // threshold of 3. With decay the day boundary halves the count
+        // (2 → 1), so the same sequence stays below threshold.
+        let mut plain = FeatureAdmission::new(AdmissionConfig::new(3, 0.0));
+        let mut decay =
+            FeatureAdmission::new(AdmissionConfig::new(3, 0.0).with_day_decay(true));
+        for a in [&mut plain, &mut decay] {
+            assert!(!a.observe(42));
+            assert!(!a.observe(42));
+            a.advance_day();
+        }
+        assert_eq!(plain.estimate(42), 2, "no decay: count survives the day");
+        assert_eq!(decay.estimate(42), 1, "decay: count halved");
+        assert!(plain.observe(42), "3rd observation admits without decay");
+        assert!(!decay.observe(42), "decayed count 1+1=2 < 3");
+        assert!(decay.observe(42), "but one more observation admits");
+        assert_eq!(decay.days(), 1);
+    }
+
+    #[test]
+    fn decay_is_deterministic() {
+        let cfg = AdmissionConfig::new(4, 0.1).with_day_decay(true);
+        let seq: Vec<u64> = (0..3000).map(|i| (i * 7 + 1) % 400).collect();
+        let run = |cfg: AdmissionConfig| {
+            let mut a = FeatureAdmission::new(cfg);
+            let mut decisions = Vec::new();
+            for (i, &id) in seq.iter().enumerate() {
+                if i % 500 == 499 {
+                    a.advance_day();
+                }
+                decisions.push(a.observe(id));
+            }
+            (decisions, a.totals())
+        };
+        assert_eq!(run(cfg.clone()), run(cfg));
+    }
+
+    #[test]
+    fn readmission_hysteresis_raises_the_bar_once() {
+        let mut a =
+            FeatureAdmission::new(AdmissionConfig::new(2, 0.0).with_readmit_margin(2));
+        assert!(!a.observe(9), "count 1 < 2");
+        assert!(a.observe(9), "count 2 admits");
+        // The sweeper retires the row: effective threshold is now 4.
+        a.note_retired(9);
+        assert!(!a.observe(9), "count 3 < 2+2 margin");
+        assert!(a.observe(9), "count 4 re-admits");
+        // Re-admission clears the hysteresis: back to the base bar.
+        assert!(a.observe(9), "count 5 >= 2, no margin anymore");
+    }
+
+    #[test]
+    fn zero_margin_keeps_legacy_behavior() {
+        let mut a = FeatureAdmission::new(AdmissionConfig::new(2, 0.0));
+        assert!(!a.observe(5));
+        assert!(a.observe(5));
+        a.note_retired(5); // no-op with margin 0
+        assert!(a.observe(5), "retirement without margin changes nothing");
     }
 
     #[test]

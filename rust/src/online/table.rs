@@ -129,6 +129,15 @@ impl OnlineTable {
         self.expired
     }
 
+    /// The stream's day advanced: decay the admission sketch (when the
+    /// scenario enabled `day_decay`). No-op in passthrough mode or
+    /// without admission.
+    pub fn advance_day(&mut self) {
+        if let Some(a) = &mut self.admission {
+            a.advance_day();
+        }
+    }
+
     /// Admission decision + bookkeeping for one training-time
     /// occurrence of `id`. Serial by construction (`&mut self`).
     fn admit_and_touch(&mut self, id: GlobalId) -> bool {
@@ -194,6 +203,11 @@ impl OnlineTable {
             // One audited removal path: table row + optimizer state +
             // touch stamp + delta record all retire together.
             self.remove_row(id, opt);
+            // Re-admission hysteresis: the sketch remembers the
+            // retirement so the id must out-earn the margin to return.
+            if let Some(a) = &mut self.admission {
+                a.note_retired(id);
+            }
         }
         self.expired += expired.len() as u64;
         expired.len()
@@ -478,6 +492,55 @@ mod tests {
         assert_eq!(n, 1);
         assert!(o.row_state(7).is_none(), "expiry must drop Adam state");
         assert!(!gate.inner().contains(7));
+    }
+
+    #[test]
+    fn swept_rows_face_readmission_hysteresis() {
+        // threshold 1 admits on first sight; margin 2 means a swept row
+        // must climb to an estimated count of 3 before returning.
+        let mut gate = OnlineTable::online(
+            table(),
+            Some(FeatureAdmission::new(
+                AdmissionConfig::new(1, 0.0).with_readmit_margin(2),
+            )),
+        );
+        let mut o = opt();
+        let mut buf = vec![0.0f32; DIM];
+        gate.set_step(0);
+        EmbeddingStore::lookup_or_insert(&mut gate, 11, &mut buf);
+        assert_eq!(EmbeddingStore::len(&gate), 1, "count 1 >= threshold 1");
+        gate.set_step(10);
+        assert_eq!(gate.sweep_expired(5, &mut o), 1);
+        assert_eq!(EmbeddingStore::len(&gate), 0);
+        // Count 2 < 1 + margin 2: served the default row, no realloc.
+        EmbeddingStore::lookup_or_insert(&mut gate, 11, &mut buf);
+        assert_eq!(EmbeddingStore::len(&gate), 0, "hysteresis blocks thrash");
+        assert_eq!(buf, vec![0.0; DIM]);
+        // Count 3 clears the raised bar: the row is re-admitted.
+        EmbeddingStore::lookup_or_insert(&mut gate, 11, &mut buf);
+        assert_eq!(EmbeddingStore::len(&gate), 1);
+    }
+
+    #[test]
+    fn day_decay_propagates_through_the_gate() {
+        let mut gate = OnlineTable::online(
+            table(),
+            Some(FeatureAdmission::new(
+                AdmissionConfig::new(3, 0.0).with_day_decay(true),
+            )),
+        );
+        let mut buf = vec![0.0f32; DIM];
+        EmbeddingStore::lookup_or_insert(&mut gate, 8, &mut buf);
+        EmbeddingStore::lookup_or_insert(&mut gate, 8, &mut buf);
+        gate.advance_day(); // count 2 → 1
+        EmbeddingStore::lookup_or_insert(&mut gate, 8, &mut buf);
+        assert_eq!(
+            EmbeddingStore::len(&gate),
+            0,
+            "decayed count 1+1=2 < 3 keeps the id out"
+        );
+        EmbeddingStore::lookup_or_insert(&mut gate, 8, &mut buf);
+        assert_eq!(EmbeddingStore::len(&gate), 1, "count 3 admits");
     }
 
     #[test]

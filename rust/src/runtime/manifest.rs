@@ -50,6 +50,19 @@ impl Bucket {
     }
 }
 
+/// Dense architecture the reference backend executes for a model. PJRT
+/// artifacts carry their architecture inside the compiled HLO, so this
+/// only steers the built-in reference executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelArch {
+    /// Masked mean-pool + per-task linear heads (the historical toy).
+    MeanPool,
+    /// HSTU-style pointwise-gated attention blocks (SiLU-gated causal
+    /// attention over variable-length sequences) feeding the same
+    /// heads — paper-shaped dense FLOPs.
+    Hstu,
+}
+
 /// Everything the runtime knows about one model.
 #[derive(Clone, Debug)]
 pub struct ModelArtifacts {
@@ -63,6 +76,8 @@ pub struct ModelArtifacts {
     /// Seed mixed into built-in parameter generation (the manifest
     /// seed); ignored when `params_bin` names a real file.
     pub params_seed: u64,
+    /// Dense architecture for the reference executor.
+    pub arch: ModelArch,
     /// Sorted ascending by (batch, len).
     pub buckets: Vec<Bucket>,
 }
@@ -158,6 +173,9 @@ impl Manifest {
                     param_count: m.expect_usize("param_count")?,
                     params_bin: m.expect_str("params_bin")?.to_string(),
                     params_seed: seed,
+                    // On-disk manifests describe compiled HLO; the
+                    // reference arch only matters for built-in models.
+                    arch: ModelArch::MeanPool,
                     buckets,
                 },
             );
@@ -175,13 +193,15 @@ impl Manifest {
             .with_context(|| format!("model `{name}` not in manifest"))
     }
 
-    /// Build the in-memory reference manifest: the CPU-scale `tiny` and
-    /// `small` presets with built-in deterministic parameters and a
-    /// small ladder of (batch, length) buckets. This is what
-    /// [`crate::runtime::Engine::reference`] serves — no files involved.
+    /// Build the in-memory reference manifest: the CPU-scale `tiny`,
+    /// `tiny-hstu` and `small` presets with built-in deterministic
+    /// parameters and a small ladder of (batch, length) buckets. This is
+    /// what [`crate::runtime::Engine::reference`] serves — no files
+    /// involved. `tiny-hstu` runs the real HSTU attention blocks in the
+    /// reference executor; the others keep the mean-pool dense toy.
     pub fn reference(seed: u64) -> Manifest {
         let mut models = BTreeMap::new();
-        for name in ["tiny", "small"] {
+        for name in ["tiny", "tiny-hstu", "small"] {
             let cfg = crate::config::ModelConfig::by_name(name)
                 .expect("reference presets exist");
             let buckets = [(4usize, 32usize), (8, 64), (16, 128), (32, 256)]
@@ -204,6 +224,11 @@ impl Manifest {
                     param_count: cfg.dense_params(),
                     params_bin: BUILTIN.to_string(),
                     params_seed: seed,
+                    arch: if name == "tiny-hstu" {
+                        ModelArch::Hstu
+                    } else {
+                        ModelArch::MeanPool
+                    },
                     buckets,
                 },
             );

@@ -13,9 +13,11 @@
 //!   are owned by a driver thread. Without the `pjrt` feature the same
 //!   channel is served by the reference backend.
 //! - [`reference`] — deterministic pure-Rust train/forward executor
-//!   (masked mean-pool + per-task linear heads + BCE, analytic
-//!   gradients) honoring the exact artifact contract, so the full
-//!   distributed trainer runs offline and bit-reproducibly. The train
+//!   honoring the exact artifact contract, so the full distributed
+//!   trainer runs offline and bit-reproducibly. Two dense architectures
+//!   ([`ModelArch`]): masked mean-pool + per-task linear heads + BCE
+//!   (the historical toy), and HSTU-style pointwise-gated attention
+//!   blocks (`tiny-hstu`) with an exact recomputed backward. The train
 //!   path chunks the batch over the shared worker pool (fixed chunk
 //!   count, chunk-ordered partial-reduction fold) so the dense
 //!   forward/backward scales with threads while staying bit-identical
@@ -28,5 +30,5 @@ pub mod manifest;
 pub mod reference;
 
 pub use engine::{Engine, Tensor, TrainOutputs};
-pub use manifest::{ArtifactKind, Bucket, Manifest, ModelArtifacts};
+pub use manifest::{ArtifactKind, Bucket, Manifest, ModelArch, ModelArtifacts};
 pub use reference::TrainScratch;

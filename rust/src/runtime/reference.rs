@@ -14,11 +14,24 @@
 //! forward: (params, emb, lengths) → (logits[B,T],)
 //! ```
 //!
-//! Model: per-sequence masked mean-pool over the valid positions, then
-//! one linear head per task on the first `T·(D+1)` parameters, with
-//! binary cross-entropy losses. Gradients are analytic (verified by a
-//! finite-difference test below) and flow to both the head parameters
-//! and the embedding input, so sparse rows genuinely train.
+//! Two dense architectures share the contract ([`ModelArch`] on the
+//! artifacts picks one):
+//!
+//! - **Mean-pool** (the historical toy): per-sequence masked mean-pool
+//!   over the valid positions, then one linear head per task on the
+//!   first `T·(D+1)` parameters, with binary cross-entropy losses.
+//! - **HSTU** (`tiny-hstu`): a stack of HSTU-style pointwise-gated
+//!   attention blocks ported from `python/compile/kernels/hstu.py` —
+//!   per head, `P = SiLU((Q·Kᵀ)/√dh)·causal_mask/len` (no softmax),
+//!   `M = P·V`, gated `A = M ⊙ U`, residual `y = x + A·Wo` — followed
+//!   by the same mean-pool + heads on the final hidden state. The
+//!   backward is exact and recomputes each block's tape from its stored
+//!   input (FlashAttention-style recomputation, like the Python
+//!   custom-VJP), so only `blocks+1` activations are kept per sample.
+//!
+//! Gradients are analytic (verified by finite-difference tests below)
+//! and flow to both the dense parameters and the embedding input, so
+//! sparse rows genuinely train.
 //!
 //! **Parallel, thread-count-invariant execution.** Per-sample work is
 //! independent, so [`train_into`] splits the batch into a *fixed*
@@ -41,7 +54,7 @@ use anyhow::{bail, ensure, Result};
 use crate::util::pool::{SharedSliceMut, WorkerPool};
 
 use super::engine::Tensor;
-use super::manifest::{ArtifactKind, ModelArtifacts};
+use super::manifest::{ArtifactKind, ModelArch, ModelArtifacts};
 
 /// Fixed batch-chunk count for the parallel dense executor. Chunk
 /// boundaries — and therefore the partial-reduction fold — are a pure
@@ -62,6 +75,324 @@ fn softplus(z: f32) -> f32 {
     } else {
         z.exp().ln_1p()
     }
+}
+
+#[inline]
+fn silu(z: f32) -> f32 {
+    z * sigmoid(z)
+}
+
+/// d SiLU / dz = σ(z)·(1 + z·(1 − σ(z))).
+#[inline]
+fn dsilu(z: f32) -> f32 {
+    let s = sigmoid(z);
+    s * (1.0 + z * (1.0 - s))
+}
+
+/// Dense parameters consumed per HSTU block: five d×d projections
+/// (`Wq Wk Wv Wu Wo` in that order) followed by `9d` reserved slots
+/// (the config's per-block bias/norm budget — carried at zero gradient
+/// so the parameter count matches [`crate::config::ModelConfig::dense_params`]).
+pub fn hstu_block_stride(d: usize) -> usize {
+    5 * d * d + 9 * d
+}
+
+/// Offset of HSTU block `b`'s parameters: the `t·(d+1)` task heads come
+/// first (shared with the mean-pool layout), then one stride per block.
+pub fn hstu_block_off(t: usize, d: usize, b: usize) -> usize {
+    t * (d + 1) + b * hstu_block_stride(d)
+}
+
+/// Slice the five d×d projection matrices of HSTU block `b` out of the
+/// flat parameter vector (layout at [`hstu_block_off`]).
+fn hstu_block_weights(
+    params: &[f32],
+    t: usize,
+    d: usize,
+    b: usize,
+) -> (&[f32], &[f32], &[f32], &[f32], &[f32]) {
+    let off = hstu_block_off(t, d, b);
+    let dd = d * d;
+    (
+        &params[off..off + dd],
+        &params[off + dd..off + 2 * dd],
+        &params[off + 2 * dd..off + 3 * dd],
+        &params[off + 3 * dd..off + 4 * dd],
+        &params[off + 4 * dd..off + 5 * dd],
+    )
+}
+
+/// `out[p,j] = Σ_k x[p,k]·w[k·d+j]` — n×d input against a row-major
+/// d×d weight, overwriting `out`.
+fn matmul_nd(x: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    for p in 0..n {
+        for j in 0..d {
+            let mut acc = 0.0f32;
+            for kx in 0..d {
+                acc += x[p * d + kx] * w[kx * d + j];
+            }
+            out[p * d + j] = acc;
+        }
+    }
+}
+
+/// `out[p,k] += Σ_j g[p,j]·w[k·d+j]` — gradient through a row-major
+/// d×d weight (accumulating).
+fn matmul_nd_wt(g: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    for p in 0..n {
+        for kx in 0..d {
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                acc += g[p * d + j] * w[kx * d + j];
+            }
+            out[p * d + kx] += acc;
+        }
+    }
+}
+
+/// `dw[k·d+j] += Σ_p x[p,k]·g[p,j]` — weight gradient of a row-major
+/// d×d projection (accumulating, fixed ascending-`p` order).
+fn accum_wgrad(x: &[f32], g: &[f32], n: usize, d: usize, dw: &mut [f32]) {
+    for p in 0..n {
+        for kx in 0..d {
+            let xv = x[p * d + kx];
+            for j in 0..d {
+                dw[kx * d + j] += xv * g[p * d + j];
+            }
+        }
+    }
+}
+
+/// Forward one sample through the HSTU block stack. `x0` holds the
+/// sample's `len` valid embedding rows (len×d). Returns the activation
+/// tape: `xs[b]` is block `b`'s input, `xs[blocks]` the final hidden
+/// state — everything else is recomputed by the backward.
+fn hstu_sample_forward(
+    params: &[f32],
+    x0: Vec<f32>,
+    len: usize,
+    d: usize,
+    heads: usize,
+    blocks: usize,
+    t: usize,
+) -> Vec<Vec<f32>> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let inv_n = 1.0 / len.max(1) as f32;
+    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(blocks + 1);
+    xs.push(x0);
+    let mut q = vec![0.0f32; len * d];
+    let mut k = vec![0.0f32; len * d];
+    let mut v = vec![0.0f32; len * d];
+    let mut u = vec![0.0f32; len * d];
+    for b in 0..blocks {
+        let (wq, wk, wv, wu, wo) = hstu_block_weights(params, t, d, b);
+        let x = xs.last().unwrap().clone();
+        matmul_nd(&x, wq, len, d, &mut q);
+        matmul_nd(&x, wk, len, d, &mut k);
+        matmul_nd(&x, wv, len, d, &mut v);
+        matmul_nd(&x, wu, len, d, &mut u);
+        // SiLU-gated causal attention per head (the pointwise kernel:
+        // no softmax, mask + 1/len folded into the weights). Only
+        // kk ≤ p positions contribute, and every row is valid (x holds
+        // exactly the `len` real rows).
+        let mut m = vec![0.0f32; len * d];
+        for h in 0..heads {
+            let hc = h * dh;
+            for p in 0..len {
+                for kk in 0..=p {
+                    let mut s = 0.0f32;
+                    for jj in 0..dh {
+                        s += q[p * d + hc + jj] * k[kk * d + hc + jj];
+                    }
+                    let w = silu(s * scale) * inv_n;
+                    for jj in 0..dh {
+                        m[p * d + hc + jj] += w * v[kk * d + hc + jj];
+                    }
+                }
+            }
+        }
+        // U gate, output projection, residual: y = x + (M ⊙ U)·Wo.
+        let mut a = m;
+        for (av, uv) in a.iter_mut().zip(u.iter()) {
+            *av *= *uv;
+        }
+        let mut y = x;
+        for p in 0..len {
+            for jj in 0..d {
+                let mut acc = 0.0f32;
+                for kx in 0..d {
+                    acc += a[p * d + kx] * wo[kx * d + jj];
+                }
+                y[p * d + jj] += acc;
+            }
+        }
+        xs.push(y);
+    }
+    xs
+}
+
+/// Backward through the HSTU stack. `gy` enters as dL/d(final hidden
+/// state) and leaves as dL/d(embedding rows); parameter gradients
+/// accumulate into `grads` (full-length dense gradient vector). Each
+/// block's Q/K/V/U/scores are recomputed from its stored input.
+fn hstu_sample_backward(
+    params: &[f32],
+    xs: &[Vec<f32>],
+    gy: &mut [f32],
+    grads: &mut [f32],
+    len: usize,
+    d: usize,
+    heads: usize,
+    blocks: usize,
+    t: usize,
+) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let inv_n = 1.0 / len.max(1) as f32;
+    let dd = d * d;
+    let mut q = vec![0.0f32; len * d];
+    let mut k = vec![0.0f32; len * d];
+    let mut v = vec![0.0f32; len * d];
+    let mut u = vec![0.0f32; len * d];
+    for b in (0..blocks).rev() {
+        let off = hstu_block_off(t, d, b);
+        let (wq, wk, wv, wu, wo) = hstu_block_weights(params, t, d, b);
+        let x = &xs[b];
+        matmul_nd(x, wq, len, d, &mut q);
+        matmul_nd(x, wk, len, d, &mut k);
+        matmul_nd(x, wv, len, d, &mut v);
+        matmul_nd(x, wu, len, d, &mut u);
+        // Recompute M, keeping the pre-activation scores for dSiLU.
+        let mut m = vec![0.0f32; len * d];
+        let mut s_all = vec![0.0f32; heads * len * len];
+        for h in 0..heads {
+            let hc = h * dh;
+            let s_mat = &mut s_all[h * len * len..(h + 1) * len * len];
+            for p in 0..len {
+                for kk in 0..=p {
+                    let mut s = 0.0f32;
+                    for jj in 0..dh {
+                        s += q[p * d + hc + jj] * k[kk * d + hc + jj];
+                    }
+                    let sv = s * scale;
+                    s_mat[p * len + kk] = sv;
+                    let w = silu(sv) * inv_n;
+                    for jj in 0..dh {
+                        m[p * d + hc + jj] += w * v[kk * d + hc + jj];
+                    }
+                }
+            }
+        }
+        // Output projection: dWo += Aᵀ·gy, gA = gy·Woᵀ (reads of the
+        // incoming gy all happen before it is overwritten below).
+        let mut a = vec![0.0f32; len * d];
+        for idx in 0..len * d {
+            a[idx] = m[idx] * u[idx];
+        }
+        accum_wgrad(&a, gy, len, d, &mut grads[off + 4 * dd..off + 5 * dd]);
+        let mut ga = vec![0.0f32; len * d];
+        matmul_nd_wt(gy, wo, len, d, &mut ga);
+        // U gate backward: gU = gA ⊙ M, gM = gA ⊙ U.
+        let mut gu = vec![0.0f32; len * d];
+        let mut gm = vec![0.0f32; len * d];
+        for idx in 0..len * d {
+            gu[idx] = ga[idx] * m[idx];
+            gm[idx] = ga[idx] * u[idx];
+        }
+        // Attention backward per head, gP/gS fused per (p, kk) pair so
+        // no len×len gradient is materialized:
+        //   gP[p,kk] = gM_h[p]·V_h[kk]      gV_h[kk] += P[p,kk]·gM_h[p]
+        //   gS = gP·(1/len)·SiLU'(S)·(1/√dh)
+        //   gQ_h[p] += gS·K_h[kk]           gK_h[kk] += gS·Q_h[p]
+        let mut gq = vec![0.0f32; len * d];
+        let mut gk = vec![0.0f32; len * d];
+        let mut gv = vec![0.0f32; len * d];
+        for h in 0..heads {
+            let hc = h * dh;
+            let s_mat = &s_all[h * len * len..(h + 1) * len * len];
+            for p in 0..len {
+                for kk in 0..=p {
+                    let sv = s_mat[p * len + kk];
+                    let w = silu(sv) * inv_n;
+                    let mut gp = 0.0f32;
+                    for jj in 0..dh {
+                        let g = gm[p * d + hc + jj];
+                        gp += g * v[kk * d + hc + jj];
+                        gv[kk * d + hc + jj] += w * g;
+                    }
+                    let gs = gp * inv_n * dsilu(sv) * scale;
+                    for jj in 0..dh {
+                        gq[p * d + hc + jj] += gs * k[kk * d + hc + jj];
+                        gk[kk * d + hc + jj] += gs * q[p * d + hc + jj];
+                    }
+                }
+            }
+        }
+        // Projection weight grads + input grad (residual term is the
+        // incoming gy itself, so the four products accumulate onto it).
+        accum_wgrad(x, &gq, len, d, &mut grads[off..off + dd]);
+        accum_wgrad(x, &gk, len, d, &mut grads[off + dd..off + 2 * dd]);
+        accum_wgrad(x, &gv, len, d, &mut grads[off + 2 * dd..off + 3 * dd]);
+        accum_wgrad(x, &gu, len, d, &mut grads[off + 3 * dd..off + 4 * dd]);
+        matmul_nd_wt(&gq, wq, len, d, gy);
+        matmul_nd_wt(&gk, wk, len, d, gy);
+        matmul_nd_wt(&gv, wv, len, d, gy);
+        matmul_nd_wt(&gu, wu, len, d, gy);
+    }
+}
+
+/// Masked mean-pool over the final hidden state + the task heads —
+/// shared verbatim by the HSTU train and forward paths so their logits
+/// are bit-identical. With `len == 0`, `xfin` is never read and the
+/// logits are the head biases (pooled = 0).
+fn pooled_logits(
+    params: &[f32],
+    xfin: &[f32],
+    len: usize,
+    d: usize,
+    t: usize,
+    pooled: &mut [f32],
+    logits: &mut [f32],
+) {
+    pooled.fill(0.0);
+    if len > 0 {
+        for pos in 0..len {
+            for jj in 0..d {
+                pooled[jj] += xfin[pos * d + jj];
+            }
+        }
+        let inv = 1.0 / len as f32;
+        for a in pooled.iter_mut() {
+            *a *= inv;
+        }
+    }
+    for kt in 0..t {
+        let off = kt * (d + 1);
+        let w = &params[off..off + d];
+        let mut z = params[off + d];
+        for jj in 0..d {
+            z += w[jj] * pooled[jj];
+        }
+        logits[kt] = z;
+    }
+}
+
+/// Validate the HSTU shape contract (head divisibility + parameter
+/// budget for the full block stack).
+fn ensure_hstu_shape(arts: &ModelArtifacts, d: usize, t: usize, p: usize) -> Result<()> {
+    ensure!(
+        arts.heads >= 1 && d % arts.heads == 0,
+        "HSTU needs emb_dim divisible by heads (d={d}, heads={})",
+        arts.heads
+    );
+    let need = hstu_block_off(t, d, arts.blocks);
+    ensure!(
+        p >= need,
+        "HSTU model needs {need} dense params ({} blocks at d={d}), manifest says {p}",
+        arts.blocks
+    );
+    Ok(())
 }
 
 /// Reusable output + intermediate buffers for [`train_into`]: the
@@ -187,6 +518,105 @@ fn train_chunk(
     }
 }
 
+/// One chunk's HSTU forward + backward over samples `r` — the same
+/// disjoint-window contract as [`train_chunk`], with the block stack in
+/// place of the bare mean-pool. Per-sample work is independent and runs
+/// in a fixed arithmetic order, so chunked execution stays bit-identical
+/// at every pool size.
+#[allow(clippy::too_many_arguments)]
+fn hstu_train_chunk(
+    params: &[f32],
+    emb: &[f32],
+    lengths: &[i32],
+    labels: &[f32],
+    r: Range<usize>,
+    l: usize,
+    d: usize,
+    t: usize,
+    heads: usize,
+    blocks: usize,
+    pool_c: &mut [f32],
+    logits_c: &mut [f32],
+    dz_c: &mut [f32],
+    eg_c: &mut [f32],
+    loss_c: &mut [f32],
+    grads_c: &mut [f32],
+    valid_c: &mut f32,
+) {
+    let base = r.start;
+    let mut gpool = vec![0.0f32; d];
+    for i in r {
+        let j = i - base;
+        let len = lengths[i].clamp(0, l as i32) as usize;
+        if len == 0 {
+            // Padded sample: logits from the zero pooled state (head
+            // biases), gradients exactly zero, not counted valid.
+            pooled_logits(
+                params,
+                &[],
+                0,
+                d,
+                t,
+                &mut pool_c[j * d..(j + 1) * d],
+                &mut logits_c[j * t..(j + 1) * t],
+            );
+            continue;
+        }
+        let mut x0 = vec![0.0f32; len * d];
+        x0.copy_from_slice(&emb[(i * l) * d..(i * l + len) * d]);
+        let xs = hstu_sample_forward(params, x0, len, d, heads, blocks, t);
+        pooled_logits(
+            params,
+            xs.last().unwrap(),
+            len,
+            d,
+            t,
+            &mut pool_c[j * d..(j + 1) * d],
+            &mut logits_c[j * t..(j + 1) * t],
+        );
+        *valid_c += 1.0;
+
+        // ---- loss + dz + head parameter gradients -------------------
+        for kt in 0..t {
+            let z = logits_c[j * t + kt];
+            let y = labels[i * t + kt];
+            loss_c[kt] += softplus(z) - y * z;
+            dz_c[j * t + kt] = sigmoid(z) - y;
+        }
+        for kt in 0..t {
+            let g = dz_c[j * t + kt];
+            let off = kt * (d + 1);
+            for jj in 0..d {
+                grads_c[off + jj] += g * pool_c[j * d + jj];
+            }
+            grads_c[off + d] += g;
+        }
+
+        // ---- backward: heads → pooled → rows → block stack ----------
+        // d loss / d pooled, broadcast at 1/len to every valid row (the
+        // mean-pool backward), then pushed through the blocks with
+        // recomputation.
+        let inv = 1.0 / len as f32;
+        gpool.fill(0.0);
+        for kt in 0..t {
+            let w = &params[kt * (d + 1)..kt * (d + 1) + d];
+            let g = dz_c[j * t + kt] * inv;
+            for jj in 0..d {
+                gpool[jj] += g * w[jj];
+            }
+        }
+        let mut gy = vec![0.0f32; len * d];
+        for pos in 0..len {
+            gy[pos * d..(pos + 1) * d].copy_from_slice(&gpool);
+        }
+        hstu_sample_backward(params, &xs, &mut gy, grads_c, len, d, heads, blocks, t);
+        for pos in 0..len {
+            eg_c[(j * l + pos) * d..(j * l + pos + 1) * d]
+                .copy_from_slice(&gy[pos * d..(pos + 1) * d]);
+        }
+    }
+}
+
 /// Execute one train step into `s`, chunking the batch across `pool`
 /// (serial and bit-identical when `pool` is `None` or single-share).
 #[allow(clippy::too_many_arguments)]
@@ -209,6 +639,9 @@ pub fn train_into(
         "reference model needs {} head params, manifest says {p}",
         t * (d + 1)
     );
+    if arts.arch == ModelArch::Hstu {
+        ensure_hstu_shape(arts, d, t, p)?;
+    }
     ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
     ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
     ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
@@ -247,6 +680,8 @@ pub fn train_into(
         let loss_w = SharedSliceMut::new(&mut s.chunk_loss);
         let grads_w = SharedSliceMut::new(&mut s.chunk_grads);
         let valid_w = SharedSliceMut::new(&mut s.chunk_valid);
+        let arch = arts.arch;
+        let (heads, blocks) = (arts.heads, arts.blocks);
         let run_chunk = |ci: usize, r: Range<usize>| {
             let n = r.len();
             // SAFETY: `ranges` partitions `0..b` into disjoint chunks
@@ -254,23 +689,44 @@ pub fn train_into(
             // every window below is written by exactly one chunk; the
             // windows live only inside this scope.
             unsafe {
-                train_chunk(
-                    params,
-                    emb,
-                    lengths,
-                    labels,
-                    r.clone(),
-                    l,
-                    d,
-                    t,
-                    pool_w.slice_mut(r.start * d, n * d),
-                    logits_w.slice_mut(r.start * t, n * t),
-                    dz_w.slice_mut(r.start * t, n * t),
-                    eg_w.slice_mut(r.start * l * d, n * l * d),
-                    loss_w.slice_mut(ci * t, t),
-                    grads_w.slice_mut(ci * p, p),
-                    &mut valid_w.slice_mut(ci, 1)[0],
-                );
+                match arch {
+                    ModelArch::MeanPool => train_chunk(
+                        params,
+                        emb,
+                        lengths,
+                        labels,
+                        r.clone(),
+                        l,
+                        d,
+                        t,
+                        pool_w.slice_mut(r.start * d, n * d),
+                        logits_w.slice_mut(r.start * t, n * t),
+                        dz_w.slice_mut(r.start * t, n * t),
+                        eg_w.slice_mut(r.start * l * d, n * l * d),
+                        loss_w.slice_mut(ci * t, t),
+                        grads_w.slice_mut(ci * p, p),
+                        &mut valid_w.slice_mut(ci, 1)[0],
+                    ),
+                    ModelArch::Hstu => hstu_train_chunk(
+                        params,
+                        emb,
+                        lengths,
+                        labels,
+                        r.clone(),
+                        l,
+                        d,
+                        t,
+                        heads,
+                        blocks,
+                        pool_w.slice_mut(r.start * d, n * d),
+                        logits_w.slice_mut(r.start * t, n * t),
+                        dz_w.slice_mut(r.start * t, n * t),
+                        eg_w.slice_mut(r.start * l * d, n * l * d),
+                        loss_w.slice_mut(ci * t, t),
+                        grads_w.slice_mut(ci * p, p),
+                        &mut valid_w.slice_mut(ci, 1)[0],
+                    ),
+                }
             }
         };
         match pool {
@@ -353,6 +809,42 @@ pub fn execute_with_pool(
         ensure!(params.len() == p, "params arity: {} vs {p}", params.len());
         ensure!(emb.len() == b * l * d, "emb arity: {} vs {}", emb.len(), b * l * d);
         ensure!(lengths.len() == b, "lengths arity: {} vs {b}", lengths.len());
+        if arts.arch == ModelArch::Hstu {
+            // Same per-sample arithmetic as hstu_train_chunk (shared
+            // helpers), so forward logits are bit-identical to train.
+            ensure_hstu_shape(arts, d, t, p)?;
+            let mut logits = vec![0.0f32; b * t];
+            let mut pooled = vec![0.0f32; d];
+            for i in 0..b {
+                let len = lengths[i].clamp(0, l as i32) as usize;
+                if len == 0 {
+                    pooled_logits(
+                        params,
+                        &[],
+                        0,
+                        d,
+                        t,
+                        &mut pooled,
+                        &mut logits[i * t..(i + 1) * t],
+                    );
+                    continue;
+                }
+                let mut x0 = vec![0.0f32; len * d];
+                x0.copy_from_slice(&emb[(i * l) * d..(i * l + len) * d]);
+                let xs =
+                    hstu_sample_forward(params, x0, len, d, arts.heads, arts.blocks, t);
+                pooled_logits(
+                    params,
+                    xs.last().unwrap(),
+                    len,
+                    d,
+                    t,
+                    &mut pooled,
+                    &mut logits[i * t..(i + 1) * t],
+                );
+            }
+            return Ok(vec![Tensor::f32(&[b, t], logits)]);
+        }
         // Per-sample arithmetic is identical to the train path (which
         // the `forward_matches_train_logits` test pins down).
         let mut logits = vec![0.0f32; b * t];
@@ -419,6 +911,7 @@ mod tests {
             param_count: P,
             params_bin: "<builtin>".into(),
             params_seed: 0,
+            arch: ModelArch::MeanPool,
             buckets: vec![Bucket {
                 batch: B,
                 len: L,
@@ -426,6 +919,46 @@ mod tests {
                 forward: "<builtin>".into(),
             }],
         }
+    }
+
+    // HSTU fixture: d=4, 2 heads, 2 blocks → exactly
+    // hstu_block_off(T, 4, 2) = 2·5 + 2·(5·16 + 9·4) = 242 params.
+    const HD: usize = 4;
+    const HP: usize = 242;
+
+    fn hstu_arts() -> ModelArtifacts {
+        ModelArtifacts {
+            name: "ref-hstu-test".into(),
+            emb_dim: HD,
+            heads: 2,
+            blocks: 2,
+            tasks: T,
+            param_count: HP,
+            params_bin: "<builtin>".into(),
+            params_seed: 0,
+            arch: ModelArch::Hstu,
+            buckets: vec![Bucket {
+                batch: B,
+                len: L,
+                train: "<builtin>".into(),
+                forward: "<builtin>".into(),
+            }],
+        }
+    }
+
+    fn hstu_inputs(seed: u64) -> Vec<Tensor> {
+        let mut rng = Xoshiro256::new(seed);
+        let params: Vec<f32> = (0..HP).map(|_| rng.normal(0.0, 0.4) as f32).collect();
+        let emb: Vec<f32> =
+            (0..B * L * HD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lengths = vec![3, 1, 0]; // last sample padded out
+        let labels: Vec<f32> = (0..B * T).map(|_| rng.gen_range(2) as f32).collect();
+        vec![
+            Tensor::f32(&[HP], params),
+            Tensor::f32(&[B, L, HD], emb),
+            Tensor::i32(&[B], lengths),
+            Tensor::f32(&[B, T], labels),
+        ]
     }
 
     fn inputs(seed: u64) -> Vec<Tensor> {
@@ -620,5 +1153,174 @@ mod tests {
         let mut small = arts();
         small.param_count = 2; // < T·(D+1)
         assert!(execute(&small, ArtifactKind::Train, (B, L), &inputs(7)).is_err());
+    }
+
+    // ---- HSTU architecture ---------------------------------------------
+
+    #[test]
+    fn hstu_layout_constants() {
+        assert_eq!(hstu_block_stride(HD), 5 * HD * HD + 9 * HD);
+        assert_eq!(hstu_block_off(T, HD, 2), HP, "fixture spans exactly 2 blocks");
+        // The config's dense budget covers the executor's layout for the
+        // real preset (slack ≥ 0 per block).
+        let cfg = crate::config::ModelConfig::tiny_hstu();
+        assert!(
+            cfg.dense_params()
+                >= hstu_block_off(cfg.num_tasks, cfg.emb_dim, cfg.hstu_blocks)
+        );
+    }
+
+    #[test]
+    fn hstu_shapes_and_padding_contract() {
+        let a = hstu_arts();
+        let ins = hstu_inputs(11);
+        let out = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0].as_f32().unwrap().len(), T);
+        assert_eq!(out[1].as_f32().unwrap().len(), HP);
+        assert_eq!(out[2].as_f32().unwrap().len(), B * L * HD);
+        assert_eq!(out[3].as_f32().unwrap().len(), B * T);
+        assert_eq!(out[4].as_f32().unwrap()[0], 2.0, "one padded sample");
+        // Padded sample: logits are the head biases, zero emb grad.
+        let params = ins[0].as_f32().unwrap();
+        let logits = out[3].as_f32().unwrap();
+        for kt in 0..T {
+            assert_eq!(logits[(B - 1) * T + kt], params[kt * (HD + 1) + HD]);
+        }
+        let eg = out[2].as_f32().unwrap();
+        assert!(eg[(B - 1) * L * HD..].iter().all(|&x| x == 0.0));
+        // Positions past each length carry exactly zero gradient too.
+        assert!(eg[(1 * L + 1) * HD..2 * L * HD].iter().all(|&x| x == 0.0));
+        assert!(out[0].as_f32().unwrap().iter().all(|&x| x > 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn hstu_forward_matches_train_logits() {
+        let a = hstu_arts();
+        let ins = hstu_inputs(12);
+        let train = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let fwd = execute(&a, ArtifactKind::Forward, (B, L), &ins[..3]).unwrap();
+        assert_eq!(fwd[0].as_f32().unwrap(), train[3].as_f32().unwrap());
+    }
+
+    #[test]
+    fn hstu_param_gradients_match_finite_differences() {
+        let a = hstu_arts();
+        let ins = hstu_inputs(13);
+        let base = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let grads = base[1].as_f32().unwrap().to_vec();
+        let eps = 1e-3f32;
+        // Central differences over EVERY parameter: the task heads and
+        // all five projections of both blocks.
+        for idx in 0..HP {
+            let mut up = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut up[0] {
+                data[idx] += eps;
+            }
+            let mut dn = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut dn[0] {
+                data[idx] -= eps;
+            }
+            let l1 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &up).unwrap());
+            let l2 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &dn).unwrap());
+            let fd = (l1 - l2) / (2.0 * eps as f64);
+            let g = grads[idx] as f64;
+            assert!(
+                (fd - g).abs() < 1e-2 + 1e-2 * g.abs(),
+                "param {idx}: fd {fd:.5} vs analytic {g:.5}"
+            );
+        }
+        // The 9d reserved tail of each block carries exactly zero grad.
+        let dd = HD * HD;
+        for blk in 0..2 {
+            let off = hstu_block_off(T, HD, blk);
+            assert!(
+                grads[off + 5 * dd..off + hstu_block_stride(HD)]
+                    .iter()
+                    .all(|&g| g == 0.0),
+                "block {blk} reserved tail must not train"
+            );
+        }
+    }
+
+    #[test]
+    fn hstu_emb_gradients_match_finite_differences() {
+        let a = hstu_arts();
+        let ins = hstu_inputs(14);
+        let base = execute(&a, ArtifactKind::Train, (B, L), &ins).unwrap();
+        let eg = base[2].as_f32().unwrap().to_vec();
+        let eps = 1e-3f32;
+        // Every valid position of both live samples (lens 3 and 1).
+        let mut probes: Vec<usize> = (0..3 * HD).collect();
+        probes.extend((1 * L * HD)..(1 * L * HD + HD));
+        for idx in probes {
+            let mut up = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut up[1] {
+                data[idx] += eps;
+            }
+            let mut dn = ins.clone();
+            if let Tensor::F32 { data, .. } = &mut dn[1] {
+                data[idx] -= eps;
+            }
+            let l1 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &up).unwrap());
+            let l2 = total_loss(&execute(&a, ArtifactKind::Train, (B, L), &dn).unwrap());
+            let fd = (l1 - l2) / (2.0 * eps as f64);
+            let g = eg[idx] as f64;
+            assert!(
+                (fd - g).abs() < 1e-2 + 1e-2 * g.abs(),
+                "emb {idx}: fd {fd:.5} vs analytic {g:.5}"
+            );
+        }
+    }
+
+    #[test]
+    fn hstu_pooled_execution_bit_identical_for_every_pool_size() {
+        let mut a = hstu_arts();
+        let (b, l) = (13usize, 6usize);
+        a.buckets = vec![Bucket {
+            batch: b,
+            len: l,
+            train: "<builtin>".into(),
+            forward: "<builtin>".into(),
+        }];
+        let mut rng = Xoshiro256::new(23);
+        let params: Vec<f32> = (0..HP).map(|_| rng.normal(0.0, 0.4) as f32).collect();
+        let emb: Vec<f32> =
+            (0..b * l * HD).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let lengths: Vec<i32> = (0..b).map(|i| (i % (l + 1)) as i32).collect();
+        let labels: Vec<f32> = (0..b * T).map(|_| rng.gen_range(2) as f32).collect();
+        let ins = vec![
+            Tensor::f32(&[HP], params),
+            Tensor::f32(&[b, l, HD], emb),
+            Tensor::i32(&[b], lengths),
+            Tensor::f32(&[b, T], labels),
+        ];
+        let serial = execute(&a, ArtifactKind::Train, (b, l), &ins).unwrap();
+        for threads in [1usize, 2, 3, 4] {
+            let pool = WorkerPool::new(threads);
+            let par =
+                execute_with_pool(&a, ArtifactKind::Train, (b, l), &ins, Some(&pool)).unwrap();
+            for (x, y) in serial.iter().zip(&par) {
+                assert_eq!(x, y, "{threads} threads diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn hstu_bad_shapes_rejected() {
+        // emb_dim not divisible by heads.
+        let mut odd = hstu_arts();
+        odd.heads = 3;
+        assert!(execute(&odd, ArtifactKind::Train, (B, L), &hstu_inputs(15)).is_err());
+        assert!(execute(&odd, ArtifactKind::Forward, (B, L), &hstu_inputs(15)[..3]).is_err());
+        // Parameter budget below the block stack's need.
+        let mut small = hstu_arts();
+        small.param_count = HP - 1;
+        let mut ins = hstu_inputs(16);
+        if let Tensor::F32 { data, shape } = &mut ins[0] {
+            data.pop();
+            shape[0] -= 1;
+        }
+        assert!(execute(&small, ArtifactKind::Train, (B, L), &ins).is_err());
     }
 }

@@ -1,0 +1,317 @@
+//! Scenario engine: named adversarial / long-run workload presets.
+//!
+//! Production distributed-training systems are broken by *workloads*,
+//! not by unit tests: pathological sequence-length distributions that
+//! defeat the balancer, flash-sale days that mint millions of fresh IDs
+//! per hour and churn the admission/eviction machinery, multi-tenant
+//! schemas whose per-tier capacity budgets force evictions, and
+//! multi-day soak runs where any unbounded data structure eventually
+//! shows. A [`Scenario`] is a small declarative spec that *composes
+//! with* the existing generator / streaming / online stack — it only
+//! reshapes [`GeneratorConfig`], picks a schema preset, tunes
+//! [`AdmissionConfig`] / [`OnlineOptions`] defaults and carries a
+//! per-group row budget; the trainer hot path is unchanged.
+//!
+//! Presets (`--scenario <name>`):
+//!
+//! - **`skew-storm`** — heavy-tailed lognormal lengths (σ = 2.0) mixing
+//!   length-1 stubs with cap-length monsters in one stream; stresses
+//!   the dynamic batcher's token-budget packing and carry-over.
+//! - **`churn-storm`** — a flash-sale day cadence: most sequences carry
+//!   brand-new user/item IDs, the generator day advances every other
+//!   chunk, and admission runs with day decay + re-admission
+//!   hysteresis; stresses admission/eviction churn. Online-only.
+//! - **`multi-tenant`** — the three-tier 1D/8D/64D
+//!   `meituan-tiered` schema with a per-group resident-row budget, so
+//!   the capacity pressure of co-tenant tables is exercised; offline
+//!   only (row budgets and TTL sweeps are mutually exclusive gates).
+//! - **`soak`** — hours of simulated online days in one bounded run:
+//!   frequent day advance, TTL expiry on by default, admission decay
+//!   on; the soak suite asserts resident rows stay bounded.
+//!
+//! Everything a scenario does is deterministic and seed-stable, so the
+//! bit-identity guarantees (threads × overlap × cross-step) hold under
+//! every preset.
+
+use crate::data::generator::GeneratorConfig;
+use crate::online::{AdmissionConfig, OnlineOptions};
+
+/// Which preset a [`Scenario`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    SkewStorm,
+    ChurnStorm,
+    MultiTenant,
+    Soak,
+}
+
+/// A declarative workload scenario; resolve one with
+/// [`Scenario::by_name`] and apply it via [`Scenario::shape_generator`]
+/// / [`Scenario::apply_online_defaults`].
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub kind: ScenarioKind,
+    /// Schema preset forced by the scenario (`--schema` must agree).
+    pub schema_override: Option<&'static str>,
+    /// Scenario only makes sense under `--mode online`.
+    pub requires_online: bool,
+    /// Scenario is incompatible with `--mode online`.
+    pub forbids_online: bool,
+    /// Per-merge-group resident-row budget (capacity pressure).
+    pub row_budget: Option<usize>,
+    /// Override for [`OnlineOptions::day_every`].
+    pub day_every: Option<usize>,
+    /// Enable count-min day decay on the admission sketch.
+    pub sketch_day_decay: bool,
+    /// Re-admission hysteresis margin for evicted IDs.
+    pub readmit_margin: u32,
+    /// Admission `(threshold, admit_prob)` installed when the user did
+    /// not configure admission themselves.
+    pub default_admission: Option<(u32, f64)>,
+}
+
+impl Scenario {
+    fn base(name: &'static str, kind: ScenarioKind) -> Scenario {
+        Scenario {
+            name,
+            kind,
+            schema_override: None,
+            requires_online: false,
+            forbids_online: false,
+            row_budget: None,
+            day_every: None,
+            sketch_day_decay: false,
+            readmit_margin: 0,
+            default_admission: None,
+        }
+    }
+
+    /// Pathological sequence-length distribution: same mean-ish token
+    /// volume, enormous variance. Works in both offline and online
+    /// modes.
+    pub fn skew_storm() -> Scenario {
+        Scenario::base("skew-storm", ScenarioKind::SkewStorm)
+    }
+
+    /// Flash-sale ID churn: most sequences reference fresh IDs, days
+    /// advance fast, admission decays across days with re-admission
+    /// hysteresis. Online-only (the churn machinery lives in the
+    /// online gate).
+    pub fn churn_storm() -> Scenario {
+        Scenario {
+            requires_online: true,
+            day_every: Some(2),
+            sketch_day_decay: true,
+            readmit_margin: 2,
+            default_admission: Some((3, 0.05)),
+            ..Scenario::base("churn-storm", ScenarioKind::ChurnStorm)
+        }
+    }
+
+    /// Three-tier 1D/8D/64D schema with per-group capacity budgets.
+    /// Offline-only: the row-budget gate and the online TTL gate both
+    /// want to own eviction, and composing them would make eviction
+    /// order ambiguous.
+    pub fn multi_tenant() -> Scenario {
+        Scenario {
+            schema_override: Some("meituan-tiered"),
+            forbids_online: true,
+            row_budget: Some(1500),
+            ..Scenario::base("multi-tenant", ScenarioKind::MultiTenant)
+        }
+    }
+
+    /// Long-run soak: many simulated online days in one run, TTL and
+    /// admission decay on by default so resident state is bounded.
+    pub fn soak() -> Scenario {
+        Scenario {
+            requires_online: true,
+            day_every: Some(4),
+            sketch_day_decay: true,
+            readmit_margin: 1,
+            default_admission: Some((2, 0.1)),
+            ..Scenario::base("soak", ScenarioKind::Soak)
+        }
+    }
+
+    /// Preset names accepted by `--scenario`.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["skew-storm", "churn-storm", "multi-tenant", "soak"]
+    }
+
+    /// Resolve a preset by name; the error lists the known presets.
+    pub fn by_name(name: &str) -> anyhow::Result<Scenario> {
+        match name {
+            "skew-storm" => Ok(Scenario::skew_storm()),
+            "churn-storm" => Ok(Scenario::churn_storm()),
+            "multi-tenant" => Ok(Scenario::multi_tenant()),
+            "soak" => Ok(Scenario::soak()),
+            other => anyhow::bail!(
+                "unknown scenario `{other}` (expected one of {:?})",
+                Self::preset_names()
+            ),
+        }
+    }
+
+    /// Reshape the workload generator for this scenario. Only
+    /// distributional knobs are touched — the seed is left alone so
+    /// per-rank seed mixing happens exactly as without a scenario.
+    pub fn shape_generator(&self, g: &mut GeneratorConfig) {
+        match self.kind {
+            ScenarioKind::SkewStorm => {
+                // Mean exp(4 + 2²/2) ≈ 400 but σ so large the stream
+                // mixes length-1 stubs with cap-length monsters.
+                g.len_mu = 4.0;
+                g.len_sigma = 2.0;
+                g.min_len = 1;
+                g.max_len = 3000;
+            }
+            ScenarioKind::ChurnStorm => {
+                g.new_user_rate = 0.6;
+                g.new_item_rate = 0.5;
+                g.num_users = 400_000;
+                g.num_items = 400_000;
+            }
+            ScenarioKind::MultiTenant => {
+                // Moderate lengths, default churn: the pressure comes
+                // from the tiered schema + row budget, not the stream.
+                g.len_mu = 3.0;
+                g.len_sigma = 0.8;
+                g.min_len = 2;
+                g.max_len = 256;
+            }
+            ScenarioKind::Soak => {
+                // Sustained churn, but bounded ID spaces so the TTL
+                // sweeper has revisits to keep rows alive.
+                g.new_user_rate = 0.2;
+                g.new_item_rate = 0.15;
+            }
+        }
+    }
+
+    /// Check mode compatibility (`online` = `--mode online` active).
+    pub fn validate(&self, online: bool) -> anyhow::Result<()> {
+        if self.requires_online && !online {
+            anyhow::bail!(
+                "scenario `{}` requires --mode online (its churn/TTL machinery \
+                 lives in the online gate)",
+                self.name
+            );
+        }
+        if self.forbids_online && online {
+            anyhow::bail!(
+                "scenario `{}` is offline-only: per-group row budgets and the \
+                 online TTL sweeper are mutually exclusive eviction gates",
+                self.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Apply the scenario's sketch-decay / hysteresis knobs to an
+    /// admission config.
+    pub fn tune_admission(&self, a: &mut AdmissionConfig) {
+        if self.sketch_day_decay {
+            a.day_decay = true;
+        }
+        if self.readmit_margin > 0 {
+            a.readmit_margin = self.readmit_margin;
+        }
+    }
+
+    /// Fill in online defaults: day cadence, default admission policy
+    /// (only when the user configured none), and — for `soak` — a TTL
+    /// default of 4 sync intervals so resident rows are bounded.
+    pub fn apply_online_defaults(&self, o: &mut OnlineOptions) {
+        if let Some(de) = self.day_every {
+            o.day_every = de;
+        }
+        match o.admission.as_mut() {
+            Some(a) => self.tune_admission(a),
+            None => {
+                if let Some((threshold, prob)) = self.default_admission {
+                    let mut a = AdmissionConfig::new(threshold, prob);
+                    self.tune_admission(&mut a);
+                    o.admission = Some(a);
+                }
+            }
+        }
+        if self.kind == ScenarioKind::Soak && o.feature_ttl == 0 {
+            o.feature_ttl = 4 * o.sync_interval as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_unknown_errors() {
+        for name in Scenario::preset_names() {
+            let s = Scenario::by_name(name).unwrap();
+            assert_eq!(s.name, *name);
+        }
+        let err = Scenario::by_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"));
+        assert!(err.contains("skew-storm"), "error lists presets: {err}");
+    }
+
+    #[test]
+    fn skew_storm_reshapes_lengths_only() {
+        let s = Scenario::skew_storm();
+        let mut g = GeneratorConfig::default();
+        let before = g.clone();
+        s.shape_generator(&mut g);
+        assert_eq!(g.len_mu, 4.0);
+        assert_eq!(g.len_sigma, 2.0);
+        assert_eq!(g.min_len, 1);
+        assert_eq!(g.seed, before.seed, "seed untouched");
+        assert_eq!(g.new_user_rate, before.new_user_rate);
+        assert!(s.validate(false).is_ok(), "skew-storm runs offline");
+        assert!(s.validate(true).is_ok(), "and online");
+    }
+
+    #[test]
+    fn churn_storm_requires_online_and_floods_ids() {
+        let s = Scenario::churn_storm();
+        assert!(s.validate(false).is_err());
+        assert!(s.validate(true).is_ok());
+        let mut g = GeneratorConfig::default();
+        s.shape_generator(&mut g);
+        assert!(g.new_user_rate >= 0.5);
+        assert!(g.new_item_rate >= 0.5);
+    }
+
+    #[test]
+    fn multi_tenant_forces_tiered_schema_and_forbids_online() {
+        let s = Scenario::multi_tenant();
+        assert_eq!(s.schema_override, Some("meituan-tiered"));
+        assert!(s.row_budget.is_some());
+        assert!(s.validate(true).is_err());
+        assert!(s.validate(false).is_ok());
+    }
+
+    #[test]
+    fn online_defaults_fill_admission_and_ttl() {
+        let soak = Scenario::soak();
+        let mut o = OnlineOptions::new(5);
+        soak.apply_online_defaults(&mut o);
+        assert_eq!(o.day_every, 4);
+        assert_eq!(o.feature_ttl, 20, "soak TTL defaults to 4 intervals");
+        let a = o.admission.as_ref().expect("default admission installed");
+        assert_eq!(a.threshold, 2);
+        assert!(a.day_decay);
+        assert_eq!(a.readmit_margin, 1);
+        // A user-provided admission config is tuned, not replaced.
+        let mut o2 = OnlineOptions::new(5);
+        o2.admission = Some(AdmissionConfig::new(7, 0.0));
+        Scenario::churn_storm().apply_online_defaults(&mut o2);
+        let a2 = o2.admission.as_ref().unwrap();
+        assert_eq!(a2.threshold, 7, "user threshold kept");
+        assert!(a2.day_decay, "decay still applied");
+        assert_eq!(a2.readmit_margin, 2);
+        assert_eq!(o2.feature_ttl, 0, "only soak defaults a TTL");
+    }
+}

@@ -124,6 +124,15 @@ pub struct TrainerOptions {
     /// token features with a `shared_table` alias — ≥ 2 merge groups,
     /// one physical shard table, exchange and optimizer per group).
     pub schema: String,
+    /// `Some` applies a named workload scenario (`--scenario`): the
+    /// preset reshapes the generator distribution, may force a schema
+    /// (`multi-tenant` → `meituan-tiered`), install per-group row
+    /// budgets, and fill online defaults (day cadence, admission decay
+    /// + re-admission hysteresis, soak TTL). Scenarios compose with —
+    /// never fork — the existing stream/online stack, and numerics stay
+    /// bit-identical across `--threads`/`--overlap`/`--cross-step`
+    /// under every preset.
+    pub scenario: Option<crate::scenario::Scenario>,
     /// `Some` marks this process as one rank of a **multi-process**
     /// run ([`crate::dist`]): resume-from-delta replay plus per-step /
     /// per-interval callbacks (heartbeats, coordinator barrier, fault
@@ -154,17 +163,44 @@ impl TrainerOptions {
             log_every: 0,
             online: None,
             schema: "meituan".to_string(),
+            scenario: None,
             dist: None,
         }
+    }
+
+    /// The schema actually trained on: the scenario's forced preset
+    /// when it has one, else `--schema`.
+    pub fn effective_schema(&self) -> &str {
+        self.scenario
+            .as_ref()
+            .and_then(|s| s.schema_override)
+            .unwrap_or(&self.schema)
     }
 
     /// Reject contradictory option combinations before any thread
     /// spawns (also the backing check for the CLI's flag validation).
     pub fn validate(&self) -> Result<()> {
+        if let Some(sc) = &self.scenario {
+            sc.validate(self.online.is_some())?;
+            if let Some(forced) = sc.schema_override {
+                anyhow::ensure!(
+                    self.schema == "meituan" || self.schema == forced,
+                    "scenario `{}` forces --schema {forced}; drop the conflicting \
+                     --schema {}",
+                    sc.name,
+                    self.schema
+                );
+            }
+            anyhow::ensure!(
+                self.dist.is_none(),
+                "scenarios are not supported in dist mode (admission/TTL \
+                 presets conflict with delta-chain recovery)"
+            );
+        }
         anyhow::ensure!(
-            Schema::is_preset(&self.schema),
+            Schema::is_preset(self.effective_schema()),
             "unknown schema preset `{}` (expected one of {:?})",
-            self.schema,
+            self.effective_schema(),
             Schema::preset_names()
         );
         if let Some(o) = &self.online {
@@ -333,6 +369,21 @@ pub struct StepRecord {
     /// Packing-header bytes the multiplexed exchange added this step,
     /// summed across ranks (zero when unmultiplexed or single-group).
     pub wire_header_bytes: u64,
+    /// Tokens left buffered in the batcher after this step's batch was
+    /// cut (the carry-over), summed across ranks — the scenario
+    /// telemetry for adversarial length distributions.
+    pub batcher_carryover: u64,
+    /// Embedding rows resident across every merge group, summed across
+    /// ranks at the step boundary (the soak suite's bounded-memory
+    /// witness).
+    pub resident_rows: u64,
+    /// Generator day the step's batch was drawn from (max across
+    /// ranks; 0 until the stream crosses its first day boundary).
+    pub online_day: u64,
+    /// Row-budget evictions this step (per-step delta of the dynamic
+    /// tables' eviction counters, summed across ranks) — the
+    /// multi-tenant scenario's capacity-pressure meter.
+    pub evictions: u64,
 }
 
 /// Aggregated outcome of a run.
@@ -391,6 +442,19 @@ pub struct TrainReport {
     /// the supervisor adds heartbeat misses / recoveries / replayed
     /// steps when merging multi-process rank reports).
     pub dist: DistStats,
+    /// Name of the workload scenario the run trained under (`None`
+    /// without `--scenario`).
+    pub scenario: Option<String>,
+    /// Peak of the per-step global resident-row count — the soak
+    /// suite asserts this stays bounded over multi-day runs.
+    pub peak_resident_rows: u64,
+    /// Mean per-step batcher carry-over tokens (summed across ranks).
+    pub batcher_carryover_mean: f64,
+    /// Mean per-step batcher fill: emitted tokens over
+    /// `target_tokens × world` (0.0 under the fixed batcher).
+    pub batcher_fill_mean: f64,
+    /// Run total of per-step row-budget evictions.
+    pub total_evictions: u64,
 }
 
 impl TrainReport {
@@ -491,7 +555,15 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(opts: TrainerOptions, engine: Engine) -> Result<Trainer> {
+    pub fn new(mut opts: TrainerOptions, engine: Engine) -> Result<Trainer> {
+        // Scenario presets fill online defaults (day cadence, default
+        // admission, soak TTL) before validation, so programmatic and
+        // CLI runs agree on the effective options. Idempotent.
+        if let Some(sc) = opts.scenario.clone() {
+            if let Some(o) = opts.online.as_mut() {
+                sc.apply_online_defaults(o);
+            }
+        }
         opts.validate()?;
         let model_cfg = ModelConfig::by_name(&opts.model)
             .with_context(|| format!("unknown model preset `{}`", opts.model))?;
@@ -506,7 +578,7 @@ impl Trainer {
         // constructed *at* the model dim (context dims clamp to it), so
         // no feature can be wider than the token embedding it pools
         // into.
-        Schema::by_name(&opts.schema, arts.emb_dim)?;
+        Schema::by_name(opts.effective_schema(), arts.emb_dim)?;
         Ok(Trainer {
             opts,
             engine,
@@ -596,6 +668,8 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
     let mut group_volumes: Vec<DedupVolume> = Vec::new();
     let mut group_checksums: Vec<u64> = Vec::new();
     let mut group_rows: Vec<usize> = Vec::new();
+    let mut scenario: Option<String> = None;
+    let mut fill_denom = 0u64;
     let n_workers = outputs.len().max(1) as f64;
     for out in outputs {
         table_stats.merge(&out.table_stats);
@@ -634,6 +708,8 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
             steps_rank = Some(out.rank);
             steps = out.steps;
             wall = out.wall;
+            scenario = out.scenario.clone();
+            fill_denom = out.fill_denom;
         }
     }
     let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
@@ -659,6 +735,22 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
         }
         wire_header_bytes += s.wire_header_bytes;
     }
+    // Scenario telemetry roll-ups over the (already globally summed)
+    // per-step meters.
+    let n_steps = steps.len().max(1) as f64;
+    let peak_resident_rows = steps.iter().map(|s| s.resident_rows).max().unwrap_or(0);
+    let total_evictions: u64 = steps.iter().map(|s| s.evictions).sum();
+    let batcher_carryover_mean =
+        steps.iter().map(|s| s.batcher_carryover as f64).sum::<f64>() / n_steps;
+    let batcher_fill_mean = if fill_denom > 0 {
+        steps
+            .iter()
+            .map(|s| s.tokens.iter().sum::<u64>() as f64 / fill_denom as f64)
+            .sum::<f64>()
+            / n_steps
+    } else {
+        0.0
+    };
     TrainReport {
         table_stats,
         group_dims,
@@ -678,6 +770,11 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
             transport_retries,
             ..DistStats::default()
         },
+        scenario,
+        peak_resident_rows,
+        batcher_carryover_mean,
+        batcher_fill_mean,
+        total_evictions,
         gauc_ctr: gauc_ctr.gauc(),
         gauc_ctcvr: gauc_ctcvr.gauc(),
         phases,
@@ -716,6 +813,11 @@ struct WorkerOutput {
     /// Transport-level send retries that eventually succeeded (0 for
     /// the in-process channel backend).
     transport_retries: u64,
+    /// Scenario name the run trained under (report labeling).
+    scenario: Option<String>,
+    /// `target_tokens × world` when the dynamic batcher is on (the
+    /// denominator of the report's fill metric); 0 otherwise.
+    fill_denom: u64,
 }
 
 /// One micro-batch prepared for the engine.
@@ -734,6 +836,11 @@ struct StepData {
     flops: f64,
     micros: Vec<Micro>,
     round_ids: Vec<(BatchIds, (usize, usize))>,
+    /// Tokens the batcher held back after cutting this batch.
+    carryover: u64,
+    /// Generator day the batch was drawn from (scenario telemetry +
+    /// the admission sketch's day-decay trigger).
+    day: u64,
 }
 
 /// Persistent per-worker scratch arenas for the dense step's inputs and
@@ -761,7 +868,7 @@ fn worker_main(
     let arts = engine.manifest().model(&opts.model)?.clone();
     let dir = engine.manifest().dir.clone();
     let d = arts.emb_dim;
-    let schema = Schema::by_name(&opts.schema, d)?;
+    let schema = Schema::by_name(opts.effective_schema(), d)?;
     // §4.2 table merging unless ablated away (`--no-merging` keeps one
     // group per logical table, so every round pays one exchange per
     // table instead of one per merge group).
@@ -781,6 +888,12 @@ fn worker_main(
     // arriving (the admission/TTL workload); offline keeps
     // `day_every = 0`, which reproduces the plain generator stream.
     let mut gen_cfg = opts.generator.clone();
+    // Scenario presets reshape the stream's *distribution* before the
+    // per-rank seed mixing; the seed itself is never touched, so the
+    // familiar seed → shard mapping is preserved under every scenario.
+    if let Some(sc) = &opts.scenario {
+        sc.shape_generator(&mut gen_cfg);
+    }
     gen_cfg.seed = opts.generator.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9);
     // Cap lengths at the largest bucket so nothing needs truncation.
     let max_l = arts.largest_bucket().len;
@@ -821,12 +934,18 @@ fn worker_main(
         .groups
         .iter()
         .map(|g| {
-            let table = ConcurrentDynamicTable::new(
-                DynamicTableConfig::new(g.dim)
-                    .with_capacity(opts.shard_capacity)
-                    .with_seed(engine.manifest().seed ^ 0xEB),
-                8,
-            );
+            let mut tcfg = DynamicTableConfig::new(g.dim)
+                .with_capacity(opts.shard_capacity)
+                .with_seed(engine.manifest().seed ^ 0xEB);
+            // Scenario capacity pressure: a per-group resident-row
+            // budget (multi-tenant preset). Offline-only — validate()
+            // guarantees budgeted scenarios never run online, so the
+            // gate below is always the passthrough (OnlineTable::online
+            // refuses budgeted tables).
+            if let Some(b) = opts.scenario.as_ref().and_then(|s| s.row_budget) {
+                tcfg = tcfg.with_max_rows(b);
+            }
+            let table = ConcurrentDynamicTable::new(tcfg, 8);
             let gate = match &opts.online {
                 Some(o) => OnlineTable::online(
                     table,
@@ -912,6 +1031,12 @@ fn worker_main(
         &plan,
     );
 
+    // The newest generator day observed on this rank's stream (chunks
+    // carry their day stamp; the batcher erases it, so it is captured
+    // at pull time). Read back per step for the scenario telemetry and
+    // the admission sketch's day-decay trigger.
+    let day_seen = std::cell::Cell::new(0u64);
+
     // Prepare one step's local inputs: pull a balanced batch, split it
     // into micro-batches and build their occurrence streams.
     let mut prepare = |phases: &mut PhaseTimer| -> StepData {
@@ -919,8 +1044,12 @@ fn worker_main(
             if let Some(b) = batcher.next_batch() {
                 break b;
             }
-            batcher.push_chunk(stream.next_chunk().sequences);
+            let chunk = stream.next_chunk();
+            day_seen.set(day_seen.get().max(chunk.day));
+            batcher.push_chunk(chunk.sequences);
         });
+        let carryover = batcher.queued_tokens() as u64;
+        let day = day_seen.get();
         let tokens = batch.tokens as u64;
         let samples = batch.sequences.len() as u64;
         // Simulated compute cost from REAL per-sequence lengths (the
@@ -953,6 +1082,8 @@ fn worker_main(
             flops,
             micros,
             round_ids,
+            carryover,
+            day,
         }
     };
 
@@ -1027,6 +1158,12 @@ fn worker_main(
     // can assert payload conservation against the per-group schedule.
     let mut wire_prev = comm.stats.lane_bytes;
     let mut hdr_prev = [0u64; LANES];
+    // Scenario telemetry state: the last generator day whose boundary
+    // was already applied to the admission sketches, and the eviction
+    // total at the previous step boundary (per-step deltas are what
+    // the records carry).
+    let mut last_day = 0u64;
+    let mut evict_prev = 0u64;
 
     let mut step = start_step;
     loop {
@@ -1054,6 +1191,18 @@ fn worker_main(
         let my_tokens = data.tokens;
         let my_samples = data.samples;
         let my_flops = data.flops;
+        let my_carryover = data.carryover;
+        let my_day = data.day;
+        // Day boundary: advance the admission sketches once per crossed
+        // generator day (count-min day decay + hysteresis bookkeeping).
+        // Purely rank-local state — the per-rank stream's day stamps are
+        // deterministic, so this never perturbs cross-thread identity.
+        while last_day < my_day {
+            last_day += 1;
+            for se in sharded.iter_mut() {
+                se.table_mut().advance_day();
+            }
+        }
 
         // Collective alignment: every worker runs the same number of
         // micro rounds (empty rounds keep the all-to-alls matched).
@@ -1452,6 +1601,43 @@ fn worker_main(
         }
         let tokens = comm.all_gather_u64(my_tokens);
         let samples: u64 = comm.all_gather_u64(my_samples).iter().sum();
+        // Scenario telemetry, gathered collectively so every rank's
+        // records stay identical: batcher carry-over and resident rows
+        // sum across ranks, evictions are per-step deltas summed, and
+        // the day is the max stamp any rank's stream has reached.
+        let my_resident: u64 = sharded
+            .iter()
+            .map(|s| {
+                use crate::embedding::EmbeddingStore;
+                EmbeddingStore::len(s.table()) as u64
+            })
+            .sum();
+        let evict_now: u64 = sharded
+            .iter()
+            .map(|s| s.table().inner().stats().evictions)
+            .sum();
+        let my_evictions = evict_now - evict_prev;
+        evict_prev = evict_now;
+        let scen_gathered: Vec<Vec<u64>> = comm
+            .all_gather(crate::collective::comm::Message::Counts(vec![
+                my_carryover,
+                my_resident,
+                my_evictions,
+                my_day,
+            ]))
+            .into_iter()
+            .map(|m| m.into_counts())
+            .collect();
+        let mut batcher_carryover = 0u64;
+        let mut resident_rows = 0u64;
+        let mut evictions = 0u64;
+        let mut online_day = 0u64;
+        for s in &scen_gathered {
+            batcher_carryover += s[0];
+            resident_rows += s[1];
+            evictions += s[2];
+            online_day = online_day.max(s[3]);
+        }
         let mut losses = [step_loss[0] as f32, step_loss[1] as f32, my_samples as f32];
         comm.all_reduce_sum(&mut losses);
 
@@ -1596,6 +1782,10 @@ fn worker_main(
             online_sync_bytes: online_counts[4],
             wire_payload_bytes,
             wire_header_bytes,
+            batcher_carryover,
+            resident_rows,
+            online_day,
+            evictions,
         });
         // Endless runs would otherwise grow the record log without
         // bound; keep a rolling tail (`step` fields stay absolute).
@@ -1667,6 +1857,12 @@ fn worker_main(
         group_checksums,
         group_rows,
         transport_retries: comm.transport_retries(),
+        scenario: opts.scenario.as_ref().map(|s| s.name.to_string()),
+        fill_denom: if opts.train.sequence_balancing {
+            (opts.train.target_tokens * world) as u64
+        } else {
+            0
+        },
     })
 }
 
@@ -1732,6 +1928,7 @@ mod tests {
             param_count: 10,
             params_bin: "x".into(),
             params_seed: 0,
+            arch: crate::runtime::ModelArch::MeanPool,
             buckets: vec![
                 Bucket {
                     batch: 4,
