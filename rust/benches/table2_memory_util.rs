@@ -126,5 +126,48 @@ fn main() {
         rep.add_metric("probe_expansions", st.expansions.into());
         rep.add_metric("probe_max_load_factor", probe.max_load_factor().into());
     }
+
+    // Mixed-precision storage probe: the same table family under the
+    // FP32-hot / FP16-cold policy (§5.2). A skewed access pattern
+    // splits the census — a revisited head crosses the post-bump hot
+    // threshold while the one-shot tail stays cold on the binary16
+    // grid — and the effective value bytes land in the artifact next
+    // to the all-FP32 footprint they undercut.
+    {
+        use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
+        use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
+        use mtgrboost::embedding::precision::PrecisionPolicy;
+        const DIM: usize = 16;
+        let probe = ConcurrentDynamicTable::new(
+            DynamicTableConfig::new(DIM).with_capacity(8192).with_seed(11),
+            8,
+        )
+        .with_precision(PrecisionPolicy::mixed(4));
+        let mut buf = vec![0.0f32; DIM];
+        for id in 0..4096u64 {
+            probe.lookup_or_insert(id, &mut buf);
+        }
+        for _ in 0..4 {
+            for id in 0..256u64 {
+                probe.lookup_or_insert(id, &mut buf);
+            }
+        }
+        let ps = probe.precision_stats();
+        assert!(
+            ps.hot_rows > 0 && ps.cold_rows > 0,
+            "skewed traffic must split the census: {ps:?}"
+        );
+        let all_fp32 = probe.len() * DIM * 4;
+        let effective = probe.effective_value_bytes();
+        assert!(
+            effective < all_fp32,
+            "mixed storage must undercut all-fp32: {effective} vs {all_fp32}"
+        );
+        rep.add_metric("precision_hot_rows", ps.hot_rows.into());
+        rep.add_metric("precision_cold_rows", ps.cold_rows.into());
+        rep.add_metric("precision_quantize_ops", (ps.quantize_ops as usize).into());
+        rep.add_metric("precision_effective_value_bytes", effective.into());
+        rep.add_metric("precision_all_fp32_bytes", all_fp32.into());
+    }
     rep.save().unwrap();
 }

@@ -10,6 +10,7 @@
 //! <dir>/delta_<seq:05>/meta.json    seq, world, step, base_step, model,
 //!                                   dim, param_count
 //!                                   [+ group_dims when > 1 merge group]
+//!                                   [+ precision, hot_threshold when mixed]
 //! <dir>/delta_<seq:05>/dense.bin    full dense params + Adam state
 //!                                   (rank 0 — dense is tiny next to the
 //!                                   sparse tables, so it ships whole)
@@ -40,6 +41,7 @@ use super::{
     write_sealed, CheckpointMeta, SparseRow,
 };
 use crate::embedding::concurrent::ConcurrentDynamicTable;
+use crate::embedding::precision::PrecisionPolicy;
 use crate::embedding::GlobalId;
 use crate::optim::adam::{DenseAdam, RowState, SparseAdam};
 use crate::util::json::Json;
@@ -95,6 +97,11 @@ pub struct GroupDelta<'a> {
     pub dim: usize,
     pub upserts: &'a [SparseRow],
     pub removed: &'a [GlobalId],
+    /// The precision policy the group's rows were stored under. When
+    /// enabled, rank 0 records it in the snapshot meta so serving
+    /// replicas and recovery replay on the same f16 grid; the disabled
+    /// fp32 policy writes no keys (byte-identical historical layout).
+    pub policy: PrecisionPolicy,
 }
 
 /// Write one rank's shard of a delta snapshot, one sparse file per
@@ -112,6 +119,11 @@ pub fn save_delta_groups(
     groups: &[GroupDelta],
 ) -> Result<usize> {
     anyhow::ensure!(!groups.is_empty(), "delta needs at least one group");
+    anyhow::ensure!(
+        groups.iter().all(|g| g.policy == groups[0].policy),
+        "delta groups disagree on the precision policy (the trainer \
+         installs one policy for every merge group)"
+    );
     let ddir = delta_dir(dir, meta.seq);
     std::fs::create_dir_all(&ddir)?;
     if rank == 0 {
@@ -132,6 +144,7 @@ pub fn save_delta_groups(
                 Json::Arr(groups.iter().map(|g| g.dim.into()).collect()),
             );
         }
+        super::set_precision_keys(&mut j, groups[0].policy);
         std::fs::write(ddir.join("meta.json"), j.pretty())?;
         write_dense_bin(&ddir, params, adam)?;
     }
@@ -180,6 +193,7 @@ pub fn save_delta(
             dim: meta.dim,
             upserts,
             removed,
+            policy: PrecisionPolicy::fp32(),
         }],
     )
 }
@@ -244,6 +258,16 @@ pub fn load_delta_group_dims(dir: &Path, meta: &DeltaMeta) -> Result<Vec<usize>>
         .with_context(|| format!("no delta meta at {}", path.display()))?;
     let j = Json::parse(&text).context("parse delta meta")?;
     super::parse_group_dims(&j, meta.dim)
+}
+
+/// Precision policy recorded in delta `seq`'s metadata (the disabled
+/// fp32 policy for snapshots that never wrote the keys).
+pub fn load_delta_precision_policy(dir: &Path, seq: u64) -> Result<PrecisionPolicy> {
+    let path = delta_dir(dir, seq).join("meta.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no delta meta at {}", path.display()))?;
+    let j = Json::parse(&text).context("parse delta meta")?;
+    super::parse_precision_keys(&j)
 }
 
 /// The smallest byte count a real snapshot `meta.json` can have; a
@@ -419,6 +443,12 @@ pub fn save_full_groups(
     groups: &[(&ConcurrentDynamicTable, &SparseAdam)],
 ) -> Result<()> {
     anyhow::ensure!(!groups.is_empty(), "checkpoint needs at least one group");
+    let policy = groups[0].0.precision();
+    anyhow::ensure!(
+        groups.iter().all(|(t, _)| t.precision() == policy),
+        "checkpoint groups disagree on the precision policy (the trainer \
+         installs one policy for every merge group)"
+    );
     std::fs::create_dir_all(dir)?;
     if rank == 0 {
         let (params, adam) =
@@ -436,6 +466,7 @@ pub fn save_full_groups(
                 Json::Arr(groups.iter().map(|(t, _)| t.dim().into()).collect()),
             );
         }
+        super::set_precision_keys(&mut j, policy);
         std::fs::write(dir.join("meta.json"), j.pretty())?;
         write_dense_bin(dir, params, adam)?;
     }
@@ -687,6 +718,101 @@ mod tests {
         };
         let dopt = DenseAdam::new(2, crate::optim::adam::AdamParams::default());
         save_delta(dir, &m, 0, Some((&[0.0, 0.0][..], &dopt)), &[], &[]).unwrap();
+    }
+
+    #[test]
+    fn precision_metadata_rides_deltas_and_full_checkpoints() {
+        let dir = tmp("prec");
+        // fp32 snapshots write no keys, keeping their meta bytes
+        // byte-identical to the historical layout.
+        write_delta(&dir, 1, 5, 0);
+        let text =
+            std::fs::read_to_string(delta_dir(&dir, 1).join("meta.json")).unwrap();
+        assert!(!text.contains("precision"), "fp32 meta stays keyless: {text}");
+        assert!(!text.contains("hot_threshold"), "{text}");
+        assert_eq!(
+            load_delta_precision_policy(&dir, 1).unwrap(),
+            PrecisionPolicy::fp32()
+        );
+
+        // A mixed delta records the policy; the loader round-trips it.
+        let m = meta(2, 10);
+        let dopt = DenseAdam::new(2, AdamParams::default());
+        save_delta_groups(
+            &dir,
+            &m,
+            0,
+            Some((&[0.0, 0.0][..], &dopt)),
+            &[GroupDelta {
+                dim: DIM,
+                upserts: &[],
+                removed: &[],
+                policy: PrecisionPolicy::mixed(6),
+            }],
+        )
+        .unwrap();
+        assert_eq!(
+            load_delta_precision_policy(&dir, 2).unwrap(),
+            PrecisionPolicy::mixed(6)
+        );
+
+        // Groups disagreeing on the policy are a writer-side error.
+        let m3 = meta(3, 15);
+        let err = save_delta_groups(
+            &dir,
+            &m3,
+            0,
+            Some((&[0.0, 0.0][..], &dopt)),
+            &[
+                GroupDelta {
+                    dim: DIM,
+                    upserts: &[],
+                    removed: &[],
+                    policy: PrecisionPolicy::mixed(6),
+                },
+                GroupDelta {
+                    dim: DIM,
+                    upserts: &[],
+                    removed: &[],
+                    policy: PrecisionPolicy::fp32(),
+                },
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("precision"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Full checkpoints derive the keys from the tables themselves.
+        let cdir = tmp("prec_full");
+        let t = table(3).with_precision(PrecisionPolicy::mixed(4));
+        let mut buf = vec![0.0f32; DIM];
+        for id in 0..10u64 {
+            t.lookup_or_insert(id, &mut buf);
+        }
+        let o = SparseAdam::new(DIM, AdamParams::default());
+        let cm = CheckpointMeta {
+            world: 1,
+            step: 3,
+            model: "tiny".into(),
+            dim: DIM,
+            param_count: 2,
+        };
+        let dopt2 = DenseAdam::new(2, AdamParams::default());
+        save_full(&cdir, &cm, 0, Some((&[0.1, 0.2][..], &dopt2)), &t, &o).unwrap();
+        assert_eq!(
+            crate::checkpoint::load_precision_policy(&cdir).unwrap(),
+            PrecisionPolicy::mixed(4)
+        );
+        // And the rows it wrote are the stored (f16-grid) bits verbatim:
+        // installing them elsewhere reproduces the content checksum.
+        let meta2 = crate::checkpoint::load_meta(&cdir).unwrap();
+        let rows = crate::checkpoint::load_sparse_shard(&cdir, &meta2, 1, 0).unwrap();
+        let t2 = table(99);
+        let mut opt2 = SparseAdam::new(DIM, AdamParams::default());
+        install_rows_concurrent(rows, &t2, &mut opt2);
+        assert_eq!(t2.content_checksum(), t.content_checksum());
+        std::fs::remove_dir_all(cdir).ok();
     }
 
     #[test]

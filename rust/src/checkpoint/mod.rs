@@ -38,6 +38,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::embedding::dynamic_table::DynamicEmbeddingTable;
+use crate::embedding::precision::PrecisionPolicy;
 use crate::embedding::sharded::shard_owner;
 use crate::embedding::{EmbeddingStore, GlobalId};
 use crate::optim::adam::{DenseAdam, RowState, SparseAdam};
@@ -146,6 +147,51 @@ pub(crate) fn parse_group_dims(j: &Json, default_dim: usize) -> Result<Vec<usize
             Ok(dims)
         }
     }
+}
+
+/// Append the optional mixed-precision keys to a snapshot meta JSON.
+/// fp32 snapshots never write them — the same absent-key discipline as
+/// `group_dims` — so fp32 meta files stay byte-identical to pre-policy
+/// builds. The policy is uniform across merge groups (the trainer
+/// installs one `--precision`/`--hot-threshold` pair for every group),
+/// so scalar keys suffice.
+pub(crate) fn set_precision_keys(j: &mut Json, policy: PrecisionPolicy) {
+    if policy.enabled {
+        j.set("precision", "mixed".into());
+        j.set("hot_threshold", (policy.hot_threshold as usize).into());
+    }
+}
+
+/// Parse the optional precision keys of a checkpoint/delta meta JSON;
+/// absent (fp32 or historical snapshots) ⇒ the disabled policy. A
+/// present-but-malformed key is a hard error, never a silent fp32
+/// fallback — a replica that dropped the policy would misreport what
+/// grid its cold rows live on.
+pub(crate) fn parse_precision_keys(j: &Json) -> Result<PrecisionPolicy> {
+    match j.get("precision") {
+        Json::Null => Ok(PrecisionPolicy::fp32()),
+        v => match v.as_str() {
+            Some("fp32") => Ok(PrecisionPolicy::fp32()),
+            Some("mixed") => {
+                let t = j.expect_usize("hot_threshold")?;
+                anyhow::ensure!(
+                    (1..=u32::MAX as usize).contains(&t),
+                    "snapshot meta: hot_threshold must be in 1..=u32::MAX, got {t}"
+                );
+                Ok(PrecisionPolicy::mixed(t as u32))
+            }
+            _ => bail!("snapshot meta: invalid `precision` (expected \"fp32\"|\"mixed\")"),
+        },
+    }
+}
+
+/// Precision policy recorded in the checkpoint at `dir` (the disabled
+/// fp32 policy for snapshots that never wrote the keys).
+pub fn load_precision_policy(dir: &Path) -> Result<PrecisionPolicy> {
+    let text = std::fs::read_to_string(meta_path(dir))
+        .with_context(|| format!("no checkpoint at {}", dir.display()))?;
+    let j = Json::parse(&text).context("parse checkpoint meta")?;
+    parse_precision_keys(&j)
 }
 
 /// Per-group dims of the checkpoint at `dir` (`[meta.dim]` when the

@@ -470,6 +470,7 @@ mod tests {
                         dim,
                         upserts: &rows,
                         removed: &[],
+                        policy: crate::embedding::precision::PrecisionPolicy::fp32(),
                     }],
                 )
                 .unwrap();

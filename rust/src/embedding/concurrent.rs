@@ -29,7 +29,9 @@ use std::sync::RwLock;
 
 use crate::embedding::dynamic_table::{DynamicEmbeddingTable, DynamicTableConfig, TableStats};
 use crate::embedding::hash::{fmix64, hash_id};
+use crate::embedding::precision::{PrecisionPolicy, PrecisionStats};
 use crate::embedding::{ConcurrentEmbeddingStore, EmbeddingStore, GlobalId};
+use crate::util::f16::quantize_f16_slice;
 use crate::util::pool::{SharedSliceMut, WorkerPool};
 use crate::util::rng::Xoshiro256;
 use crate::util::tuning::TunableThreshold;
@@ -61,6 +63,16 @@ pub struct ConcurrentDynamicTable {
     route_seed: u64,
     /// Logical clock for eviction RNG streams (not part of row state).
     evict_clock: AtomicU64,
+    /// Hot/cold mixed-precision policy (§5.2). Disabled by default —
+    /// the fp32 path is byte-identical to the pre-policy table. With
+    /// the policy enabled, every write path re-quantizes still-cold
+    /// rows under the stripe write lock using the shared post-bump
+    /// classification rule, so a cold row's stored bits are always on
+    /// the f16 grid.
+    precision: PrecisionPolicy,
+    /// Total cold-row quantization write-backs (telemetry; the total is
+    /// schedule-independent even though the increment order is not).
+    quantize_ops: AtomicU64,
 }
 
 impl ConcurrentDynamicTable {
@@ -84,7 +96,20 @@ impl ConcurrentDynamicTable {
             mask: n as u64 - 1,
             route_seed: cfg.seed ^ STRIPE_SEED,
             evict_clock: AtomicU64::new(0),
+            precision: PrecisionPolicy::fp32(),
+            quantize_ops: AtomicU64::new(0),
         }
+    }
+
+    /// Install a mixed-precision policy (builder; call before sharing).
+    pub fn with_precision(mut self, policy: PrecisionPolicy) -> Self {
+        self.precision = policy;
+        self
+    }
+
+    /// The active precision policy.
+    pub fn precision(&self) -> PrecisionPolicy {
+        self.precision
     }
 
     /// Default striping: 8 stripes (one per simulated GPU's worth of
@@ -136,11 +161,47 @@ impl ConcurrentDynamicTable {
         total
     }
 
+    /// Quantize the stored row (and the caller's copy) if the row is
+    /// cold *after* the operation that just bumped its metadata — the
+    /// single post-bump classification rule shared with
+    /// [`crate::embedding::precision::MixedPrecisionTable`]. Called
+    /// under the stripe's write lock with the guard's table, so the
+    /// check-and-quantize is atomic per row. The untracked row access
+    /// keeps LRU/LFU metadata identical to an fp32 run.
+    #[inline]
+    fn quantize_if_cold(
+        &self,
+        t: &mut DynamicEmbeddingTable,
+        id: GlobalId,
+        out: Option<&mut [f32]>,
+    ) {
+        if !self.precision.enabled {
+            return;
+        }
+        let hot = match t.row_meta(id) {
+            Some((count, _)) => self.precision.is_hot_count(count),
+            None => return,
+        };
+        if hot {
+            return;
+        }
+        if let Some(row) = t.row_mut_untracked(id) {
+            quantize_f16_slice(row);
+            if let Some(out) = out {
+                out.copy_from_slice(row);
+            }
+            self.quantize_ops.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Training-time lookup (write-locks only the id's stripe; other
     /// stripes proceed in parallel).
     pub fn lookup_or_insert(&self, id: GlobalId, out: &mut [f32]) -> bool {
         let s = self.stripe_of(id);
-        self.stripes[s].write().unwrap().lookup_or_insert(id, out)
+        let mut t = self.stripes[s].write().unwrap();
+        let existed = t.lookup_or_insert(id, out);
+        self.quantize_if_cold(&mut t, id, Some(out));
+        existed
     }
 
     /// Read-only lookup (read lock: concurrent with other readers).
@@ -166,7 +227,11 @@ impl ConcurrentDynamicTable {
     /// Insert-or-overwrite a row with exact bits (checkpoint/delta
     /// install): the row is materialized if absent, then its value is
     /// copied from `row` verbatim, so the stored bits never depend on
-    /// the table's init seed.
+    /// the table's init seed. Deliberately bypasses the precision
+    /// policy: snapshots copy stored bits (cold rows already on the f16
+    /// grid), so installing them verbatim is exactly the binary16
+    /// round-trip — re-quantizing here would be redundant and would
+    /// corrupt installs of rows that were hot at snapshot time.
     pub fn set_row(&self, id: GlobalId, row: &[f32]) {
         let mut scratch = Vec::new();
         self.set_row_scratch(id, row, &mut scratch);
@@ -191,10 +256,18 @@ impl ConcurrentDynamicTable {
             .copy_from_slice(row);
     }
 
-    /// Additive row update (optimizer delta).
+    /// Additive row update (optimizer delta). With a mixed policy the
+    /// write-back re-quantizes rows that are still cold *after* the
+    /// bump — a row promoted by this very write lands at full f32
+    /// precision, matching the read path's classification.
     pub fn apply_delta(&self, id: GlobalId, delta: &[f32]) -> bool {
         let s = self.stripe_of(id);
-        self.stripes[s].write().unwrap().apply_delta(id, delta)
+        let mut t = self.stripes[s].write().unwrap();
+        let ok = t.apply_delta(id, delta);
+        if ok {
+            self.quantize_if_cold(&mut t, id, None);
+        }
+        ok
     }
 
     /// Remove an id; returns whether it was present.
@@ -303,6 +376,7 @@ impl ConcurrentDynamicTable {
                         // one stripe bucket, so row windows are disjoint.
                         let row = unsafe { window.slice_mut(i as usize * d, d) };
                         t.lookup_or_insert(ids[i as usize], row);
+                        self.quantize_if_cold(&mut t, ids[i as usize], Some(row));
                     }
                 } else {
                     let t = self.stripes[s].read().unwrap();
@@ -369,7 +443,11 @@ impl ConcurrentDynamicTable {
                     let row = unsafe { window.slice_mut(i as usize * d, d) };
                     if admit[i as usize] {
                         t.lookup_or_insert(ids[i as usize], row);
+                        self.quantize_if_cold(&mut t, ids[i as usize], Some(row));
                     } else {
+                        // Rejected ids read only: absent → default row,
+                        // present → stored bits (already on the f16 grid
+                        // when cold — no bump, no re-quantization).
                         t.lookup(ids[i as usize], row);
                     }
                 }
@@ -394,6 +472,42 @@ impl ConcurrentDynamicTable {
             }
         }
         sum
+    }
+
+    /// Post-bump hot/cold classification for one row (`None` when
+    /// absent). Read lock only — classification never bumps metadata,
+    /// so probing a row's precision is free of side effects.
+    pub fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        let s = self.stripe_of(id);
+        let t = self.stripes[s].read().unwrap();
+        t.row_meta(id)
+            .map(|(count, _)| self.precision.is_hot_count(count))
+    }
+
+    /// Hot/cold census + cumulative quantization ops. With the policy
+    /// disabled every row counts as hot (threshold 0).
+    pub fn precision_stats(&self) -> PrecisionStats {
+        let threshold = if self.precision.enabled {
+            self.precision.hot_threshold
+        } else {
+            0
+        };
+        let mut stats = PrecisionStats {
+            quantize_ops: self.quantize_ops.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        for s in &self.stripes {
+            let (hot, cold) = s.read().unwrap().hot_cold_census(threshold);
+            stats.hot_rows += hot;
+            stats.cold_rows += cold;
+        }
+        stats
+    }
+
+    /// Effective value-storage bytes under the active policy (hot rows
+    /// 4 B, cold rows 2 B per element).
+    pub fn effective_value_bytes(&self) -> usize {
+        self.precision_stats().effective_value_bytes(self.dim)
     }
 }
 
@@ -420,6 +534,14 @@ impl ConcurrentEmbeddingStore for ConcurrentDynamicTable {
 
     fn memory_bytes(&self) -> usize {
         ConcurrentDynamicTable::memory_bytes(self)
+    }
+
+    fn precision_policy(&self) -> PrecisionPolicy {
+        self.precision
+    }
+
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        ConcurrentDynamicTable::row_is_hot(self, id)
     }
 }
 
@@ -459,6 +581,14 @@ impl EmbeddingStore for ConcurrentDynamicTable {
 
     fn memory_bytes(&self) -> usize {
         ConcurrentDynamicTable::memory_bytes(self)
+    }
+
+    fn precision_policy(&self) -> PrecisionPolicy {
+        self.precision
+    }
+
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        ConcurrentDynamicTable::row_is_hot(self, id)
     }
 }
 
@@ -616,6 +746,118 @@ mod tests {
         assert_eq!(a.content_checksum(), b.content_checksum(), "order-free");
         assert!(a.apply_delta(42, &[0.5, 0.0, 0.0, 0.0]));
         assert_ne!(a.content_checksum(), b.content_checksum(), "value-sensitive");
+    }
+
+    #[test]
+    fn mixed_precision_matches_reference_wrapper() {
+        use crate::embedding::precision::{MixedPrecisionTable, PrecisionPolicy};
+        // Same touch sequence through the concurrent table (policy
+        // native) and the single-threaded reference wrapper: stored
+        // bits, returned bits and classification must agree id by id.
+        let policy = PrecisionPolicy::mixed(3);
+        let conc = ConcurrentDynamicTable::new(cfg(), 4).with_precision(policy);
+        let mut reference =
+            MixedPrecisionTable::new(DynamicEmbeddingTable::new(cfg()), policy);
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        for round in 0..4u64 {
+            for id in 0..200u64 {
+                if id % (round + 1) != 0 {
+                    continue; // skewed touch counts → both classes exist
+                }
+                conc.lookup_or_insert(id, &mut a);
+                reference.lookup_or_insert(id, &mut b);
+                assert_eq!(a, b, "round {round} id {id}: returned rows");
+                let delta = [0.01 * (id as f32 + 1.0), -0.5, 1e-6, 0.25];
+                assert_eq!(
+                    conc.apply_delta(id, &delta),
+                    reference.apply_delta(id, &delta)
+                );
+            }
+        }
+        let mut hot = 0;
+        for id in 0..200u64 {
+            let cr = conc.row(id);
+            let rr = reference.inner().row(id).map(|r| r.to_vec());
+            assert_eq!(cr, rr, "id {id}: stored bits");
+            if let Some(h) = conc.row_is_hot(id) {
+                assert_eq!(h, reference.is_hot(id), "id {id}: classification");
+                hot += usize::from(h);
+            }
+        }
+        assert!(hot > 0, "threshold 3 over 4 rounds must promote some rows");
+        let stats = conc.precision_stats();
+        assert!(stats.hot_rows > 0 && stats.cold_rows > 0);
+        assert_eq!(stats.hot_rows, hot);
+        assert!(stats.quantize_ops > 0);
+        assert!(conc.effective_value_bytes() < ConcurrentDynamicTable::len(&conc) * 4 * 4);
+    }
+
+    #[test]
+    fn mixed_precision_batched_fetch_matches_serial_and_stays_on_grid() {
+        use crate::embedding::precision::PrecisionPolicy;
+        use crate::util::f16::quantize_f16;
+        let ids: Vec<u64> = (0..4000u64).map(|i| (i * i + 7) % 613).collect();
+        let policy = PrecisionPolicy::mixed(1_000_000); // everything stays cold
+        let serial_table = ConcurrentDynamicTable::new(cfg(), 8).with_precision(policy);
+        let mut serial_out = vec![0.0f32; ids.len() * 4];
+        serial_table.fetch_rows_shared(&ids, true, &mut serial_out, None);
+        for threads in [1, 2, 4] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            let table = ConcurrentDynamicTable::new(cfg(), 8).with_precision(policy);
+            let mut out = vec![0.0f32; ids.len() * 4];
+            table.fetch_rows_shared(&ids, true, &mut out, Some(&pool));
+            assert_eq!(out, serial_out, "{threads} threads: rows diverged");
+            assert_eq!(
+                table.content_checksum(),
+                serial_table.content_checksum(),
+                "{threads} threads: contents diverged"
+            );
+        }
+        // The storage invariant: every cold row's stored bits (and the
+        // returned copies) sit exactly on the f16 grid.
+        for id in serial_table.live_ids() {
+            let row = serial_table.row(id).unwrap();
+            for &v in &row {
+                assert_eq!(v, quantize_f16(v), "id {id} off the f16 grid");
+            }
+        }
+        for &v in &serial_out {
+            assert_eq!(v, quantize_f16(v), "returned row off the f16 grid");
+        }
+    }
+
+    #[test]
+    fn fp32_policy_is_byte_identical_to_unpoliced_table() {
+        // `--precision fp32` must be a no-op: same contents as a table
+        // constructed without any policy call.
+        let plain = ConcurrentDynamicTable::new(cfg(), 4);
+        let policed = ConcurrentDynamicTable::new(cfg(), 4)
+            .with_precision(crate::embedding::precision::PrecisionPolicy::fp32());
+        let mut buf = vec![0.0f32; 4];
+        for id in 0..300u64 {
+            plain.lookup_or_insert(id, &mut buf);
+            policed.lookup_or_insert(id, &mut buf);
+            plain.apply_delta(id, &[1e-6; 4]);
+            policed.apply_delta(id, &[1e-6; 4]);
+        }
+        assert_eq!(plain.content_checksum(), policed.content_checksum());
+        let stats = policed.precision_stats();
+        assert_eq!(stats.quantize_ops, 0);
+        assert_eq!(stats.cold_rows, 0, "disabled policy counts every row hot");
+    }
+
+    #[test]
+    fn set_row_installs_exact_bits_under_mixed_policy() {
+        use crate::embedding::precision::PrecisionPolicy;
+        // Checkpoint/delta/replica installs must preserve bits verbatim
+        // even for values off the f16 grid (a row can be hot at
+        // snapshot time).
+        let t = ConcurrentDynamicTable::new(cfg(), 4)
+            .with_precision(PrecisionPolicy::mixed(2));
+        let row = [0.1f32, 1e-6, -3.14159, 42.4242];
+        t.set_row(77, &row);
+        assert_eq!(t.row(77).unwrap(), row.to_vec());
     }
 
     #[test]

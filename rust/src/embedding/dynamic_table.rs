@@ -489,6 +489,36 @@ impl DynamicEmbeddingTable {
         Some((m.access_count, m.last_access))
     }
 
+    /// Mutable row access that does NOT touch the eviction metadata
+    /// (no access-count or clock bump). Precision write-backs use this:
+    /// re-quantizing a cold row in place is storage maintenance, not an
+    /// access, so LRU/LFU state stays identical to an fp32 run.
+    pub fn row_mut_untracked(&mut self, id: GlobalId) -> Option<&mut [f32]> {
+        let idx = self.find(id)?;
+        let (c, r) = unpack_ptr(self.slots[idx].ptr);
+        let d = self.cfg.dim;
+        Some(&mut self.chunks[c].values[r * d..(r + 1) * d])
+    }
+
+    /// Hot/cold row census for a precision policy: rows with
+    /// `access_count >= threshold` are hot. Returns `(hot, cold)`.
+    pub fn hot_cold_census(&self, threshold: u32) -> (usize, usize) {
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        for s in self.slots.iter() {
+            if s.key == EMPTY || s.key == TOMBSTONE {
+                continue;
+            }
+            let (c, r) = unpack_ptr(s.ptr);
+            if self.chunks[c].meta[r].access_count >= threshold {
+                hot += 1;
+            } else {
+                cold += 1;
+            }
+        }
+        (hot, cold)
+    }
+
     /// Iterate over all live (id, row) pairs (checkpointing).
     pub fn iter_rows(&self) -> impl Iterator<Item = (GlobalId, &[f32])> + '_ {
         let d = self.cfg.dim;

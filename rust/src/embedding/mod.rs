@@ -11,8 +11,15 @@
 //!   `HashTableCollection`, Eq. 8 bit-packed global IDs.
 //! - [`dedup`] — two-stage ID deduplication (§4.3).
 //! - [`sharded`] — model-parallel sharded lookup over the communicator
-//!   (two all-to-alls per lookup, gradient all-to-all on backward).
-//! - [`precision`] — hot/cold FP32/FP16 mixed-precision row storage (§5.2).
+//!   (two all-to-alls per lookup, gradient all-to-all on backward);
+//!   FP16-compresses cold-row replies and gradient pushes when the
+//!   store's precision policy is enabled.
+//! - [`precision`] — hot/cold FP32/FP16 mixed-precision policy (§5.2).
+//!   Composes orthogonally with the other store layers: the policy
+//!   lives inside [`concurrent::ConcurrentDynamicTable`] (per
+//!   `MergePlan` dim group), the online admission gate wraps it
+//!   unchanged, and consumers discover it through the
+//!   `precision_policy`/`row_is_hot` trait hooks below.
 
 pub mod concurrent;
 pub mod dedup;
@@ -84,6 +91,21 @@ pub trait EmbeddingStore {
 
     /// Approximate resident bytes (key + value + metadata structures).
     fn memory_bytes(&self) -> usize;
+
+    /// The mixed-precision policy composed into this store. Default:
+    /// pure FP32 (policy-free stores need no changes). The sharded
+    /// exchange keys its FP16 wire compression off `enabled`.
+    fn precision_policy(&self) -> precision::PrecisionPolicy {
+        precision::PrecisionPolicy::fp32()
+    }
+
+    /// Post-bump hot/cold classification for one row; `None` when the
+    /// row is absent or the store carries no policy. Side-effect free
+    /// (never bumps access metadata).
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        let _ = id;
+        None
+    }
 }
 
 /// Shared-reference analogue of [`EmbeddingStore`] for stores that
@@ -116,4 +138,17 @@ pub trait ConcurrentEmbeddingStore: Send + Sync {
 
     /// Approximate resident bytes.
     fn memory_bytes(&self) -> usize;
+
+    /// The mixed-precision policy composed into this store (see
+    /// [`EmbeddingStore::precision_policy`]).
+    fn precision_policy(&self) -> precision::PrecisionPolicy {
+        precision::PrecisionPolicy::fp32()
+    }
+
+    /// Post-bump hot/cold classification (see
+    /// [`EmbeddingStore::row_is_hot`]).
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        let _ = id;
+        None
+    }
 }

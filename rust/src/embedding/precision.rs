@@ -6,21 +6,69 @@
 //! FP16 storage and computation, significantly reducing memory footprint
 //! while accelerating table lookup operations."
 //!
-//! [`MixedPrecisionTable`] wraps a [`DynamicEmbeddingTable`], dynamically
-//! partitioning rows into *hot* (FP32, access count ≥ threshold) and
-//! *cold* (FP16) sets. Cold rows physically round-trip through IEEE
-//! binary16 on every write-back, so the quantization error the paper
-//! accepts for cold rows is actually applied; memory/communication
-//! accounting reports cold rows at 2 bytes/element.
+//! The policy lives here ([`PrecisionPolicy`] / [`PrecisionMode`] /
+//! [`PrecisionStats`]) and composes into two stores:
+//!
+//! - [`MixedPrecisionTable`] wraps the single-threaded
+//!   [`DynamicEmbeddingTable`] (the original seed wrapper, kept for the
+//!   §5.2 ablations and as the policy's reference semantics);
+//! - [`super::concurrent::ConcurrentDynamicTable`] applies the same
+//!   policy natively under its stripe locks, which is what the trainer,
+//!   the online gate and the sharded exchange actually run
+//!   (`--precision mixed`).
+//!
+//! **One deterministic classification rule, shared by every path**: a row
+//! is *hot* iff its access count **after** the current operation's
+//! metadata bump is `>= hot_threshold`. Reads (`lookup_or_insert` hit),
+//! fresh inserts and write-backs (`apply_delta`) all classify post-bump,
+//! so hot/cold membership is a pure function of the per-id touch sequence
+//! — independent of the read-vs-write path and of thread schedules. Cold
+//! rows physically round-trip through IEEE binary16 on every write-back,
+//! so the quantization error the paper accepts for cold rows is actually
+//! applied; the promoting touch itself is served at full precision (a row
+//! crossing the threshold on a write is NOT re-quantized on that write).
+//!
+//! The storage invariant that falls out: **a cold row's stored bits are
+//! always on the f16 grid**. Checkpoints, deltas and serving replicas
+//! copy stored bits verbatim, so cold rows round-trip binary16 exactly
+//! with no extra machinery, and FP16 wire encodings of cold rows are
+//! lossless.
 
 use crate::embedding::dynamic_table::DynamicEmbeddingTable;
 use crate::embedding::{EmbeddingStore, GlobalId};
 use crate::util::f16::quantize_f16_slice;
 
+/// Storage/wire precision selection (`--precision` flag, checkpoint
+/// metadata).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionMode {
+    /// Everything FP32 (byte-identical to the pre-policy system).
+    Fp32,
+    /// FP32 hot rows, FP16 cold rows (§5.2).
+    Mixed,
+}
+
+impl PrecisionMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "fp32" => Ok(PrecisionMode::Fp32),
+            "mixed" => Ok(PrecisionMode::Mixed),
+            other => Err(format!("invalid precision '{other}' (expected fp32|mixed)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PrecisionMode::Fp32 => "fp32",
+            PrecisionMode::Mixed => "mixed",
+        }
+    }
+}
+
 /// Hot/cold partitioning policy.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PrecisionPolicy {
-    /// Rows with `access_count >= hot_threshold` stay FP32.
+    /// Rows with post-bump `access_count >= hot_threshold` stay FP32.
     pub hot_threshold: u32,
     /// Enable mixed precision; if false everything is FP32.
     pub enabled: bool,
@@ -35,12 +83,68 @@ impl Default for PrecisionPolicy {
     }
 }
 
+impl PrecisionPolicy {
+    /// Pure-FP32 policy (the system default; zero behavioral change).
+    pub fn fp32() -> Self {
+        PrecisionPolicy {
+            hot_threshold: 0,
+            enabled: false,
+        }
+    }
+
+    /// Mixed FP32-hot/FP16-cold policy.
+    pub fn mixed(hot_threshold: u32) -> Self {
+        PrecisionPolicy {
+            hot_threshold,
+            enabled: true,
+        }
+    }
+
+    pub fn from_mode(mode: PrecisionMode, hot_threshold: u32) -> Self {
+        match mode {
+            PrecisionMode::Fp32 => PrecisionPolicy::fp32(),
+            PrecisionMode::Mixed => PrecisionPolicy::mixed(hot_threshold),
+        }
+    }
+
+    pub fn mode(&self) -> PrecisionMode {
+        if self.enabled {
+            PrecisionMode::Mixed
+        } else {
+            PrecisionMode::Fp32
+        }
+    }
+
+    /// The single classification rule: hot iff the (post-bump) access
+    /// count clears the threshold. Disabled policies treat every row as
+    /// hot (FP32).
+    #[inline]
+    pub fn is_hot_count(&self, access_count: u32) -> bool {
+        !self.enabled || access_count >= self.hot_threshold
+    }
+}
+
 /// Running counts for memory accounting and the §5.2 ablations.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PrecisionStats {
     pub hot_rows: usize,
     pub cold_rows: usize,
     pub quantize_ops: u64,
+}
+
+impl PrecisionStats {
+    /// Fold another snapshot into this one (stripe / group aggregation).
+    pub fn merge(&mut self, other: &PrecisionStats) {
+        self.hot_rows += other.hot_rows;
+        self.cold_rows += other.cold_rows;
+        self.quantize_ops += other.quantize_ops;
+    }
+
+    /// Effective value-storage bytes at `dim`: hot rows 4 B, cold 2 B
+    /// per element.
+    pub fn effective_value_bytes(&self, dim: usize) -> usize {
+        self.hot_rows * dim * 4 + self.cold_rows * dim * 2
+    }
 }
 
 /// Mixed-precision wrapper over the dynamic table.
@@ -67,27 +171,43 @@ impl MixedPrecisionTable {
         &mut self.inner
     }
 
+    pub fn policy(&self) -> PrecisionPolicy {
+        self.policy
+    }
+
     /// Is this row currently in the hot (FP32) set?
     pub fn is_hot(&self, id: GlobalId) -> bool {
         match self.inner.row_meta(id) {
-            Some((count, _)) => count >= self.policy.hot_threshold,
+            Some((count, _)) => self.policy.is_hot_count(count),
             None => false,
+        }
+    }
+
+    /// Quantize the stored row (and the caller's copy) if the row is
+    /// cold *after* the operation that just bumped its metadata. The
+    /// stored bits and the bits handed to compute stay identical.
+    fn quantize_if_cold(&mut self, id: GlobalId, out: Option<&mut [f32]>) {
+        if !self.policy.enabled || self.is_hot(id) {
+            return;
+        }
+        if let Some(row) = self.inner.row_mut_untracked(id) {
+            quantize_f16_slice(row);
+            if let Some(out) = out {
+                out.copy_from_slice(row);
+            }
+            self.stats.quantize_ops += 1;
         }
     }
 
     /// Recompute the hot/cold row census (cheap full scan, run once per
     /// reporting interval, not per step).
     pub fn refresh_census(&mut self) {
-        let mut hot = 0;
-        let mut cold = 0;
-        let ids: Vec<GlobalId> = self.inner.iter_rows().map(|(id, _)| id).collect();
-        for id in ids {
-            if self.is_hot(id) {
-                hot += 1;
-            } else {
-                cold += 1;
-            }
-        }
+        let threshold = if self.policy.enabled {
+            self.policy.hot_threshold
+        } else {
+            0
+        };
+        let (hot, cold) = self.inner.hot_cold_census(threshold);
         self.stats.hot_rows = hot;
         self.stats.cold_rows = cold;
     }
@@ -100,17 +220,19 @@ impl MixedPrecisionTable {
         if !self.policy.enabled {
             return (self.stats.hot_rows + self.stats.cold_rows) * d * 4;
         }
-        self.stats.hot_rows * d * 4 + self.stats.cold_rows * d * 2
+        self.stats.effective_value_bytes(d)
     }
 
     /// Wire bytes for transmitting `rows` embedding rows of which
-    /// `cold_fraction` are cold (FP16 on the wire).
+    /// `cold_fraction` are cold (FP16 on the wire). The cold count
+    /// rounds to nearest (a truncating cast undercounted the cold set
+    /// and overstated wire volume).
     pub fn wire_bytes(&self, rows: usize, cold_fraction: f64) -> usize {
         let d = self.inner.dim();
         if !self.policy.enabled {
             return rows * d * 4;
         }
-        let cold = (rows as f64 * cold_fraction) as usize;
+        let cold = ((rows as f64 * cold_fraction).round() as usize).min(rows);
         (rows - cold) * d * 4 + cold * d * 2
     }
 }
@@ -126,45 +248,53 @@ impl EmbeddingStore for MixedPrecisionTable {
 
     fn lookup_or_insert(&mut self, id: GlobalId, out: &mut [f32]) -> bool {
         let existed = self.inner.lookup_or_insert(id, out);
-        // Cold rows are *stored* as f16: the values handed to compute are
-        // the quantized ones.
-        if self.policy.enabled && !self.is_hot(id) {
-            quantize_f16_slice(out);
-            self.stats.quantize_ops += 1;
-        }
+        // Cold rows are *stored* as f16: the stored bits and the values
+        // handed to compute are both the quantized ones.
+        self.quantize_if_cold(id, Some(out));
         existed
     }
 
     fn lookup(&self, id: GlobalId, out: &mut [f32]) -> bool {
-        let found = self.inner.lookup(id, out);
-        if found && self.policy.enabled && !self.is_hot(id) {
-            quantize_f16_slice(out);
-        }
-        found
+        // Read-only path: cold stored bits are already on the f16 grid
+        // (every write-back quantizes), so the stored value is returned
+        // verbatim and classification needs no metadata bump.
+        self.inner.lookup(id, out)
     }
 
     fn apply_delta(&mut self, id: GlobalId, delta: &[f32]) -> bool {
-        let hot = !self.policy.enabled || self.is_hot(id);
         let ok = self.inner.apply_delta(id, delta);
-        if ok && !hot {
-            // Write-back for a cold row re-quantizes the stored value —
-            // this is where FP16 storage accumulates quantization error,
-            // which is exactly why the paper keeps hot rows FP32.
-            if let Some(row) = self.inner.row_mut(id) {
-                quantize_f16_slice(row);
-            }
-            self.stats.quantize_ops += 1;
+        // Classify AFTER the inner table bumped the access count — the
+        // same post-bump rule as lookup_or_insert. A row whose crossing
+        // write just promoted it to hot is served at full precision;
+        // rows still cold re-quantize on write-back, which is where FP16
+        // storage accumulates quantization error (exactly why the paper
+        // keeps hot rows FP32).
+        if ok {
+            self.quantize_if_cold(id, None);
         }
         ok
     }
 
     fn memory_bytes(&self) -> usize {
         // Key structure + metadata from the inner table, values at mixed
-        // precision.
+        // precision. Saturate the subtraction: the inner accounting may
+        // legitimately report less than the live-value bytes (chunked
+        // allocation counts allocated, not live, rows — if that changes,
+        // misreporting must not wrap).
         let full = self.inner.memory_bytes();
         let d = self.inner.dim();
         let value_bytes_f32 = self.inner.len() * d * 4;
-        full - value_bytes_f32.min(full) + self.effective_value_bytes()
+        full.saturating_sub(value_bytes_f32) + self.effective_value_bytes()
+    }
+
+    fn precision_policy(&self) -> PrecisionPolicy {
+        self.policy
+    }
+
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        self.inner
+            .row_meta(id)
+            .map(|(count, _)| self.policy.is_hot_count(count))
     }
 }
 
@@ -172,15 +302,17 @@ impl EmbeddingStore for MixedPrecisionTable {
 mod tests {
     use super::*;
     use crate::embedding::dynamic_table::DynamicTableConfig;
+    use crate::util::f16::quantize_f16;
 
     fn table(threshold: u32) -> MixedPrecisionTable {
         MixedPrecisionTable::new(
             DynamicEmbeddingTable::new(DynamicTableConfig::new(8).with_capacity(64)),
-            PrecisionPolicy {
-                hot_threshold: threshold,
-                enabled: true,
-            },
+            PrecisionPolicy::mixed(threshold),
         )
+    }
+
+    fn on_f16_grid(xs: &[f32]) -> bool {
+        xs.iter().all(|&v| v == quantize_f16(v))
     }
 
     #[test]
@@ -188,9 +320,12 @@ mod tests {
         let mut t = table(1000); // everything cold
         let mut out = vec![0.0f32; 8];
         t.lookup_or_insert(1, &mut out);
-        for &v in &out {
-            assert_eq!(v, crate::util::f16::quantize_f16(v), "value not on f16 grid");
-        }
+        assert!(on_f16_grid(&out), "returned value not on f16 grid");
+        // The STORED bits are quantized too, not just the returned copy.
+        assert!(
+            on_f16_grid(t.inner().row(1).unwrap()),
+            "stored value not on f16 grid"
+        );
     }
 
     #[test]
@@ -214,9 +349,68 @@ mod tests {
         }
     }
 
+    /// Regression for the read/write classification asymmetry: a row
+    /// whose access count crosses `hot_threshold` ON an `apply_delta`
+    /// must be classified post-bump (hot) and therefore NOT re-quantized
+    /// by that write — the same rule `lookup_or_insert` applies.
+    #[test]
+    fn threshold_crossing_write_is_not_requantized() {
+        let threshold = 3u32;
+        let mut t = table(threshold);
+        let mut out = vec![0.0f32; 8];
+        // Two touches: insert (count 1) + hit (count 2) — one below the
+        // threshold, still cold, stored bits on the f16 grid.
+        t.lookup_or_insert(9, &mut out);
+        t.lookup_or_insert(9, &mut out);
+        assert!(!t.is_hot(9));
+        assert!(on_f16_grid(t.inner().row(9).unwrap()));
+        // The crossing write: count 2 → 3 == threshold. Post-bump the
+        // row is hot, so the delta must land at full f32 precision.
+        let tiny = 1e-6f32; // far below f16 resolution near |v|≈0.1
+        assert!(t.apply_delta(9, &[tiny; 8]));
+        assert!(t.is_hot(9), "crossing write must promote post-bump");
+        let stored = t.inner().row(9).unwrap();
+        for (i, (&s, &o)) in stored.iter().zip(out.iter()).enumerate() {
+            assert_eq!(
+                s,
+                o + tiny,
+                "dim {i}: promoting write was quantized (pre-bump classification)"
+            );
+        }
+        // And the next read returns those exact fp32 bits.
+        let mut back = vec![0.0f32; 8];
+        assert!(t.lookup_or_insert(9, &mut back));
+        for i in 0..8 {
+            assert_eq!(back[i], out[i] + tiny, "dim {i}");
+        }
+    }
+
+    #[test]
+    fn reads_and_writes_share_one_classification() {
+        // Drive the same id through interleaved reads and writes around
+        // the threshold; at every point the stored bits must be on the
+        // f16 grid iff the post-bump count is below the threshold.
+        let threshold = 4u32;
+        let mut t = table(threshold);
+        let mut out = vec![0.0f32; 8];
+        t.lookup_or_insert(11, &mut out); // count 1
+        assert!(t.apply_delta(11, &[0.123; 8])); // count 2, still cold
+        assert!(on_f16_grid(t.inner().row(11).unwrap()));
+        t.lookup_or_insert(11, &mut out); // count 3, still cold
+        assert!(on_f16_grid(&out));
+        assert!(t.apply_delta(11, &[1e-6; 8])); // count 4 → hot on the write
+        assert!(t.is_hot(11));
+        let stored = t.inner().row(11).unwrap().to_vec();
+        assert_eq!(
+            stored,
+            out.iter().map(|&v| v + 1e-6).collect::<Vec<_>>(),
+            "write and subsequent reads disagree on classification"
+        );
+    }
+
     #[test]
     fn cold_write_back_accumulates_quantization() {
-        let mut t = table(1000); //永 cold
+        let mut t = table(1000); // forever cold
         let mut v0 = vec![0.0f32; 8];
         t.lookup_or_insert(5, &mut v0);
         // A tiny delta below f16 resolution around |v|≈0.1 is lost.
@@ -243,7 +437,7 @@ mod tests {
         assert_eq!(t.stats.hot_rows, 1);
         assert_eq!(t.stats.cold_rows, 10);
         let eff = t.effective_value_bytes();
-        assert_eq!(eff, 1 * 8 * 4 + 10 * 8 * 2);
+        assert_eq!(eff, 8 * 4 + 10 * 8 * 2);
         // Mixed-precision memory strictly below all-FP32 memory.
         assert!(t.memory_bytes() < t.inner().memory_bytes());
     }
@@ -256,14 +450,27 @@ mod tests {
         assert_eq!(t.wire_bytes(100, 0.5), 50 * 8 * 4 + 50 * 8 * 2);
     }
 
+    /// Regression for the truncating cold-count cast: a fraction that
+    /// rounds up must round up, and float error near 1.0 must never
+    /// produce cold > rows.
+    #[test]
+    fn wire_bytes_rounds_cold_count() {
+        let t = table(2);
+        let d = 8;
+        // 10 × 0.55 = 5.5 → 6 cold (round-to-nearest), not 5 (truncate).
+        assert_eq!(t.wire_bytes(10, 0.55), 4 * d * 4 + 6 * d * 2);
+        // Accumulated float error cannot push cold beyond rows.
+        assert_eq!(t.wire_bytes(3, 0.999_999_9), 3 * d * 2);
+        // The undercount case from the bug: 3 × (2/3) = 1.9999… was
+        // truncated to 1 cold; must round to 2.
+        assert_eq!(t.wire_bytes(3, 2.0 / 3.0), d * 4 + 2 * d * 2);
+    }
+
     #[test]
     fn disabled_policy_is_transparent_fp32() {
         let mut t = MixedPrecisionTable::new(
             DynamicEmbeddingTable::new(DynamicTableConfig::new(4).with_capacity(64)),
-            PrecisionPolicy {
-                hot_threshold: 1,
-                enabled: false,
-            },
+            PrecisionPolicy::fp32(),
         );
         let mut out = vec![0.0f32; 4];
         t.lookup_or_insert(1, &mut out);
@@ -276,5 +483,22 @@ mod tests {
             assert!(((v[i] - out[i]) - 1e-5).abs() < 1e-7);
             assert_ne!(v[i], out[i]);
         }
+        assert_eq!(t.stats.quantize_ops, 0);
+    }
+
+    #[test]
+    fn precision_mode_parses() {
+        assert_eq!(PrecisionMode::parse("fp32").unwrap(), PrecisionMode::Fp32);
+        assert_eq!(PrecisionMode::parse("mixed").unwrap(), PrecisionMode::Mixed);
+        assert!(PrecisionMode::parse("bf16").is_err());
+        assert_eq!(PrecisionMode::Mixed.as_str(), "mixed");
+        assert_eq!(
+            PrecisionPolicy::from_mode(PrecisionMode::Fp32, 8).mode(),
+            PrecisionMode::Fp32
+        );
+        assert_eq!(
+            PrecisionPolicy::from_mode(PrecisionMode::Mixed, 8).mode(),
+            PrecisionMode::Mixed
+        );
     }
 }

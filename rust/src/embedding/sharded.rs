@@ -39,6 +39,7 @@
 //! count. Single-group runs keep the historical per-group wire format
 //! byte for byte.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::collective::comm::{
@@ -49,11 +50,211 @@ use crate::embedding::dedup::{
 };
 use crate::embedding::hash::hash_id;
 use crate::embedding::{EmbeddingStore, GlobalId};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
 use crate::util::pool::WorkerPool;
 
 /// Seed for the shard-placement hash (distinct from table hashing so
 /// shard residence and slot probing are independent).
 const SHARD_SEED: u64 = 0x5A4D;
+
+// ---- mixed-precision wire format -----------------------------------
+//
+// When the store's precision policy is enabled (`--precision mixed`),
+// the two float lanes compress cold rows to binary16 on the wire:
+//
+// * **Embedding replies** (owner → requester): each per-destination
+//   section becomes `[cold-tag bitmask: ⌈n/32⌉ words][row data]` where
+//   hot rows stay `dim` f32 words and cold rows pack two binary16
+//   values per word. Cold stored bits are already on the f16 grid (the
+//   storage invariant), so the compression is lossless. The requester
+//   knows `n` (its own stage-1 unique count), parses the tags, and
+//   derives the section length — the same sequential walk in the
+//   per-group and multiplexed schedules, so their payloads stay
+//   byte-identical section by section.
+// * **Gradient pushes** (requester → owner): the gradient-ID section
+//   becomes `[n][ids…][cold-tag bitmask: ⌈n/64⌉ words]` and the
+//   gradient payload packs cold rows as round-to-nearest-even binary16
+//   (the deliberately lossy half). The owner decodes with the
+//   requester-sent tags, never its own (possibly newer)
+//   classification, so the wire is self-describing and the decode can
+//   never tear a row.
+//
+// Pure-FP32 stores keep the historical wire format byte for byte.
+
+/// Words of one packed cold row: two binary16 values per 32-bit word.
+fn cold_row_words(dim: usize) -> usize {
+    dim.div_ceil(2)
+}
+
+/// Words of the cold-tag bitmask prefixing a mixed reply section.
+fn tag_words_f32(n: usize) -> usize {
+    n.div_ceil(32)
+}
+
+/// Words of the cold-tag bitmask closing a mixed gradient-ID section.
+fn tag_words_u64(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+/// Quantize `row` to binary16 and pack two values per f32-bit word
+/// (odd dims zero-fill the last high half).
+fn push_packed_f16(row: &[f32], out: &mut Vec<f32>) {
+    for pair in row.chunks(2) {
+        let lo = f32_to_f16_bits(pair[0]) as u32;
+        let hi = pair.get(1).map_or(0, |&v| f32_to_f16_bits(v) as u32);
+        out.push(f32::from_bits(hi << 16 | lo));
+    }
+}
+
+/// Unpack `dim` binary16 values from bit-packed words onto `out`.
+fn unpack_packed_f16(words: &[f32], dim: usize, out: &mut Vec<f32>) {
+    for i in 0..dim {
+        let w = words[i / 2].to_bits();
+        let half = if i % 2 == 0 { w & 0xFFFF } else { w >> 16 };
+        out.push(f16_bits_to_f32(half as u16));
+    }
+}
+
+/// Encode one mixed reply section: cold-tag bitmask (bit `j` of word
+/// `j/32` set = row `j` cold), then tag-selected row data.
+fn encode_reply_mixed(rows: &[f32], hot: &[bool], dim: usize, out: &mut Vec<f32>) {
+    let n = hot.len();
+    debug_assert_eq!(rows.len(), n * dim);
+    let base = out.len();
+    out.resize(base + tag_words_f32(n), 0.0);
+    for (j, &h) in hot.iter().enumerate() {
+        if !h {
+            let w = base + j / 32;
+            out[w] = f32::from_bits(out[w].to_bits() | 1u32 << (j % 32));
+        }
+    }
+    for (j, &h) in hot.iter().enumerate() {
+        let row = &rows[j * dim..(j + 1) * dim];
+        if h {
+            out.extend_from_slice(row);
+        } else {
+            push_packed_f16(row, out);
+        }
+    }
+}
+
+/// Decode one mixed reply section at `*off` (`n` rows of `dim`),
+/// appending the f32 rows and per-row hot tags; advances `*off` past
+/// the section.
+fn decode_reply_mixed(
+    packed: &[f32],
+    off: &mut usize,
+    n: usize,
+    dim: usize,
+    rows: &mut Vec<f32>,
+    hot: &mut Vec<bool>,
+) {
+    let tagw = tag_words_f32(n);
+    let tags = &packed[*off..*off + tagw];
+    *off += tagw;
+    for j in 0..n {
+        let cold = (tags[j / 32].to_bits() >> (j % 32)) & 1 == 1;
+        hot.push(!cold);
+        if cold {
+            let words = cold_row_words(dim);
+            unpack_packed_f16(&packed[*off..*off + words], dim, rows);
+            *off += words;
+        } else {
+            rows.extend_from_slice(&packed[*off..*off + dim]);
+            *off += dim;
+        }
+    }
+}
+
+/// Encode one mixed gradient-ID section: `[n][ids…][cold-tag bitmask]`.
+fn encode_grad_ids_mixed(ids: &[GlobalId], hot: &[bool], out: &mut Vec<u64>) {
+    let n = ids.len();
+    out.push(n as u64);
+    out.extend_from_slice(ids);
+    let base = out.len();
+    out.resize(base + tag_words_u64(n), 0);
+    for (j, &h) in hot.iter().enumerate() {
+        if !h {
+            out[base + j / 64] |= 1u64 << (j % 64);
+        }
+    }
+}
+
+/// Decode one mixed gradient-ID section at `*off`; returns the ids and
+/// per-id hot tags and advances `*off` past the section.
+fn decode_grad_ids_mixed(packed: &[u64], off: &mut usize) -> (Vec<GlobalId>, Vec<bool>) {
+    let n = packed[*off] as usize;
+    *off += 1;
+    let ids = packed[*off..*off + n].to_vec();
+    *off += n;
+    let tagw = tag_words_u64(n);
+    let tags = &packed[*off..*off + tagw];
+    *off += tagw;
+    let hot = (0..n)
+        .map(|j| (tags[j / 64] >> (j % 64)) & 1 == 0)
+        .collect();
+    (ids, hot)
+}
+
+/// Encode one mixed gradient section: hot rows verbatim, cold rows
+/// quantized to binary16 (round-to-nearest-even) and packed.
+fn encode_grads_mixed(grads: &[f32], hot: &[bool], dim: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(grads.len(), hot.len() * dim);
+    for (j, &h) in hot.iter().enumerate() {
+        let row = &grads[j * dim..(j + 1) * dim];
+        if h {
+            out.extend_from_slice(row);
+        } else {
+            push_packed_f16(row, out);
+        }
+    }
+}
+
+/// Decode one mixed gradient section at `*off` back to `hot.len() × dim`
+/// f32 values using the requester-sent tags.
+fn decode_grads_mixed(packed: &[f32], off: &mut usize, hot: &[bool], dim: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(hot.len() * dim);
+    for &h in hot {
+        if h {
+            out.extend_from_slice(&packed[*off..*off + dim]);
+            *off += dim;
+        } else {
+            let words = cold_row_words(dim);
+            unpack_packed_f16(&packed[*off..*off + words], dim, &mut out);
+            *off += words;
+        }
+    }
+    out
+}
+
+/// Cumulative per-precision wire-payload meters for the mixed format
+/// (all zero in pure-FP32 mode, where the historical format is
+/// untouched). Counts every destination *including the local loopback
+/// chunk* — a pure function of the served batches, independent of
+/// schedule — unlike `CommStats`, which meters remote chunks only.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrecisionWireBytes {
+    /// Bytes of hot (full-FP32) reply and gradient rows.
+    pub fp32_row_bytes: u64,
+    /// Bytes of cold rows packed two binary16 values per word.
+    pub fp16_row_bytes: u64,
+    /// Framing the mixed format adds: reply-lane tag bitmasks plus the
+    /// `[n]…[tags]` words on the gradient-ID lane.
+    pub tag_bytes: u64,
+}
+
+impl PrecisionWireBytes {
+    pub fn merge(&mut self, other: &PrecisionWireBytes) {
+        self.fp32_row_bytes += other.fp32_row_bytes;
+        self.fp16_row_bytes += other.fp16_row_bytes;
+        self.tag_bytes += other.tag_bytes;
+    }
+
+    /// Total mixed-format payload bytes (rows + framing).
+    pub fn total(&self) -> u64 {
+        self.fp32_row_bytes + self.fp16_row_bytes + self.tag_bytes
+    }
+}
 
 /// Per-rank shard of a (merged) embedding table plus the exchange logic.
 pub struct ShardedEmbedding<S: EmbeddingStore> {
@@ -68,6 +269,18 @@ pub struct ShardedEmbedding<S: EmbeddingStore> {
     /// describe the same exchange even when several are posted.
     pub last_id_bytes: Vec<usize>,
     pub last_emb_bytes: Vec<usize>,
+    /// Per-precision wire-payload meters (nonzero only when the store's
+    /// precision policy is enabled — the mixed wire format).
+    pub precision_wire: PrecisionWireBytes,
+    /// Hot/cold tags learned from the most recently completed embedding
+    /// reply, keyed by id — consumed by the next `post_backward` to
+    /// pick each pushed gradient row's wire precision. The trainer
+    /// completes reply *k* right before posting backward *k* in every
+    /// schedule (overlap / cross-step only move other phases), so one
+    /// slot suffices; ids absent here push FP32 — a lossless fallback,
+    /// never a correctness hazard, because the owner decodes with the
+    /// requester-sent tags.
+    reply_hot: HashMap<GlobalId, bool>,
     /// Worker pool shared by dedup, the stage-2 serve fetch, row
     /// expansion and gradient aggregation; `None` = serial reference.
     pool: Option<Arc<WorkerPool>>,
@@ -87,6 +300,10 @@ struct LookupLayout {
     stage1_inverse: Vec<Option<Vec<u32>>>,
     /// Per-destination unique (post-stage-1) id counts.
     sent_lens: Vec<usize>,
+    /// Per-destination unique id lists — kept only under the mixed wire
+    /// format (empty otherwise), so the reply's hot/cold tags can be
+    /// keyed back to ids for the following gradient push.
+    sent_ids: Vec<Vec<GlobalId>>,
     /// Per-destination raw occurrence counts.
     raw_lens: Vec<usize>,
     /// Per-destination ID bytes posted (installed into
@@ -104,6 +321,8 @@ struct ReplyLayout {
     /// Per-destination unique id counts — the reply row counts, which
     /// the multiplexed schedule uses to split packed reply sections.
     sent_lens: Vec<usize>,
+    /// Per-destination unique id lists (mixed wire format only).
+    sent_ids: Vec<Vec<GlobalId>>,
 }
 
 impl LookupLayout {
@@ -113,6 +332,7 @@ impl LookupLayout {
             pos_by_dst: self.pos_by_dst,
             stage1_inverse: self.stage1_inverse,
             sent_lens: self.sent_lens,
+            sent_ids: self.sent_ids,
         }
     }
 }
@@ -154,8 +374,17 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             volume: DedupVolume::default(),
             last_id_bytes: Vec::new(),
             last_emb_bytes: Vec::new(),
+            precision_wire: PrecisionWireBytes::default(),
+            reply_hot: HashMap::new(),
             pool: None,
         }
+    }
+
+    /// Whether exchanges use the FP16-compressed mixed wire format.
+    /// Keyed off the store's precision policy, which comes from shared
+    /// run options — so every rank agrees by construction.
+    fn mixed_wire(&self) -> bool {
+        self.table.precision_policy().enabled
     }
 
     /// Attach a worker pool; dedup, the serve-side fetch, row expansion
@@ -253,11 +482,17 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         let id_bytes: Vec<usize> = send_ids.iter().map(|v| v.len() * 8).collect();
         let sent_lens: Vec<usize> = send_ids.iter().map(|v| v.len()).collect();
         let raw_lens: Vec<usize> = ids_by_dst.iter().map(|v| v.len()).collect();
+        let sent_ids = if self.mixed_wire() {
+            send_ids.clone()
+        } else {
+            Vec::new()
+        };
         let layout = LookupLayout {
             num_ids: ids.len(),
             pos_by_dst,
             stage1_inverse,
             sent_lens,
+            sent_ids,
             raw_lens,
             id_bytes,
         };
@@ -348,6 +583,37 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
                 .collect()
         };
 
+        // Mixed wire format: classify every requested id post-fetch
+        // (`row_is_hot` is side-effect free and the fetch above bumped
+        // each unique id exactly once, so the tag matches the
+        // classification the fetch quantized under) and re-encode each
+        // section with cold rows packed to binary16. Absent rows —
+        // eval-mode misses — tag hot and ship their default row exact.
+        let replies: Vec<Vec<f32>> = if self.mixed_wire() {
+            let mut encoded = Vec::with_capacity(world);
+            for (req, rows) in requested.iter().zip(&replies) {
+                let hot: Vec<bool> = req
+                    .iter()
+                    .map(|&id| self.table.row_is_hot(id).unwrap_or(true))
+                    .collect();
+                let mut buf =
+                    Vec::with_capacity(tag_words_f32(req.len()) + rows.len());
+                encode_reply_mixed(rows, &hot, dim, &mut buf);
+                self.precision_wire.tag_bytes += tag_words_f32(req.len()) as u64 * 4;
+                for &h in &hot {
+                    if h {
+                        self.precision_wire.fp32_row_bytes += dim as u64 * 4;
+                    } else {
+                        self.precision_wire.fp16_row_bytes += cold_row_words(dim) as u64 * 4;
+                    }
+                }
+                encoded.push(buf);
+            }
+            encoded
+        } else {
+            replies
+        };
+
         // Reply row counts mirror the *received* id counts; the raw
         // (no-stage-1) counterpart is what we would have sent without
         // dedup — accounted for Fig. 16.
@@ -368,7 +634,45 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             .into_iter()
             .map(Message::into_floats)
             .collect();
-        self.scatter_reply(&layout, &returned)
+        if self.mixed_wire() {
+            self.reply_hot.clear();
+            let decoded: Vec<Vec<f32>> = returned
+                .iter()
+                .enumerate()
+                .map(|(src, buf)| {
+                    let mut off = 0usize;
+                    let rows = self.decode_reply_section(&layout, src, buf, &mut off);
+                    debug_assert_eq!(off, buf.len());
+                    rows
+                })
+                .collect();
+            self.scatter_reply(&layout, &decoded)
+        } else {
+            self.scatter_reply(&layout, &returned)
+        }
+    }
+
+    /// Decode ONE mixed reply section from `packed` at `*off` (the row
+    /// count is the stage-1 unique count this rank sent to `src`) and
+    /// record its hot/cold tags for the next gradient push. The caller
+    /// clears `reply_hot` once per completed reply before walking the
+    /// sources.
+    fn decode_reply_section(
+        &mut self,
+        layout: &ReplyLayout,
+        src: usize,
+        packed: &[f32],
+        off: &mut usize,
+    ) -> Vec<f32> {
+        let n = layout.sent_lens[src];
+        let dim = self.dim;
+        let mut rows = Vec::with_capacity(n * dim);
+        let mut hot = Vec::with_capacity(n);
+        decode_reply_mixed(packed, off, n, dim, &mut rows, &mut hot);
+        for (&id, &h) in layout.sent_ids[src].iter().zip(&hot) {
+            self.reply_hot.insert(id, h);
+        }
+        rows
     }
 
     /// Scatter received reply rows back to occurrence order
@@ -425,22 +729,63 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
         grads: &[f32],
     ) -> PendingBackward {
         let (ids_by_dst, grad_by_dst) = self.prepare_backward(comm.world, ids, grads);
+        let (id_secs, grad_secs) = self.backward_sections(ids_by_dst, grad_by_dst);
 
         // Two posted all-to-alls: ids then gradients (same wire pattern
         // as forward, reversed direction for the payload), on dedicated
         // lanes so they can stay in flight across rounds.
         let ids_pending = comm.post_all_to_all_on(
             LANE_GRAD_IDS,
-            ids_by_dst.into_iter().map(Message::Ids).collect(),
+            id_secs.into_iter().map(Message::Ids).collect(),
         );
         let grads_pending = comm.post_all_to_all_on(
             LANE_GRAD,
-            grad_by_dst.into_iter().map(Message::Floats).collect(),
+            grad_secs.into_iter().map(Message::Floats).collect(),
         );
         PendingBackward {
             ids_pending,
             grads_pending,
         }
+    }
+
+    /// Per-destination backward wire sections: the historical raw
+    /// id/grad lists in FP32 mode (byte-identical pass-through), or
+    /// `[n][ids][tags]` + tag-selected FP32/FP16 gradient rows in mixed
+    /// mode. Shared by the per-group and multiplexed schedules so their
+    /// payloads stay identical section by section.
+    fn backward_sections(
+        &mut self,
+        ids_by_dst: Vec<Vec<GlobalId>>,
+        grad_by_dst: Vec<Vec<f32>>,
+    ) -> (Vec<Vec<u64>>, Vec<Vec<f32>>) {
+        if !self.mixed_wire() {
+            return (ids_by_dst, grad_by_dst);
+        }
+        let dim = self.dim;
+        let mut id_secs = Vec::with_capacity(ids_by_dst.len());
+        let mut grad_secs = Vec::with_capacity(grad_by_dst.len());
+        for (ids, grads) in ids_by_dst.iter().zip(&grad_by_dst) {
+            let hot: Vec<bool> = ids
+                .iter()
+                .map(|&id| self.reply_hot.get(&id).copied().unwrap_or(true))
+                .collect();
+            let mut sec_ids =
+                Vec::with_capacity(1 + ids.len() + tag_words_u64(ids.len()));
+            encode_grad_ids_mixed(ids, &hot, &mut sec_ids);
+            let mut sec_grads = Vec::with_capacity(grads.len());
+            encode_grads_mixed(grads, &hot, dim, &mut sec_grads);
+            self.precision_wire.tag_bytes += (1 + tag_words_u64(ids.len())) as u64 * 8;
+            for &h in &hot {
+                if h {
+                    self.precision_wire.fp32_row_bytes += dim as u64 * 4;
+                } else {
+                    self.precision_wire.fp16_row_bytes += cold_row_words(dim) as u64 * 4;
+                }
+            }
+            id_secs.push(sec_ids);
+            grad_secs.push(sec_grads);
+        }
+        (id_secs, grad_secs)
     }
 
     /// Partition occurrence-order gradients by owner and aggregate
@@ -513,7 +858,26 @@ impl<S: EmbeddingStore> ShardedEmbedding<S> {
             .into_iter()
             .map(Message::into_floats)
             .collect();
-        self.aggregate_backward(recv_ids, recv_grads)
+        if self.mixed_wire() {
+            // Decode `[n][ids][tags]` sections and expand the
+            // tag-selected gradient rows back to f32 with the
+            // requester-sent tags.
+            let mut ids = Vec::with_capacity(recv_ids.len());
+            let mut grads = Vec::with_capacity(recv_grads.len());
+            for (id_buf, grad_buf) in recv_ids.iter().zip(&recv_grads) {
+                let mut off = 0usize;
+                let (src_ids, hot) = decode_grad_ids_mixed(id_buf, &mut off);
+                debug_assert_eq!(off, id_buf.len());
+                let mut goff = 0usize;
+                let src_grads = decode_grads_mixed(grad_buf, &mut goff, &hot, self.dim);
+                debug_assert_eq!(goff, grad_buf.len());
+                ids.push(src_ids);
+                grads.push(src_grads);
+            }
+            self.aggregate_backward(ids, grads)
+        } else {
+            self.aggregate_backward(recv_ids, recv_grads)
+        }
     }
 
     /// Aggregate exchanged gradients across sources (always —
@@ -757,14 +1121,34 @@ impl GroupExchange {
                 .collect(),
             MultiReplyInner::Packed { layouts, pending } => {
                 let groups = sharded.len();
+                // Mixed groups refresh their reply-tag slot from this
+                // reply; clear before walking the sources.
+                for se in sharded.iter_mut() {
+                    if se.mixed_wire() {
+                        se.reply_hot.clear();
+                    }
+                }
                 let mut returned: Vec<Vec<Vec<f32>>> = (0..groups).map(|_| Vec::new()).collect();
                 for (src, msg) in comm.complete_all_to_all(pending).into_iter().enumerate() {
                     let packed = msg.into_floats();
                     let mut off = 0usize;
                     for (g, ret) in returned.iter_mut().enumerate() {
-                        let len = layouts[g].sent_lens[src] * sharded[g].dim;
-                        ret.push(packed[off..off + len].to_vec());
-                        off += len;
+                        if sharded[g].mixed_wire() {
+                            // Variable-length mixed section: the tag
+                            // bitmask determines the row widths, so the
+                            // walk is sequential — same section bytes
+                            // as the per-group schedule.
+                            ret.push(sharded[g].decode_reply_section(
+                                &layouts[g],
+                                src,
+                                &packed,
+                                &mut off,
+                            ));
+                        } else {
+                            let len = layouts[g].sent_lens[src] * sharded[g].dim;
+                            ret.push(packed[off..off + len].to_vec());
+                            off += len;
+                        }
                     }
                     debug_assert_eq!(off, packed.len());
                 }
@@ -802,21 +1186,29 @@ impl GroupExchange {
             ));
         }
         let groups = sharded.len();
-        let parts: Vec<(Vec<Vec<GlobalId>>, Vec<Vec<f32>>)> = sharded
+        let parts: Vec<(Vec<Vec<u64>>, Vec<Vec<f32>>)> = sharded
             .iter_mut()
             .zip(ids_per_group.iter().zip(grads_per_group))
-            .map(|(se, (ids, grads))| se.prepare_backward(world, ids, grads))
+            .map(|(se, (ids, grads))| {
+                let (ids_by_dst, grad_by_dst) = se.prepare_backward(world, ids, grads);
+                se.backward_sections(ids_by_dst, grad_by_dst)
+            })
             .collect();
         let mut id_chunks: Vec<Message> = Vec::with_capacity(world);
         let mut grad_chunks: Vec<Message> = Vec::with_capacity(world);
         for dst in 0..world {
             let sections: usize = parts.iter().map(|(i, _)| i[dst].len()).sum();
             let mut packed_ids: Vec<u64> = Vec::with_capacity(groups + sections);
-            for (ids_by_dst, _) in &parts {
-                packed_ids.push(ids_by_dst[dst].len() as u64);
+            // One header word per group: the WORD length of the group's
+            // id section. For fp32 groups the section is the raw id
+            // list, so the header value (and the wire bytes) are
+            // unchanged from the id-count scheme; mixed sections carry
+            // their own `[n][ids][tags]` framing inside.
+            for (id_secs, _) in &parts {
+                packed_ids.push(id_secs[dst].len() as u64);
             }
-            for (ids_by_dst, _) in &parts {
-                packed_ids.extend_from_slice(&ids_by_dst[dst]);
+            for (id_secs, _) in &parts {
+                packed_ids.extend_from_slice(&id_secs[dst]);
             }
             let floats: usize = parts.iter().map(|(_, g)| g[dst].len()).sum();
             let mut packed_grads: Vec<f32> = Vec::with_capacity(floats);
@@ -856,14 +1248,29 @@ impl GroupExchange {
                 grads_pending,
             } => {
                 let groups = sharded.len();
+                let mixed: Vec<bool> = sharded.iter().map(|se| se.mixed_wire()).collect();
                 let mut recv_ids: Vec<Vec<Vec<GlobalId>>> =
+                    (0..groups).map(|_| Vec::new()).collect();
+                let mut recv_hot: Vec<Vec<Vec<bool>>> =
                     (0..groups).map(|_| Vec::new()).collect();
                 for msg in comm.complete_all_to_all(ids_pending) {
                     let packed = msg.into_ids();
                     let mut off = groups;
-                    for (g, recv) in recv_ids.iter_mut().enumerate() {
+                    for (g, (recv, hot_recv)) in
+                        recv_ids.iter_mut().zip(recv_hot.iter_mut()).enumerate()
+                    {
                         let len = packed[g] as usize;
-                        recv.push(packed[off..off + len].to_vec());
+                        let section = &packed[off..off + len];
+                        if mixed[g] {
+                            let mut soff = 0usize;
+                            let (ids, hot) = decode_grad_ids_mixed(section, &mut soff);
+                            debug_assert_eq!(soff, len);
+                            recv.push(ids);
+                            hot_recv.push(hot);
+                        } else {
+                            recv.push(section.to_vec());
+                            hot_recv.push(Vec::new());
+                        }
                         off += len;
                     }
                     debug_assert_eq!(off, packed.len());
@@ -875,9 +1282,18 @@ impl GroupExchange {
                     let packed = msg.into_floats();
                     let mut off = 0usize;
                     for (g, recv) in recv_grads.iter_mut().enumerate() {
-                        let len = recv_ids[g][src].len() * sharded[g].dim;
-                        recv.push(packed[off..off + len].to_vec());
-                        off += len;
+                        if mixed[g] {
+                            recv.push(decode_grads_mixed(
+                                &packed,
+                                &mut off,
+                                &recv_hot[g][src],
+                                sharded[g].dim,
+                            ));
+                        } else {
+                            let len = recv_ids[g][src].len() * sharded[g].dim;
+                            recv.push(packed[off..off + len].to_vec());
+                            off += len;
+                        }
                     }
                     debug_assert_eq!(off, packed.len());
                 }
@@ -1346,6 +1762,203 @@ mod tests {
             assert_eq!(m.3[LANE_GRAD], 0);
             assert_eq!(p.3, [0u64; LANES], "per-group mode never adds headers");
         }
+    }
+
+    /// Sharded run over mixed-precision concurrent tables (the store
+    /// the trainer actually shards), with a per-rank policy.
+    fn run_sharded_mixed<T: Send + 'static>(
+        world: usize,
+        policy: crate::embedding::precision::PrecisionPolicy,
+        f: impl Fn(
+                usize,
+                &mut ShardedEmbedding<crate::embedding::concurrent::ConcurrentDynamicTable>,
+                &mut CommHandle,
+            ) -> T
+            + Send
+            + Sync
+            + 'static,
+    ) -> Vec<T> {
+        use crate::embedding::concurrent::ConcurrentDynamicTable;
+        let handles = CommGroup::new(world);
+        let f = Arc::new(f);
+        let mut joins = Vec::new();
+        for (rank, mut h) in handles.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            joins.push(thread::spawn(move || {
+                let table = ConcurrentDynamicTable::new(
+                    DynamicTableConfig::new(DIM).with_capacity(256).with_seed(7),
+                    8,
+                )
+                .with_precision(policy);
+                let mut se = ShardedEmbedding::new(table, DedupStrategy::TwoStage);
+                f(rank, &mut se, &mut h)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn mixed_wire_cold_replies_lossless_on_f16_grid() {
+        use crate::embedding::precision::PrecisionPolicy;
+        use crate::util::f16::quantize_f16_slice;
+        // Threshold far above any access count: every row stays cold,
+        // every reply row rides the wire as packed binary16. The store
+        // quantized the fetched copy too (the storage invariant), so the
+        // decoded rows must equal the f16-quantized reference exactly —
+        // the compression itself is lossless.
+        let out = run_sharded_mixed(2, PrecisionPolicy::mixed(100), |rank, se, comm| {
+            let ids: Vec<u64> = vec![1, 2, 3, 1, 50 + rank as u64];
+            let rows = se.lookup(comm, &ids, true);
+            (ids, rows, se.precision_wire)
+        });
+        for (ids, rows, wire) in out {
+            for (i, &id) in ids.iter().enumerate() {
+                let mut want = expected_row(id);
+                quantize_f16_slice(&mut want);
+                assert_eq!(
+                    &rows[i * DIM..(i + 1) * DIM],
+                    want.as_slice(),
+                    "cold row for id {id} must round-trip on the f16 grid"
+                );
+            }
+            assert_eq!(wire.fp32_row_bytes, 0, "no hot rows at threshold 100");
+            assert!(wire.fp16_row_bytes > 0);
+            assert!(wire.tag_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn mixed_wire_backward_quantizes_cold_pushes_and_falls_back_hot() {
+        use crate::embedding::precision::PrecisionPolicy;
+        use crate::util::f16::quantize_f16;
+        // All-cold pushes: each rank aggregates id 5's two occurrences
+        // to 0.2 (stage 1), quantizes the push to binary16 (the lossy
+        // half), and the owner sums the decoded pushes. Id 7 skipped
+        // forward, so it carries no reply tag and must fall back to a
+        // lossless FP32 push.
+        let world = 2;
+        let out = run_sharded_mixed(world, PrecisionPolicy::mixed(100), |_rank, se, comm| {
+            let fwd = vec![5u64, 5, 6];
+            let _ = se.lookup(comm, &fwd, true);
+            let ids = vec![5u64, 5, 6, 7];
+            let mut grads = vec![0.1f32; ids.len() * DIM];
+            grads[3 * DIM..4 * DIM].fill(0.3);
+            se.backward(comm, &ids, &grads)
+        });
+        let q2 = quantize_f16(0.1f32 + 0.1f32);
+        let q1 = quantize_f16(0.1f32);
+        let mut seen = 0;
+        for (lids, lgrads) in out {
+            for (i, &id) in lids.iter().enumerate() {
+                let g = &lgrads[i * DIM..(i + 1) * DIM];
+                seen += 1;
+                match id {
+                    5 => assert_eq!(g, vec![world as f32 * q2; DIM].as_slice()),
+                    6 => assert_eq!(g, vec![world as f32 * q1; DIM].as_slice()),
+                    // Untagged id: exact FP32 sum, no quantization.
+                    7 => assert_eq!(g, vec![world as f32 * 0.3; DIM].as_slice()),
+                    _ => panic!("unexpected id {id}"),
+                }
+            }
+        }
+        assert_eq!(seen, 3, "each id owned by exactly one rank");
+    }
+
+    /// Per-rank output of the heterogeneous-precision group schedule.
+    type MixedGroupRun = (
+        Vec<Vec<Vec<f32>>>,
+        Vec<Vec<Vec<(u64, Vec<f32>)>>>,
+        CommStats,
+        [u64; LANES],
+        Vec<PrecisionWireBytes>,
+    );
+
+    /// Three forward+backward rounds over two merge groups — group 0
+    /// mixed (threshold 2, so classifications evolve across rounds),
+    /// group 1 pure FP32 — through [`GroupExchange`].
+    fn run_group_exchange_mixed(mux: bool) -> Vec<MixedGroupRun> {
+        use crate::embedding::concurrent::ConcurrentDynamicTable;
+        use crate::embedding::precision::PrecisionPolicy;
+        let world = 4;
+        let handles = CommGroup::new(world);
+        let mut joins = Vec::new();
+        for (rank, mut comm) in handles.into_iter().enumerate() {
+            joins.push(thread::spawn(move || {
+                let dims = [4usize, 8];
+                let policies = [PrecisionPolicy::mixed(2), PrecisionPolicy::fp32()];
+                let mut groups: Vec<ShardedEmbedding<ConcurrentDynamicTable>> = dims
+                    .iter()
+                    .zip(policies)
+                    .map(|(&d, p)| {
+                        ShardedEmbedding::new(
+                            ConcurrentDynamicTable::new(
+                                DynamicTableConfig::new(d).with_capacity(256).with_seed(7),
+                                8,
+                            )
+                            .with_precision(p),
+                            DedupStrategy::TwoStage,
+                        )
+                    })
+                    .collect();
+                let mut ex = GroupExchange::new(mux);
+                let mut rows_all = Vec::new();
+                let mut grads_all = Vec::new();
+                for round in 0..3u64 {
+                    let ids0: Vec<u64> = vec![1 + round, 2, 3, 40 + rank as u64, 2];
+                    let ids1: Vec<u64> = vec![7, 7, 9 + round, 100 + rank as u64];
+                    let lookup = ex.post_ids(&mut comm, &mut groups, &[&ids0, &ids1]);
+                    let reply = ex.serve_reply(&mut comm, &mut groups, lookup, true);
+                    let rows = ex.complete_reply(&mut comm, &mut groups, reply);
+                    let g0 = vec![0.1f32; ids0.len() * dims[0]];
+                    let g1 = vec![0.5f32; ids1.len() * dims[1]];
+                    let pb =
+                        ex.post_backward(&mut comm, &mut groups, &[&ids0, &ids1], &[&g0, &g1]);
+                    let bwd = ex.complete_backward(&mut comm, &mut groups, pb);
+                    rows_all.push(rows);
+                    grads_all.push(
+                        bwd.iter()
+                            .enumerate()
+                            .map(|(g, (lids, lgrads))| sorted_pairs_dim(dims[g], lids, lgrads))
+                            .collect::<Vec<_>>(),
+                    );
+                }
+                let wires = groups.iter().map(|g| g.precision_wire).collect::<Vec<_>>();
+                (rows_all, grads_all, comm.stats, ex.header_bytes, wires)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn mixed_multiplexed_exchange_bit_identical_to_per_group() {
+        let per_group = run_group_exchange_mixed(false);
+        let muxed = run_group_exchange_mixed(true);
+        let mut mixed_total = PrecisionWireBytes::default();
+        for (rank, (p, m)) in per_group.iter().zip(&muxed).enumerate() {
+            assert_eq!(p.0, m.0, "rank {rank}: forward rows diverged");
+            assert_eq!(p.1, m.1, "rank {rank}: backward gradients diverged");
+            // The per-precision meters count every destination including
+            // loopback — a pure function of the served batches, so they
+            // must not depend on the schedule either.
+            assert_eq!(p.4, m.4, "rank {rank}: precision wire meters diverged");
+            assert_eq!(p.4[1], PrecisionWireBytes::default(), "fp32 group meters stay zero");
+            mixed_total.merge(&p.4[0]);
+            // Payload conservation holds for the mixed format too: the
+            // packed sections are byte-identical to the per-group ones,
+            // and only the u64 section headers differ.
+            for lane in [LANE_IDS, LANE_EMB, LANE_GRAD_IDS, LANE_GRAD] {
+                assert_eq!(
+                    m.2.lane_bytes[lane] - m.3[lane],
+                    p.2.lane_bytes[lane] - p.3[lane],
+                    "rank {rank}: lane {lane} payload bytes not conserved"
+                );
+            }
+        }
+        // Threshold 2 with three rounds: round 0 serves cold rows,
+        // repeated ids promote and later rounds serve full width.
+        assert!(mixed_total.fp16_row_bytes > 0, "cold rounds must compress");
+        assert!(mixed_total.fp32_row_bytes > 0, "post-promotion rounds go full width");
+        assert!(mixed_total.tag_bytes > 0);
     }
 
     #[test]

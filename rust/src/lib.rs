@@ -86,6 +86,26 @@
 //!   calibrated defaults baked in [`util::tuning::calibrated`] and
 //!   re-measured per machine by `bench_parallel_lookup --calibrate`
 //!   (which writes `calibration.json`).
+//! - [`embedding::precision`] — mixed-precision storage and wire
+//!   compression (§5.2, `--precision mixed` / `--hot-threshold`): one
+//!   deterministic post-bump rule classifies each row hot or cold
+//!   (access count *after* the current op's bump ≥ threshold), hot
+//!   rows keep full FP32 state while cold rows are stored on the
+//!   binary16 grid (every write path re-quantizes under the stripe
+//!   lock, so stored cold bits are *always* f16-exact), and the
+//!   sharded exchange ships cold embedding replies and cold gradient
+//!   pushes as packed FP16 with per-row precision tags on the
+//!   existing multiplexed lanes. Bytes-by-precision meters and the
+//!   hot/cold census land in `StepRecord`/`TrainReport`; checkpoints
+//!   and deltas record the policy (absent keys = fp32, so fp32
+//!   snapshots stay byte-identical) so serving replicas, compaction
+//!   and `train-dist` recovery round-trip cold rows on the exact f16
+//!   grid — installs copy stored bits verbatim, no dequantization.
+//!   Numerics are bit-identical across `--threads` × `--overlap` ×
+//!   `--cross-step` × `--multiplex`, and `--precision fp32` (the
+//!   default) is byte-identical to pre-policy builds. `bench_precision`
+//!   measures the wire/storage wins against the fp32 baseline at equal
+//!   losses.
 //! - [`online`] — the online-learning subsystem (`--mode online`): an
 //!   endless day-advancing stream ([`online::stream`]), count-min
 //!   feature admission with a deterministic seeded lottery

@@ -6,6 +6,7 @@
 //!                 [--cross-step on|off] [--threads N] [--lr 0.001]
 //!                 [--schema meituan|meituan-mixed|meituan-tiered]
 //!                 [--no-merging] [--no-multiplex]
+//!                 [--precision fp32|mixed] [--hot-threshold N]
 //!                 [--scenario skew-storm|churn-storm|multi-tenant|soak]
 //! mtgrboost train --mode online --sync-interval 50 [--intervals N]
 //!                 [--feature-ttl N] [--admit-threshold N] [--admit-prob P]
@@ -84,6 +85,18 @@
 //! printed after training and included in `--report-json`. Unknown
 //! names, mode mismatches, a conflicting `--schema`, and `--scenario`
 //! under `sim` or `train-dist` are rejected up front.
+//!
+//! `--precision mixed` keeps hot embedding rows (post-bump access count
+//! >= `--hot-threshold`, default 8) in FP32 and stores cold rows on the
+//! binary16 grid (§5.2), compressing cold reply rows and cold gradient
+//! pushes to packed FP16 on the wire with per-row precision tags. Runs
+//! stay bit-identical across `--threads`/`--overlap`/`--cross-step`/
+//! `--no-multiplex`; `fp32` (the default) is byte-identical to a build
+//! without the policy. The hot/cold census, per-precision wire bytes
+//! and quantization telemetry are printed after training and included
+//! in `--report-json`; checkpoints and deltas record the per-group
+//! policy so serving replicas and `train-dist` recovery round-trip cold
+//! rows on the exact f16 grid.
 
 use anyhow::{bail, Context, Result};
 
@@ -96,6 +109,7 @@ use mtgrboost::dist::{
     WorkerOptions,
 };
 use mtgrboost::embedding::dedup::DedupStrategy;
+use mtgrboost::embedding::precision::PrecisionMode;
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::runtime::Engine;
 use mtgrboost::scenario::Scenario;
@@ -155,6 +169,29 @@ fn parse_scenario(args: &Args, online: bool) -> Result<Option<Scenario>> {
         }
     }
     Ok(Some(sc))
+}
+
+/// Parse + validate `--precision` / `--hot-threshold` at the flag
+/// layer (same discipline as [`parse_online_mode`]: contradictory
+/// combinations fail with flag-named errors; `TrainerOptions::validate`
+/// re-checks the threshold under mixed).
+fn parse_precision(args: &Args) -> Result<(PrecisionMode, u32)> {
+    let mode = PrecisionMode::parse(&args.get_or("precision", "fp32"))
+        .map_err(|e| anyhow::anyhow!("--precision: {e}"))?;
+    if mode == PrecisionMode::Fp32 && args.get("hot-threshold").is_some() {
+        bail!(
+            "--hot-threshold requires --precision mixed (fp32 keeps every \
+             row in full precision, so there is no hot/cold split to tune)"
+        );
+    }
+    let threshold = args.get_usize("hot-threshold", 8);
+    if mode == PrecisionMode::Mixed && threshold == 0 {
+        bail!(
+            "--hot-threshold must be >= 1 under --precision mixed \
+             (0 would classify every row hot and never compress)"
+        );
+    }
+    Ok((mode, threshold as u32))
 }
 
 /// Parse and validate `--mode` plus the online-only knobs, rejecting
@@ -286,6 +323,13 @@ fn parse_train_opts(args: &Args, dist: bool) -> Result<TrainerOptions> {
     // multi-group table-merging path). Online knobs apply uniformly to
     // every group.
     opts.schema = parse_schema(args)?;
+    // Mixed-precision embedding storage (§5.2): FP32 hot rows, FP16
+    // cold rows, plus FP16 wire compression for cold replies and cold
+    // gradient pushes. `fp32` (the default) is byte-identical to a
+    // build without the policy.
+    let (precision, hot_threshold) = parse_precision(args)?;
+    opts.precision = precision;
+    opts.hot_threshold = hot_threshold;
     // Unmerged ablation: one physical table + one exchange per logical
     // table instead of one per dim group, so the §4.2 fusion win shows
     // up as measured wall-clock, not just op counts.
@@ -393,6 +437,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         "table evict/expand   : {} / {} (inserts {})",
         report.table_stats.evictions, report.table_stats.expansions, report.table_stats.inserts
     );
+    if report.precision == "mixed" {
+        println!(
+            "precision            : mixed ({} hot / {} cold rows, {} quantize ops)",
+            report.hot_rows, report.cold_rows, report.quantize_ops
+        );
+        println!(
+            "precision wire bytes : {:.3} MB fp32 rows + {:.3} MB fp16 rows + {:.3} MB tags",
+            report.wire_fp32_row_bytes as f64 / 1e6,
+            report.wire_fp16_row_bytes as f64 / 1e6,
+            report.wire_tag_bytes as f64 / 1e6
+        );
+        let all_fp32: f64 = report
+            .group_rows
+            .iter()
+            .zip(&report.group_dims)
+            .map(|(&rows, &dim)| rows as f64 * dim as f64 * 4.0)
+            .sum();
+        println!(
+            "effective value bytes: {:.3} MB stored (vs {:.3} MB all-fp32)",
+            report.effective_value_bytes as f64 / 1e6,
+            all_fp32 / 1e6
+        );
+    }
     if online {
         println!(
             "online admit/reject  : {} / {}",
@@ -571,6 +638,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
         bail!(
             "--scenario only applies to `train`; the simulator has no data \
              stream or admission machinery to reshape"
+        );
+    }
+    if args.get("precision").is_some() || args.get("hot-threshold").is_some() {
+        bail!(
+            "--precision/--hot-threshold only apply to `train`; the simulator \
+             models embedding storage analytically at full precision"
         );
     }
     let model = args.get_or("model", "4g");
@@ -821,6 +894,63 @@ mod tests {
         assert_eq!(parse_schema(&a).unwrap(), "meituan-mixed");
         let a = args_of(&["train"]);
         assert_eq!(parse_schema(&a).unwrap(), "meituan");
+    }
+
+    #[test]
+    fn precision_flag_validation() {
+        // Unknown modes rejected with the candidate list.
+        let a = args_of(&["train", "--precision", "fp64"]);
+        let err = parse_precision(&a).unwrap_err().to_string();
+        assert!(err.contains("fp32|mixed"), "{err}");
+
+        // Defaults: fp32 with the untouched threshold default.
+        let a = args_of(&["train"]);
+        assert_eq!(parse_precision(&a).unwrap(), (PrecisionMode::Fp32, 8));
+
+        // --hot-threshold is meaningless without the hot/cold split.
+        let a = args_of(&["train", "--hot-threshold", "4"]);
+        let err = parse_precision(&a).unwrap_err().to_string();
+        assert!(err.contains("--precision mixed"), "{err}");
+
+        // Mixed parses with the default or an explicit threshold;
+        // 0 would disable compression entirely and is rejected.
+        let a = args_of(&["train", "--precision", "mixed"]);
+        assert_eq!(parse_precision(&a).unwrap(), (PrecisionMode::Mixed, 8));
+        let a = args_of(&["train", "--precision", "mixed", "--hot-threshold", "4"]);
+        assert_eq!(parse_precision(&a).unwrap(), (PrecisionMode::Mixed, 4));
+        let a = args_of(&["train", "--precision", "mixed", "--hot-threshold", "0"]);
+        assert!(parse_precision(&a).is_err(), "zero threshold");
+    }
+
+    #[test]
+    fn precision_wires_into_train_opts_and_is_refused_by_sim() {
+        let a = args_of(&["train", "--precision", "mixed", "--hot-threshold", "3"]);
+        let o = parse_train_opts(&a, false).unwrap();
+        assert_eq!(o.precision, PrecisionMode::Mixed);
+        assert_eq!(o.hot_threshold, 3);
+        let p = o.precision_policy();
+        assert!(p.enabled);
+        assert_eq!(p.hot_threshold, 3);
+
+        // train-dist shares the same flag tail, so workers inherit the
+        // policy from the forwarded argv.
+        let o = parse_train_opts(&a, true).unwrap();
+        assert_eq!(o.precision, PrecisionMode::Mixed);
+
+        // Default stays fp32 with a disabled policy.
+        let o = parse_train_opts(&args_of(&["train"]), false).unwrap();
+        assert_eq!(o.precision, PrecisionMode::Fp32);
+        assert!(!o.precision_policy().enabled);
+
+        // The simulator refuses both flags like it refuses --schema.
+        let err = cmd_sim(&args_of(&["sim", "--precision", "mixed"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--precision"), "{err}");
+        let err = cmd_sim(&args_of(&["sim", "--hot-threshold", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--hot-threshold"), "{err}");
     }
 
     #[test]

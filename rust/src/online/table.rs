@@ -286,6 +286,18 @@ impl EmbeddingStore for OnlineTable {
     fn memory_bytes(&self) -> usize {
         ConcurrentDynamicTable::memory_bytes(&self.inner)
     }
+
+    // Precision composes underneath the admission gate: the policy
+    // lives in the inner concurrent table and the gate just forwards
+    // discovery, so precision × admission × per-group tables stack
+    // without either layer knowing about the other.
+    fn precision_policy(&self) -> crate::embedding::precision::PrecisionPolicy {
+        self.inner.precision()
+    }
+
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        self.inner.row_is_hot(id)
+    }
 }
 
 /// Shared-reference delegation so the pool-parallel sparse optimizer
@@ -316,6 +328,14 @@ impl ConcurrentEmbeddingStore for OnlineTable {
 
     fn memory_bytes(&self) -> usize {
         ConcurrentDynamicTable::memory_bytes(&self.inner)
+    }
+
+    fn precision_policy(&self) -> crate::embedding::precision::PrecisionPolicy {
+        self.inner.precision()
+    }
+
+    fn row_is_hot(&self, id: GlobalId) -> Option<bool> {
+        self.inner.row_is_hot(id)
     }
 }
 

@@ -24,11 +24,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::delta::{
     apply_delta, delta_dir, install_rows_concurrent, load_delta_group_dims,
-    load_delta_shard_group, parse_canonical_seq, snapshot_rows, validate_chain,
+    load_delta_precision_policy, load_delta_shard_group, parse_canonical_seq, snapshot_rows,
+    validate_chain,
 };
 use crate::checkpoint::{
-    load_group_dims, load_meta, load_sparse_shard_group, push_row_bytes, rows_block_bytes,
-    sparse_group_path, write_sealed, CheckpointMeta,
+    load_group_dims, load_meta, load_precision_policy, load_sparse_shard_group,
+    push_row_bytes, rows_block_bytes, sparse_group_path, write_sealed, CheckpointMeta,
 };
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::DynamicTableConfig;
@@ -157,11 +158,22 @@ pub fn compact_chain(dir: &Path, opts: &CompactOptions) -> Result<Option<Compact
     }
 
     let group_dims = load_delta_group_dims(dir, &newest)?;
+    // The precision policy rides the chain like group_dims does: a base
+    // folded from a mixed chain records the policy so replicas (and
+    // audits of what grid cold rows live on) survive pruning of the
+    // deltas that originally carried it.
+    let precision = load_delta_precision_policy(dir, newest.seq)?;
     if let Some((seq, bm)) = &base {
         let bdims = load_group_dims(&base_dir(dir, *seq), bm)?;
         anyhow::ensure!(
             bdims == group_dims,
             "base_{seq:05} group dims {bdims:?} disagree with the chain's {group_dims:?}"
+        );
+        let bprec = load_precision_policy(&base_dir(dir, *seq))?;
+        anyhow::ensure!(
+            bprec == precision,
+            "base_{seq:05} precision policy {bprec:?} disagrees with the \
+             chain's {precision:?}; refusing to fold mixed-lineage state"
         );
     }
 
@@ -176,12 +188,17 @@ pub fn compact_chain(dir: &Path, opts: &CompactOptions) -> Result<Option<Compact
         for (g, &gdim) in group_dims.iter().enumerate() {
             // Fold with full Adam state so the published base is
             // byte-identical to a real checkpoint at the same step.
+            // The policy is inert here (installs copy stored bits
+            // verbatim and mixed chains carry cold rows already on the
+            // f16 grid) but keeps the fold tables' self-description —
+            // census, effective bytes — truthful.
             let table = ConcurrentDynamicTable::new(
                 DynamicTableConfig::new(gdim)
                     .with_capacity(opts.capacity)
                     .with_seed(0),
                 1,
-            );
+            )
+            .with_precision(precision);
             let mut opt = SparseAdam::new(gdim, AdamParams::default());
             if let Some((seq, bm)) = &base {
                 let rows =
@@ -227,6 +244,7 @@ pub fn compact_chain(dir: &Path, opts: &CompactOptions) -> Result<Option<Compact
             Json::Arr(group_dims.iter().map(|&d| d.into()).collect()),
         );
     }
+    crate::checkpoint::set_precision_keys(&mut j, precision);
     std::fs::write(stage.join("meta.json"), j.pretty())?;
 
     let published = base_dir(dir, newest.seq);

@@ -25,10 +25,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::delta::{delta_dir, load_delta_group_dims, load_delta_shard_group, validate_chain, DeltaMeta};
-use crate::checkpoint::{load_dense, load_group_dims, load_sparse_shard_group, SparseRow};
+use crate::checkpoint::delta::{
+    delta_dir, load_delta_group_dims, load_delta_precision_policy, load_delta_shard_group,
+    validate_chain, DeltaMeta,
+};
+use crate::checkpoint::{
+    load_dense, load_group_dims, load_precision_policy, load_sparse_shard_group, SparseRow,
+};
 use crate::embedding::concurrent::ConcurrentDynamicTable;
 use crate::embedding::dynamic_table::DynamicTableConfig;
+use crate::embedding::precision::PrecisionPolicy;
 use crate::embedding::GlobalId;
 use crate::runtime::{Engine, Tensor};
 use crate::serve::cache::HotIdCache;
@@ -84,6 +90,11 @@ pub struct ServingReplica {
     world: usize,
     param_count: usize,
     group_dims: Vec<usize>,
+    /// Precision policy recorded by the snapshots being served (the
+    /// disabled fp32 policy for chains that never wrote the keys).
+    /// Mixed chains carry cold rows already on the f16 grid; installs
+    /// copy bits verbatim, so serving needs no dequantization step.
+    precision: PrecisionPolicy,
     /// One table per merge group, all ranks folded in.
     tables: Vec<ConcurrentDynamicTable>,
     caches: Vec<HotIdCache>,
@@ -121,35 +132,37 @@ impl ServingReplica {
         let chain = validate_chain(dir, base_seq, base_step)?;
 
         // Snapshot-format facts come from the newest state present.
-        let (model, world, param_count, group_dims, dense_from) = match (&base, chain.last())
-        {
-            (_, Some(m)) => {
-                if let Some((bseq, bm)) = &base {
-                    anyhow::ensure!(
-                        bm.world == m.world && bm.param_count == m.param_count,
-                        "base_{bseq:05} and the delta chain disagree on world/params"
-                    );
+        let (model, world, param_count, group_dims, precision, dense_from) =
+            match (&base, chain.last()) {
+                (_, Some(m)) => {
+                    if let Some((bseq, bm)) = &base {
+                        anyhow::ensure!(
+                            bm.world == m.world && bm.param_count == m.param_count,
+                            "base_{bseq:05} and the delta chain disagree on world/params"
+                        );
+                    }
+                    (
+                        m.model.clone(),
+                        m.world,
+                        m.param_count,
+                        load_delta_group_dims(dir, m)?,
+                        load_delta_precision_policy(dir, m.seq)?,
+                        delta_dir(dir, m.seq),
+                    )
                 }
-                (
-                    m.model.clone(),
-                    m.world,
-                    m.param_count,
-                    load_delta_group_dims(dir, m)?,
-                    delta_dir(dir, m.seq),
-                )
-            }
-            (Some((seq, bm)), None) => (
-                bm.model.clone(),
-                bm.world,
-                bm.param_count,
-                load_group_dims(&base_dir(dir, *seq), bm)?,
-                base_dir(dir, *seq),
-            ),
-            (None, None) => bail!(
-                "nothing to serve under {}: no base and no delta snapshots",
-                dir.display()
-            ),
-        };
+                (Some((seq, bm)), None) => (
+                    bm.model.clone(),
+                    bm.world,
+                    bm.param_count,
+                    load_group_dims(&base_dir(dir, *seq), bm)?,
+                    load_precision_policy(&base_dir(dir, *seq))?,
+                    base_dir(dir, *seq),
+                ),
+                (None, None) => bail!(
+                    "nothing to serve under {}: no base and no delta snapshots",
+                    dir.display()
+                ),
+            };
 
         let tables: Vec<ConcurrentDynamicTable> = group_dims
             .iter()
@@ -160,6 +173,7 @@ impl ServingReplica {
                         .with_seed(0),
                     opts.stripes,
                 )
+                .with_precision(precision)
             })
             .collect();
         let caches: Vec<HotIdCache> = group_dims
@@ -174,6 +188,7 @@ impl ServingReplica {
             world,
             param_count,
             group_dims,
+            precision,
             tables,
             caches,
             dense: Vec::new(),
@@ -194,6 +209,13 @@ impl ServingReplica {
                 bdims == replica.group_dims,
                 "base_{seq:05} group dims {bdims:?} disagree with the chain's {:?}",
                 replica.group_dims
+            );
+            let bprec = load_precision_policy(&base_dir(dir, *seq))?;
+            anyhow::ensure!(
+                bprec == replica.precision,
+                "base_{seq:05} precision policy {bprec:?} disagrees with the \
+                 chain's {:?}",
+                replica.precision
             );
             for rank in 0..bm.world {
                 for g in 0..replica.group_dims.len() {
@@ -223,6 +245,15 @@ impl ServingReplica {
             "delta_{:05} group dims {dims:?} disagree with the replica's {:?}",
             m.seq,
             self.group_dims
+        );
+        // A trainer restarted with different --precision flags mid-chain
+        // must not silently reach serving: the stored grids would mix.
+        let prec = load_delta_precision_policy(&self.dir, m.seq)?;
+        anyhow::ensure!(
+            prec == self.precision,
+            "delta_{:05} precision policy {prec:?} disagrees with the replica's {:?}",
+            m.seq,
+            self.precision
         );
         let mut shards = Vec::with_capacity(m.world * self.group_dims.len());
         for rank in 0..m.world {
@@ -409,6 +440,11 @@ impl ServingReplica {
 
     pub fn group_dim(&self, group: usize) -> usize {
         self.group_dims[group]
+    }
+
+    /// Precision policy recorded by the snapshots being served.
+    pub fn precision(&self) -> PrecisionPolicy {
+        self.precision
     }
 
     pub fn model(&self) -> &str {

@@ -139,6 +139,18 @@ pub struct TrainerOptions {
     /// injection). `None` — the default — is the single-process path,
     /// untouched byte for byte.
     pub dist: Option<DistTrainOptions>,
+    /// Embedding storage/wire precision (`--precision`): `Fp32` — the
+    /// default — is byte-identical to the pre-policy system; `Mixed`
+    /// stores hot rows (post-bump access count ≥ `hot_threshold`) at
+    /// FP32 and cold rows on the binary16 grid, and compresses cold
+    /// reply rows and gradient pushes to FP16 on the wire. Applies
+    /// uniformly to every merge group; numerics are bit-identical
+    /// across `--threads`/`--overlap`/`--cross-step`/multiplexing for
+    /// either mode.
+    pub precision: crate::embedding::precision::PrecisionMode,
+    /// Post-bump access-count threshold separating FP32 hot rows from
+    /// FP16 cold rows under `--precision mixed` (`--hot-threshold`).
+    pub hot_threshold: u32,
 }
 
 impl TrainerOptions {
@@ -165,7 +177,14 @@ impl TrainerOptions {
             schema: "meituan".to_string(),
             scenario: None,
             dist: None,
+            precision: crate::embedding::precision::PrecisionMode::Fp32,
+            hot_threshold: 8,
         }
+    }
+
+    /// The per-table precision policy the options select.
+    pub fn precision_policy(&self) -> crate::embedding::precision::PrecisionPolicy {
+        crate::embedding::precision::PrecisionPolicy::from_mode(self.precision, self.hot_threshold)
     }
 
     /// The schema actually trained on: the scenario's forced preset
@@ -207,6 +226,13 @@ impl TrainerOptions {
             o.validate()?;
         } else {
             anyhow::ensure!(self.steps > 0, "offline runs need --steps > 0");
+        }
+        if self.precision == crate::embedding::precision::PrecisionMode::Mixed {
+            anyhow::ensure!(
+                self.hot_threshold >= 1,
+                "--precision mixed needs --hot-threshold >= 1 (0 would pin every \
+                 row hot and never compress)"
+            );
         }
         if self.dist.is_some() {
             // Multi-process runs lean on the delta chain as the ONLY
@@ -384,6 +410,22 @@ pub struct StepRecord {
     /// tables' eviction counters, summed across ranks) — the
     /// multi-tenant scenario's capacity-pressure meter.
     pub evictions: u64,
+    /// Mixed-precision wire bytes this step by row precision, summed
+    /// across ranks and *all* destinations including the local loopback
+    /// chunk (a pure function of the served batches — schedule- and
+    /// mux-independent, unlike the remote-only lane meters above). All
+    /// zero under `--precision fp32`, where the wire format is the
+    /// historical one byte for byte.
+    pub wire_fp32_row_bytes: u64,
+    pub wire_fp16_row_bytes: u64,
+    /// Framing the mixed format adds (reply tag bitmasks + gradient-ID
+    /// `[n]…[tags]` words).
+    pub wire_tag_bytes: u64,
+    /// Hot/cold row census across every rank's merge groups at the step
+    /// boundary (post-bump classification; zero in fp32 mode, where the
+    /// census is skipped).
+    pub hot_rows: u64,
+    pub cold_rows: u64,
 }
 
 /// Aggregated outcome of a run.
@@ -455,6 +497,22 @@ pub struct TrainReport {
     pub batcher_fill_mean: f64,
     /// Run total of per-step row-budget evictions.
     pub total_evictions: u64,
+    /// The precision mode the run trained under (`"fp32"` / `"mixed"`).
+    pub precision: String,
+    /// Run totals of the mixed-precision wire meters (see
+    /// [`StepRecord::wire_fp32_row_bytes`]); all zero under fp32.
+    pub wire_fp32_row_bytes: u64,
+    pub wire_fp16_row_bytes: u64,
+    pub wire_tag_bytes: u64,
+    /// Final hot/cold row census across ranks and merge groups (zero in
+    /// fp32 mode) plus cumulative cold-row quantization write-backs.
+    pub hot_rows: u64,
+    pub cold_rows: u64,
+    pub quantize_ops: u64,
+    /// Effective value-storage bytes under the active policy (hot rows
+    /// 4 B, cold rows 2 B per element, summed over groups); equals
+    /// `table_rows × dim × 4` accounting in fp32 mode.
+    pub effective_value_bytes: u64,
 }
 
 impl TrainReport {
@@ -670,8 +728,13 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
     let mut group_rows: Vec<usize> = Vec::new();
     let mut scenario: Option<String> = None;
     let mut fill_denom = 0u64;
+    let mut precision = String::new();
+    let mut precision_stats = crate::embedding::precision::PrecisionStats::default();
+    let mut effective_value_bytes = 0u64;
     let n_workers = outputs.len().max(1) as f64;
     for out in outputs {
+        precision_stats.merge(&out.precision_stats);
+        effective_value_bytes += out.effective_value_bytes;
         table_stats.merge(&out.table_stats);
         gauc_ctr.merge(out.gauc_ctr);
         gauc_ctcvr.merge(out.gauc_ctcvr);
@@ -710,6 +773,7 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
             wall = out.wall;
             scenario = out.scenario.clone();
             fill_denom = out.fill_denom;
+            precision = out.precision.clone();
         }
     }
     let sim_total: f64 = steps.iter().map(|s| s.sim_step_s).sum();
@@ -729,12 +793,22 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
     // gathers at the step boundary), like the online counters.
     let mut wire_payload_bytes = vec![0u64; LANES];
     let mut wire_header_bytes = 0u64;
+    let mut wire_fp32_row_bytes = 0u64;
+    let mut wire_fp16_row_bytes = 0u64;
+    let mut wire_tag_bytes = 0u64;
     for s in &steps {
         for (l, &b) in s.wire_payload_bytes.iter().enumerate() {
             wire_payload_bytes[l] += b;
         }
         wire_header_bytes += s.wire_header_bytes;
+        wire_fp32_row_bytes += s.wire_fp32_row_bytes;
+        wire_fp16_row_bytes += s.wire_fp16_row_bytes;
+        wire_tag_bytes += s.wire_tag_bytes;
     }
+    // The final census comes from the last step's (already gathered)
+    // snapshot; the quantize-op total merges across workers.
+    let hot_rows = steps.last().map(|s| s.hot_rows).unwrap_or(0);
+    let cold_rows = steps.last().map(|s| s.cold_rows).unwrap_or(0);
     // Scenario telemetry roll-ups over the (already globally summed)
     // per-step meters.
     let n_steps = steps.len().max(1) as f64;
@@ -775,6 +849,14 @@ fn report_from_outputs(outputs: Vec<WorkerOutput>) -> TrainReport {
         batcher_carryover_mean,
         batcher_fill_mean,
         total_evictions,
+        precision,
+        wire_fp32_row_bytes,
+        wire_fp16_row_bytes,
+        wire_tag_bytes,
+        hot_rows,
+        cold_rows,
+        quantize_ops: precision_stats.quantize_ops,
+        effective_value_bytes,
         gauc_ctr: gauc_ctr.gauc(),
         gauc_ctcvr: gauc_ctcvr.gauc(),
         phases,
@@ -818,6 +900,14 @@ struct WorkerOutput {
     /// `target_tokens × world` when the dynamic batcher is on (the
     /// denominator of the report's fill metric); 0 otherwise.
     fill_denom: u64,
+    /// The precision mode string (report labeling).
+    precision: String,
+    /// Final hot/cold census + quantization ops across this worker's
+    /// merge groups (zero counts in fp32 mode).
+    precision_stats: crate::embedding::precision::PrecisionStats,
+    /// Effective value-storage bytes across this worker's groups under
+    /// the active policy.
+    effective_value_bytes: u64,
 }
 
 /// One micro-batch prepared for the engine.
@@ -945,7 +1035,12 @@ fn worker_main(
             if let Some(b) = opts.scenario.as_ref().and_then(|s| s.row_budget) {
                 tcfg = tcfg.with_max_rows(b);
             }
-            let table = ConcurrentDynamicTable::new(tcfg, 8);
+            // The precision policy composes under the online gate: the
+            // concurrent table owns classification + storage
+            // quantization, the gate forwards discovery, and the
+            // exchange keys its wire compression off the policy.
+            let table =
+                ConcurrentDynamicTable::new(tcfg, 8).with_precision(opts.precision_policy());
             let gate = match &opts.online {
                 Some(o) => OnlineTable::online(
                     table,
@@ -1124,6 +1219,17 @@ fn worker_main(
                 "resume: delta {seq} was written for world {} (this run is world {world})",
                 meta.world
             );
+            // Replaying a mixed-precision chain under different flags
+            // would silently reconstruct cold rows on the wrong grid;
+            // the snapshot's recorded policy must match this run's.
+            let dprec = crate::checkpoint::delta::load_delta_precision_policy(sdir, seq)
+                .with_context(|| format!("resume: delta {seq} precision meta"))?;
+            anyhow::ensure!(
+                dprec == opts.precision_policy(),
+                "resume: delta {seq} was written under {dprec:?} but this run uses \
+                 {:?} (--precision/--hot-threshold must match the chain)",
+                opts.precision_policy()
+            );
             for g in 0..n_groups {
                 let (rows, removed) =
                     crate::checkpoint::delta::load_delta_shard_group(sdir, &meta, rank, g)
@@ -1164,6 +1270,9 @@ fn worker_main(
     // the records carry).
     let mut last_day = 0u64;
     let mut evict_prev = 0u64;
+    // Mixed-precision wire meter at the previous step boundary (stays
+    // default-zero in fp32 mode, where the meters never move).
+    let mut pwire_prev = crate::embedding::sharded::PrecisionWireBytes::default();
 
     let mut step = start_step;
     loop {
@@ -1519,6 +1628,7 @@ fn worker_main(
                                 dim: plan.groups[g].dim,
                                 upserts: &rows[g],
                                 removed: rem,
+                                policy: sharded[g].table().inner().precision(),
                             })
                             .collect();
                         let dmeta = DeltaMeta {
@@ -1577,7 +1687,7 @@ fn worker_main(
         // carries the bookkeeping collectives below from the *previous*
         // capture, which is why conservation is only asserted on the
         // exchange lanes.
-        let mut my_wire = [0u64; 6];
+        let mut my_wire = [0u64; 11];
         for l in 0..LANES {
             let lane_total = comm.stats.lane_bytes[l] - wire_prev[l];
             let hdr = exchange.header_bytes[l] - hdr_prev[l];
@@ -1586,6 +1696,27 @@ fn worker_main(
         }
         wire_prev = comm.stats.lane_bytes;
         hdr_prev = exchange.header_bytes;
+        // Mixed-precision meters: per-step wire deltas by row precision
+        // (slots 6–8, all-destination payload including loopback) and
+        // the hot/cold row census at the step boundary (slots 9–10).
+        // All zero — and the census skipped — in fp32 mode.
+        let mixed_precision =
+            opts.precision == crate::embedding::precision::PrecisionMode::Mixed;
+        let mut pwire_now = crate::embedding::sharded::PrecisionWireBytes::default();
+        for se in sharded.iter() {
+            pwire_now.merge(&se.precision_wire);
+        }
+        my_wire[6] = pwire_now.fp32_row_bytes - pwire_prev.fp32_row_bytes;
+        my_wire[7] = pwire_now.fp16_row_bytes - pwire_prev.fp16_row_bytes;
+        my_wire[8] = pwire_now.tag_bytes - pwire_prev.tag_bytes;
+        pwire_prev = pwire_now;
+        if mixed_precision {
+            for se in sharded.iter() {
+                let ps = se.table().inner().precision_stats();
+                my_wire[9] += ps.hot_rows as u64;
+                my_wire[10] += ps.cold_rows as u64;
+            }
+        }
         let wire_gathered: Vec<Vec<u64>> = comm
             .all_gather(crate::collective::comm::Message::Counts(my_wire.to_vec()))
             .into_iter()
@@ -1593,11 +1724,21 @@ fn worker_main(
             .collect();
         let mut wire_payload_bytes = vec![0u64; LANES];
         let mut wire_header_bytes = 0u64;
+        let mut wire_fp32_row_bytes = 0u64;
+        let mut wire_fp16_row_bytes = 0u64;
+        let mut wire_tag_bytes = 0u64;
+        let mut hot_rows = 0u64;
+        let mut cold_rows = 0u64;
         for w in &wire_gathered {
             for l in 0..LANES {
                 wire_payload_bytes[l] += w[l];
             }
             wire_header_bytes += w[5];
+            wire_fp32_row_bytes += w[6];
+            wire_fp16_row_bytes += w[7];
+            wire_tag_bytes += w[8];
+            hot_rows += w[9];
+            cold_rows += w[10];
         }
         let tokens = comm.all_gather_u64(my_tokens);
         let samples: u64 = comm.all_gather_u64(my_samples).iter().sum();
@@ -1786,6 +1927,11 @@ fn worker_main(
             resident_rows,
             online_day,
             evictions,
+            wire_fp32_row_bytes,
+            wire_fp16_row_bytes,
+            wire_tag_bytes,
+            hot_rows,
+            cold_rows,
         });
         // Endless runs would otherwise grow the record log without
         // bound; keep a rolling tail (`step` fields stay absolute).
@@ -1863,6 +2009,20 @@ fn worker_main(
         } else {
             0
         },
+        precision: opts.precision.as_str().to_string(),
+        precision_stats: {
+            let mut ps = crate::embedding::precision::PrecisionStats::default();
+            if opts.precision == crate::embedding::precision::PrecisionMode::Mixed {
+                for s in &sharded {
+                    ps.merge(&s.table().inner().precision_stats());
+                }
+            }
+            ps
+        },
+        effective_value_bytes: sharded
+            .iter()
+            .map(|s| s.table().inner().effective_value_bytes() as u64)
+            .sum(),
     })
 }
 

@@ -171,6 +171,105 @@ mod tests {
     }
 
     #[test]
+    fn rne_ties_and_mantissa_carry_into_exponent() {
+        // 2 − 2^-11 ties between the largest f16 below 2 (mantissa
+        // 0x3ff, odd) and 2.0 (mantissa 0, even): the tie rounds up and
+        // the mantissa increment must carry into the exponent.
+        assert_eq!(quantize_f16(2.0 - 2.0_f32.powi(-11)), 2.0);
+        // Just below the tie stays on the lower neighbor.
+        assert_eq!(
+            quantize_f16(2.0 - 2.0_f32.powi(-11) - 2.0_f32.powi(-20)),
+            2.0 - 2.0_f32.powi(-10)
+        );
+        // The same carry at the top of the range overflows to infinity:
+        // 65504 is the largest finite f16 and its mantissa is odd, so
+        // the halfway point 65520 rounds away — into the exponent, onto
+        // inf.
+        assert_eq!(quantize_f16(65520.0), f32::INFINITY);
+        assert_eq!(quantize_f16(-65520.0), f32::NEG_INFINITY);
+        // Just below the halfway point stays finite.
+        assert_eq!(quantize_f16(65519.996), 65504.0);
+    }
+
+    #[test]
+    fn subnormal_boundaries() {
+        let min_sub = 2.0_f32.powi(-24); // smallest f16 subnormal
+        let min_norm = 2.0_f32.powi(-14); // smallest f16 normal
+
+        // Exactly half the smallest subnormal ties between ±0 and the
+        // subnormal; zero has the even mantissa.
+        assert_eq!(quantize_f16(min_sub / 2.0), 0.0);
+        assert_eq!(quantize_f16(-min_sub / 2.0).to_bits(), (-0.0f32).to_bits());
+        // A hair above the tie rounds away from zero.
+        assert_eq!(
+            quantize_f16(min_sub / 2.0 * (1.0 + 2.0_f32.powi(-20))),
+            min_sub
+        );
+        // 1.5 × min_sub ties between mantissa 1 (odd) and 2 (even):
+        // rounds to the even neighbor, 2 × min_sub.
+        assert_eq!(quantize_f16(1.5 * min_sub), 2.0 * min_sub);
+        // The subnormal→normal boundary: halfway between the largest
+        // subnormal (mantissa 0x3ff) and the smallest normal (mantissa
+        // 0, even) rounds up across the boundary.
+        assert_eq!(quantize_f16(min_norm - 2.0_f32.powi(-25)), min_norm);
+        assert_eq!(
+            quantize_f16(min_norm - 2.0_f32.powi(-25) - 2.0_f32.powi(-34)),
+            min_norm - min_sub
+        );
+        // Exact subnormals and the smallest normal are fixed points.
+        for k in 1..=10u32 {
+            let v = k as f32 * min_sub;
+            assert_eq!(quantize_f16(v), v, "k={k}");
+        }
+        assert_eq!(quantize_f16(min_norm), min_norm);
+    }
+
+    #[test]
+    fn nan_and_infinity_survive_packing() {
+        let hs = pack_f16(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -f32::NAN]);
+        let back = unpack_f16(&hs);
+        assert!(back[0].is_nan());
+        assert_eq!(back[1], f32::INFINITY);
+        assert_eq!(back[2], f32::NEG_INFINITY);
+        assert!(back[3].is_nan());
+        // NaN keeps a mantissa bit so it cannot collapse into inf.
+        assert_ne!(hs[0] & 0x03ff, 0);
+    }
+
+    #[test]
+    fn slice_quantize_matches_scalar_and_is_idempotent() {
+        // The slice path must equal the scalar path bit for bit over
+        // every row dim the tables use (1..=67 covers odd dims, the 8D
+        // context groups and the model dims), and quantizing an
+        // already-quantized row must be the identity — the storage
+        // invariant that lets re-quantization run on every write path.
+        let mut rng = crate::util::rng::Xoshiro256::new(77);
+        for dim in 1..=67usize {
+            let xs: Vec<f32> = (0..dim)
+                .map(|i| {
+                    // Spread across normals, subnormals and huge values.
+                    let base = (rng.next_f32() - 0.5) * 4.0;
+                    base * 2.0_f32.powi((i as i32 % 41) - 20)
+                })
+                .collect();
+            let mut slice = xs.clone();
+            quantize_f16_slice(&mut slice);
+            for (j, (&orig, &q)) in xs.iter().zip(&slice).enumerate() {
+                assert_eq!(
+                    q.to_bits(),
+                    quantize_f16(orig).to_bits(),
+                    "dim {dim} elem {j}"
+                );
+            }
+            let mut twice = slice.clone();
+            quantize_f16_slice(&mut twice);
+            for (j, (&a, &b)) in slice.iter().zip(&twice).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "idempotence dim {dim} elem {j}");
+            }
+        }
+    }
+
+    #[test]
     fn matches_all_f16_bit_patterns() {
         // Exhaustive: every finite f16 bit pattern must survive
         // f16→f32→f16 exactly.

@@ -354,6 +354,175 @@ fn default_schema_unaffected_by_multi_group_plumbing() {
 }
 
 #[test]
+fn mixed_precision_grid_bit_identical() {
+    // The ISSUE 10 acceptance grid: `--precision mixed` (FP32 hot rows,
+    // FP16 cold rows, post-bump threshold classification) must be
+    // bit-identical across `--threads {1,4}` × `--overlap {on,off}` ×
+    // `--cross-step {on,off}` on the two-group meituan-mixed schema —
+    // quantization is a pure function of stored state and the
+    // rank-order-deterministic access census, never of scheduling.
+    use mtgrboost::embedding::precision::PrecisionMode;
+    let grid_run = |overlap: bool, threads: usize, cross_step: bool, mixed: bool| {
+        let mut o = opts(overlap, threads);
+        o.schema = "meituan-mixed".to_string();
+        o.cross_step = cross_step;
+        if mixed {
+            o.precision = PrecisionMode::Mixed;
+            o.hot_threshold = 3;
+        }
+        o.train.target_tokens = 1400;
+        o.steps = 8;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let reference = grid_run(false, 1, false, true);
+    assert_eq!(reference.precision, "mixed");
+    // The policy genuinely engaged: both classes populated, FP16 rows
+    // and per-row tags on the wire, hot rows still shipped full width.
+    assert!(
+        reference.hot_rows > 0 && reference.cold_rows > 0,
+        "census must see both classes: {} hot / {} cold",
+        reference.hot_rows,
+        reference.cold_rows
+    );
+    assert_eq!(
+        reference.hot_rows + reference.cold_rows,
+        reference.table_rows as u64,
+        "census must partition the resident rows"
+    );
+    assert!(reference.quantize_ops > 0, "cold writes must quantize");
+    assert!(reference.wire_fp16_row_bytes > 0, "cold rows must ship packed");
+    assert!(reference.wire_tag_bytes > 0, "per-row tags must be metered");
+    assert!(reference.wire_fp32_row_bytes > 0, "hot rows must stay FP32");
+    // Effective storage strictly undercuts the all-FP32 footprint.
+    let all_fp32: u64 = reference
+        .group_rows
+        .iter()
+        .zip(&reference.group_dims)
+        .map(|(&rows, &dim)| (rows * dim * 4) as u64)
+        .sum();
+    assert!(
+        reference.effective_value_bytes < all_fp32,
+        "mixed storage must beat all-fp32: {} vs {all_fp32}",
+        reference.effective_value_bytes
+    );
+    let reference_fp = (fingerprint(&reference), reference.group_checksums.clone());
+    for overlap in [false, true] {
+        for threads in [1usize, 4] {
+            for cross_step in [false, true] {
+                if !overlap && threads == 1 && !cross_step {
+                    continue; // the reference itself
+                }
+                let r = grid_run(overlap, threads, cross_step, true);
+                assert_eq!(
+                    (fingerprint(&r), r.group_checksums.clone()),
+                    reference_fp,
+                    "mixed: overlap={overlap} threads={threads} cross={cross_step} \
+                     diverged from threads=1/overlap=off"
+                );
+                assert_eq!(r.hot_rows, reference.hot_rows);
+                assert_eq!(r.cold_rows, reference.cold_rows);
+                assert_eq!(r.quantize_ops, reference.quantize_ops);
+                assert_eq!(
+                    (r.wire_fp32_row_bytes, r.wire_fp16_row_bytes, r.wire_tag_bytes),
+                    (
+                        reference.wire_fp32_row_bytes,
+                        reference.wire_fp16_row_bytes,
+                        reference.wire_tag_bytes
+                    ),
+                    "mixed wire meters must not depend on scheduling"
+                );
+            }
+        }
+    }
+    // fp32 (the default) on the same workload: precision meters pinned
+    // to zero, and a genuinely different trajectory — binary16
+    // quantization of cold rows must actually bite, otherwise the grid
+    // above is vacuous.
+    let fp32 = grid_run(false, 1, false, false);
+    assert_eq!(fp32.precision, "fp32");
+    assert_eq!(
+        (
+            fp32.wire_fp32_row_bytes,
+            fp32.wire_fp16_row_bytes,
+            fp32.wire_tag_bytes,
+            fp32.hot_rows,
+            fp32.cold_rows,
+            fp32.quantize_ops
+        ),
+        (0, 0, 0, 0, 0, 0),
+        "fp32 keeps every precision meter at zero"
+    );
+    assert_ne!(
+        fingerprint(&fp32),
+        fingerprint(&reference),
+        "quantization must change the trajectory"
+    );
+}
+
+#[test]
+fn mixed_precision_multiplexed_exchange_conserves_and_compresses() {
+    // Mixed precision composes with the packed exchange: `--multiplex`
+    // vs `--no-multiplex` stays bit-identical and moves the same lane
+    // payloads under `--precision mixed`. And because the ID stream is
+    // a pure function of the seeded generator — independent of stored
+    // values — the mixed run requests exactly the bytes of IDs the fp32
+    // run does, while its reply lane (cold rows at half width) is
+    // strictly smaller.
+    use mtgrboost::embedding::precision::PrecisionMode;
+    let grid_run = |mux: bool, mixed: bool| {
+        let mut o = opts(true, 4);
+        o.schema = "meituan-mixed".to_string();
+        o.cross_step = true;
+        o.multiplex_exchange = mux;
+        if mixed {
+            o.precision = PrecisionMode::Mixed;
+            o.hot_threshold = 3;
+        }
+        o.train.target_tokens = 1400;
+        o.steps = 8;
+        let engine = Engine::reference(7).unwrap();
+        Trainer::new(o, engine).unwrap().run().unwrap()
+    };
+    let muxed = grid_run(true, true);
+    let plain = grid_run(false, true);
+    assert_eq!(
+        (fingerprint(&muxed), muxed.group_checksums.clone()),
+        (fingerprint(&plain), plain.group_checksums.clone()),
+        "multiplexing changed mixed-precision arithmetic"
+    );
+    for lane in 1..5 {
+        assert_eq!(
+            muxed.wire_payload_bytes[lane], plain.wire_payload_bytes[lane],
+            "lane {lane}: packed mixed exchange moved different payload"
+        );
+    }
+    assert_eq!(
+        (muxed.wire_fp32_row_bytes, muxed.wire_fp16_row_bytes, muxed.wire_tag_bytes),
+        (plain.wire_fp32_row_bytes, plain.wire_fp16_row_bytes, plain.wire_tag_bytes),
+        "precision meters must agree across multiplex modes"
+    );
+    // Against the fp32 baseline: identical ID traffic, compressed rows.
+    let fp32 = grid_run(true, false);
+    assert_eq!(
+        muxed.wire_payload_bytes[1], fp32.wire_payload_bytes[1],
+        "the ID lane is workload-determined, not precision-determined"
+    );
+    assert!(
+        muxed.wire_payload_bytes[2] < fp32.wire_payload_bytes[2],
+        "cold replies at half width must shrink the reply lane: {} vs {}",
+        muxed.wire_payload_bytes[2],
+        fp32.wire_payload_bytes[2]
+    );
+    assert!(
+        muxed.wire_payload_bytes[4] < fp32.wire_payload_bytes[4],
+        "cold gradient pushes must shrink the grad lane: {} vs {}",
+        muxed.wire_payload_bytes[4],
+        fp32.wire_payload_bytes[4]
+    );
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guard against the fingerprint being vacuous (e.g. constant zero).
     let a = run(true, 1);

@@ -15,12 +15,16 @@ use std::path::{Path, PathBuf};
 
 use mtgrboost::checkpoint::delta::{
     apply_delta, delta_dir, list_delta_seqs, load_delta_group_dims, load_delta_meta,
-    load_delta_shard_group, snapshot_rows, sparse_delta_group_path, validate_chain,
+    load_delta_precision_policy, load_delta_shard_group, snapshot_rows,
+    sparse_delta_group_path, validate_chain,
 };
-use mtgrboost::checkpoint::{load_sparse_shard_group, SparseRow};
+use mtgrboost::checkpoint::{
+    load_group_dims, load_precision_policy, load_sparse_shard_group, SparseRow,
+};
 use mtgrboost::data::generator::GeneratorConfig;
 use mtgrboost::embedding::concurrent::ConcurrentDynamicTable;
 use mtgrboost::embedding::dynamic_table::DynamicTableConfig;
+use mtgrboost::embedding::precision::{PrecisionMode, PrecisionPolicy};
 use mtgrboost::online::{AdmissionConfig, OnlineOptions};
 use mtgrboost::optim::adam::{AdamParams, SparseAdam};
 use mtgrboost::runtime::Engine;
@@ -44,7 +48,21 @@ fn tmp(tag: &str) -> PathBuf {
 /// admission and TTL expiry both active so the emitted deltas carry
 /// upserts AND removals.
 fn train(schema: &str, threads: usize, dir: &Path) -> TrainReport {
+    train_with(schema, threads, dir, PrecisionMode::Fp32)
+}
+
+/// Same workload with a chosen storage precision: `Mixed` keeps rows
+/// below a post-bump access count of 3 on the binary16 grid (the
+/// threshold is ignored under `Fp32`).
+fn train_with(
+    schema: &str,
+    threads: usize,
+    dir: &Path,
+    precision: PrecisionMode,
+) -> TrainReport {
     let mut o = TrainerOptions::new("tiny", 2, 0);
+    o.precision = precision;
+    o.hot_threshold = 3;
     o.schema = schema.to_string();
     o.generator = GeneratorConfig {
         len_mu: 2.5,
@@ -511,4 +529,106 @@ fn failed_refresh_keeps_serving_last_good_state() {
     assert_eq!(replica.stats().refresh_failures, 2, "failure count is history");
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&stash).ok();
+}
+
+#[test]
+fn mixed_precision_chain_round_trips_cold_rows_on_the_f16_grid() {
+    use mtgrboost::util::f16::quantize_f16;
+    use mtgrboost::util::json::Json;
+
+    let dir = tmp("mixed_prec");
+    let report = train_with("meituan-mixed", 1, &dir, PrecisionMode::Mixed);
+    assert_eq!(report.precision, "mixed");
+    assert!(
+        report.hot_rows > 0 && report.cold_rows > 0,
+        "both classes must populate: {} hot / {} cold",
+        report.hot_rows,
+        report.cold_rows
+    );
+
+    // Every delta in the chain records the policy it was trained under.
+    for &seq in &list_delta_seqs(&dir).unwrap() {
+        assert_eq!(
+            load_delta_precision_policy(&dir, seq).unwrap(),
+            PrecisionPolicy::mixed(3),
+            "delta {seq} lost the precision metadata"
+        );
+    }
+
+    // A replica serves the mixed chain bit-exactly: cold rows arrive
+    // already on the f16 grid, installs copy bits verbatim, so the
+    // content checksum matches the trainer's with no dequantization.
+    let replica = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+    assert_eq!(replica.precision(), PrecisionPolicy::mixed(3));
+    assert_eq!(replica.content_checksum(), report.embedding_checksum);
+    assert_eq!(replica.resident_rows(), report.table_rows);
+    drop(replica);
+
+    // A trainer restarted with different --precision/--hot-threshold
+    // flags mid-chain must be refused loudly, never served: doctor one
+    // delta's recorded threshold and bootstrap again.
+    let mid = delta_dir(&dir, (INTERVALS / 2) as u64).join("meta.json");
+    let original = std::fs::read_to_string(&mid).unwrap();
+    let mut j = Json::parse(&original).unwrap();
+    j.set("hot_threshold", 9usize.into());
+    std::fs::write(&mid, j.pretty()).unwrap();
+    let err = ServingReplica::open(&dir, ReplicaOptions::default())
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("precision policy"),
+        "mid-chain flag flips must be named: {err}"
+    );
+    std::fs::write(&mid, &original).unwrap();
+
+    // Compaction folds the chain, carries the policy into the published
+    // base, and the base's rows partition onto their grids: at least
+    // `cold_rows` sit exactly on binary16, and the hot rows keep full
+    // FP32 state (so not everything is on the grid).
+    let folded = compact_chain(&dir, &CompactOptions::default())
+        .unwrap()
+        .expect("a chain to fold");
+    assert_eq!(folded.checksum, report.embedding_checksum);
+    let (bseq, bmeta) = latest_base(&dir).unwrap().expect("a published base");
+    let bdir = dir.join(format!("base_{bseq:05}"));
+    assert_eq!(
+        load_precision_policy(&bdir).unwrap(),
+        PrecisionPolicy::mixed(3),
+        "the base must survive pruning of the deltas that carried the policy"
+    );
+    let gdims = load_group_dims(&bdir, &bmeta).unwrap();
+    assert_eq!(gdims.len(), 2, "meituan-mixed folds to two merge groups");
+    let (mut total, mut on_grid) = (0usize, 0usize);
+    for rank in 0..bmeta.world {
+        for g in 0..gdims.len() {
+            for row in load_sparse_shard_group(&bdir, &bmeta, bmeta.world, rank, g).unwrap() {
+                total += 1;
+                if row
+                    .row
+                    .iter()
+                    .all(|&x| x.to_bits() == quantize_f16(x).to_bits())
+                {
+                    on_grid += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(total, report.table_rows);
+    assert!(
+        on_grid as u64 >= report.cold_rows,
+        "every cold row must sit on the f16 grid: {on_grid} on-grid vs {} cold",
+        report.cold_rows
+    );
+    assert!(
+        on_grid < total,
+        "hot rows must keep off-grid FP32 state: {on_grid}/{total} on-grid"
+    );
+
+    // The base alone (deltas pruned) still bootstraps the exact state.
+    assert!(list_delta_seqs(&dir).unwrap().is_empty());
+    let recovered = ServingReplica::open(&dir, ReplicaOptions::default()).unwrap();
+    assert_eq!(recovered.precision(), PrecisionPolicy::mixed(3));
+    assert_eq!(recovered.content_checksum(), report.embedding_checksum);
+    assert_eq!(recovered.resident_rows(), report.table_rows);
+    std::fs::remove_dir_all(&dir).ok();
 }
